@@ -1,0 +1,18 @@
+//! Regenerate every figure in the paper's evaluation section and write the
+//! raw series to `results/`.
+//!
+//! ```sh
+//! cargo run --release --example figures
+//! ```
+
+fn main() {
+    println!("=== Fig 6: memory prediction accuracy ===\n");
+    frenzy::exp::fig6::report();
+    println!("=== Fig 5(a): scheduling overhead ===\n");
+    frenzy::exp::fig5a::report();
+    println!("=== Fig 4: Frenzy vs Opportunistic (NewWorkload) ===\n");
+    frenzy::exp::fig4::report();
+    println!("=== Fig 5(b): JCT on Philly/Helios traces ===\n");
+    frenzy::exp::fig5b::report();
+    println!("done — see results/*.json");
+}

@@ -1,0 +1,59 @@
+//! Quickstart: the serverless contract in one file.
+//!
+//! Submit a model + batch size — no GPU counts — and watch MARP produce
+//! ranked resource plans and HAS place the job on the heterogeneous cluster.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use frenzy::cluster::ClusterState;
+use frenzy::config::{models::model_by_name, real_testbed};
+use frenzy::marp::Marp;
+use frenzy::memory::TrainConfig;
+use frenzy::sched::has::Has;
+use frenzy::util::table::{fmt_bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    let cluster = real_testbed();
+    println!("cluster '{}' — {} GPUs across {} nodes\n", cluster.name, cluster.total_gpus(), cluster.nodes.len());
+
+    // The user's entire job description:
+    let model = model_by_name("gpt2-7b").expect("zoo model");
+    let train = TrainConfig { global_batch: 2 };
+    println!("submitting: {} with global batch {} (no GPU spec!)\n", model.name, train.global_batch);
+
+    // 1. MARP: predict memory, enumerate ranked resource plans.
+    let marp = Marp::with_defaults(cluster.clone());
+    let plans = marp.plans(&model, &train);
+    let mut t = Table::new(&["rank", "d", "t", "GPUs", "min GPU mem", "predicted peak", "est samples/s"])
+        .with_title("MARP resource plans (priority order)");
+    for (i, p) in plans.iter().enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            p.par.d.to_string(),
+            p.par.t.to_string(),
+            p.n_gpus.to_string(),
+            fmt_bytes(p.min_gpu_mem),
+            fmt_bytes(p.predicted_bytes),
+            format!("{:.2}", p.est_samples_per_sec),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 2. HAS (Algorithm 1): first satisfiable plan + best-fit placement.
+    let snapshot = ClusterState::from_spec(&cluster);
+    let mut work = 0u64;
+    let (plan, alloc) =
+        Has::allocate_one(&plans, &snapshot, &mut work).expect("cluster can host this job");
+    println!(
+        "HAS chose plan d={} t={} ({} GPUs), placed as:",
+        plan.par.d, plan.par.t, plan.n_gpus
+    );
+    for (node, count) in &alloc.parts {
+        let n = &snapshot.nodes[*node];
+        println!("  node {node}: {count} x {} ({:?})", n.gpu.name, n.link);
+    }
+    println!("\n(paper §V.C: GPT2-7B at batch 2 → 8 GPUs, best at t=4, d=2)");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Serverless cluster demo: run the live coordinator + HTTP API against the
+//! simulated heterogeneous testbed, push a NewWorkload-style stream of job
+//! submissions through the REST surface, and print the final report.
+//!
+//! ```sh
+//! cargo run --release --example serverless_cluster
+//! ```
+//!
+//! (Training execution is the PJRT CPU runtime when `artifacts/` exists;
+//! pass `--no-exec` to exercise the control plane alone.)
+
+use frenzy::config::real_testbed;
+use frenzy::serverless::http::{route, Request};
+use frenzy::serverless::{spawn, CoordinatorConfig};
+use frenzy::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let no_exec = std::env::args().any(|a| a == "--no-exec")
+        || !frenzy::util::repo_path("artifacts").join("manifest.json").exists();
+    let cfg = CoordinatorConfig {
+        execute_training: !no_exec,
+        max_real_steps: 20,
+        ..Default::default()
+    };
+    if no_exec {
+        println!("(artifacts missing or --no-exec: control-plane-only mode)\n");
+    }
+    let (handle, _join) = spawn(real_testbed(), cfg);
+
+    // Submit a burst of jobs exactly as an HTTP client would.
+    let submissions = [
+        ("gpt2-350m", 8, 160u64),
+        ("gpt2-760m", 16, 320),
+        ("bert-large", 8, 160),
+        ("gpt2-1.3b", 16, 320),
+        ("gpt2-125m", 4, 80),
+        ("gpt2-2.7b", 8, 160),
+    ];
+    let mut ids = Vec::new();
+    for (model, batch, samples) in submissions {
+        let body = format!(r#"{{"model":"{model}","batch":{batch},"samples":{samples}}}"#);
+        let (status, resp) =
+            route(&handle, &Request { method: "POST".into(), path: "/jobs".into(), body });
+        assert_eq!(status, 200, "{resp}");
+        let id = frenzy::util::json::parse(&resp)?.get("job_id").unwrap().as_u64().unwrap();
+        println!("submitted {model} (batch {batch}) -> job {id}");
+        ids.push(id);
+    }
+
+    let (total, idle, util) = handle.cluster_info()?;
+    println!("\ncluster while busy: {total} GPUs, {idle} idle, {:.0}% utilized", util * 100.0);
+
+    handle.drain()?;
+
+    let mut t = Table::new(&["job", "state", "gpus", "last loss"]).with_title("\nfinal job states");
+    for id in ids {
+        let st = handle.status(id)?.expect("job exists");
+        t.row(&[
+            st.name,
+            format!("{:?}", st.state),
+            st.gpus.to_string(),
+            st.losses.last().map(|(_, l)| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let report = handle.report()?;
+    println!(
+        "completed {}/{} jobs; avg JCT {:.2}s; scheduler wall time {:.3}ms",
+        report.n_completed,
+        report.n_jobs,
+        report.avg_jct_s,
+        report.sched_overhead_s * 1e3
+    );
+    handle.shutdown();
+    Ok(())
+}

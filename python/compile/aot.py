@@ -1,0 +1,124 @@
+"""AOT compile path: lower init/train-step to HLO **text** + manifest.
+
+Run once via `make artifacts` (python never touches the request path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Per model variant this emits
+  <name>_init.hlo.txt   () -> f32[S]
+  <name>_step.hlo.txt   (f32[S], i32[B,T]) -> f32[S]
+plus `manifest.json` with shapes and the **oracle losses** — the first k
+losses of the python reference execution on the deterministic token stream,
+which the rust integration tests must reproduce through PJRT.
+
+HLO *text* (not `.serialize()`): jax ≥ 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .data import synth_tokens
+
+ORACLE_STEPS = 3
+ORACLE_TOL = 2e-3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: model.GptConfig, out_dir: str) -> dict:
+    """Lower one variant; returns its manifest entry."""
+    s_len = model.state_len(cfg)
+    state_spec = jax.ShapeDtypeStruct((s_len,), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+
+    init_fn = functools.partial(model.init_state, cfg)
+    step_fn = functools.partial(model.train_step, cfg)
+    # Tiny probe: read back [step, loss] without copying the whole state
+    # (CPU PJRT 0.5.1 has no CopyRawToHost, so the rust side executes this
+    # 2-element slice instead of an offset host read).
+    probe_fn = lambda state: state[-2:]
+
+    init_hlo = to_hlo_text(jax.jit(init_fn).lower())
+    step_hlo = to_hlo_text(jax.jit(step_fn).lower(state_spec, tok_spec))
+    probe_hlo = to_hlo_text(jax.jit(probe_fn).lower(state_spec))
+
+    base = cfg.name.replace("-", "_")
+    init_path = f"{base}_init.hlo.txt"
+    step_path = f"{base}_step.hlo.txt"
+    probe_path = f"{base}_probe.hlo.txt"
+    for path, text in [(init_path, init_hlo), (step_path, step_hlo), (probe_path, probe_hlo)]:
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+
+    # Oracle: run the jitted step on the python side for k steps.
+    jit_step = jax.jit(step_fn)
+    state = jax.jit(init_fn)()
+    losses = []
+    for s in range(ORACLE_STEPS):
+        tokens = jnp.asarray(synth_tokens(cfg.batch, cfg.seq_len, cfg.vocab, s))
+        state = jit_step(state, tokens)
+        losses.append(float(state[-1]))
+
+    return {
+        "init_hlo": init_path,
+        "step_hlo": step_path,
+        "probe_hlo": probe_path,
+        "state_len": s_len,
+        "param_count": model.param_count(cfg),
+        "batch": cfg.batch,
+        "seq_len": cfg.seq_len,
+        "vocab": cfg.vocab,
+        "hidden": cfg.hidden,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "oracle_losses": losses,
+        "oracle_tol": ORACLE_TOL,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument(
+        "--models",
+        default="gpt2-tiny,gpt2-mini",
+        help="comma-separated variant names (see compile.model.CONFIGS)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"models": {}}
+    for name in args.models.split(","):
+        name = name.strip()
+        if name not in model.CONFIGS:
+            print(f"unknown model '{name}' (have {list(model.CONFIGS)})", file=sys.stderr)
+            sys.exit(2)
+        cfg = model.CONFIGS[name]
+        print(f"lowering {name} (P={model.param_count(cfg)}, S={model.state_len(cfg)}) ...")
+        entry = lower_model(cfg, args.out)
+        manifest["models"][name] = entry
+        print(f"  oracle losses: {['%.4f' % l for l in entry['oracle_losses']]}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Deterministic synthetic token stream.
+
+MUST match `rust/src/runtime/mod.rs::synth_tokens` exactly — the rust
+integration tests replay training and compare losses against the python
+oracle recorded in the manifest, so both sides must feed identical data.
+
+The stream is next-token predictable (token[t+1] = token[t] + 13 mod V), so
+a language model trained on it shows a cleanly decreasing loss curve.
+"""
+
+import numpy as np
+
+
+def synth_tokens(batch: int, seq: int, vocab: int, step: int) -> np.ndarray:
+    """tokens[i, j] = (7*i + 13*j + 17*step) % vocab, int32 [batch, seq]."""
+    i = np.arange(batch, dtype=np.int64)[:, None]
+    j = np.arange(seq, dtype=np.int64)[None, :]
+    toks = (7 * i + 13 * j + 17 * int(step)) % int(vocab)
+    return toks.astype(np.int32)

@@ -1,0 +1,121 @@
+"""Fused causal attention as a Pallas kernel (Layer 1).
+
+TPU-style design (DESIGN.md §Hardware-Adaptation): one grid step per
+(batch·head), with the head's Q/K/V tiles resident in VMEM and the
+score/softmax/weighted-sum pipeline fused so the [T, T] score matrix never
+round-trips to HBM — the same insight FlashAttention expresses with CUDA
+shared memory/threadblocks, re-expressed with BlockSpec + VMEM. The MXU
+sees two [T, D]×[D, T]-shaped matmuls per head.
+
+For the sequence lengths the AOT models use (T ≤ 256) a head's working set
+is ≤ (3·T·D + T·T) · 4 B ≈ 0.5 MiB, comfortably inside a TPU core's
+~16 MiB VMEM; longer sequences would add an online-softmax loop over KV
+blocks (see DESIGN.md §Perf for the VMEM budget table).
+
+`interpret=True` is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+
+Differentiation: wrapped in `jax.custom_vjp`; the backward pass is also a
+Pallas kernel (dQ/dK/dV via score recomputation — the FlashAttention-style
+recompute-in-backward trade).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _causal_mask(scores):
+    t = scores.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    return jnp.where(row >= col, scores, NEG_INF)
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool):
+    # One (batch·head) per grid step; block refs are [1, T, D] VMEM tiles.
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.dot(q, k.T) * scale  # [T, T] stays in VMEM
+    if causal:
+        scores = _causal_mask(scores)
+    # Numerically stable softmax, fused in-register.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v).astype(o_ref.dtype)
+
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref, *, causal: bool):
+    # Recompute probabilities (FlashAttention-style), then the standard VJP.
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.dot(q, k.T) * scale
+    if causal:
+        scores = _causal_mask(scores)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)  # [T, T]
+    dv = jnp.dot(p.T, do)
+    dp = jnp.dot(do, v.T)
+    # softmax VJP: dS = P ⊙ (dP − rowsum(dP ⊙ P))
+    ds = (p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))) * scale
+    dq_ref[0] = jnp.dot(ds, k).astype(dq_ref.dtype)
+    dk_ref[0] = jnp.dot(ds.T, q).astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _fwd_call(q, k, v, causal: bool):
+    bh, t, d = q.shape
+    spec = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    kernel = functools.partial(_attn_fwd_kernel, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _bwd_call(q, k, v, do, causal: bool):
+    bh, t, d = q.shape
+    spec = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    kernel = functools.partial(_attn_bwd_kernel, causal=causal)
+    shapes = [jax.ShapeDtypeStruct((bh, t, d), q.dtype)] * 3
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=shapes,
+        interpret=True,
+    )(q, k, v, do)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, causal: bool = True):
+    """Fused attention over [BH, T, D] (batch·heads flattened)."""
+    return _fwd_call(q, k, v, causal)
+
+
+def _vjp_fwd(q, k, v, causal):
+    return _fwd_call(q, k, v, causal), (q, k, v)
+
+
+def _vjp_bwd(causal, res, do):
+    q, k, v = res
+    return _bwd_call(*res, do, causal)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,77 @@
+"""Fused transformer MLP (matmul → GELU → matmul) as a Pallas kernel.
+
+TPU framing: the kernel streams row-blocks of the [N, h] activation matrix
+through VMEM while both weight matrices stay VMEM-resident, so the
+intermediate [rows, 4h] GELU activation never hits HBM — on GPU this is the
+"fuse the epilogue" trick; on TPU it is a BlockSpec over rows with the MXU
+doing back-to-back [rows, h]×[h, 4h] and [rows, 4h]×[4h, h] matmuls.
+
+Backward uses a recompute VJP in plain jnp (`ref.mlp_ref`): the fused
+forward discards the intermediate, so backward recomputes it — the same
+memory/compute trade Korthikanti et al. analyze (and the basis of the
+activation term MARP predicts).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows per grid step; (8,128)-aligned for the TPU VPU lanes.
+ROW_BLOCK = 128
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    h1 = jnp.dot(x, w1_ref[...]) + b1_ref[...]
+    c = jnp.sqrt(2.0 / jnp.pi).astype(h1.dtype)
+    g = 0.5 * h1 * (1.0 + jnp.tanh(c * (h1 + 0.044715 * h1**3)))
+    o_ref[...] = (jnp.dot(g, w2_ref[...]) + b2_ref[...]).astype(o_ref.dtype)
+
+
+def _fwd_call(x, w1, b1, w2, b2):
+    n, h = x.shape
+    hf = w1.shape[1]
+    rb = min(ROW_BLOCK, n)
+    # Pad rows to a multiple of the block.
+    n_pad = (n + rb - 1) // rb * rb
+    x_p = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    grid = (n_pad // rb,)
+    out = pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, hf), lambda i: (0, 0)),
+            pl.BlockSpec((hf,), lambda i: (0,)),
+            pl.BlockSpec((hf, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, h), x.dtype),
+        interpret=True,
+    )(x_p, w1, b1, w2, b2)
+    return out[:n]
+
+
+@jax.custom_vjp
+def fused_mlp(x, w1, b1, w2, b2):
+    """gelu(x @ w1 + b1) @ w2 + b2 over [N, h] rows."""
+    return _fwd_call(x, w1, b1, w2, b2)
+
+
+def _vjp_fwd(x, w1, b1, w2, b2):
+    return _fwd_call(x, w1, b1, w2, b2), (x, w1, b1, w2, b2)
+
+
+def _vjp_bwd(res, dy):
+    x, w1, b1, w2, b2 = res
+    # Recompute-in-backward against the reference formula.
+    _, vjp = jax.vjp(ref.mlp_ref, x, w1, b1, w2, b2)
+    return vjp(dy)
+
+
+fused_mlp.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,49 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these to tight tolerances. They are also used as the
+custom-VJP backward bodies where noted in the kernel files.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """Scaled dot-product attention over [..., T, D] with optional causal mask."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    scores = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    if causal:
+        t = q.shape[-2]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", probs, v)
+
+
+def gelu_ref(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU (GPT-2's flavor)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def mlp_ref(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """GPT-2 MLP: gelu(x @ w1 + b1) @ w2 + b2."""
+    return gelu_ref(x @ w1 + b1) @ w2 + b2
+
+
+def adamw_ref(p, m, v, g, step, lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, wd=0.0):
+    """AdamW update on flat vectors; `step` is the 1-based step index."""
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / (1.0 - beta1**step)
+    vhat = v2 / (1.0 - beta2**step)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p2, m2, v2
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,188 @@
+"""Layer 2: GPT-2-style decoder transformer + fused train step (build-time
+JAX, calling the Layer-1 Pallas kernels).
+
+The whole training state lives in ONE flat f32 vector so the rust runtime
+can chain steps on-device without knowing the parameter pytree:
+
+    state = [ params (P) | adam_m (P) | adam_v (P) | step | loss ]   (S = 3P+2)
+
+`train_step(state, tokens) -> state'` is the single computation the AOT
+path lowers; `init_state() -> state` seeds it deterministically.
+
+Architecture (pre-LN GPT-2):
+  wte [V,h] · wpe [T,h] · L × { ln1, qkv [h,3h]+[3h], proj [h,h]+[h],
+  ln2, mlp w1 [h,4h]+[4h], w2 [4h,h]+[h] } · ln_f · tied LM head.
+Attention uses `kernels.flash_attention`, the MLP uses `kernels.fused_mlp`,
+and the optimizer is the fused `kernels.adamw` Pallas kernel.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.adamw import adamw_update
+from .kernels.flash_attention import flash_attention
+from .kernels.fused_mlp import fused_mlp
+
+INIT_SEED = 42
+INIT_STD = 0.02
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    name: str
+    vocab: int
+    hidden: int
+    layers: int
+    heads: int
+    seq_len: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+
+# The AOT model variants (tiny stand-ins for the CPU runtime; matching
+# entries exist in the rust model zoo).
+CONFIGS: Dict[str, GptConfig] = {
+    "gpt2-tiny": GptConfig("gpt2-tiny", vocab=1024, hidden=128, layers=4, heads=4, seq_len=128, batch=8),
+    "gpt2-mini": GptConfig("gpt2-mini", vocab=4096, hidden=256, layers=6, heads=8, seq_len=256, batch=4),
+}
+
+
+def param_shapes(cfg: GptConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat layout."""
+    h, hf = cfg.hidden, 4 * cfg.hidden
+    shapes: List[Tuple[str, Tuple[int, ...]]] = [
+        ("wte", (cfg.vocab, h)),
+        ("wpe", (cfg.seq_len, h)),
+    ]
+    for i in range(cfg.layers):
+        shapes += [
+            (f"l{i}.ln1.g", (h,)),
+            (f"l{i}.ln1.b", (h,)),
+            (f"l{i}.qkv.w", (h, 3 * h)),
+            (f"l{i}.qkv.b", (3 * h,)),
+            (f"l{i}.proj.w", (h, h)),
+            (f"l{i}.proj.b", (h,)),
+            (f"l{i}.ln2.g", (h,)),
+            (f"l{i}.ln2.b", (h,)),
+            (f"l{i}.mlp.w1", (h, hf)),
+            (f"l{i}.mlp.b1", (hf,)),
+            (f"l{i}.mlp.w2", (hf, h)),
+            (f"l{i}.mlp.b2", (h,)),
+        ]
+    shapes += [("ln_f.g", (h,)), ("ln_f.b", (h,))]
+    return shapes
+
+
+def param_count(cfg: GptConfig) -> int:
+    import math
+
+    return sum(math.prod(s) for _, s in param_shapes(cfg))
+
+
+def state_len(cfg: GptConfig) -> int:
+    return 3 * param_count(cfg) + 2
+
+
+def _unflatten(cfg: GptConfig, flat: jax.Array) -> Dict[str, jax.Array]:
+    params = {}
+    off = 0
+    for name, shape in param_shapes(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def init_params_flat(cfg: GptConfig) -> jax.Array:
+    """Deterministic init: N(0, 0.02) for matrices/embeddings, zeros for
+    biases, ones for layernorm gains."""
+    key = jax.random.PRNGKey(INIT_SEED)
+    chunks = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".b", ".b1", ".b2")):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        elif name.endswith(".g"):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        else:
+            chunks.append((INIT_STD * jax.random.normal(sub, shape, jnp.float32)).ravel())
+    return jnp.concatenate(chunks)
+
+
+def init_state(cfg: GptConfig) -> jax.Array:
+    p = init_params_flat(cfg)
+    zeros = jnp.zeros_like(p)
+    tail = jnp.zeros((2,), jnp.float32)  # [step, loss]
+    return jnp.concatenate([p, zeros, zeros, tail])
+
+
+def forward(cfg: GptConfig, params: Dict[str, jax.Array], tokens: jax.Array) -> jax.Array:
+    """Logits [B, T, V] for int32 tokens [B, T]."""
+    b, t = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][:t][None, :, :]
+    for i in range(cfg.layers):
+        # --- attention block (pre-LN) ---
+        ln1 = ref.layernorm_ref(x, params[f"l{i}.ln1.g"], params[f"l{i}.ln1.b"])
+        qkv = ln1 @ params[f"l{i}.qkv.w"] + params[f"l{i}.qkv.b"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):
+            return (
+                z.reshape(b, t, cfg.heads, cfg.head_dim)
+                .transpose(0, 2, 1, 3)
+                .reshape(b * cfg.heads, t, cfg.head_dim)
+            )
+
+        attn = flash_attention(heads(q), heads(k), heads(v), True)
+        attn = (
+            attn.reshape(b, cfg.heads, t, cfg.head_dim)
+            .transpose(0, 2, 1, 3)
+            .reshape(b, t, cfg.hidden)
+        )
+        x = x + attn @ params[f"l{i}.proj.w"] + params[f"l{i}.proj.b"]
+        # --- MLP block ---
+        ln2 = ref.layernorm_ref(x, params[f"l{i}.ln2.g"], params[f"l{i}.ln2.b"])
+        y = fused_mlp(
+            ln2.reshape(b * t, cfg.hidden),
+            params[f"l{i}.mlp.w1"],
+            params[f"l{i}.mlp.b1"],
+            params[f"l{i}.mlp.w2"],
+            params[f"l{i}.mlp.b2"],
+        ).reshape(b, t, cfg.hidden)
+        x = x + y
+    x = ref.layernorm_ref(x, params["ln_f.g"], params["ln_f.b"])
+    return x @ params["wte"].T  # tied LM head
+
+
+def loss_fn(cfg: GptConfig, flat_params: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Next-token cross-entropy (positions 0..T-2 predict 1..T-1)."""
+    params = _unflatten(cfg, flat_params)
+    logits = forward(cfg, params, tokens)[:, :-1, :]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(cfg: GptConfig, state: jax.Array, tokens: jax.Array) -> jax.Array:
+    """One fused step: fwd + bwd + Pallas-AdamW; returns the new state."""
+    p_count = param_count(cfg)
+    p = state[:p_count]
+    m = state[p_count : 2 * p_count]
+    v = state[2 * p_count : 3 * p_count]
+    step = state[3 * p_count]
+
+    loss, grads = jax.value_and_grad(lambda fp: loss_fn(cfg, fp, tokens))(p)
+    new_p, new_m, new_v = adamw_update(p, m, v, grads, step + 1.0)
+    tail = jnp.stack([step + 1.0, loss])
+    return jnp.concatenate([new_p, new_m, new_v, tail])

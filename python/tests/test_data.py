@@ -1,0 +1,33 @@
+"""Token-stream golden values — mirrored in
+`rust/tests/integration_runtime.rs::synth_tokens_matches_python_formula_snapshot`.
+Keep both in sync or the oracle comparison silently diverges."""
+
+import numpy as np
+
+from compile.data import synth_tokens
+
+
+def test_golden_snapshot_matches_rust():
+    toks = synth_tokens(2, 4, 97, 5)
+    assert toks.tolist() == [[85, 1, 14, 27], [92, 8, 21, 34]]
+
+
+def test_shape_dtype_range():
+    toks = synth_tokens(8, 128, 1024, 0)
+    assert toks.shape == (8, 128)
+    assert toks.dtype == np.int32
+    assert toks.min() >= 0 and toks.max() < 1024
+
+
+def test_next_token_is_learnable_shift():
+    # token[t+1] - token[t] == 13 (mod V): the pattern the model learns.
+    v = 211
+    toks = synth_tokens(4, 32, v, 9)
+    diff = (toks[:, 1:].astype(np.int64) - toks[:, :-1]) % v
+    assert (diff == 13).all()
+
+
+def test_step_changes_stream():
+    a = synth_tokens(4, 16, 101, 1)
+    b = synth_tokens(4, 16, 101, 2)
+    assert (a != b).any()

@@ -1,0 +1,167 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles, swept with
+hypothesis over shapes and (where meaningful) dtypes. THE core correctness
+signal for the kernels the AOT path bakes into the artifacts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.adamw import adamw_update
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.fused_mlp import fused_mlp
+
+settings.register_profile("kernels", deadline=None, max_examples=12)
+settings.load_profile("kernels")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- attention
+@given(
+    bh=st.sampled_from([1, 2, 6, 8]),
+    t=st.sampled_from([4, 16, 32, 128]),
+    d=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+)
+def test_attention_forward_matches_ref(bh, t, d, causal):
+    q, k, v = (rand(i, (bh, t, d)) for i in range(3))
+    got = flash_attention(q, k, v, causal)
+    want = ref.attention_ref(q, k, v, causal)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    bh=st.sampled_from([1, 4]),
+    t=st.sampled_from([8, 32]),
+    d=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+)
+def test_attention_gradients_match_ref(bh, t, d, causal):
+    q, k, v = (rand(i + 7, (bh, t, d)) for i in range(3))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+
+def test_attention_causality():
+    # Changing a future token must not change past outputs.
+    q, k, v = (rand(i, (2, 16, 8)) for i in range(3))
+    base = flash_attention(q, k, v, True)
+    k2 = k.at[:, -1, :].add(100.0)
+    v2 = v.at[:, -1, :].add(100.0)
+    pert = flash_attention(q, k2, v2, True)
+    np.testing.assert_allclose(base[:, :-1], pert[:, :-1], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(base[:, -1], pert[:, -1])
+
+
+def test_attention_rows_are_convex_combinations():
+    # With softmax weights, outputs lie within [min(v), max(v)] per dim.
+    q, k, v = (rand(i + 3, (3, 12, 8)) for i in range(3))
+    out = np.asarray(flash_attention(q, k, v, False))
+    v_np = np.asarray(v)
+    assert (out <= v_np.max(axis=1, keepdims=True) + 1e-5).all()
+    assert (out >= v_np.min(axis=1, keepdims=True) - 1e-5).all()
+
+
+# ---------------------------------------------------------------- fused MLP
+@given(
+    n=st.sampled_from([1, 7, 50, 128, 200]),
+    h=st.sampled_from([8, 24, 64]),
+)
+def test_mlp_forward_matches_ref(n, h):
+    x = rand(0, (n, h))
+    w1 = rand(1, (h, 4 * h), scale=0.1)
+    b1 = rand(2, (4 * h,), scale=0.1)
+    w2 = rand(3, (4 * h, h), scale=0.1)
+    b2 = rand(4, (h,), scale=0.1)
+    got = fused_mlp(x, w1, b1, w2, b2)
+    want = ref.mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(n=st.sampled_from([3, 40]), h=st.sampled_from([8, 32]))
+def test_mlp_gradients_match_ref(n, h):
+    args = (
+        rand(0, (n, h)),
+        rand(1, (h, 4 * h), scale=0.1),
+        rand(2, (4 * h,), scale=0.1),
+        rand(3, (4 * h, h), scale=0.1),
+        rand(4, (h,), scale=0.1),
+    )
+    gk = jax.grad(lambda *a: jnp.sum(fused_mlp(*a) ** 2), argnums=tuple(range(5)))(*args)
+    gr = jax.grad(lambda *a: jnp.sum(ref.mlp_ref(*a) ** 2), argnums=tuple(range(5)))(*args)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+
+def test_mlp_row_block_padding_edge():
+    # Row counts straddling the 128-row block boundary.
+    for n in [127, 128, 129, 255, 256, 257]:
+        h = 16
+        x = rand(9, (n, h))
+        w1 = rand(1, (h, 4 * h), scale=0.1)
+        b1 = jnp.zeros((4 * h,))
+        w2 = rand(3, (4 * h, h), scale=0.1)
+        b2 = jnp.zeros((h,))
+        got = fused_mlp(x, w1, b1, w2, b2)
+        assert got.shape == (n, h)
+        np.testing.assert_allclose(got, ref.mlp_ref(x, w1, b1, w2, b2), rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------------- adamw
+@given(
+    n=st.sampled_from([1, 100, 16 * 1024, 16 * 1024 + 1, 50_000]),
+    step=st.sampled_from([1, 2, 10, 1000]),
+)
+def test_adamw_matches_ref(n, step):
+    p = rand(0, (n,))
+    m = rand(1, (n,), scale=0.1)
+    v = jnp.abs(rand(2, (n,), scale=0.1))
+    g = rand(3, (n,))
+    got = adamw_update(p, m, v, g, jnp.asarray(float(step)))
+    want = ref.adamw_ref(p, m, v, g, step)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_adamw_zero_grad_still_decays_moments():
+    n = 256
+    p = rand(0, (n,))
+    m = rand(1, (n,), scale=0.5)
+    v = jnp.abs(rand(2, (n,), scale=0.5))
+    g = jnp.zeros((n,))
+    p2, m2, v2 = adamw_update(p, m, v, g, jnp.asarray(5.0))
+    np.testing.assert_allclose(m2, 0.9 * m, rtol=1e-6)
+    np.testing.assert_allclose(v2, 0.999 * v, rtol=1e-6)
+    # Parameters still move (bias-corrected momentum is nonzero).
+    assert not np.allclose(p2, p)
+
+
+def test_adamw_descends_quadratic():
+    # Minimize ||x||^2: AdamW must reduce it monotonically-ish.
+    x = rand(4, (128,))
+    m = jnp.zeros_like(x)
+    v = jnp.zeros_like(x)
+    norms = [float(jnp.sum(x**2))]
+    update = jax.jit(adamw_update)
+    for t in range(1, 150):
+        g = 2.0 * x
+        x, m, v = update(x, m, v, g, jnp.asarray(float(t)))
+        norms.append(float(jnp.sum(x**2)))
+    # lr = 1e-3 and |x_i| ~ 1: Adam moves each coordinate ~lr per step, so
+    # 150 steps shave ~15-25 % off the norm and never increase it.
+    assert norms[-1] < 0.85 * norms[0], norms[::30]
+    assert all(b <= a + 1e-6 for a, b in zip(norms, norms[1:]))

@@ -1,0 +1,29 @@
+//! Bench: Fig 4 — end-to-end NewWorkload simulation under Frenzy and
+//! Opportunistic scheduling (also reports the figure's metrics).
+
+use frenzy::bench_harness::Bench;
+use frenzy::config::real_testbed;
+use frenzy::marp::Marp;
+use frenzy::sched::{has::Has, opportunistic::Opportunistic};
+use frenzy::sim::{simulate, SimConfig};
+use frenzy::workload::newworkload;
+
+fn main() {
+    std::env::set_var("FRENZY_BENCH_FAST", "1"); // sims are ~ms; keep iters sane
+    let spec = real_testbed();
+    let mut b = Bench::new("fig4_e2e_sim");
+    for &tasks in &[30usize, 60] {
+        let trace = newworkload::generate(tasks, 11);
+        b.bench(&format!("frenzy_{tasks}"), || {
+            let mut has = Has::new(Marp::with_defaults(spec.clone()));
+            simulate(&spec, &mut has, &trace, SimConfig::default(), "nw").avg_jct_s
+        });
+        b.bench(&format!("opportunistic_{tasks}"), || {
+            let mut opp = Opportunistic::new(&spec);
+            simulate(&spec, &mut opp, &trace, SimConfig::default(), "nw").avg_jct_s
+        });
+    }
+    b.report();
+    // And the figure itself, once.
+    frenzy::exp::fig4::report();
+}

@@ -1,0 +1,30 @@
+//! Bench: Fig 5(b) — trace-driven JCT simulation (Philly / Helios), Frenzy
+//! vs Sia, plus the figure output.
+
+use frenzy::bench_harness::Bench;
+use frenzy::config::sia_sim;
+use frenzy::marp::Marp;
+use frenzy::sched::{has::Has, sia::Sia};
+use frenzy::sim::{simulate, SimConfig};
+use frenzy::workload::{helios, philly};
+
+fn main() {
+    std::env::set_var("FRENZY_BENCH_FAST", "1");
+    let spec = sia_sim();
+    let mut b = Bench::new("fig5b_traces");
+    let philly_trace = philly::generate(80, 11);
+    let helios_trace = helios::generate(80, 11);
+    for (name, trace) in [("philly", &philly_trace), ("helios", &helios_trace)] {
+        b.bench(&format!("frenzy_{name}_80"), || {
+            let mut has = Has::new(Marp::with_defaults(spec.clone()));
+            simulate(&spec, &mut has, trace, SimConfig::default(), name).avg_jct_s
+        });
+        b.bench(&format!("sia_{name}_80"), || {
+            let mut sia = Sia::new(&spec);
+            sia.node_limit = 200_000;
+            simulate(&spec, &mut sia, trace, SimConfig::default(), name).avg_jct_s
+        });
+    }
+    b.report();
+    frenzy::exp::fig5b::report();
+}

@@ -1,0 +1,26 @@
+//! Bench: MARP prediction + plan enumeration latency (the serverless
+//! admission path — must be microseconds), plus the Fig 6 accuracy table.
+
+use frenzy::bench_harness::Bench;
+use frenzy::config::models::model_by_name;
+use frenzy::config::real_testbed;
+use frenzy::marp::Marp;
+use frenzy::memory::{exact::exact_peak_bytes, marp_peak_bytes, Parallelism, TrainConfig};
+
+fn main() {
+    let mut b = Bench::new("marp");
+    let m7 = model_by_name("gpt2-7b").unwrap();
+    let m350 = model_by_name("gpt2-350m").unwrap();
+    let cfg = TrainConfig { global_batch: 8 };
+    let par = Parallelism::new(2, 4);
+
+    b.bench("closed_form_peak", || marp_peak_bytes(&m7, &cfg, par));
+    b.bench("exact_accounting_peak", || exact_peak_bytes(&m7, &cfg, par));
+
+    let marp = Marp::with_defaults(real_testbed());
+    b.bench("plan_enumeration_gpt2_7b", || marp.plans(&m7, &cfg).len());
+    b.bench("plan_enumeration_gpt2_350m", || marp.plans(&m350, &cfg).len());
+    b.report();
+
+    frenzy::exp::fig6::report();
+}

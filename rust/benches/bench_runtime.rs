@@ -1,0 +1,27 @@
+//! Bench: PJRT hot path — HLO load/compile and per-step training latency of
+//! the AOT artifacts. Skips gracefully when `artifacts/` is absent.
+
+use frenzy::bench_harness::Bench;
+use frenzy::runtime::{synth_tokens, Manifest, Runtime};
+
+fn main() {
+    let dir = frenzy::util::repo_path("artifacts");
+    let Ok(manifest) = Manifest::load(&dir) else {
+        println!("bench_runtime: artifacts/ missing — run `make artifacts` first (skipping)");
+        return;
+    };
+    let mut b = Bench::new("runtime");
+    b.bench("synth_tokens_8x128", || synth_tokens(8, 128, 1024, 3));
+
+    let meta = manifest.model("gpt2-tiny").expect("gpt2-tiny artifact").clone();
+    let mut rt = Runtime::new().expect("pjrt cpu client");
+    // Compile cost (cache defeated by fresh Runtime) — measured once each.
+    let t0 = std::time::Instant::now();
+    let mut rt2 = Runtime::new().expect("client");
+    let _ = rt2.load(&meta).expect("load");
+    println!("cold load+compile (init+step): {:.3}s", t0.elapsed().as_secs_f64());
+
+    let mut session = rt.start_session(&meta).expect("session");
+    b.bench("train_step_gpt2_tiny", || session.step().expect("step"));
+    b.report();
+}

@@ -1,0 +1,28 @@
+//! Bench: discrete-event simulator throughput (events/sec) — the substrate
+//! every figure rests on must itself be fast.
+
+use frenzy::bench_harness::Bench;
+use frenzy::config::{real_testbed, sia_sim};
+use frenzy::marp::Marp;
+use frenzy::sched::has::Has;
+use frenzy::sim::{simulate, SimConfig};
+use frenzy::workload::{newworkload, philly};
+
+fn main() {
+    std::env::set_var("FRENZY_BENCH_FAST", "1");
+    let mut b = Bench::new("sim");
+    let real = real_testbed();
+    let siasim = sia_sim();
+    let nw = newworkload::generate(60, 11);
+    let ph = philly::generate(200, 11);
+    // Each job produces >= 2 events (arrival, finish) + scheduling rounds.
+    b.bench_throughput("newworkload_60_jobs", 60.0, || {
+        let mut has = Has::new(Marp::with_defaults(real.clone()));
+        simulate(&real, &mut has, &nw, SimConfig::default(), "nw").n_completed
+    });
+    b.bench_throughput("philly_200_jobs", 200.0, || {
+        let mut has = Has::new(Marp::with_defaults(siasim.clone()));
+        simulate(&siasim, &mut has, &ph, SimConfig::default(), "ph").n_completed
+    });
+    b.report();
+}

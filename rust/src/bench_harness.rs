@@ -1,0 +1,187 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, calibrated iteration counts, and mean/p50/p99 reporting.
+//! All `rust/benches/*.rs` binaries use this with `harness = false`.
+//!
+//! Results are printed as a table and optionally appended as JSON under
+//! `results/bench/` so EXPERIMENTS.md numbers can be regenerated verbatim.
+
+use crate::util::json::Json;
+use crate::util::stats::Sample;
+use crate::util::table::{fmt_duration, Table};
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.mean_s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_s", self.mean_s)
+            .set("p50_s", self.p50_s)
+            .set("p99_s", self.p99_s)
+            .set("min_s", self.min_s);
+        if let Some(t) = self.throughput() {
+            j.set("throughput_per_s", t);
+        }
+        j
+    }
+}
+
+/// Benchmark group: collects results, prints a table, dumps JSON.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    measure: Duration,
+    max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // FRENZY_BENCH_FAST=1 shrinks budgets (used by `cargo test`-adjacent
+        // smoke runs and CI-style sanity checks).
+        let fast = std::env::var("FRENZY_BENCH_FAST").ok().is_some_and(|v| v == "1");
+        Self {
+            group: group.to_string(),
+            warmup: if fast { Duration::from_millis(20) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(100) } else { Duration::from_secs(2) },
+            max_iters: if fast { 200 } else { 100_000 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn measure(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    /// Benchmark `f`, which performs ONE unit of work per call. The return
+    /// value is black-boxed to keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_items(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (`items` units per call).
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_items(name, Some(items), &mut f)
+    }
+
+    fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut impl FnMut() -> T,
+    ) -> &BenchResult {
+        // Warmup and single-shot calibration.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_call = (w0.elapsed().as_secs_f64() / warm_iters.max(1) as f64).max(1e-9);
+        let target = ((self.measure.as_secs_f64() / per_call) as u64).clamp(10, self.max_iters);
+
+        let mut sample = Sample::new();
+        for _ in 0..target {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            sample.push(t0.elapsed().as_secs_f64());
+        }
+        let mut s = sample;
+        let result = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            iters: target,
+            mean_s: s.mean(),
+            p50_s: s.median(),
+            p99_s: s.p99(),
+            min_s: s.min(),
+            items_per_iter: items,
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the results table; also writes `results/bench/<group>.json`.
+    pub fn report(&self) {
+        let mut t = Table::new(&["benchmark", "iters", "mean", "p50", "p99", "min", "thrpt/s"])
+            .with_title(&format!("== bench group: {} ==", self.group));
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                r.iters.to_string(),
+                fmt_duration(r.mean_s),
+                fmt_duration(r.p50_s),
+                fmt_duration(r.p99_s),
+                fmt_duration(r.min_s),
+                r.throughput().map(|t| format!("{t:.1}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        println!("{}", t.render());
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        let path = format!("results/bench/{}.json", self.group.replace('/', "_"));
+        if let Err(e) = crate::util::write_file(&path, &arr.to_string_pretty()) {
+            eprintln!("warn: could not write {path}: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("FRENZY_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        let r = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.iters >= 10);
+        assert!(r.p99_s >= r.p50_s);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        std::env::set_var("FRENZY_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest2");
+        let r = b.bench_throughput("items", 1000.0, || std::hint::black_box(3 + 4));
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+}

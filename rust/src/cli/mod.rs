@@ -1,0 +1,164 @@
+//! Lightweight CLI argument parser (clap is unavailable offline).
+//!
+//! Supports: a subcommand word, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments. Typed accessors parse on demand and produce
+//! friendly errors.
+//!
+//! Disambiguation rule: `--name` followed by a token that does not start
+//! with `--` is parsed as an option with that value; place bare flags after
+//! positionals or use `--flag` at the end (or `--key=value` forms) when
+//! mixing.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First bare word, if any (the subcommand).
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I, S>(args: I) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let raw: Vec<String> = args.into_iter().map(|s| s.into()).collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err(CliError("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.options.insert(stripped.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| CliError(format!("--{name} '{s}': {e}"))),
+        }
+    }
+
+    pub fn opt_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.opt(name).ok_or_else(|| CliError(format!("missing required option --{name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(["simulate", "--tasks", "30", "--sched=has", "trace.csv", "--verbose"])
+            .unwrap();
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.opt("tasks"), Some("30"));
+        assert_eq!(a.opt("sched"), Some("has"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["trace.csv"]);
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let a = Args::parse(["x", "--n", "42", "--rate", "1.5"]).unwrap();
+        assert_eq!(a.opt_parse::<u64>("n").unwrap(), Some(42));
+        assert_eq!(a.opt_parse_or::<f64>("rate", 0.0).unwrap(), 1.5);
+        assert_eq!(a.opt_parse_or::<u64>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn typed_parse_error_mentions_option() {
+        let a = Args::parse(["x", "--n", "notanum"]).unwrap();
+        let err = a.opt_parse::<u64>("n").unwrap_err();
+        assert!(err.0.contains("--n"));
+    }
+
+    #[test]
+    fn require_missing() {
+        let a = Args::parse(["x"]).unwrap();
+        assert!(a.require("model").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(["run", "--fast"]).unwrap();
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("fast"), None);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(["run", "--fast", "--n", "3"]).unwrap();
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("n"), Some("3"));
+    }
+}

@@ -1,0 +1,296 @@
+//! Runtime cluster state and the Resource Orchestrator (§IV, third
+//! component): tracks idle GPUs per node, executes allocations and releases,
+//! and maintains the job→resources ledger.
+
+use crate::config::{ClusterSpec, GpuSpec, LinkKind};
+use crate::job::JobId;
+use std::collections::BTreeMap;
+
+/// Node identifier (index into the cluster's node list).
+pub type NodeId = usize;
+
+/// Mutable per-node state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub gpu: GpuSpec,
+    pub total: u32,
+    pub idle: u32,
+    pub link: LinkKind,
+}
+
+impl Node {
+    pub fn used(&self) -> u32 {
+        self.total - self.idle
+    }
+}
+
+/// One job's placement: GPUs taken per node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub job: JobId,
+    pub parts: Vec<(NodeId, u32)>,
+}
+
+impl Allocation {
+    pub fn total_gpus(&self) -> u32 {
+        self.parts.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn is_single_node(&self) -> bool {
+        self.parts.len() == 1
+    }
+}
+
+/// Errors the orchestrator can raise.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterError {
+    /// Requested more GPUs than a node has idle.
+    InsufficientIdle { node: NodeId, requested: u32, idle: u32 },
+    /// Unknown node id.
+    NoSuchNode(NodeId),
+    /// Job already holds an allocation.
+    AlreadyAllocated(JobId),
+    /// Job holds no allocation.
+    NotAllocated(JobId),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::InsufficientIdle { node, requested, idle } => {
+                write!(f, "node {node}: requested {requested} GPUs but only {idle} idle")
+            }
+            ClusterError::NoSuchNode(n) => write!(f, "no such node {n}"),
+            ClusterError::AlreadyAllocated(j) => write!(f, "job {j} already allocated"),
+            ClusterError::NotAllocated(j) => write!(f, "job {j} not allocated"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// Live cluster state: nodes with idle counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterState {
+    pub nodes: Vec<Node>,
+    /// Cross-node bandwidth, forwarded from the spec.
+    pub inter_node_gbps: f64,
+}
+
+impl ClusterState {
+    pub fn from_spec(spec: &ClusterSpec) -> Self {
+        let nodes = spec
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(id, n)| Node {
+                id,
+                gpu: n.gpu.clone(),
+                total: n.count,
+                idle: n.count,
+                link: n.link,
+            })
+            .collect();
+        Self { nodes, inter_node_gbps: spec.inter_node_gbps }
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.nodes.iter().map(|n| n.total).sum()
+    }
+
+    pub fn idle_gpus(&self) -> u32 {
+        self.nodes.iter().map(|n| n.idle).sum()
+    }
+
+    /// Idle GPUs whose memory is at least `min_mem`.
+    pub fn idle_gpus_with_mem(&self, min_mem: u64) -> u32 {
+        self.nodes.iter().filter(|n| n.gpu.mem_bytes >= min_mem).map(|n| n.idle).sum()
+    }
+
+    /// Overall utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        let total = self.total_gpus();
+        if total == 0 {
+            0.0
+        } else {
+            1.0 - self.idle_gpus() as f64 / total as f64
+        }
+    }
+
+    /// Fragmentation metric: 1 − (largest idle block / total idle). High
+    /// values mean idle GPUs are scattered across nodes.
+    pub fn fragmentation(&self) -> f64 {
+        let idle = self.idle_gpus();
+        if idle == 0 {
+            return 0.0;
+        }
+        let largest = self.nodes.iter().map(|n| n.idle).max().unwrap_or(0);
+        1.0 - largest as f64 / idle as f64
+    }
+
+    fn take(&mut self, node: NodeId, count: u32) -> Result<(), ClusterError> {
+        let n = self.nodes.get_mut(node).ok_or(ClusterError::NoSuchNode(node))?;
+        if n.idle < count {
+            return Err(ClusterError::InsufficientIdle { node, requested: count, idle: n.idle });
+        }
+        n.idle -= count;
+        Ok(())
+    }
+
+    fn give(&mut self, node: NodeId, count: u32) -> Result<(), ClusterError> {
+        let n = self.nodes.get_mut(node).ok_or(ClusterError::NoSuchNode(node))?;
+        n.idle = (n.idle + count).min(n.total);
+        Ok(())
+    }
+}
+
+/// The Resource Orchestrator: authoritative allocate/release with a ledger.
+#[derive(Debug, Clone)]
+pub struct Orchestrator {
+    state: ClusterState,
+    ledger: BTreeMap<JobId, Allocation>,
+}
+
+impl Orchestrator {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        Self { state: ClusterState::from_spec(spec), ledger: BTreeMap::new() }
+    }
+
+    pub fn state(&self) -> &ClusterState {
+        &self.state
+    }
+
+    /// Snapshot for a scheduler to plan against (schedulers never mutate the
+    /// authoritative state directly).
+    pub fn snapshot(&self) -> ClusterState {
+        self.state.clone()
+    }
+
+    pub fn allocation_of(&self, job: JobId) -> Option<&Allocation> {
+        self.ledger.get(&job)
+    }
+
+    pub fn running_jobs(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.ledger.keys().copied()
+    }
+
+    /// Atomically apply an allocation: either every part is taken or none.
+    pub fn allocate(&mut self, alloc: Allocation) -> Result<(), ClusterError> {
+        if self.ledger.contains_key(&alloc.job) {
+            return Err(ClusterError::AlreadyAllocated(alloc.job));
+        }
+        // Validate first against a scratch copy (atomicity).
+        let mut scratch = self.state.clone();
+        for &(node, count) in &alloc.parts {
+            scratch.take(node, count)?;
+        }
+        self.state = scratch;
+        self.ledger.insert(alloc.job, alloc);
+        Ok(())
+    }
+
+    /// Release a job's resources.
+    pub fn release(&mut self, job: JobId) -> Result<Allocation, ClusterError> {
+        let alloc = self.ledger.remove(&job).ok_or(ClusterError::NotAllocated(job))?;
+        for &(node, count) in &alloc.parts {
+            self.state.give(node, count).expect("ledger references valid nodes");
+        }
+        Ok(alloc)
+    }
+
+    /// Invariant check used by tests: ledger totals + idle == totals.
+    pub fn check_conservation(&self) -> bool {
+        let mut used = vec![0u32; self.state.nodes.len()];
+        for alloc in self.ledger.values() {
+            for &(node, count) in &alloc.parts {
+                if node >= used.len() {
+                    return false;
+                }
+                used[node] += count;
+            }
+        }
+        self.state
+            .nodes
+            .iter()
+            .all(|n| n.idle + used[n.id] == n.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{real_testbed, GIB};
+
+    #[test]
+    fn from_spec_counts() {
+        let s = ClusterState::from_spec(&real_testbed());
+        assert_eq!(s.total_gpus(), 11);
+        assert_eq!(s.idle_gpus(), 11);
+        assert_eq!(s.utilization(), 0.0);
+    }
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut o = Orchestrator::new(&real_testbed());
+        let alloc = Allocation { job: 1, parts: vec![(2, 4)] }; // the A800 node
+        o.allocate(alloc.clone()).unwrap();
+        assert_eq!(o.state().idle_gpus(), 7);
+        assert_eq!(o.allocation_of(1), Some(&alloc));
+        assert!(o.check_conservation());
+        let released = o.release(1).unwrap();
+        assert_eq!(released, alloc);
+        assert_eq!(o.state().idle_gpus(), 11);
+        assert!(o.check_conservation());
+    }
+
+    #[test]
+    fn allocation_is_atomic() {
+        let mut o = Orchestrator::new(&real_testbed());
+        // Part 1 is fine (node 0 has 2), part 2 overdraws node 1 (has 1).
+        let bad = Allocation { job: 9, parts: vec![(0, 2), (1, 3)] };
+        let err = o.allocate(bad).unwrap_err();
+        assert!(matches!(err, ClusterError::InsufficientIdle { node: 1, .. }));
+        // Nothing must have been taken.
+        assert_eq!(o.state().idle_gpus(), 11);
+        assert!(o.check_conservation());
+    }
+
+    #[test]
+    fn double_allocate_rejected() {
+        let mut o = Orchestrator::new(&real_testbed());
+        o.allocate(Allocation { job: 1, parts: vec![(0, 1)] }).unwrap();
+        let err = o.allocate(Allocation { job: 1, parts: vec![(1, 1)] }).unwrap_err();
+        assert_eq!(err, ClusterError::AlreadyAllocated(1));
+    }
+
+    #[test]
+    fn release_unknown_job() {
+        let mut o = Orchestrator::new(&real_testbed());
+        assert_eq!(o.release(42).unwrap_err(), ClusterError::NotAllocated(42));
+    }
+
+    #[test]
+    fn idle_with_mem_filter() {
+        let s = ClusterState::from_spec(&real_testbed());
+        // 80G GPUs: 4 (A800) + 2 + 2 = 8
+        assert_eq!(s.idle_gpus_with_mem(80 * GIB), 8);
+        assert_eq!(s.idle_gpus_with_mem(40 * GIB), 11);
+        assert_eq!(s.idle_gpus_with_mem(81 * GIB), 0);
+    }
+
+    #[test]
+    fn fragmentation_metric() {
+        let mut s = ClusterState::from_spec(&real_testbed());
+        assert!(s.fragmentation() > 0.0); // idle spread across 5 nodes
+        // Empty the cluster -> fragmentation defined as 0.
+        for n in &mut s.nodes {
+            n.idle = 0;
+        }
+        assert_eq!(s.fragmentation(), 0.0);
+    }
+}

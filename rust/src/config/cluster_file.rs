@@ -1,0 +1,130 @@
+//! Cluster topology files: a tiny line-oriented format so users can describe
+//! their own heterogeneous cluster without recompiling.
+//!
+//! ```text
+//! # comment
+//! cluster my-lab
+//! inter_node_gbps 12.5
+//! node A100-40G x2 pcie
+//! node A800-80G x4 nvlink
+//! ```
+
+use super::{gpu_by_name, ClusterSpec, LinkKind, NodeSpec};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parse a cluster description from text.
+pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
+    let mut name = String::from("custom");
+    let mut inter = 12.5f64;
+    let mut nodes = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let key = parts.next().unwrap();
+        let ctx = || format!("cluster file line {}", lineno + 1);
+        match key {
+            "cluster" => {
+                name = parts.next().ok_or_else(|| anyhow!("{}: missing name", ctx()))?.to_string();
+            }
+            "inter_node_gbps" => {
+                inter = parts
+                    .next()
+                    .ok_or_else(|| anyhow!("{}: missing value", ctx()))?
+                    .parse()
+                    .with_context(ctx)?;
+            }
+            "node" => {
+                let gpu_name = parts.next().ok_or_else(|| anyhow!("{}: missing gpu", ctx()))?;
+                let count_s = parts.next().ok_or_else(|| anyhow!("{}: missing count", ctx()))?;
+                let link_s = parts.next().unwrap_or("pcie");
+                let gpu = gpu_by_name(gpu_name)
+                    .ok_or_else(|| anyhow!("{}: unknown GPU '{gpu_name}'", ctx()))?;
+                let count: u32 = count_s
+                    .strip_prefix('x')
+                    .unwrap_or(count_s)
+                    .parse()
+                    .with_context(ctx)?;
+                if count == 0 {
+                    bail!("{}: node must have at least one GPU", ctx());
+                }
+                let link = match link_s.to_ascii_lowercase().as_str() {
+                    "nvlink" => LinkKind::NvLink,
+                    "pcie" => LinkKind::Pcie,
+                    other => bail!("{}: unknown link '{other}'", ctx()),
+                };
+                nodes.push(NodeSpec { gpu, count, link });
+            }
+            other => bail!("{}: unknown directive '{other}'", ctx()),
+        }
+    }
+    if nodes.is_empty() {
+        bail!("cluster file declares no nodes");
+    }
+    Ok(ClusterSpec { name, nodes, inter_node_gbps: inter })
+}
+
+/// Load a cluster description from a file path.
+pub fn load_cluster(path: &str) -> Result<ClusterSpec> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading cluster file {path}"))?;
+    parse_cluster(&text)
+}
+
+/// Render a ClusterSpec back to the file format (round-trip support).
+pub fn render_cluster(c: &ClusterSpec) -> String {
+    let mut out = format!("cluster {}\ninter_node_gbps {}\n", c.name, c.inter_node_gbps);
+    for n in &c.nodes {
+        let link = match n.link {
+            LinkKind::NvLink => "nvlink",
+            LinkKind::Pcie => "pcie",
+        };
+        out.push_str(&format!("node {} x{} {}\n", n.gpu.name, n.count, link));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GIB;
+
+    #[test]
+    fn parse_basic() {
+        let c = parse_cluster(
+            "# lab cluster\ncluster lab\ninter_node_gbps 25\nnode A100-40G x2 pcie\nnode A800-80G x4 nvlink\n",
+        )
+        .unwrap();
+        assert_eq!(c.name, "lab");
+        assert_eq!(c.inter_node_gbps, 25.0);
+        assert_eq!(c.nodes.len(), 2);
+        assert_eq!(c.nodes[1].count, 4);
+        assert_eq!(c.nodes[1].link, LinkKind::NvLink);
+        assert_eq!(c.nodes[0].gpu.mem_bytes, 40 * GIB);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = crate::config::real_testbed();
+        let text = render_cluster(&c);
+        let back = parse_cluster(&text).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_cluster("").is_err());
+        assert!(parse_cluster("node H900 x2 pcie").is_err());
+        assert!(parse_cluster("node A100-40G x0 pcie").is_err());
+        assert!(parse_cluster("node A100-40G x2 warpdrive").is_err());
+        assert!(parse_cluster("bogus directive").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = parse_cluster("\n# hi\nnode A100-40G x1 pcie # tail comment\n").unwrap();
+        assert_eq!(c.nodes.len(), 1);
+    }
+}

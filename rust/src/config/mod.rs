@@ -1,0 +1,201 @@
+//! Static configuration: GPU catalog, LLM model zoo, cluster topologies.
+//!
+//! The scheduler consumes *descriptors* (memory capacity, peak compute,
+//! link technology) rather than real devices, which is exactly the
+//! information the paper's HAS/MARP use. Both evaluation topologies from
+//! §V.A are encoded here:
+//! * `real_testbed()` — 5 nodes, 3 GPU types (2×A100-40 PCIe head, 1×A100-40,
+//!   4×A800-80 NVLink, 2 × 2×A100-80 PCIe).
+//! * `sia_sim()` — the Sia-paper topology used with the PAI simulator
+//!   (3 × 8×2080Ti, 2 × 8×A100-40, 1 × 4×RTX6000).
+
+pub mod cluster_file;
+pub mod models;
+
+pub use models::{model_zoo, ModelConfig};
+
+pub const GIB: u64 = 1024 * 1024 * 1024;
+
+/// Inter-GPU link within a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// NVLink-class: high bandwidth, low latency.
+    NvLink,
+    /// PCIe-attached GPUs.
+    Pcie,
+}
+
+impl LinkKind {
+    /// Effective intra-node collective bandwidth (GB/s per GPU pair),
+    /// used by the performance model.
+    pub fn bandwidth_gbps(self) -> f64 {
+        match self {
+            LinkKind::NvLink => 300.0, // NVLink3-class aggregate
+            LinkKind::Pcie => 24.0,    // PCIe 4.0 x16 effective
+        }
+    }
+}
+
+/// A GPU model descriptor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Human name, e.g. "A100-40G".
+    pub name: &'static str,
+    /// Device memory in bytes.
+    pub mem_bytes: u64,
+    /// Peak dense half/bf16 throughput in TFLOPs (tensor-core class).
+    pub peak_tflops: f64,
+}
+
+/// The GPU catalog covering every type in the paper's two testbeds.
+pub fn gpu_catalog() -> Vec<GpuSpec> {
+    vec![
+        GpuSpec { name: "A100-40G", mem_bytes: 40 * GIB, peak_tflops: 312.0 },
+        GpuSpec { name: "A100-80G", mem_bytes: 80 * GIB, peak_tflops: 312.0 },
+        GpuSpec { name: "A800-80G", mem_bytes: 80 * GIB, peak_tflops: 312.0 },
+        GpuSpec { name: "RTX2080Ti", mem_bytes: 11 * GIB, peak_tflops: 108.0 },
+        GpuSpec { name: "RTX6000", mem_bytes: 24 * GIB, peak_tflops: 130.0 },
+        GpuSpec { name: "RTX3090", mem_bytes: 24 * GIB, peak_tflops: 142.0 },
+        GpuSpec { name: "V100-32G", mem_bytes: 32 * GIB, peak_tflops: 125.0 },
+    ]
+}
+
+/// Look up a GPU by name in the catalog.
+pub fn gpu_by_name(name: &str) -> Option<GpuSpec> {
+    gpu_catalog().into_iter().find(|g| g.name == name)
+}
+
+/// A node: `count` identical GPUs joined by `link`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub count: u32,
+    pub link: LinkKind,
+}
+
+/// A whole cluster topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: Vec<NodeSpec>,
+    /// Cross-node network bandwidth (GB/s), e.g. 100 Gb Ethernet ≈ 12 GB/s.
+    pub inter_node_gbps: f64,
+}
+
+impl ClusterSpec {
+    pub fn total_gpus(&self) -> u32 {
+        self.nodes.iter().map(|n| n.count).sum()
+    }
+
+    /// Distinct GPU memory sizes present, descending.
+    pub fn gpu_sizes_desc(&self) -> Vec<u64> {
+        let mut sizes: Vec<u64> = self.nodes.iter().map(|n| n.gpu.mem_bytes).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        sizes.dedup();
+        sizes
+    }
+
+    /// Largest GPU memory in the cluster.
+    pub fn max_gpu_mem(&self) -> u64 {
+        self.nodes.iter().map(|n| n.gpu.mem_bytes).max().unwrap_or(0)
+    }
+
+    /// Max GPUs on any single node (bounds sensible tensor-parallel width).
+    pub fn max_gpus_per_node(&self) -> u32 {
+        self.nodes.iter().map(|n| n.count).max().unwrap_or(0)
+    }
+}
+
+/// §V.A real testbed: 5 nodes, 3 GPU types, 11 GPUs total.
+pub fn real_testbed() -> ClusterSpec {
+    let a100_40 = gpu_by_name("A100-40G").unwrap();
+    let a100_80 = gpu_by_name("A100-80G").unwrap();
+    let a800_80 = gpu_by_name("A800-80G").unwrap();
+    ClusterSpec {
+        name: "real-testbed".into(),
+        nodes: vec![
+            // head node: 2 x A100 40G, PCIe
+            NodeSpec { gpu: a100_40.clone(), count: 2, link: LinkKind::Pcie },
+            // 1 x A100 40G
+            NodeSpec { gpu: a100_40, count: 1, link: LinkKind::Pcie },
+            // 4 x A800 80G, NVLink
+            NodeSpec { gpu: a800_80, count: 4, link: LinkKind::NvLink },
+            // 2 nodes with 2 x A100 80G, PCIe
+            NodeSpec { gpu: a100_80.clone(), count: 2, link: LinkKind::Pcie },
+            NodeSpec { gpu: a100_80, count: 2, link: LinkKind::Pcie },
+        ],
+        inter_node_gbps: 12.5,
+    }
+}
+
+/// §V.A simulator topology (same as Sia): 3 × 8×2080Ti, 2 × 8×A100-40,
+/// 1 × 4×RTX6000 — 44 GPUs total.
+pub fn sia_sim() -> ClusterSpec {
+    let t2080 = gpu_by_name("RTX2080Ti").unwrap();
+    let a100_40 = gpu_by_name("A100-40G").unwrap();
+    let rtx6000 = gpu_by_name("RTX6000").unwrap();
+    ClusterSpec {
+        name: "sia-sim".into(),
+        nodes: vec![
+            NodeSpec { gpu: t2080.clone(), count: 8, link: LinkKind::Pcie },
+            NodeSpec { gpu: t2080.clone(), count: 8, link: LinkKind::Pcie },
+            NodeSpec { gpu: t2080, count: 8, link: LinkKind::Pcie },
+            NodeSpec { gpu: a100_40.clone(), count: 8, link: LinkKind::NvLink },
+            NodeSpec { gpu: a100_40, count: 8, link: LinkKind::NvLink },
+            NodeSpec { gpu: rtx6000, count: 4, link: LinkKind::Pcie },
+        ],
+        inter_node_gbps: 12.5,
+    }
+}
+
+/// Resolve a topology by name (CLI `--cluster`).
+pub fn cluster_by_name(name: &str) -> Option<ClusterSpec> {
+    match name {
+        "real-testbed" | "real" => Some(real_testbed()),
+        "sia-sim" | "sim" => Some(sia_sim()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_covers_testbeds() {
+        for n in ["A100-40G", "A100-80G", "A800-80G", "RTX2080Ti", "RTX6000"] {
+            assert!(gpu_by_name(n).is_some(), "{n} missing");
+        }
+        assert!(gpu_by_name("H100").is_none());
+    }
+
+    #[test]
+    fn real_testbed_matches_paper() {
+        let c = real_testbed();
+        assert_eq!(c.nodes.len(), 5);
+        assert_eq!(c.total_gpus(), 11);
+        // three distinct GPU *types* but two distinct memory sizes (40, 80)
+        assert_eq!(c.gpu_sizes_desc(), vec![80 * GIB, 40 * GIB]);
+        assert_eq!(c.max_gpus_per_node(), 4);
+    }
+
+    #[test]
+    fn sia_sim_matches_sia_paper() {
+        let c = sia_sim();
+        assert_eq!(c.nodes.len(), 6);
+        assert_eq!(c.total_gpus(), 44);
+        assert_eq!(c.max_gpu_mem(), 40 * GIB);
+    }
+
+    #[test]
+    fn link_bandwidths_ordered() {
+        assert!(LinkKind::NvLink.bandwidth_gbps() > LinkKind::Pcie.bandwidth_gbps());
+    }
+
+    #[test]
+    fn cluster_lookup() {
+        assert!(cluster_by_name("real").is_some());
+        assert!(cluster_by_name("sia-sim").is_some());
+        assert!(cluster_by_name("nope").is_none());
+    }
+}

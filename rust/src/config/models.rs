@@ -1,0 +1,113 @@
+//! LLM model zoo: the decoder-only (GPT-2 family) and encoder (BERT family)
+//! configurations used by the paper's workloads (§V.A "NewWorkload" consists
+//! of GPT-2 and BERT models of different sizes; §V.C validates memory
+//! prediction on GPT2-350M and GPT2-7B).
+
+/// Transformer hyper-parameters (the MARP inputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    /// Vocabulary size V.
+    pub vocab: u64,
+    /// Hidden size h.
+    pub hidden: u64,
+    /// Number of transformer layers l.
+    pub layers: u64,
+    /// Number of attention heads a.
+    pub heads: u64,
+    /// Sequence length s.
+    pub seq_len: u64,
+}
+
+impl ModelConfig {
+    /// Parameter count via the paper's profiling formula:
+    /// `W = V·h + l·(12h² + 13h)`.
+    pub fn param_count(&self) -> u64 {
+        self.vocab * self.hidden
+            + self.layers * (12 * self.hidden * self.hidden + 13 * self.hidden)
+    }
+
+    /// Approximate training FLOPs per sample (fwd+bwd ≈ 6·W per token).
+    pub fn flops_per_sample(&self) -> f64 {
+        6.0 * self.param_count() as f64 * self.seq_len as f64
+    }
+}
+
+const GPT2_VOCAB: u64 = 50257;
+const BERT_VOCAB: u64 = 30522;
+
+/// All models available to the workload generators.
+pub fn model_zoo() -> Vec<ModelConfig> {
+    vec![
+        // --- GPT-2 / GPT-3 style decoder models ---
+        ModelConfig { name: "gpt2-125m", vocab: GPT2_VOCAB, hidden: 768, layers: 12, heads: 12, seq_len: 1024 },
+        ModelConfig { name: "gpt2-350m", vocab: GPT2_VOCAB, hidden: 1024, layers: 24, heads: 16, seq_len: 1024 },
+        ModelConfig { name: "gpt2-760m", vocab: GPT2_VOCAB, hidden: 1536, layers: 24, heads: 16, seq_len: 1024 },
+        ModelConfig { name: "gpt2-1.3b", vocab: GPT2_VOCAB, hidden: 2048, layers: 24, heads: 16, seq_len: 1024 },
+        ModelConfig { name: "gpt2-2.7b", vocab: GPT2_VOCAB, hidden: 2560, layers: 32, heads: 32, seq_len: 1024 },
+        ModelConfig { name: "gpt2-7b", vocab: GPT2_VOCAB, hidden: 4096, layers: 32, heads: 32, seq_len: 1024 },
+        // --- BERT family (encoder; MARP treats it with the same forms,
+        // which is how the paper's NewWorkload uses it) ---
+        ModelConfig { name: "bert-base", vocab: BERT_VOCAB, hidden: 768, layers: 12, heads: 12, seq_len: 512 },
+        ModelConfig { name: "bert-large", vocab: BERT_VOCAB, hidden: 1024, layers: 24, heads: 16, seq_len: 512 },
+        // --- tiny configs for the end-to-end CPU training example ---
+        ModelConfig { name: "gpt2-tiny", vocab: 1024, hidden: 128, layers: 4, heads: 4, seq_len: 128 },
+        ModelConfig { name: "gpt2-mini", vocab: 4096, hidden: 256, layers: 6, heads: 8, seq_len: 256 },
+    ]
+}
+
+/// Look up a model by name.
+pub fn model_by_name(name: &str) -> Option<ModelConfig> {
+    model_zoo().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_in_expected_ballpark() {
+        // The names should describe the W formula's output within ~15%.
+        let close = |name: &str, expect: f64| {
+            let w = model_by_name(name).unwrap().param_count() as f64;
+            let ratio = w / expect;
+            assert!((0.8..1.25).contains(&ratio), "{name}: W={w:.3e} expect~{expect:.3e}");
+        };
+        close("gpt2-125m", 125e6);
+        close("gpt2-350m", 350e6);
+        close("gpt2-1.3b", 1.3e9);
+        close("gpt2-7b", 6.7e9); // "7B" class == GPT-3 6.7B shape
+        close("bert-base", 110e6);
+        close("bert-large", 340e6);
+    }
+
+    #[test]
+    fn formula_matches_manual_expansion() {
+        let m = model_by_name("gpt2-350m").unwrap();
+        let manual = m.vocab * m.hidden + m.layers * (12 * m.hidden * m.hidden + 13 * m.hidden);
+        assert_eq!(m.param_count(), manual);
+    }
+
+    #[test]
+    fn flops_scale_with_size() {
+        let small = model_by_name("gpt2-125m").unwrap().flops_per_sample();
+        let big = model_by_name("gpt2-7b").unwrap().flops_per_sample();
+        assert!(big > 30.0 * small);
+    }
+
+    #[test]
+    fn zoo_names_unique() {
+        let zoo = model_zoo();
+        let mut names: Vec<_> = zoo.iter().map(|m| m.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), zoo.len());
+    }
+
+    #[test]
+    fn heads_divide_hidden() {
+        for m in model_zoo() {
+            assert_eq!(m.hidden % m.heads, 0, "{}: heads must divide hidden", m.name);
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Fig 5(a) — scheduling overhead vs. task-queue depth, Frenzy (HAS) vs Sia.
+//!
+//! The paper reports Sia's per-round scheduling cost exploding with the
+//! number of tasks while Frenzy stays flat (≥10× lower). We measure the
+//! wall-clock of a single scheduling round over a pending queue of n mixed
+//! jobs on the Sia-paper topology, for growing n.
+
+use super::save_results;
+use crate::cluster::ClusterState;
+use crate::config::sia_sim;
+use crate::job::JobSpec;
+use crate::marp::Marp;
+use crate::sched::{has::Has, sia::Sia, PendingJob, Scheduler};
+use crate::util::json::Json;
+use crate::util::plot::LineChart;
+use crate::util::table::{fmt_duration, Table};
+use crate::workload::newworkload;
+use std::time::Instant;
+
+/// One measured point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub tasks: usize,
+    pub has_s: f64,
+    pub sia_s: f64,
+    pub has_work: u64,
+    pub sia_work: u64,
+}
+
+fn pending_queue(n: usize, seed: u64) -> Vec<PendingJob> {
+    let jobs: Vec<JobSpec> = newworkload::generate(n, seed);
+    jobs.into_iter().map(|spec| PendingJob { spec, attempts: 0 }).collect()
+}
+
+/// Median wall time of `reps` scheduling rounds.
+fn measure(
+    sched: &mut dyn Scheduler,
+    pending: &[PendingJob],
+    snap: &ClusterState,
+    reps: usize,
+) -> (f64, u64) {
+    let mut times = Vec::new();
+    let mut work = 0;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let round = sched.schedule(pending, snap, 0.0);
+        times.push(t0.elapsed().as_secs_f64());
+        work = round.work_units;
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (times[times.len() / 2], work)
+}
+
+/// B&B safety cap for the figure run. Sia's search is exhausted below it for
+/// small queues; larger queues hit the cap, so their reported times are
+/// LOWER BOUNDS on the true solver cost (the real Sia pays a commercial
+/// solver the full price — the paper's "rapidly increasing overhead").
+pub const FIG5A_NODE_LIMIT: u64 = 60_000_000;
+
+/// Run the sweep.
+pub fn run(task_counts: &[usize], seed: u64) -> Vec<Point> {
+    let spec = sia_sim();
+    let snap = ClusterState::from_spec(&spec);
+    let mut out = Vec::new();
+    for &n in task_counts {
+        let pending = pending_queue(n, seed);
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let (has_s, has_work) = measure(&mut has, &pending, &snap, 3);
+        let mut sia = Sia::new(&spec);
+        sia.node_limit = FIG5A_NODE_LIMIT;
+        let (sia_s, sia_work) = measure(&mut sia, &pending, &snap, 1);
+        out.push(Point { tasks: n, has_s, sia_s, has_work, sia_work });
+    }
+    out
+}
+
+pub const DEFAULT_COUNTS: [usize; 6] = [10, 20, 40, 80, 160, 320];
+
+/// Run, print, and save Fig 5a.
+pub fn report() -> Vec<Point> {
+    let points = run(&DEFAULT_COUNTS, 11);
+    let mut t = Table::new(&["tasks", "frenzy (HAS)", "sia", "ratio", "HAS work", "Sia B&B nodes"])
+        .with_title("Fig 5(a): scheduling overhead per round (sia-sim topology)");
+    for p in &points {
+        t.row(&[
+            p.tasks.to_string(),
+            fmt_duration(p.has_s),
+            fmt_duration(p.sia_s),
+            format!("{:.0}x", p.sia_s / p.has_s.max(1e-12)),
+            p.has_work.to_string(),
+            p.sia_work.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut chart = LineChart::new("Fig 5(a): scheduling overhead (log y)")
+        .log_y()
+        .labels("tasks", "seconds");
+    chart.series("frenzy", &points.iter().map(|p| (p.tasks as f64, p.has_s)).collect::<Vec<_>>());
+    chart.series("sia", &points.iter().map(|p| (p.tasks as f64, p.sia_s)).collect::<Vec<_>>());
+    println!("{}", chart.render());
+
+    let arr: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut j = Json::obj();
+            j.set("tasks", p.tasks)
+                .set("has_s", p.has_s)
+                .set("sia_s", p.sia_s)
+                .set("has_work", p.has_work)
+                .set("sia_work", p.sia_work);
+            j
+        })
+        .collect();
+    let mut payload = Json::obj();
+    payload.set("points", Json::Arr(arr));
+    save_results("fig5a", &payload);
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sia_overhead_dominates_and_grows() {
+        let pts = run(&[8, 32], 3);
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!(
+                p.sia_s > 5.0 * p.has_s,
+                "at {} tasks Sia ({:.6}s) must be ≫ HAS ({:.6}s)",
+                p.tasks,
+                p.sia_s,
+                p.has_s
+            );
+        }
+        // Sia grows superlinearly in work units.
+        assert!(pts[1].sia_work > 4 * pts[0].sia_work);
+        // HAS stays ~linear.
+        assert!(pts[1].has_work <= 8 * pts[0].has_work.max(1));
+    }
+}

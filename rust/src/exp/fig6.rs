@@ -1,0 +1,155 @@
+//! Fig 6 — MARP memory-prediction accuracy vs "reality" for GPT2-350M and
+//! GPT2-7B across parallelization strategies and batch sizes (paper:
+//! 92–98 %).
+//!
+//! "Reality" is the exact per-tensor accounting of
+//! [`crate::memory::exact`] (the substitution for nvidia-smi measurements —
+//! DESIGN.md §6), cross-validated against JAX's own compiled buffer sizes
+//! for the tiny variants in `python/tests/test_memory_ground_truth.py`.
+
+use super::save_results;
+use crate::config::models::model_by_name;
+use crate::config::GIB;
+use crate::memory::exact::{exact_peak_bytes, prediction_accuracy};
+use crate::memory::{marp_peak_bytes, Parallelism, TrainConfig};
+use crate::util::json::Json;
+use crate::util::plot::BarChart;
+use crate::util::table::{fmt_bytes, Table};
+
+/// One Fig 6 bar: a (model, batch, d, t) configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub model: &'static str,
+    pub batch: u32,
+    pub d: u32,
+    pub t: u32,
+}
+
+/// The configurations plotted (the paper sweeps parallelism and batch for
+/// the two models; the 7B configs are the 8×A100-40 family from §V.C).
+pub const CONFIGS: [Config; 10] = [
+    Config { model: "gpt2-350m", batch: 2, d: 1, t: 1 },
+    Config { model: "gpt2-350m", batch: 4, d: 1, t: 1 },
+    Config { model: "gpt2-350m", batch: 4, d: 2, t: 1 },
+    Config { model: "gpt2-350m", batch: 8, d: 2, t: 1 },
+    Config { model: "gpt2-350m", batch: 16, d: 4, t: 1 },
+    Config { model: "gpt2-7b", batch: 2, d: 2, t: 4 },
+    Config { model: "gpt2-7b", batch: 2, d: 1, t: 8 },
+    Config { model: "gpt2-7b", batch: 4, d: 2, t: 4 },
+    Config { model: "gpt2-7b", batch: 4, d: 4, t: 4 },
+    Config { model: "gpt2-7b", batch: 8, d: 4, t: 4 },
+];
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub config: Config,
+    pub predicted: u64,
+    pub measured: u64,
+    pub accuracy: f64,
+}
+
+pub fn run() -> Vec<Row> {
+    CONFIGS
+        .iter()
+        .map(|c| {
+            let model = model_by_name(c.model).expect("zoo model");
+            let cfg = TrainConfig { global_batch: c.batch };
+            let par = Parallelism::new(c.d, c.t);
+            let predicted = marp_peak_bytes(&model, &cfg, par);
+            let measured = exact_peak_bytes(&model, &cfg, par);
+            Row {
+                config: c.clone(),
+                predicted,
+                measured,
+                accuracy: prediction_accuracy(predicted, measured),
+            }
+        })
+        .collect()
+}
+
+/// Run, print, and save Fig 6.
+pub fn report() -> Vec<Row> {
+    let rows = run();
+    let mut t = Table::new(&["model", "B", "d", "t", "predicted", "measured", "accuracy"])
+        .with_title("Fig 6: MARP memory prediction vs measured (exact accounting)");
+    for r in &rows {
+        t.row(&[
+            r.config.model.to_string(),
+            r.config.batch.to_string(),
+            r.config.d.to_string(),
+            r.config.t.to_string(),
+            fmt_bytes(r.predicted),
+            fmt_bytes(r.measured),
+            format!("{:.1}%", r.accuracy * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let lo = rows.iter().map(|r| r.accuracy).fold(1.0f64, f64::min);
+    let hi = rows.iter().map(|r| r.accuracy).fold(0.0f64, f64::max);
+    println!(
+        "accuracy range: {:.1}%..{:.1}% (paper: 92%..98%)\n",
+        lo * 100.0,
+        hi * 100.0
+    );
+
+    let mut chart = BarChart::new("Fig 6: per-config memory (GiB), predicted [P] vs measured [M]")
+        .unit("GiB");
+    for r in &rows {
+        let label = format!("{}-b{}-d{}t{}", r.config.model, r.config.batch, r.config.d, r.config.t);
+        chart.bar(&format!("P {label}"), r.predicted as f64 / GIB as f64);
+        chart.bar(&format!("M {label}"), r.measured as f64 / GIB as f64);
+    }
+    println!("{}", chart.render());
+
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("model", r.config.model)
+                .set("batch", r.config.batch as u64)
+                .set("d", r.config.d as u64)
+                .set("t", r.config.t as u64)
+                .set("predicted_bytes", r.predicted)
+                .set("measured_bytes", r.measured)
+                .set("accuracy", r.accuracy);
+            j
+        })
+        .collect();
+    let mut payload = Json::obj();
+    payload.set("rows", Json::Arr(arr));
+    save_results("fig6", &payload);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_configs_within_paper_band() {
+        for r in run() {
+            assert!(
+                (0.90..0.995).contains(&r.accuracy),
+                "{} b={} d={} t={}: accuracy {:.3} outside band",
+                r.config.model,
+                r.config.batch,
+                r.config.d,
+                r.config.t,
+                r.accuracy
+            );
+        }
+    }
+
+    #[test]
+    fn vc_example_fits_40g() {
+        // §V.C: GPT2-7B b=2 on 8×A100-40 (d=2, t=4) — measured must fit 40G.
+        let rows = run();
+        let r = rows
+            .iter()
+            .find(|r| r.config.model == "gpt2-7b" && r.config.batch == 2 && r.config.t == 4)
+            .unwrap();
+        assert!(r.measured < 40 * GIB);
+        assert!(r.predicted < 40 * GIB);
+    }
+}

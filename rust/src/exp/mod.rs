@@ -1,0 +1,25 @@
+//! Figure harnesses: one module per figure in the paper's evaluation (§V).
+//!
+//! Each harness regenerates its figure's data series from scratch —
+//! workload generation → scheduling/simulation → aggregation — prints the
+//! table and an ASCII rendition of the chart, and writes the raw series to
+//! `results/figN.json`. EXPERIMENTS.md quotes these outputs verbatim.
+
+pub mod fig4;
+pub mod fig5a;
+pub mod fig5b;
+pub mod fig6;
+
+use crate::util::json::Json;
+
+/// Write a figure's JSON payload under `results/`.
+pub fn save_results(name: &str, payload: &Json) {
+    let path = format!("results/{name}.json");
+    match crate::util::write_file(&path, &payload.to_string_pretty()) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
+}
+
+/// Default seeds used when averaging runs (deterministic, documented).
+pub const SEEDS: [u64; 3] = [11, 23, 47];

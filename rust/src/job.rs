@@ -1,0 +1,116 @@
+//! Job model shared by the serverless front-end, schedulers, and simulator.
+
+use crate::config::ModelConfig;
+use crate::memory::TrainConfig;
+
+/// Unique job identifier.
+pub type JobId = u64;
+
+/// A user-submitted training job — exactly what the serverless API takes:
+/// the model hyper-parameters and training configuration. **No GPU counts or
+/// types** — that is Frenzy's whole point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub name: String,
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    /// Total number of samples the job must process (steps × global batch).
+    pub total_samples: u64,
+    /// Submission time (seconds since simulation / server start).
+    pub submit_time: f64,
+}
+
+impl JobSpec {
+    pub fn new(
+        id: JobId,
+        model: ModelConfig,
+        global_batch: u32,
+        total_samples: u64,
+        submit_time: f64,
+    ) -> Self {
+        Self {
+            id,
+            name: format!("{}-b{}-#{}", model.name, global_batch, id),
+            model,
+            train: TrainConfig { global_batch },
+            total_samples,
+            submit_time,
+        }
+    }
+}
+
+/// Lifecycle states of a job inside the serverless system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, waiting for resources.
+    Queued,
+    /// Resources allocated, training in progress.
+    Running,
+    /// All samples processed; resources released.
+    Completed,
+    /// MARP found no feasible configuration on this cluster.
+    Rejected,
+}
+
+/// Completion record used for JCT/QT metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobOutcome {
+    pub id: JobId,
+    pub name: String,
+    pub submit_time: f64,
+    pub start_time: f64,
+    pub finish_time: f64,
+    pub gpus_used: u32,
+    /// Average samples/s while running.
+    pub samples_per_sec: f64,
+    /// Number of scheduling attempts (OOM retries under baselines > 1).
+    pub attempts: u32,
+}
+
+impl JobOutcome {
+    /// Queue time: submission → start.
+    pub fn queue_time(&self) -> f64 {
+        self.start_time - self.submit_time
+    }
+
+    /// Job completion time: submission → finish (the paper's JCT).
+    pub fn jct(&self) -> f64 {
+        self.finish_time - self.submit_time
+    }
+
+    /// Pure runtime.
+    pub fn run_time(&self) -> f64 {
+        self.finish_time - self.start_time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::model_by_name;
+
+    #[test]
+    fn outcome_times() {
+        let o = JobOutcome {
+            id: 1,
+            name: "j".into(),
+            submit_time: 10.0,
+            start_time: 25.0,
+            finish_time: 100.0,
+            gpus_used: 4,
+            samples_per_sec: 3.0,
+            attempts: 1,
+        };
+        assert_eq!(o.queue_time(), 15.0);
+        assert_eq!(o.jct(), 90.0);
+        assert_eq!(o.run_time(), 75.0);
+    }
+
+    #[test]
+    fn job_name_encodes_model_and_batch() {
+        let j = JobSpec::new(7, model_by_name("gpt2-350m").unwrap(), 8, 1000, 0.0);
+        assert!(j.name.contains("gpt2-350m"));
+        assert!(j.name.contains("b8"));
+    }
+}

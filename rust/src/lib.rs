@@ -1,0 +1,49 @@
+//! # Frenzy
+//!
+//! A memory-aware **serverless** LLM training system for heterogeneous GPU
+//! clusters — a full reproduction of Chang et al. (CS.DC 2024) as a
+//! three-layer rust + JAX + Pallas stack.
+//!
+//! Users submit *models*, not GPU requests:
+//!
+//! ```no_run
+//! use frenzy::config::{models::model_by_name, real_testbed};
+//! use frenzy::marp::Marp;
+//! use frenzy::memory::TrainConfig;
+//!
+//! let marp = Marp::with_defaults(real_testbed());
+//! let model = model_by_name("gpt2-7b").unwrap();
+//! for plan in marp.plans(&model, &TrainConfig { global_batch: 2 }) {
+//!     println!("{} GPUs of ≥{} bytes (d={}, t={})",
+//!              plan.n_gpus, plan.min_gpu_mem, plan.par.d, plan.par.t);
+//! }
+//! ```
+//!
+//! Architecture (see DESIGN.md):
+//! * [`memory`] / [`marp`] — the Memory-Aware Resource Predictor (§IV.A),
+//! * [`sched`] — HAS (Algorithm 1) plus the Sia and Opportunistic baselines,
+//! * [`cluster`] — the Resource Orchestrator,
+//! * [`sim`] — discrete-event cluster simulator (the "PAI simulator" stand-in),
+//! * [`workload`] — NewWorkload / Philly / Helios generators,
+//! * [`serverless`] — submission front-end + coordinator,
+//! * [`runtime`] — PJRT executor running the AOT-compiled JAX/Pallas
+//!   training step (the request path never touches python),
+//! * [`exp`] — harnesses regenerating every figure in the paper.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod exp;
+pub mod ilp;
+pub mod job;
+pub mod marp;
+pub mod memory;
+pub mod metrics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sched;
+pub mod serverless;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,245 @@
+//! `frenzy` — the serverless LLM-training leader binary.
+//!
+//! ```text
+//! frenzy predict  --model gpt2-7b --batch 2 [--cluster real]
+//! frenzy simulate --workload newworkload --tasks 30 --sched has [--seed 11]
+//! frenzy serve    [--addr 127.0.0.1:8315] [--cluster real]
+//! frenzy train    --model gpt2-tiny --steps 50        (direct PJRT run)
+//! frenzy fig4 | fig5a | fig5b | fig6 | figures
+//! frenzy trace    --workload philly --n 100 --out trace.csv
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use frenzy::cli::Args;
+use frenzy::config::{cluster_by_name, models::model_by_name};
+use frenzy::marp::Marp;
+use frenzy::memory::TrainConfig;
+use frenzy::sched::{has::Has, opportunistic::Opportunistic, sia::Sia, Scheduler};
+use frenzy::sim::{simulate, SimConfig};
+use frenzy::util::table::{fmt_bytes, fmt_duration, Table};
+use frenzy::workload::{helios, newworkload, philly, trace};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "frenzy — memory-aware serverless LLM training for heterogeneous GPU clusters
+
+USAGE:
+  frenzy predict  --model <name> --batch <B> [--cluster real|sim]
+  frenzy simulate --workload newworkload|philly|helios --tasks <n>
+                  --sched has|sia|opportunistic [--cluster real|sim] [--seed S]
+  frenzy serve    [--addr 127.0.0.1:8315] [--cluster real|sim] [--steps N]
+  frenzy train    --model gpt2-tiny [--steps N]
+  frenzy fig4 | fig5a | fig5b | fig6 | figures
+  frenzy trace    --workload <w> --n <n> --out <file> [--seed S]
+  frenzy models | clusters"
+}
+
+fn cluster_arg(args: &Args) -> Result<frenzy::config::ClusterSpec> {
+    let name = args.opt_or("cluster", "real");
+    if let Some(c) = cluster_by_name(name) {
+        return Ok(c);
+    }
+    // Otherwise treat it as a cluster file path.
+    frenzy::config::cluster_file::load_cluster(name)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        None | Some("help") => {
+            println!("{}", usage());
+            Ok(())
+        }
+        Some("models") => {
+            let mut t = Table::new(&["name", "params (W)", "hidden", "layers", "heads", "seq"]);
+            for m in frenzy::config::model_zoo() {
+                t.row(&[
+                    m.name.to_string(),
+                    format!("{:.1}M", m.param_count() as f64 / 1e6),
+                    m.hidden.to_string(),
+                    m.layers.to_string(),
+                    m.heads.to_string(),
+                    m.seq_len.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        Some("clusters") => {
+            for name in ["real-testbed", "sia-sim"] {
+                let c = cluster_by_name(name).unwrap();
+                println!("{}:", c.name);
+                for n in &c.nodes {
+                    println!("  {} x{} ({:?})", n.gpu.name, n.count, n.link);
+                }
+            }
+            Ok(())
+        }
+        Some("predict") => {
+            let model_name = args.require("model")?;
+            let model = model_by_name(model_name)
+                .ok_or_else(|| anyhow!("unknown model '{model_name}' (see `frenzy models`)"))?;
+            let batch: u32 = args.opt_parse_or("batch", 8)?;
+            let cluster = cluster_arg(args)?;
+            let marp = Marp::with_defaults(cluster);
+            let plans = marp.plans(&model, &TrainConfig { global_batch: batch });
+            if plans.is_empty() {
+                bail!("no feasible configuration on this cluster — job would be rejected");
+            }
+            let mut t = Table::new(&[
+                "rank", "d", "t", "GPUs", "min GPU mem", "predicted", "est samples/s", "efficiency",
+            ])
+            .with_title(&format!("MARP resource plans for {model_name} (B={batch})"));
+            for (i, p) in plans.iter().enumerate() {
+                t.row(&[
+                    (i + 1).to_string(),
+                    p.par.d.to_string(),
+                    p.par.t.to_string(),
+                    p.n_gpus.to_string(),
+                    fmt_bytes(p.min_gpu_mem),
+                    fmt_bytes(p.predicted_bytes),
+                    format!("{:.2}", p.est_samples_per_sec),
+                    format!("{:.0}%", p.est_efficiency * 100.0),
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        Some("simulate") => {
+            let cluster = cluster_arg(args)?;
+            let n: usize = args.opt_parse_or("tasks", 30)?;
+            let seed: u64 = args.opt_parse_or("seed", 11)?;
+            let workload = args.opt_or("workload", "newworkload");
+            let jobs = match workload {
+                "newworkload" => newworkload::generate(n, seed),
+                "philly" => philly::generate(n, seed),
+                "helios" => helios::generate(n, seed),
+                other => trace::load(other)?, // treat as a trace file
+            };
+            let sched_name = args.opt_or("sched", "has");
+            let mut sched: Box<dyn Scheduler> = match sched_name {
+                "has" | "frenzy" => Box::new(Has::new(Marp::with_defaults(cluster.clone()))),
+                "sia" => Box::new(Sia::new(&cluster)),
+                "opportunistic" | "opp" => Box::new(Opportunistic::new(&cluster)),
+                other => bail!("unknown scheduler '{other}'"),
+            };
+            let report = simulate(&cluster, sched.as_mut(), &jobs, SimConfig::default(), workload);
+            let mut t = Table::new(&["metric", "value"]).with_title(&format!(
+                "simulation: {} on {} ({} jobs)",
+                sched_name,
+                cluster.name,
+                jobs.len()
+            ));
+            t.row_str(&["completed", &report.n_completed.to_string()]);
+            t.row_str(&["rejected", &report.n_rejected.to_string()]);
+            t.row_str(&["avg JCT", &fmt_duration(report.avg_jct_s)]);
+            t.row_str(&["p50 JCT", &fmt_duration(report.p50_jct_s)]);
+            t.row_str(&["p99 JCT", &fmt_duration(report.p99_jct_s)]);
+            t.row_str(&["avg queue", &fmt_duration(report.avg_queue_s)]);
+            t.row_str(&["avg samples/s/job", &format!("{:.3}", report.avg_samples_per_sec)]);
+            t.row_str(&["makespan", &fmt_duration(report.makespan_s)]);
+            t.row_str(&["OOM retries", &report.total_oom_retries.to_string()]);
+            t.row_str(&["sched overhead (wall)", &fmt_duration(report.sched_overhead_s)]);
+            t.row_str(&["utilization", &format!("{:.1}%", report.avg_utilization * 100.0)]);
+            println!("{}", t.render());
+            Ok(())
+        }
+        Some("serve") => {
+            let cluster = cluster_arg(args)?;
+            let addr = args.opt_or("addr", "127.0.0.1:8315");
+            let steps: u64 = args.opt_parse_or("steps", 50)?;
+            let cfg = frenzy::serverless::CoordinatorConfig {
+                max_real_steps: steps,
+                ..Default::default()
+            };
+            let (handle, _join) = frenzy::serverless::spawn(cluster, cfg);
+            let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let local = frenzy::serverless::http::serve(handle, addr, stop)?;
+            println!("frenzy serverless API listening on http://{local}");
+            println!("  POST /jobs {{\"model\":\"gpt2-350m\",\"batch\":8,\"samples\":400}}");
+            println!("  GET  /jobs/<id> | /cluster | /healthz");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Some("train") => {
+            let model = args.opt_or("model", "gpt2-tiny");
+            let steps: u64 = args.opt_parse_or("steps", 30)?;
+            let manifest = frenzy::runtime::Manifest::load(frenzy::util::repo_path("artifacts"))?;
+            let meta = manifest.model(model)?;
+            let mut rt = frenzy::runtime::Runtime::new()?;
+            println!("platform: {}", rt.platform());
+            let mut session = rt.start_session(meta)?;
+            let t0 = std::time::Instant::now();
+            for s in 0..steps {
+                let loss = session.step()?;
+                if s % 5 == 0 || s + 1 == steps {
+                    println!("step {s:4}  loss {loss:.4}");
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            session.check_oracle()?;
+            println!(
+                "{steps} steps in {} ({:.1} steps/s); python-oracle check: ok",
+                fmt_duration(dt),
+                steps as f64 / dt,
+            );
+            Ok(())
+        }
+        Some("trace") => {
+            let workload = args.opt_or("workload", "newworkload");
+            let n: usize = args.opt_parse_or("n", 100)?;
+            let seed: u64 = args.opt_parse_or("seed", 11)?;
+            let out = args.require("out")?;
+            let jobs = match workload {
+                "newworkload" => newworkload::generate(n, seed),
+                "philly" => philly::generate(n, seed),
+                "helios" => helios::generate(n, seed),
+                other => bail!("unknown workload '{other}'"),
+            };
+            trace::save(out, &jobs)?;
+            let stats = frenzy::workload::trace_stats(&jobs);
+            println!("wrote {} jobs to {out} (span {})", stats.n_jobs, fmt_duration(stats.span_s));
+            Ok(())
+        }
+        Some("fig4") => {
+            frenzy::exp::fig4::report();
+            Ok(())
+        }
+        Some("fig5a") => {
+            frenzy::exp::fig5a::report();
+            Ok(())
+        }
+        Some("fig5b") => {
+            frenzy::exp::fig5b::report();
+            Ok(())
+        }
+        Some("fig6") => {
+            frenzy::exp::fig6::report();
+            Ok(())
+        }
+        Some("figures") => {
+            frenzy::exp::fig6::report();
+            frenzy::exp::fig5a::report();
+            frenzy::exp::fig4::report();
+            frenzy::exp::fig5b::report();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("{}", usage());
+            bail!("unknown command '{other}'")
+        }
+    }
+}

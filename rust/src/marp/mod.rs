@@ -1,0 +1,337 @@
+//! MARP — Memory-Aware Resource Predictor (§IV.A).
+//!
+//! For a submitted job, MARP sweeps (data-parallel `d`, tensor-parallel `t`)
+//! configurations, predicts the peak per-GPU memory for each with the
+//! closed-form model in [`crate::memory`], discards configurations that fit
+//! no GPU type in the cluster, estimates training throughput for the rest
+//! with [`crate::perfmodel`], and returns a **priority-ordered list of
+//! resource plans** `(d, t, N = d·t, min GPU memory)`. HAS then walks this
+//! list (Fig 3).
+//!
+//! Ranking: plans are scored by *goodput density* — estimated samples/s
+//! times parallel efficiency **squared** — so the front of the list is
+//! "train fast without wasting GPUs", which is what the paper means by
+//! "higher training efficiency" (§V.C: utilization highest at t=4, d=2 for
+//! the 8-card GPT2-7B case). The quadratic efficiency weight keeps widths
+//! moderate under multi-tenant contention (ablated in EXPERIMENTS.md).
+//! Ties break toward fewer GPUs, then smaller GPUs.
+
+use crate::config::{ClusterSpec, LinkKind, ModelConfig};
+use crate::memory::{marp_peak_bytes, required_gpu_bytes, Parallelism, TrainConfig};
+use crate::perfmodel::{PerfModel, Placement};
+
+/// One resource requirement plan: the paper's `Job(n, s)` augmented with the
+/// parallelism that produced it and the throughput estimate used for
+/// ranking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourcePlan {
+    /// Parallelism that generated this plan.
+    pub par: Parallelism,
+    /// Required GPU count (`reqNum = d·t`).
+    pub n_gpus: u32,
+    /// Minimum per-GPU memory (`reqSz`), bytes. A GPU qualifies iff
+    /// `gpu.mem >= min_gpu_mem`.
+    pub min_gpu_mem: u64,
+    /// MARP's predicted peak per-GPU usage, bytes.
+    pub predicted_bytes: u64,
+    /// Estimated samples/s under the conservative placement assumption.
+    pub est_samples_per_sec: f64,
+    /// Estimated parallel efficiency in (0, 1].
+    pub est_efficiency: f64,
+    /// Ranking score (higher = earlier in the list).
+    pub score: f64,
+}
+
+/// MARP configuration knobs.
+#[derive(Debug, Clone)]
+pub struct MarpConfig {
+    /// Largest tensor-parallel degree to consider (bounded by node size).
+    pub max_tp: u32,
+    /// Largest data-parallel degree to consider.
+    pub max_dp: u32,
+    /// Keep at most this many plans.
+    pub max_plans: usize,
+    /// Drop plans whose parallel efficiency falls below this floor.
+    pub min_efficiency: f64,
+}
+
+impl Default for MarpConfig {
+    fn default() -> Self {
+        Self { max_tp: 8, max_dp: 64, max_plans: 12, min_efficiency: 0.35 }
+    }
+}
+
+/// The predictor. Holds the cluster descriptor (GPU sizes present and node
+/// shapes) and a performance model for ranking.
+#[derive(Debug, Clone)]
+pub struct Marp {
+    cluster: ClusterSpec,
+    pm: PerfModel,
+    cfg: MarpConfig,
+    /// Distinct GPU memory sizes, ascending, for min-fit lookups.
+    sizes_asc: Vec<u64>,
+}
+
+impl Marp {
+    pub fn new(cluster: ClusterSpec, cfg: MarpConfig) -> Self {
+        let mut sizes_asc: Vec<u64> = cluster.nodes.iter().map(|n| n.gpu.mem_bytes).collect();
+        sizes_asc.sort_unstable();
+        sizes_asc.dedup();
+        let pm = PerfModel::new(cluster.inter_node_gbps);
+        Self { cluster, pm, cfg, sizes_asc }
+    }
+
+    pub fn with_defaults(cluster: ClusterSpec) -> Self {
+        Self::new(cluster, MarpConfig::default())
+    }
+
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
+    }
+
+    pub fn perf_model(&self) -> &PerfModel {
+        &self.pm
+    }
+
+    /// Smallest GPU size in the cluster that can hold `required` bytes.
+    fn min_fitting_size(&self, required: u64) -> Option<u64> {
+        self.sizes_asc.iter().copied().find(|&sz| required <= sz)
+    }
+
+    /// The best (fastest/most capable) node link among nodes whose GPUs have
+    /// at least `min_mem` and at least `t` GPUs — the placement HAS would
+    /// aim for.
+    fn best_link_for(&self, min_mem: u64, t: u32) -> Option<LinkKind> {
+        let mut best: Option<LinkKind> = None;
+        for n in &self.cluster.nodes {
+            if n.gpu.mem_bytes >= min_mem && n.count >= t {
+                match (best, n.link) {
+                    (None, l) => best = Some(l),
+                    (Some(LinkKind::Pcie), LinkKind::NvLink) => best = Some(LinkKind::NvLink),
+                    _ => {}
+                }
+            }
+        }
+        best
+    }
+
+    /// GPU spec used for throughput scoring: the *smallest-memory* type that
+    /// satisfies the plan (best-fit pessimism — HAS prefers exactly-fitting
+    /// GPUs, so scoring assumes them).
+    fn scoring_gpu(&self, min_mem: u64) -> Option<crate::config::GpuSpec> {
+        self.cluster
+            .nodes
+            .iter()
+            .filter(|n| n.gpu.mem_bytes >= min_mem)
+            .min_by_key(|n| n.gpu.mem_bytes)
+            .map(|n| n.gpu.clone())
+    }
+
+    /// Enumerate, filter, score, and rank resource plans for a job.
+    /// Returns an empty vector when no configuration fits the cluster
+    /// (the job must be rejected — the serverless admission decision).
+    pub fn plans(&self, model: &ModelConfig, train: &TrainConfig) -> Vec<ResourcePlan> {
+        let total_gpus = self.cluster.total_gpus();
+        let max_tp = self.cfg.max_tp.min(self.cluster.max_gpus_per_node()).max(1);
+        let max_dp = self.cfg.max_dp.min(train.global_batch.max(1)).min(total_gpus);
+
+        let mut plans: Vec<ResourcePlan> = Vec::new();
+        let mut t = 1u32;
+        while t <= max_tp {
+            let mut d = 1u32;
+            while d <= max_dp {
+                let par = Parallelism::new(d, t);
+                if par.gpus() <= total_gpus {
+                    if let Some(plan) = self.evaluate(model, train, par) {
+                        plans.push(plan);
+                    }
+                }
+                d *= 2;
+            }
+            t *= 2;
+        }
+
+        // Efficiency floor, then drop dominated plans (another plan that is
+        // at least as fast with no more GPUs).
+        plans.retain(|p| p.est_efficiency >= self.cfg.min_efficiency);
+        plans.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap()
+                .then(a.n_gpus.cmp(&b.n_gpus))
+                .then(a.min_gpu_mem.cmp(&b.min_gpu_mem))
+        });
+        let mut kept: Vec<ResourcePlan> = Vec::new();
+        for p in plans {
+            let dominated = kept.iter().any(|q| {
+                q.n_gpus <= p.n_gpus
+                    && q.min_gpu_mem <= p.min_gpu_mem
+                    && q.est_samples_per_sec >= p.est_samples_per_sec
+            });
+            if !dominated {
+                kept.push(p);
+            }
+            if kept.len() >= self.cfg.max_plans {
+                break;
+            }
+        }
+        kept
+    }
+
+    /// Evaluate a single (d, t) configuration into a plan, if feasible.
+    fn evaluate(
+        &self,
+        model: &ModelConfig,
+        train: &TrainConfig,
+        par: Parallelism,
+    ) -> Option<ResourcePlan> {
+        let predicted = marp_peak_bytes(model, train, par);
+        // reqSz mirrors Job(n, s) in the paper: the minimum per-GPU memory.
+        // It carries the hardened requirement (margin + head + reserve) so
+        // that HAS's `gpu.size >= reqSz` comparison guarantees no OOM.
+        let req_sz = required_gpu_bytes(model, train, par);
+        let min_mem = self.min_fitting_size(req_sz)?;
+
+        // Conservative placement assumption for scoring: TP on the best
+        // link available among qualifying nodes (if the TP group fits a
+        // node), DP crossing nodes whenever d·t exceeds one node.
+        let gpu = self.scoring_gpu(min_mem)?;
+        let tp_link = self.best_link_for(min_mem, par.t);
+        let tp_link = match tp_link {
+            Some(l) => l,
+            // TP group fits no single node: cross-node TP — allowed but slow.
+            None => {
+                let pl = Placement::all_cross();
+                let thr = self.pm.samples_per_sec(model, train, par, &gpu, pl);
+                let eff = self.pm.parallel_efficiency(model, train, par, &gpu, pl);
+                return Some(ResourcePlan {
+                    par,
+                    n_gpus: par.gpus(),
+                    min_gpu_mem: req_sz,
+                    predicted_bytes: predicted,
+                    est_samples_per_sec: thr,
+                    est_efficiency: eff,
+                    score: thr * eff * eff,
+                });
+            }
+        };
+        let fits_one_node =
+            self.cluster.nodes.iter().any(|n| n.gpu.mem_bytes >= min_mem && n.count >= par.gpus());
+        let placement = if fits_one_node {
+            Placement::single_node(tp_link)
+        } else {
+            Placement::tp_local_dp_cross(tp_link)
+        };
+        let thr = self.pm.samples_per_sec(model, train, par, &gpu, placement);
+        let eff = self.pm.parallel_efficiency(model, train, par, &gpu, placement);
+        Some(ResourcePlan {
+            par,
+            n_gpus: par.gpus(),
+            min_gpu_mem: req_sz,
+            predicted_bytes: predicted,
+            est_samples_per_sec: thr,
+            est_efficiency: eff,
+            score: thr * eff * eff,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::model_by_name;
+    use crate::config::{real_testbed, sia_sim, GIB};
+
+    fn marp_real() -> Marp {
+        Marp::with_defaults(real_testbed())
+    }
+
+    #[test]
+    fn small_model_gets_plans_starting_cheap() {
+        let marp = marp_real();
+        let m = model_by_name("gpt2-350m").unwrap();
+        let plans = marp.plans(&m, &TrainConfig { global_batch: 8 });
+        assert!(!plans.is_empty());
+        // every plan fits some GPU size in the cluster
+        for p in &plans {
+            assert!(p.predicted_bytes <= 80 * GIB);
+            assert_eq!(p.n_gpus, p.par.gpus());
+            assert!(p.est_efficiency > 0.0 && p.est_efficiency <= 1.0);
+        }
+        // the list must contain a single-GPU plan (350M fits one A100-40)
+        assert!(plans.iter().any(|p| p.n_gpus == 1));
+    }
+
+    #[test]
+    fn gpt7b_batch2_top_plan_is_t4_d2() {
+        // §V.C: "8 cards ... utilization is relatively highest when tensor
+        // parallelism is 4 and data parallelism is 2".
+        let marp = marp_real();
+        let m = model_by_name("gpt2-7b").unwrap();
+        let plans = marp.plans(&m, &TrainConfig { global_batch: 2 });
+        assert!(!plans.is_empty());
+        let p40: Vec<&ResourcePlan> =
+            plans.iter().filter(|p| p.min_gpu_mem <= 40 * GIB).collect();
+        assert!(
+            p40.iter().any(|p| p.par == Parallelism::new(2, 4)),
+            "t=4,d=2 plan missing from 40G-feasible set: {plans:?}"
+        );
+        // No 40G-feasible plan with fewer than 8 GPUs exists.
+        for p in &p40 {
+            assert!(p.n_gpus >= 8, "underprovisioned 40G plan: {p:?}");
+        }
+    }
+
+    #[test]
+    fn infeasible_model_rejected() {
+        // A model whose minimum memory exceeds every GPU even at max t.
+        let mut m = model_by_name("gpt2-7b").unwrap();
+        m.hidden = 16384;
+        m.layers = 96; // ~300B params, 80G×t=4 can't hold 20W/t
+        let marp = Marp::new(real_testbed(), MarpConfig { max_tp: 4, ..MarpConfig::default() });
+        let plans = marp.plans(&m, &TrainConfig { global_batch: 2 });
+        assert!(plans.is_empty());
+    }
+
+    #[test]
+    fn plans_sorted_by_score_desc() {
+        let marp = marp_real();
+        let m = model_by_name("gpt2-760m").unwrap();
+        let plans = marp.plans(&m, &TrainConfig { global_batch: 16 });
+        assert!(plans.len() >= 2);
+        for w in plans.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn plan_count_capped() {
+        let marp = Marp::new(
+            sia_sim(),
+            MarpConfig { max_plans: 5, ..MarpConfig::default() },
+        );
+        let m = model_by_name("gpt2-125m").unwrap();
+        let plans = marp.plans(&m, &TrainConfig { global_batch: 64 });
+        assert!(plans.len() <= 5);
+    }
+
+    #[test]
+    fn req_sz_accounts_for_headroom() {
+        let marp = marp_real();
+        let m = model_by_name("gpt2-350m").unwrap();
+        let plans = marp.plans(&m, &TrainConfig { global_batch: 8 });
+        for p in plans {
+            assert!(p.min_gpu_mem >= p.predicted_bytes);
+        }
+    }
+
+    #[test]
+    fn no_plan_exceeds_cluster_gpu_count() {
+        let marp = marp_real(); // 11 GPUs total
+        let m = model_by_name("gpt2-125m").unwrap();
+        let plans = marp.plans(&m, &TrainConfig { global_batch: 64 });
+        for p in plans {
+            assert!(p.n_gpus <= 11);
+        }
+    }
+}

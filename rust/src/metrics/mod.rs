@@ -1,0 +1,168 @@
+//! Run-level metrics: JCT / queue-time / samples-per-second aggregation and
+//! report rendering. Consumed by the simulator, the serverless coordinator,
+//! and every figure harness.
+
+use crate::job::JobOutcome;
+use crate::util::json::Json;
+use crate::util::stats::Sample;
+
+/// Aggregated results of one scheduling run (simulated or live).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub scheduler: String,
+    pub workload: String,
+    pub n_jobs: usize,
+    pub n_completed: usize,
+    pub n_rejected: usize,
+    pub avg_jct_s: f64,
+    pub p50_jct_s: f64,
+    pub p99_jct_s: f64,
+    pub avg_queue_s: f64,
+    pub avg_samples_per_sec: f64,
+    pub makespan_s: f64,
+    pub total_oom_retries: u64,
+    /// Total scheduler algorithmic work (see `SchedRound::work_units`).
+    pub sched_work_units: u64,
+    /// Total wall-clock the scheduler itself consumed (measured).
+    pub sched_overhead_s: f64,
+    /// GPU-time integral utilization in [0,1].
+    pub avg_utilization: f64,
+}
+
+impl RunReport {
+    /// Build from outcomes + run-level counters.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_outcomes(
+        scheduler: &str,
+        workload: &str,
+        outcomes: &[JobOutcome],
+        n_rejected: usize,
+        sched_work_units: u64,
+        sched_overhead_s: f64,
+        avg_utilization: f64,
+    ) -> RunReport {
+        let mut jct = Sample::new();
+        let mut queue = Sample::new();
+        let mut sps = Sample::new();
+        let mut makespan: f64 = 0.0;
+        let mut retries = 0u64;
+        for o in outcomes {
+            jct.push(o.jct());
+            queue.push(o.queue_time());
+            sps.push(o.samples_per_sec);
+            makespan = makespan.max(o.finish_time);
+            retries += (o.attempts.saturating_sub(1)) as u64;
+        }
+        RunReport {
+            scheduler: scheduler.to_string(),
+            workload: workload.to_string(),
+            n_jobs: outcomes.len() + n_rejected,
+            n_completed: outcomes.len(),
+            n_rejected,
+            avg_jct_s: jct.mean(),
+            p50_jct_s: jct.median(),
+            p99_jct_s: jct.p99(),
+            avg_queue_s: queue.mean(),
+            avg_samples_per_sec: sps.mean(),
+            makespan_s: makespan,
+            total_oom_retries: retries,
+            sched_work_units,
+            sched_overhead_s,
+            avg_utilization,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("scheduler", self.scheduler.as_str())
+            .set("workload", self.workload.as_str())
+            .set("n_jobs", self.n_jobs)
+            .set("n_completed", self.n_completed)
+            .set("n_rejected", self.n_rejected)
+            .set("avg_jct_s", self.avg_jct_s)
+            .set("p50_jct_s", self.p50_jct_s)
+            .set("p99_jct_s", self.p99_jct_s)
+            .set("avg_queue_s", self.avg_queue_s)
+            .set("avg_samples_per_sec", self.avg_samples_per_sec)
+            .set("makespan_s", self.makespan_s)
+            .set("total_oom_retries", self.total_oom_retries)
+            .set("sched_work_units", self.sched_work_units)
+            .set("sched_overhead_s", self.sched_overhead_s)
+            .set("avg_utilization", self.avg_utilization);
+        j
+    }
+
+    /// Relative improvement of `self` over `base` for a lower-is-better
+    /// metric, e.g. `jct_reduction_vs(&opp)` → 0.15 means 15 % lower JCT.
+    pub fn jct_reduction_vs(&self, base: &RunReport) -> f64 {
+        if base.avg_jct_s <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.avg_jct_s / base.avg_jct_s
+    }
+
+    pub fn queue_reduction_vs(&self, base: &RunReport) -> f64 {
+        if base.avg_queue_s <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.avg_queue_s / base.avg_queue_s
+    }
+
+    pub fn samples_gain_vs(&self, base: &RunReport) -> f64 {
+        if base.avg_samples_per_sec <= 0.0 {
+            return 0.0;
+        }
+        self.avg_samples_per_sec / base.avg_samples_per_sec - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(submit: f64, start: f64, finish: f64, sps: f64, attempts: u32) -> JobOutcome {
+        JobOutcome {
+            id: 0,
+            name: "j".into(),
+            submit_time: submit,
+            start_time: start,
+            finish_time: finish,
+            gpus_used: 1,
+            samples_per_sec: sps,
+            attempts,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let outs = vec![
+            outcome(0.0, 10.0, 110.0, 5.0, 1),
+            outcome(0.0, 20.0, 220.0, 10.0, 2),
+        ];
+        let r = RunReport::from_outcomes("has", "w", &outs, 1, 42, 0.5, 0.7);
+        assert_eq!(r.n_jobs, 3);
+        assert_eq!(r.n_completed, 2);
+        assert_eq!(r.n_rejected, 1);
+        assert!((r.avg_jct_s - 165.0).abs() < 1e-9);
+        assert!((r.avg_queue_s - 15.0).abs() < 1e-9);
+        assert!((r.avg_samples_per_sec - 7.5).abs() < 1e-9);
+        assert_eq!(r.makespan_s, 220.0);
+        assert_eq!(r.total_oom_retries, 1);
+    }
+
+    #[test]
+    fn comparisons() {
+        let a = RunReport::from_outcomes("a", "w", &[outcome(0.0, 0.0, 80.0, 10.0, 1)], 0, 0, 0.0, 0.5);
+        let b = RunReport::from_outcomes("b", "w", &[outcome(0.0, 0.0, 100.0, 8.0, 1)], 0, 0, 0.0, 0.5);
+        assert!((a.jct_reduction_vs(&b) - 0.2).abs() < 1e-9);
+        assert!((a.samples_gain_vs(&b) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_has_fields() {
+        let r = RunReport::from_outcomes("a", "w", &[], 0, 0, 0.0, 0.0);
+        let j = r.to_json();
+        assert!(j.get("scheduler").is_some());
+        assert!(j.get("avg_jct_s").is_some());
+    }
+}

@@ -1,0 +1,276 @@
+//! Analytic training-throughput model for heterogeneous GPUs.
+//!
+//! The paper's experiments report *relative* throughput/JCT between
+//! schedulers on the same cluster, so what matters is a performance model
+//! that (a) orders GPU types correctly, (b) penalizes cross-node tensor
+//! parallelism and PCIe vs NVLink the way real Megatron runs do, and
+//! (c) exposes diminishing returns for wide data parallelism.
+//!
+//! The model is the standard roofline-style decomposition:
+//!
+//! ```text
+//! step_time = compute_time + tp_comm_time + dp_comm_time
+//! compute   = FLOPs(B) / (N · peak · MXU_UTIL)
+//! tp_comm   = Megatron: 4 allreduces of s·b·h bytes per layer (fwd+bwd)
+//! dp_comm   = ring allreduce of the fp16 gradients (2W/t bytes) per step
+//! ```
+//!
+//! Communication paths are classified as NVLink / PCIe / cross-node; the
+//! scheduler's placement decides which applies, which is exactly the
+//! phenomenon HAS's single-node preference (and the paper's Node(4,40) vs
+//! 4×Node(1,40) example) exploits.
+
+use crate::config::{GpuSpec, LinkKind, ModelConfig};
+use crate::memory::{Parallelism, TrainConfig};
+
+/// Achievable fraction of peak tensor throughput for LLM training
+/// (Megatron on A100 reports 0.40–0.52 model FLOPs utilization).
+pub const MXU_UTIL: f64 = 0.45;
+
+/// Communication path quality for a collective group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommPath {
+    /// All members on one node behind NVLink.
+    NvLink,
+    /// All members on one node behind PCIe.
+    Pcie,
+    /// Members span nodes (worst path dominates the collective).
+    CrossNode,
+}
+
+impl CommPath {
+    /// Effective collective bandwidth (bytes/sec) for this path.
+    pub fn bandwidth_bps(self, inter_node_gbps: f64) -> f64 {
+        match self {
+            CommPath::NvLink => LinkKind::NvLink.bandwidth_gbps() * 1e9,
+            CommPath::Pcie => LinkKind::Pcie.bandwidth_gbps() * 1e9,
+            CommPath::CrossNode => inter_node_gbps * 1e9,
+        }
+    }
+
+    /// From the intra-node link of a node hosting an entire group.
+    pub fn from_link(link: LinkKind) -> CommPath {
+        match link {
+            LinkKind::NvLink => CommPath::NvLink,
+            LinkKind::Pcie => CommPath::Pcie,
+        }
+    }
+}
+
+/// Where a job's collective groups run. Produced by the scheduler's
+/// placement, consumed by the throughput model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placement {
+    /// Path of the tensor-parallel group(s).
+    pub tp_path: CommPath,
+    /// Path of the data-parallel allreduce ring.
+    pub dp_path: CommPath,
+}
+
+impl Placement {
+    /// Ideal single-node placement on a given link.
+    pub fn single_node(link: LinkKind) -> Placement {
+        let p = CommPath::from_link(link);
+        Placement { tp_path: p, dp_path: p }
+    }
+
+    /// TP inside nodes on `link`, DP ring crossing nodes.
+    pub fn tp_local_dp_cross(link: LinkKind) -> Placement {
+        Placement { tp_path: CommPath::from_link(link), dp_path: CommPath::CrossNode }
+    }
+
+    /// Everything crosses nodes (the placement HAS tries hardest to avoid).
+    pub fn all_cross() -> Placement {
+        Placement { tp_path: CommPath::CrossNode, dp_path: CommPath::CrossNode }
+    }
+}
+
+/// Analytic throughput model.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    /// Cross-node network bandwidth in GB/s.
+    pub inter_node_gbps: f64,
+    /// Fraction of peak compute achieved.
+    pub mxu_util: f64,
+}
+
+impl PerfModel {
+    pub fn new(inter_node_gbps: f64) -> Self {
+        Self { inter_node_gbps, mxu_util: MXU_UTIL }
+    }
+
+    /// Seconds to process one global batch.
+    pub fn step_time_s(
+        &self,
+        model: &ModelConfig,
+        cfg: &TrainConfig,
+        par: Parallelism,
+        gpu: &GpuSpec,
+        placement: Placement,
+    ) -> f64 {
+        let n = par.gpus() as f64;
+        let b_global = cfg.global_batch as f64;
+        let b_micro = (b_global / par.d as f64).ceil();
+        let s = model.seq_len as f64;
+        let h = model.hidden as f64;
+        let l = model.layers as f64;
+        let w = model.param_count() as f64;
+
+        // Small micro-batches under-fill the MXU: derate utilisation.
+        let fill = (b_micro * s / 2048.0).min(1.0).max(0.25);
+        let util = self.mxu_util * (0.6 + 0.4 * fill);
+
+        let compute =
+            model.flops_per_sample() * b_global / (n * gpu.peak_tflops * 1e12 * util);
+
+        // Tensor-parallel collectives: Megatron does 4 allreduces (2 fwd +
+        // 2 bwd) of s·b·h fp16 elements per layer; ring allreduce moves
+        // 2(t-1)/t of the buffer per member.
+        let tp_comm = if par.t > 1 {
+            let t = par.t as f64;
+            let bytes = 4.0 * l * s * b_micro * h * 2.0 * 2.0 * (t - 1.0) / t;
+            bytes / placement.tp_path.bandwidth_bps(self.inter_node_gbps)
+        } else {
+            0.0
+        };
+
+        // Data-parallel gradient allreduce: fp16 gradient shard (2W/t bytes),
+        // ring moves 2(d-1)/d of it; overlaps ~50 % with backward compute.
+        let dp_comm = if par.d > 1 {
+            let d = par.d as f64;
+            let bytes = 2.0 * w / par.t as f64 * 2.0 * (d - 1.0) / d;
+            0.5 * bytes / placement.dp_path.bandwidth_bps(self.inter_node_gbps)
+        } else {
+            0.0
+        };
+
+        compute + tp_comm + dp_comm
+    }
+
+    /// Samples per second for a placed configuration.
+    pub fn samples_per_sec(
+        &self,
+        model: &ModelConfig,
+        cfg: &TrainConfig,
+        par: Parallelism,
+        gpu: &GpuSpec,
+        placement: Placement,
+    ) -> f64 {
+        cfg.global_batch as f64 / self.step_time_s(model, cfg, par, gpu, placement)
+    }
+
+    /// Parallel efficiency vs. the same GPUs running communication-free:
+    /// `throughput / (N · per-GPU compute-bound throughput)`.
+    pub fn parallel_efficiency(
+        &self,
+        model: &ModelConfig,
+        cfg: &TrainConfig,
+        par: Parallelism,
+        gpu: &GpuSpec,
+        placement: Placement,
+    ) -> f64 {
+        let real = self.samples_per_sec(model, cfg, par, gpu, placement);
+        // Communication-free bound with the same utilisation derate.
+        let ideal_cfg = TrainConfig { global_batch: cfg.global_batch };
+        let ideal_par = Parallelism::new(1, 1);
+        let per_gpu = {
+            let b_micro = (cfg.global_batch as f64 / par.d as f64).ceil();
+            let s = model.seq_len as f64;
+            let fill = (b_micro * s / 2048.0).min(1.0).max(0.25);
+            let util = self.mxu_util * (0.6 + 0.4 * fill);
+            let _ = (&ideal_cfg, ideal_par);
+            gpu.peak_tflops * 1e12 * util / model.flops_per_sample()
+        };
+        (real / (par.gpus() as f64 * per_gpu)).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::model_by_name;
+    use crate::config::gpu_by_name;
+
+    fn m350() -> ModelConfig {
+        model_by_name("gpt2-350m").unwrap()
+    }
+    fn a100() -> GpuSpec {
+        gpu_by_name("A100-40G").unwrap()
+    }
+    fn t2080() -> GpuSpec {
+        gpu_by_name("RTX2080Ti").unwrap()
+    }
+
+    #[test]
+    fn faster_gpu_higher_throughput() {
+        let pm = PerfModel::new(12.5);
+        let cfg = TrainConfig { global_batch: 8 };
+        let par = Parallelism::new(1, 1);
+        let pl = Placement::single_node(LinkKind::Pcie);
+        let fast = pm.samples_per_sec(&m350(), &cfg, par, &a100(), pl);
+        let slow = pm.samples_per_sec(&m350(), &cfg, par, &t2080(), pl);
+        assert!(fast > 1.5 * slow, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn nvlink_beats_pcie_beats_crossnode_for_tp() {
+        let pm = PerfModel::new(12.5);
+        let cfg = TrainConfig { global_batch: 8 };
+        let par = Parallelism::new(1, 4);
+        let m = model_by_name("gpt2-7b").unwrap();
+        let gpu = a100();
+        let nv = pm.samples_per_sec(&m, &cfg, par, &gpu, Placement::single_node(LinkKind::NvLink));
+        let pcie = pm.samples_per_sec(&m, &cfg, par, &gpu, Placement::single_node(LinkKind::Pcie));
+        let cross = pm.samples_per_sec(&m, &cfg, par, &gpu, Placement::all_cross());
+        assert!(nv > pcie && pcie > cross, "nv={nv} pcie={pcie} cross={cross}");
+        // Cross-node TP should be painful (the paper's Node(4,40) example).
+        assert!(nv / cross > 1.5);
+    }
+
+    #[test]
+    fn dp_scaling_with_diminishing_returns() {
+        let pm = PerfModel::new(12.5);
+        let cfg = TrainConfig { global_batch: 32 };
+        let m = m350();
+        let gpu = a100();
+        let pl = Placement::tp_local_dp_cross(LinkKind::NvLink);
+        let t1 = pm.samples_per_sec(&m, &cfg, Parallelism::new(1, 1), &gpu, pl);
+        let t4 = pm.samples_per_sec(&m, &cfg, Parallelism::new(4, 1), &gpu, pl);
+        let t16 = pm.samples_per_sec(&m, &cfg, Parallelism::new(16, 1), &gpu, pl);
+        assert!(t4 > 2.0 * t1, "t4={t4} t1={t1}");
+        assert!(t16 > t4);
+        // efficiency decays
+        let e4 = t4 / (4.0 * t1);
+        let e16 = t16 / (16.0 * t1);
+        assert!(e16 < e4, "e4={e4} e16={e16}");
+    }
+
+    #[test]
+    fn efficiency_bounded() {
+        let pm = PerfModel::new(12.5);
+        let cfg = TrainConfig { global_batch: 8 };
+        for (d, t) in [(1, 1), (2, 1), (2, 2), (4, 2)] {
+            let e = pm.parallel_efficiency(
+                &m350(),
+                &cfg,
+                Parallelism::new(d, t),
+                &a100(),
+                Placement::single_node(LinkKind::NvLink),
+            );
+            assert!(e > 0.0 && e <= 1.0, "d={d} t={t} e={e}");
+        }
+    }
+
+    #[test]
+    fn step_time_positive_and_monotone_in_batch() {
+        let pm = PerfModel::new(12.5);
+        let m = m350();
+        let gpu = a100();
+        let pl = Placement::single_node(LinkKind::Pcie);
+        let t8 = pm.step_time_s(&m, &TrainConfig { global_batch: 8 }, Parallelism::new(1, 1), &gpu, pl);
+        let t16 =
+            pm.step_time_s(&m, &TrainConfig { global_batch: 16 }, Parallelism::new(1, 1), &gpu, pl);
+        assert!(t8 > 0.0);
+        assert!(t16 > t8);
+    }
+}

@@ -1,0 +1,153 @@
+//! Training executor: a dedicated OS thread that owns all PJRT objects
+//! (which hold raw pointers and are not `Send`) and serves training requests
+//! over channels. The serverless coordinator and the e2e example drive jobs
+//! through this, keeping the xla runtime isolated from the multi-threaded
+//! control plane.
+
+use super::{Manifest, Runtime};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// A training request: run `steps` steps of `model`.
+#[derive(Debug, Clone)]
+pub struct TrainRequest {
+    pub job_id: u64,
+    pub model: String,
+    pub steps: u64,
+    /// Report a loss every `log_every` steps (0 = only final).
+    pub log_every: u64,
+}
+
+/// Result of a completed request.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub job_id: u64,
+    pub model: String,
+    pub steps: u64,
+    pub losses: Vec<(u64, f32)>,
+    pub final_loss: f32,
+    pub wall_s: f64,
+    pub error: Option<String>,
+}
+
+enum Msg {
+    Run(TrainRequest, mpsc::Sender<TrainResult>),
+    Shutdown,
+}
+
+/// Handle to the executor thread.
+pub struct TrainExecutor {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl TrainExecutor {
+    /// Spawn the executor; artifacts are loaded lazily per model.
+    pub fn spawn(artifacts_dir: std::path::PathBuf) -> TrainExecutor {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name("frenzy-train-exec".into())
+            .spawn(move || {
+                executor_loop(artifacts_dir, rx);
+            })
+            .expect("spawn executor thread");
+        TrainExecutor { tx, handle: Some(handle) }
+    }
+
+    /// Submit a request; the result arrives on the returned receiver.
+    pub fn submit(&self, req: TrainRequest) -> Result<mpsc::Receiver<TrainResult>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Run(req, rtx)).map_err(|_| anyhow!("executor thread gone"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and block for the result.
+    pub fn run_blocking(&self, req: TrainRequest) -> Result<TrainResult> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow!("executor dropped result channel"))
+    }
+}
+
+impl Drop for TrainExecutor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(artifacts_dir: std::path::PathBuf, rx: mpsc::Receiver<Msg>) {
+    // Lazy init so spawning the executor is cheap even without artifacts.
+    let mut runtime: Option<Runtime> = None;
+    let mut manifest: Option<Manifest> = None;
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Run(req, reply) => {
+                let t0 = std::time::Instant::now();
+                let result = (|| -> Result<TrainResult> {
+                    if manifest.is_none() {
+                        manifest = Some(Manifest::load(&artifacts_dir)?);
+                    }
+                    if runtime.is_none() {
+                        runtime = Some(Runtime::new()?);
+                    }
+                    let meta = manifest.as_ref().unwrap().model(&req.model)?.clone();
+                    let rt = runtime.as_mut().unwrap();
+                    let mut session = rt.start_session(&meta)?;
+                    let mut losses = Vec::new();
+                    let mut last = f32::NAN;
+                    for s in 0..req.steps {
+                        last = session.step()?;
+                        let should_log = req.log_every > 0 && s % req.log_every == 0;
+                        if should_log || s + 1 == req.steps {
+                            losses.push((s, last));
+                        }
+                    }
+                    Ok(TrainResult {
+                        job_id: req.job_id,
+                        model: req.model.clone(),
+                        steps: req.steps,
+                        losses,
+                        final_loss: last,
+                        wall_s: t0.elapsed().as_secs_f64(),
+                        error: None,
+                    })
+                })();
+                let out = result.unwrap_or_else(|e| TrainResult {
+                    job_id: req.job_id,
+                    model: req.model.clone(),
+                    steps: 0,
+                    losses: Vec::new(),
+                    final_loss: f32::NAN,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                    error: Some(format!("{e:#}")),
+                });
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_reported_as_error_not_panic() {
+        let ex = TrainExecutor::spawn("/nonexistent/artifacts".into());
+        let res = ex
+            .run_blocking(TrainRequest {
+                job_id: 1,
+                model: "gpt2-tiny".into(),
+                steps: 1,
+                log_every: 0,
+            })
+            .unwrap();
+        assert!(res.error.is_some());
+        assert!(res.error.unwrap().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,340 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** — see DESIGN.md and /opt/xla-example/README.md for why not
+//! serialized protos) and executes training steps from rust. Python never
+//! runs on this path.
+//!
+//! Artifact contract (per model variant, see `artifacts/manifest.json`):
+//!
+//! * `<name>_init.hlo.txt` — `() -> f32[S]`: deterministic parameter +
+//!   optimizer-state initialization. The state vector is
+//!   `[params | adam_m | adam_v | step | loss]` flattened.
+//! * `<name>_step.hlo.txt` — `(state f32[S], tokens i32[B,T]) -> f32[S]`:
+//!   one fused train step (fwd + bwd + Adam update), with the new loss
+//!   written into the trailing slot.
+//!
+//! * `<name>_probe.hlo.txt` — `(state) -> f32[2] = [step, loss]`.
+//!
+//! The state stays on device between steps (`execute_b`); only the
+//! 2-element probe output is copied back per step (CPU PJRT 0.5.1 does not
+//! implement `CopyRawToHost`, so a tiny slice executable stands in for an
+//! offset host read).
+
+pub mod executor;
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Metadata for one compiled model variant.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub step_hlo: PathBuf,
+    pub init_hlo: PathBuf,
+    /// Probe computation: state -> f32[2] = [step, loss] (CPU PJRT 0.5.1
+    /// cannot CopyRawToHost, so readback goes through this tiny executable).
+    pub probe_hlo: PathBuf,
+    /// Total state length S (params + adam m/v + step + loss).
+    pub state_len: usize,
+    /// Trainable parameter count.
+    pub param_count: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// Oracle losses for steps 0..k computed by the python reference at
+    /// build time; rust integration tests must reproduce them.
+    pub oracle_losses: Vec<f64>,
+    /// Absolute tolerance for the oracle comparison.
+    pub oracle_tol: f64,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: HashMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let models_j = root
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing 'models' object"))?;
+        let mut models = HashMap::new();
+        for (name, m) in models_j {
+            let get_usize = |k: &str| -> Result<usize> {
+                m.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("model {name}: missing/invalid '{k}'"))
+            };
+            let get_str = |k: &str| -> Result<&str> {
+                m.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model {name}: missing '{k}'"))
+            };
+            let oracle_losses = m
+                .get("oracle_losses")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect::<Vec<f64>>())
+                .unwrap_or_default();
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    step_hlo: dir.join(get_str("step_hlo")?),
+                    init_hlo: dir.join(get_str("init_hlo")?),
+                    probe_hlo: dir.join(get_str("probe_hlo")?),
+                    state_len: get_usize("state_len")?,
+                    param_count: get_usize("param_count")?,
+                    batch: get_usize("batch")?,
+                    seq_len: get_usize("seq_len")?,
+                    vocab: get_usize("vocab")?,
+                    oracle_losses,
+                    oracle_tol: m.get("oracle_tol").and_then(Json::as_f64).unwrap_or(2e-3),
+                },
+            );
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest ({:?})", self.models.keys()))
+    }
+}
+
+/// Deterministic synthetic token stream — the same formula is implemented in
+/// `python/compile/data.py`; both sides must agree so the oracle losses
+/// match.
+pub fn synth_tokens(batch: usize, seq: usize, vocab: usize, step: u64) -> Vec<i32> {
+    let mut out = Vec::with_capacity(batch * seq);
+    for i in 0..batch {
+        for j in 0..seq {
+            let v = (7 * i as u64 + 13 * j as u64 + 17 * step) % vocab as u64;
+            out.push(v as i32);
+        }
+    }
+    out
+}
+
+/// A compiled model: both executables plus metadata.
+pub struct LoadedModel {
+    pub meta: ModelMeta,
+    exe_init: xla::PjRtLoadedExecutable,
+    exe_step: xla::PjRtLoadedExecutable,
+    exe_probe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client + an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Rc<LoadedModel>>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Load (or fetch from cache) a model variant.
+    pub fn load(&mut self, meta: &ModelMeta) -> Result<Rc<LoadedModel>> {
+        if let Some(m) = self.cache.get(&meta.name) {
+            return Ok(m.clone());
+        }
+        let exe_init = self.compile_file(&meta.init_hlo)?;
+        let exe_step = self.compile_file(&meta.step_hlo)?;
+        let exe_probe = self.compile_file(&meta.probe_hlo)?;
+        let lm = Rc::new(LoadedModel { meta: meta.clone(), exe_init, exe_step, exe_probe });
+        self.cache.insert(meta.name.clone(), lm.clone());
+        Ok(lm)
+    }
+
+    /// Start a training session (runs init on device).
+    pub fn start_session(&mut self, meta: &ModelMeta) -> Result<TrainSession> {
+        let model = self.load(meta)?;
+        let out = model
+            .exe_init
+            .execute::<xla::Literal>(&[])
+            .map_err(|e| anyhow!("init execute: {e:?}"))?;
+        let state = out
+            .into_iter()
+            .next()
+            .and_then(
+                |mut replicas| if replicas.is_empty() { None } else { Some(replicas.remove(0)) },
+            )
+            .ok_or_else(|| anyhow!("init returned no buffer"))?;
+        Ok(TrainSession { model, state: Some(state), step: 0, losses: Vec::new() })
+    }
+}
+
+/// An in-flight training job: device-resident state advanced step by step.
+pub struct TrainSession {
+    model: Rc<LoadedModel>,
+    state: Option<xla::PjRtBuffer>,
+    step: u64,
+    losses: Vec<f32>,
+}
+
+impl TrainSession {
+    pub fn meta(&self) -> &ModelMeta {
+        &self.model.meta
+    }
+
+    pub fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    pub fn losses(&self) -> &[f32] {
+        &self.losses
+    }
+
+    /// Run one training step; returns the loss.
+    pub fn step(&mut self) -> Result<f32> {
+        let meta = self.model.meta.clone();
+        let tokens = synth_tokens(meta.batch, meta.seq_len, meta.vocab, self.step);
+        let tok_lit = xla::Literal::vec1(&tokens)
+            .reshape(&[meta.batch as i64, meta.seq_len as i64])
+            .map_err(|e| anyhow!("token reshape: {e:?}"))?;
+        let state = self.state.take().ok_or_else(|| anyhow!("session poisoned"))?;
+        // `execute_b` takes buffers only, so upload tokens as a buffer.
+        let client = self.model.exe_step.client();
+        let tok_buf = client
+            .buffer_from_host_literal(None, &tok_lit)
+            .map_err(|e| anyhow!("token upload: {e:?}"))?;
+        let mut out = self
+            .model
+            .exe_step
+            .execute_b(&[&state, &tok_buf])
+            .map_err(|e| anyhow!("step execute: {e:?}"))?;
+        let new_state = out
+            .get_mut(0)
+            .and_then(|r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .ok_or_else(|| anyhow!("step returned no buffer"))?;
+        // Loss lives in the trailing slot; read it back through the tiny
+        // probe executable (state -> [step, loss]).
+        let mut probe_out = self
+            .model
+            .exe_probe
+            .execute_b(&[&new_state])
+            .map_err(|e| anyhow!("probe execute: {e:?}"))?;
+        let probe_buf = probe_out
+            .get_mut(0)
+            .and_then(|r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .ok_or_else(|| anyhow!("probe returned no buffer"))?;
+        let tail = probe_buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("probe literal: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("probe to_vec: {e:?}"))?;
+        let loss = *tail.get(1).ok_or_else(|| anyhow!("probe too short"))?;
+        self.state = Some(new_state);
+        self.step += 1;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Run `n` steps, returning their losses.
+    pub fn run(&mut self, n: u64) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            out.push(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// Download the full state vector (params + optimizer state).
+    pub fn state_vec(&self) -> Result<Vec<f32>> {
+        let state = self.state.as_ref().ok_or_else(|| anyhow!("session poisoned"))?;
+        let lit = state.to_literal_sync().map_err(|e| anyhow!("state download: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("state to_vec: {e:?}"))
+    }
+
+    /// Compare the first recorded losses against the python oracle.
+    pub fn check_oracle(&self) -> Result<()> {
+        let meta = &self.model.meta;
+        if meta.oracle_losses.is_empty() {
+            bail!("no oracle losses recorded for {}", meta.name);
+        }
+        for (i, expect) in meta.oracle_losses.iter().enumerate() {
+            let Some(got) = self.losses.get(i) else { break };
+            if (f64::from(*got) - expect).abs() > meta.oracle_tol {
+                bail!(
+                    "{}: step {i} loss {got} differs from python oracle {expect} (tol {})",
+                    meta.name,
+                    meta.oracle_tol
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_tokens_deterministic_in_range() {
+        let a = synth_tokens(4, 16, 101, 3);
+        let b = synth_tokens(4, 16, 101, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|&t| (0..101).contains(&t)));
+        let c = synth_tokens(4, 16, 101, 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("frenzy_manifest_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let manifest = r#"{
+          "models": {
+            "gpt2-tiny": {
+              "step_hlo": "gpt2_tiny_step.hlo.txt",
+              "init_hlo": "gpt2_tiny_init.hlo.txt",
+              "probe_hlo": "gpt2_tiny_probe.hlo.txt",
+              "state_len": 100, "param_count": 33, "batch": 8,
+              "seq_len": 16, "vocab": 101,
+              "oracle_losses": [4.6, 4.5], "oracle_tol": 0.001
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let meta = m.model("gpt2-tiny").unwrap();
+        assert_eq!(meta.state_len, 100);
+        assert_eq!(meta.oracle_losses, vec![4.6, 4.5]);
+        assert!(meta.step_hlo.ends_with("gpt2_tiny_step.hlo.txt"));
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors_helpfully() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,315 @@
+//! HAS — Heterogeneity-Aware Scheduler (§IV.B, Algorithm 1).
+//!
+//! Two stages per job (Fig 3):
+//!
+//! 1. **Optimal plan retrieval** — walk MARP's priority-ordered plan list
+//!    top-down; the first plan whose `(reqNum, reqSz)` the cluster can
+//!    currently satisfy wins.
+//! 2. **Heterogeneous resource scheduling** — Best-fit: among nodes whose
+//!    GPU size ≥ the *fit size* (the smallest available GPU size ≥ reqSz),
+//!    pick the one with the fewest idle GPUs that still covers the request
+//!    (exactly-fitting nodes first). If no single node covers it, greedily
+//!    take the node with the most idle GPUs, subtract, and repeat.
+//!
+//! The fit-size indirection is what makes HAS heterogeneity-aware: a job
+//! needing 32 GB lands on 40 GB cards even when 80 GB cards are idle,
+//! keeping the big cards for jobs that need them.
+
+use super::{derive_placement, Decision, PendingJob, SchedRound, Scheduler};
+use crate::cluster::{Allocation, ClusterState};
+use crate::marp::{Marp, ResourcePlan};
+use crate::memory::Parallelism;
+
+/// The HAS scheduler. Owns a MARP instance (plans are recomputed per job and
+/// memoized by (model, batch) key).
+pub struct Has {
+    marp: Marp,
+    plan_cache: std::collections::HashMap<(String, u32), Vec<ResourcePlan>>,
+    /// Work-unit accounting for the overhead comparison (Fig 5a): each node
+    /// scan / plan check costs one unit.
+    pub count_work: bool,
+}
+
+impl Has {
+    pub fn new(marp: Marp) -> Self {
+        Self { marp, plan_cache: std::collections::HashMap::new(), count_work: true }
+    }
+
+    pub fn marp(&self) -> &Marp {
+        &self.marp
+    }
+
+    fn plans_for(&mut self, job: &PendingJob) -> &[ResourcePlan] {
+        let key = (job.spec.model.name.to_string(), job.spec.train.global_batch);
+        let marp = &self.marp;
+        self.plan_cache
+            .entry(key)
+            .or_insert_with(|| marp.plans(&job.spec.model, &job.spec.train))
+    }
+
+    /// Algorithm 1. Returns the chosen plan and allocation, or None when no
+    /// plan is satisfiable right now. `work` accumulates scan steps.
+    pub fn allocate_one(
+        plans: &[ResourcePlan],
+        snapshot: &ClusterState,
+        work: &mut u64,
+    ) -> Option<(ResourcePlan, Allocation)> {
+        // Stage 1: first satisfiable plan (lines 1–10).
+        let mut optimal: Option<&ResourcePlan> = None;
+        for plan in plans {
+            *work += 1;
+            let ava = snapshot.idle_gpus_with_mem(plan.min_gpu_mem);
+            if ava >= plan.n_gpus {
+                optimal = Some(plan);
+                break;
+            }
+        }
+        let plan = optimal?;
+
+        // Stage 2: best-fit / greedy packing (lines 11–36).
+        let mut req_num = plan.n_gpus;
+        let req_sz = plan.min_gpu_mem;
+        let mut idle: Vec<u32> = snapshot.nodes.iter().map(|n| n.idle).collect();
+        let mut parts: Vec<(usize, u32)> = Vec::new();
+
+        while req_num > 0 {
+            // fitSz = min available GPU size ≥ reqSz (line 14).
+            let fit_sz = snapshot
+                .nodes
+                .iter()
+                .filter(|n| idle[n.id] > 0 && n.gpu.mem_bytes >= req_sz)
+                .map(|n| n.gpu.mem_bytes)
+                .min()?; // none available → cannot happen after stage 1, but stay safe
+            // NLst = nodes with gpusize ≥ fitSz, ascending idle (lines 15–16).
+            let mut nlst: Vec<usize> = snapshot
+                .nodes
+                .iter()
+                .filter(|n| idle[n.id] > 0 && n.gpu.mem_bytes >= fit_sz)
+                .map(|n| n.id)
+                .collect();
+            nlst.sort_by_key(|&id| idle[id]);
+            *work += nlst.len() as u64;
+
+            // Best-fit: first node (fewest idle) that covers the request
+            // (lines 18–26).
+            if let Some(&id) = nlst.iter().find(|&&id| idle[id] >= req_num) {
+                parts.push((id, req_num));
+                idle[id] -= req_num;
+                break;
+            }
+            // Greedy: node with the most idle GPUs (lines 29–33).
+            let &id = nlst.last()?;
+            let take = idle[id];
+            parts.push((id, take));
+            req_num -= take;
+            idle[id] = 0;
+        }
+        debug_assert_eq!(parts.iter().map(|(_, c)| c).sum::<u32>(), plan.n_gpus);
+        Some((plan.clone(), Allocation { job: 0, parts }))
+    }
+}
+
+impl Scheduler for Has {
+    fn name(&self) -> &'static str {
+        "frenzy-has"
+    }
+
+    fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, _now: f64) -> SchedRound {
+        let mut round = SchedRound::default();
+        let mut snap = snapshot.clone();
+        for job in pending {
+            let plans = self.plans_for(job).to_vec();
+            if plans.is_empty() {
+                // Infeasible on this cluster — admission should have
+                // rejected it; skip (the sim marks it Rejected).
+                continue;
+            }
+            let mut work = 0u64;
+            if let Some((plan, mut alloc)) = Self::allocate_one(&plans, &snap, &mut work) {
+                alloc.job = job.spec.id;
+                // Track the tentative allocation in the local snapshot so
+                // later jobs in this round see reduced idle counts.
+                for &(node, count) in &alloc.parts {
+                    snap.nodes[node].idle -= count;
+                }
+                let (placement, gpu) = derive_placement(&alloc, plan.par, &snap);
+                // Frenzy is memory-aware: the chosen plan always fits.
+                let will_oom = plan.predicted_bytes > gpu.mem_bytes;
+                round.decisions.push(Decision {
+                    job: job.spec.id,
+                    alloc,
+                    par: Parallelism::new(plan.par.d, plan.par.t),
+                    placement,
+                    gpu,
+                    will_oom,
+                });
+            }
+            round.work_units += work.max(1);
+        }
+        round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::model_by_name;
+    use crate::config::{real_testbed, GIB};
+    use crate::job::JobSpec;
+    use crate::marp::Marp;
+
+    fn pending(id: u64, model: &str, batch: u32) -> PendingJob {
+        PendingJob {
+            spec: JobSpec::new(id, model_by_name(model).unwrap(), batch, 10_000, 0.0),
+            attempts: 0,
+        }
+    }
+
+    fn has() -> Has {
+        Has::new(Marp::with_defaults(real_testbed()))
+    }
+
+    #[test]
+    fn schedules_small_job_without_oom() {
+        let mut h = has();
+        let snap = ClusterState::from_spec(&real_testbed());
+        let round = h.schedule(&[pending(1, "gpt2-350m", 4)], &snap, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        let d = &round.decisions[0];
+        assert!(d.alloc.is_single_node(), "a small job must not span nodes: {:?}", d.alloc);
+        assert_eq!(d.alloc.total_gpus(), d.par.gpus());
+        assert!(!d.will_oom);
+    }
+
+    #[test]
+    fn algorithm1_best_fit_prefers_tightest_small_gpu_node() {
+        // Hand-built single plan: Job(1, 30 GiB). Fit size is 40G; among the
+        // 40G nodes, the 1-GPU node (fewest idle) is the best fit — the 80G
+        // nodes must be left alone even though they are idle.
+        use crate::marp::ResourcePlan;
+        let plan = ResourcePlan {
+            par: crate::memory::Parallelism::new(1, 1),
+            n_gpus: 1,
+            min_gpu_mem: 30 * GIB,
+            predicted_bytes: 28 * GIB,
+            est_samples_per_sec: 1.0,
+            est_efficiency: 1.0,
+            score: 1.0,
+        };
+        let snap = ClusterState::from_spec(&real_testbed());
+        let mut work = 0;
+        let (_, alloc) =
+            Has::allocate_one(std::slice::from_ref(&plan), &snap, &mut work).expect("place");
+        assert_eq!(alloc.parts, vec![(1usize, 1u32)], "must pick the 1-GPU A100-40 node");
+        assert!(work > 0);
+    }
+
+    #[test]
+    fn algorithm1_paper_job_2_32_takes_40g_node() {
+        // §IV.B example: Job(2, 32G) should land on the 40G node, not 80G.
+        use crate::marp::ResourcePlan;
+        let plan = ResourcePlan {
+            par: crate::memory::Parallelism::new(2, 1),
+            n_gpus: 2,
+            min_gpu_mem: 32 * GIB,
+            predicted_bytes: 31 * GIB,
+            est_samples_per_sec: 1.0,
+            est_efficiency: 1.0,
+            score: 1.0,
+        };
+        let snap = ClusterState::from_spec(&real_testbed());
+        let mut work = 0;
+        let (_, alloc) =
+            Has::allocate_one(std::slice::from_ref(&plan), &snap, &mut work).expect("place");
+        assert_eq!(alloc.parts.len(), 1);
+        let (node, count) = alloc.parts[0];
+        assert_eq!(count, 2);
+        assert_eq!(snap.nodes[node].gpu.mem_bytes, 40 * GIB, "best-fit → 40G node: {alloc:?}");
+    }
+
+    #[test]
+    fn big_job_lands_on_80g() {
+        let mut h = has();
+        let snap = ClusterState::from_spec(&real_testbed());
+        let round = h.schedule(&[pending(1, "gpt2-7b", 2)], &snap, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        let d = &round.decisions[0];
+        // 7B needs eight 40G GPUs (only 3 exist) or four 80G: the first
+        // satisfiable plan uses 80G cards.
+        assert!(d.gpu.mem_bytes >= 40 * GIB);
+        assert_eq!(d.alloc.total_gpus(), d.par.gpus());
+        assert!(!d.will_oom);
+    }
+
+    #[test]
+    fn round_respects_capacity_across_jobs() {
+        let mut h = has();
+        let snap = ClusterState::from_spec(&real_testbed());
+        let jobs: Vec<PendingJob> =
+            (0..8).map(|i| pending(i, "gpt2-350m", 8)).collect();
+        let round = h.schedule(&jobs, &snap, 0.0);
+        // Apply all decisions to a fresh orchestrator: must never overdraw.
+        let mut orch = crate::cluster::Orchestrator::new(&real_testbed());
+        for d in &round.decisions {
+            orch.allocate(d.alloc.clone()).expect("no overdraw");
+        }
+        assert!(orch.check_conservation());
+    }
+
+    #[test]
+    fn queues_when_cluster_full() {
+        let mut h = has();
+        let mut snap = ClusterState::from_spec(&real_testbed());
+        for n in &mut snap.nodes {
+            n.idle = 0;
+        }
+        let round = h.schedule(&[pending(1, "gpt2-350m", 4)], &snap, 0.0);
+        assert!(round.decisions.is_empty());
+    }
+
+    #[test]
+    fn falls_through_to_lower_priority_plan() {
+        // Occupy the A800 node so only scattered GPUs remain; HAS must pick
+        // a satisfiable (possibly multi-node or smaller) plan instead of the
+        // top one.
+        let mut h = has();
+        let mut snap = ClusterState::from_spec(&real_testbed());
+        snap.nodes[2].idle = 0; // 4×A800 taken
+        let round = h.schedule(&[pending(1, "gpt2-1.3b", 8)], &snap, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        let d = &round.decisions[0];
+        assert!(!d.will_oom);
+        assert!(d.alloc.total_gpus() <= 7);
+    }
+
+    #[test]
+    fn multi_node_greedy_when_no_single_node_fits() {
+        // Ask for more 80G GPUs than any single node has.
+        let marp = Marp::with_defaults(real_testbed());
+        let m = model_by_name("gpt2-1.3b").unwrap();
+        let plans = marp.plans(&m, &crate::memory::TrainConfig { global_batch: 32 });
+        let snap = ClusterState::from_spec(&real_testbed());
+        // find a plan requiring > 4 GPUs (bigger than the largest node)
+        if let Some(plan) = plans.iter().find(|p| p.n_gpus > 4) {
+            let mut work = 0;
+            let got = Has::allocate_one(std::slice::from_ref(plan), &snap, &mut work);
+            if let Some((_, alloc)) = got {
+                assert!(alloc.parts.len() > 1);
+                assert_eq!(alloc.total_gpus(), plan.n_gpus);
+            }
+        }
+    }
+
+    #[test]
+    fn work_units_scale_linearly_not_combinatorially() {
+        // HAS work for n jobs should be ~n × (plans + nodes), not explode.
+        let mut h = has();
+        let snap = ClusterState::from_spec(&real_testbed());
+        let jobs_small: Vec<PendingJob> = (0..4).map(|i| pending(i, "gpt2-350m", 4)).collect();
+        let jobs_large: Vec<PendingJob> = (0..16).map(|i| pending(i, "gpt2-350m", 4)).collect();
+        let w_small = h.schedule(&jobs_small, &snap, 0.0).work_units;
+        let mut h2 = has();
+        let w_large = h2.schedule(&jobs_large, &snap, 0.0).work_units;
+        assert!(w_large <= w_small * 8, "w_small={w_small} w_large={w_large}");
+    }
+}

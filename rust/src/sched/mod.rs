@@ -1,0 +1,160 @@
+//! Scheduler interface and the three policies evaluated in the paper:
+//!
+//! * [`has::Has`] — Frenzy's Heterogeneity-Aware Scheduler (Algorithm 1),
+//! * [`sia::Sia`] — the goodput-ILP baseline (adaptive but expensive),
+//! * [`opportunistic::Opportunistic`] — FCFS fastest-GPU-first (Lyra-style),
+//!   memory-oblivious with OOM trial-and-error.
+//!
+//! Schedulers plan against an immutable [`ClusterState`] snapshot and return
+//! [`Decision`]s; the simulator (or the live serverless coordinator) applies
+//! them through the [`crate::cluster::Orchestrator`], which is the single
+//! authority on resource state.
+
+pub mod has;
+pub mod opportunistic;
+pub mod sia;
+
+use crate::cluster::{Allocation, ClusterState};
+use crate::config::GpuSpec;
+use crate::job::{JobId, JobSpec};
+use crate::memory::Parallelism;
+use crate::perfmodel::{CommPath, Placement};
+
+/// A job waiting for resources, with scheduling history.
+#[derive(Debug, Clone)]
+pub struct PendingJob {
+    pub spec: JobSpec,
+    /// Scheduling attempts so far (baselines' OOM retries increment this).
+    pub attempts: u32,
+}
+
+/// One placement decision.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub job: JobId,
+    pub alloc: Allocation,
+    /// Parallelism the job will run with.
+    pub par: Parallelism,
+    /// Derived communication placement (for the throughput model).
+    pub placement: Placement,
+    /// Effective GPU descriptor (slowest/smallest across the allocation —
+    /// stragglers gate collective training).
+    pub gpu: GpuSpec,
+    /// True when the scheduler knowingly or unknowingly placed the job where
+    /// its peak memory exceeds a GPU — the simulator will fire an OOM.
+    pub will_oom: bool,
+}
+
+/// Result of one scheduling round.
+#[derive(Debug, Clone, Default)]
+pub struct SchedRound {
+    pub decisions: Vec<Decision>,
+    /// Algorithmic work expended this round, converted to seconds by the
+    /// simulator (and measured directly in the overhead benchmarks).
+    pub work_units: u64,
+}
+
+/// The scheduling policy interface.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Plan allocations for `pending` (FCFS order) against `snapshot`.
+    /// Implementations must not assume they can place every job.
+    fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, now: f64)
+        -> SchedRound;
+
+    /// `Some(interval)` for batch schedulers that re-solve on a fixed round
+    /// cadence (Sia/Pollux-style); `None` for event-driven schedulers (HAS,
+    /// Opportunistic). The simulator defers placements to round boundaries
+    /// for interval schedulers — part of their queueing cost.
+    fn round_interval_s(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Derive the communication placement and effective GPU for an allocation.
+///
+/// * single node → both TP and DP ride the node link;
+/// * multi-node with every part a multiple of `t` → TP groups stay inside
+///   nodes (the worst link among parts), DP crosses nodes;
+/// * otherwise a TP group spans nodes → everything is cross-node (the
+///   paper's Node(4,40)-vs-4×Node(1,40) pathology).
+pub fn derive_placement(
+    alloc: &Allocation,
+    par: Parallelism,
+    cluster: &ClusterState,
+) -> (Placement, GpuSpec) {
+    assert!(!alloc.parts.is_empty());
+    let nodes: Vec<&crate::cluster::Node> =
+        alloc.parts.iter().map(|(id, _)| &cluster.nodes[*id]).collect();
+    // Effective GPU: min memory + min tflops across parts (straggler).
+    let gpu = GpuSpec {
+        name: nodes.iter().min_by_key(|n| n.gpu.mem_bytes).unwrap().gpu.name,
+        mem_bytes: nodes.iter().map(|n| n.gpu.mem_bytes).min().unwrap(),
+        peak_tflops: nodes.iter().map(|n| n.gpu.peak_tflops).fold(f64::INFINITY, f64::min),
+    };
+    let placement = if alloc.parts.len() == 1 {
+        Placement::single_node(nodes[0].link)
+    } else if alloc.parts.iter().all(|(_, c)| c % par.t == 0) {
+        // TP groups intact per node; DP ring crosses nodes. Worst intra-node
+        // link gates the TP collectives.
+        let worst = nodes
+            .iter()
+            .map(|n| CommPath::from_link(n.link))
+            .max_by_key(|p| match p {
+                CommPath::NvLink => 0,
+                CommPath::Pcie => 1,
+                CommPath::CrossNode => 2,
+            })
+            .unwrap();
+        Placement { tp_path: worst, dp_path: CommPath::CrossNode }
+    } else {
+        Placement::all_cross()
+    };
+    (placement, gpu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::real_testbed;
+
+    #[test]
+    fn single_node_placement_uses_node_link() {
+        let c = ClusterState::from_spec(&real_testbed());
+        // node 2 = 4×A800 NVLink
+        let alloc = Allocation { job: 1, parts: vec![(2, 4)] };
+        let (pl, gpu) = derive_placement(&alloc, Parallelism::new(1, 4), &c);
+        assert_eq!(pl.tp_path, CommPath::NvLink);
+        assert_eq!(pl.dp_path, CommPath::NvLink);
+        assert_eq!(gpu.name, "A800-80G");
+    }
+
+    #[test]
+    fn multi_node_tp_preserved_when_divisible() {
+        let c = ClusterState::from_spec(&real_testbed());
+        // nodes 3 and 4: 2×A100-80 each; t=2, d=2 → one TP group per node.
+        let alloc = Allocation { job: 1, parts: vec![(3, 2), (4, 2)] };
+        let (pl, _) = derive_placement(&alloc, Parallelism::new(2, 2), &c);
+        assert_eq!(pl.tp_path, CommPath::Pcie);
+        assert_eq!(pl.dp_path, CommPath::CrossNode);
+    }
+
+    #[test]
+    fn split_tp_group_goes_cross_node() {
+        let c = ClusterState::from_spec(&real_testbed());
+        // t=4 but parts of 2+2: TP group spans nodes.
+        let alloc = Allocation { job: 1, parts: vec![(3, 2), (4, 2)] };
+        let (pl, _) = derive_placement(&alloc, Parallelism::new(1, 4), &c);
+        assert_eq!(pl.tp_path, CommPath::CrossNode);
+    }
+
+    #[test]
+    fn effective_gpu_is_straggler() {
+        let c = ClusterState::from_spec(&real_testbed());
+        // node 0 (A100-40) + node 3 (A100-80): effective mem = 40G.
+        let alloc = Allocation { job: 1, parts: vec![(0, 2), (3, 2)] };
+        let (_, gpu) = derive_placement(&alloc, Parallelism::new(4, 1), &c);
+        assert_eq!(gpu.mem_bytes, 40 * crate::config::GIB);
+    }
+}

@@ -1,0 +1,232 @@
+//! Opportunistic scheduling baseline (Lyra [23]-style, §V.A.c):
+//!
+//! * **FCFS** — jobs are served strictly in arrival order;
+//! * **fastest-first** — idle resources on the highest-compute nodes are
+//!   greedily handed to the newest job, with no regard for memory size
+//!   (the "prioritizes nodes with higher computational power" policy);
+//! * **user-specified GPU counts** — there is no MARP; the request is what a
+//!   developer would guess: pick the smallest tensor-parallel degree that
+//!   fits the *largest* GPU type in the cluster, then data-parallel up to a
+//!   small budget. When the greedy placement lands on *smaller* GPUs than
+//!   the guess assumed, the job OOMs, is requeued, and the user "tries
+//!   again" with a doubled tensor-parallel degree — the trial-and-error loop
+//!   the paper's motivation describes.
+
+use super::{derive_placement, Decision, PendingJob, SchedRound, Scheduler};
+use crate::cluster::{Allocation, ClusterState};
+use crate::config::ClusterSpec;
+use crate::job::JobSpec;
+use crate::memory::{exact::exact_peak_bytes, fits, Parallelism};
+
+/// GPU budget a "user" requests per job by default (the paper's NewWorkload
+/// jobs are mostly small; users ask for a conservative fixed count).
+const USER_GPU_BUDGET: u32 = 4;
+
+pub struct Opportunistic {
+    /// Largest GPU memory in the cluster — what users size their guess to.
+    max_gpu_mem: u64,
+    max_tp: u32,
+}
+
+impl Opportunistic {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        Self { max_gpu_mem: spec.max_gpu_mem(), max_tp: spec.max_gpus_per_node().max(1) }
+    }
+
+    /// The user's GPU request for a job at retry `attempts`.
+    ///
+    /// The naive developer heuristic from the paper's motivation: size
+    /// tensor parallelism so the *model states* (`20W/t`) fit the biggest
+    /// GPU in the cluster — forgetting activations and that the greedy
+    /// placement may land on smaller GPUs. Each OOM retry doubles `t`
+    /// ("insufficient allocation may cause OOM errors during training ...
+    /// extensive trial and error").
+    pub fn user_request(&self, job: &JobSpec, attempts: u32) -> Option<Parallelism> {
+        let static_bytes = 20.0 * job.model.param_count() as f64;
+        let mut t = 1u32;
+        while t <= self.max_tp {
+            if static_bytes / t as f64 <= self.max_gpu_mem as f64 {
+                break;
+            }
+            t *= 2;
+        }
+        if t > self.max_tp {
+            return None; // hopeless even on the biggest GPU
+        }
+        // OOM retries double t (capped). The final fallback also checks the
+        // full memory model — after enough failures even a naive user reads
+        // the docs.
+        t = (t << attempts.min(8)).min(self.max_tp.next_power_of_two());
+        if attempts >= 3 {
+            let mut t2 = t;
+            while t2 <= self.max_tp
+                && !fits(&job.model, &job.train, Parallelism::new(1, t2), self.max_gpu_mem)
+            {
+                t2 *= 2;
+            }
+            t = t2.min(self.max_tp.next_power_of_two());
+        }
+        let d = (USER_GPU_BUDGET / t).max(1).min(job.train.global_batch.max(1));
+        Some(Parallelism::new(d, t))
+    }
+}
+
+impl Scheduler for Opportunistic {
+    fn name(&self) -> &'static str {
+        "opportunistic"
+    }
+
+    fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, _now: f64) -> SchedRound {
+        let mut round = SchedRound::default();
+        let mut idle: Vec<u32> = snapshot.nodes.iter().map(|n| n.idle).collect();
+
+        for job in pending {
+            let Some(par) = self.user_request(&job.spec, job.attempts) else {
+                continue;
+            };
+            let want = par.gpus();
+            // Fastest-first greedy: nodes ordered by peak TFLOPs desc, ties
+            // in listing order. No memory filter and no locality awareness —
+            // that is the point: allocations fragment across nodes, paying
+            // the cross-node communication the paper's Node(4,40) example
+            // warns about, while HAS's best-fit keeps jobs on single nodes.
+            let mut order: Vec<usize> = (0..snapshot.nodes.len()).filter(|&i| idle[i] > 0).collect();
+            order.sort_by(|&a, &b| {
+                let na = &snapshot.nodes[a];
+                let nb = &snapshot.nodes[b];
+                nb.gpu.peak_tflops.partial_cmp(&na.gpu.peak_tflops).unwrap().then(a.cmp(&b))
+            });
+            round.work_units += order.len() as u64 + 1;
+
+            let mut parts: Vec<(usize, u32)> = Vec::new();
+            let mut left = want;
+            for id in order {
+                if left == 0 {
+                    break;
+                }
+                let take = idle[id].min(left);
+                if take > 0 {
+                    parts.push((id, take));
+                    left -= take;
+                }
+            }
+            if left > 0 {
+                // Not enough idle GPUs anywhere: job waits (FCFS blocks the
+                // queue head only in arrival order; we still try later jobs,
+                // matching Lyra's work-conserving greedy).
+                continue;
+            }
+            for &(id, c) in &parts {
+                idle[id] -= c;
+            }
+            let alloc = Allocation { job: job.spec.id, parts };
+            let (placement, gpu) = derive_placement(&alloc, par, snapshot);
+            // Ground truth: does the exact peak fit the smallest GPU used?
+            let will_oom =
+                exact_peak_bytes(&job.spec.model, &job.spec.train, par) > gpu.mem_bytes;
+            round.decisions.push(Decision {
+                job: job.spec.id,
+                alloc,
+                par,
+                placement,
+                gpu,
+                will_oom,
+            });
+        }
+        round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::model_by_name;
+    use crate::config::{real_testbed, sia_sim, GIB};
+    use crate::job::JobSpec;
+
+    fn pending(id: u64, model: &str, batch: u32) -> PendingJob {
+        PendingJob {
+            spec: JobSpec::new(id, model_by_name(model).unwrap(), batch, 10_000, 0.0),
+            attempts: 0,
+        }
+    }
+
+    #[test]
+    fn user_request_small_model_is_t1() {
+        let o = Opportunistic::new(&real_testbed());
+        let j = pending(1, "gpt2-350m", 8);
+        let par = o.user_request(&j.spec, 0).unwrap();
+        assert_eq!(par.t, 1);
+        assert!(par.d >= 1);
+    }
+
+    #[test]
+    fn user_request_grows_t_on_retry() {
+        let o = Opportunistic::new(&real_testbed());
+        let j = pending(1, "gpt2-7b", 2);
+        let p0 = o.user_request(&j.spec, 0).unwrap();
+        let p1 = o.user_request(&j.spec, 1).unwrap();
+        assert!(p1.t >= 2 * p0.t || p1.t == o.max_tp.next_power_of_two());
+    }
+
+    #[test]
+    fn greedy_prefers_fastest_nodes() {
+        let spec = sia_sim();
+        let mut o = Opportunistic::new(&spec);
+        let snap = ClusterState::from_spec(&spec);
+        let round = o.schedule(&[pending(1, "gpt2-350m", 4)], &snap, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        let d = &round.decisions[0];
+        // A100 nodes (312 TFLOPs) must be chosen over 2080Ti/RTX6000.
+        for &(node, _) in &d.alloc.parts {
+            assert_eq!(snap.nodes[node].gpu.name, "A100-40G");
+        }
+    }
+
+    #[test]
+    fn memory_oblivious_placement_can_oom() {
+        // A 7B model guessed against the 80G card, but scheduled onto 40G
+        // A100s (fastest-first ties broken by idle) → OOM expected when the
+        // effective allocation is 40G with t sized for 80G.
+        let spec = sia_sim(); // fastest GPUs here are A100-40G only
+        let mut o = Opportunistic::new(&spec);
+        let snap = ClusterState::from_spec(&spec);
+        let round = o.schedule(&[pending(1, "gpt2-7b", 2)], &snap, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        // user sized t for 40G max (sia_sim max = 40G): t s.t. fits 40G = 4
+        // ... with only 8-GPU budget d=2; placement ok. If it fit, fine; the
+        // point is the decision carries a truthful will_oom flag either way.
+        let d = &round.decisions[0];
+        let measured =
+            exact_peak_bytes(&model_by_name("gpt2-7b").unwrap(), &crate::memory::TrainConfig { global_batch: 2 }, d.par);
+        assert_eq!(d.will_oom, measured > d.gpu.mem_bytes);
+    }
+
+    #[test]
+    fn oom_on_real_testbed_mixed_sizes() {
+        // real testbed: max mem 80G. User sizes gpt2-2.7b t guess vs 80G →
+        // t=1 fits 80G. Greedy fastest-first may pull 40G cards in
+        // (same TFLOPs) → exact(2.7b, t=1) ≈ 54G+ > 40G → OOM.
+        let spec = real_testbed();
+        let mut o = Opportunistic::new(&spec);
+        let snap = ClusterState::from_spec(&spec);
+        let round = o.schedule(&[pending(1, "gpt2-2.7b", 8)], &snap, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        let d = &round.decisions[0];
+        if d.gpu.mem_bytes <= 40 * GIB {
+            assert!(d.will_oom, "2.7B at t={} on 40G must OOM", d.par.t);
+        }
+    }
+
+    #[test]
+    fn waits_when_insufficient() {
+        let spec = real_testbed();
+        let mut o = Opportunistic::new(&spec);
+        let mut snap = ClusterState::from_spec(&spec);
+        for n in &mut snap.nodes {
+            n.idle = 0;
+        }
+        let round = o.schedule(&[pending(1, "gpt2-350m", 4)], &snap, 0.0);
+        assert!(round.decisions.is_empty());
+    }
+}

@@ -1,0 +1,368 @@
+//! Sia baseline (SOSP'23 [8]): heterogeneity-aware, goodput-optimized
+//! scheduling via an assignment ILP solved every round.
+//!
+//! Faithful simplification of Sia's round structure:
+//!
+//! 1. For every pending job, enumerate candidate configs
+//!    `(GPU type, n ∈ {1, 2, 4, …})`, valued by *normalized goodput*
+//!    (throughput of the config divided by the job's best config).
+//! 2. Solve `max Σ value` subject to per-type GPU capacity and one config
+//!    per job — a 0/1 multi-choice ILP ([`crate::ilp`], standing in for the
+//!    commercial solver Sia uses).
+//! 3. Realize chosen configs on concrete nodes (most-idle-first within the
+//!    type — Sia packs for goodput, not for fragmentation).
+//!
+//! The exhaustive re-solve is why Sia's scheduling overhead "increases
+//! extremely rapidly as the number of tasks grows" (Fig 5a): the B&B node
+//! count — returned as `work_units` — grows superlinearly in jobs×configs,
+//! while HAS stays linear.
+
+use super::{derive_placement, Decision, PendingJob, SchedRound, Scheduler};
+use crate::cluster::{Allocation, ClusterState};
+use crate::config::ClusterSpec;
+use crate::ilp;
+use crate::job::JobSpec;
+use crate::memory::{fits, Parallelism};
+use crate::perfmodel::{PerfModel, Placement};
+
+/// A candidate configuration for one job.
+#[derive(Debug, Clone)]
+struct Candidate {
+    job_idx: usize,
+    type_idx: usize,
+    par: Parallelism,
+    n: u32,
+    value: f64,
+}
+
+pub struct Sia {
+    pm: PerfModel,
+    /// Distinct GPU types (by name) with their spec — the ILP dimensions.
+    type_names: Vec<&'static str>,
+    /// Node-limit safeguard for the B&B solver.
+    pub node_limit: u64,
+    /// Cap on data-parallel width per config.
+    max_gpus_per_job: u32,
+    /// Sia re-solves on a fixed cadence (the Sia paper uses 30–60 s rounds;
+    /// re-solving per event would be prohibitive — that's Fig 5a).
+    pub round_interval: f64,
+}
+
+impl Sia {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        let mut type_names: Vec<&'static str> = spec.nodes.iter().map(|n| n.gpu.name).collect();
+        type_names.sort_unstable();
+        type_names.dedup();
+        Self {
+            pm: PerfModel::new(spec.inter_node_gbps),
+            type_names,
+            node_limit: 20_000_000,
+            max_gpus_per_job: 16,
+            round_interval: 30.0,
+        }
+    }
+
+    /// Tensor parallelism for this GPU type as the *user* would size it
+    /// (Sia schedules "tasks with user-specified numbers of GPUs" [8] — it
+    /// has no MARP): fit the model *states* `20W/t`, forgetting activations.
+    /// OOM retries double the degree; after enough burns the user checks the
+    /// full memory model.
+    fn user_tp(&self, job: &JobSpec, mem: u64, max_t: u32, attempts: u32) -> Option<u32> {
+        let static_bytes = 20.0 * job.model.param_count() as f64;
+        let mut t = 1u32;
+        while t <= max_t {
+            if static_bytes / t as f64 <= mem as f64 {
+                break;
+            }
+            t *= 2;
+        }
+        if t > max_t {
+            return None;
+        }
+        t = (t << attempts.min(8)).min(max_t.next_power_of_two());
+        if attempts >= 3 {
+            while t <= max_t && !fits(&job.model, &job.train, Parallelism::new(1, t), mem) {
+                t *= 2;
+            }
+        }
+        if t <= max_t {
+            Some(t)
+        } else {
+            None
+        }
+    }
+
+    /// Enumerate configs for one job against current per-type idle counts.
+    fn candidates(
+        &self,
+        job_idx: usize,
+        job: &JobSpec,
+        attempts: u32,
+        snapshot: &ClusterState,
+        idle_per_type: &[u32],
+    ) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for (type_idx, &tname) in self.type_names.iter().enumerate() {
+            if idle_per_type[type_idx] == 0 {
+                continue;
+            }
+            // Representative node of this type (for mem/link/tflops).
+            let node = snapshot.nodes.iter().find(|n| n.gpu.name == tname).unwrap();
+            let max_node = snapshot
+                .nodes
+                .iter()
+                .filter(|n| n.gpu.name == tname)
+                .map(|n| n.total)
+                .max()
+                .unwrap_or(1);
+            let Some(t_min) = self.user_tp(job, node.gpu.mem_bytes, max_node, attempts) else {
+                continue;
+            };
+            let mut n = t_min;
+            while n <= idle_per_type[type_idx].min(self.max_gpus_per_job) {
+                let t = t_min;
+                let d = n / t;
+                if d >= 1 && d * t == n && d <= job.train.global_batch.max(1) {
+                    let par = Parallelism::new(d, t);
+                    let placement = if n <= max_node {
+                        Placement::single_node(node.link)
+                    } else {
+                        Placement::tp_local_dp_cross(node.link)
+                    };
+                    let thr = self.pm.samples_per_sec(
+                        &job.model,
+                        &job.train,
+                        par,
+                        &node.gpu,
+                        placement,
+                    );
+                    out.push(Candidate { job_idx, type_idx, par, n, value: thr });
+                }
+                n *= 2;
+            }
+        }
+        // Normalize: goodput relative to the job's best config, minus a tiny
+        // GPU-count penalty so ties prefer smaller allocations.
+        let best = out.iter().map(|c| c.value).fold(0.0f64, f64::max);
+        if best > 0.0 {
+            for c in &mut out {
+                c.value = c.value / best - 1e-4 * c.n as f64;
+            }
+        }
+        out
+    }
+
+    /// Realize a chosen (type, n) config onto concrete nodes: most-idle
+    /// first within the type.
+    fn realize(
+        &self,
+        type_idx: usize,
+        n: u32,
+        idle: &mut [u32],
+        snapshot: &ClusterState,
+    ) -> Option<Vec<(usize, u32)>> {
+        let tname = self.type_names[type_idx];
+        let mut nodes: Vec<usize> = snapshot
+            .nodes
+            .iter()
+            .filter(|nd| nd.gpu.name == tname && idle[nd.id] > 0)
+            .map(|nd| nd.id)
+            .collect();
+        nodes.sort_by(|&a, &b| idle[b].cmp(&idle[a]));
+        let mut parts = Vec::new();
+        let mut left = n;
+        for id in nodes {
+            if left == 0 {
+                break;
+            }
+            let take = idle[id].min(left);
+            parts.push((id, take));
+            idle[id] -= take;
+            left -= take;
+        }
+        if left > 0 {
+            // roll back
+            for &(id, c) in &parts {
+                idle[id] += c;
+            }
+            None
+        } else {
+            Some(parts)
+        }
+    }
+}
+
+impl Scheduler for Sia {
+    fn name(&self) -> &'static str {
+        "sia"
+    }
+
+    fn round_interval_s(&self) -> Option<f64> {
+        Some(self.round_interval)
+    }
+
+    fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, _now: f64) -> SchedRound {
+        let mut round = SchedRound::default();
+        if pending.is_empty() {
+            return round;
+        }
+        // Per-type idle capacity.
+        let idle_per_type: Vec<u32> = self
+            .type_names
+            .iter()
+            .map(|t| {
+                snapshot.nodes.iter().filter(|n| n.gpu.name == *t).map(|n| n.idle).sum::<u32>()
+            })
+            .collect();
+
+        // Build the ILP.
+        let mut cands: Vec<Candidate> = Vec::new();
+        for (ji, job) in pending.iter().enumerate() {
+            cands.extend(self.candidates(ji, &job.spec, job.attempts, snapshot, &idle_per_type));
+        }
+        let items: Vec<ilp::Item> = cands
+            .iter()
+            .map(|c| {
+                let mut usage = vec![0u32; self.type_names.len()];
+                usage[c.type_idx] = c.n;
+                ilp::Item { group: c.job_idx, value: c.value, usage }
+            })
+            .collect();
+        let problem =
+            ilp::Problem { n_groups: pending.len(), capacity: idle_per_type, items };
+        let sol = ilp::solve(&problem, self.node_limit);
+        round.work_units = sol.nodes_explored;
+
+        // Realize assignments.
+        let mut idle: Vec<u32> = snapshot.nodes.iter().map(|n| n.idle).collect();
+        for (ji, choice) in sol.chosen.iter().enumerate() {
+            let Some(item_idx) = choice else { continue };
+            let c = &cands[*item_idx];
+            let Some(parts) = self.realize(c.type_idx, c.n, &mut idle, snapshot) else {
+                continue;
+            };
+            let alloc = Allocation { job: pending[ji].spec.id, parts };
+            let (placement, gpu) = derive_placement(&alloc, c.par, snapshot);
+            let will_oom = crate::memory::exact::exact_peak_bytes(
+                &pending[ji].spec.model,
+                &pending[ji].spec.train,
+                c.par,
+            ) > gpu.mem_bytes;
+            round.decisions.push(Decision {
+                job: pending[ji].spec.id,
+                alloc,
+                par: c.par,
+                placement,
+                gpu,
+                will_oom,
+            });
+        }
+        round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::model_by_name;
+    use crate::config::{real_testbed, sia_sim};
+    use crate::job::JobSpec;
+
+    fn pending(id: u64, model: &str, batch: u32) -> PendingJob {
+        PendingJob {
+            spec: JobSpec::new(id, model_by_name(model).unwrap(), batch, 10_000, 0.0),
+            attempts: 0,
+        }
+    }
+
+    #[test]
+    fn schedules_one_job_memory_safely() {
+        let spec = sia_sim();
+        let mut s = Sia::new(&spec);
+        let snap = ClusterState::from_spec(&spec);
+        let round = s.schedule(&[pending(1, "gpt2-350m", 8)], &snap, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        // goodput-optimal for a small model: the A100 pool, which also
+        // happens to be memory-safe for this job
+        assert!(!round.decisions[0].will_oom);
+    }
+
+    #[test]
+    fn respects_capacity_with_many_jobs() {
+        let spec = real_testbed();
+        let mut s = Sia::new(&spec);
+        let snap = ClusterState::from_spec(&spec);
+        let jobs: Vec<PendingJob> = (0..6).map(|i| pending(i, "gpt2-350m", 8)).collect();
+        let round = s.schedule(&jobs, &snap, 0.0);
+        let mut orch = crate::cluster::Orchestrator::new(&spec);
+        for d in &round.decisions {
+            orch.allocate(d.alloc.clone()).expect("capacity respected");
+        }
+        assert!(orch.check_conservation());
+    }
+
+    #[test]
+    fn big_model_lands_on_big_gpus() {
+        let spec = real_testbed();
+        let mut s = Sia::new(&spec);
+        let snap = ClusterState::from_spec(&spec);
+        let round = s.schedule(&[pending(1, "gpt2-7b", 2)], &snap, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        let d = &round.decisions[0];
+        assert!(d.gpu.mem_bytes >= 40 * crate::config::GIB);
+    }
+
+    #[test]
+    fn naive_sizing_can_oom_then_adapts_on_retry() {
+        // Sia has no MARP: a 350M/b8 job sized t=1 against a 2080Ti (11 GB)
+        // would OOM (measured peak ~12.8 GB). With only 2080Ti available the
+        // decision must carry will_oom; after retries t grows and it fits.
+        use crate::config::cluster_file::parse_cluster;
+        // Only 2 GPUs exist, so data parallelism cannot rescue the naive
+        // sizing (with 8 idle GPUs Sia's adaptive d=8 happens to fit).
+        let spec = parse_cluster("cluster t\nnode RTX2080Ti x2 pcie\n").unwrap();
+        let mut s = Sia::new(&spec);
+        let snap = ClusterState::from_spec(&spec);
+        let round0 = s.schedule(&[pending(1, "gpt2-350m", 8)], &snap, 0.0);
+        assert_eq!(round0.decisions.len(), 1);
+        assert!(round0.decisions[0].will_oom, "naive t=1 on 11 GB must OOM");
+        let retried = PendingJob {
+            spec: JobSpec::new(1, model_by_name("gpt2-350m").unwrap(), 8, 10_000, 0.0),
+            attempts: 3,
+        };
+        let round3 = s.schedule(&[retried], &snap, 100.0);
+        if let Some(d) = round3.decisions.first() {
+            assert!(!d.will_oom, "after retries the user sizes memory properly");
+        }
+    }
+
+    #[test]
+    fn work_grows_superlinearly_with_jobs() {
+        let spec = sia_sim();
+        let snap = ClusterState::from_spec(&spec);
+        let run = |n: usize| {
+            let mut s = Sia::new(&spec);
+            let jobs: Vec<PendingJob> = (0..n as u64)
+                .map(|i| {
+                    let model = ["gpt2-125m", "gpt2-350m", "gpt2-760m"][i as usize % 3];
+                    pending(i, model, 4 + (i % 3) as u32 * 4)
+                })
+                .collect();
+            s.schedule(&jobs, &snap, 0.0).work_units
+        };
+        let w4 = run(4);
+        let w16 = run(16);
+        // superlinear: 4x jobs → much more than 4x nodes
+        assert!(w16 > 8 * w4, "w4={w4} w16={w16}");
+    }
+
+    #[test]
+    fn empty_pending_is_cheap() {
+        let spec = sia_sim();
+        let mut s = Sia::new(&spec);
+        let snap = ClusterState::from_spec(&spec);
+        let round = s.schedule(&[], &snap, 0.0);
+        assert_eq!(round.work_units, 0);
+        assert!(round.decisions.is_empty());
+    }
+}

@@ -1,0 +1,519 @@
+//! Discrete-event cluster simulator — the stand-in for the Alibaba PAI
+//! platform simulator used in §V (see DESIGN.md §6 for the substitution
+//! argument).
+//!
+//! Event semantics:
+//! * `Arrival(job)` — job enters the pending queue;
+//! * `Finish(job)` — job completes, resources released;
+//! * `Oom(job)` — a memory-oblivious placement crashed; resources released,
+//!   job requeued with `attempts + 1` (the baselines' trial-and-error);
+//!
+//! After each event the active [`Scheduler`] plans over the pending queue.
+//! Scheduling *overhead* is modelled by charging `work_units ×
+//! sched_work_unit_s` of delay before placed jobs start — so an expensive
+//! scheduler (Sia) directly inflates queue times, exactly the effect the
+//! paper measures. The simulator itself also measures the wall-clock the
+//! scheduler burns, which feeds Fig 5a.
+
+use crate::cluster::{ClusterState, Orchestrator};
+use crate::config::ClusterSpec;
+use crate::job::{JobId, JobOutcome, JobSpec};
+use crate::metrics::RunReport;
+use crate::perfmodel::PerfModel;
+use crate::sched::{PendingJob, Scheduler};
+use std::collections::{BinaryHeap, HashMap};
+
+/// Simulator tuning knobs.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Sim-seconds before an OOM is detected and the job is requeued.
+    pub oom_detect_s: f64,
+    /// Sim-seconds charged per scheduler work unit (models the paper's
+    /// scheduling-overhead effect; calibrated so HAS rounds are ~ms and
+    /// Sia rounds grow to seconds at large queue depths).
+    pub sched_work_unit_s: f64,
+    /// Safety cap on simulated time.
+    pub max_sim_time_s: f64,
+    /// Hard cap on OOM retries before a job is rejected.
+    pub max_attempts: u32,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            oom_detect_s: 45.0,
+            sched_work_unit_s: 2.0e-5,
+            max_sim_time_s: 60.0 * 86_400.0,
+            max_attempts: 6,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum EventKind {
+    Arrival(JobSpec),
+    Finish(JobId),
+    Oom(JobId),
+    /// Round boundary for interval schedulers (Sia-style).
+    RoundTick,
+}
+
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap: earlier time first, then lower seq.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+#[allow(dead_code)] // start_time/samples_per_sec kept for debugging dumps
+struct RunningJob {
+    spec: JobSpec,
+    start_time: f64,
+    first_start: f64,
+    samples_per_sec: f64,
+    gpus: u32,
+    attempts: u32,
+}
+
+/// GPU-time utilization integrator.
+struct UtilIntegrator {
+    last_t: f64,
+    busy_gpu_seconds: f64,
+    total_gpus: f64,
+}
+
+impl UtilIntegrator {
+    fn advance(&mut self, now: f64, busy: u32) {
+        let dt = (now - self.last_t).max(0.0);
+        self.busy_gpu_seconds += dt * busy as f64;
+        self.last_t = now;
+    }
+
+    fn value(&self, end: f64, start: f64) -> f64 {
+        let span = (end - start).max(1e-9);
+        (self.busy_gpu_seconds / (span * self.total_gpus)).clamp(0.0, 1.0)
+    }
+}
+
+/// The simulator. Owns the orchestrator and drives a [`Scheduler`].
+pub struct Simulator<'a> {
+    spec: ClusterSpec,
+    orch: Orchestrator,
+    sched: &'a mut dyn Scheduler,
+    pm: PerfModel,
+    cfg: SimConfig,
+    events: BinaryHeap<Event>,
+    seq: u64,
+    pending: Vec<PendingJob>,
+    running: HashMap<JobId, RunningJob>,
+    outcomes: Vec<JobOutcome>,
+    rejected: usize,
+    clock: f64,
+    work_units: u64,
+    sched_wall_s: f64,
+    util: UtilIntegrator,
+    /// Per-job first submission times (for JCT across OOM retries).
+    submit_times: HashMap<JobId, f64>,
+    first_starts: HashMap<JobId, f64>,
+    attempt_counts: HashMap<JobId, u32>,
+    /// Interval schedulers: time of the last executed round and whether a
+    /// RoundTick is already queued.
+    last_round: f64,
+    tick_queued: bool,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(spec: &ClusterSpec, sched: &'a mut dyn Scheduler, cfg: SimConfig) -> Self {
+        let total_gpus = spec.total_gpus() as f64;
+        Self {
+            spec: spec.clone(),
+            orch: Orchestrator::new(spec),
+            sched,
+            pm: PerfModel::new(spec.inter_node_gbps),
+            cfg,
+            events: BinaryHeap::new(),
+            seq: 0,
+            pending: Vec::new(),
+            running: HashMap::new(),
+            outcomes: Vec::new(),
+            rejected: 0,
+            clock: 0.0,
+            work_units: 0,
+            sched_wall_s: 0.0,
+            util: UtilIntegrator { last_t: 0.0, busy_gpu_seconds: 0.0, total_gpus },
+            submit_times: HashMap::new(),
+            first_starts: HashMap::new(),
+            attempt_counts: HashMap::new(),
+            last_round: f64::NEG_INFINITY,
+            tick_queued: false,
+        }
+    }
+
+    fn push_event(&mut self, time: f64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Event { time, seq: self.seq, kind });
+    }
+
+    /// Load a trace (jobs with submit times).
+    pub fn submit_all(&mut self, jobs: &[JobSpec]) {
+        for j in jobs {
+            self.push_event(j.submit_time, EventKind::Arrival(j.clone()));
+        }
+    }
+
+    fn busy_gpus(&self) -> u32 {
+        self.orch.state().total_gpus() - self.orch.state().idle_gpus()
+    }
+
+    /// Run one scheduling round over the pending queue, then reject
+    /// structurally unplaceable jobs. Interval schedulers (Sia-style) only
+    /// run at round boundaries; between them a RoundTick is queued.
+    fn schedule_round(&mut self) {
+        if let Some(interval) = self.sched.round_interval_s() {
+            if self.pending.is_empty() {
+                return;
+            }
+            let due = self.last_round + interval;
+            if self.clock < due {
+                if !self.tick_queued {
+                    self.push_event(due, EventKind::RoundTick);
+                    self.tick_queued = true;
+                }
+                return;
+            }
+            self.last_round = self.clock;
+        }
+        self.schedule_round_inner();
+        self.reject_unplaceable();
+    }
+
+    /// The placement pass.
+    fn schedule_round_inner(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let snapshot = self.orch.snapshot();
+        let t0 = std::time::Instant::now();
+        let round = self.sched.schedule(&self.pending, &snapshot, self.clock);
+        self.sched_wall_s += t0.elapsed().as_secs_f64();
+        self.work_units += round.work_units;
+        let overhead = round.work_units as f64 * self.cfg.sched_work_unit_s;
+        let start_time = self.clock + overhead;
+
+        for d in round.decisions {
+            // Remove from pending.
+            let Some(pos) = self.pending.iter().position(|p| p.spec.id == d.job) else {
+                continue; // scheduler returned a stale decision — ignore
+            };
+            let pj = self.pending.remove(pos);
+            if self.orch.allocate(d.alloc.clone()).is_err() {
+                // Scheduler overdrew (bug or stale snapshot): requeue.
+                self.pending.push(pj);
+                continue;
+            }
+            self.util.advance(self.clock, self.busy_gpus().saturating_sub(d.alloc.total_gpus()));
+            let attempts = pj.attempts + 1;
+            self.attempt_counts.insert(d.job, attempts);
+            self.first_starts.entry(d.job).or_insert(start_time);
+            if d.will_oom {
+                self.running.insert(
+                    d.job,
+                    RunningJob {
+                        spec: pj.spec.clone(),
+                        start_time,
+                        first_start: self.first_starts[&d.job],
+                        samples_per_sec: 0.0,
+                        gpus: d.alloc.total_gpus(),
+                        attempts,
+                    },
+                );
+                self.push_event(start_time + self.cfg.oom_detect_s, EventKind::Oom(d.job));
+            } else {
+                let thr = self.pm.samples_per_sec(
+                    &pj.spec.model,
+                    &pj.spec.train,
+                    d.par,
+                    &d.gpu,
+                    d.placement,
+                );
+                let runtime = pj.spec.total_samples as f64 / thr.max(1e-9);
+                self.running.insert(
+                    d.job,
+                    RunningJob {
+                        spec: pj.spec.clone(),
+                        start_time,
+                        first_start: self.first_starts[&d.job],
+                        samples_per_sec: thr,
+                        gpus: d.alloc.total_gpus(),
+                        attempts,
+                    },
+                );
+                self.push_event(start_time + runtime, EventKind::Finish(d.job));
+            }
+        }
+
+    }
+
+    /// If the cluster is completely idle and the scheduler still can't place
+    /// a job, it never will — reject it instead of busy-looping. (A job that
+    /// exceeded its OOM-retry budget is also dropped here.)
+    fn reject_unplaceable(&mut self) {
+        if !(self.running.is_empty()
+            && self.orch.state().idle_gpus() == self.orch.state().total_gpus()
+            && !self.pending.is_empty())
+        {
+            return;
+        }
+        let mut keep = Vec::new();
+        let drained: Vec<PendingJob> = self.pending.drain(..).collect();
+        for p in drained {
+            if p.attempts >= self.cfg.max_attempts {
+                self.rejected += 1;
+                continue;
+            }
+            let snapshot = self.orch.snapshot();
+            let round = self.sched.schedule(std::slice::from_ref(&p), &snapshot, self.clock);
+            if round.decisions.is_empty() {
+                self.rejected += 1;
+            } else {
+                keep.push(p);
+            }
+        }
+        self.pending = keep;
+        if !self.pending.is_empty() {
+            // They are placeable on an empty cluster; place them now.
+            self.schedule_round_inner();
+        }
+    }
+
+    fn handle(&mut self, kind: EventKind) {
+        match kind {
+            EventKind::Arrival(spec) => {
+                self.submit_times.insert(spec.id, spec.submit_time);
+                self.pending.push(PendingJob { spec, attempts: 0 });
+            }
+            EventKind::Finish(id) => {
+                let Some(run) = self.running.remove(&id) else { return };
+                self.util.advance(self.clock, self.busy_gpus());
+                let _ = self.orch.release(id);
+                let submit = *self.submit_times.get(&id).unwrap_or(&0.0);
+                self.outcomes.push(JobOutcome {
+                    id,
+                    name: run.spec.name.clone(),
+                    submit_time: submit,
+                    start_time: run.first_start,
+                    finish_time: self.clock,
+                    gpus_used: run.gpus,
+                    samples_per_sec: run.spec.total_samples as f64
+                        / (self.clock - run.first_start).max(1e-9),
+                    attempts: run.attempts,
+                });
+            }
+            EventKind::RoundTick => {
+                self.tick_queued = false;
+            }
+            EventKind::Oom(id) => {
+                let Some(run) = self.running.remove(&id) else { return };
+                self.util.advance(self.clock, self.busy_gpus());
+                let _ = self.orch.release(id);
+                if run.attempts >= self.cfg.max_attempts {
+                    self.rejected += 1;
+                } else {
+                    self.pending.push(PendingJob { spec: run.spec, attempts: run.attempts });
+                }
+            }
+        }
+    }
+
+    /// Run to completion; returns the report.
+    pub fn run(&mut self, workload_name: &str) -> RunReport {
+        while let Some(ev) = self.events.pop() {
+            if ev.time > self.cfg.max_sim_time_s {
+                break;
+            }
+            self.util.advance(ev.time, self.busy_gpus());
+            self.clock = ev.time;
+            let mut batch = vec![ev.kind];
+            // Drain events at (approximately) the same timestamp.
+            while let Some(next) = self.events.peek() {
+                if (next.time - self.clock).abs() < 1e-9 {
+                    batch.push(self.events.pop().unwrap().kind);
+                } else {
+                    break;
+                }
+            }
+            for kind in batch {
+                self.handle(kind);
+            }
+            self.schedule_round();
+        }
+        // Whatever is still pending never got resources.
+        self.rejected += self.pending.len();
+        self.pending.clear();
+        let end = self.clock.max(1e-9);
+        let report = RunReport::from_outcomes(
+            self.sched.name(),
+            workload_name,
+            &self.outcomes,
+            self.rejected,
+            self.work_units,
+            self.sched_wall_s,
+            self.util.value(end, 0.0),
+        );
+        report
+    }
+
+    pub fn outcomes(&self) -> &[JobOutcome] {
+        &self.outcomes
+    }
+
+    pub fn cluster_state(&self) -> &ClusterState {
+        self.orch.state()
+    }
+
+    pub fn conservation_ok(&self) -> bool {
+        self.orch.check_conservation()
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+}
+
+/// Convenience: simulate a trace under a scheduler built by `make_sched`.
+pub fn simulate(
+    spec: &ClusterSpec,
+    sched: &mut dyn Scheduler,
+    jobs: &[JobSpec],
+    cfg: SimConfig,
+    workload_name: &str,
+) -> RunReport {
+    let mut sim = Simulator::new(spec, sched, cfg);
+    sim.submit_all(jobs);
+    sim.run(workload_name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::model_by_name;
+    use crate::config::real_testbed;
+    use crate::marp::Marp;
+    use crate::sched::has::Has;
+    use crate::sched::opportunistic::Opportunistic;
+
+    fn jobs(n: u64, model: &str, batch: u32, samples: u64, spread_s: f64) -> Vec<JobSpec> {
+        (0..n)
+            .map(|i| {
+                JobSpec::new(i, model_by_name(model).unwrap(), batch, samples, i as f64 * spread_s)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_job_completes() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let trace = jobs(1, "gpt2-350m", 8, 10_000, 0.0);
+        let report = simulate(&spec, &mut has, &trace, SimConfig::default(), "t");
+        assert_eq!(report.n_completed, 1);
+        assert_eq!(report.n_rejected, 0);
+        assert!(report.avg_jct_s > 0.0);
+        assert!(report.avg_samples_per_sec > 0.0);
+    }
+
+    #[test]
+    fn all_jobs_terminate_and_resources_conserved() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let trace = jobs(12, "gpt2-350m", 8, 50_000, 30.0);
+        let mut sim = Simulator::new(&spec, &mut has, SimConfig::default());
+        sim.submit_all(&trace);
+        let report = sim.run("t");
+        assert_eq!(report.n_completed + report.n_rejected, 12);
+        assert_eq!(report.n_rejected, 0);
+        assert!(sim.conservation_ok());
+        assert_eq!(sim.cluster_state().idle_gpus(), sim.cluster_state().total_gpus());
+    }
+
+    #[test]
+    fn queueing_happens_under_contention() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        // 20 jobs all at t=0, long enough to contend.
+        let trace = jobs(20, "gpt2-760m", 8, 200_000, 0.0);
+        let report = simulate(&spec, &mut has, &trace, SimConfig::default(), "t");
+        assert_eq!(report.n_completed, 20);
+        assert!(report.avg_queue_s > 0.0, "contention must produce queueing");
+    }
+
+    #[test]
+    fn oom_retries_counted_for_opportunistic() {
+        let spec = real_testbed();
+        let mut opp = Opportunistic::new(&spec);
+        // 2.7B: user sizes against 80G; fastest-first can land it on 40G.
+        let trace = jobs(4, "gpt2-2.7b", 8, 50_000, 10.0);
+        let report = simulate(&spec, &mut opp, &trace, SimConfig::default(), "t");
+        assert_eq!(report.n_completed + report.n_rejected, 4);
+        // At least some trial-and-error is expected on this workload.
+        assert!(report.total_oom_retries > 0, "expected OOM retries, got none");
+    }
+
+    #[test]
+    fn infeasible_job_rejected_not_looped() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut big = model_by_name("gpt2-7b").unwrap();
+        big.hidden = 16384;
+        big.layers = 96;
+        let trace = vec![JobSpec::new(0, big, 4, 1000, 0.0)];
+        let report = simulate(&spec, &mut has, &trace, SimConfig::default(), "t");
+        assert_eq!(report.n_completed, 0);
+        assert_eq!(report.n_rejected, 1);
+    }
+
+    #[test]
+    fn deterministic_given_same_inputs() {
+        let spec = real_testbed();
+        let run = || {
+            let mut has = Has::new(Marp::with_defaults(spec.clone()));
+            let trace = jobs(8, "gpt2-350m", 8, 30_000, 15.0);
+            simulate(&spec, &mut has, &trace, SimConfig::default(), "t")
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.avg_jct_s, b.avg_jct_s);
+        assert_eq!(a.makespan_s, b.makespan_s);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let trace = jobs(6, "gpt2-350m", 8, 50_000, 0.0);
+        let report = simulate(&spec, &mut has, &trace, SimConfig::default(), "t");
+        assert!((0.0..=1.0).contains(&report.avg_utilization));
+        assert!(report.avg_utilization > 0.0);
+    }
+}

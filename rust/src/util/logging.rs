@@ -1,0 +1,113 @@
+//! Tiny leveled logger (the `log`/`env_logger` stack is not wired offline).
+//!
+//! Level is controlled by `FRENZY_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`. The logger is allocation-light and thread-safe;
+//! the simulator hot loop only logs at debug/trace so release runs pay one
+//! atomic load per suppressed call.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn from_env() -> Level {
+        match std::env::var("FRENZY_LOG").unwrap_or_default().to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+/// Current log level (lazy-initialized from FRENZY_LOG).
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let l = Level::from_env();
+        LEVEL.store(l as u8, Ordering::Relaxed);
+        l
+    } else {
+        // SAFETY: only valid discriminants are ever stored.
+        unsafe { std::mem::transmute::<u8, Level>(raw) }
+    }
+}
+
+/// Override the level programmatically (tests, CLI --verbose).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Emit a log line; prefer the `log_*!` macros.
+pub fn emit(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t0 = START.get_or_init(Instant::now);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stderr = std::io::stderr();
+    let mut lock = stderr.lock();
+    let _ = writeln!(lock, "[{elapsed:9.3}s {:5} {target}] {msg}", l.as_str());
+}
+
+#[macro_export]
+macro_rules! log_error { ($($arg:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($arg:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($arg:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($arg:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($arg:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn set_and_check() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

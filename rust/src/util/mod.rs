@@ -1,0 +1,52 @@
+//! Foundation substrates built from scratch for the offline environment:
+//! PRNG, statistics, JSON, tables/plots, property testing, logging.
+
+pub mod json;
+pub mod logging;
+pub mod plot;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+
+use std::path::Path;
+
+/// Write a string to a file, creating parent directories.
+pub fn write_file(path: impl AsRef<Path>, contents: &str) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+/// Resolve a path relative to the repository root (directory containing
+/// Cargo.toml), falling back to the current directory. Lets examples/tests
+/// find `artifacts/` regardless of invocation cwd.
+pub fn repo_path(rel: &str) -> std::path::PathBuf {
+    let manifest = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let candidate = manifest.join(rel);
+    if candidate.exists() {
+        return candidate;
+    }
+    // At runtime from an installed binary, fall back to cwd-relative.
+    let cwd = std::path::PathBuf::from(rel);
+    if cwd.exists() {
+        cwd
+    } else {
+        candidate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn write_file_creates_dirs() {
+        let dir = std::env::temp_dir().join("frenzy_util_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("a/b/c.txt");
+        super::write_file(&p, "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "hello");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

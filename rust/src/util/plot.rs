@@ -1,0 +1,207 @@
+//! ASCII chart rendering (bar charts and multi-series line charts).
+//!
+//! The paper's figures are bar/line charts; the figure harnesses render a
+//! terminal approximation alongside the JSON data dumped to `results/`, so a
+//! reader can eyeball the *shape* (who wins, crossovers) straight from the
+//! CLI.
+
+/// Horizontal bar chart with labelled bars.
+pub struct BarChart {
+    title: String,
+    bars: Vec<(String, f64)>,
+    width: usize,
+    unit: String,
+}
+
+impl BarChart {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), bars: Vec::new(), width: 48, unit: String::new() }
+    }
+
+    pub fn unit(mut self, unit: &str) -> Self {
+        self.unit = unit.to_string();
+        self
+    }
+
+    pub fn width(mut self, w: usize) -> Self {
+        self.width = w.max(8);
+        self
+    }
+
+    pub fn bar(&mut self, label: &str, value: f64) -> &mut Self {
+        self.bars.push((label.to_string(), value));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("{}\n", self.title);
+        if self.bars.is_empty() {
+            return out;
+        }
+        let maxv = self.bars.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+        let label_w = self.bars.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+        for (label, value) in &self.bars {
+            let n = ((value / maxv) * self.width as f64).round().max(0.0) as usize;
+            out.push_str(&format!(
+                "  {label:<label_w$} | {} {value:.3} {}\n",
+                "█".repeat(n),
+                self.unit
+            ));
+        }
+        out
+    }
+}
+
+/// Multi-series line chart rendered on a character grid.
+pub struct LineChart {
+    title: String,
+    series: Vec<(String, Vec<(f64, f64)>)>,
+    width: usize,
+    height: usize,
+    log_y: bool,
+    x_label: String,
+    y_label: String,
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@'];
+
+impl LineChart {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            series: Vec::new(),
+            width: 64,
+            height: 18,
+            log_y: false,
+            x_label: String::new(),
+            y_label: String::new(),
+        }
+    }
+
+    pub fn log_y(mut self) -> Self {
+        self.log_y = true;
+        self
+    }
+
+    pub fn labels(mut self, x: &str, y: &str) -> Self {
+        self.x_label = x.to_string();
+        self.y_label = y.to_string();
+        self
+    }
+
+    pub fn series(&mut self, name: &str, points: &[(f64, f64)]) -> &mut Self {
+        self.series.push((name.to_string(), points.to_vec()));
+        self
+    }
+
+    fn ymap(&self, y: f64) -> f64 {
+        if self.log_y {
+            y.max(1e-12).log10()
+        } else {
+            y
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("{}\n", self.title);
+        let pts: Vec<(f64, f64)> =
+            self.series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+        if pts.is_empty() {
+            return out;
+        }
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &pts {
+            let ym = self.ymap(y);
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(ym);
+            ymax = ymax.max(ym);
+        }
+        if (xmax - xmin).abs() < 1e-12 {
+            xmax = xmin + 1.0;
+        }
+        if (ymax - ymin).abs() < 1e-12 {
+            ymax = ymin + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, points)) in self.series.iter().enumerate() {
+            let mark = MARKS[si % MARKS.len()];
+            for &(x, y) in points {
+                let gx = ((x - xmin) / (xmax - xmin) * (self.width - 1) as f64).round() as usize;
+                let gy = ((self.ymap(y) - ymin) / (ymax - ymin) * (self.height - 1) as f64)
+                    .round() as usize;
+                let row = self.height - 1 - gy.min(self.height - 1);
+                grid[row][gx.min(self.width - 1)] = mark;
+            }
+        }
+        let unmap = |v: f64| if self.log_y { 10f64.powf(v) } else { v };
+        out.push_str(&format!(
+            "  y: {} ({:.3} .. {:.3}){}\n",
+            self.y_label,
+            unmap(ymin),
+            unmap(ymax),
+            if self.log_y { " [log]" } else { "" }
+        ));
+        for row in &grid {
+            out.push_str("  |");
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str("  +");
+        out.push_str(&"-".repeat(self.width));
+        out.push('\n');
+        out.push_str(&format!("   x: {} ({xmin:.2} .. {xmax:.2})\n", self.x_label));
+        for (si, (name, _)) in self.series.iter().enumerate() {
+            out.push_str(&format!("   {} {}\n", MARKS[si % MARKS.len()], name));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let mut c = BarChart::new("t").width(10);
+        c.bar("a", 10.0).bar("bb", 5.0);
+        let r = c.render();
+        assert!(r.contains("a  | ██████████"));
+        assert!(r.contains("bb | █████ "));
+    }
+
+    #[test]
+    fn bar_chart_empty_ok() {
+        assert_eq!(BarChart::new("empty").render(), "empty\n");
+    }
+
+    #[test]
+    fn line_chart_contains_marks_and_legend() {
+        let mut c = LineChart::new("overhead").labels("tasks", "ms");
+        c.series("frenzy", &[(10.0, 1.0), (100.0, 2.0)]);
+        c.series("sia", &[(10.0, 5.0), (100.0, 400.0)]);
+        let r = c.render();
+        assert!(r.contains('*'));
+        assert!(r.contains('o'));
+        assert!(r.contains("frenzy"));
+        assert!(r.contains("sia"));
+    }
+
+    #[test]
+    fn log_scale_handles_wide_range() {
+        let mut c = LineChart::new("log").log_y();
+        c.series("s", &[(1.0, 0.001), (2.0, 1000.0)]);
+        let r = c.render();
+        assert!(r.contains("[log]"));
+    }
+
+    #[test]
+    fn degenerate_single_point() {
+        let mut c = LineChart::new("one");
+        c.series("s", &[(5.0, 5.0)]);
+        let r = c.render();
+        assert!(r.contains('*'));
+    }
+}

@@ -1,0 +1,192 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Usage:
+//! ```no_run
+//! use frenzy::util::prop::Runner;
+//! let mut r = Runner::new("memory monotone", 0xF00D, 200);
+//! r.run(|g| {
+//!     let d = g.usize_in(1, 8);
+//!     let d2 = d * 2;
+//!     // property body: return Err(msg) to fail
+//!     if d2 < d { return Err(format!("overflow d={d}")); }
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the runner reports the seed of the failing case so it can be
+//! replayed deterministically; a bounded shrink pass retries the property
+//! with "smaller" generator draws (halving integer draws) to present a
+//! simpler counterexample when one exists.
+
+use super::prng::Xoshiro256pp;
+
+/// Value generator handed to each property iteration.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// When in shrink mode, integer draws are divided by this factor.
+    shrink_div: u64,
+    /// Log of draws for diagnostics.
+    draws: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, shrink_div: u64) -> Self {
+        Self { rng: Xoshiro256pp::seed_from_u64(seed), shrink_div, draws: Vec::new() }
+    }
+
+    /// usize uniform in [lo, hi] inclusive (shrinks toward lo).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = (hi - lo) as u64 + 1;
+        let raw = self.rng.next_below(span) / self.shrink_div.max(1);
+        let v = lo + raw as usize;
+        self.draws.push(format!("usize_in({lo},{hi})={v}"));
+        v
+    }
+
+    /// u64 uniform in [lo, hi] inclusive.
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi >= lo);
+        let raw = self.rng.next_below(hi - lo + 1) / self.shrink_div.max(1);
+        let v = lo + raw;
+        self.draws.push(format!("u64_in({lo},{hi})={v}"));
+        v
+    }
+
+    /// f64 uniform in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform(lo, hi);
+        self.draws.push(format!("f64_in({lo},{hi})={v:.6}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.draws.push(format!("bool={v}"));
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        let i = self.rng.next_below(xs.len() as u64) as usize;
+        self.draws.push(format!("pick(len={})={i}", xs.len()));
+        &xs[i]
+    }
+
+    /// A vector of `n` items built by `f`, n in [lo, hi].
+    pub fn vec_of<T>(&mut self, lo: usize, hi: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(lo, hi);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Access the underlying rng for custom sampling.
+    pub fn rng(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+}
+
+/// Property runner: executes `cases` iterations with derived seeds.
+pub struct Runner {
+    name: String,
+    seed: u64,
+    cases: u64,
+}
+
+impl Runner {
+    pub fn new(name: &str, seed: u64, cases: u64) -> Self {
+        Self { name: name.to_string(), seed, cases: cases.max(1) }
+    }
+
+    /// Run the property; panics with a replayable report on failure.
+    pub fn run(&mut self, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+        for i in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+            let mut g = Gen::new(case_seed, 1);
+            if let Err(msg) = prop(&mut g) {
+                // Shrink pass: retry with progressively blunter draws.
+                let mut simplest: Option<(u64, String, Vec<String>)> = None;
+                for div in [2u64, 4, 8, 16, 64, 256] {
+                    let mut gs = Gen::new(case_seed, div);
+                    if let Err(m2) = prop(&mut gs) {
+                        simplest = Some((div, m2, gs.draws));
+                    }
+                }
+                let mut report = format!(
+                    "property '{}' failed at case {i} (seed {case_seed:#x}): {msg}\n  draws: {}",
+                    self.name,
+                    g.draws.join(", ")
+                );
+                if let Some((div, m2, draws)) = simplest {
+                    report.push_str(&format!(
+                        "\n  shrunk (div {div}): {m2}\n  shrunk draws: {}",
+                        draws.join(", ")
+                    ));
+                }
+                panic!("{report}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        Runner::new("trivial", 1, 50).run(|g| {
+            let _ = g.usize_in(0, 10);
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports() {
+        Runner::new("fails", 2, 50).run(|g| {
+            let x = g.usize_in(0, 100);
+            if x > 10 {
+                Err(format!("x too big: {x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_within_bounds() {
+        Runner::new("bounds", 3, 200).run(|g| {
+            let a = g.usize_in(3, 9);
+            if !(3..=9).contains(&a) {
+                return Err(format!("usize_in out of range: {a}"));
+            }
+            let b = g.f64_in(-1.0, 1.0);
+            if !(-1.0..1.0).contains(&b) {
+                return Err(format!("f64_in out of range: {b}"));
+            }
+            let v = g.vec_of(0, 5, |g| g.bool());
+            if v.len() > 5 {
+                return Err("vec too long".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let mut out = Vec::new();
+            Runner::new("det", seed, 10).run(|g| {
+                out.push(g.u64_in(0, 1000));
+                Ok(())
+            });
+            out
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

@@ -1,0 +1,81 @@
+//! Synthetic Helios-like trace (SenseTime, SC'21 [20]).
+//!
+//! Per the paper's own description: "Compared to Philly, Helios requires
+//! more GPUs and has longer runtime durations." The class mix therefore
+//! shifts toward multi-GPU jobs and the duration distribution stretches.
+
+use super::{must_model, GenCtx};
+use crate::job::JobSpec;
+
+/// Demand classes shifted large relative to Philly.
+const CLASSES: &[(f64, &[&str], &[u32])] = &[
+    (0.40, &["gpt2-350m", "gpt2-760m", "bert-large"], &[4, 8]),
+    (0.30, &["gpt2-760m", "gpt2-1.3b"], &[8, 16]),
+    (0.20, &["gpt2-1.3b", "gpt2-2.7b"], &[16, 32]),
+    (0.10, &["gpt2-2.7b", "gpt2-7b"], &[8, 16]),
+];
+
+const MEAN_INTERARRIVAL_S: f64 = 150.0;
+const REF_SAMPLES_PER_SEC: f64 = 120.0;
+
+/// Generate an `n`-job Helios-like trace.
+pub fn generate(n: usize, seed: u64) -> Vec<JobSpec> {
+    let mut ctx = GenCtx::new(seed ^ 0x4E11_05);
+    let weights: Vec<f64> = CLASSES.iter().map(|c| c.0).collect();
+    let mut t = 0.0f64;
+    let mut jobs = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += ctx.rng.exp(1.0 / MEAN_INTERARRIVAL_S);
+        let class = &CLASSES[ctx.rng.weighted_index(&weights)];
+        let model = must_model(*ctx.rng.choose(class.1));
+        let batch = *ctx.rng.choose(class.2);
+        // Longer durations than Philly: log-normal body shifted up.
+        let dur_s = if ctx.rng.chance(0.8) {
+            ctx.rng.lognormal(7.6, 1.2).clamp(300.0, 43_200.0)
+        } else {
+            ctx.rng.pareto(3600.0, 1.4).min(86_400.0)
+        };
+        let size_scale = (350.0e6 / model.param_count() as f64).clamp(0.02, 4.0);
+        let samples = (dur_s * REF_SAMPLES_PER_SEC * size_scale).max(50.0) as u64;
+        let id = ctx.id();
+        jobs.push(JobSpec::new(id, model, batch, samples, t));
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(50, 1), generate(50, 1));
+    }
+
+    #[test]
+    fn bigger_than_philly() {
+        let h = generate(300, 5);
+        let p = crate::workload::philly::generate(300, 5);
+        let mean_params = |jobs: &[JobSpec]| {
+            jobs.iter().map(|j| j.model.param_count() as f64).sum::<f64>() / jobs.len() as f64
+        };
+        assert!(
+            mean_params(&h) > 1.5 * mean_params(&p),
+            "helios jobs must be larger on average"
+        );
+        let mean_samples_time = |jobs: &[JobSpec]| {
+            // proxy for duration: samples / size_scale
+            jobs.iter()
+                .map(|j| j.total_samples as f64 * j.model.param_count() as f64)
+                .sum::<f64>()
+                / jobs.len() as f64
+        };
+        assert!(mean_samples_time(&h) > mean_samples_time(&p));
+    }
+
+    #[test]
+    fn includes_whales() {
+        let h = generate(200, 9);
+        assert!(h.iter().any(|j| j.model.name == "gpt2-7b" || j.model.name == "gpt2-2.7b"));
+    }
+}

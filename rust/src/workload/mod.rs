@@ -1,0 +1,77 @@
+//! Workload and trace generation (§V.A.b).
+//!
+//! * [`newworkload`] — the paper's *NewWorkload*: GPT-2 and BERT models of
+//!   different sizes and batch sizes, in 30- and 60-task queues.
+//! * [`philly`] — synthetic trace calibrated to the published Philly
+//!   (Microsoft ATC'19) distributions: demand heavily skewed to small jobs,
+//!   heavy-tailed durations.
+//! * [`helios`] — synthetic trace per the Helios (SenseTime SC'21)
+//!   characterization: "requires more GPUs and has longer runtime durations"
+//!   than Philly (the paper's own description).
+//! * [`trace`] — CSV-lite serialization so traces can be saved/replayed.
+//!
+//! All generators are seeded and deterministic.
+
+pub mod helios;
+pub mod newworkload;
+pub mod philly;
+pub mod trace;
+
+use crate::config::models::{model_by_name, ModelConfig};
+use crate::job::JobSpec;
+use crate::util::prng::Xoshiro256pp;
+
+/// Shared helpers for the trace generators.
+pub(crate) struct GenCtx {
+    pub rng: Xoshiro256pp,
+    pub next_id: u64,
+}
+
+impl GenCtx {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256pp::seed_from_u64(seed), next_id: 0 }
+    }
+
+    pub fn id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+}
+
+/// Resolve a model name, panicking with context (generator tables are
+/// compile-time constants, so a miss is a programming error).
+pub(crate) fn must_model(name: &str) -> ModelConfig {
+    model_by_name(name).unwrap_or_else(|| panic!("workload references unknown model {name}"))
+}
+
+/// Quick stats over a generated trace (used by tests and `frenzy trace`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStats {
+    pub n_jobs: usize,
+    pub span_s: f64,
+    pub mean_batch: f64,
+    pub mean_samples: f64,
+}
+
+pub fn trace_stats(jobs: &[JobSpec]) -> TraceStats {
+    let n = jobs.len().max(1);
+    TraceStats {
+        n_jobs: jobs.len(),
+        span_s: jobs.iter().map(|j| j.submit_time).fold(0.0, f64::max),
+        mean_batch: jobs.iter().map(|j| j.train.global_batch as f64).sum::<f64>() / n as f64,
+        mean_samples: jobs.iter().map(|j| j.total_samples as f64).sum::<f64>() / n as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_empty() {
+        let s = trace_stats(&[]);
+        assert_eq!(s.n_jobs, 0);
+        assert_eq!(s.span_s, 0.0);
+    }
+}

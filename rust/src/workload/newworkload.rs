@@ -1,0 +1,116 @@
+//! *NewWorkload* (§V.A.b): queues of GPT-2 and BERT training tasks "with
+//! different sizes and various batch sizes", used for the Fig 4 comparison
+//! against Opportunistic scheduling on the real 5-node testbed.
+//!
+//! 30- and 60-task queues arrive as a Poisson process; each task picks a
+//! model from a size-weighted mix (small models are more common, as in real
+//! clusters) and a batch size from {2,4,8,16,32}; its length is drawn
+//! log-normally and converted to a sample count via a reference throughput,
+//! so job durations land in the tens-of-minutes range the paper's testbed
+//! runs occupy.
+
+use super::{must_model, GenCtx};
+use crate::job::JobSpec;
+
+/// Model mix: (name, weight). Mid/small models dominate; a few 2.7B whales.
+const MODEL_MIX: &[(&str, f64)] = &[
+    ("gpt2-125m", 0.18),
+    ("gpt2-350m", 0.22),
+    ("gpt2-760m", 0.16),
+    ("gpt2-1.3b", 0.12),
+    ("gpt2-2.7b", 0.08),
+    ("bert-base", 0.14),
+    ("bert-large", 0.10),
+];
+
+const BATCHES: &[u32] = &[2, 4, 8, 16, 32];
+
+/// Mean inter-arrival time (s). 30 tasks ≈ one hour of submissions.
+const MEAN_INTERARRIVAL_S: f64 = 120.0;
+
+/// Reference throughput used to size jobs (samples/s on one A100-class GPU
+/// for a mid-size model, matching the perf model): job duration target ×
+/// this = total samples, so generated jobs really run for minutes-to-hours
+/// on the 11-GPU testbed and the queue builds up as in the paper's runs.
+const REF_SAMPLES_PER_SEC: f64 = 120.0;
+
+/// Generate an `n`-task NewWorkload queue.
+pub fn generate(n: usize, seed: u64) -> Vec<JobSpec> {
+    let mut ctx = GenCtx::new(seed);
+    let weights: Vec<f64> = MODEL_MIX.iter().map(|(_, w)| *w).collect();
+    let mut t = 0.0f64;
+    let mut jobs = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += ctx.rng.exp(1.0 / MEAN_INTERARRIVAL_S);
+        let (name, _) = MODEL_MIX[ctx.rng.weighted_index(&weights)];
+        let model = must_model(name);
+        let batch = *ctx.rng.choose(BATCHES);
+        // Target runtime: log-normal centered ~25 min, sd ~0.7 in log space,
+        // clamped to [5 min, 3 h].
+        let dur_s = ctx.rng.lognormal(7.3, 0.7).clamp(300.0, 10_800.0);
+        // Size-aware: bigger models process fewer samples/s; scale the
+        // sample budget so runtime stays in the target band on 1–8 GPUs.
+        let size_scale = (350.0e6 / model.param_count() as f64).clamp(0.02, 4.0);
+        let samples = (dur_s * REF_SAMPLES_PER_SEC * size_scale).max(100.0) as u64;
+        let id = ctx.id();
+        jobs.push(JobSpec::new(id, model, batch, samples, t));
+    }
+    jobs
+}
+
+/// The two queue lengths evaluated in Fig 4.
+pub fn queue_30(seed: u64) -> Vec<JobSpec> {
+    generate(30, seed)
+}
+
+pub fn queue_60(seed: u64) -> Vec<JobSpec> {
+    generate(60, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(queue_30(1).len(), 30);
+        assert_eq!(queue_60(1).len(), 60);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(20, 7);
+        let b = generate(20, 7);
+        let c = generate(20, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrival_times_increase() {
+        let jobs = generate(50, 3);
+        for w in jobs.windows(2) {
+            assert!(w[1].submit_time > w[0].submit_time);
+        }
+    }
+
+    #[test]
+    fn mixes_models_and_batches() {
+        let jobs = generate(60, 5);
+        let models: std::collections::HashSet<&str> =
+            jobs.iter().map(|j| j.model.name).collect();
+        assert!(models.len() >= 4, "expected a mixed queue, got {models:?}");
+        let batches: std::collections::HashSet<u32> =
+            jobs.iter().map(|j| j.train.global_batch).collect();
+        assert!(batches.len() >= 3);
+        assert!(jobs.iter().any(|j| j.model.name.starts_with("bert")));
+    }
+
+    #[test]
+    fn sample_budgets_positive_and_bounded() {
+        for j in generate(60, 11) {
+            assert!(j.total_samples >= 100);
+            assert!(j.total_samples < 20_000_000);
+        }
+    }
+}

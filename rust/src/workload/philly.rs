@@ -1,0 +1,98 @@
+//! Synthetic Philly-like trace (Microsoft, ATC'19 [5]).
+//!
+//! The real trace is proprietary-adjacent (released in aggregate form), so
+//! we generate a synthetic trace calibrated to the paper's published
+//! distributions (DESIGN.md §6):
+//!
+//! * **GPU demand**: dominated by 1-GPU jobs (~70 %), with 2/4/8-GPU jobs
+//!   making up most of the rest and a thin ≥16 tail. In our serverless
+//!   setting demand is *implied*: we map the demand class to model size ×
+//!   batch so that MARP's natural allocation lands in the same class.
+//! * **Durations**: heavy-tailed; the ATC'19 characterization shows medians
+//!   of minutes and a long tail of multi-hour jobs → log-normal with σ≈1.4
+//!   plus a Pareto tail.
+//! * **Arrivals**: Poisson (the diurnal pattern is irrelevant for the
+//!   scheduler comparison; both schedulers see the identical trace).
+
+use super::{must_model, GenCtx};
+use crate::job::JobSpec;
+
+/// Demand classes: (weight, model candidates, batch candidates).
+/// Class 0 ≈ 1 GPU, class 1 ≈ 2 GPUs, class 2 ≈ 4 GPUs, class 3 ≈ 8 GPUs.
+const CLASSES: &[(f64, &[&str], &[u32])] = &[
+    (0.70, &["gpt2-125m", "gpt2-350m", "bert-base"], &[2, 4, 8]),
+    (0.15, &["gpt2-350m", "gpt2-760m", "bert-large"], &[8, 16]),
+    (0.10, &["gpt2-760m", "gpt2-1.3b"], &[16, 32]),
+    (0.05, &["gpt2-1.3b", "gpt2-2.7b"], &[16, 32]),
+];
+
+/// Mean inter-arrival (s): Philly is a busy multi-tenant cluster.
+const MEAN_INTERARRIVAL_S: f64 = 90.0;
+
+const REF_SAMPLES_PER_SEC: f64 = 120.0;
+
+/// Generate an `n`-job Philly-like trace.
+pub fn generate(n: usize, seed: u64) -> Vec<JobSpec> {
+    let mut ctx = GenCtx::new(seed ^ 0x9A11_7EA5);
+    generate_inner(n, &mut ctx)
+}
+
+fn generate_inner(n: usize, ctx: &mut GenCtx) -> Vec<JobSpec> {
+    let weights: Vec<f64> = CLASSES.iter().map(|c| c.0).collect();
+    let mut t = 0.0f64;
+    let mut jobs = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += ctx.rng.exp(1.0 / MEAN_INTERARRIVAL_S);
+        let class = &CLASSES[ctx.rng.weighted_index(&weights)];
+        let model = must_model(*ctx.rng.choose(class.1));
+        let batch = *ctx.rng.choose(class.2);
+        // Heavy tail: 85 % log-normal body, 15 % Pareto tail.
+        let dur_s = if ctx.rng.chance(0.85) {
+            ctx.rng.lognormal(6.6, 1.4).clamp(60.0, 21_600.0)
+        } else {
+            ctx.rng.pareto(1800.0, 1.5).min(43_200.0)
+        };
+        let size_scale = (350.0e6 / model.param_count() as f64).clamp(0.02, 4.0);
+        let samples = (dur_s * REF_SAMPLES_PER_SEC * size_scale).max(50.0) as u64;
+        let id = ctx.id();
+        jobs.push(JobSpec::new(id, model, batch, samples, t));
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let a = generate(100, 42);
+        let b = generate(100, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 100);
+    }
+
+    #[test]
+    fn small_jobs_dominate() {
+        let jobs = generate(400, 9);
+        let small = jobs
+            .iter()
+            .filter(|j| j.model.param_count() < 400_000_000 && j.train.global_batch <= 8)
+            .count();
+        assert!(
+            small as f64 > 0.5 * jobs.len() as f64,
+            "Philly must be small-job heavy: {small}/{}",
+            jobs.len()
+        );
+    }
+
+    #[test]
+    fn durations_heavy_tailed() {
+        let jobs = generate(500, 17);
+        let mut sizes: Vec<f64> = jobs.iter().map(|j| j.total_samples as f64).collect();
+        sizes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = sizes[sizes.len() / 2];
+        let p99 = sizes[(sizes.len() as f64 * 0.99) as usize];
+        assert!(p99 > 5.0 * p50, "p50={p50} p99={p99}");
+    }
+}

@@ -1,0 +1,87 @@
+//! Trace (de)serialization: a CSV-lite format so generated traces can be
+//! saved, inspected, and replayed byte-identically.
+//!
+//! ```text
+//! # id,model,batch,total_samples,submit_time
+//! 0,gpt2-350m,8,120000,14.2
+//! ```
+
+use crate::config::models::model_by_name;
+use crate::job::JobSpec;
+use anyhow::{anyhow, Context, Result};
+
+/// Render a trace to CSV-lite text.
+pub fn to_csv(jobs: &[JobSpec]) -> String {
+    let mut out = String::from("# id,model,batch,total_samples,submit_time\n");
+    for j in jobs {
+        out.push_str(&format!(
+            "{},{},{},{},{}\n",
+            j.id, j.model.name, j.train.global_batch, j.total_samples, j.submit_time
+        ));
+    }
+    out
+}
+
+/// Parse a trace from CSV-lite text.
+pub fn from_csv(text: &str) -> Result<Vec<JobSpec>> {
+    let mut jobs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let ctx = || format!("trace line {}", lineno + 1);
+        let parts: Vec<&str> = line.split(',').collect();
+        if parts.len() != 5 {
+            return Err(anyhow!("{}: expected 5 fields, got {}", ctx(), parts.len()));
+        }
+        let id: u64 = parts[0].trim().parse().with_context(ctx)?;
+        let model = model_by_name(parts[1].trim())
+            .ok_or_else(|| anyhow!("{}: unknown model '{}'", ctx(), parts[1]))?;
+        let batch: u32 = parts[2].trim().parse().with_context(ctx)?;
+        let samples: u64 = parts[3].trim().parse().with_context(ctx)?;
+        let submit: f64 = parts[4].trim().parse().with_context(ctx)?;
+        jobs.push(JobSpec::new(id, model, batch, samples, submit));
+    }
+    Ok(jobs)
+}
+
+/// Save a trace to a file.
+pub fn save(path: &str, jobs: &[JobSpec]) -> Result<()> {
+    crate::util::write_file(path, &to_csv(jobs))?;
+    Ok(())
+}
+
+/// Load a trace from a file.
+pub fn load(path: &str) -> Result<Vec<JobSpec>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    from_csv(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::newworkload;
+
+    #[test]
+    fn roundtrip() {
+        let jobs = newworkload::generate(25, 3);
+        let text = to_csv(&jobs);
+        let back = from_csv(&text).unwrap();
+        assert_eq!(back, jobs);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(from_csv("1,gpt2-350m,8,100").is_err()); // 4 fields
+        assert!(from_csv("1,unknown-model,8,100,0.0").is_err());
+        assert!(from_csv("x,gpt2-350m,8,100,0.0").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let jobs = from_csv("# header\n\n0,gpt2-350m,8,100,0.5\n").unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].train.global_batch, 8);
+    }
+}

@@ -1,0 +1,90 @@
+//! Integration: the PJRT runtime executing the real AOT artifacts.
+//!
+//! These tests require `make artifacts` to have produced `artifacts/`; when
+//! absent they skip (printing why) so `cargo test` stays usable before the
+//! python build step. CI order: `make artifacts` → `cargo test`.
+
+use frenzy::runtime::{synth_tokens, Manifest, Runtime};
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let dir = frenzy::util::repo_path("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn loads_compiles_and_trains_tiny_model() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let meta = manifest.model("gpt2-tiny").expect("tiny model in manifest");
+    let mut rt = Runtime::new().expect("pjrt cpu client");
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    let mut session = rt.start_session(meta).expect("session");
+    let losses = session.run(12).expect("12 steps");
+    assert_eq!(losses.len(), 12);
+    for l in &losses {
+        assert!(l.is_finite(), "loss must be finite: {losses:?}");
+    }
+    // Training on the deterministic stream must make progress.
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss should decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn rust_losses_match_python_oracle() {
+    // THE cross-language correctness check: the python reference (same
+    // tokens, same init seed) recorded its first losses in the manifest;
+    // the rust PJRT execution must reproduce them within tolerance.
+    let Some(manifest) = manifest_or_skip() else { return };
+    for meta in manifest.models.values() {
+        if meta.oracle_losses.is_empty() {
+            continue;
+        }
+        let mut rt = Runtime::new().expect("client");
+        let mut session = rt.start_session(meta).expect("session");
+        session.run(meta.oracle_losses.len() as u64).expect("steps");
+        session.check_oracle().unwrap_or_else(|e| panic!("{}: {e:#}", meta.name));
+    }
+}
+
+#[test]
+fn state_vector_has_declared_length_and_changes() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let meta = manifest.model("gpt2-tiny").expect("tiny");
+    let mut rt = Runtime::new().expect("client");
+    let mut session = rt.start_session(meta).expect("session");
+    let s0 = session.state_vec().expect("state");
+    assert_eq!(s0.len(), meta.state_len);
+    session.step().expect("step");
+    let s1 = session.state_vec().expect("state");
+    let changed = s0.iter().zip(&s1).filter(|(a, b)| a != b).count();
+    assert!(
+        changed > meta.param_count / 2,
+        "most parameters should move in one Adam step (changed {changed})"
+    );
+}
+
+#[test]
+fn deterministic_across_sessions() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let meta = manifest.model("gpt2-tiny").expect("tiny");
+    let mut rt = Runtime::new().expect("client");
+    let mut a = rt.start_session(meta).expect("session a");
+    let mut b = rt.start_session(meta).expect("session b");
+    let la = a.run(5).expect("a");
+    let lb = b.run(5).expect("b");
+    assert_eq!(la, lb, "init + data are deterministic, so losses must match");
+}
+
+#[test]
+fn synth_tokens_matches_python_formula_snapshot() {
+    // Golden values mirrored in python/tests/test_data.py — keep in sync.
+    let toks = synth_tokens(2, 4, 97, 5);
+    assert_eq!(toks, vec![85, 1, 14, 27, 92, 8, 21, 34]);
+}

@@ -1,0 +1,167 @@
+//! Integration: scheduler behaviour on the paper's topologies.
+
+use frenzy::cluster::{ClusterState, Orchestrator};
+use frenzy::config::models::model_by_name;
+use frenzy::config::{real_testbed, sia_sim, GIB};
+use frenzy::job::JobSpec;
+use frenzy::marp::Marp;
+use frenzy::sched::{has::Has, opportunistic::Opportunistic, sia::Sia, PendingJob, Scheduler};
+
+fn pending(id: u64, model: &str, batch: u32) -> PendingJob {
+    PendingJob {
+        spec: JobSpec::new(id, model_by_name(model).unwrap(), batch, 10_000, 0.0),
+        attempts: 0,
+    }
+}
+
+#[test]
+fn has_best_fit_preserves_big_gpus_for_big_jobs() {
+    // Two 1-GPU-class plans placed by Algorithm 1 must take the 40G cards
+    // (best fit), so that a following 7B job still finds its 80G (or
+    // 8×40G-equivalent) resources free.
+    use frenzy::marp::ResourcePlan;
+    use frenzy::memory::Parallelism;
+    let spec = real_testbed();
+    let mut orch = Orchestrator::new(&spec);
+    let small_plan = ResourcePlan {
+        par: Parallelism::new(1, 1),
+        n_gpus: 1,
+        min_gpu_mem: 20 * GIB,
+        predicted_bytes: 18 * GIB,
+        est_samples_per_sec: 1.0,
+        est_efficiency: 1.0,
+        score: 1.0,
+    };
+    for job in [1u64, 2] {
+        let mut work = 0;
+        let (_, mut alloc) =
+            Has::allocate_one(std::slice::from_ref(&small_plan), &orch.snapshot(), &mut work)
+                .expect("place small");
+        alloc.job = job;
+        let node = alloc.parts[0].0;
+        assert_eq!(
+            orch.snapshot().nodes[node].gpu.mem_bytes,
+            40 * GIB,
+            "small job must take a 40G card, got {alloc:?}"
+        );
+        orch.allocate(alloc).unwrap();
+    }
+
+    // The 7B job now arrives; the 80G pool is untouched, so it schedules.
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let round2 = has.schedule(&[pending(3, "gpt2-7b", 2)], &orch.snapshot(), 1.0);
+    assert_eq!(round2.decisions.len(), 1, "7B must still fit");
+    let d2 = &round2.decisions[0];
+    assert!(!d2.will_oom);
+    assert!(d2.gpu.mem_bytes >= 40 * GIB);
+    orch.allocate(d2.alloc.clone()).unwrap();
+    assert!(orch.check_conservation());
+}
+
+#[test]
+fn opportunistic_grabs_fast_nodes_first_and_fragments() {
+    let spec = sia_sim();
+    let mut opp = Opportunistic::new(&spec);
+    let snap = ClusterState::from_spec(&spec);
+    // Four small jobs: all land on the A100 nodes, leaving 2080Tis idle.
+    let jobs: Vec<PendingJob> = (0..4).map(|i| pending(i, "gpt2-125m", 4)).collect();
+    let round = opp.schedule(&jobs, &snap, 0.0);
+    assert_eq!(round.decisions.len(), 4);
+    for d in &round.decisions {
+        assert_eq!(d.gpu.name, "A100-40G", "fastest-first policy");
+    }
+}
+
+#[test]
+fn sia_allocations_feasible_under_pressure() {
+    let spec = sia_sim();
+    let mut sia = Sia::new(&spec);
+    sia.node_limit = 500_000;
+    let snap = ClusterState::from_spec(&spec);
+    let jobs: Vec<PendingJob> = (0..20)
+        .map(|i| {
+            let m = ["gpt2-125m", "gpt2-350m", "gpt2-760m", "gpt2-1.3b"][i as usize % 4];
+            pending(i, m, 8)
+        })
+        .collect();
+    let round = sia.schedule(&jobs, &snap, 0.0);
+    assert!(!round.decisions.is_empty());
+    let mut orch = Orchestrator::new(&spec);
+    for d in &round.decisions {
+        orch.allocate(d.alloc.clone()).expect("sia must respect capacity");
+    }
+    assert!(orch.check_conservation());
+}
+
+#[test]
+fn all_schedulers_handle_empty_and_full_cluster() {
+    let spec = real_testbed();
+    let empty_snap = {
+        let mut s = ClusterState::from_spec(&spec);
+        for n in &mut s.nodes {
+            n.idle = 0;
+        }
+        s
+    };
+    let jobs = vec![pending(1, "gpt2-350m", 8)];
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let mut opp = Opportunistic::new(&spec);
+    let mut sia = Sia::new(&spec);
+    for sched in [&mut has as &mut dyn Scheduler, &mut opp, &mut sia] {
+        assert!(sched.schedule(&[], &ClusterState::from_spec(&spec), 0.0).decisions.is_empty());
+        assert!(
+            sched.schedule(&jobs, &empty_snap, 0.0).decisions.is_empty(),
+            "{}: nothing to give",
+            sched.name()
+        );
+    }
+}
+
+#[test]
+fn paper_example_job_2_32_prefers_node_3_40_over_6_80() {
+    // §IV.B: "for Job(2,32), allocating it to Node(3,40) is more efficient
+    // than Node(6,80)". Build exactly that cluster and check.
+    use frenzy::config::cluster_file::parse_cluster;
+    let spec = parse_cluster(
+        "cluster paper-example\nnode A100-40G x3 pcie\nnode A100-80G x6 pcie\n",
+    )
+    .unwrap();
+    let snap = ClusterState::from_spec(&spec);
+    // A job whose plan needs 2 GPUs of ≥32G: gpt2-1.3b batch 8 gives d=2,t=1
+    // ~27G requirement... use marp and grab a 2-GPU plan requiring ≤40G.
+    let marp = Marp::with_defaults(spec.clone());
+    let m = model_by_name("gpt2-1.3b").unwrap();
+    let plans = marp.plans(&m, &frenzy::memory::TrainConfig { global_batch: 2 });
+    let plan = plans
+        .iter()
+        .find(|p| p.n_gpus <= 3 && p.min_gpu_mem <= 40 * GIB)
+        .expect("a ≤3-GPU 40G-class plan exists");
+    let mut work = 0;
+    let (_, alloc) =
+        Has::allocate_one(std::slice::from_ref(plan), &snap, &mut work).expect("place");
+    // All parts must sit on node 0 (the 3×40G node), not the 80G node.
+    for (node, _) in &alloc.parts {
+        assert_eq!(*node, 0, "best-fit must choose the 40G node: {alloc:?}");
+    }
+}
+
+#[test]
+fn paper_example_job_4_35_prefers_single_node() {
+    // §IV.B: "For Job(4,35), it is more appropriate to schedule it on
+    // Node(4,40) rather than four Node(1,40) units."
+    use frenzy::config::cluster_file::parse_cluster;
+    let spec = parse_cluster(
+        "cluster paper-example2\nnode A100-40G x1 pcie\nnode A100-40G x1 pcie\nnode A100-40G x1 pcie\nnode A100-40G x1 pcie\nnode A100-40G x4 nvlink\n",
+    )
+    .unwrap();
+    let snap = ClusterState::from_spec(&spec);
+    let marp = Marp::with_defaults(spec.clone());
+    let m = model_by_name("gpt2-2.7b").unwrap();
+    let plans = marp.plans(&m, &frenzy::memory::TrainConfig { global_batch: 4 });
+    let plan = plans.iter().find(|p| p.n_gpus == 4).expect("4-GPU plan");
+    let mut work = 0;
+    let (_, alloc) =
+        Has::allocate_one(std::slice::from_ref(plan), &snap, &mut work).expect("place");
+    assert_eq!(alloc.parts.len(), 1, "must use the single 4-GPU node: {alloc:?}");
+    assert_eq!(alloc.parts[0].0, 4);
+}

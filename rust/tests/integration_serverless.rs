@@ -1,0 +1,148 @@
+//! Integration: the live serverless coordinator + HTTP API (control plane
+//! with the training stub; the PJRT-backed path is exercised by the
+//! e2e_train example and the runtime integration tests).
+
+use frenzy::config::{real_testbed, sia_sim};
+use frenzy::job::JobState;
+use frenzy::serverless::http::{parse_request, route, Request};
+use frenzy::serverless::{spawn, CoordinatorConfig, SubmitRequest};
+use std::io::Write;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn cfg_stub() -> CoordinatorConfig {
+    CoordinatorConfig { execute_training: false, ..CoordinatorConfig::default() }
+}
+
+#[test]
+fn fifty_jobs_drain_on_sia_sim() {
+    let (h, _j) = spawn(sia_sim(), cfg_stub());
+    let mut ids = Vec::new();
+    for i in 0..50u32 {
+        let model = ["gpt2-125m", "gpt2-350m", "gpt2-760m", "bert-base"][i as usize % 4];
+        ids.push(
+            h.submit(SubmitRequest {
+                model: model.into(),
+                global_batch: 4 << (i % 3),
+                total_samples: 100 + i as u64,
+            })
+            .unwrap(),
+        );
+    }
+    h.drain().unwrap();
+    for id in ids {
+        let st = h.status(id).unwrap().unwrap();
+        assert_eq!(st.state, JobState::Completed, "job {id}");
+    }
+    let (total, idle, _) = h.cluster_info().unwrap();
+    assert_eq!(total, idle);
+    let report = h.report().unwrap();
+    assert_eq!(report.n_completed, 50);
+    h.shutdown();
+}
+
+#[test]
+fn http_full_cycle_over_tcp() {
+    let (h, _j) = spawn(real_testbed(), cfg_stub());
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = frenzy::serverless::http::serve(h.clone(), "127.0.0.1:0", stop.clone()).unwrap();
+
+    let post = |body: &str| -> (u16, String) {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        write!(s, "POST /jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}", body.len(), body)
+            .unwrap();
+        read_response(s)
+    };
+    let get = |path: &str| -> (u16, String) {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\n\r\n").unwrap();
+        read_response(s)
+    };
+
+    let (code, body) = get("/healthz");
+    assert_eq!(code, 200, "{body}");
+
+    let (code, body) = post(r#"{"model":"gpt2-760m","batch":8,"samples":200}"#);
+    assert_eq!(code, 200, "{body}");
+    let id = frenzy::util::json::parse(&body).unwrap().get("job_id").unwrap().as_u64().unwrap();
+
+    h.drain().unwrap();
+    let (code, body) = get(&format!("/jobs/{id}"));
+    assert_eq!(code, 200);
+    assert!(body.contains("completed"), "{body}");
+
+    let (code, body) = get("/cluster");
+    assert_eq!(code, 200);
+    assert!(body.contains("idle_gpus"), "{body}");
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.shutdown();
+}
+
+fn read_response(mut s: std::net::TcpStream) -> (u16, String) {
+    use std::io::Read;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let code: u16 = buf.split_whitespace().nth(1).unwrap_or("0").parse().unwrap_or(0);
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (code, body)
+}
+
+#[test]
+fn http_parser_handles_pipelined_headers() {
+    let raw = "GET /cluster HTTP/1.1\r\nHost: x\r\nX-Weird: a:b:c\r\nContent-Length: 0\r\n\r\n";
+    let mut r = std::io::BufReader::new(raw.as_bytes());
+    let req = parse_request(&mut r).unwrap();
+    assert_eq!(req.method, "GET");
+    assert_eq!(req.path, "/cluster");
+    assert!(req.body.is_empty());
+}
+
+#[test]
+fn concurrent_submitters() {
+    let (h, _j) = spawn(sia_sim(), cfg_stub());
+    let mut threads = Vec::new();
+    for t in 0..4 {
+        let h2 = h.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut ids = Vec::new();
+            for i in 0..10u64 {
+                ids.push(
+                    h2.submit(SubmitRequest {
+                        model: "gpt2-350m".into(),
+                        global_batch: 8,
+                        total_samples: 64 + t * 10 + i,
+                    })
+                    .unwrap(),
+                );
+            }
+            ids
+        }));
+    }
+    let all: Vec<u64> = threads.into_iter().flat_map(|t| t.join().unwrap()).collect();
+    assert_eq!(all.len(), 40);
+    let mut dedup = all.clone();
+    dedup.sort_unstable();
+    dedup.dedup();
+    assert_eq!(dedup.len(), 40, "job ids must be unique");
+    h.drain().unwrap();
+    let report = h.report().unwrap();
+    assert_eq!(report.n_completed, 40);
+    h.shutdown();
+}
+
+#[test]
+fn route_rejects_garbage_without_crashing_coordinator() {
+    let (h, _j) = spawn(real_testbed(), cfg_stub());
+    for body in ["", "{}", "[1,2]", r#"{"model":123}"#, r#"{"model":"gpt2-350m","batch":0,"samples":0}"#]
+    {
+        let (code, _) = route(
+            &h,
+            &Request { method: "POST".into(), path: "/jobs".into(), body: body.into() },
+        );
+        assert_eq!(code, 400, "body: {body}");
+    }
+    // Coordinator still alive.
+    assert!(h.cluster_info().is_ok());
+    h.shutdown();
+}

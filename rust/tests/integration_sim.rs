@@ -1,0 +1,114 @@
+//! Integration: simulator × schedulers × workloads, cross-module invariants.
+
+use frenzy::config::{real_testbed, sia_sim};
+use frenzy::marp::Marp;
+use frenzy::sched::{has::Has, opportunistic::Opportunistic, sia::Sia, Scheduler};
+use frenzy::sim::{simulate, SimConfig, Simulator};
+use frenzy::workload::{helios, newworkload, philly};
+
+#[test]
+fn every_scheduler_terminates_on_newworkload() {
+    let spec = real_testbed();
+    let trace = newworkload::generate(30, 11);
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let mut opp = Opportunistic::new(&spec);
+    let mut sia = Sia::new(&spec);
+    sia.node_limit = 100_000;
+    let scheds: Vec<&mut dyn Scheduler> = vec![&mut has, &mut opp, &mut sia];
+    for sched in scheds {
+        let name = sched.name();
+        let report = simulate(&spec, sched, &trace, SimConfig::default(), "nw30");
+        assert_eq!(
+            report.n_completed + report.n_rejected,
+            30,
+            "{name}: every job must reach a terminal state"
+        );
+        assert!(report.n_completed >= 25, "{name}: most jobs should complete");
+        assert!(report.makespan_s > 0.0);
+    }
+}
+
+#[test]
+fn sim_conserves_resources_across_all_traces() {
+    for (name, trace) in [
+        ("nw", newworkload::generate(40, 3)),
+        ("philly", philly::generate(60, 3)),
+        ("helios", helios::generate(40, 3)),
+    ] {
+        let spec = sia_sim();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut sim = Simulator::new(&spec, &mut has, SimConfig::default());
+        sim.submit_all(&trace);
+        let report = sim.run(name);
+        assert!(sim.conservation_ok(), "{name}: ledger conservation");
+        assert_eq!(
+            sim.cluster_state().idle_gpus(),
+            sim.cluster_state().total_gpus(),
+            "{name}: all GPUs returned"
+        );
+        assert_eq!(report.n_completed + report.n_rejected, trace.len());
+    }
+}
+
+#[test]
+fn outcomes_have_sane_timings() {
+    let spec = real_testbed();
+    let trace = newworkload::generate(25, 5);
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let mut sim = Simulator::new(&spec, &mut has, SimConfig::default());
+    sim.submit_all(&trace);
+    let _ = sim.run("nw");
+    for o in sim.outcomes() {
+        assert!(o.start_time >= o.submit_time, "{}: starts after submit", o.name);
+        assert!(o.finish_time > o.start_time, "{}: finishes after start", o.name);
+        assert!(o.gpus_used >= 1);
+        assert!(o.samples_per_sec > 0.0);
+    }
+}
+
+#[test]
+fn heavier_load_means_longer_queues() {
+    let spec = real_testbed();
+    let run = |n: usize| {
+        let trace = newworkload::generate(n, 13);
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        simulate(&spec, &mut has, &trace, SimConfig::default(), "nw")
+    };
+    let light = run(10);
+    let heavy = run(60);
+    assert!(
+        heavy.avg_queue_s >= light.avg_queue_s,
+        "60-task queue time {:.1}s must be >= 10-task {:.1}s",
+        heavy.avg_queue_s,
+        light.avg_queue_s
+    );
+}
+
+#[test]
+fn frenzy_has_zero_oom_retries() {
+    // Memory-awareness is the whole point: HAS placements never OOM.
+    for seed in [1u64, 7, 23] {
+        let spec = real_testbed();
+        let trace = newworkload::generate(40, seed);
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let report = simulate(&spec, &mut has, &trace, SimConfig::default(), "nw");
+        assert_eq!(report.total_oom_retries, 0, "seed {seed}");
+    }
+}
+
+#[test]
+fn sched_overhead_charged_into_queue_time() {
+    // The same trace under a scheduler with huge per-unit cost must show
+    // longer queues — validates the overhead-injection path Fig 5 relies on.
+    let spec = sia_sim();
+    let trace = philly::generate(60, 29);
+    let run = |unit: f64| {
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let cfg = SimConfig { sched_work_unit_s: unit, ..SimConfig::default() };
+        simulate(&spec, &mut has, &trace, cfg, "ph")
+    };
+    let cheap = run(0.0);
+    let pricey = run(1.0); // 1 s per work unit — absurd on purpose
+    assert!(pricey.avg_queue_s > cheap.avg_queue_s);
+    assert!(pricey.avg_jct_s > cheap.avg_jct_s);
+}

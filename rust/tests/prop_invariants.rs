@@ -1,0 +1,251 @@
+//! Property-based invariants over MARP, HAS, the orchestrator, the ILP
+//! solver, and the simulator (using the in-house prop runner).
+
+use frenzy::cluster::{ClusterState, Orchestrator};
+use frenzy::config::models::model_zoo;
+use frenzy::config::{gpu_catalog, ClusterSpec, LinkKind, NodeSpec};
+use frenzy::ilp;
+use frenzy::job::JobSpec;
+use frenzy::marp::Marp;
+use frenzy::memory::{
+    activation_bytes_per_gpu, exact::exact_peak_bytes, marp_peak_bytes, static_bytes_per_gpu,
+    Parallelism, TrainConfig,
+};
+use frenzy::sched::{has::Has, PendingJob, Scheduler};
+use frenzy::sim::{simulate, SimConfig};
+use frenzy::util::prop::{Gen, Runner};
+
+fn arb_cluster(g: &mut Gen) -> ClusterSpec {
+    let catalog = gpu_catalog();
+    let n_nodes = g.usize_in(1, 6);
+    let nodes: Vec<NodeSpec> = (0..n_nodes)
+        .map(|_| NodeSpec {
+            gpu: g.pick(&catalog).clone(),
+            count: g.usize_in(1, 8) as u32,
+            link: if g.bool() { LinkKind::NvLink } else { LinkKind::Pcie },
+        })
+        .collect();
+    ClusterSpec { name: "arb".into(), nodes, inter_node_gbps: g.f64_in(5.0, 50.0) }
+}
+
+fn arb_par(g: &mut Gen) -> Parallelism {
+    Parallelism::new(1 << g.usize_in(0, 4), 1 << g.usize_in(0, 3))
+}
+
+#[test]
+fn prop_memory_monotone_in_d_and_t() {
+    Runner::new("memory monotone", 0xA11CE, 300).run(|g| {
+        let zoo = model_zoo();
+        let model = g.pick(&zoo).clone();
+        let cfg = TrainConfig { global_batch: (1 << g.usize_in(0, 6)) as u32 };
+        let par = arb_par(g);
+        let par_d2 = Parallelism::new(par.d * 2, par.t);
+        let par_t2 = Parallelism::new(par.d, par.t * 2);
+        let a = activation_bytes_per_gpu(&model, &cfg, par);
+        if activation_bytes_per_gpu(&model, &cfg, par_d2) > a + 1.0 {
+            return Err(format!("activations grew with d: {model:?} {par:?}"));
+        }
+        if static_bytes_per_gpu(&model, par_t2) > static_bytes_per_gpu(&model, par) {
+            return Err("static grew with t".into());
+        }
+        if marp_peak_bytes(&model, &cfg, par_t2) > marp_peak_bytes(&model, &cfg, par) {
+            return Err(format!("peak grew with t: {} {par:?}", model.name));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exact_always_exceeds_closed_form() {
+    Runner::new("exact > closed form", 0xBEEF, 300).run(|g| {
+        let zoo = model_zoo();
+        let model = g.pick(&zoo).clone();
+        let cfg = TrainConfig { global_batch: (1 << g.usize_in(0, 5)) as u32 };
+        let par = arb_par(g);
+        let pred = marp_peak_bytes(&model, &cfg, par);
+        let exact = exact_peak_bytes(&model, &cfg, par);
+        if exact <= pred {
+            return Err(format!(
+                "exact {exact} <= predicted {pred} for {} b={} {par:?}",
+                model.name, cfg.global_batch
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_marp_plans_fit_some_cluster_gpu() {
+    Runner::new("plans fit cluster", 0xC0FFEE, 120).run(|g| {
+        let cluster = arb_cluster(g);
+        let max_mem = cluster.max_gpu_mem();
+        let marp = Marp::with_defaults(cluster.clone());
+        let zoo = model_zoo();
+        let model = g.pick(&zoo).clone();
+        let cfg = TrainConfig { global_batch: (1 << g.usize_in(0, 5)) as u32 };
+        for p in marp.plans(&model, &cfg) {
+            if p.min_gpu_mem > max_mem {
+                return Err(format!("plan needs {} > cluster max {max_mem}", p.min_gpu_mem));
+            }
+            if p.n_gpus == 0 || p.n_gpus > cluster.total_gpus() {
+                return Err(format!("plan gpus {} out of range", p.n_gpus));
+            }
+            if p.n_gpus != p.par.gpus() {
+                return Err("n_gpus != d*t".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_has_never_overallocates_and_covers_request() {
+    Runner::new("HAS allocation sound", 0xD00D, 120).run(|g| {
+        let cluster = arb_cluster(g);
+        let marp = Marp::with_defaults(cluster.clone());
+        let mut has = Has::new(marp);
+        let zoo = model_zoo();
+        let n_jobs = g.usize_in(1, 10);
+        let pending: Vec<PendingJob> = (0..n_jobs)
+            .map(|i| PendingJob {
+                spec: JobSpec::new(
+                    i as u64,
+                    g.pick(&zoo).clone(),
+                    (1 << g.usize_in(0, 5)) as u32,
+                    1000,
+                    0.0,
+                ),
+                attempts: 0,
+            })
+            .collect();
+        let snap = ClusterState::from_spec(&cluster);
+        let round = has.schedule(&pending, &snap, 0.0);
+        let mut orch = Orchestrator::new(&cluster);
+        for d in &round.decisions {
+            if d.will_oom {
+                return Err(format!("HAS produced an OOM placement: {:?}", d.job));
+            }
+            orch.allocate(d.alloc.clone())
+                .map_err(|e| format!("overallocation: {e}"))?;
+        }
+        if !orch.check_conservation() {
+            return Err("conservation violated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_has_placements_never_exceed_measured_memory() {
+    // Even against the EXACT accounting (not just the prediction), a HAS
+    // placement must fit — MARP's margins absorb the closed-form error.
+    Runner::new("HAS no-OOM vs exact", 0xF001, 150).run(|g| {
+        let cluster = arb_cluster(g);
+        let marp = Marp::with_defaults(cluster.clone());
+        let zoo = model_zoo();
+        let model = g.pick(&zoo).clone();
+        let cfg = TrainConfig { global_batch: (1 << g.usize_in(0, 5)) as u32 };
+        let plans = marp.plans(&model, &cfg);
+        let snap = ClusterState::from_spec(&cluster);
+        let mut work = 0;
+        if let Some((plan, alloc)) = Has::allocate_one(&plans, &snap, &mut work) {
+            let min_mem = alloc
+                .parts
+                .iter()
+                .map(|(n, _)| snap.nodes[*n].gpu.mem_bytes)
+                .min()
+                .unwrap();
+            let measured = exact_peak_bytes(&model, &cfg, plan.par);
+            if measured > min_mem {
+                return Err(format!(
+                    "{} b={} d={} t={}: measured {measured} > gpu {min_mem}",
+                    model.name, cfg.global_batch, plan.par.d, plan.par.t
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ilp_solutions_feasible_and_not_worse_than_greedy() {
+    Runner::new("ilp sound", 0x111, 80).run(|g| {
+        let n_groups = g.usize_in(1, 8);
+        let dims = g.usize_in(1, 3);
+        let capacity: Vec<u32> = (0..dims).map(|_| g.usize_in(1, 20) as u32).collect();
+        let mut items = Vec::new();
+        for group in 0..n_groups {
+            for _ in 0..g.usize_in(1, 4) {
+                items.push(ilp::Item {
+                    group,
+                    value: g.f64_in(0.1, 10.0),
+                    usage: (0..dims).map(|_| g.usize_in(0, 8) as u32).collect(),
+                });
+            }
+        }
+        let p = ilp::Problem { n_groups, capacity, items };
+        p.validate().map_err(|e| e)?;
+        let sol = ilp::solve(&p, 2_000_000);
+        if !p.feasible(&sol.chosen) {
+            return Err("infeasible solution".into());
+        }
+        // Greedy lower bound: take each group's best-fitting item in order.
+        let mut used = vec![0u32; p.capacity.len()];
+        let mut greedy = 0.0;
+        for gi in 0..p.n_groups {
+            let mut best: Option<(usize, f64)> = None;
+            for (i, it) in p.items.iter().enumerate().filter(|(_, it)| it.group == gi) {
+                let fits = it
+                    .usage
+                    .iter()
+                    .zip(&p.capacity)
+                    .enumerate()
+                    .all(|(d2, (u, c))| used[d2] + u <= *c);
+                if fits && best.map(|(_, v)| it.value > v).unwrap_or(true) {
+                    best = Some((i, it.value));
+                }
+            }
+            if let Some((i, v)) = best {
+                for (d2, u) in p.items[i].usage.iter().enumerate() {
+                    used[d2] += u;
+                }
+                greedy += v;
+            }
+        }
+        if sol.value + 1e-9 < greedy {
+            return Err(format!("B&B {:.4} worse than greedy {:.4}", sol.value, greedy));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_terminates_with_conservation() {
+    Runner::new("sim conservation", 0x51AB, 25).run(|g| {
+        let cluster = arb_cluster(g);
+        // Ensure at least one node can host the smallest model, else
+        // everything is rejected (also fine, but less interesting).
+        let zoo = model_zoo();
+        let n = g.usize_in(2, 15);
+        let jobs: Vec<JobSpec> = (0..n)
+            .map(|i| {
+                JobSpec::new(
+                    i as u64,
+                    g.pick(&zoo).clone(),
+                    (1 << g.usize_in(0, 4)) as u32,
+                    g.usize_in(100, 50_000) as u64,
+                    g.f64_in(0.0, 600.0),
+                )
+            })
+            .collect();
+        let mut has = Has::new(Marp::with_defaults(cluster.clone()));
+        let report = simulate(&cluster, &mut has, &jobs, SimConfig::default(), "prop");
+        if report.n_completed + report.n_rejected != n {
+            return Err(format!(
+                "{} completed + {} rejected != {n}",
+                report.n_completed, report.n_rejected
+            ));
+        }
+        Ok(())
+    });
+}
