@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
         execute_training: true,
         artifacts_dir: artifacts,
         runtime_model: "gpt2-tiny".into(),
+        ..CoordinatorConfig::default()
     };
     let (handle, _join) = spawn(real_testbed(), cfg);
     let mut ids = Vec::new();

@@ -1,39 +1,52 @@
-//! Quickstart: the serverless contract in one file.
+//! Quickstart: the serverless contract in one file, on the v1 API.
 //!
 //! Submit a model + batch size — no GPU counts — and watch MARP produce
-//! ranked resource plans and HAS place the job on the heterogeneous cluster.
+//! ranked resource plans (via the `POST /v1/predict` dry-run endpoint) and
+//! HAS place the job on the heterogeneous cluster.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use frenzy::cluster::ClusterState;
-use frenzy::config::{models::model_by_name, real_testbed};
-use frenzy::marp::Marp;
-use frenzy::memory::TrainConfig;
+use frenzy::config::real_testbed;
 use frenzy::sched::has::Has;
+use frenzy::serverless::client::FrenzyClient;
+use frenzy::serverless::{server, spawn, CoordinatorConfig};
 use frenzy::util::table::{fmt_bytes, Table};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let cluster = real_testbed();
-    println!("cluster '{}' — {} GPUs across {} nodes\n", cluster.name, cluster.total_gpus(), cluster.nodes.len());
+    println!(
+        "cluster '{}' — {} GPUs across {} nodes\n",
+        cluster.name,
+        cluster.total_gpus(),
+        cluster.nodes.len()
+    );
+
+    // Start the serverless control plane + v1 HTTP API (port 0 = ephemeral).
+    let cfg = CoordinatorConfig { execute_training: false, ..CoordinatorConfig::default() };
+    let (handle, _join) = spawn(cluster.clone(), cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = server::serve(handle.clone(), "127.0.0.1:0", stop.clone())?;
+    let mut client = FrenzyClient::new(addr.to_string());
 
     // The user's entire job description:
-    let model = model_by_name("gpt2-7b").expect("zoo model");
-    let train = TrainConfig { global_batch: 2 };
-    println!("submitting: {} with global batch {} (no GPU spec!)\n", model.name, train.global_batch);
+    println!("submitting: gpt2-7b with global batch 2 (no GPU spec!)\n");
 
-    // 1. MARP: predict memory, enumerate ranked resource plans.
-    let marp = Marp::with_defaults(cluster.clone());
-    let plans = marp.plans(&model, &train);
-    let mut t = Table::new(&["rank", "d", "t", "GPUs", "min GPU mem", "predicted peak", "est samples/s"])
-        .with_title("MARP resource plans (priority order)");
-    for (i, p) in plans.iter().enumerate() {
+    // 1. MARP via the v1 dry-run endpoint: predict memory, rank plans.
+    let dry = client.predict("gpt2-7b", 2)?;
+    let mut t =
+        Table::new(&["rank", "d", "t", "GPUs", "min GPU mem", "predicted peak", "est samples/s"])
+            .with_title("MARP resource plans (priority order, via POST /v1/predict)");
+    for (i, p) in dry.plans.iter().enumerate() {
         t.row(&[
             (i + 1).to_string(),
-            p.par.d.to_string(),
-            p.par.t.to_string(),
-            p.n_gpus.to_string(),
+            p.d.to_string(),
+            p.t.to_string(),
+            p.gpus.to_string(),
             fmt_bytes(p.min_gpu_mem),
             fmt_bytes(p.predicted_bytes),
             format!("{:.2}", p.est_samples_per_sec),
@@ -41,7 +54,24 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", t.render());
 
-    // 2. HAS (Algorithm 1): first satisfiable plan + best-fit placement.
+    let mut t = Table::new(&["GPU type", "mem", "count", "feasible plans", "predicted peak"])
+        .with_title("per-GPU-type feasibility");
+    for g in &dry.per_gpu_type {
+        t.row(&[
+            g.gpu.clone(),
+            fmt_bytes(g.mem_bytes),
+            g.count.to_string(),
+            g.feasible_plans.to_string(),
+            g.predicted_peak_bytes.map(fmt_bytes).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 2. HAS (Algorithm 1): first satisfiable plan + best-fit placement
+    //    (library-level, to show what the coordinator does internally).
+    let marp = frenzy::marp::Marp::with_defaults(cluster.clone());
+    let model = frenzy::config::models::model_by_name("gpt2-7b").expect("zoo model");
+    let plans = marp.plans(&model, &frenzy::memory::TrainConfig { global_batch: 2 });
     let snapshot = ClusterState::from_spec(&cluster);
     let mut work = 0u64;
     let (plan, alloc) =
@@ -55,5 +85,7 @@ fn main() -> anyhow::Result<()> {
         println!("  node {node}: {count} x {} ({:?})", n.gpu.name, n.link);
     }
     println!("\n(paper §V.C: GPT2-7B at batch 2 → 8 GPUs, best at t=4, d=2)");
+    stop.store(true, Ordering::Relaxed);
+    handle.shutdown();
     Ok(())
 }

@@ -1,6 +1,7 @@
-//! Serverless cluster demo: run the live coordinator + HTTP API against the
-//! simulated heterogeneous testbed, push a NewWorkload-style stream of job
-//! submissions through the REST surface, and print the final report.
+//! Serverless cluster demo on the v1 API: run the live coordinator + the
+//! thread-pool HTTP server against the simulated heterogeneous testbed,
+//! drive it over TCP with the typed `FrenzyClient` SDK — predict (dry run),
+//! a burst of submissions, list, cancel — and print the final report.
 //!
 //! ```sh
 //! cargo run --release --example serverless_cluster
@@ -10,9 +11,12 @@
 //! pass `--no-exec` to exercise the control plane alone.)
 
 use frenzy::config::real_testbed;
-use frenzy::serverless::http::{route, Request};
-use frenzy::serverless::{spawn, CoordinatorConfig};
-use frenzy::util::table::Table;
+use frenzy::serverless::api::ListRequestV1;
+use frenzy::serverless::client::FrenzyClient;
+use frenzy::serverless::{server, spawn, CoordinatorConfig};
+use frenzy::util::table::{fmt_bytes, Table};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let no_exec = std::env::args().any(|a| a == "--no-exec")
@@ -26,37 +30,63 @@ fn main() -> anyhow::Result<()> {
         println!("(artifacts missing or --no-exec: control-plane-only mode)\n");
     }
     let (handle, _join) = spawn(real_testbed(), cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = server::serve(handle.clone(), "127.0.0.1:0", stop.clone())?;
+    let mut client = FrenzyClient::new(addr.to_string());
+    println!("v1 API live on http://{addr}\n");
 
-    // Submit a burst of jobs exactly as an HTTP client would.
+    // Dry-run first: what would Frenzy do with a 7B model at batch 2?
+    let dry = client.predict("gpt2-7b", 2)?;
+    if let Some(chosen) = &dry.chosen {
+        println!(
+            "predict gpt2-7b B=2 (dry run): d={} t={} -> {} GPUs of >= {} ({} plans)\n",
+            chosen.d,
+            chosen.t,
+            chosen.gpus,
+            fmt_bytes(chosen.min_gpu_mem),
+            dry.plans.len()
+        );
+    }
+
+    // Submit a burst of jobs through the SDK, exactly as a user would.
     let submissions = [
-        ("gpt2-350m", 8, 160u64),
+        ("gpt2-350m", 8u32, 160u64),
         ("gpt2-760m", 16, 320),
         ("bert-large", 8, 160),
         ("gpt2-1.3b", 16, 320),
         ("gpt2-125m", 4, 80),
         ("gpt2-2.7b", 8, 160),
     ];
-    let mut ids = Vec::new();
     for (model, batch, samples) in submissions {
-        let body = format!(r#"{{"model":"{model}","batch":{batch},"samples":{samples}}}"#);
-        let (status, resp) =
-            route(&handle, &Request { method: "POST".into(), path: "/jobs".into(), body });
-        assert_eq!(status, 200, "{resp}");
-        let id = frenzy::util::json::parse(&resp)?.get("job_id").unwrap().as_u64().unwrap();
+        let id = client.submit(model, batch, samples)?;
         println!("submitted {model} (batch {batch}) -> job {id}");
-        ids.push(id);
     }
 
-    let (total, idle, util) = handle.cluster_info()?;
-    println!("\ncluster while busy: {total} GPUs, {idle} idle, {:.0}% utilized", util * 100.0);
+    let info = client.cluster()?;
+    println!(
+        "\ncluster while busy: {} GPUs, {} idle, {:.0}% utilized",
+        info.total_gpus,
+        info.idle_gpus,
+        info.utilization * 100.0
+    );
+
+    // One more submission that we immediately change our mind about.
+    let doomed = client.submit("gpt2-350m", 8, 160)?;
+    match client.cancel(doomed) {
+        Ok(resp) => println!("cancelled job {} (state {:?})", doomed, resp.state),
+        // With the instant stub the job may already be done — that's the
+        // 409 conflict path.
+        Err(e) => println!("cancel job {doomed}: {e}"),
+    }
 
     handle.drain()?;
 
+    // Final state via the paginated v1 listing.
+    let page = client.list(&ListRequestV1::default())?;
     let mut t = Table::new(&["job", "state", "gpus", "last loss"]).with_title("\nfinal job states");
-    for id in ids {
-        let st = handle.status(id)?.expect("job exists");
+    for st in &page.jobs {
         t.row(&[
-            st.name,
+            st.name.clone(),
             format!("{:?}", st.state),
             st.gpus.to_string(),
             st.losses.last().map(|(_, l)| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
@@ -72,6 +102,7 @@ fn main() -> anyhow::Result<()> {
         report.avg_jct_s,
         report.sched_overhead_s * 1e3
     );
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
     handle.shutdown();
     Ok(())
 }

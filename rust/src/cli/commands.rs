@@ -1,0 +1,213 @@
+//! Serverless CLI subcommands — every one goes through the v1 API.
+//!
+//! `submit`, `status`, `cancel`, and `list` talk to a running `frenzy serve`
+//! instance over TCP via [`FrenzyClient`]. `predict` does the same when
+//! `--addr` is given, and falls back to running MARP in-process otherwise
+//! (so the dry-run works without a server). `serve` starts the coordinator
+//! plus the thread-pool HTTP front-end.
+
+use super::Args;
+use crate::config::cluster_by_name;
+use crate::serverless::api::{JobStatusV1, ListRequestV1, PlanV1, state_from_str};
+use crate::serverless::client::FrenzyClient;
+use crate::serverless::{CoordinatorConfig, PredictReport};
+use crate::util::table::{fmt_bytes, Table};
+use anyhow::{anyhow, bail, Result};
+
+/// Default server address (matches `frenzy serve`).
+pub const DEFAULT_ADDR: &str = "127.0.0.1:8315";
+
+fn client(args: &Args) -> FrenzyClient {
+    FrenzyClient::new(args.opt_or("addr", DEFAULT_ADDR))
+}
+
+/// Load a cluster: a named topology or a cluster file path.
+pub fn cluster_arg(args: &Args) -> Result<crate::config::ClusterSpec> {
+    let name = args.opt_or("cluster", "real");
+    if let Some(c) = cluster_by_name(name) {
+        return Ok(c);
+    }
+    crate::config::cluster_file::load_cluster(name)
+}
+
+/// First positional argument parsed as a job id (or `--id`).
+fn job_id_arg(args: &Args) -> Result<u64> {
+    if let Some(id) = args.opt_parse::<u64>("id")? {
+        return Ok(id);
+    }
+    let raw = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("expected a job id (positional or --id)"))?;
+    raw.parse().map_err(|_| anyhow!("bad job id '{raw}'"))
+}
+
+fn status_row(t: &mut Table, st: &JobStatusV1) {
+    t.row(&[
+        st.job_id.to_string(),
+        st.name.clone(),
+        crate::serverless::api::state_to_str(st.state).to_string(),
+        st.gpus.to_string(),
+        st.losses.last().map(|(_, l)| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
+    ]);
+}
+
+/// `frenzy submit --model M --batch B --samples N [--addr A]`
+pub fn cmd_submit(args: &Args) -> Result<()> {
+    let model = args.require("model")?;
+    let batch: u32 = args.opt_parse_or("batch", 8)?;
+    let samples: u64 = args.opt_parse_or("samples", 400)?;
+    let mut c = client(args);
+    let id = c.submit(model, batch, samples)?;
+    println!("job {id} submitted ({model}, batch {batch}, {samples} samples)");
+    println!("  frenzy status {id} --addr {}", c.addr());
+    Ok(())
+}
+
+/// `frenzy status <id> [--addr A]`
+pub fn cmd_status(args: &Args) -> Result<()> {
+    let id = job_id_arg(args)?;
+    let mut c = client(args);
+    match c.status(id)? {
+        None => bail!("no such job {id}"),
+        Some(st) => {
+            let mut t = Table::new(&["job", "name", "state", "gpus", "last loss"]);
+            status_row(&mut t, &st);
+            println!("{}", t.render());
+            Ok(())
+        }
+    }
+}
+
+/// `frenzy cancel <id> [--addr A]`
+pub fn cmd_cancel(args: &Args) -> Result<()> {
+    let id = job_id_arg(args)?;
+    let mut c = client(args);
+    let resp = c.cancel(id)?;
+    println!(
+        "job {} {}",
+        resp.job_id,
+        if resp.cancelled { "cancelled" } else { "not cancelled" }
+    );
+    Ok(())
+}
+
+/// `frenzy list [--state S] [--offset O] [--limit L] [--addr A]`
+pub fn cmd_list(args: &Args) -> Result<()> {
+    let state = match args.opt("state") {
+        None => None,
+        Some(s) => Some(state_from_str(s).ok_or_else(|| {
+            anyhow!("unknown state '{s}' (queued|running|completed|rejected|cancelled)")
+        })?),
+    };
+    let req = ListRequestV1 {
+        state,
+        offset: args.opt_parse_or("offset", 0usize)?,
+        limit: args.opt_parse_or("limit", crate::serverless::api::DEFAULT_LIST_LIMIT)?,
+    };
+    let mut c = client(args);
+    let page = c.list(&req)?;
+    let mut t = Table::new(&["job", "name", "state", "gpus", "last loss"]).with_title(&format!(
+        "jobs {}..{} of {}",
+        req.offset,
+        req.offset + page.jobs.len(),
+        page.total
+    ));
+    for st in &page.jobs {
+        status_row(&mut t, st);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn plan_table(title: &str, plans: &[PlanV1]) -> Table {
+    let mut t = Table::new(&[
+        "rank", "d", "t", "GPUs", "min GPU mem", "predicted", "est samples/s", "efficiency",
+    ])
+    .with_title(title);
+    for (i, p) in plans.iter().enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            p.d.to_string(),
+            p.t.to_string(),
+            p.gpus.to_string(),
+            fmt_bytes(p.min_gpu_mem),
+            fmt_bytes(p.predicted_bytes),
+            format!("{:.2}", p.est_samples_per_sec),
+            format!("{:.0}%", p.est_efficiency * 100.0),
+        ]);
+    }
+    t
+}
+
+/// `frenzy predict --model M --batch B [--addr A | --cluster C]`
+///
+/// With `--addr`, queries a running server's `/v1/predict` (the cluster is
+/// whatever that server schedules for); otherwise runs MARP locally against
+/// `--cluster` (default "real").
+pub fn cmd_predict(args: &Args) -> Result<()> {
+    let model = args.require("model")?;
+    let batch: u32 = args.opt_parse_or("batch", 8)?;
+    let resp = if args.opt("addr").is_some() {
+        client(args).predict(model, batch)?
+    } else {
+        let cluster = cluster_arg(args)?;
+        let marp = crate::marp::Marp::with_defaults(cluster.clone());
+        let m = crate::config::models::model_by_name(model)
+            .ok_or_else(|| anyhow!("unknown model '{model}' (see `frenzy models`)"))?;
+        let plans = marp.plans(&m, &crate::memory::TrainConfig { global_batch: batch });
+        let gpu_types = crate::serverless::GpuTypeInfo::aggregate(&cluster);
+        let report = PredictReport { model: model.to_string(), batch, plans, gpu_types };
+        crate::serverless::api::PredictResponseV1::from_report(&report)
+    };
+    if !resp.feasible {
+        bail!("no feasible configuration — a submit would be rejected");
+    }
+    println!(
+        "{}",
+        plan_table(&format!("MARP resource plans for {model} (B={batch})"), &resp.plans).render()
+    );
+    let mut t = Table::new(&["GPU type", "mem", "count", "feasible plans", "predicted peak"])
+        .with_title("per-GPU-type feasibility");
+    for g in &resp.per_gpu_type {
+        t.row(&[
+            g.gpu.clone(),
+            fmt_bytes(g.mem_bytes),
+            g.count.to_string(),
+            g.feasible_plans.to_string(),
+            g.predicted_peak_bytes.map(fmt_bytes).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", t.render());
+    if let Some(chosen) = &resp.chosen {
+        println!(
+            "Frenzy would choose d={} t={} -> {} GPUs of >= {}",
+            chosen.d,
+            chosen.t,
+            chosen.gpus,
+            fmt_bytes(chosen.min_gpu_mem)
+        );
+    }
+    Ok(())
+}
+
+/// `frenzy serve [--addr A] [--cluster C] [--steps N]`
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let cluster = cluster_arg(args)?;
+    let addr = args.opt_or("addr", DEFAULT_ADDR);
+    let steps: u64 = args.opt_parse_or("steps", 50)?;
+    let cfg = CoordinatorConfig { max_real_steps: steps, ..Default::default() };
+    let (handle, _join) = crate::serverless::spawn(cluster, cfg);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let local = crate::serverless::server::serve(handle, addr, stop)?;
+    println!("frenzy serverless API v1 listening on http://{local}");
+    println!("  POST /v1/jobs            {{\"model\":\"gpt2-350m\",\"batch\":8,\"samples\":400}}");
+    println!("  GET  /v1/jobs            ?state=running&offset=0&limit=100");
+    println!("  GET  /v1/jobs/<id>");
+    println!("  POST /v1/jobs/<id>/cancel");
+    println!("  POST /v1/predict         {{\"model\":\"gpt2-7b\",\"batch\":2}}  (dry run)");
+    println!("  GET  /v1/cluster | /v1/healthz    (see API.md; unversioned aliases served)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

@@ -9,6 +9,8 @@
 //! positionals or use `--flag` at the end (or `--key=value` forms) when
 //! mixing.
 
+pub mod commands;
+
 use std::collections::BTreeMap;
 use std::fmt;
 

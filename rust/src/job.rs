@@ -51,6 +51,17 @@ pub enum JobState {
     Completed,
     /// MARP found no feasible configuration on this cluster.
     Rejected,
+    /// Cancelled by the user (via `POST /v1/jobs/<id>/cancel`); resources
+    /// released, any in-flight training result is discarded.
+    Cancelled,
+}
+
+impl JobState {
+    /// Terminal states never transition again; drain waits for all jobs to
+    /// become terminal.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Completed | JobState::Rejected | JobState::Cancelled)
+    }
 }
 
 /// Completion record used for JCT/QT metrics.
@@ -105,6 +116,15 @@ mod tests {
         assert_eq!(o.queue_time(), 15.0);
         assert_eq!(o.jct(), 90.0);
         assert_eq!(o.run_time(), 75.0);
+    }
+
+    #[test]
+    fn terminal_states() {
+        assert!(!JobState::Queued.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Completed.is_terminal());
+        assert!(JobState::Rejected.is_terminal());
+        assert!(JobState::Cancelled.is_terminal());
     }
 
     #[test]

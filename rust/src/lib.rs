@@ -25,7 +25,11 @@
 //! * [`cluster`] — the Resource Orchestrator,
 //! * [`sim`] — discrete-event cluster simulator (the "PAI simulator" stand-in),
 //! * [`workload`] — NewWorkload / Philly / Helios generators,
-//! * [`serverless`] — submission front-end + coordinator,
+//! * [`serverless`] — the v1 control plane: coordinator plus
+//!   [`serverless::api`] (typed DTOs), [`serverless::server`] (thread-pool
+//!   HTTP front-end), and [`serverless::client`] (the blocking Rust SDK).
+//!   Every route is documented with request/response examples in `API.md`
+//!   at the repository root,
 //! * [`runtime`] — PJRT executor running the AOT-compiled JAX/Pallas
 //!   training step (the request path never touches python),
 //! * [`exp`] — harnesses regenerating every figure in the paper.

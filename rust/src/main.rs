@@ -1,22 +1,29 @@
 //! `frenzy` — the serverless LLM-training leader binary.
 //!
 //! ```text
-//! frenzy predict  --model gpt2-7b --batch 2 [--cluster real]
-//! frenzy simulate --workload newworkload --tasks 30 --sched has [--seed 11]
 //! frenzy serve    [--addr 127.0.0.1:8315] [--cluster real]
+//! frenzy submit   --model gpt2-350m --batch 8 --samples 400 [--addr ...]
+//! frenzy status   <job-id> [--addr ...]
+//! frenzy cancel   <job-id> [--addr ...]
+//! frenzy list     [--state running] [--offset 0] [--limit 100] [--addr ...]
+//! frenzy predict  --model gpt2-7b --batch 2 [--addr ... | --cluster real]
+//! frenzy simulate --workload newworkload --tasks 30 --sched has [--seed 11]
 //! frenzy train    --model gpt2-tiny --steps 50        (direct PJRT run)
 //! frenzy fig4 | fig5a | fig5b | fig6 | figures
 //! frenzy trace    --workload philly --n 100 --out trace.csv
 //! ```
+//!
+//! The serverless subcommands speak the v1 HTTP API (see `API.md`) through
+//! `frenzy::serverless::client::FrenzyClient`.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
+use frenzy::cli::commands;
 use frenzy::cli::Args;
-use frenzy::config::{cluster_by_name, models::model_by_name};
+use frenzy::config::cluster_by_name;
 use frenzy::marp::Marp;
-use frenzy::memory::TrainConfig;
 use frenzy::sched::{has::Has, opportunistic::Opportunistic, sia::Sia, Scheduler};
 use frenzy::sim::{simulate, SimConfig};
-use frenzy::util::table::{fmt_bytes, fmt_duration, Table};
+use frenzy::util::table::{fmt_duration, Table};
 use frenzy::workload::{helios, newworkload, philly, trace};
 
 fn main() {
@@ -37,23 +44,22 @@ fn usage() -> &'static str {
     "frenzy — memory-aware serverless LLM training for heterogeneous GPU clusters
 
 USAGE:
-  frenzy predict  --model <name> --batch <B> [--cluster real|sim]
+  frenzy serve    [--addr 127.0.0.1:8315] [--cluster real|sim] [--steps N]
+  frenzy submit   --model <name> --batch <B> --samples <N> [--addr A]
+  frenzy status   <job-id> [--addr A]
+  frenzy cancel   <job-id> [--addr A]
+  frenzy list     [--state queued|running|completed|rejected|cancelled]
+                  [--offset O] [--limit L] [--addr A]
+  frenzy predict  --model <name> --batch <B> [--addr A | --cluster real|sim]
   frenzy simulate --workload newworkload|philly|helios --tasks <n>
                   --sched has|sia|opportunistic [--cluster real|sim] [--seed S]
-  frenzy serve    [--addr 127.0.0.1:8315] [--cluster real|sim] [--steps N]
   frenzy train    --model gpt2-tiny [--steps N]
   frenzy fig4 | fig5a | fig5b | fig6 | figures
   frenzy trace    --workload <w> --n <n> --out <file> [--seed S]
-  frenzy models | clusters"
-}
+  frenzy models | clusters
 
-fn cluster_arg(args: &Args) -> Result<frenzy::config::ClusterSpec> {
-    let name = args.opt_or("cluster", "real");
-    if let Some(c) = cluster_by_name(name) {
-        return Ok(c);
-    }
-    // Otherwise treat it as a cluster file path.
-    frenzy::config::cluster_file::load_cluster(name)
+The serverless commands talk to a running `frenzy serve` over the v1 HTTP
+API (documented in API.md)."
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -87,38 +93,14 @@ fn dispatch(args: &Args) -> Result<()> {
             }
             Ok(())
         }
-        Some("predict") => {
-            let model_name = args.require("model")?;
-            let model = model_by_name(model_name)
-                .ok_or_else(|| anyhow!("unknown model '{model_name}' (see `frenzy models`)"))?;
-            let batch: u32 = args.opt_parse_or("batch", 8)?;
-            let cluster = cluster_arg(args)?;
-            let marp = Marp::with_defaults(cluster);
-            let plans = marp.plans(&model, &TrainConfig { global_batch: batch });
-            if plans.is_empty() {
-                bail!("no feasible configuration on this cluster — job would be rejected");
-            }
-            let mut t = Table::new(&[
-                "rank", "d", "t", "GPUs", "min GPU mem", "predicted", "est samples/s", "efficiency",
-            ])
-            .with_title(&format!("MARP resource plans for {model_name} (B={batch})"));
-            for (i, p) in plans.iter().enumerate() {
-                t.row(&[
-                    (i + 1).to_string(),
-                    p.par.d.to_string(),
-                    p.par.t.to_string(),
-                    p.n_gpus.to_string(),
-                    fmt_bytes(p.min_gpu_mem),
-                    fmt_bytes(p.predicted_bytes),
-                    format!("{:.2}", p.est_samples_per_sec),
-                    format!("{:.0}%", p.est_efficiency * 100.0),
-                ]);
-            }
-            println!("{}", t.render());
-            Ok(())
-        }
+        Some("predict") => commands::cmd_predict(args),
+        Some("submit") => commands::cmd_submit(args),
+        Some("status") => commands::cmd_status(args),
+        Some("cancel") => commands::cmd_cancel(args),
+        Some("list") => commands::cmd_list(args),
+        Some("serve") => commands::cmd_serve(args),
         Some("simulate") => {
-            let cluster = cluster_arg(args)?;
+            let cluster = commands::cluster_arg(args)?;
             let n: usize = args.opt_parse_or("tasks", 30)?;
             let seed: u64 = args.opt_parse_or("seed", 11)?;
             let workload = args.opt_or("workload", "newworkload");
@@ -155,24 +137,6 @@ fn dispatch(args: &Args) -> Result<()> {
             t.row_str(&["utilization", &format!("{:.1}%", report.avg_utilization * 100.0)]);
             println!("{}", t.render());
             Ok(())
-        }
-        Some("serve") => {
-            let cluster = cluster_arg(args)?;
-            let addr = args.opt_or("addr", "127.0.0.1:8315");
-            let steps: u64 = args.opt_parse_or("steps", 50)?;
-            let cfg = frenzy::serverless::CoordinatorConfig {
-                max_real_steps: steps,
-                ..Default::default()
-            };
-            let (handle, _join) = frenzy::serverless::spawn(cluster, cfg);
-            let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-            let local = frenzy::serverless::http::serve(handle, addr, stop)?;
-            println!("frenzy serverless API listening on http://{local}");
-            println!("  POST /jobs {{\"model\":\"gpt2-350m\",\"batch\":8,\"samples\":400}}");
-            println!("  GET  /jobs/<id> | /cluster | /healthz");
-            loop {
-                std::thread::sleep(std::time::Duration::from_secs(3600));
-            }
         }
         Some("train") => {
             let model = args.opt_or("model", "gpt2-tiny");

@@ -1,0 +1,800 @@
+//! Typed v1 API contract shared by the HTTP server, the Rust SDK
+//! ([`super::client::FrenzyClient`]), and the CLI.
+//!
+//! Every wire payload is a DTO struct here with a `to_json` / `from_json`
+//! pair built on [`crate::util::json::Json`], so both directions go through
+//! the same escaping code — no hand-formatted JSON anywhere on the request
+//! path (hand-`format!`ed error bodies were a JSON-injection bug in the
+//! pre-v1 surface).
+//!
+//! The full route table lives in `API.md` at the repository root.
+
+use crate::job::JobState;
+use crate::marp::ResourcePlan;
+use crate::serverless::{GpuTypeInfo, JobStatus, ListPage, PredictReport};
+use crate::util::json::Json;
+
+/// Default page size for `GET /v1/jobs` when `limit` is absent.
+pub const DEFAULT_LIST_LIMIT: usize = 100;
+/// Hard cap on a single list page.
+pub const MAX_LIST_LIMIT: usize = 1000;
+
+/// Wire name of a [`JobState`].
+pub fn state_to_str(s: JobState) -> &'static str {
+    match s {
+        JobState::Queued => "queued",
+        JobState::Running => "running",
+        JobState::Completed => "completed",
+        JobState::Rejected => "rejected",
+        JobState::Cancelled => "cancelled",
+    }
+}
+
+/// Inverse of [`state_to_str`].
+pub fn state_from_str(s: &str) -> Option<JobState> {
+    match s {
+        "queued" => Some(JobState::Queued),
+        "running" => Some(JobState::Running),
+        "completed" => Some(JobState::Completed),
+        "rejected" => Some(JobState::Rejected),
+        "cancelled" => Some(JobState::Cancelled),
+        _ => None,
+    }
+}
+
+/// The error envelope: every non-2xx response body is
+/// `{"error":{"code":<status>,"message":"..."}}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub code: u16,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: u16, message: impl Into<String>) -> Self {
+        Self { code, message: message.into() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut inner = Json::obj();
+        inner.set("code", self.code as u64).set("message", self.message.as_str());
+        let mut j = Json::obj();
+        j.set("error", inner);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let code = j
+            .get_path(&["error", "code"])
+            .and_then(Json::as_u64)
+            .ok_or("error envelope missing error.code")? as u16;
+        let message = j
+            .get_path(&["error", "message"])
+            .and_then(Json::as_str)
+            .ok_or("error envelope missing error.message")?
+            .to_string();
+        Ok(Self { code, message })
+    }
+
+    /// Compact body string (the only way error bodies are rendered).
+    pub fn body(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+}
+
+/// `POST /v1/jobs` request body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitRequestV1 {
+    pub model: String,
+    pub batch: u32,
+    pub samples: u64,
+}
+
+impl SubmitRequestV1 {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("model", self.model.as_str())
+            .set("batch", self.batch)
+            .set("samples", self.samples);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let model =
+            j.get("model").and_then(Json::as_str).ok_or("missing string field 'model'")?;
+        let batch = j.get("batch").and_then(Json::as_u64).ok_or("missing integer field 'batch'")?;
+        let samples =
+            j.get("samples").and_then(Json::as_u64).ok_or("missing integer field 'samples'")?;
+        if batch == 0 || batch > u32::MAX as u64 {
+            return Err("'batch' must be in 1..=2^32-1".into());
+        }
+        if samples == 0 {
+            return Err("'samples' must be > 0".into());
+        }
+        if model.is_empty() {
+            return Err("'model' must be non-empty".into());
+        }
+        Ok(Self { model: model.to_string(), batch: batch as u32, samples })
+    }
+}
+
+/// `POST /v1/jobs` response body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitResponseV1 {
+    pub job_id: u64,
+}
+
+impl SubmitResponseV1 {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("job_id", self.job_id);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            job_id: j.get("job_id").and_then(Json::as_u64).ok_or("missing field 'job_id'")?,
+        })
+    }
+}
+
+/// `GET /v1/jobs/<id>` response body; also the element type of a list page.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobStatusV1 {
+    pub job_id: u64,
+    pub name: String,
+    pub state: JobState,
+    pub gpus: u32,
+    /// (step, loss) samples from the training run.
+    pub losses: Vec<(u64, f64)>,
+    pub submit_time: f64,
+    pub finish_time: Option<f64>,
+}
+
+impl JobStatusV1 {
+    pub fn from_status(st: &JobStatus) -> Self {
+        Self {
+            job_id: st.id,
+            name: st.name.clone(),
+            state: st.state,
+            gpus: st.gpus,
+            losses: st.losses.iter().map(|&(s, l)| (s, l as f64)).collect(),
+            submit_time: st.submit_time,
+            finish_time: st.finish_time,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("job_id", self.job_id)
+            .set("name", self.name.as_str())
+            .set("state", state_to_str(self.state))
+            .set("gpus", self.gpus)
+            .set("submit_time", self.submit_time)
+            .set(
+                "finish_time",
+                match self.finish_time {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            );
+        let losses: Vec<Json> = self
+            .losses
+            .iter()
+            .map(|&(s, l)| {
+                let mut o = Json::obj();
+                o.set("step", s).set("loss", l);
+                o
+            })
+            .collect();
+        j.set("losses", Json::Arr(losses));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let state_s =
+            j.get("state").and_then(Json::as_str).ok_or("missing string field 'state'")?;
+        let state = state_from_str(state_s).ok_or_else(|| format!("unknown state '{state_s}'"))?;
+        let mut losses = Vec::new();
+        for item in j.get("losses").and_then(Json::as_arr).unwrap_or(&[]) {
+            let step = item.get("step").and_then(Json::as_u64).ok_or("loss item missing 'step'")?;
+            let loss = item.get("loss").and_then(Json::as_f64).ok_or("loss item missing 'loss'")?;
+            losses.push((step, loss));
+        }
+        Ok(Self {
+            job_id: j.get("job_id").and_then(Json::as_u64).ok_or("missing field 'job_id'")?,
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("missing string field 'name'")?
+                .to_string(),
+            state,
+            gpus: j.get("gpus").and_then(Json::as_u64).unwrap_or(0) as u32,
+            losses,
+            submit_time: j.get("submit_time").and_then(Json::as_f64).unwrap_or(0.0),
+            finish_time: j.get("finish_time").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// `POST /v1/jobs/<id>/cancel` response body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CancelResponseV1 {
+    pub job_id: u64,
+    pub state: JobState,
+    /// True when this call performed the cancellation (job was queued or
+    /// running); already-terminal jobs answer 409 with an error envelope.
+    pub cancelled: bool,
+}
+
+impl CancelResponseV1 {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("job_id", self.job_id)
+            .set("state", state_to_str(self.state))
+            .set("cancelled", self.cancelled);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let state_s =
+            j.get("state").and_then(Json::as_str).ok_or("missing string field 'state'")?;
+        Ok(Self {
+            job_id: j.get("job_id").and_then(Json::as_u64).ok_or("missing field 'job_id'")?,
+            state: state_from_str(state_s).ok_or_else(|| format!("unknown state '{state_s}'"))?,
+            cancelled: j.get("cancelled").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// `GET /v1/jobs` query parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ListRequestV1 {
+    /// Only return jobs in this state (all states when `None`).
+    pub state: Option<JobState>,
+    pub offset: usize,
+    pub limit: usize,
+}
+
+impl Default for ListRequestV1 {
+    fn default() -> Self {
+        Self { state: None, offset: 0, limit: DEFAULT_LIST_LIMIT }
+    }
+}
+
+impl ListRequestV1 {
+    /// Parse from an URL query string (the part after `?`, possibly empty).
+    pub fn from_query(query: &str) -> Result<Self, String> {
+        let mut out = Self::default();
+        for pair in query.split('&').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            match k {
+                "state" => {
+                    out.state =
+                        Some(state_from_str(v).ok_or_else(|| format!("unknown state '{v}'"))?);
+                }
+                "offset" => {
+                    out.offset = v.parse().map_err(|_| format!("bad offset '{v}'"))?;
+                }
+                "limit" => {
+                    let l: usize = v.parse().map_err(|_| format!("bad limit '{v}'"))?;
+                    out.limit = l.min(MAX_LIST_LIMIT);
+                }
+                other => return Err(format!("unknown query parameter '{other}'")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Render as an URL query string (no leading `?`; empty for defaults).
+    pub fn to_query(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(s) = self.state {
+            parts.push(format!("state={}", state_to_str(s)));
+        }
+        if self.offset != 0 {
+            parts.push(format!("offset={}", self.offset));
+        }
+        if self.limit != DEFAULT_LIST_LIMIT {
+            parts.push(format!("limit={}", self.limit));
+        }
+        parts.join("&")
+    }
+}
+
+/// `GET /v1/jobs` response body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ListResponseV1 {
+    pub jobs: Vec<JobStatusV1>,
+    /// Number of jobs matching the filter before pagination.
+    pub total: usize,
+    pub offset: usize,
+    pub limit: usize,
+}
+
+impl ListResponseV1 {
+    pub fn from_page(page: &ListPage, req: &ListRequestV1) -> Self {
+        Self {
+            jobs: page.jobs.iter().map(JobStatusV1::from_status).collect(),
+            total: page.total,
+            offset: req.offset,
+            limit: req.limit,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("jobs", Json::Arr(self.jobs.iter().map(|s| s.to_json()).collect()))
+            .set("total", self.total)
+            .set("offset", self.offset)
+            .set("limit", self.limit);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut jobs = Vec::new();
+        for item in j.get("jobs").and_then(Json::as_arr).ok_or("missing array field 'jobs'")? {
+            jobs.push(JobStatusV1::from_json(item)?);
+        }
+        Ok(Self {
+            jobs,
+            total: j.get("total").and_then(Json::as_usize).ok_or("missing field 'total'")?,
+            offset: j.get("offset").and_then(Json::as_usize).unwrap_or(0),
+            limit: j.get("limit").and_then(Json::as_usize).unwrap_or(DEFAULT_LIST_LIMIT),
+        })
+    }
+}
+
+/// `POST /v1/predict` request body: a dry-run MARP query — nothing is
+/// enqueued, no job id is allocated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictRequestV1 {
+    pub model: String,
+    pub batch: u32,
+}
+
+impl PredictRequestV1 {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("model", self.model.as_str()).set("batch", self.batch);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let model =
+            j.get("model").and_then(Json::as_str).ok_or("missing string field 'model'")?;
+        let batch = j.get("batch").and_then(Json::as_u64).ok_or("missing integer field 'batch'")?;
+        if model.is_empty() {
+            return Err("'model' must be non-empty".into());
+        }
+        if batch == 0 || batch > u32::MAX as u64 {
+            return Err("'batch' must be in 1..=2^32-1".into());
+        }
+        Ok(Self { model: model.to_string(), batch: batch as u32 })
+    }
+}
+
+/// One MARP resource plan on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanV1 {
+    /// Data-parallel degree.
+    pub d: u32,
+    /// Tensor-parallel degree.
+    pub t: u32,
+    /// GPU count (`d·t`).
+    pub gpus: u32,
+    /// Minimum per-GPU memory a qualifying GPU must have, bytes.
+    pub min_gpu_mem: u64,
+    /// MARP's predicted peak per-GPU usage, bytes.
+    pub predicted_bytes: u64,
+    pub est_samples_per_sec: f64,
+    pub est_efficiency: f64,
+}
+
+impl PlanV1 {
+    pub fn from_plan(p: &ResourcePlan) -> Self {
+        Self {
+            d: p.par.d,
+            t: p.par.t,
+            gpus: p.n_gpus,
+            min_gpu_mem: p.min_gpu_mem,
+            predicted_bytes: p.predicted_bytes,
+            est_samples_per_sec: p.est_samples_per_sec,
+            est_efficiency: p.est_efficiency,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("d", self.d)
+            .set("t", self.t)
+            .set("gpus", self.gpus)
+            .set("min_gpu_mem", self.min_gpu_mem)
+            .set("predicted_bytes", self.predicted_bytes)
+            .set("est_samples_per_sec", self.est_samples_per_sec)
+            .set("est_efficiency", self.est_efficiency);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let req_u64 = |k: &str| j.get(k).and_then(Json::as_u64).ok_or(format!("missing '{k}'"));
+        Ok(Self {
+            d: req_u64("d")? as u32,
+            t: req_u64("t")? as u32,
+            gpus: req_u64("gpus")? as u32,
+            min_gpu_mem: req_u64("min_gpu_mem")?,
+            predicted_bytes: req_u64("predicted_bytes")?,
+            est_samples_per_sec: j
+                .get("est_samples_per_sec")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            est_efficiency: j.get("est_efficiency").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+/// Per-GPU-type slice of a predict response: can this GPU type host the
+/// model, and what peak memory does MARP predict on the best plan that fits
+/// it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuTypePredictionV1 {
+    /// GPU model name, e.g. "A100-40G".
+    pub gpu: String,
+    /// Device memory of this type, bytes.
+    pub mem_bytes: u64,
+    /// How many GPUs of this type the cluster has.
+    pub count: u32,
+    /// Number of feasible plans whose `min_gpu_mem` fits this type.
+    pub feasible_plans: usize,
+    /// Predicted peak per-GPU bytes of the highest-ranked plan that fits
+    /// this GPU type (`None` when no plan fits it).
+    pub predicted_peak_bytes: Option<u64>,
+    /// The highest-ranked plan that fits this GPU type.
+    pub best_plan: Option<PlanV1>,
+}
+
+impl GpuTypePredictionV1 {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("gpu", self.gpu.as_str())
+            .set("mem_bytes", self.mem_bytes)
+            .set("count", self.count)
+            .set("feasible_plans", self.feasible_plans)
+            .set(
+                "predicted_peak_bytes",
+                match self.predicted_peak_bytes {
+                    Some(b) => Json::from(b),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "best_plan",
+                match &self.best_plan {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let best_plan = match j.get("best_plan") {
+            Some(Json::Null) | None => None,
+            Some(p) => Some(PlanV1::from_json(p)?),
+        };
+        Ok(Self {
+            gpu: j
+                .get("gpu")
+                .and_then(Json::as_str)
+                .ok_or("missing string field 'gpu'")?
+                .to_string(),
+            mem_bytes: j.get("mem_bytes").and_then(Json::as_u64).ok_or("missing 'mem_bytes'")?,
+            count: j.get("count").and_then(Json::as_u64).unwrap_or(0) as u32,
+            feasible_plans: j.get("feasible_plans").and_then(Json::as_usize).unwrap_or(0),
+            predicted_peak_bytes: j.get("predicted_peak_bytes").and_then(Json::as_u64),
+            best_plan,
+        })
+    }
+}
+
+/// `POST /v1/predict` response body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictResponseV1 {
+    pub model: String,
+    pub batch: u32,
+    /// False when MARP finds no feasible configuration — a submit of the
+    /// same job would be accepted-but-rejected.
+    pub feasible: bool,
+    /// The plan Frenzy would choose (the head of the ranked list).
+    pub chosen: Option<PlanV1>,
+    /// Full priority-ordered plan list.
+    pub plans: Vec<PlanV1>,
+    /// Feasibility and predicted peak broken down by GPU type present in
+    /// the cluster.
+    pub per_gpu_type: Vec<GpuTypePredictionV1>,
+}
+
+impl PredictResponseV1 {
+    /// Build from the coordinator's [`PredictReport`].
+    pub fn from_report(r: &PredictReport) -> Self {
+        let plans: Vec<PlanV1> = r.plans.iter().map(PlanV1::from_plan).collect();
+        let per_gpu_type = r
+            .gpu_types
+            .iter()
+            .map(|g: &GpuTypeInfo| {
+                let fitting: Vec<&PlanV1> =
+                    plans.iter().filter(|p| p.min_gpu_mem <= g.mem_bytes).collect();
+                GpuTypePredictionV1 {
+                    gpu: g.name.clone(),
+                    mem_bytes: g.mem_bytes,
+                    count: g.count,
+                    feasible_plans: fitting.len(),
+                    predicted_peak_bytes: fitting.first().map(|p| p.predicted_bytes),
+                    best_plan: fitting.first().map(|p| (*p).clone()),
+                }
+            })
+            .collect();
+        Self {
+            model: r.model.clone(),
+            batch: r.batch,
+            feasible: !plans.is_empty(),
+            chosen: plans.first().cloned(),
+            plans,
+            per_gpu_type,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("model", self.model.as_str())
+            .set("batch", self.batch)
+            .set("feasible", self.feasible)
+            .set(
+                "chosen",
+                match &self.chosen {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            )
+            .set("plans", Json::Arr(self.plans.iter().map(|p| p.to_json()).collect()))
+            .set(
+                "per_gpu_type",
+                Json::Arr(self.per_gpu_type.iter().map(|g| g.to_json()).collect()),
+            );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let chosen = match j.get("chosen") {
+            Some(Json::Null) | None => None,
+            Some(p) => Some(PlanV1::from_json(p)?),
+        };
+        let mut plans = Vec::new();
+        for p in j.get("plans").and_then(Json::as_arr).ok_or("missing array field 'plans'")? {
+            plans.push(PlanV1::from_json(p)?);
+        }
+        let mut per_gpu_type = Vec::new();
+        for g in j.get("per_gpu_type").and_then(Json::as_arr).unwrap_or(&[]) {
+            per_gpu_type.push(GpuTypePredictionV1::from_json(g)?);
+        }
+        Ok(Self {
+            model: j
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or("missing string field 'model'")?
+                .to_string(),
+            batch: j.get("batch").and_then(Json::as_u64).ok_or("missing field 'batch'")? as u32,
+            feasible: j.get("feasible").and_then(Json::as_bool).unwrap_or(false),
+            chosen,
+            plans,
+            per_gpu_type,
+        })
+    }
+}
+
+/// `GET /v1/cluster` response body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterInfoV1 {
+    pub total_gpus: u32,
+    pub idle_gpus: u32,
+    pub utilization: f64,
+}
+
+impl ClusterInfoV1 {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("total_gpus", self.total_gpus)
+            .set("idle_gpus", self.idle_gpus)
+            .set("utilization", self.utilization);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            total_gpus: j.get("total_gpus").and_then(Json::as_u64).ok_or("missing 'total_gpus'")?
+                as u32,
+            idle_gpus: j.get("idle_gpus").and_then(Json::as_u64).ok_or("missing 'idle_gpus'")?
+                as u32,
+            utilization: j.get("utilization").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use crate::util::prop::{Gen, Runner};
+
+    fn roundtrip<T: PartialEq + std::fmt::Debug>(
+        v: &T,
+        to: impl Fn(&T) -> Json,
+        from: impl Fn(&Json) -> Result<T, String>,
+    ) {
+        let wire = to(v).to_string_compact();
+        let parsed = json::parse(&wire).unwrap_or_else(|e| panic!("bad wire {wire}: {e}"));
+        let back = from(&parsed).unwrap_or_else(|e| panic!("from_json failed on {wire}: {e}"));
+        assert_eq!(&back, v, "wire: {wire}");
+    }
+
+    /// Strings with every character class our escaper must handle.
+    fn gen_string(g: &mut Gen) -> String {
+        const CHARS: &[char] =
+            &['a', 'Z', '0', '"', '\\', '\n', '\t', '\r', ' ', '{', '}', ':', ',', 'é', '日'];
+        (0..g.usize_in(0, 12)).map(|_| *g.pick(CHARS)).collect()
+    }
+
+    fn gen_state(g: &mut Gen) -> JobState {
+        *g.pick(&[
+            JobState::Queued,
+            JobState::Running,
+            JobState::Completed,
+            JobState::Rejected,
+            JobState::Cancelled,
+        ])
+    }
+
+    // Integer draws stay below 2^53 so Json::Num (f64) is exact.
+    const MAX_EXACT: u64 = (1u64 << 53) - 1;
+
+    #[test]
+    fn prop_submit_request_roundtrip() {
+        Runner::new("submit dto roundtrip", 0xA11CE, 200).run(|g| {
+            let mut model = gen_string(g);
+            if model.is_empty() {
+                model.push('m');
+            }
+            let v = SubmitRequestV1 {
+                model,
+                batch: g.u64_in(1, u32::MAX as u64) as u32,
+                samples: g.u64_in(1, MAX_EXACT),
+            };
+            roundtrip(&v, SubmitRequestV1::to_json, SubmitRequestV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_job_status_roundtrip() {
+        Runner::new("status dto roundtrip", 0xBEEF, 200).run(|g| {
+            let v = JobStatusV1 {
+                job_id: g.u64_in(0, MAX_EXACT),
+                name: gen_string(g),
+                state: gen_state(g),
+                gpus: g.u64_in(0, 4096) as u32,
+                losses: (0..g.usize_in(0, 5))
+                    .map(|i| (i as u64 * 10, g.f64_in(0.0, 12.0)))
+                    .collect(),
+                submit_time: g.f64_in(0.0, 1e6),
+                finish_time: if g.bool() { Some(g.f64_in(0.0, 1e6)) } else { None },
+            };
+            roundtrip(&v, JobStatusV1::to_json, JobStatusV1::from_json);
+            Ok(())
+        });
+    }
+
+    fn gen_plan(g: &mut Gen) -> PlanV1 {
+        PlanV1 {
+            d: g.u64_in(1, 64) as u32,
+            t: g.u64_in(1, 8) as u32,
+            gpus: g.u64_in(1, 512) as u32,
+            min_gpu_mem: g.u64_in(0, MAX_EXACT),
+            predicted_bytes: g.u64_in(0, MAX_EXACT),
+            est_samples_per_sec: g.f64_in(0.0, 1e4),
+            est_efficiency: g.f64_in(0.0, 1.0),
+        }
+    }
+
+    #[test]
+    fn prop_predict_response_roundtrip() {
+        Runner::new("predict dto roundtrip", 0xF00D, 100).run(|g| {
+            let mut plans = Vec::new();
+            for _ in 0..g.usize_in(0, 4) {
+                plans.push(gen_plan(g));
+            }
+            let mut per_gpu_type = Vec::new();
+            for _ in 0..g.usize_in(0, 3) {
+                per_gpu_type.push(GpuTypePredictionV1 {
+                    gpu: gen_string(g),
+                    mem_bytes: g.u64_in(0, MAX_EXACT),
+                    count: g.u64_in(0, 64) as u32,
+                    feasible_plans: g.usize_in(0, 9),
+                    predicted_peak_bytes: if g.bool() { Some(g.u64_in(0, MAX_EXACT)) } else { None },
+                    best_plan: if g.bool() { Some(gen_plan(g)) } else { None },
+                });
+            }
+            let v = PredictResponseV1 {
+                model: gen_string(g),
+                batch: g.u64_in(1, 1024) as u32,
+                feasible: !plans.is_empty(),
+                chosen: plans.first().cloned(),
+                plans,
+                per_gpu_type,
+            };
+            roundtrip(&v, PredictResponseV1::to_json, PredictResponseV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_list_roundtrip() {
+        Runner::new("list dto roundtrip", 0x11577, 100).run(|g| {
+            let req = ListRequestV1 {
+                state: if g.bool() { Some(gen_state(g)) } else { None },
+                offset: g.usize_in(0, 5000),
+                limit: g.usize_in(0, MAX_LIST_LIMIT),
+            };
+            let back = ListRequestV1::from_query(&req.to_query())
+                .map_err(|e| format!("query parse: {e}"))?;
+            if back != req {
+                return Err(format!("query roundtrip: {req:?} -> {back:?}"));
+            }
+            let resp = ListResponseV1 { jobs: Vec::new(), total: 7, offset: req.offset, limit: req.limit };
+            roundtrip(&resp, ListResponseV1::to_json, ListResponseV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_envelope_escapes_hostile_messages() {
+        let hostile = "quote \" backslash \\ newline \n brace } end";
+        let e = ApiError::new(400, hostile);
+        let parsed = json::parse(&e.body()).expect("error body must be valid JSON");
+        let back = ApiError::from_json(&parsed).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn list_query_rejects_garbage() {
+        assert!(ListRequestV1::from_query("state=nope").is_err());
+        assert!(ListRequestV1::from_query("offset=minus").is_err());
+        assert!(ListRequestV1::from_query("bogus=1").is_err());
+        assert_eq!(ListRequestV1::from_query("").unwrap(), ListRequestV1::default());
+        // limit is clamped, not rejected
+        assert_eq!(ListRequestV1::from_query("limit=999999").unwrap().limit, MAX_LIST_LIMIT);
+    }
+
+    #[test]
+    fn submit_validation() {
+        let parse = |s: &str| SubmitRequestV1::from_json(&json::parse(s).unwrap());
+        assert!(parse(r#"{"model":"m","batch":0,"samples":1}"#).is_err());
+        assert!(parse(r#"{"model":"m","batch":1,"samples":0}"#).is_err());
+        assert!(parse(r#"{"model":"","batch":1,"samples":1}"#).is_err());
+        assert!(parse(r#"{"batch":1,"samples":1}"#).is_err());
+        assert!(parse(r#"{"model":"m","batch":4,"samples":100}"#).is_ok());
+    }
+
+    #[test]
+    fn state_str_bijection() {
+        for s in [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Completed,
+            JobState::Rejected,
+            JobState::Cancelled,
+        ] {
+            assert_eq!(state_from_str(state_to_str(s)), Some(s));
+        }
+        assert_eq!(state_from_str("bogus"), None);
+    }
+}

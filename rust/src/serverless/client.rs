@@ -1,0 +1,245 @@
+//! `FrenzyClient` — the blocking Rust SDK for the v1 serverless API.
+//!
+//! One client holds one kept-alive TCP connection to the server and frames
+//! requests/responses itself (no HTTP library offline). Every method maps
+//! onto a v1 route and speaks the typed DTOs from [`super::api`]:
+//!
+//! ```no_run
+//! use frenzy::serverless::client::FrenzyClient;
+//! let mut c = FrenzyClient::new("127.0.0.1:8315");
+//! let id = c.submit("gpt2-350m", 8, 400).unwrap();
+//! let dryrun = c.predict("gpt2-7b", 2).unwrap();
+//! println!("job {id}; 7b needs {} GPUs", dryrun.chosen.unwrap().gpus);
+//! ```
+//!
+//! Errors carry the server's error envelope (`code: message`). A dropped
+//! connection is re-established transparently (one retry per request).
+
+use super::api::{
+    ApiError, CancelResponseV1, ClusterInfoV1, JobStatusV1, ListRequestV1, ListResponseV1,
+    PredictRequestV1, PredictResponseV1, SubmitRequestV1, SubmitResponseV1,
+};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Blocking v1 API client with a reusable keep-alive connection.
+pub struct FrenzyClient {
+    addr: String,
+    timeout: Duration,
+    /// Cached connections idle longer than this are retired before use —
+    /// the server idles connections out (default 5 s), and sending a
+    /// non-idempotent request into a half-closed socket would otherwise
+    /// surface a spurious "may or may not have been processed" error.
+    max_conn_idle: Duration,
+    conn: Option<Conn>,
+}
+
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    last_used: Instant,
+}
+
+impl FrenzyClient {
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self {
+            addr: addr.into(),
+            timeout: Duration::from_secs(10),
+            max_conn_idle: Duration::from_secs(2),
+            conn: None,
+        }
+    }
+
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn connect(&self) -> Result<Conn> {
+        let stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connecting to frenzy server at {}", self.addr))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Conn { writer: stream, reader, last_used: Instant::now() })
+    }
+
+    /// One request/response exchange. If a *cached* keep-alive connection
+    /// proves dead, the request is retried once on a fresh connection —
+    /// but only when `idempotent`: a non-idempotent request (submit,
+    /// cancel) may have been processed even though the response was lost,
+    /// and a blind retry could duplicate it. Those surface an error telling
+    /// the caller to check server state instead.
+    fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+        idempotent: bool,
+    ) -> Result<(u16, String)> {
+        // Retire connections the server has likely idled out already.
+        if self.conn.as_ref().is_some_and(|c| c.last_used.elapsed() > self.max_conn_idle) {
+            self.conn = None;
+        }
+        let fresh = self.conn.is_none();
+        if fresh {
+            self.conn = Some(self.connect()?);
+        }
+        match Self::exchange(self.conn.as_mut().unwrap(), method, path, body) {
+            Ok(r) => {
+                self.conn.as_mut().unwrap().last_used = Instant::now();
+                Ok(r)
+            }
+            Err(e) => {
+                self.conn = None;
+                if fresh {
+                    return Err(e);
+                }
+                if !idempotent {
+                    return Err(anyhow!(
+                        "connection lost mid-request ({e}); the request may or may not have \
+                         been processed — check with list/status before retrying {method} {path}"
+                    ));
+                }
+                // Stale keep-alive connection (server idled it out): retry
+                // once on a fresh connection.
+                let mut c = self.connect()?;
+                let r = Self::exchange(&mut c, method, path, body)
+                    .with_context(|| format!("retry after stale connection ({e})"))?;
+                self.conn = Some(c);
+                Ok(r)
+            }
+        }
+    }
+
+    fn exchange(conn: &mut Conn, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        write!(
+            conn.writer,
+            "{method} {path} HTTP/1.1\r\nHost: frenzy\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len()
+        )?;
+        conn.writer.flush()?;
+
+        let mut status_line = String::new();
+        if conn.reader.read_line(&mut status_line)? == 0 {
+            bail!("server closed the connection");
+        }
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("malformed status line '{}'", status_line.trim()))?;
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            if conn.reader.read_line(&mut h)? == 0 {
+                bail!("connection closed in response headers");
+            }
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length =
+                        v.trim().parse().with_context(|| format!("bad content-length '{v}'"))?;
+                }
+            }
+        }
+        let mut buf = vec![0u8; content_length];
+        conn.reader.read_exact(&mut buf)?;
+        Ok((status, String::from_utf8_lossy(&buf).to_string()))
+    }
+
+    /// Issue a request and parse the body. Non-2xx statuses are mapped to
+    /// the server's error envelope, except those in `passthrough`, which are
+    /// returned to the caller along with their parsed body.
+    fn call_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+        idempotent: bool,
+        passthrough: &[u16],
+    ) -> Result<(u16, Json)> {
+        let (status, resp) = self.request(method, path, body, idempotent)?;
+        let parsed = json::parse(&resp)
+            .map_err(|e| anyhow!("unparseable response (status {status}): {e}: {resp}"))?;
+        if (200..300).contains(&status) || passthrough.contains(&status) {
+            return Ok((status, parsed));
+        }
+        match ApiError::from_json(&parsed) {
+            Ok(e) => bail!("{}: {}", e.code, e.message),
+            Err(_) => bail!("HTTP {status}: {resp}"),
+        }
+    }
+
+    fn call(&mut self, method: &str, path: &str, body: &str, idempotent: bool) -> Result<Json> {
+        Ok(self.call_with(method, path, body, idempotent, &[])?.1)
+    }
+
+    /// `GET /v1/healthz` — true when the server answers.
+    pub fn health(&mut self) -> Result<bool> {
+        let j = self.call("GET", "/v1/healthz", "", true)?;
+        Ok(j.get("ok").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    /// `POST /v1/jobs` — submit a model; returns the job id.
+    pub fn submit(&mut self, model: &str, batch: u32, samples: u64) -> Result<u64> {
+        let body = SubmitRequestV1 { model: model.to_string(), batch, samples }
+            .to_json()
+            .to_string_compact();
+        // A lost response leaves it unknown whether the job was created:
+        // never auto-retried.
+        let j = self.call("POST", "/v1/jobs", &body, false)?;
+        Ok(SubmitResponseV1::from_json(&j).map_err(|e| anyhow!(e))?.job_id)
+    }
+
+    /// `GET /v1/jobs/<id>` — `None` when the job does not exist.
+    pub fn status(&mut self, id: u64) -> Result<Option<JobStatusV1>> {
+        let (status, j) =
+            self.call_with("GET", &format!("/v1/jobs/{id}"), "", true, &[404])?;
+        if status == 404 {
+            return Ok(None);
+        }
+        Ok(Some(JobStatusV1::from_json(&j).map_err(|e| anyhow!(e))?))
+    }
+
+    /// `POST /v1/jobs/<id>/cancel` — errors on unknown (404) or
+    /// already-terminal (409) jobs.
+    pub fn cancel(&mut self, id: u64) -> Result<CancelResponseV1> {
+        let j = self.call("POST", &format!("/v1/jobs/{id}/cancel"), "", false)?;
+        CancelResponseV1::from_json(&j).map_err(|e| anyhow!(e))
+    }
+
+    /// `GET /v1/jobs` — filtered, paginated job listing.
+    pub fn list(&mut self, req: &ListRequestV1) -> Result<ListResponseV1> {
+        let q = req.to_query();
+        let path =
+            if q.is_empty() { "/v1/jobs".to_string() } else { format!("/v1/jobs?{q}") };
+        let j = self.call("GET", &path, "", true)?;
+        ListResponseV1::from_json(&j).map_err(|e| anyhow!(e))
+    }
+
+    /// `POST /v1/predict` — MARP dry-run; nothing is enqueued.
+    pub fn predict(&mut self, model: &str, batch: u32) -> Result<PredictResponseV1> {
+        let body =
+            PredictRequestV1 { model: model.to_string(), batch }.to_json().to_string_compact();
+        // POST but a pure dry-run: safe to retry on a stale connection.
+        let j = self.call("POST", "/v1/predict", &body, true)?;
+        PredictResponseV1::from_json(&j).map_err(|e| anyhow!(e))
+    }
+
+    /// `GET /v1/cluster` — aggregate GPU availability.
+    pub fn cluster(&mut self) -> Result<ClusterInfoV1> {
+        let j = self.call("GET", "/v1/cluster", "", true)?;
+        ClusterInfoV1::from_json(&j).map_err(|e| anyhow!(e))
+    }
+}

@@ -1,187 +1,28 @@
-//! Minimal HTTP/1.1 front-end for the serverless API (no web framework is
-//! available offline; ~RFC-compliant subset: request line, headers,
-//! Content-Length bodies, JSON payloads).
+//! Back-compat shim for the pre-v1 HTTP module.
 //!
-//! Routes:
-//! * `POST /jobs`    body `{"model": "...", "batch": N, "samples": N}` →
-//!   `{"job_id": N}` — the entire serverless contract: no GPU counts.
-//! * `GET /jobs/<id>` → job status JSON
-//! * `GET /cluster`  → `{total_gpus, idle_gpus, utilization}`
-//! * `GET /healthz`  → 200 ok
+//! The implementation moved in the v1 API redesign:
+//! * DTOs + error envelope → [`super::api`],
+//! * parsing, routing, and the thread-pool server → [`super::server`],
+//! * the Rust SDK → [`super::client`].
+//!
+//! Unversioned routes (`/jobs`, `/jobs/<id>`, `/cluster`, `/healthz`) keep
+//! working through the server's alias table — and keep the old
+//! close-after-response semantics (pre-v1 clients read to EOF), while `/v1`
+//! paths get keep-alive. The old entry points are re-exported here so
+//! existing callers compile unchanged. New code should use
+//! [`super::server`] / [`super::client`] directly.
 
-use super::{Handle, SubmitRequest};
-use crate::job::JobState;
-use crate::util::json::{self, Json};
-use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-
-/// A parsed request.
-#[derive(Debug, Clone, PartialEq)]
-pub struct Request {
-    pub method: String,
-    pub path: String,
-    pub body: String,
-}
-
-/// Parse one HTTP request from a stream.
-pub fn parse_request(reader: &mut impl BufRead) -> Result<Request> {
-    let mut line = String::new();
-    reader.read_line(&mut line).context("reading request line")?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or_default().to_string();
-    let path = parts.next().unwrap_or_default().to_string();
-    let mut content_length = 0usize;
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h).context("reading header")?;
-        let h = h.trim();
-        if h.is_empty() {
-            break;
-        }
-        if let Some((k, v)) = h.split_once(':') {
-            if k.eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().unwrap_or(0);
-            }
-        }
-    }
-    let mut body = vec![0u8; content_length.min(1 << 20)];
-    if content_length > 0 {
-        reader.read_exact(&mut body).context("reading body")?;
-    }
-    Ok(Request { method, path, body: String::from_utf8_lossy(&body).to_string() })
-}
-
-fn respond(stream: &mut TcpStream, status: u16, body: &str) {
-    let reason = match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        _ => "Error",
-    };
-    let _ = write!(
-        stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    );
-}
-
-fn state_str(s: JobState) -> &'static str {
-    match s {
-        JobState::Queued => "queued",
-        JobState::Running => "running",
-        JobState::Completed => "completed",
-        JobState::Rejected => "rejected",
-    }
-}
-
-/// Route one request against the coordinator. Returns (status, body).
-pub fn route(handle: &Handle, req: &Request) -> (u16, String) {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => (200, r#"{"ok":true}"#.to_string()),
-        ("GET", "/cluster") => match handle.cluster_info() {
-            Ok((total, idle, util)) => {
-                let mut j = Json::obj();
-                j.set("total_gpus", total as u64)
-                    .set("idle_gpus", idle as u64)
-                    .set("utilization", util);
-                (200, j.to_string_compact())
-            }
-            Err(e) => (500, format!(r#"{{"error":"{e}"}}"#)),
-        },
-        ("POST", "/jobs") => {
-            let parsed = match json::parse(&req.body) {
-                Ok(p) => p,
-                Err(e) => return (400, format!(r#"{{"error":"bad json: {e}"}}"#)),
-            };
-            let model = parsed.get("model").and_then(Json::as_str).unwrap_or_default().to_string();
-            let batch = parsed.get("batch").and_then(Json::as_u64).unwrap_or(0) as u32;
-            let samples = parsed.get("samples").and_then(Json::as_u64).unwrap_or(0);
-            if model.is_empty() || batch == 0 || samples == 0 {
-                return (400, r#"{"error":"need model, batch>0, samples>0"}"#.to_string());
-            }
-            match handle.submit(SubmitRequest { model, global_batch: batch, total_samples: samples })
-            {
-                Ok(id) => {
-                    let mut j = Json::obj();
-                    j.set("job_id", id);
-                    (200, j.to_string_compact())
-                }
-                Err(e) => (400, format!(r#"{{"error":"{e}"}}"#)),
-            }
-        }
-        ("GET", p) if p.starts_with("/jobs/") => {
-            let Ok(id) = p["/jobs/".len()..].parse::<u64>() else {
-                return (400, r#"{"error":"bad job id"}"#.to_string());
-            };
-            match handle.status(id) {
-                Ok(Some(st)) => {
-                    let mut j = Json::obj();
-                    j.set("job_id", st.id)
-                        .set("name", st.name.as_str())
-                        .set("state", state_str(st.state))
-                        .set("gpus", st.gpus as u64);
-                    let losses: Vec<Json> = st
-                        .losses
-                        .iter()
-                        .map(|(s, l)| {
-                            let mut o = Json::obj();
-                            o.set("step", *s).set("loss", *l as f64);
-                            o
-                        })
-                        .collect();
-                    j.set("losses", Json::Arr(losses));
-                    (200, j.to_string_compact())
-                }
-                Ok(None) => (404, r#"{"error":"no such job"}"#.to_string()),
-                Err(e) => (500, format!(r#"{{"error":"{e}"}}"#)),
-            }
-        }
-        _ => (404, r#"{"error":"no such route"}"#.to_string()),
-    }
-}
-
-/// Serve until `stop` is set. Binds to `addr` (e.g. "127.0.0.1:8080");
-/// returns the actual bound address (useful with port 0 in tests).
-pub fn serve(handle: Handle, addr: &str, stop: Arc<AtomicBool>) -> Result<std::net::SocketAddr> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    let local = listener.local_addr()?;
-    listener.set_nonblocking(true)?;
-    std::thread::spawn(move || {
-        while !stop.load(Ordering::Relaxed) {
-            match listener.accept() {
-                Ok((mut stream, _)) => {
-                    let h = handle.clone();
-                    std::thread::spawn(move || {
-                        stream.set_nonblocking(false).ok();
-                        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
-                        match parse_request(&mut reader) {
-                            Ok(req) => {
-                                let (status, body) = route(&h, &req);
-                                respond(&mut stream, status, &body);
-                            }
-                            Err(_) => respond(&mut stream, 400, r#"{"error":"bad request"}"#),
-                        }
-                    });
-                }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(10));
-                }
-                Err(_) => break,
-            }
-        }
-    });
-    Ok(local)
-}
+pub use super::server::{parse_request, route, serve, Request};
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::real_testbed;
-    use crate::serverless::{spawn, CoordinatorConfig};
-    use std::io::Read;
+    use crate::serverless::{spawn, CoordinatorConfig, Handle};
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
 
     fn test_handle() -> Handle {
         let cfg = CoordinatorConfig { execute_training: false, ..CoordinatorConfig::default() };
@@ -190,7 +31,7 @@ mod tests {
     }
 
     #[test]
-    fn parse_request_with_body() {
+    fn legacy_parse_request_signature() {
         let raw = "POST /jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
         let mut r = std::io::BufReader::new(raw.as_bytes());
         let req = parse_request(&mut r).unwrap();
@@ -200,43 +41,20 @@ mod tests {
     }
 
     #[test]
-    fn route_health_and_cluster() {
+    fn legacy_route_signature_and_aliases() {
         let h = test_handle();
-        let (s, b) = route(&h, &Request { method: "GET".into(), path: "/healthz".into(), body: String::new() });
+        let (s, b) = route(
+            &h,
+            &Request { method: "GET".into(), path: "/healthz".into(), body: String::new() },
+        );
         assert_eq!(s, 200);
         assert!(b.contains("true"));
-        let (s, b) = route(&h, &Request { method: "GET".into(), path: "/cluster".into(), body: String::new() });
+        let (s, b) = route(
+            &h,
+            &Request { method: "GET".into(), path: "/cluster".into(), body: String::new() },
+        );
         assert_eq!(s, 200);
         assert!(b.contains("total_gpus"));
-        h.shutdown();
-    }
-
-    #[test]
-    fn route_submit_and_status() {
-        let h = test_handle();
-        let (s, b) = route(
-            &h,
-            &Request {
-                method: "POST".into(),
-                path: "/jobs".into(),
-                body: r#"{"model":"gpt2-350m","batch":8,"samples":100}"#.into(),
-            },
-        );
-        assert_eq!(s, 200, "{b}");
-        let id = crate::util::json::parse(&b).unwrap().get("job_id").unwrap().as_u64().unwrap();
-        h.drain().unwrap();
-        let (s, b) = route(
-            &h,
-            &Request { method: "GET".into(), path: format!("/jobs/{id}"), body: String::new() },
-        );
-        assert_eq!(s, 200);
-        assert!(b.contains("completed"), "{b}");
-        h.shutdown();
-    }
-
-    #[test]
-    fn route_errors() {
-        let h = test_handle();
         let bad = |method: &str, path: &str, body: &str| {
             route(&h, &Request { method: method.into(), path: path.into(), body: body.into() }).0
         };
@@ -250,12 +68,14 @@ mod tests {
     }
 
     #[test]
-    fn end_to_end_over_tcp() {
+    fn legacy_end_to_end_over_tcp() {
         let h = test_handle();
         let stop = Arc::new(AtomicBool::new(false));
         let addr = serve(h.clone(), "127.0.0.1:0", stop.clone()).unwrap();
         let mut stream = TcpStream::connect(addr).unwrap();
         let body = r#"{"model":"gpt2-350m","batch":8,"samples":50}"#;
+        // Deliberately no `Connection: close`: pre-v1 clients read to EOF,
+        // so unversioned paths must auto-close after the response.
         write!(
             stream,
             "POST /jobs HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
@@ -267,6 +87,7 @@ mod tests {
         stream.read_to_string(&mut response).unwrap();
         assert!(response.starts_with("HTTP/1.1 200"), "{response}");
         assert!(response.contains("job_id"));
+        assert!(response.contains("Connection: close"), "{response}");
         stop.store(true, Ordering::Relaxed);
         h.shutdown();
     }

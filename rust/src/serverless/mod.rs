@@ -2,23 +2,32 @@
 //!
 //! [`Coordinator`] is the live (non-simulated) control plane:
 //! * accepts job submissions (model + batch + sample budget) via a channel
-//!   API (and over HTTP through [`http`]),
+//!   API (and over HTTP through [`server`]),
 //! * runs MARP → HAS on every state change,
 //! * holds allocations in the [`crate::cluster::Orchestrator`],
 //! * dispatches *real* training work for scheduled jobs to the PJRT
 //!   [`crate::runtime::executor::TrainExecutor`] (scaled-down step counts —
 //!   the CPU stands in for the GPUs; see DESIGN.md §6),
-//! * releases resources on completion and reports outcomes.
+//! * releases resources on completion and reports outcomes,
+//! * supports the full v1 job lifecycle: cancel (queued or running),
+//!   filtered/paginated listing, and MARP dry-run prediction.
 //!
 //! The coordinator thread owns all mutable state; clients talk to it through
-//! message passing, so there are no locks on the scheduling path.
+//! message passing, so there are no locks on the scheduling path. The v1
+//! HTTP surface is split across [`api`] (typed DTOs), [`server`]
+//! (thread-pool HTTP front-end), and [`client`] (the blocking Rust SDK);
+//! [`http`] re-exports the pre-v1 entry points.
 
+pub mod api;
+pub mod client;
 pub mod http;
+pub mod server;
 
 use crate::cluster::Orchestrator;
 use crate::config::ClusterSpec;
 use crate::job::{JobId, JobOutcome, JobSpec, JobState};
-use crate::marp::Marp;
+use crate::marp::{Marp, ResourcePlan};
+use crate::memory::TrainConfig;
 use crate::metrics::RunReport;
 use crate::runtime::executor::{TrainExecutor, TrainRequest, TrainResult};
 use crate::sched::{has::Has, PendingJob, Scheduler};
@@ -47,9 +56,68 @@ pub struct JobStatus {
     pub finish_time: Option<f64>,
 }
 
+/// Result of a cancel request.
+#[derive(Debug, Clone)]
+pub enum CancelOutcome {
+    /// The job was queued or running and is now cancelled.
+    Cancelled(JobStatus),
+    /// The job had already reached a terminal state; nothing changed.
+    AlreadyTerminal(JobStatus),
+    /// No job with that id exists.
+    NotFound,
+}
+
+/// One page of a filtered job listing.
+#[derive(Debug, Clone)]
+pub struct ListPage {
+    /// Jobs on this page, ascending by id.
+    pub jobs: Vec<JobStatus>,
+    /// Jobs matching the filter before pagination.
+    pub total: usize,
+}
+
+/// One GPU type present in the cluster (aggregated over nodes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuTypeInfo {
+    pub name: String,
+    pub mem_bytes: u64,
+    pub count: u32,
+}
+
+impl GpuTypeInfo {
+    /// Aggregate a cluster's nodes into per-GPU-type totals.
+    pub fn aggregate(spec: &ClusterSpec) -> Vec<GpuTypeInfo> {
+        let mut types: Vec<GpuTypeInfo> = Vec::new();
+        for n in &spec.nodes {
+            match types.iter_mut().find(|g| g.name == n.gpu.name) {
+                Some(g) => g.count += n.count,
+                None => types.push(GpuTypeInfo {
+                    name: n.gpu.name.to_string(),
+                    mem_bytes: n.gpu.mem_bytes,
+                    count: n.count,
+                }),
+            }
+        }
+        types
+    }
+}
+
+/// MARP dry-run result for `POST /v1/predict`: the ranked plans plus the
+/// cluster's GPU-type inventory, with nothing enqueued.
+#[derive(Debug, Clone)]
+pub struct PredictReport {
+    pub model: String,
+    pub batch: u32,
+    pub plans: Vec<ResourcePlan>,
+    pub gpu_types: Vec<GpuTypeInfo>,
+}
+
 enum Msg {
     Submit(SubmitRequest, mpsc::Sender<Result<JobId, String>>),
     Query(JobId, mpsc::Sender<Option<JobStatus>>),
+    Cancel(JobId, mpsc::Sender<CancelOutcome>),
+    List(api::ListRequestV1, mpsc::Sender<ListPage>),
+    Predict(String, u32, mpsc::Sender<Result<PredictReport, String>>),
     ClusterInfo(mpsc::Sender<(u32, u32, f64)>),
     Report(mpsc::Sender<RunReport>),
     TrainDone(TrainResult),
@@ -64,36 +132,67 @@ pub struct Handle {
 }
 
 impl Handle {
-    pub fn submit(&self, req: SubmitRequest) -> Result<JobId> {
+    fn ask<T>(&self, make: impl FnOnce(mpsc::Sender<T>) -> Msg) -> Result<T> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Msg::Submit(req, rtx)).map_err(|_| anyhow!("coordinator gone"))?;
-        rrx.recv().map_err(|_| anyhow!("coordinator gone"))?.map_err(|e| anyhow!(e))
+        self.tx.send(make(rtx)).map_err(|_| anyhow!("coordinator gone"))?;
+        rrx.recv().map_err(|_| anyhow!("coordinator gone"))
+    }
+
+    pub fn submit(&self, req: SubmitRequest) -> Result<JobId> {
+        self.try_submit(req)?.map_err(|e| anyhow!(e))
+    }
+
+    /// Like [`Handle::submit`], but keeps transport failures (outer `Err`:
+    /// coordinator gone) separate from domain rejections (inner `Err`:
+    /// unknown model) so callers can map them to 500 vs 400.
+    pub fn try_submit(&self, req: SubmitRequest) -> Result<std::result::Result<JobId, String>> {
+        self.ask(|rtx| Msg::Submit(req, rtx))
     }
 
     pub fn status(&self, id: JobId) -> Result<Option<JobStatus>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Msg::Query(id, rtx)).map_err(|_| anyhow!("coordinator gone"))?;
-        rrx.recv().map_err(|_| anyhow!("coordinator gone"))
+        self.ask(|rtx| Msg::Query(id, rtx))
+    }
+
+    /// Cancel a queued or running job; terminal jobs are left untouched.
+    pub fn cancel(&self, id: JobId) -> Result<CancelOutcome> {
+        self.ask(|rtx| Msg::Cancel(id, rtx))
+    }
+
+    /// Filtered, paginated job listing (ascending id order).
+    pub fn list(&self, req: &api::ListRequestV1) -> Result<ListPage> {
+        let req = req.clone();
+        self.ask(|rtx| Msg::List(req, rtx))
+    }
+
+    /// MARP dry-run: ranked plans for a model+batch without enqueueing
+    /// anything. Errors on unknown model names.
+    pub fn predict(&self, model: &str, batch: u32) -> Result<PredictReport> {
+        self.try_predict(model, batch)?.map_err(|e| anyhow!(e))
+    }
+
+    /// Like [`Handle::predict`], but keeps transport failures (outer `Err`)
+    /// separate from domain errors (inner `Err`: unknown model).
+    pub fn try_predict(
+        &self,
+        model: &str,
+        batch: u32,
+    ) -> Result<std::result::Result<PredictReport, String>> {
+        let model = model.to_string();
+        self.ask(|rtx| Msg::Predict(model, batch, rtx))
     }
 
     /// (total gpus, idle gpus, utilization)
     pub fn cluster_info(&self) -> Result<(u32, u32, f64)> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Msg::ClusterInfo(rtx)).map_err(|_| anyhow!("coordinator gone"))?;
-        rrx.recv().map_err(|_| anyhow!("coordinator gone"))
+        self.ask(Msg::ClusterInfo)
     }
 
     pub fn report(&self) -> Result<RunReport> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Msg::Report(rtx)).map_err(|_| anyhow!("coordinator gone"))?;
-        rrx.recv().map_err(|_| anyhow!("coordinator gone"))
+        self.ask(Msg::Report)
     }
 
     /// Block until every submitted job reached a terminal state.
     pub fn drain(&self) -> Result<()> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Msg::Drain(rtx)).map_err(|_| anyhow!("coordinator gone"))?;
-        rrx.recv().map_err(|_| anyhow!("coordinator gone"))
+        self.ask(Msg::Drain)
     }
 
     pub fn shutdown(&self) {
@@ -112,6 +211,20 @@ struct LiveJob {
     attempts: u32,
 }
 
+impl LiveJob {
+    fn status(&self) -> JobStatus {
+        JobStatus {
+            id: self.spec.id,
+            name: self.spec.name.clone(),
+            state: self.state,
+            gpus: self.gpus,
+            losses: self.losses.clone(),
+            submit_time: self.submit_t,
+            finish_time: self.finish_t,
+        }
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -123,6 +236,10 @@ pub struct CoordinatorConfig {
     /// Model variant actually trained on CPU for any job (the scheduled
     /// model may be e.g. gpt2-7b; the executor runs its tiny stand-in).
     pub runtime_model: String,
+    /// Artificial latency of the timing stub (ms). Zero completes jobs
+    /// instantly; tests use a nonzero value to observe `Running` jobs and
+    /// exercise cancel-while-running.
+    pub stub_delay_ms: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -132,6 +249,7 @@ impl Default for CoordinatorConfig {
             execute_training: true,
             artifacts_dir: crate::util::repo_path("artifacts"),
             runtime_model: "gpt2-tiny".into(),
+            stub_delay_ms: 0,
         }
     }
 }
@@ -145,6 +263,63 @@ pub fn spawn(spec: ClusterSpec, cfg: CoordinatorConfig) -> (Handle, std::thread:
         .spawn(move || coordinator_loop(spec, cfg, rx, tx_internal))
         .expect("spawn coordinator");
     (Handle { tx }, handle)
+}
+
+/// Start training (or the stub) for every job in `started`.
+fn dispatch_jobs(
+    started: &[(JobId, u32)],
+    jobs: &HashMap<JobId, LiveJob>,
+    cfg: &CoordinatorConfig,
+    executor: &Option<TrainExecutor>,
+    tx_internal: &mpsc::Sender<Msg>,
+) {
+    for (jid, _) in started {
+        let job = &jobs[jid];
+        let steps = (job.spec.total_samples / job.spec.train.global_batch.max(1) as u64)
+            .clamp(1, cfg.max_real_steps);
+        if let Some(ex) = executor {
+            let rrx = ex
+                .submit(TrainRequest {
+                    job_id: *jid,
+                    model: cfg.runtime_model.clone(),
+                    steps,
+                    log_every: (steps / 10).max(1),
+                })
+                .expect("executor alive");
+            // Pump thread: forward the executor result into the mailbox.
+            let tx = tx_internal.clone();
+            std::thread::spawn(move || {
+                if let Ok(res) = rrx.recv() {
+                    let _ = tx.send(Msg::TrainDone(res));
+                }
+            });
+        } else {
+            let res = TrainResult {
+                job_id: *jid,
+                model: cfg.runtime_model.clone(),
+                steps,
+                losses: vec![(0, 0.0)],
+                final_loss: 0.0,
+                wall_s: 0.0,
+                error: None,
+            };
+            if cfg.stub_delay_ms == 0 {
+                // Timing stub: complete instantly.
+                let _ = tx_internal.send(Msg::TrainDone(res));
+            } else {
+                let tx = tx_internal.clone();
+                let delay = std::time::Duration::from_millis(cfg.stub_delay_ms);
+                std::thread::spawn(move || {
+                    std::thread::sleep(delay);
+                    let _ = tx.send(Msg::TrainDone(res));
+                });
+            }
+        }
+    }
+}
+
+fn all_terminal(jobs: &HashMap<JobId, LiveJob>, pending: &[PendingJob]) -> bool {
+    pending.is_empty() && jobs.values().all(|j| j.state.is_terminal())
 }
 
 fn coordinator_loop(
@@ -167,16 +342,6 @@ fn coordinator_loop(
         Some(TrainExecutor::spawn(cfg.artifacts_dir.clone()))
     } else {
         None
-    };
-
-    // In-flight executor requests: receivers polled by a pump thread that
-    // forwards results back into the coordinator mailbox.
-    let forward = |rrx: mpsc::Receiver<TrainResult>, tx: mpsc::Sender<Msg>| {
-        std::thread::spawn(move || {
-            if let Ok(res) = rrx.recv() {
-                let _ = tx.send(Msg::TrainDone(res));
-            }
-        });
     };
 
     let schedule = |orch: &mut Orchestrator,
@@ -259,42 +424,19 @@ fn coordinator_loop(
                     &mut sched_wall,
                     now(&t0),
                 );
-                for (jid, _) in started {
-                    let job = &jobs[&jid];
-                    let steps =
-                        (job.spec.total_samples / job.spec.train.global_batch.max(1) as u64)
-                            .clamp(1, cfg.max_real_steps);
-                    if let Some(ex) = &executor {
-                        let rrx = ex
-                            .submit(TrainRequest {
-                                job_id: jid,
-                                model: cfg.runtime_model.clone(),
-                                steps,
-                                log_every: (steps / 10).max(1),
-                            })
-                            .expect("executor alive");
-                        forward(rrx, tx_internal.clone());
-                    } else {
-                        // Timing stub: complete instantly.
-                        let _ = tx_internal.send(Msg::TrainDone(TrainResult {
-                            job_id: jid,
-                            model: cfg.runtime_model.clone(),
-                            steps,
-                            losses: vec![(0, 0.0)],
-                            final_loss: 0.0,
-                            wall_s: 0.0,
-                            error: None,
-                        }));
-                    }
-                }
+                dispatch_jobs(&started, &jobs, &cfg, &executor, &tx_internal);
             }
             Msg::TrainDone(res) => {
                 let clock = now(&t0);
                 if let Some(job) = jobs.get_mut(&res.job_id) {
-                    job.losses = res.losses.clone();
-                    job.finish_t = Some(clock);
-                    job.state = JobState::Completed;
-                    let _ = orch.release(res.job_id);
+                    // A cancelled job's in-flight result is discarded; its
+                    // resources were already released at cancel time.
+                    if job.state == JobState::Running {
+                        job.losses = res.losses.clone();
+                        job.finish_t = Some(clock);
+                        job.state = JobState::Completed;
+                        let _ = orch.release(res.job_id);
+                    }
                 }
                 // Newly freed resources: run another round, dispatching work
                 // for anything that starts.
@@ -307,54 +449,83 @@ fn coordinator_loop(
                     &mut sched_wall,
                     clock,
                 );
-                for (jid, _) in started {
-                    let job = &jobs[&jid];
-                    let steps =
-                        (job.spec.total_samples / job.spec.train.global_batch.max(1) as u64)
-                            .clamp(1, cfg.max_real_steps);
-                    if let Some(ex) = &executor {
-                        let rrx = ex
-                            .submit(TrainRequest {
-                                job_id: jid,
-                                model: cfg.runtime_model.clone(),
-                                steps,
-                                log_every: (steps / 10).max(1),
-                            })
-                            .expect("executor alive");
-                        forward(rrx, tx_internal.clone());
-                    } else {
-                        let _ = tx_internal.send(Msg::TrainDone(TrainResult {
-                            job_id: jid,
-                            model: cfg.runtime_model.clone(),
-                            steps,
-                            losses: vec![(0, 0.0)],
-                            final_loss: 0.0,
-                            wall_s: 0.0,
-                            error: None,
-                        }));
-                    }
-                }
-                // Drain bookkeeping.
-                let all_done = jobs
-                    .values()
-                    .all(|j| matches!(j.state, JobState::Completed | JobState::Rejected));
-                if all_done && pending.is_empty() {
+                dispatch_jobs(&started, &jobs, &cfg, &executor, &tx_internal);
+                if all_terminal(&jobs, &pending) {
                     for w in drain_waiters.drain(..) {
                         let _ = w.send(());
                     }
                 }
             }
             Msg::Query(id, reply) => {
-                let status = jobs.get(&id).map(|j| JobStatus {
-                    id,
-                    name: j.spec.name.clone(),
-                    state: j.state,
-                    gpus: j.gpus,
-                    losses: j.losses.clone(),
-                    submit_time: j.submit_t,
-                    finish_time: j.finish_t,
-                });
-                let _ = reply.send(status);
+                let _ = reply.send(jobs.get(&id).map(LiveJob::status));
+            }
+            Msg::Cancel(id, reply) => {
+                let clock = now(&t0);
+                let outcome = match jobs.get_mut(&id) {
+                    None => CancelOutcome::NotFound,
+                    Some(job) => match job.state {
+                        JobState::Queued => {
+                            pending.retain(|p| p.spec.id != id);
+                            job.state = JobState::Cancelled;
+                            job.finish_t = Some(clock);
+                            CancelOutcome::Cancelled(job.status())
+                        }
+                        JobState::Running => {
+                            let _ = orch.release(id);
+                            job.state = JobState::Cancelled;
+                            job.finish_t = Some(clock);
+                            CancelOutcome::Cancelled(job.status())
+                        }
+                        _ => CancelOutcome::AlreadyTerminal(job.status()),
+                    },
+                };
+                let freed = matches!(outcome, CancelOutcome::Cancelled(_));
+                let _ = reply.send(outcome);
+                if freed {
+                    // A cancel can free GPUs (running job) or just shrink the
+                    // queue; either way give waiters a chance.
+                    let started = schedule(
+                        &mut orch,
+                        &mut has,
+                        &mut pending,
+                        &mut jobs,
+                        &mut work_units,
+                        &mut sched_wall,
+                        now(&t0),
+                    );
+                    dispatch_jobs(&started, &jobs, &cfg, &executor, &tx_internal);
+                    if all_terminal(&jobs, &pending) {
+                        for w in drain_waiters.drain(..) {
+                            let _ = w.send(());
+                        }
+                    }
+                }
+            }
+            Msg::List(req, reply) => {
+                let mut matching: Vec<&LiveJob> = jobs
+                    .values()
+                    .filter(|j| req.state.map_or(true, |s| j.state == s))
+                    .collect();
+                matching.sort_by_key(|j| j.spec.id);
+                let total = matching.len();
+                let page = matching
+                    .into_iter()
+                    .skip(req.offset)
+                    .take(req.limit)
+                    .map(LiveJob::status)
+                    .collect();
+                let _ = reply.send(ListPage { jobs: page, total });
+            }
+            Msg::Predict(model_name, batch, reply) => {
+                let res = match crate::config::models::model_by_name(&model_name) {
+                    None => Err(format!("unknown model '{model_name}'")),
+                    Some(m) => {
+                        let plans = has.marp().plans(&m, &TrainConfig { global_batch: batch });
+                        let gpu_types = GpuTypeInfo::aggregate(&spec);
+                        Ok(PredictReport { model: model_name, batch, plans, gpu_types })
+                    }
+                };
+                let _ = reply.send(res);
             }
             Msg::ClusterInfo(reply) => {
                 let s = orch.state();
@@ -388,10 +559,7 @@ fn coordinator_loop(
                 ));
             }
             Msg::Drain(reply) => {
-                let all_done = jobs
-                    .values()
-                    .all(|j| matches!(j.state, JobState::Completed | JobState::Rejected));
-                if all_done && pending.is_empty() {
+                if all_terminal(&jobs, &pending) {
                     let _ = reply.send(());
                 } else {
                     drain_waiters.push(reply);
@@ -476,6 +644,72 @@ mod tests {
         for id in ids {
             assert_eq!(h.status(id).unwrap().unwrap().state, JobState::Completed);
         }
+        h.shutdown();
+    }
+
+    #[test]
+    fn cancel_unknown_and_terminal() {
+        let (h, _j) = spawn(real_testbed(), no_exec_cfg());
+        assert!(matches!(h.cancel(42).unwrap(), CancelOutcome::NotFound));
+        let id = h
+            .submit(SubmitRequest {
+                model: "gpt2-350m".into(),
+                global_batch: 8,
+                total_samples: 100,
+            })
+            .unwrap();
+        h.drain().unwrap();
+        match h.cancel(id).unwrap() {
+            CancelOutcome::AlreadyTerminal(st) => assert_eq!(st.state, JobState::Completed),
+            other => panic!("expected AlreadyTerminal, got {other:?}"),
+        }
+        h.shutdown();
+    }
+
+    #[test]
+    fn predict_is_a_pure_dry_run() {
+        let (h, _j) = spawn(real_testbed(), no_exec_cfg());
+        let report = h.predict("gpt2-7b", 2).unwrap();
+        assert!(!report.plans.is_empty());
+        assert_eq!(report.model, "gpt2-7b");
+        // 3 GPU types on the real testbed
+        assert_eq!(report.gpu_types.len(), 3);
+        assert_eq!(report.gpu_types.iter().map(|g| g.count).sum::<u32>(), 11);
+        assert!(h.predict("no-such-model", 2).is_err());
+        // Nothing was enqueued.
+        let page = h.list(&api::ListRequestV1::default()).unwrap();
+        assert_eq!(page.total, 0);
+        h.shutdown();
+    }
+
+    #[test]
+    fn list_filters_and_paginates() {
+        let (h, _j) = spawn(real_testbed(), no_exec_cfg());
+        for _ in 0..7 {
+            h.submit(SubmitRequest {
+                model: "gpt2-125m".into(),
+                global_batch: 4,
+                total_samples: 50,
+            })
+            .unwrap();
+        }
+        h.drain().unwrap();
+        let all = h.list(&api::ListRequestV1::default()).unwrap();
+        assert_eq!(all.total, 7);
+        assert_eq!(all.jobs.len(), 7);
+        let ids: Vec<u64> = all.jobs.iter().map(|j| j.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted, "listing must be ascending by id");
+        let page = h
+            .list(&api::ListRequestV1 { state: None, offset: 5, limit: 10 })
+            .unwrap();
+        assert_eq!(page.total, 7);
+        assert_eq!(page.jobs.len(), 2);
+        let empty = h
+            .list(&api::ListRequestV1 { state: Some(JobState::Queued), offset: 0, limit: 10 })
+            .unwrap();
+        assert_eq!(empty.total, 0);
         h.shutdown();
     }
 }

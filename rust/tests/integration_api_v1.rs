@@ -1,0 +1,281 @@
+//! Integration: the v1 serverless API end-to-end over TCP — typed SDK,
+//! predict dry-run, cancel/list lifecycle, keep-alive connections, the
+//! fixed-size worker pool, and the HTTP edge cases (405/413).
+
+use frenzy::config::{model_zoo, real_testbed, sia_sim};
+use frenzy::job::JobState;
+use frenzy::serverless::api::ListRequestV1;
+use frenzy::serverless::client::FrenzyClient;
+use frenzy::serverless::{server, spawn, CoordinatorConfig, Handle};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn start(
+    spec: frenzy::config::ClusterSpec,
+    stub_delay_ms: u64,
+) -> (Handle, SocketAddr, Arc<AtomicBool>) {
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        stub_delay_ms,
+        ..CoordinatorConfig::default()
+    };
+    let (h, _j) = spawn(spec, cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = server::serve(h.clone(), "127.0.0.1:0", stop.clone()).unwrap();
+    (h, addr, stop)
+}
+
+/// Read exactly one framed HTTP response off a kept-alive connection.
+fn read_framed(reader: &mut BufReader<TcpStream>) -> (u16, Vec<String>, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let h = h.trim().to_string();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap();
+        }
+        headers.push(h);
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).unwrap();
+    (status, headers, String::from_utf8_lossy(&body).to_string())
+}
+
+#[test]
+fn predict_dry_run_covers_every_zoo_model() {
+    let (h, addr, stop) = start(real_testbed(), 0);
+    let mut client = FrenzyClient::new(addr.to_string());
+    let gpu_types_in_cluster = 3; // real testbed: A100-40G, A800-80G, A100-80G
+    for model in model_zoo() {
+        let resp = client.predict(model.name, 4).unwrap();
+        assert_eq!(resp.model, model.name);
+        assert_eq!(resp.batch, 4);
+        assert!(resp.feasible, "{} should fit the real testbed", model.name);
+        let chosen = resp.chosen.as_ref().unwrap_or_else(|| panic!("{} has no chosen plan", model.name));
+        assert_eq!(chosen.d * chosen.t, chosen.gpus, "{}", model.name);
+        assert_eq!(resp.plans.first(), Some(chosen), "chosen = head of ranked list");
+        assert_eq!(resp.per_gpu_type.len(), gpu_types_in_cluster, "{}", model.name);
+        // Peak-memory prediction per GPU type: present iff some plan fits it,
+        // and never above the type's capacity.
+        assert!(
+            resp.per_gpu_type.iter().any(|g| g.predicted_peak_bytes.is_some()),
+            "{}: no GPU type can host a feasible plan?",
+            model.name
+        );
+        for g in &resp.per_gpu_type {
+            if let Some(peak) = g.predicted_peak_bytes {
+                assert!(peak <= g.mem_bytes, "{}: {} peak {peak} > mem", model.name, g.gpu);
+                assert_eq!(g.best_plan.as_ref().map(|p| p.predicted_bytes), Some(peak));
+                assert!(g.feasible_plans > 0);
+            } else {
+                assert_eq!(g.feasible_plans, 0);
+            }
+        }
+    }
+    // Dry runs created no jobs.
+    let page = client.list(&ListRequestV1::default()).unwrap();
+    assert_eq!(page.total, 0, "predict must not enqueue jobs");
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+#[test]
+fn cancel_queued_and_running_over_tcp() {
+    // Slow stub so jobs are observably Running; 12 jobs on 11 GPUs
+    // guarantees at least one stays Queued.
+    let (h, addr, stop) = start(real_testbed(), 1500);
+    let mut client = FrenzyClient::new(addr.to_string());
+    let mut ids = Vec::new();
+    for _ in 0..12 {
+        ids.push(client.submit("gpt2-1.3b", 16, 300).unwrap());
+    }
+    let queued = client
+        .list(&ListRequestV1 { state: Some(JobState::Queued), offset: 0, limit: 100 })
+        .unwrap();
+    assert!(queued.total >= 1, "12 jobs on 11 GPUs must leave one queued");
+    let running = client
+        .list(&ListRequestV1 { state: Some(JobState::Running), offset: 0, limit: 100 })
+        .unwrap();
+    assert!(running.total >= 1);
+
+    let queued_id = queued.jobs[0].job_id;
+    let resp = client.cancel(queued_id).unwrap();
+    assert!(resp.cancelled);
+    assert_eq!(resp.state, JobState::Cancelled);
+
+    let running_id = running.jobs[0].job_id;
+    let resp = client.cancel(running_id).unwrap();
+    assert!(resp.cancelled, "cancel-while-running");
+    assert_eq!(resp.state, JobState::Cancelled);
+
+    h.drain().unwrap();
+    // The stub's late TrainDone for the cancelled running job must not
+    // resurrect it to Completed.
+    assert_eq!(client.status(queued_id).unwrap().unwrap().state, JobState::Cancelled);
+    assert_eq!(client.status(running_id).unwrap().unwrap().state, JobState::Cancelled);
+    let completed = client
+        .list(&ListRequestV1 { state: Some(JobState::Completed), offset: 0, limit: 100 })
+        .unwrap();
+    assert_eq!(completed.total, 10);
+    // All resources released despite the mid-flight cancellation.
+    let info = client.cluster().unwrap();
+    assert_eq!(info.total_gpus, info.idle_gpus);
+    // Cancelling a terminal job now conflicts (409) …
+    let err = client.cancel(queued_id).unwrap_err().to_string();
+    assert!(err.contains("409"), "{err}");
+    // … and unknown jobs are 404.
+    let err = client.cancel(9999).unwrap_err().to_string();
+    assert!(err.contains("404"), "{err}");
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+#[test]
+fn list_pagination_edges() {
+    let (h, addr, stop) = start(sia_sim(), 0);
+    let mut client = FrenzyClient::new(addr.to_string());
+    for _ in 0..25 {
+        client.submit("gpt2-125m", 4, 50).unwrap();
+    }
+    h.drain().unwrap();
+    let p1 = client.list(&ListRequestV1 { state: None, offset: 0, limit: 10 }).unwrap();
+    assert_eq!((p1.total, p1.jobs.len()), (25, 10));
+    let p2 = client.list(&ListRequestV1 { state: None, offset: 10, limit: 10 }).unwrap();
+    assert_eq!(p2.jobs.len(), 10);
+    let p3 = client.list(&ListRequestV1 { state: None, offset: 20, limit: 10 }).unwrap();
+    assert_eq!(p3.jobs.len(), 5);
+    // Pages are disjoint and ascending overall.
+    let all: Vec<u64> = p1
+        .jobs
+        .iter()
+        .chain(p2.jobs.iter())
+        .chain(p3.jobs.iter())
+        .map(|j| j.job_id)
+        .collect();
+    let mut sorted = all.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(all.len(), 25);
+    assert_eq!(all, sorted);
+    // Offset past the end: empty page, correct total.
+    let p4 = client.list(&ListRequestV1 { state: None, offset: 100, limit: 10 }).unwrap();
+    assert_eq!((p4.total, p4.jobs.len()), (25, 0));
+    // State filter with no matches.
+    let p5 = client
+        .list(&ListRequestV1 { state: Some(JobState::Running), offset: 0, limit: 10 })
+        .unwrap();
+    assert_eq!((p5.total, p5.jobs.len()), (0, 0));
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+#[test]
+fn keep_alive_serves_many_requests_per_connection() {
+    let (h, addr, stop) = start(real_testbed(), 0);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for i in 0..5 {
+        write!(stream, "GET /v1/healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let (status, headers, body) = read_framed(&mut reader);
+        assert_eq!(status, 200, "request {i}");
+        assert!(body.contains("ok"));
+        assert!(
+            headers.iter().any(|h| h.to_ascii_lowercase() == "connection: keep-alive"),
+            "{headers:?}"
+        );
+    }
+    // The SDK reuses its connection too: several calls, one client.
+    let mut client = FrenzyClient::new(addr.to_string());
+    assert!(client.health().unwrap());
+    let id = client.submit("gpt2-350m", 8, 100).unwrap();
+    h.drain().unwrap();
+    assert_eq!(client.status(id).unwrap().unwrap().state, JobState::Completed);
+    assert!(client.cluster().unwrap().total_gpus > 0);
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+#[test]
+fn thread_pool_handles_concurrent_clients() {
+    let (h, addr, stop) = start(sia_sim(), 0);
+    let mut threads = Vec::new();
+    for _ in 0..8 {
+        let addr = addr.to_string();
+        threads.push(std::thread::spawn(move || {
+            let mut client = FrenzyClient::new(addr);
+            let mut ids = Vec::new();
+            for _ in 0..5 {
+                let id = client.submit("gpt2-350m", 8, 64).unwrap();
+                assert!(client.status(id).unwrap().is_some());
+                ids.push(id);
+            }
+            ids
+        }));
+    }
+    let mut all: Vec<u64> = threads.into_iter().flat_map(|t| t.join().unwrap()).collect();
+    assert_eq!(all.len(), 40);
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len(), 40, "job ids must be unique across concurrent clients");
+    h.drain().unwrap();
+    let report = h.report().unwrap();
+    assert_eq!(report.n_completed, 40);
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+#[test]
+fn oversized_body_gets_413_not_truncation() {
+    let (h, addr, stop) = start(real_testbed(), 0);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    // Declare a body bigger than the 1 MiB cap; send only a prefix.
+    write!(
+        stream,
+        "POST /v1/jobs HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        2 * 1024 * 1024
+    )
+    .unwrap();
+    stream.write_all(&[b'x'; 1024]).unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).unwrap();
+    assert!(response.starts_with("HTTP/1.1 413"), "{response}");
+    assert!(response.contains("Connection: close"), "oversized request must close");
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+#[test]
+fn wrong_method_gets_405_with_allow_header() {
+    let (h, addr, stop) = start(real_testbed(), 0);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream, "DELETE /v1/cluster HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).unwrap();
+    assert!(response.starts_with("HTTP/1.1 405"), "{response}");
+    assert!(response.contains("Allow: GET"), "{response}");
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+#[test]
+fn error_bodies_parse_as_json_over_tcp() {
+    let (h, addr, stop) = start(real_testbed(), 0);
+    let mut client = FrenzyClient::new(addr.to_string());
+    // Hostile model name: the old format!-built error body would emit
+    // broken JSON here; the SDK's parse would fail loudly.
+    let err = client.submit(r#"mo"del\with"quotes"#, 8, 100).unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+    assert!(err.contains("unknown model"), "{err}");
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}

@@ -47,15 +47,22 @@ fn http_full_cycle_over_tcp() {
     let stop = Arc::new(AtomicBool::new(false));
     let addr = frenzy::serverless::http::serve(h.clone(), "127.0.0.1:0", stop.clone()).unwrap();
 
+    // `Connection: close` so read_to_string sees EOF (the v1 server keeps
+    // HTTP/1.1 connections alive by default).
     let post = |body: &str| -> (u16, String) {
         let mut s = std::net::TcpStream::connect(addr).unwrap();
-        write!(s, "POST /jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}", body.len(), body)
-            .unwrap();
+        write!(
+            s,
+            "POST /jobs HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
         read_response(s)
     };
     let get = |path: &str| -> (u16, String) {
         let mut s = std::net::TcpStream::connect(addr).unwrap();
-        write!(s, "GET {path} HTTP/1.1\r\n\r\n").unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
         read_response(s)
     };
 
