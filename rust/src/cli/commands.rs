@@ -1,17 +1,22 @@
 //! Serverless CLI subcommands — every one goes through the v1 API.
 //!
-//! `submit`, `status`, `cancel`, and `list` talk to a running `frenzy serve`
-//! instance over TCP via [`FrenzyClient`]. `predict` does the same when
-//! `--addr` is given, and falls back to running MARP in-process otherwise
-//! (so the dry-run works without a server). `serve` starts the coordinator
-//! plus the thread-pool HTTP front-end.
+//! `submit`, `status`, `cancel`, `list`, and `scale` talk to a running
+//! `frenzy serve` instance over TCP via [`FrenzyClient`]. `predict` does the
+//! same when `--addr` is given, and falls back to running MARP in-process
+//! otherwise (so the dry-run works without a server). `serve` starts the
+//! coordinator plus the thread-pool HTTP front-end. `replay` drives a
+//! workload trace through the **live** engine (wall-clock coordinator +
+//! timing stub) instead of the simulator — same
+//! [`crate::engine::SchedulingEngine`], different clock.
 
 use super::Args;
 use crate::config::cluster_by_name;
-use crate::serverless::api::{JobStatusV1, ListRequestV1, PlanV1, state_from_str};
+use crate::job::JobSpec;
+use crate::serverless::api::{JobStatusV1, ListRequestV1, PlanV1, ScaleRequestV1, state_from_str};
 use crate::serverless::client::FrenzyClient;
-use crate::serverless::{CoordinatorConfig, PredictReport};
-use crate::util::table::{fmt_bytes, Table};
+use crate::serverless::{CoordinatorConfig, PredictReport, SubmitRequest};
+use crate::util::table::{fmt_bytes, fmt_duration, Table};
+use crate::workload::{helios, newworkload, philly, trace};
 use anyhow::{anyhow, bail, Result};
 
 /// Default server address (matches `frenzy serve`).
@@ -28,6 +33,17 @@ pub fn cluster_arg(args: &Args) -> Result<crate::config::ClusterSpec> {
         return Ok(c);
     }
     crate::config::cluster_file::load_cluster(name)
+}
+
+/// Resolve `--workload` into a job trace: a named generator or a trace
+/// file path (shared by `frenzy simulate` and `frenzy replay`).
+pub fn load_workload(name: &str, n: usize, seed: u64) -> Result<Vec<JobSpec>> {
+    Ok(match name {
+        "newworkload" => newworkload::generate(n, seed),
+        "philly" => philly::generate(n, seed),
+        "helios" => helios::generate(n, seed),
+        other => trace::load(other)?, // treat as a trace file
+    })
 }
 
 /// First positional argument parsed as a job id (or `--id`).
@@ -188,6 +204,107 @@ pub fn cmd_predict(args: &Args) -> Result<()> {
             fmt_bytes(chosen.min_gpu_mem)
         );
     }
+    Ok(())
+}
+
+/// `frenzy scale --join --gpu <type> [--count N] [--link nvlink|pcie] [--addr A]`
+/// `frenzy scale --leave <node> [--addr A]`
+///
+/// Elastic cluster scaling against a running server: join a node of
+/// catalog GPUs, or retire a node (its jobs are preempted and requeued).
+pub fn cmd_scale(args: &Args) -> Result<()> {
+    let req = if let Some(node) = args.opt_parse::<usize>("leave")? {
+        ScaleRequestV1::Leave { node }
+    } else if args.flag("join") || args.opt("gpu").is_some() {
+        let link = args.opt_or("link", "pcie");
+        ScaleRequestV1::Join {
+            gpu: args.require("gpu")?.to_string(),
+            count: args.opt_parse_or("count", 1u32)?,
+            link: crate::serverless::api::link_from_str(link)
+                .ok_or_else(|| anyhow!("unknown link '{link}' (nvlink|pcie)"))?,
+        }
+    } else {
+        bail!("expected --join --gpu <type> [--count N] [--link nvlink|pcie] or --leave <node>");
+    };
+    let mut c = client(args);
+    let resp = c.scale(&req)?;
+    // Displaced jobs are usually requeued, but one past its attempt budget
+    // is rejected instead — point the operator at status, don't promise.
+    let preempted = if resp.preempted.is_empty() {
+        String::new()
+    } else {
+        format!("; preempted jobs {:?} — check `frenzy status`", resp.preempted)
+    };
+    println!(
+        "cluster scaled ({}): node {} — {} GPUs total, {} idle{}",
+        resp.op, resp.node, resp.total_gpus, resp.idle_gpus, preempted
+    );
+    Ok(())
+}
+
+/// `frenzy replay --workload philly --tasks 20 [--speedup 1000] [--stub-ms 20]
+///               [--cluster real|sim] [--seed S]`
+///
+/// Replays a workload trace through the **live** scheduling path: spawns
+/// the wall-clock coordinator with the timing stub as executor, submits the
+/// trace's jobs in arrival order (inter-arrival gaps divided by
+/// `--speedup`, capped at 250 ms each), drains, and prints the run report.
+/// Because the live coordinator and the simulator share one
+/// `SchedulingEngine`, this exercises exactly the code the figures
+/// simulate — on real threads, real time, and the real dispatch path.
+pub fn cmd_replay(args: &Args) -> Result<()> {
+    let cluster = cluster_arg(args)?;
+    let n: usize = args.opt_parse_or("tasks", 20)?;
+    let seed: u64 = args.opt_parse_or("seed", 11)?;
+    let speedup: f64 = args.opt_parse_or("speedup", 1000.0)?;
+    let stub_ms: u64 = args.opt_parse_or("stub-ms", 20)?;
+    let workload = args.opt_or("workload", "newworkload");
+    let jobs = load_workload(workload, n, seed)?;
+    if speedup <= 0.0 {
+        bail!("--speedup must be > 0");
+    }
+
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        stub_delay_ms: stub_ms,
+        ..CoordinatorConfig::default()
+    };
+    let (h, _join) = crate::serverless::spawn(cluster.clone(), cfg);
+    println!(
+        "replaying {} jobs from '{}' through the live engine on {} ({}x speedup, {} ms stub)",
+        jobs.len(),
+        workload,
+        cluster.name,
+        speedup,
+        stub_ms
+    );
+    let mut last_submit = 0.0f64;
+    for j in &jobs {
+        let gap = ((j.submit_time - last_submit) / speedup).clamp(0.0, 0.25);
+        if gap > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(gap));
+        }
+        last_submit = j.submit_time;
+        h.submit(SubmitRequest {
+            model: j.model.name.to_string(),
+            global_batch: j.train.global_batch,
+            total_samples: j.total_samples,
+        })?;
+    }
+    h.drain()?;
+    let report = h.report()?;
+    let decisions = h.decisions()?;
+    let title = format!("live replay: {} on {} ({} jobs)", workload, cluster.name, jobs.len());
+    let mut t = Table::new(&["metric", "value"]).with_title(&title);
+    t.row_str(&["completed", &report.n_completed.to_string()]);
+    t.row_str(&["rejected", &report.n_rejected.to_string()]);
+    t.row_str(&["placements", &decisions.len().to_string()]);
+    t.row_str(&["avg JCT (wall)", &fmt_duration(report.avg_jct_s)]);
+    t.row_str(&["avg queue (wall)", &fmt_duration(report.avg_queue_s)]);
+    t.row_str(&["sched overhead (wall)", &fmt_duration(report.sched_overhead_s)]);
+    t.row_str(&["utilization", &format!("{:.1}%", report.avg_utilization * 100.0)]);
+    println!("{}", t.render());
+    h.shutdown();
     Ok(())
 }
 

@@ -2,7 +2,7 @@
 //! component): tracks idle GPUs per node, executes allocations and releases,
 //! and maintains the job→resources ledger.
 
-use crate::config::{ClusterSpec, GpuSpec, LinkKind};
+use crate::config::{ClusterSpec, GpuSpec, LinkKind, NodeSpec};
 use crate::job::JobId;
 use std::collections::BTreeMap;
 
@@ -147,6 +147,41 @@ impl ClusterState {
         n.idle = (n.idle + count).min(n.total);
         Ok(())
     }
+
+    /// Append a node (elastic NodeJoin); returns its id. Node ids are
+    /// stable for the lifetime of the cluster: a removed node is *retired*
+    /// in place (`total = 0`) rather than spliced out, so ids held by
+    /// allocations and decision logs never shift.
+    pub fn add_node(&mut self, spec: &NodeSpec) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            gpu: spec.gpu.clone(),
+            total: spec.count,
+            idle: spec.count,
+            link: spec.link,
+        });
+        id
+    }
+
+    /// Nodes still part of the cluster (not retired by a NodeLeave).
+    pub fn active_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.total > 0)
+    }
+
+    /// Derive a [`ClusterSpec`] from the current (possibly scaled)
+    /// topology, skipping retired nodes — used to rebuild MARP and other
+    /// derived scheduler state after elasticity events.
+    pub fn to_spec(&self, name: &str) -> ClusterSpec {
+        ClusterSpec {
+            name: name.to_string(),
+            nodes: self
+                .active_nodes()
+                .map(|n| NodeSpec { gpu: n.gpu.clone(), count: n.total, link: n.link })
+                .collect(),
+            inter_node_gbps: self.inter_node_gbps,
+        }
+    }
 }
 
 /// The Resource Orchestrator: authoritative allocate/release with a ledger.
@@ -201,6 +236,38 @@ impl Orchestrator {
             self.state.give(node, count).expect("ledger references valid nodes");
         }
         Ok(alloc)
+    }
+
+    /// Elastic grow: add a node whose GPUs are immediately idle.
+    pub fn grow(&mut self, spec: &NodeSpec) -> NodeId {
+        self.state.add_node(spec)
+    }
+
+    /// Elastic shrink: retire `node`, releasing every allocation touching
+    /// it. A job losing *any* part loses all parts — collective training
+    /// cannot continue on a partial world — and each affected allocation is
+    /// released exactly once (removed from the ledger before the node is
+    /// zeroed). Returns the released allocations so the caller can requeue
+    /// the affected jobs. Errors on unknown or already-retired nodes.
+    pub fn shrink(&mut self, node: NodeId) -> Result<Vec<Allocation>, ClusterError> {
+        let n = self.state.nodes.get(node).ok_or(ClusterError::NoSuchNode(node))?;
+        if n.total == 0 {
+            return Err(ClusterError::NoSuchNode(node));
+        }
+        let affected: Vec<JobId> = self
+            .ledger
+            .values()
+            .filter(|a| a.parts.iter().any(|&(nid, _)| nid == node))
+            .map(|a| a.job)
+            .collect();
+        let mut released = Vec::with_capacity(affected.len());
+        for job in affected {
+            released.push(self.release(job).expect("ledger entry exists"));
+        }
+        let n = &mut self.state.nodes[node];
+        n.total = 0;
+        n.idle = 0;
+        Ok(released)
     }
 
     /// Invariant check used by tests: ledger totals + idle == totals.
@@ -281,6 +348,67 @@ mod tests {
         assert_eq!(s.idle_gpus_with_mem(80 * GIB), 8);
         assert_eq!(s.idle_gpus_with_mem(40 * GIB), 11);
         assert_eq!(s.idle_gpus_with_mem(81 * GIB), 0);
+    }
+
+    #[test]
+    fn grow_adds_idle_capacity_with_stable_ids() {
+        let mut o = Orchestrator::new(&real_testbed());
+        let spec = NodeSpec {
+            gpu: crate::config::gpu_by_name("A100-80G").unwrap(),
+            count: 4,
+            link: LinkKind::NvLink,
+        };
+        let id = o.grow(&spec);
+        assert_eq!(id, 5, "appended after the 5 seed nodes");
+        assert_eq!(o.state().total_gpus(), 15);
+        assert_eq!(o.state().idle_gpus(), 15);
+        assert!(o.check_conservation());
+        // New capacity is allocatable.
+        o.allocate(Allocation { job: 1, parts: vec![(id, 4)] }).unwrap();
+        assert_eq!(o.state().idle_gpus(), 11);
+        assert!(o.check_conservation());
+    }
+
+    #[test]
+    fn shrink_releases_affected_jobs_exactly_once() {
+        let mut o = Orchestrator::new(&real_testbed());
+        // Job 1 spans nodes 3+4; job 2 sits on node 0 alone.
+        o.allocate(Allocation { job: 1, parts: vec![(3, 2), (4, 2)] }).unwrap();
+        o.allocate(Allocation { job: 2, parts: vec![(0, 2)] }).unwrap();
+        let released = o.shrink(3).unwrap();
+        assert_eq!(released.len(), 1);
+        assert_eq!(released[0].job, 1);
+        // Node 3 retired; node 4's GPUs (the job's other part) came back.
+        assert_eq!(o.state().nodes[3].total, 0);
+        assert_eq!(o.state().nodes[3].idle, 0);
+        assert_eq!(o.state().nodes[4].idle, 2);
+        assert_eq!(o.state().total_gpus(), 9);
+        assert_eq!(o.state().idle_gpus(), 7, "job 2 still holds node 0");
+        assert!(o.allocation_of(1).is_none(), "released exactly once");
+        assert!(o.allocation_of(2).is_some(), "unaffected job keeps its GPUs");
+        assert!(o.check_conservation());
+        // Releasing again via the normal path must fail (not double-free).
+        assert_eq!(o.release(1).unwrap_err(), ClusterError::NotAllocated(1));
+        // A retired node cannot be shrunk twice or allocated on.
+        assert_eq!(o.shrink(3).unwrap_err(), ClusterError::NoSuchNode(3));
+        assert!(o.allocate(Allocation { job: 3, parts: vec![(3, 1)] }).is_err());
+    }
+
+    #[test]
+    fn shrink_unknown_node_errors() {
+        let mut o = Orchestrator::new(&real_testbed());
+        assert_eq!(o.shrink(99).unwrap_err(), ClusterError::NoSuchNode(99));
+    }
+
+    #[test]
+    fn to_spec_skips_retired_nodes() {
+        let mut o = Orchestrator::new(&real_testbed());
+        o.shrink(2).unwrap(); // retire the 4×A800 node
+        let spec = o.state().to_spec("scaled");
+        assert_eq!(spec.nodes.len(), 4);
+        assert_eq!(spec.total_gpus(), 7);
+        assert!(spec.nodes.iter().all(|n| n.gpu.name != "A800-80G"));
+        assert_eq!(o.state().active_nodes().count(), 4);
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Time sources driving the [`super::SchedulingEngine`].
+//!
+//! The engine never reads wall time or owns an event queue itself — it asks
+//! a [`Clock`]:
+//!
+//! * [`VirtualClock`] — discrete-event time: a binary-heap of future
+//!   [`ClusterEvent`]s (what used to be the simulator's private event loop).
+//!   `schedule` accepts future events, so the engine's own Finish/Oom
+//!   predictions drive the run.
+//! * [`WallClock`] — real elapsed seconds for the live coordinator.
+//!   `schedule` declines: real completions arrive from the executor as
+//!   messages, so the engine reports placements to the driver instead of
+//!   predicting their finish times.
+
+use super::ClusterEvent;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+/// The engine's view of time.
+pub trait Clock {
+    /// Current time in seconds (virtual, or since coordinator start).
+    fn now(&self) -> f64;
+
+    /// Ask for `ev` to be delivered at absolute time `time`. Virtual clocks
+    /// enqueue it and return `true`; wall clocks return `false` — delivery
+    /// of future events is then the driver's job (executor callbacks).
+    fn schedule(&mut self, time: f64, ev: ClusterEvent) -> bool;
+}
+
+struct Entry {
+    time: f64,
+    seq: u64,
+    ev: ClusterEvent,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earlier time first, then insertion order. `total_cmp`
+        // keeps the ordering total even for a NaN timestamp — the old
+        // simulator's `partial_cmp(..).unwrap()` here could panic the whole
+        // event loop on one bad float (NaN sorts after every real time, so
+        // a poisoned event drains last instead of aborting the run).
+        other.time.total_cmp(&self.time).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Discrete-event time: a heap of pending events plus the current instant.
+#[derive(Default)]
+pub struct VirtualClock {
+    now: f64,
+    seq: u64,
+    heap: BinaryHeap<Entry>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop the earliest event, advancing `now` to its timestamp.
+    pub fn pop(&mut self) -> Option<(f64, ClusterEvent)> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        Some((e.time, e.ev))
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn schedule(&mut self, time: f64, ev: ClusterEvent) -> bool {
+        self.seq += 1;
+        self.heap.push(Entry { time, seq: self.seq, ev });
+        true
+    }
+}
+
+/// Real time since construction — the live coordinator's clock.
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        Self { t0: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn schedule(&mut self, _time: f64, _ev: ClusterEvent) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_then_insertion_order() {
+        let mut c = VirtualClock::new();
+        c.schedule(5.0, ClusterEvent::RoundTick);
+        c.schedule(1.0, ClusterEvent::Finish { job: 1, epoch: 1 });
+        c.schedule(1.0, ClusterEvent::Finish { job: 2, epoch: 1 });
+        assert_eq!(c.len(), 3);
+        let (t1, e1) = c.pop().unwrap();
+        assert_eq!(t1, 1.0);
+        assert!(matches!(e1, ClusterEvent::Finish { job: 1, .. }));
+        assert_eq!(c.now(), 1.0);
+        let (_, e2) = c.pop().unwrap();
+        assert!(matches!(e2, ClusterEvent::Finish { job: 2, .. }), "ties break by insertion order");
+        assert_eq!(c.pop().unwrap().0, 5.0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn nan_timestamp_cannot_panic_the_heap() {
+        // The old sim's Event::cmp used partial_cmp().unwrap() — one NaN
+        // submit time aborted the whole run. total_cmp sorts NaN after every
+        // finite time instead.
+        let mut c = VirtualClock::new();
+        c.schedule(f64::NAN, ClusterEvent::RoundTick);
+        c.schedule(2.0, ClusterEvent::RoundTick);
+        c.schedule(f64::NAN, ClusterEvent::RoundTick);
+        c.schedule(1.0, ClusterEvent::RoundTick);
+        assert_eq!(c.pop().unwrap().0, 1.0);
+        assert_eq!(c.pop().unwrap().0, 2.0);
+        assert!(c.pop().unwrap().0.is_nan());
+        assert!(c.pop().unwrap().0.is_nan());
+        assert!(c.pop().is_none());
+    }
+
+    #[test]
+    fn wall_clock_declines_future_events_and_advances() {
+        let mut w = WallClock::new();
+        assert!(!w.schedule(10.0, ClusterEvent::RoundTick));
+        let a = w.now();
+        let b = w.now();
+        assert!(b >= a && a >= 0.0);
+    }
+}

@@ -1,0 +1,739 @@
+//! The unified event-driven scheduling engine (one control plane, two
+//! drivers).
+//!
+//! Before this module existed the control loop lived twice: the discrete
+//! event simulator had a private event loop (arrival/finish/OOM-requeue,
+//! overhead charging) and the live serverless coordinator re-implemented
+//! pending-queue management, dispatch, and release. [`SchedulingEngine`]
+//! owns all of it once:
+//!
+//! * the [`crate::cluster::Orchestrator`] (authoritative resource state),
+//! * the pending queue and per-job attempt counters,
+//! * the active [`Scheduler`] policy,
+//! * run metrics (outcomes, rejections, work units, utilization integral).
+//!
+//! State changes enter as one [`ClusterEvent`] enum — `Arrival`, `Finish`,
+//! `Oom`, `RoundTick`, plus the elastic `NodeJoin` / `NodeLeave` (a leave
+//! preempts and requeues every job allocated on that node, releasing
+//! resources exactly once). The engine is driven through the
+//! [`clock::Clock`] abstraction:
+//!
+//! * [`clock::VirtualClock`] — simulation: the engine's own Finish/Oom
+//!   predictions are scheduled back into the clock's event heap and
+//!   [`crate::sim::Simulator`] is a thin trace-feeding wrapper;
+//! * [`clock::WallClock`] — live: the coordinator translates executor
+//!   messages into events and dispatches the [`Effects::placed`] jobs to
+//!   the real [`crate::runtime::executor::TrainExecutor`].
+//!
+//! Because both paths run this exact code, any new policy or scenario
+//! (elasticity, priorities, trace replay) is written once and behaves
+//! identically in simulation and in the live server — the differential
+//! trace test in `tests/integration_engine.rs` asserts exactly that.
+
+pub mod clock;
+
+use crate::cluster::{ClusterState, NodeId, Orchestrator};
+use crate::config::{ClusterSpec, NodeSpec};
+use crate::job::{JobId, JobOutcome, JobSpec};
+use crate::perfmodel::PerfModel;
+use crate::sched::{PendingJob, Scheduler};
+use clock::Clock;
+use std::collections::HashMap;
+
+/// Everything that can happen to the cluster, in one enum — the union of
+/// the simulator's old private event set and the live coordinator's
+/// message handling, plus cluster elasticity.
+#[derive(Debug, Clone)]
+pub enum ClusterEvent {
+    /// A job enters the pending queue.
+    Arrival(JobSpec),
+    /// A running job completed. `epoch` is the placement epoch the
+    /// completion belongs to (see [`PlacedJob::epoch`]); a stale epoch —
+    /// the job was preempted or cancelled and possibly re-placed since —
+    /// is ignored, so resources are never released twice.
+    Finish { job: JobId, epoch: u64 },
+    /// A memory-oblivious placement crashed; resources are released and the
+    /// job requeues with `attempts + 1` (the baselines' trial-and-error).
+    Oom { job: JobId, epoch: u64 },
+    /// Round boundary for interval schedulers (Sia-style).
+    RoundTick,
+    /// Elasticity: a node joins the cluster, its GPUs immediately idle.
+    NodeJoin(NodeSpec),
+    /// Elasticity: a node leaves. Every job with any GPUs on it is
+    /// preempted — released exactly once and requeued with `attempts + 1`.
+    NodeLeave(NodeId),
+}
+
+/// Engine tuning knobs (the scheduling-relevant subset of the old
+/// `SimConfig`; the live coordinator uses `sched_work_unit_s = 0` because
+/// real scheduler wall time already elapses on its clock).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Seconds before an OOM is detected and the job is requeued.
+    pub oom_detect_s: f64,
+    /// Seconds charged per scheduler work unit (models the paper's
+    /// scheduling-overhead effect in virtual time).
+    pub sched_work_unit_s: f64,
+    /// Hard cap on scheduling attempts (OOM retries / preemptions) before a
+    /// job is rejected.
+    pub max_attempts: u32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { oom_detect_s: 45.0, sched_work_unit_s: 2.0e-5, max_attempts: 6 }
+    }
+}
+
+/// One job the engine just placed. In virtual time the engine has already
+/// scheduled the matching `Finish`/`Oom` into the clock; on a wall clock the
+/// driver must dispatch the job and later feed back
+/// `ClusterEvent::Finish { job, epoch }`.
+#[derive(Debug, Clone)]
+pub struct PlacedJob {
+    pub job: JobId,
+    /// Placement epoch: increments every time this job starts. Completions
+    /// must echo it so results from a preempted/cancelled run are discarded.
+    pub epoch: u64,
+    /// Scheduling attempts including this one (1 on first placement).
+    pub attempts: u32,
+    pub gpus: u32,
+    /// When the job starts (now + modeled scheduling overhead).
+    pub start_time: f64,
+    /// The placement will OOM (memory-oblivious baselines only).
+    pub will_oom: bool,
+    /// Throughput estimate from the performance model (0 when `will_oom`).
+    pub est_samples_per_sec: f64,
+    /// Estimated runtime (OOM-detection delay when `will_oom`).
+    pub est_runtime_s: f64,
+}
+
+/// What one event (plus the scheduling round it triggered) did — the
+/// driver's window into the engine.
+#[derive(Debug, Clone, Default)]
+pub struct Effects {
+    /// Jobs that started running (dispatch these on a wall clock).
+    pub placed: Vec<PlacedJob>,
+    /// Jobs that completed (resources released, outcome recorded).
+    pub finished: Vec<JobId>,
+    /// Jobs rejected (attempt budget exhausted or structurally unplaceable).
+    pub rejected: Vec<JobId>,
+    /// Jobs preempted by a `NodeLeave` and returned to the pending queue.
+    pub preempted: Vec<JobId>,
+}
+
+impl Effects {
+    pub fn merge(&mut self, mut other: Effects) {
+        self.placed.append(&mut other.placed);
+        self.finished.append(&mut other.finished);
+        self.rejected.append(&mut other.rejected);
+        self.preempted.append(&mut other.preempted);
+    }
+}
+
+/// One applied placement: job → sorted `(node, gpu-count)` parts.
+pub type PlacementRecord = (JobId, Vec<(NodeId, u32)>);
+
+/// Cap on [`SchedulingEngine::decision_log`] entries: a long-running live
+/// coordinator must not leak memory linearly in placements, so the log
+/// keeps only the most recent records (the oldest half is dropped when the
+/// cap is hit). Per-job bookkeeping (`epochs`, `submit_times`,
+/// `first_starts`, `outcomes`) still grows with total jobs submitted, like
+/// the coordinator's own status table — bounding those needs a retention
+/// policy for terminal jobs (ROADMAP).
+pub const MAX_DECISION_LOG: usize = 65_536;
+
+struct RunningJob {
+    spec: JobSpec,
+    first_start: f64,
+    gpus: u32,
+    attempts: u32,
+    epoch: u64,
+}
+
+/// GPU-time utilization integrator. Integrates capacity as well as busy
+/// GPU-seconds so the denominator stays correct when the cluster grows or
+/// shrinks mid-run.
+struct UtilIntegrator {
+    last_t: f64,
+    busy_gpu_seconds: f64,
+    capacity_gpu_seconds: f64,
+}
+
+impl UtilIntegrator {
+    fn new() -> Self {
+        Self { last_t: 0.0, busy_gpu_seconds: 0.0, capacity_gpu_seconds: 0.0 }
+    }
+
+    fn advance(&mut self, now: f64, busy: u32, total: u32) {
+        let dt = (now - self.last_t).max(0.0);
+        self.busy_gpu_seconds += dt * busy as f64;
+        self.capacity_gpu_seconds += dt * total as f64;
+        self.last_t = self.last_t.max(now);
+    }
+
+    fn value(&self) -> f64 {
+        if self.capacity_gpu_seconds <= 0.0 {
+            0.0
+        } else {
+            (self.busy_gpu_seconds / self.capacity_gpu_seconds).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// The shared scheduling engine. See the module docs for the division of
+/// labor between the engine and its drivers.
+pub struct SchedulingEngine<'a> {
+    orch: Orchestrator,
+    sched: &'a mut dyn Scheduler,
+    pm: PerfModel,
+    cfg: EngineConfig,
+    pending: Vec<PendingJob>,
+    running: HashMap<JobId, RunningJob>,
+    outcomes: Vec<JobOutcome>,
+    rejected: usize,
+    work_units: u64,
+    sched_wall_s: f64,
+    util: UtilIntegrator,
+    submit_times: HashMap<JobId, f64>,
+    first_starts: HashMap<JobId, f64>,
+    epochs: HashMap<JobId, u64>,
+    /// Every applied placement, in order: (job, sorted (node, gpus) parts).
+    decision_log: Vec<PlacementRecord>,
+    /// Interval schedulers: time of the last executed round and whether a
+    /// RoundTick is already queued in a virtual clock.
+    last_round: f64,
+    tick_queued: bool,
+}
+
+impl<'a> SchedulingEngine<'a> {
+    pub fn new(spec: &ClusterSpec, sched: &'a mut dyn Scheduler, cfg: EngineConfig) -> Self {
+        Self {
+            orch: Orchestrator::new(spec),
+            sched,
+            pm: PerfModel::new(spec.inter_node_gbps),
+            cfg,
+            pending: Vec::new(),
+            running: HashMap::new(),
+            outcomes: Vec::new(),
+            rejected: 0,
+            work_units: 0,
+            sched_wall_s: 0.0,
+            util: UtilIntegrator::new(),
+            submit_times: HashMap::new(),
+            first_starts: HashMap::new(),
+            epochs: HashMap::new(),
+            decision_log: Vec::new(),
+            last_round: f64::NEG_INFINITY,
+            tick_queued: false,
+        }
+    }
+
+    fn busy_gpus(&self) -> u32 {
+        self.orch.state().total_gpus() - self.orch.state().idle_gpus()
+    }
+
+    fn advance_util(&mut self, now: f64) {
+        let busy = self.busy_gpus();
+        let total = self.orch.state().total_gpus();
+        self.util.advance(now, busy, total);
+    }
+
+    /// Process one event. Does **not** run a scheduling round — drivers call
+    /// [`Self::run_round`] after the event (or event batch) so batched
+    /// same-timestamp events see one round, exactly like the old simulator.
+    pub fn handle(&mut self, ev: ClusterEvent, clock: &mut dyn Clock) -> Effects {
+        let now = clock.now();
+        self.advance_util(now);
+        let mut fx = Effects::default();
+        match ev {
+            ClusterEvent::Arrival(spec) => {
+                self.submit_times.insert(spec.id, spec.submit_time);
+                self.pending.push(PendingJob { spec, attempts: 0 });
+            }
+            ClusterEvent::Finish { job, epoch } => {
+                if self.running.get(&job).is_none_or(|r| r.epoch != epoch) {
+                    return fx; // stale: preempted/cancelled since this run started
+                }
+                let run = self.running.remove(&job).expect("checked above");
+                let _ = self.orch.release(job);
+                let submit = *self.submit_times.get(&job).unwrap_or(&0.0);
+                self.outcomes.push(JobOutcome {
+                    id: job,
+                    name: run.spec.name.clone(),
+                    submit_time: submit,
+                    start_time: run.first_start,
+                    finish_time: now,
+                    gpus_used: run.gpus,
+                    samples_per_sec: run.spec.total_samples as f64
+                        / (now - run.first_start).max(1e-9),
+                    attempts: run.attempts,
+                });
+                fx.finished.push(job);
+            }
+            ClusterEvent::Oom { job, epoch } => {
+                if self.running.get(&job).is_none_or(|r| r.epoch != epoch) {
+                    return fx;
+                }
+                let run = self.running.remove(&job).expect("checked above");
+                let _ = self.orch.release(job);
+                if run.attempts >= self.cfg.max_attempts {
+                    self.rejected += 1;
+                    fx.rejected.push(job);
+                } else {
+                    self.pending.push(PendingJob { spec: run.spec, attempts: run.attempts });
+                }
+            }
+            ClusterEvent::RoundTick => {
+                self.tick_queued = false;
+            }
+            ClusterEvent::NodeJoin(node) => {
+                self.orch.grow(&node);
+                self.sched.cluster_changed(self.orch.state());
+            }
+            ClusterEvent::NodeLeave(node) => {
+                if let Ok(released) = self.orch.shrink(node) {
+                    for alloc in released {
+                        let Some(run) = self.running.remove(&alloc.job) else { continue };
+                        if run.attempts >= self.cfg.max_attempts {
+                            self.rejected += 1;
+                            fx.rejected.push(alloc.job);
+                        } else {
+                            self.pending
+                                .push(PendingJob { spec: run.spec, attempts: run.attempts });
+                            fx.preempted.push(alloc.job);
+                        }
+                    }
+                    self.sched.cluster_changed(self.orch.state());
+                }
+            }
+        }
+        fx
+    }
+
+    /// Run one scheduling round over the pending queue, then reject
+    /// structurally unplaceable jobs. Interval schedulers (Sia-style) defer
+    /// to a queued `RoundTick` on a virtual clock; a wall clock cannot
+    /// deliver future events, so they round immediately instead.
+    pub fn run_round(&mut self, clock: &mut dyn Clock) -> Effects {
+        let mut fx = Effects::default();
+        let now = clock.now();
+        self.advance_util(now);
+        if let Some(interval) = self.sched.round_interval_s() {
+            if self.pending.is_empty() {
+                return fx;
+            }
+            let due = self.last_round + interval;
+            if now < due {
+                if !self.tick_queued && clock.schedule(due, ClusterEvent::RoundTick) {
+                    self.tick_queued = true;
+                }
+                if self.tick_queued {
+                    return fx;
+                }
+            }
+            self.last_round = now;
+        }
+        self.round_inner(clock, &mut fx);
+        self.reject_unplaceable(clock, &mut fx);
+        fx
+    }
+
+    /// The placement pass.
+    fn round_inner(&mut self, clock: &mut dyn Clock, fx: &mut Effects) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let now = clock.now();
+        let snapshot = self.orch.snapshot();
+        let t0 = std::time::Instant::now();
+        let round = self.sched.schedule(&self.pending, &snapshot, now);
+        self.sched_wall_s += t0.elapsed().as_secs_f64();
+        self.work_units += round.work_units;
+        let overhead = round.work_units as f64 * self.cfg.sched_work_unit_s;
+        let start_time = now + overhead;
+
+        for d in round.decisions {
+            let Some(pos) = self.pending.iter().position(|p| p.spec.id == d.job) else {
+                continue; // scheduler returned a stale decision — ignore
+            };
+            let pj = self.pending.remove(pos);
+            if self.orch.allocate(d.alloc.clone()).is_err() {
+                // Scheduler overdrew (bug or stale snapshot): requeue.
+                self.pending.push(pj);
+                continue;
+            }
+            let attempts = pj.attempts + 1;
+            let epoch = {
+                let e = self.epochs.entry(d.job).or_insert(0);
+                *e += 1;
+                *e
+            };
+            let first_start = *self.first_starts.entry(d.job).or_insert(start_time);
+            let mut parts = d.alloc.parts.clone();
+            parts.sort_unstable();
+            if self.decision_log.len() >= MAX_DECISION_LOG {
+                self.decision_log.drain(..MAX_DECISION_LOG / 2);
+            }
+            self.decision_log.push((d.job, parts));
+            let gpus = d.alloc.total_gpus();
+            let (will_oom, thr, runtime) = if d.will_oom {
+                (true, 0.0, self.cfg.oom_detect_s)
+            } else {
+                let thr = self.pm.samples_per_sec(
+                    &pj.spec.model,
+                    &pj.spec.train,
+                    d.par,
+                    &d.gpu,
+                    d.placement,
+                );
+                (false, thr, pj.spec.total_samples as f64 / thr.max(1e-9))
+            };
+            self.running.insert(
+                d.job,
+                RunningJob { spec: pj.spec.clone(), first_start, gpus, attempts, epoch },
+            );
+            if will_oom {
+                clock.schedule(
+                    start_time + self.cfg.oom_detect_s,
+                    ClusterEvent::Oom { job: d.job, epoch },
+                );
+            } else {
+                clock.schedule(start_time + runtime, ClusterEvent::Finish { job: d.job, epoch });
+            }
+            fx.placed.push(PlacedJob {
+                job: d.job,
+                epoch,
+                attempts,
+                gpus,
+                start_time,
+                will_oom,
+                est_samples_per_sec: thr,
+                est_runtime_s: runtime,
+            });
+        }
+    }
+
+    /// If the cluster is completely idle and the scheduler still can't place
+    /// a job, it never will — reject it instead of busy-looping. (A job that
+    /// exceeded its attempt budget is also dropped here.)
+    fn reject_unplaceable(&mut self, clock: &mut dyn Clock, fx: &mut Effects) {
+        if !(self.running.is_empty()
+            && self.orch.state().idle_gpus() == self.orch.state().total_gpus()
+            && !self.pending.is_empty())
+        {
+            return;
+        }
+        let now = clock.now();
+        let mut keep = Vec::new();
+        let drained: Vec<PendingJob> = self.pending.drain(..).collect();
+        for p in drained {
+            if p.attempts >= self.cfg.max_attempts {
+                self.rejected += 1;
+                fx.rejected.push(p.spec.id);
+                continue;
+            }
+            let snapshot = self.orch.snapshot();
+            let round = self.sched.schedule(std::slice::from_ref(&p), &snapshot, now);
+            if round.decisions.is_empty() {
+                self.rejected += 1;
+                fx.rejected.push(p.spec.id);
+            } else {
+                keep.push(p);
+            }
+        }
+        self.pending = keep;
+        if !self.pending.is_empty() {
+            // They are placeable on an empty cluster; place them now.
+            self.round_inner(clock, fx);
+        }
+    }
+
+    /// Remove a queued job (user cancel). True when it was pending.
+    pub fn cancel_pending(&mut self, id: JobId) -> bool {
+        let before = self.pending.len();
+        self.pending.retain(|p| p.spec.id != id);
+        self.pending.len() != before
+    }
+
+    /// Cancel a running job: release its resources without recording an
+    /// outcome. Any in-flight `Finish`/`Oom` for the old epoch goes stale.
+    pub fn cancel_running(&mut self, id: JobId) -> bool {
+        if self.running.remove(&id).is_none() {
+            return false;
+        }
+        let _ = self.orch.release(id);
+        true
+    }
+
+    /// Drain the pending queue into rejections (end-of-run bookkeeping:
+    /// whatever is still pending never got resources).
+    pub fn reject_remaining(&mut self) -> Vec<JobId> {
+        let ids: Vec<JobId> = self.pending.iter().map(|p| p.spec.id).collect();
+        self.rejected += ids.len();
+        self.pending.clear();
+        ids
+    }
+
+    // ---- introspection -------------------------------------------------
+
+    pub fn scheduler_name(&self) -> &'static str {
+        self.sched.name()
+    }
+
+    pub fn cluster_state(&self) -> &ClusterState {
+        self.orch.state()
+    }
+
+    pub fn conservation_ok(&self) -> bool {
+        self.orch.check_conservation()
+    }
+
+    pub fn outcomes(&self) -> &[JobOutcome] {
+        &self.outcomes
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn rejected_count(&self) -> usize {
+        self.rejected
+    }
+
+    pub fn work_units(&self) -> u64 {
+        self.work_units
+    }
+
+    pub fn sched_wall_s(&self) -> f64 {
+        self.sched_wall_s
+    }
+
+    pub fn is_running(&self, id: JobId) -> bool {
+        self.running.contains_key(&id)
+    }
+
+    pub fn is_pending(&self, id: JobId) -> bool {
+        self.pending.iter().any(|p| p.spec.id == id)
+    }
+
+    /// Scheduling attempts recorded for a job so far (running or pending).
+    pub fn attempts_of(&self, id: JobId) -> u32 {
+        if let Some(r) = self.running.get(&id) {
+            return r.attempts;
+        }
+        self.pending.iter().find(|p| p.spec.id == id).map(|p| p.attempts).unwrap_or(0)
+    }
+
+    /// Current placement epoch of a job (0 if never placed).
+    pub fn run_epoch(&self, id: JobId) -> u64 {
+        self.epochs.get(&id).copied().unwrap_or(0)
+    }
+
+    /// The applied-placement log, most recent [`MAX_DECISION_LOG`] entries.
+    pub fn decision_log(&self) -> &[PlacementRecord] {
+        &self.decision_log
+    }
+
+    /// GPU-time utilization integral up to `now` (advances the integrator).
+    pub fn utilization_to(&mut self, now: f64) -> f64 {
+        self.advance_util(now);
+        self.util.value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::clock::VirtualClock;
+    use super::*;
+    use crate::config::models::model_by_name;
+    use crate::config::{gpu_by_name, real_testbed, LinkKind};
+    use crate::marp::Marp;
+    use crate::sched::has::Has;
+
+    fn job(id: u64, model: &str, batch: u32, samples: u64, t: f64) -> JobSpec {
+        JobSpec::new(id, model_by_name(model).unwrap(), batch, samples, t)
+    }
+
+    /// Drain the virtual clock to completion.
+    fn drive(engine: &mut SchedulingEngine, clock: &mut VirtualClock) -> Effects {
+        let mut all = Effects::default();
+        let mut guard = 0;
+        while let Some((_, ev)) = clock.pop() {
+            all.merge(engine.handle(ev, clock));
+            all.merge(engine.run_round(clock));
+            guard += 1;
+            assert!(guard < 100_000, "event loop did not terminate");
+        }
+        all
+    }
+
+    #[test]
+    fn arrival_place_finish_roundtrip() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+        let mut clock = VirtualClock::new();
+        clock.schedule(0.0, ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 10_000, 0.0)));
+        let fx = drive(&mut engine, &mut clock);
+        assert_eq!(fx.placed.len(), 1);
+        assert_eq!(fx.finished, vec![1]);
+        assert!(fx.rejected.is_empty());
+        assert_eq!(engine.outcomes().len(), 1);
+        assert!(engine.conservation_ok());
+        assert_eq!(engine.cluster_state().idle_gpus(), engine.cluster_state().total_gpus());
+    }
+
+    #[test]
+    fn stale_finish_epoch_is_ignored() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+        let mut clock = VirtualClock::new();
+        engine.handle(ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 10_000, 0.0)), &mut clock);
+        let fx = engine.run_round(&mut clock);
+        assert_eq!(fx.placed.len(), 1);
+        let epoch = fx.placed[0].epoch;
+        // A completion from a previous (never-existing) epoch must not
+        // release anything.
+        let stale = engine.handle(ClusterEvent::Finish { job: 1, epoch: epoch + 7 }, &mut clock);
+        assert!(stale.finished.is_empty());
+        assert!(engine.is_running(1));
+        assert!(engine.conservation_ok());
+        // The real epoch completes it.
+        let good = engine.handle(ClusterEvent::Finish { job: 1, epoch }, &mut clock);
+        assert_eq!(good.finished, vec![1]);
+        assert!(engine.conservation_ok());
+    }
+
+    #[test]
+    fn node_leave_preempts_exactly_the_jobs_on_that_node() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+        let mut clock = VirtualClock::new();
+        // Big job lands on 80G nodes, small job on a 40G node — disjoint.
+        engine.handle(ClusterEvent::Arrival(job(1, "gpt2-7b", 2, 1_000_000, 0.0)), &mut clock);
+        engine.handle(ClusterEvent::Arrival(job(2, "gpt2-125m", 4, 1_000_000, 0.0)), &mut clock);
+        let fx = engine.run_round(&mut clock);
+        assert_eq!(fx.placed.len(), 2, "both jobs must start");
+        let big_nodes: Vec<usize> = engine
+            .decision_log()
+            .iter()
+            .find(|(id, _)| *id == 1)
+            .unwrap()
+            .1
+            .iter()
+            .map(|&(n, _)| n)
+            .collect();
+        let small_nodes: Vec<usize> = engine
+            .decision_log()
+            .iter()
+            .find(|(id, _)| *id == 2)
+            .unwrap()
+            .1
+            .iter()
+            .map(|&(n, _)| n)
+            .collect();
+        assert!(big_nodes.iter().all(|n| !small_nodes.contains(n)), "disjoint placements");
+
+        let gone = big_nodes[0];
+        let fx = engine.handle(ClusterEvent::NodeLeave(gone), &mut clock);
+        assert_eq!(fx.preempted, vec![1], "only the job on the retired node is preempted");
+        assert!(engine.is_pending(1), "preempted job requeued");
+        assert!(engine.is_running(2), "unrelated job untouched");
+        assert_eq!(engine.attempts_of(1), 1, "requeued with its attempt count (next run = 2)");
+        assert!(engine.conservation_ok(), "conservation after NodeLeave");
+
+        // The remaining 80G GPUs (2×2) can host the job again.
+        let fx = engine.run_round(&mut clock);
+        if let Some(p) = fx.placed.iter().find(|p| p.job == 1) {
+            assert_eq!(p.attempts, 2, "re-placement counts as attempt 2");
+        }
+        assert!(engine.conservation_ok());
+
+        // Run everything down: preempted job must still terminate exactly
+        // once, and its stale Finish from the first placement is discarded.
+        drive(&mut engine, &mut clock);
+        assert!(engine.conservation_ok());
+        let finishes_of_1 = engine.outcomes().iter().filter(|o| o.id == 1).count();
+        assert!(finishes_of_1 <= 1, "a preempted job completes at most once");
+        assert_eq!(engine.cluster_state().idle_gpus(), engine.cluster_state().total_gpus());
+    }
+
+    #[test]
+    fn node_join_makes_infeasible_pending_job_schedulable() {
+        // A cluster with only 2×40G GPUs cannot host gpt2-7b at all (MARP
+        // finds no plan). Keep the cluster busy with a small job so the big
+        // one is not rejected-as-unplaceable, then join an 80G node.
+        let a100_40 = gpu_by_name("A100-40G").unwrap();
+        let spec = ClusterSpec {
+            name: "tiny".into(),
+            nodes: vec![NodeSpec { gpu: a100_40, count: 2, link: LinkKind::Pcie }],
+            inter_node_gbps: 12.5,
+        };
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+        let mut clock = VirtualClock::new();
+
+        engine.handle(ClusterEvent::Arrival(job(1, "gpt2-125m", 4, 1_000_000, 0.0)), &mut clock);
+        let fx = engine.run_round(&mut clock);
+        assert_eq!(fx.placed.len(), 1, "blocker job runs");
+
+        engine.handle(ClusterEvent::Arrival(job(2, "gpt2-7b", 2, 50_000, 0.0)), &mut clock);
+        let fx = engine.run_round(&mut clock);
+        assert!(fx.placed.is_empty(), "7b infeasible on 2×40G");
+        assert!(engine.is_pending(2));
+
+        let a800 = gpu_by_name("A800-80G").unwrap();
+        let join = NodeSpec { gpu: a800, count: 4, link: LinkKind::NvLink };
+        let fx = engine.handle(ClusterEvent::NodeJoin(join), &mut clock);
+        assert!(fx.placed.is_empty() && fx.preempted.is_empty());
+        assert_eq!(engine.cluster_state().total_gpus(), 6);
+        let fx = engine.run_round(&mut clock);
+        let placed: Vec<JobId> = fx.placed.iter().map(|p| p.job).collect();
+        assert_eq!(placed, vec![2], "NodeJoin made the pending 7b job schedulable");
+        // It landed on the joined node (id 1).
+        let (_, parts) = engine.decision_log().iter().find(|(id, _)| *id == 2).unwrap();
+        assert!(parts.iter().all(|&(n, _)| n == 1), "placed on the joined 80G node: {parts:?}");
+        assert!(engine.conservation_ok());
+    }
+
+    #[test]
+    fn conservation_holds_after_every_event_under_churn() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+        let mut clock = VirtualClock::new();
+        for i in 0..8u64 {
+            clock.schedule(
+                i as f64 * 20.0,
+                ClusterEvent::Arrival(job(i, "gpt2-350m", 8, 200_000, i as f64 * 20.0)),
+            );
+        }
+        // Churn: retire a 40G node early, join a replacement later.
+        clock.schedule(30.0, ClusterEvent::NodeLeave(0));
+        let a100_40 = gpu_by_name("A100-40G").unwrap();
+        let rejoin = NodeSpec { gpu: a100_40, count: 2, link: LinkKind::Pcie };
+        clock.schedule(90.0, ClusterEvent::NodeJoin(rejoin));
+        let mut guard = 0;
+        while let Some((_, ev)) = clock.pop() {
+            engine.handle(ev, &mut clock);
+            assert!(engine.conservation_ok(), "conservation after every event");
+            engine.run_round(&mut clock);
+            assert!(engine.conservation_ok(), "conservation after every round");
+            guard += 1;
+            assert!(guard < 100_000);
+        }
+        assert_eq!(
+            engine.outcomes().len() + engine.rejected_count(),
+            8,
+            "every job reaches a terminal state"
+        );
+        assert_eq!(engine.cluster_state().idle_gpus(), engine.cluster_state().total_gpus());
+    }
+}

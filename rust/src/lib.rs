@@ -22,8 +22,13 @@
 //! Architecture (see DESIGN.md):
 //! * [`memory`] / [`marp`] — the Memory-Aware Resource Predictor (§IV.A),
 //! * [`sched`] — HAS (Algorithm 1) plus the Sia and Opportunistic baselines,
-//! * [`cluster`] — the Resource Orchestrator,
-//! * [`sim`] — discrete-event cluster simulator (the "PAI simulator" stand-in),
+//! * [`cluster`] — the Resource Orchestrator (with elastic grow/shrink),
+//! * [`engine`] — the unified event-driven scheduling engine: one
+//!   [`engine::ClusterEvent`] loop (arrival, finish, OOM, round ticks,
+//!   node join/leave) behind a clock abstraction, shared by the simulator
+//!   and the live coordinator,
+//! * [`sim`] — discrete-event cluster simulator (the "PAI simulator"
+//!   stand-in): a thin trace feeder over [`engine`] on a virtual clock,
 //! * [`workload`] — NewWorkload / Philly / Helios generators,
 //! * [`serverless`] — the v1 control plane: coordinator plus
 //!   [`serverless::api`] (typed DTOs), [`serverless::server`] (thread-pool
@@ -38,6 +43,7 @@ pub mod bench_harness;
 pub mod cli;
 pub mod cluster;
 pub mod config;
+pub mod engine;
 pub mod exp;
 pub mod ilp;
 pub mod job;

@@ -7,7 +7,10 @@
 //! frenzy cancel   <job-id> [--addr ...]
 //! frenzy list     [--state running] [--offset 0] [--limit 100] [--addr ...]
 //! frenzy predict  --model gpt2-7b --batch 2 [--addr ... | --cluster real]
+//! frenzy scale    --join --gpu A100-80G --count 4 --link nvlink [--addr ...]
+//! frenzy scale    --leave 2 [--addr ...]
 //! frenzy simulate --workload newworkload --tasks 30 --sched has [--seed 11]
+//! frenzy replay   --workload philly --tasks 20 [--speedup 1000]
 //! frenzy train    --model gpt2-tiny --steps 50        (direct PJRT run)
 //! frenzy fig4 | fig5a | fig5b | fig6 | figures
 //! frenzy trace    --workload philly --n 100 --out trace.csv
@@ -51,8 +54,12 @@ USAGE:
   frenzy list     [--state queued|running|completed|rejected|cancelled]
                   [--offset O] [--limit L] [--addr A]
   frenzy predict  --model <name> --batch <B> [--addr A | --cluster real|sim]
+  frenzy scale    --join --gpu <type> [--count N] [--link nvlink|pcie] [--addr A]
+  frenzy scale    --leave <node> [--addr A]
   frenzy simulate --workload newworkload|philly|helios --tasks <n>
                   --sched has|sia|opportunistic [--cluster real|sim] [--seed S]
+  frenzy replay   --workload <w> --tasks <n> [--speedup X] [--stub-ms M]
+                  [--cluster real|sim] [--seed S]   (trace through the LIVE engine)
   frenzy train    --model gpt2-tiny [--steps N]
   frenzy fig4 | fig5a | fig5b | fig6 | figures
   frenzy trace    --workload <w> --n <n> --out <file> [--seed S]
@@ -98,18 +105,15 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("status") => commands::cmd_status(args),
         Some("cancel") => commands::cmd_cancel(args),
         Some("list") => commands::cmd_list(args),
+        Some("scale") => commands::cmd_scale(args),
         Some("serve") => commands::cmd_serve(args),
+        Some("replay") => commands::cmd_replay(args),
         Some("simulate") => {
             let cluster = commands::cluster_arg(args)?;
             let n: usize = args.opt_parse_or("tasks", 30)?;
             let seed: u64 = args.opt_parse_or("seed", 11)?;
             let workload = args.opt_or("workload", "newworkload");
-            let jobs = match workload {
-                "newworkload" => newworkload::generate(n, seed),
-                "philly" => philly::generate(n, seed),
-                "helios" => helios::generate(n, seed),
-                other => trace::load(other)?, // treat as a trace file
-            };
+            let jobs = commands::load_workload(workload, n, seed)?;
             let sched_name = args.opt_or("sched", "has");
             let mut sched: Box<dyn Scheduler> = match sched_name {
                 "has" | "frenzy" => Box::new(Has::new(Marp::with_defaults(cluster.clone()))),

@@ -93,6 +93,10 @@ impl Marp {
         &self.pm
     }
 
+    pub fn config(&self) -> &MarpConfig {
+        &self.cfg
+    }
+
     /// Smallest GPU size in the cluster that can hold `required` bytes.
     fn min_fitting_size(&self, required: u64) -> Option<u64> {
         self.sizes_asc.iter().copied().find(|&sz| required <= sz)

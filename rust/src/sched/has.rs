@@ -114,6 +114,16 @@ impl Scheduler for Has {
         "frenzy-has"
     }
 
+    /// Elasticity: MARP's plan list depends on the GPU sizes present, so a
+    /// NodeJoin/NodeLeave invalidates both the predictor and the memoized
+    /// plans (a joined 80G node can make previously infeasible models
+    /// feasible; a departed one can do the reverse).
+    fn cluster_changed(&mut self, state: &ClusterState) {
+        let spec = state.to_spec(self.marp.cluster().name.as_str());
+        self.marp = Marp::new(spec, self.marp.config().clone());
+        self.plan_cache.clear();
+    }
+
     fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, _now: f64) -> SchedRound {
         let mut round = SchedRound::default();
         let mut snap = snapshot.clone();

@@ -6,8 +6,9 @@
 //!   memory-oblivious with OOM trial-and-error.
 //!
 //! Schedulers plan against an immutable [`ClusterState`] snapshot and return
-//! [`Decision`]s; the simulator (or the live serverless coordinator) applies
-//! them through the [`crate::cluster::Orchestrator`], which is the single
+//! [`Decision`]s; the shared [`crate::engine::SchedulingEngine`] — driving
+//! both the simulator and the live serverless coordinator — applies them
+//! through the [`crate::cluster::Orchestrator`], which is the single
 //! authority on resource state.
 
 pub mod has;
@@ -65,11 +66,18 @@ pub trait Scheduler {
 
     /// `Some(interval)` for batch schedulers that re-solve on a fixed round
     /// cadence (Sia/Pollux-style); `None` for event-driven schedulers (HAS,
-    /// Opportunistic). The simulator defers placements to round boundaries
+    /// Opportunistic). The engine defers placements to round boundaries
     /// for interval schedulers — part of their queueing cost.
     fn round_interval_s(&self) -> Option<f64> {
         None
     }
+
+    /// The engine calls this after the cluster topology changes (elastic
+    /// `NodeJoin`/`NodeLeave`). Schedulers holding state derived from the
+    /// topology — MARP plan caches, GPU-type tables, sizing heuristics —
+    /// must rebuild it here, or a joined GPU type stays invisible to them.
+    /// Default: no-op (for purely snapshot-driven schedulers).
+    fn cluster_changed(&mut self, _state: &ClusterState) {}
 }
 
 /// Derive the communication placement and effective GPU for an allocation.

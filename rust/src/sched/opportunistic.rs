@@ -76,6 +76,13 @@ impl Scheduler for Opportunistic {
         "opportunistic"
     }
 
+    /// Elasticity: users size their guesses to the biggest GPU around.
+    fn cluster_changed(&mut self, state: &ClusterState) {
+        let spec = state.to_spec("scaled");
+        self.max_gpu_mem = spec.max_gpu_mem();
+        self.max_tp = spec.max_gpus_per_node().max(1);
+    }
+
     fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, _now: f64) -> SchedRound {
         let mut round = SchedRound::default();
         let mut idle: Vec<u32> = snapshot.nodes.iter().map(|n| n.idle).collect();

@@ -201,6 +201,15 @@ impl Scheduler for Sia {
         Some(self.round_interval)
     }
 
+    /// Elasticity: the ILP's GPU-type dimensions come from the topology.
+    fn cluster_changed(&mut self, state: &ClusterState) {
+        let mut type_names: Vec<&'static str> =
+            state.active_nodes().map(|n| n.gpu.name).collect();
+        type_names.sort_unstable();
+        type_names.dedup();
+        self.type_names = type_names;
+    }
+
     fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, _now: f64) -> SchedRound {
         let mut round = SchedRound::default();
         if pending.is_empty() {

@@ -9,9 +9,10 @@
 //!
 //! The full route table lives in `API.md` at the repository root.
 
+use crate::config::LinkKind;
 use crate::job::JobState;
 use crate::marp::ResourcePlan;
-use crate::serverless::{GpuTypeInfo, JobStatus, ListPage, PredictReport};
+use crate::serverless::{GpuTypeInfo, JobStatus, ListPage, PredictReport, ScaleReport};
 use crate::util::json::Json;
 
 /// Default page size for `GET /v1/jobs` when `limit` is absent.
@@ -592,6 +593,139 @@ impl PredictResponseV1 {
     }
 }
 
+/// Wire name of a [`LinkKind`].
+pub fn link_to_str(l: LinkKind) -> &'static str {
+    match l {
+        LinkKind::NvLink => "nvlink",
+        LinkKind::Pcie => "pcie",
+    }
+}
+
+/// Inverse of [`link_to_str`].
+pub fn link_from_str(s: &str) -> Option<LinkKind> {
+    match s {
+        "nvlink" => Some(LinkKind::NvLink),
+        "pcie" => Some(LinkKind::Pcie),
+        _ => None,
+    }
+}
+
+/// `POST /v1/cluster/scale` request body — elastic cluster scaling.
+///
+/// Join: `{"op":"join","gpu":"A100-80G","count":4,"link":"nvlink"}`
+/// Leave: `{"op":"leave","node":2}`
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScaleRequestV1 {
+    Join { gpu: String, count: u32, link: LinkKind },
+    Leave { node: usize },
+}
+
+impl ScaleRequestV1 {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            ScaleRequestV1::Join { gpu, count, link } => {
+                j.set("op", "join")
+                    .set("gpu", gpu.as_str())
+                    .set("count", *count)
+                    .set("link", link_to_str(*link));
+            }
+            ScaleRequestV1::Leave { node } => {
+                j.set("op", "leave").set("node", *node);
+            }
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let op = j.get("op").and_then(Json::as_str).ok_or("missing string field 'op'")?;
+        match op {
+            "join" => {
+                let gpu =
+                    j.get("gpu").and_then(Json::as_str).ok_or("missing string field 'gpu'")?;
+                if gpu.is_empty() {
+                    return Err("'gpu' must be non-empty".into());
+                }
+                let count =
+                    j.get("count").and_then(Json::as_u64).ok_or("missing integer field 'count'")?;
+                if count == 0 || count > u32::MAX as u64 {
+                    return Err("'count' must be in 1..=2^32-1".into());
+                }
+                let link_s = j.get("link").and_then(Json::as_str).unwrap_or("pcie");
+                let link = link_from_str(link_s)
+                    .ok_or_else(|| format!("unknown link '{link_s}' (nvlink|pcie)"))?;
+                Ok(ScaleRequestV1::Join { gpu: gpu.to_string(), count: count as u32, link })
+            }
+            "leave" => {
+                let node = j
+                    .get("node")
+                    .and_then(Json::as_usize)
+                    .ok_or("missing integer field 'node'")?;
+                Ok(ScaleRequestV1::Leave { node })
+            }
+            other => Err(format!("unknown op '{other}' (join|leave)")),
+        }
+    }
+}
+
+/// `POST /v1/cluster/scale` response body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleResponseV1 {
+    /// `"join"` or `"leave"`.
+    pub op: String,
+    /// Node id joined or retired.
+    pub node: usize,
+    /// Jobs preempted and requeued by a leave (empty for a join).
+    pub preempted: Vec<u64>,
+    pub total_gpus: u32,
+    pub idle_gpus: u32,
+}
+
+impl ScaleResponseV1 {
+    pub fn from_report(op: &str, r: &ScaleReport) -> Self {
+        Self {
+            op: op.to_string(),
+            node: r.node,
+            preempted: r.preempted.clone(),
+            total_gpus: r.total_gpus,
+            idle_gpus: r.idle_gpus,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("op", self.op.as_str())
+            .set("node", self.node)
+            .set(
+                "preempted",
+                Json::Arr(self.preempted.iter().map(|&id| Json::from(id)).collect()),
+            )
+            .set("total_gpus", self.total_gpus)
+            .set("idle_gpus", self.idle_gpus);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut preempted = Vec::new();
+        for item in j.get("preempted").and_then(Json::as_arr).unwrap_or(&[]) {
+            preempted.push(item.as_u64().ok_or("'preempted' items must be integers")?);
+        }
+        Ok(Self {
+            op: j
+                .get("op")
+                .and_then(Json::as_str)
+                .ok_or("missing string field 'op'")?
+                .to_string(),
+            node: j.get("node").and_then(Json::as_usize).ok_or("missing field 'node'")?,
+            preempted,
+            total_gpus: j.get("total_gpus").and_then(Json::as_u64).ok_or("missing 'total_gpus'")?
+                as u32,
+            idle_gpus: j.get("idle_gpus").and_then(Json::as_u64).ok_or("missing 'idle_gpus'")?
+                as u32,
+        })
+    }
+}
+
 /// `GET /v1/cluster` response body.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterInfoV1 {
@@ -753,6 +887,63 @@ mod tests {
             roundtrip(&resp, ListResponseV1::to_json, ListResponseV1::from_json);
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_scale_roundtrip() {
+        Runner::new("scale dto roundtrip", 0x5CA1E, 150).run(|g| {
+            let req = if g.bool() {
+                let mut gpu = gen_string(g);
+                if gpu.is_empty() {
+                    gpu.push('g');
+                }
+                ScaleRequestV1::Join {
+                    gpu,
+                    count: g.u64_in(1, 4096) as u32,
+                    link: *g.pick(&[LinkKind::NvLink, LinkKind::Pcie]),
+                }
+            } else {
+                ScaleRequestV1::Leave { node: g.usize_in(0, 500) }
+            };
+            roundtrip(&req, ScaleRequestV1::to_json, ScaleRequestV1::from_json);
+            let resp = ScaleResponseV1 {
+                op: if g.bool() { "join".into() } else { "leave".into() },
+                node: g.usize_in(0, 500),
+                preempted: (0..g.usize_in(0, 4)).map(|i| i as u64).collect(),
+                total_gpus: g.u64_in(0, 4096) as u32,
+                idle_gpus: g.u64_in(0, 4096) as u32,
+            };
+            roundtrip(&resp, ScaleResponseV1::to_json, ScaleResponseV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_request_validation() {
+        let parse = |s: &str| ScaleRequestV1::from_json(&json::parse(s).unwrap());
+        assert!(parse(r#"{"op":"join","gpu":"A100-40G","count":0,"link":"pcie"}"#).is_err());
+        assert!(parse(r#"{"op":"join","gpu":"","count":1,"link":"pcie"}"#).is_err());
+        assert!(parse(r#"{"op":"join","gpu":"A100-40G","count":1,"link":"warp"}"#).is_err());
+        assert!(parse(r#"{"op":"leave"}"#).is_err());
+        assert!(parse(r#"{"op":"resize","node":1}"#).is_err());
+        assert!(parse(r#"{"node":1}"#).is_err());
+        // link defaults to pcie when omitted
+        assert_eq!(
+            parse(r#"{"op":"join","gpu":"A100-40G","count":2}"#).unwrap(),
+            ScaleRequestV1::Join { gpu: "A100-40G".into(), count: 2, link: LinkKind::Pcie }
+        );
+        assert_eq!(
+            parse(r#"{"op":"leave","node":3}"#).unwrap(),
+            ScaleRequestV1::Leave { node: 3 }
+        );
+    }
+
+    #[test]
+    fn link_str_bijection() {
+        for l in [LinkKind::NvLink, LinkKind::Pcie] {
+            assert_eq!(link_from_str(link_to_str(l)), Some(l));
+        }
+        assert_eq!(link_from_str("token-ring"), None);
     }
 
     #[test]

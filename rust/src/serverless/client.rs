@@ -17,7 +17,8 @@
 
 use super::api::{
     ApiError, CancelResponseV1, ClusterInfoV1, JobStatusV1, ListRequestV1, ListResponseV1,
-    PredictRequestV1, PredictResponseV1, SubmitRequestV1, SubmitResponseV1,
+    PredictRequestV1, PredictResponseV1, ScaleRequestV1, ScaleResponseV1, SubmitRequestV1,
+    SubmitResponseV1,
 };
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Context, Result};
@@ -241,5 +242,14 @@ impl FrenzyClient {
     pub fn cluster(&mut self) -> Result<ClusterInfoV1> {
         let j = self.call("GET", "/v1/cluster", "", true)?;
         ClusterInfoV1::from_json(&j).map_err(|e| anyhow!(e))
+    }
+
+    /// `POST /v1/cluster/scale` — elastic join/leave. Not idempotent (a
+    /// replayed join adds a second node; a replayed leave errors), so a
+    /// lost connection mid-request is surfaced instead of retried.
+    pub fn scale(&mut self, req: &ScaleRequestV1) -> Result<ScaleResponseV1> {
+        let body = req.to_json().to_string_compact();
+        let j = self.call("POST", "/v1/cluster/scale", &body, false)?;
+        ScaleResponseV1::from_json(&j).map_err(|e| anyhow!(e))
     }
 }

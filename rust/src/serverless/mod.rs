@@ -3,14 +3,23 @@
 //! [`Coordinator`] is the live (non-simulated) control plane:
 //! * accepts job submissions (model + batch + sample budget) via a channel
 //!   API (and over HTTP through [`server`]),
-//! * runs MARP → HAS on every state change,
-//! * holds allocations in the [`crate::cluster::Orchestrator`],
+//! * delegates **all scheduling-loop logic** — pending queue, placement
+//!   rounds, release, OOM-requeue, elasticity — to the shared
+//!   [`crate::engine::SchedulingEngine`] on a
+//!   [`crate::engine::clock::WallClock`]; the coordinator thread only
+//!   translates messages ([`Msg`] / executor `TrainResult`s) into
+//!   [`ClusterEvent`]s and dispatches placed jobs,
 //! * dispatches *real* training work for scheduled jobs to the PJRT
 //!   [`crate::runtime::executor::TrainExecutor`] (scaled-down step counts —
 //!   the CPU stands in for the GPUs; see DESIGN.md §6),
-//! * releases resources on completion and reports outcomes,
 //! * supports the full v1 job lifecycle: cancel (queued or running),
-//!   filtered/paginated listing, and MARP dry-run prediction.
+//!   filtered/paginated listing, MARP dry-run prediction, and **elastic
+//!   cluster scaling** (`POST /v1/cluster/scale`): nodes can join or leave
+//!   mid-run; a leave preempts and requeues the jobs it hosted.
+//!
+//! Because the simulator drives the *same* engine on a virtual clock, every
+//! policy and scenario behaves identically in simulation and live mode (the
+//! differential trace test in `tests/integration_engine.rs` proves it).
 //!
 //! The coordinator thread owns all mutable state; clients talk to it through
 //! message passing, so there are no locks on the scheduling path. The v1
@@ -23,18 +32,21 @@ pub mod client;
 pub mod http;
 pub mod server;
 
-use crate::cluster::Orchestrator;
-use crate::config::ClusterSpec;
-use crate::job::{JobId, JobOutcome, JobSpec, JobState};
+use crate::cluster::ClusterState;
+use crate::config::{ClusterSpec, LinkKind, NodeSpec};
+use crate::engine::clock::{Clock, WallClock};
+use crate::engine::{
+    ClusterEvent, Effects, EngineConfig, PlacedJob, PlacementRecord, SchedulingEngine,
+};
+use crate::job::{JobId, JobSpec, JobState};
 use crate::marp::{Marp, ResourcePlan};
 use crate::memory::TrainConfig;
 use crate::metrics::RunReport;
 use crate::runtime::executor::{TrainExecutor, TrainRequest, TrainResult};
-use crate::sched::{has::Has, PendingJob, Scheduler};
+use crate::sched::has::Has;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::time::Instant;
 
 /// What a user submits: the serverless API surface.
 #[derive(Debug, Clone)]
@@ -100,6 +112,12 @@ impl GpuTypeInfo {
         }
         types
     }
+
+    /// Like [`GpuTypeInfo::aggregate`], but over the *live* cluster state —
+    /// reflects elastic joins/leaves (retired nodes are skipped).
+    pub fn aggregate_state(state: &ClusterState) -> Vec<GpuTypeInfo> {
+        Self::aggregate(&state.to_spec("live"))
+    }
 }
 
 /// MARP dry-run result for `POST /v1/predict`: the ranked plans plus the
@@ -112,15 +130,41 @@ pub struct PredictReport {
     pub gpu_types: Vec<GpuTypeInfo>,
 }
 
+/// An elastic scale operation (`POST /v1/cluster/scale`).
+#[derive(Debug, Clone)]
+pub enum ScaleOp {
+    /// Add a node of `count` GPUs of catalog type `gpu` joined by `link`.
+    Join { gpu: String, count: u32, link: LinkKind },
+    /// Retire node `node`, preempting and requeueing the jobs it hosts.
+    Leave { node: usize },
+}
+
+/// Result of a scale operation.
+#[derive(Debug, Clone)]
+pub struct ScaleReport {
+    /// Node id joined or retired.
+    pub node: usize,
+    /// Every job that lost its GPUs to a `Leave` — requeued with
+    /// `attempts + 1`, or rejected if its attempt budget was already
+    /// exhausted (check job status for which). Empty for a `Join`.
+    pub preempted: Vec<JobId>,
+    pub total_gpus: u32,
+    pub idle_gpus: u32,
+}
+
 enum Msg {
     Submit(SubmitRequest, mpsc::Sender<Result<JobId, String>>),
     Query(JobId, mpsc::Sender<Option<JobStatus>>),
     Cancel(JobId, mpsc::Sender<CancelOutcome>),
     List(api::ListRequestV1, mpsc::Sender<ListPage>),
     Predict(String, u32, mpsc::Sender<Result<PredictReport, String>>),
+    Scale(ScaleOp, mpsc::Sender<Result<ScaleReport, String>>),
     ClusterInfo(mpsc::Sender<(u32, u32, f64)>),
     Report(mpsc::Sender<RunReport>),
-    TrainDone(TrainResult),
+    Decisions(mpsc::Sender<Vec<PlacementRecord>>),
+    /// Executor completion, tagged with the placement epoch it belongs to
+    /// (a result from a preempted/cancelled run must be discarded).
+    TrainDone(TrainResult, u64),
     Drain(mpsc::Sender<()>),
     Shutdown,
 }
@@ -181,6 +225,17 @@ impl Handle {
         self.ask(|rtx| Msg::Predict(model, batch, rtx))
     }
 
+    /// Elastic scaling: join a node or retire one (preempting its jobs).
+    pub fn scale(&self, op: ScaleOp) -> Result<ScaleReport> {
+        self.try_scale(op)?.map_err(|e| anyhow!(e))
+    }
+
+    /// Like [`Handle::scale`], but keeps transport failures (outer `Err`)
+    /// separate from domain errors (inner `Err`: unknown GPU / bad node).
+    pub fn try_scale(&self, op: ScaleOp) -> Result<std::result::Result<ScaleReport, String>> {
+        self.ask(|rtx| Msg::Scale(op, rtx))
+    }
+
     /// (total gpus, idle gpus, utilization)
     pub fn cluster_info(&self) -> Result<(u32, u32, f64)> {
         self.ask(Msg::ClusterInfo)
@@ -188,6 +243,12 @@ impl Handle {
 
     pub fn report(&self) -> Result<RunReport> {
         self.ask(Msg::Report)
+    }
+
+    /// The engine's placement decision log — `(job, sorted (node, gpus))`
+    /// in placement order. Used by the sim/live differential tests.
+    pub fn decisions(&self) -> Result<Vec<PlacementRecord>> {
+        self.ask(Msg::Decisions)
     }
 
     /// Block until every submitted job reached a terminal state.
@@ -238,7 +299,7 @@ pub struct CoordinatorConfig {
     pub runtime_model: String,
     /// Artificial latency of the timing stub (ms). Zero completes jobs
     /// instantly; tests use a nonzero value to observe `Running` jobs and
-    /// exercise cancel-while-running.
+    /// exercise cancel-while-running / preempt-while-running.
     pub stub_delay_ms: u64,
 }
 
@@ -265,22 +326,29 @@ pub fn spawn(spec: ClusterSpec, cfg: CoordinatorConfig) -> (Handle, std::thread:
     (Handle { tx }, handle)
 }
 
-/// Start training (or the stub) for every job in `started`.
+/// Start training (or the stub) for every newly placed job.
 fn dispatch_jobs(
-    started: &[(JobId, u32)],
+    placed: &[PlacedJob],
     jobs: &HashMap<JobId, LiveJob>,
     cfg: &CoordinatorConfig,
     executor: &Option<TrainExecutor>,
     tx_internal: &mpsc::Sender<Msg>,
 ) {
-    for (jid, _) in started {
-        let job = &jobs[jid];
+    for p in placed {
+        // The live coordinator runs HAS, whose MARP-hardened plans never
+        // OOM, so there is no wall-clock OOM-injection path here. Wiring a
+        // memory-oblivious scheduler (Sia/Opportunistic) into the live path
+        // requires one first — otherwise a will-OOM placement would be
+        // reported as a successful Finish and sim/live would diverge.
+        debug_assert!(!p.will_oom, "live dispatch cannot model OOM placements");
+        let Some(job) = jobs.get(&p.job) else { continue };
         let steps = (job.spec.total_samples / job.spec.train.global_batch.max(1) as u64)
             .clamp(1, cfg.max_real_steps);
+        let epoch = p.epoch;
         if let Some(ex) = executor {
             let rrx = ex
                 .submit(TrainRequest {
-                    job_id: *jid,
+                    job_id: p.job,
                     model: cfg.runtime_model.clone(),
                     steps,
                     log_every: (steps / 10).max(1),
@@ -290,12 +358,12 @@ fn dispatch_jobs(
             let tx = tx_internal.clone();
             std::thread::spawn(move || {
                 if let Ok(res) = rrx.recv() {
-                    let _ = tx.send(Msg::TrainDone(res));
+                    let _ = tx.send(Msg::TrainDone(res, epoch));
                 }
             });
         } else {
             let res = TrainResult {
-                job_id: *jid,
+                job_id: p.job,
                 model: cfg.runtime_model.clone(),
                 steps,
                 losses: vec![(0, 0.0)],
@@ -304,22 +372,50 @@ fn dispatch_jobs(
                 error: None,
             };
             if cfg.stub_delay_ms == 0 {
-                // Timing stub: complete instantly.
-                let _ = tx_internal.send(Msg::TrainDone(res));
+                // Timing stub: complete instantly (still via the mailbox so
+                // ordering matches the executor path).
+                let _ = tx_internal.send(Msg::TrainDone(res, epoch));
             } else {
                 let tx = tx_internal.clone();
                 let delay = std::time::Duration::from_millis(cfg.stub_delay_ms);
                 std::thread::spawn(move || {
                     std::thread::sleep(delay);
-                    let _ = tx.send(Msg::TrainDone(res));
+                    let _ = tx.send(Msg::TrainDone(res, epoch));
                 });
             }
         }
     }
 }
 
-fn all_terminal(jobs: &HashMap<JobId, LiveJob>, pending: &[PendingJob]) -> bool {
-    pending.is_empty() && jobs.values().all(|j| j.state.is_terminal())
+fn all_terminal(jobs: &HashMap<JobId, LiveJob>) -> bool {
+    jobs.values().all(|j| j.state.is_terminal())
+}
+
+/// Reflect engine [`Effects`] into the job-status table. Order matters: a
+/// job can be preempted by a NodeLeave *and* re-placed in the same round —
+/// the placement must win.
+fn apply_effects(fx: &Effects, jobs: &mut HashMap<JobId, LiveJob>, now: f64) {
+    for id in &fx.preempted {
+        if let Some(j) = jobs.get_mut(id) {
+            j.state = JobState::Queued;
+            j.gpus = 0;
+        }
+    }
+    for id in &fx.rejected {
+        if let Some(j) = jobs.get_mut(id) {
+            j.state = JobState::Rejected;
+            j.gpus = 0;
+            j.finish_t = Some(now);
+        }
+    }
+    for p in &fx.placed {
+        if let Some(j) = jobs.get_mut(&p.job) {
+            j.state = JobState::Running;
+            j.gpus = p.gpus;
+            j.start_t.get_or_insert(now);
+            j.attempts = p.attempts;
+        }
+    }
 }
 
 fn coordinator_loop(
@@ -328,53 +424,29 @@ fn coordinator_loop(
     rx: mpsc::Receiver<Msg>,
     tx_internal: mpsc::Sender<Msg>,
 ) {
-    let t0 = Instant::now();
-    let now = |t0: &Instant| t0.elapsed().as_secs_f64();
-    let mut orch = Orchestrator::new(&spec);
+    let mut wall = WallClock::new();
+    // Admission control and predict run MARP outside the engine's scheduler
+    // (rebuilt on every scale event so joined GPU types count).
+    let mut marp = Marp::with_defaults(spec.clone());
     let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let mut engine = SchedulingEngine::new(
+        &spec,
+        &mut has,
+        EngineConfig {
+            // Live mode: the scheduler's real wall time already elapses on
+            // the clock — never charge modeled overhead on top.
+            sched_work_unit_s: 0.0,
+            ..EngineConfig::default()
+        },
+    );
     let mut jobs: HashMap<JobId, LiveJob> = HashMap::new();
-    let mut pending: Vec<PendingJob> = Vec::new();
     let mut next_id: JobId = 1;
-    let mut work_units: u64 = 0;
-    let mut sched_wall = 0.0f64;
+    let mut admission_rejected = 0usize;
     let mut drain_waiters: Vec<mpsc::Sender<()>> = Vec::new();
     let executor = if cfg.execute_training {
         Some(TrainExecutor::spawn(cfg.artifacts_dir.clone()))
     } else {
         None
-    };
-
-    let schedule = |orch: &mut Orchestrator,
-                        has: &mut Has,
-                        pending: &mut Vec<PendingJob>,
-                        jobs: &mut HashMap<JobId, LiveJob>,
-                        work_units: &mut u64,
-                        sched_wall: &mut f64,
-                        clock: f64|
-     -> Vec<(JobId, u32)> {
-        if pending.is_empty() {
-            return Vec::new();
-        }
-        let snapshot = orch.snapshot();
-        let ts = Instant::now();
-        let round = has.schedule(pending, &snapshot, clock);
-        *sched_wall += ts.elapsed().as_secs_f64();
-        *work_units += round.work_units;
-        let mut started = Vec::new();
-        for d in round.decisions {
-            let Some(pos) = pending.iter().position(|p| p.spec.id == d.job) else { continue };
-            if orch.allocate(d.alloc.clone()).is_err() {
-                continue;
-            }
-            let pj = pending.remove(pos);
-            let job = jobs.get_mut(&pj.spec.id).expect("job tracked");
-            job.state = JobState::Running;
-            job.gpus = d.alloc.total_gpus();
-            job.start_t.get_or_insert(clock);
-            job.attempts = pj.attempts + 1;
-            started.push((pj.spec.id, d.alloc.total_gpus()));
-        }
-        started
     };
 
     loop {
@@ -389,11 +461,11 @@ fn coordinator_loop(
                     let _ = reply.send(Err(format!("unknown model '{}'", req.model)));
                     continue;
                 };
-                let clock = now(&t0);
+                let clock = wall.now();
                 let spec_job =
                     JobSpec::new(next_id, model, req.global_batch, req.total_samples, clock);
                 // Admission control: MARP must find at least one plan.
-                let plans = has.marp().plans(&spec_job.model, &spec_job.train);
+                let plans = marp.plans(&spec_job.model, &spec_job.train);
                 let id = next_id;
                 next_id += 1;
                 jobs.insert(
@@ -410,47 +482,47 @@ fn coordinator_loop(
                     },
                 );
                 if plans.is_empty() {
+                    admission_rejected += 1;
                     let _ = reply.send(Ok(id)); // accepted-but-rejected, visible via status
                     continue;
                 }
-                pending.push(PendingJob { spec: spec_job, attempts: 0 });
+                let mut fx = engine.handle(ClusterEvent::Arrival(spec_job), &mut wall);
+                fx.merge(engine.run_round(&mut wall));
+                apply_effects(&fx, &mut jobs, wall.now());
+                dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
+                // Reply after dispatch so an instant stub's completion is
+                // already in the mailbox before the caller's next message —
+                // sequential submitters then observe deterministic ordering
+                // (the differential trace test relies on this).
                 let _ = reply.send(Ok(id));
-                let started = schedule(
-                    &mut orch,
-                    &mut has,
-                    &mut pending,
-                    &mut jobs,
-                    &mut work_units,
-                    &mut sched_wall,
-                    now(&t0),
-                );
-                dispatch_jobs(&started, &jobs, &cfg, &executor, &tx_internal);
-            }
-            Msg::TrainDone(res) => {
-                let clock = now(&t0);
-                if let Some(job) = jobs.get_mut(&res.job_id) {
-                    // A cancelled job's in-flight result is discarded; its
-                    // resources were already released at cancel time.
-                    if job.state == JobState::Running {
-                        job.losses = res.losses.clone();
-                        job.finish_t = Some(clock);
-                        job.state = JobState::Completed;
-                        let _ = orch.release(res.job_id);
+                if all_terminal(&jobs) {
+                    // The submitted job can be rejected as unplaceable in
+                    // its own round; don't leave drain waiters parked.
+                    for w in drain_waiters.drain(..) {
+                        let _ = w.send(());
                     }
+                }
+            }
+            Msg::TrainDone(res, epoch) => {
+                let mut fx = Effects::default();
+                if jobs.get(&res.job_id).map(|j| j.state) == Some(JobState::Running) {
+                    fx = engine
+                        .handle(ClusterEvent::Finish { job: res.job_id, epoch }, &mut wall);
+                    if fx.finished.contains(&res.job_id) {
+                        let job = jobs.get_mut(&res.job_id).expect("job tracked");
+                        job.losses = res.losses.clone();
+                        job.finish_t = Some(wall.now());
+                        job.state = JobState::Completed;
+                    }
+                    // else: stale epoch — the job was preempted and re-placed
+                    // since; its current run's result is still in flight.
                 }
                 // Newly freed resources: run another round, dispatching work
                 // for anything that starts.
-                let started = schedule(
-                    &mut orch,
-                    &mut has,
-                    &mut pending,
-                    &mut jobs,
-                    &mut work_units,
-                    &mut sched_wall,
-                    clock,
-                );
-                dispatch_jobs(&started, &jobs, &cfg, &executor, &tx_internal);
-                if all_terminal(&jobs, &pending) {
+                fx.merge(engine.run_round(&mut wall));
+                apply_effects(&fx, &mut jobs, wall.now());
+                dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
+                if all_terminal(&jobs) {
                     for w in drain_waiters.drain(..) {
                         let _ = w.send(());
                     }
@@ -460,18 +532,18 @@ fn coordinator_loop(
                 let _ = reply.send(jobs.get(&id).map(LiveJob::status));
             }
             Msg::Cancel(id, reply) => {
-                let clock = now(&t0);
+                let clock = wall.now();
                 let outcome = match jobs.get_mut(&id) {
                     None => CancelOutcome::NotFound,
                     Some(job) => match job.state {
                         JobState::Queued => {
-                            pending.retain(|p| p.spec.id != id);
+                            engine.cancel_pending(id);
                             job.state = JobState::Cancelled;
                             job.finish_t = Some(clock);
                             CancelOutcome::Cancelled(job.status())
                         }
                         JobState::Running => {
-                            let _ = orch.release(id);
+                            engine.cancel_running(id);
                             job.state = JobState::Cancelled;
                             job.finish_t = Some(clock);
                             CancelOutcome::Cancelled(job.status())
@@ -484,19 +556,73 @@ fn coordinator_loop(
                 if freed {
                     // A cancel can free GPUs (running job) or just shrink the
                     // queue; either way give waiters a chance.
-                    let started = schedule(
-                        &mut orch,
-                        &mut has,
-                        &mut pending,
-                        &mut jobs,
-                        &mut work_units,
-                        &mut sched_wall,
-                        now(&t0),
-                    );
-                    dispatch_jobs(&started, &jobs, &cfg, &executor, &tx_internal);
-                    if all_terminal(&jobs, &pending) {
+                    let fx = engine.run_round(&mut wall);
+                    apply_effects(&fx, &mut jobs, wall.now());
+                    dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
+                    if all_terminal(&jobs) {
                         for w in drain_waiters.drain(..) {
                             let _ = w.send(());
+                        }
+                    }
+                }
+            }
+            Msg::Scale(op, reply) => {
+                let staged = match op {
+                    ScaleOp::Join { gpu, count, link } => {
+                        match crate::config::gpu_by_name(&gpu) {
+                            None => Err(format!("unknown GPU type '{gpu}'")),
+                            Some(_) if count == 0 => Err("'count' must be > 0".into()),
+                            Some(g) => {
+                                let node_spec = NodeSpec { gpu: g, count, link };
+                                let fx =
+                                    engine.handle(ClusterEvent::NodeJoin(node_spec), &mut wall);
+                                let node = engine.cluster_state().nodes.len() - 1;
+                                Ok((node, fx))
+                            }
+                        }
+                    }
+                    ScaleOp::Leave { node } => {
+                        let active = engine
+                            .cluster_state()
+                            .nodes
+                            .get(node)
+                            .is_some_and(|n| n.total > 0);
+                        if !active {
+                            Err(format!("no such node {node}"))
+                        } else {
+                            let fx = engine.handle(ClusterEvent::NodeLeave(node), &mut wall);
+                            Ok((node, fx))
+                        }
+                    }
+                };
+                match staged {
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                    Ok((node, mut fx)) => {
+                        // The topology changed: rebuild admission MARP so
+                        // new GPU types are admitted (the engine already
+                        // told its scheduler via `cluster_changed`).
+                        marp = Marp::with_defaults(engine.cluster_state().to_spec("scaled"));
+                        // Report every job the leave displaced — including
+                        // those the engine rejected for an exhausted
+                        // attempt budget, which land in `fx.rejected`.
+                        let mut preempted = fx.preempted.clone();
+                        preempted.extend(fx.rejected.iter().copied());
+                        fx.merge(engine.run_round(&mut wall));
+                        apply_effects(&fx, &mut jobs, wall.now());
+                        dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
+                        let s = engine.cluster_state();
+                        let _ = reply.send(Ok(ScaleReport {
+                            node,
+                            preempted,
+                            total_gpus: s.total_gpus(),
+                            idle_gpus: s.idle_gpus(),
+                        }));
+                        if all_terminal(&jobs) {
+                            for w in drain_waiters.drain(..) {
+                                let _ = w.send(());
+                            }
                         }
                     }
                 }
@@ -504,7 +630,7 @@ fn coordinator_loop(
             Msg::List(req, reply) => {
                 let mut matching: Vec<&LiveJob> = jobs
                     .values()
-                    .filter(|j| req.state.map_or(true, |s| j.state == s))
+                    .filter(|j| req.state.is_none_or(|s| j.state == s))
                     .collect();
                 matching.sort_by_key(|j| j.spec.id);
                 let total = matching.len();
@@ -520,46 +646,36 @@ fn coordinator_loop(
                 let res = match crate::config::models::model_by_name(&model_name) {
                     None => Err(format!("unknown model '{model_name}'")),
                     Some(m) => {
-                        let plans = has.marp().plans(&m, &TrainConfig { global_batch: batch });
-                        let gpu_types = GpuTypeInfo::aggregate(&spec);
+                        let plans = marp.plans(&m, &TrainConfig { global_batch: batch });
+                        let gpu_types = GpuTypeInfo::aggregate_state(engine.cluster_state());
                         Ok(PredictReport { model: model_name, batch, plans, gpu_types })
                     }
                 };
                 let _ = reply.send(res);
             }
             Msg::ClusterInfo(reply) => {
-                let s = orch.state();
+                let s = engine.cluster_state();
                 let _ = reply.send((s.total_gpus(), s.idle_gpus(), s.utilization()));
             }
             Msg::Report(reply) => {
-                let outcomes: Vec<JobOutcome> = jobs
-                    .values()
-                    .filter(|j| j.state == JobState::Completed)
-                    .map(|j| JobOutcome {
-                        id: j.spec.id,
-                        name: j.spec.name.clone(),
-                        submit_time: j.submit_t,
-                        start_time: j.start_t.unwrap_or(j.submit_t),
-                        finish_time: j.finish_t.unwrap_or(j.submit_t),
-                        gpus_used: j.gpus,
-                        samples_per_sec: 0.0,
-                        attempts: j.attempts.max(1),
-                    })
-                    .collect();
-                let rejected =
-                    jobs.values().filter(|j| j.state == JobState::Rejected).count();
+                let rejected = engine.rejected_count() + admission_rejected;
+                let now = wall.now();
+                let util = engine.utilization_to(now);
                 let _ = reply.send(RunReport::from_outcomes(
                     "frenzy-live",
                     "serverless",
-                    &outcomes,
+                    engine.outcomes(),
                     rejected,
-                    work_units,
-                    sched_wall,
-                    orch.state().utilization(),
+                    engine.work_units(),
+                    engine.sched_wall_s(),
+                    util,
                 ));
             }
+            Msg::Decisions(reply) => {
+                let _ = reply.send(engine.decision_log().to_vec());
+            }
             Msg::Drain(reply) => {
-                if all_terminal(&jobs, &pending) {
+                if all_terminal(&jobs) {
                     let _ = reply.send(());
                 } else {
                     drain_waiters.push(reply);
@@ -710,6 +826,76 @@ mod tests {
             .list(&api::ListRequestV1 { state: Some(JobState::Queued), offset: 0, limit: 10 })
             .unwrap();
         assert_eq!(empty.total, 0);
+        h.shutdown();
+    }
+
+    #[test]
+    fn scale_join_expands_cluster_and_admits_bigger_plans() {
+        let (h, _j) = spawn(real_testbed(), no_exec_cfg());
+        let (total0, _, _) = h.cluster_info().unwrap();
+        let rep = h
+            .scale(ScaleOp::Join { gpu: "A100-80G".into(), count: 4, link: LinkKind::NvLink })
+            .unwrap();
+        assert_eq!(rep.node, 5, "appended after the 5 seed nodes");
+        assert!(rep.preempted.is_empty());
+        assert_eq!(rep.total_gpus, total0 + 4);
+        assert_eq!(rep.idle_gpus, total0 + 4);
+        // Predict now reports the grown inventory.
+        let p = h.predict("gpt2-7b", 2).unwrap();
+        assert_eq!(p.gpu_types.iter().map(|g| g.count).sum::<u32>(), total0 + 4);
+        h.shutdown();
+    }
+
+    #[test]
+    fn scale_leave_preempts_requeues_and_completes() {
+        let cfg = CoordinatorConfig {
+            execute_training: false,
+            stub_delay_ms: 300,
+            ..CoordinatorConfig::default()
+        };
+        let (h, _j) = spawn(real_testbed(), cfg);
+        let id = h
+            .submit(SubmitRequest {
+                model: "gpt2-350m".into(),
+                global_batch: 8,
+                total_samples: 400,
+            })
+            .unwrap();
+        assert_eq!(h.status(id).unwrap().unwrap().state, JobState::Running);
+        // Find the node the job landed on and retire it.
+        let decisions = h.decisions().unwrap();
+        assert_eq!(decisions.len(), 1);
+        let node = decisions[0].1[0].0;
+        let rep = h.scale(ScaleOp::Leave { node }).unwrap();
+        assert_eq!(rep.preempted, vec![id], "exactly the hosted job is preempted");
+        // The job was requeued (attempts + 1) and re-placed elsewhere; the
+        // stale first-run result must be discarded and the job still
+        // completes exactly once.
+        h.drain().unwrap();
+        let st = h.status(id).unwrap().unwrap();
+        assert_eq!(st.state, JobState::Completed);
+        let (total, idle, _) = h.cluster_info().unwrap();
+        assert!(total < 11, "a node is gone");
+        assert_eq!(total, idle, "all resources released");
+        let report = h.report().unwrap();
+        assert_eq!(report.n_completed, 1);
+        assert_eq!(report.total_oom_retries, 1, "the preemption shows as one extra attempt");
+        h.shutdown();
+    }
+
+    #[test]
+    fn scale_errors_are_domain_errors() {
+        let (h, _j) = spawn(real_testbed(), no_exec_cfg());
+        assert!(h
+            .scale(ScaleOp::Join { gpu: "H999".into(), count: 2, link: LinkKind::Pcie })
+            .is_err());
+        assert!(h.scale(ScaleOp::Leave { node: 99 }).is_err());
+        assert!(h
+            .scale(ScaleOp::Join { gpu: "A100-40G".into(), count: 0, link: LinkKind::Pcie })
+            .is_err());
+        // Double-leave: second call errors (node already retired).
+        h.scale(ScaleOp::Leave { node: 0 }).unwrap();
+        assert!(h.scale(ScaleOp::Leave { node: 0 }).is_err());
         h.shutdown();
     }
 }

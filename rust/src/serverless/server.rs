@@ -15,9 +15,10 @@
 
 use super::api::{
     ApiError, CancelResponseV1, ClusterInfoV1, JobStatusV1, ListRequestV1, ListResponseV1,
-    PredictRequestV1, PredictResponseV1, SubmitRequestV1, SubmitResponseV1,
+    PredictRequestV1, PredictResponseV1, ScaleRequestV1, ScaleResponseV1, SubmitRequestV1,
+    SubmitResponseV1,
 };
-use super::{CancelOutcome, Handle, SubmitRequest};
+use super::{CancelOutcome, Handle, ScaleOp, SubmitRequest};
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -194,7 +195,7 @@ fn allowed_methods(path: &str) -> Option<&'static str> {
     match path {
         "/v1/healthz" | "/v1/cluster" => Some("GET"),
         "/v1/jobs" => Some("GET, POST"),
-        "/v1/predict" => Some("POST"),
+        "/v1/predict" | "/v1/cluster/scale" => Some("POST"),
         _ => {
             let rest = path.strip_prefix("/v1/jobs/")?;
             if rest.is_empty() {
@@ -240,6 +241,7 @@ pub fn route_full(handle: &Handle, req: &Request) -> Response {
         ("POST", "/v1/jobs") => Some(handle_submit(handle, &req.body)),
         ("GET", "/v1/jobs") => Some(handle_list(handle, query)),
         ("POST", "/v1/predict") => Some(handle_predict(handle, &req.body)),
+        ("POST", "/v1/cluster/scale") => Some(handle_scale(handle, &req.body)),
         _ => None,
     };
     if let Some(r) = resp {
@@ -351,6 +353,30 @@ fn handle_predict(handle: &Handle, body: &str) -> Response {
         // Inner error = unknown model (caller's fault); outer = coordinator
         // gone (server fault).
         Ok(Err(e)) => Response::err(400, e),
+        Err(e) => Response::err(500, e.to_string()),
+    }
+}
+
+fn handle_scale(handle: &Handle, body: &str) -> Response {
+    let parsed = match parse_body(body) {
+        Ok(p) => p,
+        Err(r) => return r,
+    };
+    let sreq = match ScaleRequestV1::from_json(&parsed) {
+        Ok(s) => s,
+        Err(e) => return Response::err(400, e),
+    };
+    let (op_name, op) = match sreq {
+        ScaleRequestV1::Join { gpu, count, link } => ("join", ScaleOp::Join { gpu, count, link }),
+        ScaleRequestV1::Leave { node } => ("leave", ScaleOp::Leave { node }),
+    };
+    match handle.try_scale(op) {
+        Ok(Ok(report)) => Response::ok(
+            ScaleResponseV1::from_report(op_name, &report).to_json().to_string_compact(),
+        ),
+        // Unknown GPU type / bad node id is the caller's fault …
+        Ok(Err(e)) => Response::err(400, e),
+        // … a dead coordinator is ours.
         Err(e) => Response::err(500, e.to_string()),
     }
 }
@@ -657,6 +683,34 @@ mod tests {
         // cancel on an unknown job is 404
         let r = post(&h, "/v1/jobs/999/cancel", "");
         assert_eq!(r.status, 404);
+        h.shutdown();
+    }
+
+    #[test]
+    fn scale_route_joins_and_leaves() {
+        let h = test_handle();
+        let join_body = r#"{"op":"join","gpu":"A100-80G","count":2,"link":"nvlink"}"#;
+        let r = post(&h, "/v1/cluster/scale", join_body);
+        assert_eq!(r.status, 200, "{}", r.body);
+        let resp = ScaleResponseV1::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert_eq!(resp.op, "join");
+        assert_eq!(resp.total_gpus, 13);
+        assert!(resp.preempted.is_empty());
+        // Retire the node we just joined.
+        let r = post(&h, "/v1/cluster/scale", &format!(r#"{{"op":"leave","node":{}}}"#, resp.node));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let resp = ScaleResponseV1::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert_eq!(resp.total_gpus, 11);
+        // Domain errors are 400s.
+        let bad_gpu = r#"{"op":"join","gpu":"H999","count":1}"#;
+        assert_eq!(post(&h, "/v1/cluster/scale", bad_gpu).status, 400);
+        assert_eq!(post(&h, "/v1/cluster/scale", r#"{"op":"leave","node":99}"#).status, 400);
+        assert_eq!(post(&h, "/v1/cluster/scale", r#"{"op":"warp"}"#).status, 400);
+        // Wrong method gets a 405 with Allow; the route has no legacy alias.
+        let r = get(&h, "/v1/cluster/scale");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("POST"));
+        assert_eq!(post(&h, "/cluster/scale", r#"{"op":"leave","node":0}"#).status, 404);
         h.shutdown();
     }
 

@@ -2,26 +2,26 @@
 //! platform simulator used in §V (see DESIGN.md §6 for the substitution
 //! argument).
 //!
-//! Event semantics:
-//! * `Arrival(job)` — job enters the pending queue;
-//! * `Finish(job)` — job completes, resources released;
-//! * `Oom(job)` — a memory-oblivious placement crashed; resources released,
-//!   job requeued with `attempts + 1` (the baselines' trial-and-error);
+//! Since the engine refactor this module is a **thin wrapper**: it feeds
+//! trace arrivals (and optional elasticity events) into a
+//! [`crate::engine::clock::VirtualClock`] and drains the event heap through
+//! the shared [`SchedulingEngine`] — the same code the live serverless
+//! coordinator runs on a wall clock. Event semantics (`Arrival` / `Finish` /
+//! `Oom`-requeue / `RoundTick` / `NodeJoin` / `NodeLeave`), overhead
+//! charging, and rejection logic all live in [`crate::engine`].
 //!
-//! After each event the active [`Scheduler`] plans over the pending queue.
 //! Scheduling *overhead* is modelled by charging `work_units ×
 //! sched_work_unit_s` of delay before placed jobs start — so an expensive
 //! scheduler (Sia) directly inflates queue times, exactly the effect the
-//! paper measures. The simulator itself also measures the wall-clock the
-//! scheduler burns, which feeds Fig 5a.
+//! paper measures. The wall-clock the scheduler burns is also measured and
+//! feeds Fig 5a.
 
-use crate::cluster::{ClusterState, Orchestrator};
 use crate::config::ClusterSpec;
-use crate::job::{JobId, JobOutcome, JobSpec};
+use crate::engine::clock::{Clock, VirtualClock};
+use crate::engine::{ClusterEvent, EngineConfig, SchedulingEngine};
+use crate::job::{JobOutcome, JobSpec};
 use crate::metrics::RunReport;
-use crate::perfmodel::PerfModel;
-use crate::sched::{PendingJob, Scheduler};
-use std::collections::{BinaryHeap, HashMap};
+use crate::sched::Scheduler;
 
 /// Simulator tuning knobs.
 #[derive(Debug, Clone)]
@@ -49,355 +49,99 @@ impl Default for SimConfig {
     }
 }
 
-#[derive(Debug, Clone)]
-enum EventKind {
-    Arrival(JobSpec),
-    Finish(JobId),
-    Oom(JobId),
-    /// Round boundary for interval schedulers (Sia-style).
-    RoundTick,
-}
-
-struct Event {
-    time: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // min-heap: earlier time first, then lower seq.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap()
-            .then(other.seq.cmp(&self.seq))
+impl SimConfig {
+    fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            oom_detect_s: self.oom_detect_s,
+            sched_work_unit_s: self.sched_work_unit_s,
+            max_attempts: self.max_attempts,
+        }
     }
 }
 
-#[allow(dead_code)] // start_time/samples_per_sec kept for debugging dumps
-struct RunningJob {
-    spec: JobSpec,
-    start_time: f64,
-    first_start: f64,
-    samples_per_sec: f64,
-    gpus: u32,
-    attempts: u32,
-}
-
-/// GPU-time utilization integrator.
-struct UtilIntegrator {
-    last_t: f64,
-    busy_gpu_seconds: f64,
-    total_gpus: f64,
-}
-
-impl UtilIntegrator {
-    fn advance(&mut self, now: f64, busy: u32) {
-        let dt = (now - self.last_t).max(0.0);
-        self.busy_gpu_seconds += dt * busy as f64;
-        self.last_t = now;
-    }
-
-    fn value(&self, end: f64, start: f64) -> f64 {
-        let span = (end - start).max(1e-9);
-        (self.busy_gpu_seconds / (span * self.total_gpus)).clamp(0.0, 1.0)
-    }
-}
-
-/// The simulator. Owns the orchestrator and drives a [`Scheduler`].
+/// The simulator: a trace feeder over the shared [`SchedulingEngine`].
 pub struct Simulator<'a> {
     spec: ClusterSpec,
-    orch: Orchestrator,
-    sched: &'a mut dyn Scheduler,
-    pm: PerfModel,
+    engine: SchedulingEngine<'a>,
+    clock: VirtualClock,
     cfg: SimConfig,
-    events: BinaryHeap<Event>,
-    seq: u64,
-    pending: Vec<PendingJob>,
-    running: HashMap<JobId, RunningJob>,
-    outcomes: Vec<JobOutcome>,
-    rejected: usize,
-    clock: f64,
-    work_units: u64,
-    sched_wall_s: f64,
-    util: UtilIntegrator,
-    /// Per-job first submission times (for JCT across OOM retries).
-    submit_times: HashMap<JobId, f64>,
-    first_starts: HashMap<JobId, f64>,
-    attempt_counts: HashMap<JobId, u32>,
-    /// Interval schedulers: time of the last executed round and whether a
-    /// RoundTick is already queued.
-    last_round: f64,
-    tick_queued: bool,
 }
 
 impl<'a> Simulator<'a> {
     pub fn new(spec: &ClusterSpec, sched: &'a mut dyn Scheduler, cfg: SimConfig) -> Self {
-        let total_gpus = spec.total_gpus() as f64;
-        Self {
-            spec: spec.clone(),
-            orch: Orchestrator::new(spec),
-            sched,
-            pm: PerfModel::new(spec.inter_node_gbps),
-            cfg,
-            events: BinaryHeap::new(),
-            seq: 0,
-            pending: Vec::new(),
-            running: HashMap::new(),
-            outcomes: Vec::new(),
-            rejected: 0,
-            clock: 0.0,
-            work_units: 0,
-            sched_wall_s: 0.0,
-            util: UtilIntegrator { last_t: 0.0, busy_gpu_seconds: 0.0, total_gpus },
-            submit_times: HashMap::new(),
-            first_starts: HashMap::new(),
-            attempt_counts: HashMap::new(),
-            last_round: f64::NEG_INFINITY,
-            tick_queued: false,
-        }
-    }
-
-    fn push_event(&mut self, time: f64, kind: EventKind) {
-        self.seq += 1;
-        self.events.push(Event { time, seq: self.seq, kind });
+        let engine = SchedulingEngine::new(spec, sched, cfg.engine_config());
+        Self { spec: spec.clone(), engine, clock: VirtualClock::new(), cfg }
     }
 
     /// Load a trace (jobs with submit times).
     pub fn submit_all(&mut self, jobs: &[JobSpec]) {
         for j in jobs {
-            self.push_event(j.submit_time, EventKind::Arrival(j.clone()));
+            self.clock.schedule(j.submit_time, ClusterEvent::Arrival(j.clone()));
         }
     }
 
-    fn busy_gpus(&self) -> u32 {
-        self.orch.state().total_gpus() - self.orch.state().idle_gpus()
-    }
-
-    /// Run one scheduling round over the pending queue, then reject
-    /// structurally unplaceable jobs. Interval schedulers (Sia-style) only
-    /// run at round boundaries; between them a RoundTick is queued.
-    fn schedule_round(&mut self) {
-        if let Some(interval) = self.sched.round_interval_s() {
-            if self.pending.is_empty() {
-                return;
-            }
-            let due = self.last_round + interval;
-            if self.clock < due {
-                if !self.tick_queued {
-                    self.push_event(due, EventKind::RoundTick);
-                    self.tick_queued = true;
-                }
-                return;
-            }
-            self.last_round = self.clock;
-        }
-        self.schedule_round_inner();
-        self.reject_unplaceable();
-    }
-
-    /// The placement pass.
-    fn schedule_round_inner(&mut self) {
-        if self.pending.is_empty() {
-            return;
-        }
-        let snapshot = self.orch.snapshot();
-        let t0 = std::time::Instant::now();
-        let round = self.sched.schedule(&self.pending, &snapshot, self.clock);
-        self.sched_wall_s += t0.elapsed().as_secs_f64();
-        self.work_units += round.work_units;
-        let overhead = round.work_units as f64 * self.cfg.sched_work_unit_s;
-        let start_time = self.clock + overhead;
-
-        for d in round.decisions {
-            // Remove from pending.
-            let Some(pos) = self.pending.iter().position(|p| p.spec.id == d.job) else {
-                continue; // scheduler returned a stale decision — ignore
-            };
-            let pj = self.pending.remove(pos);
-            if self.orch.allocate(d.alloc.clone()).is_err() {
-                // Scheduler overdrew (bug or stale snapshot): requeue.
-                self.pending.push(pj);
-                continue;
-            }
-            self.util.advance(self.clock, self.busy_gpus().saturating_sub(d.alloc.total_gpus()));
-            let attempts = pj.attempts + 1;
-            self.attempt_counts.insert(d.job, attempts);
-            self.first_starts.entry(d.job).or_insert(start_time);
-            if d.will_oom {
-                self.running.insert(
-                    d.job,
-                    RunningJob {
-                        spec: pj.spec.clone(),
-                        start_time,
-                        first_start: self.first_starts[&d.job],
-                        samples_per_sec: 0.0,
-                        gpus: d.alloc.total_gpus(),
-                        attempts,
-                    },
-                );
-                self.push_event(start_time + self.cfg.oom_detect_s, EventKind::Oom(d.job));
-            } else {
-                let thr = self.pm.samples_per_sec(
-                    &pj.spec.model,
-                    &pj.spec.train,
-                    d.par,
-                    &d.gpu,
-                    d.placement,
-                );
-                let runtime = pj.spec.total_samples as f64 / thr.max(1e-9);
-                self.running.insert(
-                    d.job,
-                    RunningJob {
-                        spec: pj.spec.clone(),
-                        start_time,
-                        first_start: self.first_starts[&d.job],
-                        samples_per_sec: thr,
-                        gpus: d.alloc.total_gpus(),
-                        attempts,
-                    },
-                );
-                self.push_event(start_time + runtime, EventKind::Finish(d.job));
-            }
-        }
-
-    }
-
-    /// If the cluster is completely idle and the scheduler still can't place
-    /// a job, it never will — reject it instead of busy-looping. (A job that
-    /// exceeded its OOM-retry budget is also dropped here.)
-    fn reject_unplaceable(&mut self) {
-        if !(self.running.is_empty()
-            && self.orch.state().idle_gpus() == self.orch.state().total_gpus()
-            && !self.pending.is_empty())
-        {
-            return;
-        }
-        let mut keep = Vec::new();
-        let drained: Vec<PendingJob> = self.pending.drain(..).collect();
-        for p in drained {
-            if p.attempts >= self.cfg.max_attempts {
-                self.rejected += 1;
-                continue;
-            }
-            let snapshot = self.orch.snapshot();
-            let round = self.sched.schedule(std::slice::from_ref(&p), &snapshot, self.clock);
-            if round.decisions.is_empty() {
-                self.rejected += 1;
-            } else {
-                keep.push(p);
-            }
-        }
-        self.pending = keep;
-        if !self.pending.is_empty() {
-            // They are placeable on an empty cluster; place them now.
-            self.schedule_round_inner();
-        }
-    }
-
-    fn handle(&mut self, kind: EventKind) {
-        match kind {
-            EventKind::Arrival(spec) => {
-                self.submit_times.insert(spec.id, spec.submit_time);
-                self.pending.push(PendingJob { spec, attempts: 0 });
-            }
-            EventKind::Finish(id) => {
-                let Some(run) = self.running.remove(&id) else { return };
-                self.util.advance(self.clock, self.busy_gpus());
-                let _ = self.orch.release(id);
-                let submit = *self.submit_times.get(&id).unwrap_or(&0.0);
-                self.outcomes.push(JobOutcome {
-                    id,
-                    name: run.spec.name.clone(),
-                    submit_time: submit,
-                    start_time: run.first_start,
-                    finish_time: self.clock,
-                    gpus_used: run.gpus,
-                    samples_per_sec: run.spec.total_samples as f64
-                        / (self.clock - run.first_start).max(1e-9),
-                    attempts: run.attempts,
-                });
-            }
-            EventKind::RoundTick => {
-                self.tick_queued = false;
-            }
-            EventKind::Oom(id) => {
-                let Some(run) = self.running.remove(&id) else { return };
-                self.util.advance(self.clock, self.busy_gpus());
-                let _ = self.orch.release(id);
-                if run.attempts >= self.cfg.max_attempts {
-                    self.rejected += 1;
-                } else {
-                    self.pending.push(PendingJob { spec: run.spec, attempts: run.attempts });
-                }
-            }
-        }
+    /// Inject an arbitrary event at `time` — e.g. elasticity
+    /// (`ClusterEvent::NodeJoin` / `NodeLeave`) mid-trace.
+    pub fn schedule_event(&mut self, time: f64, ev: ClusterEvent) {
+        self.clock.schedule(time, ev);
     }
 
     /// Run to completion; returns the report.
     pub fn run(&mut self, workload_name: &str) -> RunReport {
-        while let Some(ev) = self.events.pop() {
-            if ev.time > self.cfg.max_sim_time_s {
-                break;
-            }
-            self.util.advance(ev.time, self.busy_gpus());
-            self.clock = ev.time;
-            let mut batch = vec![ev.kind];
-            // Drain events at (approximately) the same timestamp.
-            while let Some(next) = self.events.peek() {
-                if (next.time - self.clock).abs() < 1e-9 {
-                    batch.push(self.events.pop().unwrap().kind);
+        // Check the cap on the *peeked* timestamp: popping would advance the
+        // clock to the discarded event's time and inflate the report's end
+        // time / utilization span with a phantom tail.
+        while self.clock.peek_time().is_some_and(|t| t <= self.cfg.max_sim_time_s) {
+            let (t, ev) = self.clock.pop().expect("peeked");
+            let mut batch = vec![ev];
+            // Drain events at (approximately) the same timestamp so one
+            // scheduling round covers them all.
+            while let Some(next_t) = self.clock.peek_time() {
+                if (next_t - t).abs() < 1e-9 {
+                    batch.push(self.clock.pop().expect("peeked").1);
                 } else {
                     break;
                 }
             }
-            for kind in batch {
-                self.handle(kind);
+            for ev in batch {
+                let _ = self.engine.handle(ev, &mut self.clock);
             }
-            self.schedule_round();
+            let _ = self.engine.run_round(&mut self.clock);
         }
         // Whatever is still pending never got resources.
-        self.rejected += self.pending.len();
-        self.pending.clear();
-        let end = self.clock.max(1e-9);
-        let report = RunReport::from_outcomes(
-            self.sched.name(),
+        let _ = self.engine.reject_remaining();
+        let end = self.clock.now().max(1e-9);
+        let util = self.engine.utilization_to(end);
+        RunReport::from_outcomes(
+            self.engine.scheduler_name(),
             workload_name,
-            &self.outcomes,
-            self.rejected,
-            self.work_units,
-            self.sched_wall_s,
-            self.util.value(end, 0.0),
-        );
-        report
+            self.engine.outcomes(),
+            self.engine.rejected_count(),
+            self.engine.work_units(),
+            self.engine.sched_wall_s(),
+            util,
+        )
     }
 
     pub fn outcomes(&self) -> &[JobOutcome] {
-        &self.outcomes
+        self.engine.outcomes()
     }
 
-    pub fn cluster_state(&self) -> &ClusterState {
-        self.orch.state()
+    pub fn cluster_state(&self) -> &crate::cluster::ClusterState {
+        self.engine.cluster_state()
     }
 
     pub fn conservation_ok(&self) -> bool {
-        self.orch.check_conservation()
+        self.engine.conservation_ok()
     }
 
     pub fn spec(&self) -> &ClusterSpec {
         &self.spec
+    }
+
+    /// The underlying engine (placement decision log, attempt counters…).
+    pub fn engine(&self) -> &SchedulingEngine<'a> {
+        &self.engine
     }
 }
 
@@ -515,5 +259,23 @@ mod tests {
         let report = simulate(&spec, &mut has, &trace, SimConfig::default(), "t");
         assert!((0.0..=1.0).contains(&report.avg_utilization));
         assert!(report.avg_utilization > 0.0);
+    }
+
+    #[test]
+    fn elastic_node_leave_mid_trace_still_terminates_all_jobs() {
+        // The new scenario axis the engine refactor opens up: the same
+        // trace, but a node dies mid-run. Every job must still reach a
+        // terminal state and conservation must hold at the end.
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let trace = jobs(10, "gpt2-350m", 8, 80_000, 25.0);
+        let mut sim = Simulator::new(&spec, &mut has, SimConfig::default());
+        sim.submit_all(&trace);
+        sim.schedule_event(60.0, ClusterEvent::NodeLeave(0));
+        let report = sim.run("elastic");
+        assert_eq!(report.n_completed + report.n_rejected, 10);
+        assert!(sim.conservation_ok());
+        assert_eq!(sim.cluster_state().idle_gpus(), sim.cluster_state().total_gpus());
+        assert_eq!(sim.cluster_state().total_gpus(), 9, "2 GPUs left with node 0");
     }
 }

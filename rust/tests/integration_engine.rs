@@ -1,0 +1,212 @@
+//! Integration: the unified scheduling engine drives BOTH the discrete
+//! event simulator (VirtualClock) and the live serverless coordinator
+//! (WallClock). The differential test here is the refactor's acceptance
+//! proof: the same trace, driven through both clocks, must yield identical
+//! placement decisions and terminal job states.
+
+use frenzy::config::{gpu_by_name, real_testbed, sia_sim, ClusterSpec, LinkKind, NodeSpec};
+use frenzy::engine::ClusterEvent;
+use frenzy::job::{JobSpec, JobState};
+use frenzy::marp::Marp;
+use frenzy::sched::has::Has;
+use frenzy::serverless::{spawn, CoordinatorConfig, ScaleOp, SubmitRequest};
+use frenzy::sim::{SimConfig, Simulator};
+use frenzy::workload::{helios, philly};
+
+/// Re-time a generated trace so each job runs on an otherwise-empty
+/// cluster: arrivals far enough apart that every job finishes (in sim
+/// time) before the next arrives. This serialization is the regime where a
+/// virtual clock and a wall clock are *guaranteed* to present identical
+/// snapshots to the scheduler — so every placement must match exactly.
+fn serialized_prefix(jobs: &[JobSpec], n: usize) -> Vec<JobSpec> {
+    jobs.iter()
+        .take(n)
+        .enumerate()
+        .map(|(i, j)| {
+            JobSpec::new(
+                i as u64,
+                j.model.clone(),
+                j.train.global_batch,
+                j.total_samples.min(20_000),
+                i as f64 * 1e9,
+            )
+        })
+        .collect()
+}
+
+fn differential(trace_name: &str, trace: Vec<JobSpec>) {
+    let spec = sia_sim();
+
+    // --- virtual-clock path: the simulator ---------------------------
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let cfg = SimConfig { max_sim_time_s: 1e18, ..SimConfig::default() };
+    let mut sim = Simulator::new(&spec, &mut has, cfg);
+    sim.submit_all(&trace);
+    let sim_report = sim.run(trace_name);
+    let sim_decisions: Vec<(u64, Vec<(usize, u32)>)> = sim.engine().decision_log().to_vec();
+    let sim_completed: Vec<u64> = {
+        let mut ids: Vec<u64> = sim.outcomes().iter().map(|o| o.id).collect();
+        ids.sort_unstable();
+        ids
+    };
+
+    // --- wall-clock path: the live coordinator -----------------------
+    // stub_delay_ms = 0 completes each job before the next sequential
+    // submit is processed — the live counterpart of the serialized trace.
+    let (h, _j) = spawn(
+        spec.clone(),
+        CoordinatorConfig { execute_training: false, ..CoordinatorConfig::default() },
+    );
+    let mut live_ids = Vec::new();
+    for j in &trace {
+        live_ids.push(
+            h.submit(SubmitRequest {
+                model: j.model.name.to_string(),
+                global_batch: j.train.global_batch,
+                total_samples: j.total_samples,
+            })
+            .unwrap(),
+        );
+    }
+    h.drain().unwrap();
+    let live_decisions = h.decisions().unwrap();
+
+    // Identical placement decisions: same number, same order, same
+    // (node, gpu-count) parts. Live job ids are 1-based where the sim
+    // trace is 0-based; the order is the arrival order in both.
+    assert_eq!(
+        sim_decisions.len(),
+        live_decisions.len(),
+        "{trace_name}: sim and live must place the same jobs"
+    );
+    for (k, (s, l)) in sim_decisions.iter().zip(live_decisions.iter()).enumerate() {
+        assert_eq!(
+            s.0 + 1,
+            l.0,
+            "{trace_name}: placement #{k} is for a different job (sim {}, live {})",
+            s.0,
+            l.0
+        );
+        assert_eq!(
+            s.1, l.1,
+            "{trace_name}: placement #{k} (job {}) differs: sim {:?} vs live {:?}",
+            s.0, s.1, l.1
+        );
+    }
+
+    // Identical terminal states, job by job.
+    for (i, j) in trace.iter().enumerate() {
+        let live_state = h.status(live_ids[i]).unwrap().unwrap().state;
+        let sim_done = sim_completed.binary_search(&(i as u64)).is_ok();
+        match live_state {
+            JobState::Completed => {
+                assert!(sim_done, "{trace_name}: job {i} ({}) live-only completion", j.name)
+            }
+            JobState::Rejected => {
+                assert!(!sim_done, "{trace_name}: job {i} ({}) live-only rejection", j.name)
+            }
+            other => panic!("{trace_name}: job {i} not terminal after drain: {other:?}"),
+        }
+    }
+    let live_report = h.report().unwrap();
+    assert_eq!(sim_report.n_completed, live_report.n_completed, "{trace_name}");
+    assert_eq!(sim_report.n_rejected, live_report.n_rejected, "{trace_name}");
+
+    let (total, idle, _) = h.cluster_info().unwrap();
+    assert_eq!(total, idle, "{trace_name}: live resources all released");
+    assert!(sim.conservation_ok(), "{trace_name}: sim conservation");
+    h.shutdown();
+}
+
+#[test]
+fn differential_philly_prefix_sim_vs_live() {
+    let trace = serialized_prefix(&philly::generate(40, 7), 12);
+    differential("philly", trace);
+}
+
+#[test]
+fn differential_helios_prefix_sim_vs_live() {
+    let trace = serialized_prefix(&helios::generate(40, 13), 12);
+    differential("helios", trace);
+}
+
+#[test]
+fn node_leave_mid_sim_preempts_and_recovers() {
+    // Elasticity through the *simulator* wrapper: jobs running when node 2
+    // (the 4×A800) dies are preempted, requeued with attempts + 1, and the
+    // run still terminates with conservation intact.
+    let spec = real_testbed();
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let mut sim = Simulator::new(&spec, &mut has, SimConfig::default());
+    // A 7b job parks on the 80G cards for a long time (but small enough to
+    // finish within the sim-time cap even on a slow cross-node re-placement).
+    let model = |name: &str| frenzy::config::models::model_by_name(name).unwrap();
+    let jobs = vec![
+        JobSpec::new(0, model("gpt2-7b"), 2, 20_000, 0.0),
+        JobSpec::new(1, model("gpt2-125m"), 4, 200_000, 0.0),
+    ];
+    sim.submit_all(&jobs);
+    sim.schedule_event(50.0, ClusterEvent::NodeLeave(2));
+    let report = sim.run("elastic");
+    assert_eq!(report.n_completed + report.n_rejected, 2);
+    assert!(sim.conservation_ok());
+    assert_eq!(sim.cluster_state().idle_gpus(), sim.cluster_state().total_gpus());
+    assert_eq!(sim.cluster_state().total_gpus(), 7, "the A800 node is gone");
+    // If the 7b job completed, it must record the preemption as a retry.
+    if let Some(o) = sim.outcomes().iter().find(|o| o.id == 0) {
+        assert!(o.attempts >= 2, "preempted job re-placed with attempts+1, got {}", o.attempts);
+    }
+}
+
+#[test]
+fn node_join_in_live_coordinator_unblocks_queued_job() {
+    // Live counterpart of the engine-level NodeJoin test: a cluster of
+    // 2×40G cannot host gpt2-7b; while a small job keeps the cluster busy,
+    // the 7b waits in the queue. Joining an 80G node must get it running.
+    let a100_40 = gpu_by_name("A100-40G").unwrap();
+    let tiny = ClusterSpec {
+        name: "tiny".into(),
+        nodes: vec![NodeSpec { gpu: a100_40, count: 2, link: LinkKind::Pcie }],
+        inter_node_gbps: 12.5,
+    };
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        stub_delay_ms: 400,
+        ..CoordinatorConfig::default()
+    };
+    let (h, _j) = spawn(tiny, cfg);
+    let blocker = h
+        .submit(SubmitRequest {
+            model: "gpt2-125m".into(),
+            global_batch: 4,
+            total_samples: 400,
+        })
+        .unwrap();
+    assert_eq!(h.status(blocker).unwrap().unwrap().state, JobState::Running);
+    // 7b is admitted only once the cluster can host it: before the join,
+    // admission-time MARP finds no plan and marks it rejected.
+    let doomed = h
+        .submit(SubmitRequest { model: "gpt2-7b".into(), global_batch: 2, total_samples: 100 })
+        .unwrap();
+    assert_eq!(h.status(doomed).unwrap().unwrap().state, JobState::Rejected);
+    // Join 4×80G; admission MARP is rebuilt, so the same submit now queues
+    // (or runs) instead of being rejected.
+    let rep = h
+        .scale(ScaleOp::Join { gpu: "A800-80G".into(), count: 4, link: LinkKind::NvLink })
+        .unwrap();
+    assert_eq!(rep.total_gpus, 6);
+    let big = h
+        .submit(SubmitRequest { model: "gpt2-7b".into(), global_batch: 2, total_samples: 100 })
+        .unwrap();
+    let st = h.status(big).unwrap().unwrap().state;
+    assert!(
+        st == JobState::Running || st == JobState::Completed,
+        "7b must be schedulable after the join, got {st:?}"
+    );
+    h.drain().unwrap();
+    assert_eq!(h.status(big).unwrap().unwrap().state, JobState::Completed);
+    assert_eq!(h.status(blocker).unwrap().unwrap().state, JobState::Completed);
+    let (total, idle, _) = h.cluster_info().unwrap();
+    assert_eq!(total, idle);
+    h.shutdown();
+}

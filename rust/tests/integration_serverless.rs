@@ -139,6 +139,44 @@ fn concurrent_submitters() {
 }
 
 #[test]
+fn legacy_unversioned_routes_still_alias_v1_after_engine_refactor() {
+    // The coordinator was rebuilt on the shared scheduling engine; the
+    // pre-v1 compat shim must be unaffected: every unversioned path still
+    // aliases its /v1 twin, and the *new* v1-only surface gained no alias.
+    let (h, _j) = spawn(real_testbed(), cfg_stub());
+    let req = |method: &str, path: &str, body: &str| {
+        route(&h, &Request { method: method.into(), path: path.into(), body: body.into() })
+    };
+    for (legacy, versioned) in [("/healthz", "/v1/healthz"), ("/cluster", "/v1/cluster")] {
+        let (ls, lb) = req("GET", legacy, "");
+        let (vs, vb) = req("GET", versioned, "");
+        assert_eq!(ls, 200, "{legacy}");
+        assert_eq!((ls, &lb), (vs, &vb), "{legacy} must answer exactly like {versioned}");
+    }
+    let body = r#"{"model":"gpt2-350m","batch":8,"samples":60}"#;
+    let (s, b) = req("POST", "/jobs", body);
+    assert_eq!(s, 200, "{b}");
+    let id = frenzy::util::json::parse(&b).unwrap().get("job_id").unwrap().as_u64().unwrap();
+    h.drain().unwrap();
+    let (s, b) = req("GET", &format!("/jobs/{id}"), "");
+    assert_eq!(s, 200);
+    assert!(b.contains("completed"), "{b}");
+    let (s, legacy_list) = req("GET", "/jobs", "");
+    assert_eq!(s, 200);
+    let (_, v1_list) = req("GET", "/v1/jobs", "");
+    assert_eq!(legacy_list, v1_list, "listing identical through the alias");
+    // Cancel alias still answers (409: the job already completed).
+    let (s, _) = req("POST", &format!("/jobs/{id}/cancel"), "");
+    assert_eq!(s, 409);
+    // The elastic scale route is v1-only — no legacy alias was grown.
+    let (s, _) = req("POST", "/cluster/scale", r#"{"op":"leave","node":0}"#);
+    assert_eq!(s, 404);
+    let (s, _) = req("POST", "/v1/cluster/scale", r#"{"op":"join","gpu":"A100-40G","count":1}"#);
+    assert_eq!(s, 200);
+    h.shutdown();
+}
+
+#[test]
 fn route_rejects_garbage_without_crashing_coordinator() {
     let (h, _j) = spawn(real_testbed(), cfg_stub());
     for body in ["", "{}", "[1,2]", r#"{"model":123}"#, r#"{"model":"gpt2-350m","batch":0,"samples":0}"#]
