@@ -2,27 +2,28 @@
 //! depth. The paper's "scheduling overhead reduced 10 times" claim.
 
 use frenzy::bench_harness::Bench;
-use frenzy::cluster::ClusterState;
+use frenzy::cluster::{ClusterState, ClusterView};
 use frenzy::config::sia_sim;
 use frenzy::marp::Marp;
-use frenzy::sched::{has::Has, sia::Sia, PendingJob, Scheduler};
+use frenzy::sched::{has::Has, sia::Sia, PendingJob, PendingQueue, Scheduler};
 use frenzy::workload::newworkload;
 
-fn pending(n: usize) -> Vec<PendingJob> {
+fn pending(n: usize) -> PendingQueue {
     newworkload::generate(n, 11).into_iter().map(|spec| PendingJob { spec, attempts: 0 }).collect()
 }
 
 fn main() {
     let spec = sia_sim();
     let snap = ClusterState::from_spec(&spec);
+    let view = ClusterView::build(&snap);
     let mut b = Bench::new("fig5a_overhead");
     for &n in &[10usize, 40, 160] {
         let queue = pending(n);
         let mut has = Has::new(Marp::with_defaults(spec.clone()));
-        b.bench(&format!("has_{n}tasks"), || has.schedule(&queue, &snap, 0.0).work_units);
+        b.bench(&format!("has_{n}tasks"), || has.schedule(&queue, &view, 0.0).work_units);
         let mut sia = Sia::new(&spec);
         sia.node_limit = 2_000_000;
-        b.bench(&format!("sia_{n}tasks"), || sia.schedule(&queue, &snap, 0.0).work_units);
+        b.bench(&format!("sia_{n}tasks"), || sia.schedule(&queue, &view, 0.0).work_units);
     }
     b.report();
     // Print the paper-facing ratio.

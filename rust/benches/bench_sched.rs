@@ -1,0 +1,126 @@
+//! Bench: scheduling-round latency vs. cluster size, indexed vs. naive.
+//!
+//! Sweeps synthetic heterogeneous clusters (3 GPU size classes) from 100 to
+//! 10,000 nodes with a Philly-trace-derived pending queue, and compares the
+//! capacity-index hot path (`Has { indexed: true }`) against the reference
+//! full-scan implementation. Before timing, it asserts the two paths
+//! produce **identical decisions and work units** — a divergence panics,
+//! which is the CI gate. Results are written to `BENCH_sched.json` at the
+//! repository root so the perf trajectory is tracked PR over PR.
+//!
+//! Smoke mode (`FRENZY_BENCH_FAST=1`, used by CI on every push) shrinks
+//! the sweep and measurement budget; the ≥10× speedup assertion at 5,000
+//! nodes only runs in full mode, where timings are stable.
+
+use frenzy::bench_harness::Bench;
+use frenzy::cluster::{ClusterState, ClusterView};
+use frenzy::config::synthetic_cluster;
+use frenzy::marp::Marp;
+use frenzy::sched::{has::Has, PendingJob, PendingQueue, Scheduler};
+use frenzy::util::json::Json;
+use frenzy::workload::philly;
+
+fn queue(n: usize) -> PendingQueue {
+    philly::generate(n, 11)
+        .into_iter()
+        .map(|spec| PendingJob { spec, attempts: 0 })
+        .collect()
+}
+
+/// `(job, parts, d, t)` per decision — the differential gate's identity.
+type Fingerprint = Vec<(u64, Vec<(usize, u32)>, u32, u32)>;
+
+fn fingerprint(round: &frenzy::sched::SchedRound) -> Fingerprint {
+    round
+        .decisions
+        .iter()
+        .map(|d| (d.job, d.alloc.parts.clone(), d.par.d, d.par.t))
+        .collect()
+}
+
+fn main() {
+    let fast = std::env::var("FRENZY_BENCH_FAST").ok().is_some_and(|v| v == "1");
+    let node_counts: &[usize] = if fast { &[100, 1000] } else { &[100, 1000, 5000, 10_000] };
+    let queue_len = if fast { 32 } else { 64 };
+
+    let mut b = Bench::new("sched_round");
+    let mut entries: Vec<Json> = Vec::new();
+    let mut speedup_at_5k: Option<f64> = None;
+
+    for &n in node_counts {
+        let spec = synthetic_cluster(n);
+        let state = ClusterState::from_spec(&spec);
+        let view = ClusterView::build(&state);
+        let pending = queue(queue_len);
+
+        let mut indexed = Has::new(Marp::with_defaults(spec.clone()));
+        let mut naive = Has::new(Marp::with_defaults(spec.clone()));
+        naive.indexed = false;
+
+        // Differential gate: identical decisions AND identical work units,
+        // every sweep point, before any timing.
+        let ri = indexed.schedule(&pending, &view, 0.0);
+        let rn = naive.schedule(&pending, &view, 0.0);
+        assert_eq!(
+            fingerprint(&ri),
+            fingerprint(&rn),
+            "indexed and naive HAS decisions diverged at {n} nodes"
+        );
+        assert_eq!(
+            ri.work_units, rn.work_units,
+            "work-unit accounting diverged at {n} nodes"
+        );
+
+        let r_idx = b
+            .bench(&format!("indexed_{n}nodes"), || {
+                indexed.schedule(&pending, &view, 0.0).decisions.len()
+            })
+            .clone();
+        let r_nv = b
+            .bench(&format!("naive_{n}nodes"), || {
+                naive.schedule(&pending, &view, 0.0).decisions.len()
+            })
+            .clone();
+        let speedup = r_nv.mean_s / r_idx.mean_s.max(1e-12);
+        if n == 5000 {
+            speedup_at_5k = Some(speedup);
+        }
+        let mut e = Json::obj();
+        e.set("nodes", n)
+            .set("queue_depth", queue_len)
+            .set("indexed_mean_s", r_idx.mean_s)
+            .set("naive_mean_s", r_nv.mean_s)
+            .set("speedup", speedup)
+            .set("decisions", ri.decisions.len())
+            .set("work_units", ri.work_units);
+        entries.push(e);
+        println!(
+            "{n:>6} nodes: naive {:.3e}s  indexed {:.3e}s  speedup {speedup:.1}x  \
+             ({} decisions, identical)",
+            r_nv.mean_s,
+            r_idx.mean_s,
+            ri.decisions.len()
+        );
+    }
+    b.report();
+
+    let mut payload = Json::obj();
+    payload
+        .set("bench", "sched_round")
+        .set("smoke", fast)
+        .set("workload", "philly(seed 11)")
+        .set("entries", Json::Arr(entries));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_sched.json");
+    frenzy::util::write_file(&path, &payload.to_string_pretty()).expect("write BENCH_sched.json");
+    println!("wrote {}", path.display());
+
+    if let Some(s) = speedup_at_5k {
+        assert!(
+            s >= 10.0,
+            "indexed path must be ≥10x the naive path at 5000 nodes, got {s:.1}x"
+        );
+        println!("acceptance: ≥10x at 5000 nodes — OK ({s:.1}x)");
+    }
+}

@@ -1,0 +1,587 @@
+//! Incremental capacity index: the scheduling hot path's answer store.
+//!
+//! The naive hot path answered every Stage-1 plan probe
+//! (`idle_gpus_with_mem`) with a full node scan and every Stage-2 best-fit
+//! step with a full scan *plus sort* — O(jobs × plans × nodes) per round,
+//! which collapses at production scale (thousands of nodes). The
+//! [`CapacityIndex`] is maintained incrementally by the
+//! [`super::Orchestrator`] on every allocate/release/grow/shrink so the same
+//! questions become logarithmic:
+//!
+//! * **Size classes**: the distinct GPU memory sizes present, ascending.
+//!   Per-class idle-GPU totals live in a Fenwick tree, so
+//!   `idle_with_mem(min_mem)` is a suffix sum in O(log S) where S is the
+//!   number of classes (single digits in practice).
+//! * **Idle buckets**: per class, a `BTreeMap<idle_count, BTreeSet<NodeId>>`
+//!   of nodes with idle GPUs. Best-fit ("tightest node that covers the
+//!   request") and greedy packing ("most-idle node") become O(log n) range
+//!   lookups instead of scan-and-sort.
+//!
+//! Schedulers never mutate the index. A round plans against a
+//! [`ClusterView`] (state + index) and layers *tentative* placements into a
+//! [`CapacityOverlay`] — a sparse delta structure holding only the nodes
+//! touched this round — so the round needs neither a cloned `ClusterState`
+//! nor a cloned index. Overlay queries combine the immutable base index
+//! with the deltas; cost is O(log n + touched) per query.
+//!
+//! Tie-breaking is bit-compatible with the reference implementation
+//! (`Has::allocate_one`): the naive path sorts candidate nodes by idle
+//! count with a stable sort over ascending node ids, so best-fit resolves
+//! ties toward the *smallest* node id and most-idle toward the *largest* —
+//! the overlay queries reproduce exactly that order, which is what lets the
+//! differential tests demand byte-identical decisions.
+
+use super::{ClusterState, Node, NodeId};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// Nodes holding idle GPUs, bucketed by idle count (0 is never stored).
+pub type IdleBuckets = BTreeMap<u32, BTreeSet<NodeId>>;
+
+/// Fenwick tree over size classes (indices are class numbers).
+#[derive(Debug, Clone, PartialEq)]
+struct Fenwick {
+    tree: Vec<i64>,
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Self {
+        Self { tree: vec![0; n + 1] }
+    }
+
+    fn add(&mut self, mut i: usize, delta: i64) {
+        i += 1;
+        while i < self.tree.len() {
+            self.tree[i] += delta;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum of classes `[0, i)`.
+    fn prefix(&self, mut i: usize) -> i64 {
+        let mut s = 0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    fn total(&self) -> i64 {
+        self.prefix(self.tree.len() - 1)
+    }
+
+    /// Sum of classes `[c0, S)`.
+    fn suffix(&self, c0: usize) -> i64 {
+        self.total() - self.prefix(c0.min(self.tree.len() - 1))
+    }
+
+    /// Value of a single class.
+    fn at(&self, c: usize) -> i64 {
+        self.prefix(c + 1) - self.prefix(c)
+    }
+}
+
+/// The incrementally maintained capacity index. See the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityIndex {
+    /// Distinct GPU memory sizes present (bytes), ascending — the classes.
+    sizes: Vec<u64>,
+    /// Size class of every node id (retired nodes keep their class; they
+    /// hold no idle GPUs, so they never surface in queries).
+    node_class: Vec<usize>,
+    /// Idle GPUs per class.
+    idle: Fenwick,
+    /// Count of nodes with idle > 0 per class.
+    nonzero: Fenwick,
+    /// Per class: idle count → nodes at that count.
+    buckets: Vec<IdleBuckets>,
+}
+
+impl CapacityIndex {
+    /// Build from scratch in O(n log n).
+    pub fn build(state: &ClusterState) -> Self {
+        let mut sizes: Vec<u64> = state.nodes.iter().map(|n| n.gpu.mem_bytes).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let mut idx = Self {
+            node_class: Vec::with_capacity(state.nodes.len()),
+            idle: Fenwick::new(sizes.len()),
+            nonzero: Fenwick::new(sizes.len()),
+            buckets: vec![IdleBuckets::new(); sizes.len()],
+            sizes,
+        };
+        for n in &state.nodes {
+            let c = idx.sizes.binary_search(&n.gpu.mem_bytes).expect("size class exists");
+            idx.node_class.push(c);
+            if n.idle > 0 {
+                idx.idle.add(c, n.idle as i64);
+                idx.nonzero.add(c, 1);
+                idx.buckets[c].entry(n.idle).or_default().insert(n.id);
+            }
+        }
+        idx
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// First class whose GPU size is ≥ `min_mem` (== `n_classes()` when no
+    /// class qualifies).
+    pub fn class_for(&self, min_mem: u64) -> usize {
+        self.sizes.partition_point(|&s| s < min_mem)
+    }
+
+    pub fn class_size(&self, c: usize) -> u64 {
+        self.sizes[c]
+    }
+
+    pub fn class_of_node(&self, node: NodeId) -> usize {
+        self.node_class[node]
+    }
+
+    /// Total idle GPUs on nodes whose memory is ≥ `min_mem` — the Stage-1
+    /// plan probe, in O(log S).
+    pub fn idle_with_mem(&self, min_mem: u64) -> u32 {
+        self.idle.suffix(self.class_for(min_mem)) as u32
+    }
+
+    /// Total idle GPUs over classes `[c0, S)`.
+    pub fn idle_suffix(&self, c0: usize) -> u32 {
+        self.idle.suffix(c0) as u32
+    }
+
+    /// Number of nodes with idle > 0 over classes `[c0, S)`.
+    pub fn nonzero_suffix(&self, c0: usize) -> u64 {
+        self.nonzero.suffix(c0) as u64
+    }
+
+    /// Number of nodes with idle > 0 in class `c`.
+    pub fn nonzero_in_class(&self, c: usize) -> u64 {
+        self.nonzero.at(c) as u64
+    }
+
+    /// Idle buckets of class `c` (read access for overlay queries).
+    pub fn bucket(&self, c: usize) -> &IdleBuckets {
+        &self.buckets[c]
+    }
+
+    /// Move `node` from idle count `old` to `new`, updating buckets and
+    /// per-class aggregates in O(log n).
+    pub(crate) fn set_idle(&mut self, node: NodeId, old: u32, new: u32) {
+        if old == new {
+            return;
+        }
+        let c = self.node_class[node];
+        self.idle.add(c, new as i64 - old as i64);
+        if old > 0 {
+            let bucket = self.buckets[c].get_mut(&old).expect("node indexed at old idle");
+            bucket.remove(&node);
+            if bucket.is_empty() {
+                self.buckets[c].remove(&old);
+            }
+        }
+        if new > 0 {
+            self.buckets[c].entry(new).or_default().insert(node);
+        }
+        match (old > 0, new > 0) {
+            (false, true) => self.nonzero.add(c, 1),
+            (true, false) => self.nonzero.add(c, -1),
+            _ => {}
+        }
+    }
+
+    /// Register a freshly appended node. Returns `false` when the node's
+    /// GPU size introduces a *new* size class — the caller must rebuild
+    /// (rare: only when an elastic join brings a never-seen GPU type).
+    pub(crate) fn on_grow(&mut self, node: &Node) -> bool {
+        let Ok(c) = self.sizes.binary_search(&node.gpu.mem_bytes) else {
+            return false;
+        };
+        debug_assert_eq!(node.id, self.node_class.len(), "grow appends node ids");
+        self.node_class.push(c);
+        if node.idle > 0 {
+            self.idle.add(c, node.idle as i64);
+            self.nonzero.add(c, 1);
+            self.buckets[c].entry(node.idle).or_default().insert(node.id);
+        }
+        true
+    }
+
+    /// Invariant check used by tests and debug assertions: the incremental
+    /// index must always agree with a fresh build from the state.
+    pub fn check_against(&self, state: &ClusterState) -> bool {
+        *self == Self::build(state)
+    }
+}
+
+/// A scheduler's read-only window for one round: the authoritative cluster
+/// state plus the capacity index. The engine hands out a borrowed view (no
+/// clones on the hot path); tests and benches build an owned index from any
+/// standalone `ClusterState` via [`ClusterView::build`].
+#[derive(Debug)]
+pub struct ClusterView<'a> {
+    state: &'a ClusterState,
+    index: std::borrow::Cow<'a, CapacityIndex>,
+}
+
+impl<'a> ClusterView<'a> {
+    /// Build an owned index for a standalone state (tests/benches).
+    pub fn build(state: &'a ClusterState) -> Self {
+        Self { state, index: std::borrow::Cow::Owned(CapacityIndex::build(state)) }
+    }
+
+    /// Borrow an index maintained elsewhere (the orchestrator's). The
+    /// index-matches-state invariant is asserted by `Orchestrator::
+    /// check_index` in tests and the churn property test — not here, which
+    /// sits on the per-round hot path even in debug builds.
+    pub fn with_index(state: &'a ClusterState, index: &'a CapacityIndex) -> Self {
+        Self { state, index: std::borrow::Cow::Borrowed(index) }
+    }
+
+    pub fn state(&self) -> &'a ClusterState {
+        self.state
+    }
+
+    pub fn index(&self) -> &CapacityIndex {
+        &self.index
+    }
+
+    /// Stage-1 plan probe against the committed state, O(log S).
+    pub fn idle_gpus_with_mem(&self, min_mem: u64) -> u32 {
+        self.index.idle_with_mem(min_mem)
+    }
+
+    /// Start a tentative-placement overlay for one scheduling round.
+    pub fn overlay(&self) -> CapacityOverlay<'_> {
+        CapacityOverlay::new(self.state, self.index())
+    }
+}
+
+/// Tentative per-round deltas over a [`CapacityIndex`]. Holds only the
+/// nodes touched this round; queries combine the base index with the
+/// deltas, so a round never clones cluster-sized structures.
+#[derive(Debug)]
+pub struct CapacityOverlay<'a> {
+    state: &'a ClusterState,
+    index: &'a CapacityIndex,
+    /// GPUs tentatively taken per node this round.
+    taken: HashMap<NodeId, u32>,
+    /// Touched nodes re-bucketed at their *overlay* idle count, per class.
+    touched: Vec<IdleBuckets>,
+    /// Idle GPUs taken per class.
+    idle_delta: Vec<u64>,
+    /// Touched nodes driven to overlay idle 0, per class (they still count
+    /// in the base `nonzero` aggregate and must be subtracted).
+    zeroed: Vec<u64>,
+}
+
+impl<'a> CapacityOverlay<'a> {
+    fn new(state: &'a ClusterState, index: &'a CapacityIndex) -> Self {
+        let s = index.n_classes();
+        Self {
+            state,
+            index,
+            taken: HashMap::new(),
+            touched: vec![IdleBuckets::new(); s],
+            idle_delta: vec![0; s],
+            zeroed: vec![0; s],
+        }
+    }
+
+    /// Effective idle GPUs of a node under the overlay.
+    pub fn idle_of(&self, node: NodeId) -> u32 {
+        self.state.nodes[node].idle - self.taken.get(&node).copied().unwrap_or(0)
+    }
+
+    /// Stage-1 probe: idle GPUs with memory ≥ `min_mem`, overlay-adjusted.
+    pub fn idle_with_mem(&self, min_mem: u64) -> u32 {
+        let c0 = self.index.class_for(min_mem);
+        let delta: u64 = self.idle_delta[c0..].iter().sum();
+        self.index.idle_suffix(c0) - delta as u32
+    }
+
+    /// Nodes with overlay idle > 0 over classes `[c0, S)` — the size the
+    /// naive path's candidate list (`NLst`) would have. Used for
+    /// work-unit parity with the reference implementation.
+    pub fn avail_nodes(&self, c0: usize) -> u64 {
+        let z: u64 = self.zeroed[c0..].iter().sum();
+        self.index.nonzero_suffix(c0) - z
+    }
+
+    /// Algorithm 1's fit size: the smallest class ≥ `req_sz` that still has
+    /// a node with idle GPUs.
+    pub fn fit_class(&self, req_sz: u64) -> Option<usize> {
+        let c0 = self.index.class_for(req_sz);
+        (c0..self.index.n_classes())
+            .find(|&c| self.index.nonzero_in_class(c) > self.zeroed[c])
+    }
+
+    /// Best-fit: among nodes of classes `[c0, S)` with overlay idle ≥ `req`,
+    /// the one with the fewest idle GPUs (ties → smallest node id).
+    /// Returns `(node, overlay idle)`.
+    pub fn best_fit(&self, c0: usize, req: u32) -> Option<(NodeId, u32)> {
+        let mut best: Option<(u32, NodeId)> = None;
+        for c in c0..self.index.n_classes() {
+            if let Some((&idle, set)) = self.touched[c].range(req..).next() {
+                let id = *set.iter().next().expect("non-empty overlay bucket");
+                if best.is_none_or(|b| (idle, id) < b) {
+                    best = Some((idle, id));
+                }
+            }
+            'base: for (&idle, set) in self.index.bucket(c).range(req..) {
+                if let Some(b) = best {
+                    if idle > b.0 {
+                        break 'base;
+                    }
+                }
+                for &id in set {
+                    if self.taken.contains_key(&id) {
+                        continue; // its overlay position is in `touched`
+                    }
+                    if best.is_none_or(|b| (idle, id) < b) {
+                        best = Some((idle, id));
+                    }
+                    break 'base;
+                }
+            }
+        }
+        best.map(|(idle, id)| (id, idle))
+    }
+
+    /// Greedy packing step: the node with the most overlay-idle GPUs among
+    /// classes `[c0, S)` (ties → largest node id).
+    pub fn most_idle(&self, c0: usize) -> Option<(NodeId, u32)> {
+        let mut best: Option<(u32, NodeId)> = None;
+        for c in c0..self.index.n_classes() {
+            if let Some((&idle, set)) = self.touched[c].iter().next_back() {
+                let id = *set.iter().next_back().expect("non-empty overlay bucket");
+                if best.is_none_or(|b| (idle, id) > b) {
+                    best = Some((idle, id));
+                }
+            }
+            'base: for (&idle, set) in self.index.bucket(c).iter().rev() {
+                if let Some(b) = best {
+                    if idle < b.0 {
+                        break 'base;
+                    }
+                }
+                for &id in set.iter().rev() {
+                    if self.taken.contains_key(&id) {
+                        continue;
+                    }
+                    if best.is_none_or(|b| (idle, id) > b) {
+                        best = Some((idle, id));
+                    }
+                    break 'base;
+                }
+            }
+        }
+        best.map(|(idle, id)| (id, idle))
+    }
+
+    /// Tentatively take `count` GPUs from `node`.
+    pub fn take(&mut self, node: NodeId, count: u32) {
+        if count == 0 {
+            return;
+        }
+        let c = self.index.class_of_node(node);
+        let base = self.state.nodes[node].idle;
+        let prev = self.taken.get(&node).copied().unwrap_or(0);
+        let old_ov = base - prev;
+        debug_assert!(count <= old_ov, "overlay overdraw on node {node}");
+        let new_ov = old_ov - count;
+        if prev > 0 {
+            if let Some(b) = self.touched[c].get_mut(&old_ov) {
+                b.remove(&node);
+                if b.is_empty() {
+                    self.touched[c].remove(&old_ov);
+                }
+            }
+        }
+        if new_ov > 0 {
+            self.touched[c].entry(new_ov).or_default().insert(node);
+        } else {
+            self.zeroed[c] += 1;
+        }
+        self.idle_delta[c] += count as u64;
+        self.taken.insert(node, prev + count);
+    }
+
+    /// Roll back a tentative take (packing that failed mid-way).
+    pub fn untake(&mut self, node: NodeId, count: u32) {
+        if count == 0 {
+            return;
+        }
+        let c = self.index.class_of_node(node);
+        let base = self.state.nodes[node].idle;
+        let prev = self.taken.get(&node).copied().unwrap_or(0);
+        debug_assert!(count <= prev, "untake exceeds taken on node {node}");
+        let old_ov = base - prev;
+        let new_taken = prev - count;
+        let new_ov = base - new_taken;
+        if old_ov > 0 {
+            if let Some(b) = self.touched[c].get_mut(&old_ov) {
+                b.remove(&node);
+                if b.is_empty() {
+                    self.touched[c].remove(&old_ov);
+                }
+            }
+        } else {
+            self.zeroed[c] -= 1;
+        }
+        if new_taken > 0 {
+            self.touched[c].entry(new_ov).or_default().insert(node);
+            self.taken.insert(node, new_taken);
+        } else {
+            self.taken.remove(&node);
+        }
+        self.idle_delta[c] -= count as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{real_testbed, sia_sim, GIB};
+
+    fn state() -> ClusterState {
+        ClusterState::from_spec(&real_testbed())
+    }
+
+    #[test]
+    fn build_matches_naive_suffix_sums() {
+        let s = state();
+        let idx = CapacityIndex::build(&s);
+        for mem in [1, 11 * GIB, 24 * GIB, 40 * GIB, 41 * GIB, 80 * GIB, 81 * GIB] {
+            assert_eq!(idx.idle_with_mem(mem), s.idle_gpus_with_mem(mem), "mem={mem}");
+        }
+        assert!(idx.check_against(&s));
+    }
+
+    #[test]
+    fn set_idle_keeps_index_consistent() {
+        let mut s = state();
+        let mut idx = CapacityIndex::build(&s);
+        // Take 3 of the 4 A800 GPUs on node 2.
+        s.nodes[2].idle = 1;
+        idx.set_idle(2, 4, 1);
+        assert!(idx.check_against(&s));
+        assert_eq!(idx.idle_with_mem(80 * GIB), 5);
+        // And back.
+        s.nodes[2].idle = 4;
+        idx.set_idle(2, 1, 4);
+        assert!(idx.check_against(&s));
+    }
+
+    #[test]
+    fn set_idle_to_zero_updates_nonzero_counts() {
+        let mut s = state();
+        let mut idx = CapacityIndex::build(&s);
+        let c = idx.class_of_node(0);
+        let before = idx.nonzero_in_class(c);
+        s.nodes[0].idle = 0;
+        idx.set_idle(0, 2, 0);
+        assert_eq!(idx.nonzero_in_class(c), before - 1);
+        assert!(idx.check_against(&s));
+    }
+
+    #[test]
+    fn grow_existing_class_is_incremental() {
+        let mut s = state();
+        let mut idx = CapacityIndex::build(&s);
+        let spec = crate::config::NodeSpec {
+            gpu: crate::config::gpu_by_name("A100-80G").unwrap(),
+            count: 4,
+            link: crate::config::LinkKind::NvLink,
+        };
+        let id = s.add_node(&spec);
+        assert!(idx.on_grow(&s.nodes[id]), "80G class already exists");
+        assert!(idx.check_against(&s));
+    }
+
+    #[test]
+    fn grow_new_class_requests_rebuild() {
+        let mut s = state();
+        let mut idx = CapacityIndex::build(&s);
+        let spec = crate::config::NodeSpec {
+            gpu: crate::config::gpu_by_name("RTX2080Ti").unwrap(), // 11G: new class
+            count: 8,
+            link: crate::config::LinkKind::Pcie,
+        };
+        let id = s.add_node(&spec);
+        assert!(!idx.on_grow(&s.nodes[id]));
+        let rebuilt = CapacityIndex::build(&s);
+        assert_eq!(rebuilt.idle_with_mem(11 * GIB), 19);
+        assert_eq!(rebuilt.idle_with_mem(40 * GIB), 11);
+    }
+
+    #[test]
+    fn overlay_take_untake_roundtrip() {
+        let s = state();
+        let idx = CapacityIndex::build(&s);
+        let view = ClusterView::with_index(&s, &idx);
+        let mut ov = view.overlay();
+        let before = ov.idle_with_mem(40 * GIB);
+        ov.take(2, 4); // empty the A800 node
+        assert_eq!(ov.idle_with_mem(40 * GIB), before - 4);
+        assert_eq!(ov.idle_of(2), 0);
+        ov.untake(2, 4);
+        assert_eq!(ov.idle_with_mem(40 * GIB), before);
+        assert_eq!(ov.idle_of(2), 4);
+        // Partial take lands the node in an overlay bucket.
+        ov.take(2, 1);
+        assert_eq!(ov.idle_of(2), 3);
+        assert_eq!(ov.best_fit(0, 3), Some((2, 3)));
+    }
+
+    #[test]
+    fn overlay_best_fit_matches_reference_order() {
+        // real testbed idle: node0=2 (40G), node1=1 (40G), node2=4 (80G),
+        // node3=2 (80G), node4=2 (80G).
+        let s = state();
+        let view = ClusterView::build(&s);
+        let ov = view.overlay();
+        // Request 1 GPU of ≥40G: tightest is node 1 (idle 1).
+        assert_eq!(ov.best_fit(0, 1), Some((1, 1)));
+        // Request 2: nodes 0, 3, 4 tie at idle 2 → smallest id (0).
+        assert_eq!(ov.best_fit(0, 2), Some((0, 2)));
+        // Request 3+: only node 2 covers it.
+        assert_eq!(ov.best_fit(0, 3), Some((2, 4)));
+        assert_eq!(ov.best_fit(0, 5), None);
+        // Most idle is node 2; after taking it, ties at 2 resolve to the
+        // LARGEST id (4), matching the naive stable sort's `.last()`.
+        assert_eq!(ov.most_idle(0), Some((2, 4)));
+        let mut ov = view.overlay();
+        ov.take(2, 4);
+        assert_eq!(ov.most_idle(0), Some((4, 2)));
+    }
+
+    #[test]
+    fn overlay_fit_class_skips_drained_classes() {
+        let s = ClusterState::from_spec(&sia_sim());
+        let view = ClusterView::build(&s);
+        let mut ov = view.overlay();
+        // Drain the 24G class (node 5: 4×RTX6000).
+        ov.take(5, 4);
+        let c = ov.fit_class(12 * GIB).expect("40G class remains");
+        assert_eq!(view.index().class_size(c), 40 * GIB);
+        // 11G requests still fit the 2080Ti class.
+        let c = ov.fit_class(1).expect("11G class");
+        assert_eq!(view.index().class_size(c), 11 * GIB);
+    }
+
+    #[test]
+    fn fenwick_sums() {
+        let mut f = Fenwick::new(4);
+        f.add(0, 3);
+        f.add(2, 5);
+        f.add(3, 1);
+        assert_eq!(f.total(), 9);
+        assert_eq!(f.prefix(2), 3);
+        assert_eq!(f.suffix(2), 6);
+        assert_eq!(f.at(2), 5);
+        f.add(2, -5);
+        assert_eq!(f.suffix(2), 1);
+    }
+}

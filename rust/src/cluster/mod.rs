@@ -1,6 +1,15 @@
 //! Runtime cluster state and the Resource Orchestrator (§IV, third
 //! component): tracks idle GPUs per node, executes allocations and releases,
 //! and maintains the job→resources ledger.
+//!
+//! The orchestrator also maintains the [`CapacityIndex`] incrementally on
+//! every take/give/grow/shrink, so scheduling rounds answer capacity
+//! questions in logarithmic time instead of scanning the node list — see
+//! [`index`] for the design.
+
+pub mod index;
+
+pub use index::{CapacityIndex, CapacityOverlay, ClusterView, IdleBuckets};
 
 use crate::config::{ClusterSpec, GpuSpec, LinkKind, NodeSpec};
 use crate::job::JobId;
@@ -133,21 +142,6 @@ impl ClusterState {
         1.0 - largest as f64 / idle as f64
     }
 
-    fn take(&mut self, node: NodeId, count: u32) -> Result<(), ClusterError> {
-        let n = self.nodes.get_mut(node).ok_or(ClusterError::NoSuchNode(node))?;
-        if n.idle < count {
-            return Err(ClusterError::InsufficientIdle { node, requested: count, idle: n.idle });
-        }
-        n.idle -= count;
-        Ok(())
-    }
-
-    fn give(&mut self, node: NodeId, count: u32) -> Result<(), ClusterError> {
-        let n = self.nodes.get_mut(node).ok_or(ClusterError::NoSuchNode(node))?;
-        n.idle = (n.idle + count).min(n.total);
-        Ok(())
-    }
-
     /// Append a node (elastic NodeJoin); returns its id. Node ids are
     /// stable for the lifetime of the cluster: a removed node is *retired*
     /// in place (`total = 0`) rather than spliced out, so ids held by
@@ -184,26 +178,48 @@ impl ClusterState {
     }
 }
 
-/// The Resource Orchestrator: authoritative allocate/release with a ledger.
+/// The Resource Orchestrator: authoritative allocate/release with a ledger
+/// and an incrementally maintained [`CapacityIndex`].
 #[derive(Debug, Clone)]
 pub struct Orchestrator {
     state: ClusterState,
     ledger: BTreeMap<JobId, Allocation>,
+    index: CapacityIndex,
 }
 
 impl Orchestrator {
     pub fn new(spec: &ClusterSpec) -> Self {
-        Self { state: ClusterState::from_spec(spec), ledger: BTreeMap::new() }
+        let state = ClusterState::from_spec(spec);
+        let index = CapacityIndex::build(&state);
+        Self { state, ledger: BTreeMap::new(), index }
     }
 
     pub fn state(&self) -> &ClusterState {
         &self.state
     }
 
-    /// Snapshot for a scheduler to plan against (schedulers never mutate the
-    /// authoritative state directly).
+    /// The incrementally maintained capacity index.
+    pub fn index(&self) -> &CapacityIndex {
+        &self.index
+    }
+
+    /// Zero-copy planning window for a scheduling round: the live state plus
+    /// the maintained index. This is what the engine hands to schedulers —
+    /// rounds no longer clone the cluster.
+    pub fn view(&self) -> ClusterView<'_> {
+        ClusterView::with_index(&self.state, &self.index)
+    }
+
+    /// Owned snapshot (kept for tests and offline analysis; the scheduling
+    /// hot path uses [`Orchestrator::view`] instead).
     pub fn snapshot(&self) -> ClusterState {
         self.state.clone()
+    }
+
+    /// Test hook: the incremental index must always agree with a fresh
+    /// build from the state.
+    pub fn check_index(&self) -> bool {
+        self.index.check_against(&self.state)
     }
 
     pub fn allocation_of(&self, job: JobId) -> Option<&Allocation> {
@@ -215,16 +231,35 @@ impl Orchestrator {
     }
 
     /// Atomically apply an allocation: either every part is taken or none.
+    /// Validation aggregates per node first (so duplicate node entries in
+    /// `parts` cannot overdraw) and applies only after every part checks
+    /// out — no cluster-sized scratch clone on the dispatch hot path.
     pub fn allocate(&mut self, alloc: Allocation) -> Result<(), ClusterError> {
         if self.ledger.contains_key(&alloc.job) {
             return Err(ClusterError::AlreadyAllocated(alloc.job));
         }
-        // Validate first against a scratch copy (atomicity).
-        let mut scratch = self.state.clone();
+        let mut agg: Vec<(NodeId, u32)> = Vec::with_capacity(alloc.parts.len());
         for &(node, count) in &alloc.parts {
-            scratch.take(node, count)?;
+            match agg.iter_mut().find(|(n, _)| *n == node) {
+                Some((_, c)) => *c += count,
+                None => agg.push((node, count)),
+            }
         }
-        self.state = scratch;
+        for &(node, want) in &agg {
+            let n = self.state.nodes.get(node).ok_or(ClusterError::NoSuchNode(node))?;
+            if n.idle < want {
+                return Err(ClusterError::InsufficientIdle {
+                    node,
+                    requested: want,
+                    idle: n.idle,
+                });
+            }
+        }
+        for &(node, want) in &agg {
+            let old = self.state.nodes[node].idle;
+            self.state.nodes[node].idle = old - want;
+            self.index.set_idle(node, old, old - want);
+        }
         self.ledger.insert(alloc.job, alloc);
         Ok(())
     }
@@ -233,14 +268,27 @@ impl Orchestrator {
     pub fn release(&mut self, job: JobId) -> Result<Allocation, ClusterError> {
         let alloc = self.ledger.remove(&job).ok_or(ClusterError::NotAllocated(job))?;
         for &(node, count) in &alloc.parts {
-            self.state.give(node, count).expect("ledger references valid nodes");
+            let (old, new) = {
+                let n =
+                    self.state.nodes.get_mut(node).expect("ledger references valid nodes");
+                let old = n.idle;
+                n.idle = (old + count).min(n.total);
+                (old, n.idle)
+            };
+            self.index.set_idle(node, old, new);
         }
         Ok(alloc)
     }
 
     /// Elastic grow: add a node whose GPUs are immediately idle.
     pub fn grow(&mut self, spec: &NodeSpec) -> NodeId {
-        self.state.add_node(spec)
+        let id = self.state.add_node(spec);
+        if !self.index.on_grow(&self.state.nodes[id]) {
+            // The join introduced a brand-new GPU size class; rebuild the
+            // index (rare — a never-seen GPU type — and O(n log n)).
+            self.index = CapacityIndex::build(&self.state);
+        }
+        id
     }
 
     /// Elastic shrink: retire `node`, releasing every allocation touching
@@ -264,9 +312,14 @@ impl Orchestrator {
         for job in affected {
             released.push(self.release(job).expect("ledger entry exists"));
         }
-        let n = &mut self.state.nodes[node];
-        n.total = 0;
-        n.idle = 0;
+        let old_idle = {
+            let n = &mut self.state.nodes[node];
+            let old = n.idle;
+            n.total = 0;
+            n.idle = 0;
+            old
+        };
+        self.index.set_idle(node, old_idle, 0);
         Ok(released)
     }
 
@@ -409,6 +462,47 @@ mod tests {
         assert_eq!(spec.total_gpus(), 7);
         assert!(spec.nodes.iter().all(|n| n.gpu.name != "A800-80G"));
         assert_eq!(o.state().active_nodes().count(), 4);
+    }
+
+    #[test]
+    fn index_stays_consistent_through_lifecycle() {
+        let mut o = Orchestrator::new(&real_testbed());
+        assert!(o.check_index());
+        o.allocate(Allocation { job: 1, parts: vec![(2, 3), (0, 1)] }).unwrap();
+        assert!(o.check_index());
+        // A never-seen GPU size forces the rebuild path.
+        let spec = NodeSpec {
+            gpu: crate::config::gpu_by_name("RTX3090").unwrap(),
+            count: 2,
+            link: LinkKind::Pcie,
+        };
+        o.grow(&spec);
+        assert!(o.check_index());
+        o.shrink(3).unwrap();
+        assert!(o.check_index());
+        o.release(1).unwrap();
+        assert!(o.check_index());
+        assert_eq!(
+            o.index().idle_with_mem(24 * GIB),
+            o.state().idle_gpus_with_mem(24 * GIB)
+        );
+    }
+
+    #[test]
+    fn allocate_rejects_duplicate_part_overdraw() {
+        // Two parts naming the same node must be validated as their sum.
+        let mut o = Orchestrator::new(&real_testbed());
+        let bad = Allocation { job: 1, parts: vec![(2, 3), (2, 3)] }; // 6 > 4 idle
+        assert!(matches!(
+            o.allocate(bad).unwrap_err(),
+            ClusterError::InsufficientIdle { node: 2, .. }
+        ));
+        assert_eq!(o.state().idle_gpus(), 11, "nothing taken");
+        assert!(o.check_index());
+        // The aggregated form within capacity succeeds.
+        o.allocate(Allocation { job: 1, parts: vec![(2, 2), (2, 2)] }).unwrap();
+        assert!(o.check_conservation());
+        assert!(o.check_index());
     }
 
     #[test]

@@ -148,6 +148,25 @@ pub fn sia_sim() -> ClusterSpec {
     }
 }
 
+/// Synthetic heterogeneous topology for scalability benchmarks
+/// (`benches/bench_sched.rs` and the index property tests): `n_nodes`
+/// nodes cycling through three GPU classes — 8×A800-80G NVLink,
+/// 4×A100-40G PCIe, 4×RTX6000 PCIe — so three size classes (80/40/24 GB)
+/// are present at every scale.
+pub fn synthetic_cluster(n_nodes: usize) -> ClusterSpec {
+    let a800 = gpu_by_name("A800-80G").unwrap();
+    let a100_40 = gpu_by_name("A100-40G").unwrap();
+    let rtx6000 = gpu_by_name("RTX6000").unwrap();
+    let nodes = (0..n_nodes)
+        .map(|i| match i % 3 {
+            0 => NodeSpec { gpu: a800.clone(), count: 8, link: LinkKind::NvLink },
+            1 => NodeSpec { gpu: a100_40.clone(), count: 4, link: LinkKind::Pcie },
+            _ => NodeSpec { gpu: rtx6000.clone(), count: 4, link: LinkKind::Pcie },
+        })
+        .collect();
+    ClusterSpec { name: format!("synthetic-{n_nodes}"), nodes, inter_node_gbps: 12.5 }
+}
+
 /// Resolve a topology by name (CLI `--cluster`).
 pub fn cluster_by_name(name: &str) -> Option<ClusterSpec> {
     match name {
@@ -190,6 +209,16 @@ mod tests {
     #[test]
     fn link_bandwidths_ordered() {
         assert!(LinkKind::NvLink.bandwidth_gbps() > LinkKind::Pcie.bandwidth_gbps());
+    }
+
+    #[test]
+    fn synthetic_cluster_scales_with_three_size_classes() {
+        let c = synthetic_cluster(9);
+        assert_eq!(c.nodes.len(), 9);
+        assert_eq!(c.gpu_sizes_desc(), vec![80 * GIB, 40 * GIB, 24 * GIB]);
+        assert_eq!(c.total_gpus(), 3 * (8 + 4 + 4));
+        let big = synthetic_cluster(10_000);
+        assert_eq!(big.nodes.len(), 10_000);
     }
 
     #[test]

@@ -36,9 +36,9 @@ use crate::cluster::{ClusterState, NodeId, Orchestrator};
 use crate::config::{ClusterSpec, NodeSpec};
 use crate::job::{JobId, JobOutcome, JobSpec};
 use crate::perfmodel::PerfModel;
-use crate::sched::{PendingJob, Scheduler};
+use crate::sched::{PendingJob, PendingQueue, Scheduler};
 use clock::Clock;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 /// Everything that can happen to the cluster, in one enum — the union of
 /// the simulator's old private event set and the live coordinator's
@@ -77,11 +77,23 @@ pub struct EngineConfig {
     /// Hard cap on scheduling attempts (OOM retries / preemptions) before a
     /// job is rejected.
     pub max_attempts: u32,
+    /// Retention policy for terminal-job bookkeeping: per-job maps
+    /// (`epochs`, `submit_times`, `first_starts`) keep entries for at most
+    /// this many *terminal* jobs, oldest-terminal-first eviction. Bounds a
+    /// long-running coordinator's memory; running/pending jobs are never
+    /// evicted. Completed outcomes (`JobOutcome`) are the run's result set
+    /// and are not subject to this cap.
+    pub retain_terminal: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { oom_detect_s: 45.0, sched_work_unit_s: 2.0e-5, max_attempts: 6 }
+        Self {
+            oom_detect_s: 45.0,
+            sched_work_unit_s: 2.0e-5,
+            max_attempts: 6,
+            retain_terminal: 16_384,
+        }
     }
 }
 
@@ -134,13 +146,43 @@ impl Effects {
 /// One applied placement: job → sorted `(node, gpu-count)` parts.
 pub type PlacementRecord = (JobId, Vec<(NodeId, u32)>);
 
+/// Bounded tracker of terminal jobs, shared by the engine and the live
+/// coordinator: ids are noted in the order they go terminal, and each note
+/// returns the ids that fell past the retention cap so the caller can drop
+/// its per-job bookkeeping for them (oldest-terminal-first eviction).
+#[derive(Debug)]
+pub struct RetentionQueue {
+    order: VecDeque<JobId>,
+    cap: usize,
+}
+
+impl RetentionQueue {
+    pub fn new(cap: usize) -> Self {
+        Self { order: VecDeque::new(), cap }
+    }
+
+    /// Record `id` as terminal; returns the evicted ids (beyond the cap).
+    pub fn note(&mut self, id: JobId) -> Vec<JobId> {
+        self.order.push_back(id);
+        let excess = self.order.len().saturating_sub(self.cap);
+        self.order.drain(..excess).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
 /// Cap on [`SchedulingEngine::decision_log`] entries: a long-running live
 /// coordinator must not leak memory linearly in placements, so the log
 /// keeps only the most recent records (the oldest half is dropped when the
 /// cap is hit). Per-job bookkeeping (`epochs`, `submit_times`,
-/// `first_starts`, `outcomes`) still grows with total jobs submitted, like
-/// the coordinator's own status table — bounding those needs a retention
-/// policy for terminal jobs (ROADMAP).
+/// `first_starts`) is bounded separately by
+/// [`EngineConfig::retain_terminal`].
 pub const MAX_DECISION_LOG: usize = 65_536;
 
 struct RunningJob {
@@ -188,7 +230,7 @@ pub struct SchedulingEngine<'a> {
     sched: &'a mut dyn Scheduler,
     pm: PerfModel,
     cfg: EngineConfig,
-    pending: Vec<PendingJob>,
+    pending: PendingQueue,
     running: HashMap<JobId, RunningJob>,
     outcomes: Vec<JobOutcome>,
     rejected: usize,
@@ -198,6 +240,8 @@ pub struct SchedulingEngine<'a> {
     submit_times: HashMap<JobId, f64>,
     first_starts: HashMap<JobId, f64>,
     epochs: HashMap<JobId, u64>,
+    /// Eviction queue for [`EngineConfig::retain_terminal`].
+    retention: RetentionQueue,
     /// Every applied placement, in order: (job, sorted (node, gpus) parts).
     decision_log: Vec<PlacementRecord>,
     /// Interval schedulers: time of the last executed round and whether a
@@ -208,12 +252,13 @@ pub struct SchedulingEngine<'a> {
 
 impl<'a> SchedulingEngine<'a> {
     pub fn new(spec: &ClusterSpec, sched: &'a mut dyn Scheduler, cfg: EngineConfig) -> Self {
+        let retention = RetentionQueue::new(cfg.retain_terminal);
         Self {
             orch: Orchestrator::new(spec),
             sched,
             pm: PerfModel::new(spec.inter_node_gbps),
             cfg,
-            pending: Vec::new(),
+            pending: PendingQueue::new(),
             running: HashMap::new(),
             outcomes: Vec::new(),
             rejected: 0,
@@ -223,6 +268,7 @@ impl<'a> SchedulingEngine<'a> {
             submit_times: HashMap::new(),
             first_starts: HashMap::new(),
             epochs: HashMap::new(),
+            retention,
             decision_log: Vec::new(),
             last_round: f64::NEG_INFINITY,
             tick_queued: false,
@@ -269,6 +315,7 @@ impl<'a> SchedulingEngine<'a> {
                         / (now - run.first_start).max(1e-9),
                     attempts: run.attempts,
                 });
+                self.note_terminal(job);
                 fx.finished.push(job);
             }
             ClusterEvent::Oom { job, epoch } => {
@@ -279,6 +326,7 @@ impl<'a> SchedulingEngine<'a> {
                 let _ = self.orch.release(job);
                 if run.attempts >= self.cfg.max_attempts {
                     self.rejected += 1;
+                    self.note_terminal(job);
                     fx.rejected.push(job);
                 } else {
                     self.pending.push(PendingJob { spec: run.spec, attempts: run.attempts });
@@ -297,6 +345,7 @@ impl<'a> SchedulingEngine<'a> {
                         let Some(run) = self.running.remove(&alloc.job) else { continue };
                         if run.attempts >= self.cfg.max_attempts {
                             self.rejected += 1;
+                            self.note_terminal(alloc.job);
                             fx.rejected.push(alloc.job);
                         } else {
                             self.pending
@@ -339,25 +388,30 @@ impl<'a> SchedulingEngine<'a> {
         fx
     }
 
-    /// The placement pass.
+    /// The placement pass. The scheduler plans against the orchestrator's
+    /// live state + capacity index through a borrowed [`ClusterView`] —
+    /// no cluster snapshot is cloned per round.
+    ///
+    /// [`ClusterView`]: crate::cluster::ClusterView
     fn round_inner(&mut self, clock: &mut dyn Clock, fx: &mut Effects) {
         if self.pending.is_empty() {
             return;
         }
         let now = clock.now();
-        let snapshot = self.orch.snapshot();
         let t0 = std::time::Instant::now();
-        let round = self.sched.schedule(&self.pending, &snapshot, now);
+        let round = {
+            let view = self.orch.view();
+            self.sched.schedule(&self.pending, &view, now)
+        };
         self.sched_wall_s += t0.elapsed().as_secs_f64();
         self.work_units += round.work_units;
         let overhead = round.work_units as f64 * self.cfg.sched_work_unit_s;
         let start_time = now + overhead;
 
         for d in round.decisions {
-            let Some(pos) = self.pending.iter().position(|p| p.spec.id == d.job) else {
+            let Some(pj) = self.pending.remove(d.job) else {
                 continue; // scheduler returned a stale decision — ignore
             };
-            let pj = self.pending.remove(pos);
             if self.orch.allocate(d.alloc.clone()).is_err() {
                 // Scheduler overdrew (bug or stale snapshot): requeue.
                 self.pending.push(pj);
@@ -416,7 +470,9 @@ impl<'a> SchedulingEngine<'a> {
 
     /// If the cluster is completely idle and the scheduler still can't place
     /// a job, it never will — reject it instead of busy-looping. (A job that
-    /// exceeded its attempt budget is also dropped here.)
+    /// exceeded its attempt budget is also dropped here.) Feasibility is a
+    /// single [`Scheduler::can_place`] probe per job against the capacity
+    /// index — no snapshot clones and no per-job placement rounds.
     fn reject_unplaceable(&mut self, clock: &mut dyn Clock, fx: &mut Effects) {
         if !(self.running.is_empty()
             && self.orch.state().idle_gpus() == self.orch.state().total_gpus()
@@ -425,35 +481,53 @@ impl<'a> SchedulingEngine<'a> {
             return;
         }
         let now = clock.now();
+        let drained = self.pending.drain();
         let mut keep = Vec::new();
-        let drained: Vec<PendingJob> = self.pending.drain(..).collect();
-        for p in drained {
-            if p.attempts >= self.cfg.max_attempts {
-                self.rejected += 1;
-                fx.rejected.push(p.spec.id);
-                continue;
-            }
-            let snapshot = self.orch.snapshot();
-            let round = self.sched.schedule(std::slice::from_ref(&p), &snapshot, now);
-            if round.decisions.is_empty() {
-                self.rejected += 1;
-                fx.rejected.push(p.spec.id);
-            } else {
-                keep.push(p);
+        let mut rejects: Vec<JobId> = Vec::new();
+        {
+            let view = self.orch.view();
+            for p in drained {
+                if p.attempts >= self.cfg.max_attempts {
+                    rejects.push(p.spec.id);
+                } else if self.sched.can_place(&p, &view, now) {
+                    keep.push(p);
+                } else {
+                    rejects.push(p.spec.id);
+                }
             }
         }
-        self.pending = keep;
+        for id in rejects {
+            self.rejected += 1;
+            self.note_terminal(id);
+            fx.rejected.push(id);
+        }
+        for p in keep {
+            self.pending.push(p);
+        }
         if !self.pending.is_empty() {
             // They are placeable on an empty cluster; place them now.
             self.round_inner(clock, fx);
         }
     }
 
+    /// Record that `job` reached a terminal state and evict the oldest
+    /// terminal jobs' bookkeeping beyond [`EngineConfig::retain_terminal`].
+    fn note_terminal(&mut self, job: JobId) {
+        for old in self.retention.note(job) {
+            self.epochs.remove(&old);
+            self.submit_times.remove(&old);
+            self.first_starts.remove(&old);
+        }
+    }
+
     /// Remove a queued job (user cancel). True when it was pending.
     pub fn cancel_pending(&mut self, id: JobId) -> bool {
-        let before = self.pending.len();
-        self.pending.retain(|p| p.spec.id != id);
-        self.pending.len() != before
+        if self.pending.remove(id).is_some() {
+            self.note_terminal(id);
+            true
+        } else {
+            false
+        }
     }
 
     /// Cancel a running job: release its resources without recording an
@@ -463,15 +537,18 @@ impl<'a> SchedulingEngine<'a> {
             return false;
         }
         let _ = self.orch.release(id);
+        self.note_terminal(id);
         true
     }
 
     /// Drain the pending queue into rejections (end-of-run bookkeeping:
     /// whatever is still pending never got resources).
     pub fn reject_remaining(&mut self) -> Vec<JobId> {
-        let ids: Vec<JobId> = self.pending.iter().map(|p| p.spec.id).collect();
+        let ids: Vec<JobId> = self.pending.drain().into_iter().map(|p| p.spec.id).collect();
         self.rejected += ids.len();
-        self.pending.clear();
+        for &id in &ids {
+            self.note_terminal(id);
+        }
         ids
     }
 
@@ -518,7 +595,7 @@ impl<'a> SchedulingEngine<'a> {
     }
 
     pub fn is_pending(&self, id: JobId) -> bool {
-        self.pending.iter().any(|p| p.spec.id == id)
+        self.pending.contains(id)
     }
 
     /// Scheduling attempts recorded for a job so far (running or pending).
@@ -526,12 +603,19 @@ impl<'a> SchedulingEngine<'a> {
         if let Some(r) = self.running.get(&id) {
             return r.attempts;
         }
-        self.pending.iter().find(|p| p.spec.id == id).map(|p| p.attempts).unwrap_or(0)
+        self.pending.get(id).map(|p| p.attempts).unwrap_or(0)
     }
 
-    /// Current placement epoch of a job (0 if never placed).
+    /// Current placement epoch of a job (0 if never placed, or if the job
+    /// went terminal long enough ago that its bookkeeping was evicted under
+    /// [`EngineConfig::retain_terminal`]).
     pub fn run_epoch(&self, id: JobId) -> u64 {
         self.epochs.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Terminal jobs whose bookkeeping is still retained (tests).
+    pub fn retained_terminal(&self) -> usize {
+        self.retention.len()
     }
 
     /// The applied-placement log, most recent [`MAX_DECISION_LOG`] entries.
@@ -700,6 +784,27 @@ mod tests {
         // It landed on the joined node (id 1).
         let (_, parts) = engine.decision_log().iter().find(|(id, _)| *id == 2).unwrap();
         assert!(parts.iter().all(|&(n, _)| n == 1), "placed on the joined 80G node: {parts:?}");
+        assert!(engine.conservation_ok());
+    }
+
+    #[test]
+    fn terminal_retention_evicts_old_bookkeeping() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let cfg = EngineConfig { retain_terminal: 2, ..EngineConfig::default() };
+        let mut engine = SchedulingEngine::new(&spec, &mut has, cfg);
+        let mut clock = VirtualClock::new();
+        for i in 0..5u64 {
+            clock.schedule(
+                i as f64 * 10_000.0,
+                ClusterEvent::Arrival(job(i, "gpt2-350m", 8, 1_000, i as f64 * 10_000.0)),
+            );
+        }
+        drive(&mut engine, &mut clock);
+        assert_eq!(engine.outcomes().len(), 5, "outcomes are the result set — never evicted");
+        assert_eq!(engine.retained_terminal(), 2, "only the 2 newest terminal jobs tracked");
+        assert_eq!(engine.run_epoch(0), 0, "evicted terminal job's epoch dropped");
+        assert!(engine.run_epoch(4) >= 1, "recent terminal job retained");
         assert!(engine.conservation_ok());
     }
 

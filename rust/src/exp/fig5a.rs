@@ -6,11 +6,11 @@
 //! jobs on the Sia-paper topology, for growing n.
 
 use super::save_results;
-use crate::cluster::ClusterState;
+use crate::cluster::{ClusterState, ClusterView};
 use crate::config::sia_sim;
 use crate::job::JobSpec;
 use crate::marp::Marp;
-use crate::sched::{has::Has, sia::Sia, PendingJob, Scheduler};
+use crate::sched::{has::Has, sia::Sia, PendingJob, PendingQueue, Scheduler};
 use crate::util::json::Json;
 use crate::util::plot::LineChart;
 use crate::util::table::{fmt_duration, Table};
@@ -27,23 +27,25 @@ pub struct Point {
     pub sia_work: u64,
 }
 
-fn pending_queue(n: usize, seed: u64) -> Vec<PendingJob> {
+fn pending_queue(n: usize, seed: u64) -> PendingQueue {
     let jobs: Vec<JobSpec> = newworkload::generate(n, seed);
-    jobs.into_iter().map(|spec| PendingJob { spec, attempts: 0 }).collect()
+    jobs.into_iter()
+        .map(|spec| PendingJob { spec, attempts: 0 })
+        .collect()
 }
 
 /// Median wall time of `reps` scheduling rounds.
 fn measure(
     sched: &mut dyn Scheduler,
-    pending: &[PendingJob],
-    snap: &ClusterState,
+    pending: &PendingQueue,
+    view: &ClusterView<'_>,
     reps: usize,
 ) -> (f64, u64) {
     let mut times = Vec::new();
     let mut work = 0;
     for _ in 0..reps.max(1) {
         let t0 = Instant::now();
-        let round = sched.schedule(pending, snap, 0.0);
+        let round = sched.schedule(pending, view, 0.0);
         times.push(t0.elapsed().as_secs_f64());
         work = round.work_units;
     }
@@ -61,14 +63,15 @@ pub const FIG5A_NODE_LIMIT: u64 = 60_000_000;
 pub fn run(task_counts: &[usize], seed: u64) -> Vec<Point> {
     let spec = sia_sim();
     let snap = ClusterState::from_spec(&spec);
+    let view = ClusterView::build(&snap);
     let mut out = Vec::new();
     for &n in task_counts {
         let pending = pending_queue(n, seed);
         let mut has = Has::new(Marp::with_defaults(spec.clone()));
-        let (has_s, has_work) = measure(&mut has, &pending, &snap, 3);
+        let (has_s, has_work) = measure(&mut has, &pending, &view, 3);
         let mut sia = Sia::new(&spec);
         sia.node_limit = FIG5A_NODE_LIMIT;
-        let (sia_s, sia_work) = measure(&mut sia, &pending, &snap, 1);
+        let (sia_s, sia_work) = measure(&mut sia, &pending, &view, 1);
         out.push(Point { tasks: n, has_s, sia_s, has_work, sia_work });
     }
     out

@@ -22,7 +22,9 @@
 //! Architecture (see DESIGN.md):
 //! * [`memory`] / [`marp`] — the Memory-Aware Resource Predictor (§IV.A),
 //! * [`sched`] — HAS (Algorithm 1) plus the Sia and Opportunistic baselines,
-//! * [`cluster`] — the Resource Orchestrator (with elastic grow/shrink),
+//! * [`cluster`] — the Resource Orchestrator (with elastic grow/shrink)
+//!   and the incrementally maintained [`cluster::CapacityIndex`] that makes
+//!   scheduling rounds sub-linear in cluster size,
 //! * [`engine`] — the unified event-driven scheduling engine: one
 //!   [`engine::ClusterEvent`] loop (arrival, finish, OOM, round ticks,
 //!   node join/leave) behind a clock abstraction, shared by the simulator

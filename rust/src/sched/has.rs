@@ -14,25 +14,50 @@
 //! The fit-size indirection is what makes HAS heterogeneity-aware: a job
 //! needing 32 GB lands on 40 GB cards even when 80 GB cards are idle,
 //! keeping the big cards for jobs that need them.
+//!
+//! **Execution strategies.** The same algorithm runs two ways:
+//!
+//! * `indexed == true` (default, the production hot path): Stage 1 is an
+//!   O(log S) suffix-sum probe and Stage 2 an O(log n) bucket lookup
+//!   against the [`CapacityOverlay`] — sub-linear in cluster size.
+//! * `indexed == false`: the reference full-scan implementation
+//!   ([`Has::allocate_one`]) over a cloned snapshot — kept as the
+//!   differential-test oracle and the `bench_sched` baseline.
+//!
+//! Both strategies produce byte-identical decisions *and* identical
+//! `work_units`: work units model the abstract Algorithm-1 effort (plan
+//! probes + candidate-list sizes), deliberately independent of the
+//! execution strategy, so simulated virtual-time trajectories do not shift
+//! when the implementation gets faster. Real speed is measured in wall
+//! clock by `benches/bench_sched.rs`.
 
-use super::{derive_placement, Decision, PendingJob, SchedRound, Scheduler};
-use crate::cluster::{Allocation, ClusterState};
+use super::{derive_placement, Decision, PendingJob, PendingQueue, SchedRound, Scheduler};
+use crate::cluster::{Allocation, CapacityOverlay, ClusterState, ClusterView, NodeId};
 use crate::marp::{Marp, ResourcePlan};
 use crate::memory::Parallelism;
 
 /// The HAS scheduler. Owns a MARP instance (plans are recomputed per job and
-/// memoized by (model, batch) key).
+/// memoized by (model, batch) key; scheduling rounds borrow from the cache —
+/// no per-job plan-list clones).
 pub struct Has {
     marp: Marp,
-    plan_cache: std::collections::HashMap<(String, u32), Vec<ResourcePlan>>,
+    plan_cache: std::collections::HashMap<(&'static str, u32), Vec<ResourcePlan>>,
     /// Work-unit accounting for the overhead comparison (Fig 5a): each node
     /// scan / plan check costs one unit.
     pub count_work: bool,
+    /// Run Algorithm 1 against the capacity index (default). `false`
+    /// selects the reference full-scan path for differential testing.
+    pub indexed: bool,
 }
 
 impl Has {
     pub fn new(marp: Marp) -> Self {
-        Self { marp, plan_cache: std::collections::HashMap::new(), count_work: true }
+        Self {
+            marp,
+            plan_cache: std::collections::HashMap::new(),
+            count_work: true,
+            indexed: true,
+        }
     }
 
     pub fn marp(&self) -> &Marp {
@@ -40,15 +65,16 @@ impl Has {
     }
 
     fn plans_for(&mut self, job: &PendingJob) -> &[ResourcePlan] {
-        let key = (job.spec.model.name.to_string(), job.spec.train.global_batch);
+        let key = (job.spec.model.name, job.spec.train.global_batch);
         let marp = &self.marp;
         self.plan_cache
             .entry(key)
             .or_insert_with(|| marp.plans(&job.spec.model, &job.spec.train))
     }
 
-    /// Algorithm 1. Returns the chosen plan and allocation, or None when no
-    /// plan is satisfiable right now. `work` accumulates scan steps.
+    /// Algorithm 1, reference implementation: full scans over a snapshot.
+    /// Returns the chosen plan and allocation, or None when no plan is
+    /// satisfiable right now. `work` accumulates scan steps.
     pub fn allocate_one(
         plans: &[ResourcePlan],
         snapshot: &ClusterState,
@@ -107,6 +133,89 @@ impl Has {
         debug_assert_eq!(parts.iter().map(|(_, c)| c).sum::<u32>(), plan.n_gpus);
         Some((plan.clone(), Allocation { job: 0, parts }))
     }
+
+    /// Algorithm 1 against the capacity index: Stage 1 probes are suffix
+    /// sums, Stage 2 best-fit/greedy are bucket range lookups. Successful
+    /// placements are committed into `ov` (so later jobs in the round see
+    /// reduced capacity); a packing that fails mid-way is rolled back.
+    /// Decisions and `work` accounting are bit-identical to
+    /// [`Has::allocate_one`].
+    pub fn allocate_one_indexed(
+        plans: &[ResourcePlan],
+        ov: &mut CapacityOverlay<'_>,
+        work: &mut u64,
+    ) -> Option<(ResourcePlan, Allocation)> {
+        // Stage 1: first satisfiable plan.
+        let mut optimal: Option<&ResourcePlan> = None;
+        for plan in plans {
+            *work += 1;
+            if ov.idle_with_mem(plan.min_gpu_mem) >= plan.n_gpus {
+                optimal = Some(plan);
+                break;
+            }
+        }
+        let plan = optimal?;
+
+        // Stage 2: best-fit / greedy packing.
+        let mut req_num = plan.n_gpus;
+        let req_sz = plan.min_gpu_mem;
+        let mut parts: Vec<(NodeId, u32)> = Vec::new();
+        fn rollback(ov: &mut CapacityOverlay<'_>, parts: &[(NodeId, u32)]) {
+            for &(id, c) in parts {
+                ov.untake(id, c);
+            }
+        }
+
+        while req_num > 0 {
+            let Some(fit_c) = ov.fit_class(req_sz) else {
+                rollback(ov, &parts);
+                return None;
+            };
+            // Work-unit parity: the reference path pays one unit per
+            // candidate node (|NLst|) per packing iteration.
+            *work += ov.avail_nodes(fit_c);
+
+            if let Some((id, _)) = ov.best_fit(fit_c, req_num) {
+                ov.take(id, req_num);
+                parts.push((id, req_num));
+                break;
+            }
+            let Some((id, idle)) = ov.most_idle(fit_c) else {
+                rollback(ov, &parts);
+                return None;
+            };
+            ov.take(id, idle);
+            parts.push((id, idle));
+            req_num -= idle;
+        }
+        debug_assert_eq!(parts.iter().map(|(_, c)| c).sum::<u32>(), plan.n_gpus);
+        Some((plan.clone(), Allocation { job: 0, parts }))
+    }
+
+    /// Turn a chosen (plan, allocation) into a [`Decision`]. Shared by the
+    /// indexed and naive execution paths so decision construction cannot
+    /// drift between them — the differential gate depends on it.
+    /// (`derive_placement` reads only static node fields, so passing the
+    /// committed state here is equivalent to the round-local snapshot.)
+    fn decide(
+        job: crate::job::JobId,
+        plan: &ResourcePlan,
+        mut alloc: Allocation,
+        state: &ClusterState,
+    ) -> Decision {
+        alloc.job = job;
+        let (placement, gpu) = derive_placement(&alloc, plan.par, state);
+        // Frenzy is memory-aware: the chosen plan always fits.
+        let will_oom = plan.predicted_bytes > gpu.mem_bytes;
+        Decision {
+            job,
+            alloc,
+            par: Parallelism::new(plan.par.d, plan.par.t),
+            placement,
+            gpu,
+            will_oom,
+        }
+    }
 }
 
 impl Scheduler for Has {
@@ -124,37 +233,65 @@ impl Scheduler for Has {
         self.plan_cache.clear();
     }
 
-    fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, _now: f64) -> SchedRound {
+    /// Index probe: a job is placeable iff any MARP plan's `(reqNum, reqSz)`
+    /// is satisfied by the committed capacity — O(plans · log S), no
+    /// allocation attempt, no snapshot.
+    fn can_place(&mut self, job: &PendingJob, view: &ClusterView<'_>, _now: f64) -> bool {
+        self.plans_for(job)
+            .iter()
+            .any(|p| view.idle_gpus_with_mem(p.min_gpu_mem) >= p.n_gpus)
+    }
+
+    fn schedule(
+        &mut self,
+        pending: &PendingQueue,
+        view: &ClusterView<'_>,
+        _now: f64,
+    ) -> SchedRound {
         let mut round = SchedRound::default();
-        let mut snap = snapshot.clone();
-        for job in pending {
-            let plans = self.plans_for(job).to_vec();
-            if plans.is_empty() {
-                // Infeasible on this cluster — admission should have
-                // rejected it; skip (the sim marks it Rejected).
-                continue;
-            }
-            let mut work = 0u64;
-            if let Some((plan, mut alloc)) = Self::allocate_one(&plans, &snap, &mut work) {
-                alloc.job = job.spec.id;
-                // Track the tentative allocation in the local snapshot so
-                // later jobs in this round see reduced idle counts.
-                for &(node, count) in &alloc.parts {
-                    snap.nodes[node].idle -= count;
+        if self.indexed {
+            // Hot path: tentative placements layer into an overlay; nothing
+            // cluster-sized is cloned.
+            let mut ov = view.overlay();
+            for job in pending.iter() {
+                let mut work = 0u64;
+                let placed = {
+                    let plans = self.plans_for(job);
+                    if plans.is_empty() {
+                        // Infeasible on this cluster — admission should have
+                        // rejected it; skip (the sim marks it Rejected).
+                        continue;
+                    }
+                    Self::allocate_one_indexed(plans, &mut ov, &mut work)
+                };
+                if let Some((plan, alloc)) = placed {
+                    round.decisions.push(Self::decide(job.spec.id, &plan, alloc, view.state()));
                 }
-                let (placement, gpu) = derive_placement(&alloc, plan.par, &snap);
-                // Frenzy is memory-aware: the chosen plan always fits.
-                let will_oom = plan.predicted_bytes > gpu.mem_bytes;
-                round.decisions.push(Decision {
-                    job: job.spec.id,
-                    alloc,
-                    par: Parallelism::new(plan.par.d, plan.par.t),
-                    placement,
-                    gpu,
-                    will_oom,
-                });
+                round.work_units += work.max(1);
             }
-            round.work_units += work.max(1);
+        } else {
+            // Reference path: the pre-index implementation, full scans over
+            // a cloned snapshot. Kept as the differential oracle.
+            let mut snap = view.state().clone();
+            for job in pending.iter() {
+                let mut work = 0u64;
+                let placed = {
+                    let plans = self.plans_for(job);
+                    if plans.is_empty() {
+                        continue;
+                    }
+                    Self::allocate_one(plans, &snap, &mut work)
+                };
+                if let Some((plan, alloc)) = placed {
+                    // Track the tentative allocation in the local snapshot so
+                    // later jobs in this round see reduced idle counts.
+                    for &(node, count) in &alloc.parts {
+                        snap.nodes[node].idle -= count;
+                    }
+                    round.decisions.push(Self::decide(job.spec.id, &plan, alloc, &snap));
+                }
+                round.work_units += work.max(1);
+            }
         }
         round
     }
@@ -175,6 +312,10 @@ mod tests {
         }
     }
 
+    fn q(jobs: Vec<PendingJob>) -> PendingQueue {
+        PendingQueue::from(jobs)
+    }
+
     fn has() -> Has {
         Has::new(Marp::with_defaults(real_testbed()))
     }
@@ -183,7 +324,8 @@ mod tests {
     fn schedules_small_job_without_oom() {
         let mut h = has();
         let snap = ClusterState::from_spec(&real_testbed());
-        let round = h.schedule(&[pending(1, "gpt2-350m", 4)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = h.schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &view, 0.0);
         assert_eq!(round.decisions.len(), 1);
         let d = &round.decisions[0];
         assert!(d.alloc.is_single_node(), "a small job must not span nodes: {:?}", d.alloc);
@@ -212,6 +354,15 @@ mod tests {
             Has::allocate_one(std::slice::from_ref(&plan), &snap, &mut work).expect("place");
         assert_eq!(alloc.parts, vec![(1usize, 1u32)], "must pick the 1-GPU A100-40 node");
         assert!(work > 0);
+        // The indexed path must agree exactly, including work units.
+        let view = ClusterView::build(&snap);
+        let mut ov = view.overlay();
+        let mut work_idx = 0;
+        let (_, alloc_idx) =
+            Has::allocate_one_indexed(std::slice::from_ref(&plan), &mut ov, &mut work_idx)
+                .expect("place");
+        assert_eq!(alloc_idx.parts, alloc.parts);
+        assert_eq!(work_idx, work);
     }
 
     #[test]
@@ -241,7 +392,8 @@ mod tests {
     fn big_job_lands_on_80g() {
         let mut h = has();
         let snap = ClusterState::from_spec(&real_testbed());
-        let round = h.schedule(&[pending(1, "gpt2-7b", 2)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = h.schedule(&q(vec![pending(1, "gpt2-7b", 2)]), &view, 0.0);
         assert_eq!(round.decisions.len(), 1);
         let d = &round.decisions[0];
         // 7B needs eight 40G GPUs (only 3 exist) or four 80G: the first
@@ -255,9 +407,9 @@ mod tests {
     fn round_respects_capacity_across_jobs() {
         let mut h = has();
         let snap = ClusterState::from_spec(&real_testbed());
-        let jobs: Vec<PendingJob> =
-            (0..8).map(|i| pending(i, "gpt2-350m", 8)).collect();
-        let round = h.schedule(&jobs, &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let jobs: Vec<PendingJob> = (0..8).map(|i| pending(i, "gpt2-350m", 8)).collect();
+        let round = h.schedule(&q(jobs), &view, 0.0);
         // Apply all decisions to a fresh orchestrator: must never overdraw.
         let mut orch = crate::cluster::Orchestrator::new(&real_testbed());
         for d in &round.decisions {
@@ -273,7 +425,8 @@ mod tests {
         for n in &mut snap.nodes {
             n.idle = 0;
         }
-        let round = h.schedule(&[pending(1, "gpt2-350m", 4)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = h.schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &view, 0.0);
         assert!(round.decisions.is_empty());
     }
 
@@ -285,7 +438,8 @@ mod tests {
         let mut h = has();
         let mut snap = ClusterState::from_spec(&real_testbed());
         snap.nodes[2].idle = 0; // 4×A800 taken
-        let round = h.schedule(&[pending(1, "gpt2-1.3b", 8)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = h.schedule(&q(vec![pending(1, "gpt2-1.3b", 8)]), &view, 0.0);
         assert_eq!(round.decisions.len(), 1);
         let d = &round.decisions[0];
         assert!(!d.will_oom);
@@ -306,8 +460,59 @@ mod tests {
             if let Some((_, alloc)) = got {
                 assert!(alloc.parts.len() > 1);
                 assert_eq!(alloc.total_gpus(), plan.n_gpus);
+                // The indexed path packs the exact same parts.
+                let view = ClusterView::build(&snap);
+                let mut ov = view.overlay();
+                let mut w2 = 0;
+                let (_, alloc2) =
+                    Has::allocate_one_indexed(std::slice::from_ref(plan), &mut ov, &mut w2)
+                        .expect("place");
+                assert_eq!(alloc2.parts, alloc.parts);
+                assert_eq!(w2, work);
             }
         }
+    }
+
+    #[test]
+    fn indexed_and_naive_rounds_are_identical() {
+        let snap = ClusterState::from_spec(&real_testbed());
+        let view = ClusterView::build(&snap);
+        let jobs: Vec<PendingJob> = (0..10)
+            .map(|i| {
+                let m = ["gpt2-125m", "gpt2-350m", "gpt2-760m", "gpt2-1.3b", "gpt2-7b"]
+                    [i as usize % 5];
+                pending(i, m, 2 + (i % 4) as u32 * 2)
+            })
+            .collect();
+        let mut hi = has();
+        let mut hn = has();
+        hn.indexed = false;
+        let ri = hi.schedule(&q(jobs.clone()), &view, 0.0);
+        let rn = hn.schedule(&q(jobs), &view, 0.0);
+        assert_eq!(ri.work_units, rn.work_units);
+        assert_eq!(ri.decisions.len(), rn.decisions.len());
+        for (a, b) in ri.decisions.iter().zip(&rn.decisions) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.alloc.parts, b.alloc.parts);
+            assert_eq!(a.par, b.par);
+            assert_eq!(a.will_oom, b.will_oom);
+            assert_eq!(a.gpu, b.gpu);
+        }
+    }
+
+    #[test]
+    fn can_place_probe_matches_schedule_outcome() {
+        let mut h = has();
+        let snap = ClusterState::from_spec(&real_testbed());
+        let view = ClusterView::build(&snap);
+        assert!(h.can_place(&pending(1, "gpt2-350m", 4), &view, 0.0));
+        // Fully busy cluster: nothing is placeable.
+        let mut busy = ClusterState::from_spec(&real_testbed());
+        for n in &mut busy.nodes {
+            n.idle = 0;
+        }
+        let busy_view = ClusterView::build(&busy);
+        assert!(!h.can_place(&pending(1, "gpt2-350m", 4), &busy_view, 0.0));
     }
 
     #[test]
@@ -315,11 +520,12 @@ mod tests {
         // HAS work for n jobs should be ~n × (plans + nodes), not explode.
         let mut h = has();
         let snap = ClusterState::from_spec(&real_testbed());
+        let view = ClusterView::build(&snap);
         let jobs_small: Vec<PendingJob> = (0..4).map(|i| pending(i, "gpt2-350m", 4)).collect();
         let jobs_large: Vec<PendingJob> = (0..16).map(|i| pending(i, "gpt2-350m", 4)).collect();
-        let w_small = h.schedule(&jobs_small, &snap, 0.0).work_units;
+        let w_small = h.schedule(&q(jobs_small), &view, 0.0).work_units;
         let mut h2 = has();
-        let w_large = h2.schedule(&jobs_large, &snap, 0.0).work_units;
+        let w_large = h2.schedule(&q(jobs_large), &view, 0.0).work_units;
         assert!(w_large <= w_small * 8, "w_small={w_small} w_large={w_large}");
     }
 }

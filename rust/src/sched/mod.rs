@@ -5,17 +5,24 @@
 //! * [`opportunistic::Opportunistic`] — FCFS fastest-GPU-first (Lyra-style),
 //!   memory-oblivious with OOM trial-and-error.
 //!
-//! Schedulers plan against an immutable [`ClusterState`] snapshot and return
-//! [`Decision`]s; the shared [`crate::engine::SchedulingEngine`] — driving
-//! both the simulator and the live serverless coordinator — applies them
-//! through the [`crate::cluster::Orchestrator`], which is the single
-//! authority on resource state.
+//! Schedulers plan against an immutable [`ClusterView`] — the live
+//! [`ClusterState`] plus the orchestrator's incrementally maintained
+//! [`crate::cluster::CapacityIndex`] — and return [`Decision`]s; the shared
+//! [`crate::engine::SchedulingEngine`] — driving both the simulator and the
+//! live serverless coordinator — applies them through the
+//! [`crate::cluster::Orchestrator`], which is the single authority on
+//! resource state. Rounds therefore clone nothing cluster-sized: tentative
+//! within-round placements live in a [`crate::cluster::CapacityOverlay`]
+//! (HAS) or scheduler-local scratch (the baselines).
 
 pub mod has;
 pub mod opportunistic;
+pub mod queue;
 pub mod sia;
 
-use crate::cluster::{Allocation, ClusterState};
+pub use queue::PendingQueue;
+
+use crate::cluster::{Allocation, ClusterState, ClusterView};
 use crate::config::GpuSpec;
 use crate::job::{JobId, JobSpec};
 use crate::memory::Parallelism;
@@ -59,10 +66,23 @@ pub struct SchedRound {
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
-    /// Plan allocations for `pending` (FCFS order) against `snapshot`.
-    /// Implementations must not assume they can place every job.
-    fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, now: f64)
+    /// Plan allocations for `pending` (FCFS order) against `view`.
+    /// Implementations must not assume they can place every job, and must
+    /// not rely on mutating the view — tentative within-round state belongs
+    /// in a [`crate::cluster::CapacityOverlay`] or local scratch.
+    fn schedule(&mut self, pending: &PendingQueue, view: &ClusterView<'_>, now: f64)
         -> SchedRound;
+
+    /// Cheap feasibility probe: could `job` be placed against `view`'s
+    /// committed capacity? The engine uses this to reject structurally
+    /// unplaceable jobs (pending on a fully idle cluster) without running a
+    /// full placement round per job. The default falls back to a
+    /// single-job [`Scheduler::schedule`] round; index-aware schedulers
+    /// override it with an O(plans · log S) probe.
+    fn can_place(&mut self, job: &PendingJob, view: &ClusterView<'_>, now: f64) -> bool {
+        let single = PendingQueue::from(vec![job.clone()]);
+        !self.schedule(&single, view, now).decisions.is_empty()
+    }
 
     /// `Some(interval)` for batch schedulers that re-solve on a fixed round
     /// cadence (Sia/Pollux-style); `None` for event-driven schedulers (HAS,

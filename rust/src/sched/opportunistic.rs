@@ -12,8 +12,8 @@
 //!   again" with a doubled tensor-parallel degree — the trial-and-error loop
 //!   the paper's motivation describes.
 
-use super::{derive_placement, Decision, PendingJob, SchedRound, Scheduler};
-use crate::cluster::{Allocation, ClusterState};
+use super::{derive_placement, Decision, PendingJob, PendingQueue, SchedRound, Scheduler};
+use crate::cluster::{Allocation, ClusterState, ClusterView};
 use crate::config::ClusterSpec;
 use crate::job::JobSpec;
 use crate::memory::{exact::exact_peak_bytes, fits, Parallelism};
@@ -83,11 +83,20 @@ impl Scheduler for Opportunistic {
         self.max_tp = spec.max_gpus_per_node().max(1);
     }
 
-    fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, _now: f64) -> SchedRound {
+    fn schedule(
+        &mut self,
+        pending: &PendingQueue,
+        view: &ClusterView<'_>,
+        _now: f64,
+    ) -> SchedRound {
+        // Memory-oblivious fastest-first is a full-scan policy by design;
+        // it reads the raw state (the capacity index orders by memory
+        // class, which this baseline deliberately ignores).
+        let snapshot = view.state();
         let mut round = SchedRound::default();
         let mut idle: Vec<u32> = snapshot.nodes.iter().map(|n| n.idle).collect();
 
-        for job in pending {
+        for job in pending.iter() {
             let Some(par) = self.user_request(&job.spec, job.attempts) else {
                 continue;
             };
@@ -158,6 +167,10 @@ mod tests {
         }
     }
 
+    fn q(jobs: Vec<PendingJob>) -> PendingQueue {
+        PendingQueue::from(jobs)
+    }
+
     #[test]
     fn user_request_small_model_is_t1() {
         let o = Opportunistic::new(&real_testbed());
@@ -181,7 +194,8 @@ mod tests {
         let spec = sia_sim();
         let mut o = Opportunistic::new(&spec);
         let snap = ClusterState::from_spec(&spec);
-        let round = o.schedule(&[pending(1, "gpt2-350m", 4)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = o.schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &view, 0.0);
         assert_eq!(round.decisions.len(), 1);
         let d = &round.decisions[0];
         // A100 nodes (312 TFLOPs) must be chosen over 2080Ti/RTX6000.
@@ -198,7 +212,8 @@ mod tests {
         let spec = sia_sim(); // fastest GPUs here are A100-40G only
         let mut o = Opportunistic::new(&spec);
         let snap = ClusterState::from_spec(&spec);
-        let round = o.schedule(&[pending(1, "gpt2-7b", 2)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = o.schedule(&q(vec![pending(1, "gpt2-7b", 2)]), &view, 0.0);
         assert_eq!(round.decisions.len(), 1);
         // user sized t for 40G max (sia_sim max = 40G): t s.t. fits 40G = 4
         // ... with only 8-GPU budget d=2; placement ok. If it fit, fine; the
@@ -217,7 +232,8 @@ mod tests {
         let spec = real_testbed();
         let mut o = Opportunistic::new(&spec);
         let snap = ClusterState::from_spec(&spec);
-        let round = o.schedule(&[pending(1, "gpt2-2.7b", 8)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = o.schedule(&q(vec![pending(1, "gpt2-2.7b", 8)]), &view, 0.0);
         assert_eq!(round.decisions.len(), 1);
         let d = &round.decisions[0];
         if d.gpu.mem_bytes <= 40 * GIB {
@@ -233,7 +249,8 @@ mod tests {
         for n in &mut snap.nodes {
             n.idle = 0;
         }
-        let round = o.schedule(&[pending(1, "gpt2-350m", 4)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = o.schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &view, 0.0);
         assert!(round.decisions.is_empty());
     }
 }

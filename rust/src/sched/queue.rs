@@ -1,0 +1,178 @@
+//! Order-preserving pending-job queue: an arrival-ordered slab plus an
+//! id → slot map.
+//!
+//! The engine used a plain `Vec<PendingJob>`, which made every dispatch
+//! removal and cancel an O(queue) `position` + `Vec::remove`. The slab
+//! keeps jobs in arrival order (FCFS iteration is unchanged) while removal
+//! by id is O(1): the slot is tombstoned and the vector compacted only when
+//! more than half the slots are holes, so removal stays amortized O(1)
+//! without ever reordering live entries.
+
+use super::PendingJob;
+use crate::job::JobId;
+use std::collections::HashMap;
+
+/// FCFS pending queue with O(1) push, O(1) removal by id, and
+/// arrival-order iteration.
+#[derive(Debug, Default)]
+pub struct PendingQueue {
+    slots: Vec<Option<PendingJob>>,
+    by_id: HashMap<JobId, usize>,
+}
+
+impl PendingQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_id.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_id.is_empty()
+    }
+
+    pub fn contains(&self, id: JobId) -> bool {
+        self.by_id.contains_key(&id)
+    }
+
+    pub fn get(&self, id: JobId) -> Option<&PendingJob> {
+        self.by_id.get(&id).and_then(|&slot| self.slots[slot].as_ref())
+    }
+
+    /// Append at the back of the arrival order.
+    pub fn push(&mut self, job: PendingJob) {
+        debug_assert!(
+            !self.by_id.contains_key(&job.spec.id),
+            "duplicate pending job {}",
+            job.spec.id
+        );
+        // Defensive in release builds: a duplicate id would otherwise leak
+        // its old slot forever.
+        if let Some(&slot) = self.by_id.get(&job.spec.id) {
+            self.slots[slot] = None;
+        }
+        self.by_id.insert(job.spec.id, self.slots.len());
+        self.slots.push(Some(job));
+    }
+
+    /// Remove by id in O(1) (amortized, counting deferred compaction).
+    pub fn remove(&mut self, id: JobId) -> Option<PendingJob> {
+        let slot = self.by_id.remove(&id)?;
+        let job = self.slots[slot].take();
+        debug_assert!(job.is_some(), "id map pointed at an empty slot");
+        self.maybe_compact();
+        job
+    }
+
+    /// Iterate live jobs in arrival order.
+    pub fn iter(&self) -> impl DoubleEndedIterator<Item = &PendingJob> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    /// Take every job out, in arrival order.
+    pub fn drain(&mut self) -> Vec<PendingJob> {
+        self.by_id.clear();
+        self.slots.drain(..).flatten().collect()
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.slots.len() >= 64 && self.by_id.len() * 2 < self.slots.len() {
+            let live: Vec<PendingJob> = std::mem::take(&mut self.slots)
+                .into_iter()
+                .flatten()
+                .collect();
+            self.by_id = live
+                .iter()
+                .enumerate()
+                .map(|(i, j)| (j.spec.id, i))
+                .collect();
+            self.slots = live.into_iter().map(Some).collect();
+        }
+    }
+}
+
+impl From<Vec<PendingJob>> for PendingQueue {
+    fn from(jobs: Vec<PendingJob>) -> Self {
+        let mut q = Self::new();
+        for j in jobs {
+            q.push(j);
+        }
+        q
+    }
+}
+
+impl FromIterator<PendingJob> for PendingQueue {
+    fn from_iter<T: IntoIterator<Item = PendingJob>>(iter: T) -> Self {
+        let mut q = Self::new();
+        for j in iter {
+            q.push(j);
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::model_by_name;
+    use crate::job::JobSpec;
+
+    fn job(id: u64) -> PendingJob {
+        PendingJob {
+            spec: JobSpec::new(id, model_by_name("gpt2-125m").unwrap(), 4, 100, 0.0),
+            attempts: 0,
+        }
+    }
+
+    #[test]
+    fn fcfs_order_survives_removals() {
+        let mut q = PendingQueue::new();
+        for id in 0..6 {
+            q.push(job(id));
+        }
+        assert_eq!(q.len(), 6);
+        assert!(q.remove(2).is_some());
+        assert!(q.remove(0).is_some());
+        assert!(q.remove(99).is_none());
+        let order: Vec<u64> = q.iter().map(|p| p.spec.id).collect();
+        assert_eq!(order, vec![1, 3, 4, 5]);
+        // Re-queued jobs go to the back, like the old Vec::push.
+        q.push(job(0));
+        let order: Vec<u64> = q.iter().map(|p| p.spec.id).collect();
+        assert_eq!(order, vec![1, 3, 4, 5, 0]);
+        assert!(q.contains(0));
+        assert_eq!(q.get(3).unwrap().spec.id, 3);
+    }
+
+    #[test]
+    fn compaction_preserves_order_and_lookup() {
+        let mut q = PendingQueue::new();
+        for id in 0..200 {
+            q.push(job(id));
+        }
+        for id in 0..150 {
+            assert!(q.remove(id).is_some(), "remove {id}");
+        }
+        assert_eq!(q.len(), 50);
+        assert!(q.slots.len() < 200, "compaction must have fired");
+        let order: Vec<u64> = q.iter().map(|p| p.spec.id).collect();
+        assert_eq!(order, (150..200).collect::<Vec<u64>>());
+        for id in 150..200 {
+            assert_eq!(q.get(id).unwrap().spec.id, id);
+        }
+        assert!(q.remove(175).is_some());
+        assert!(!q.contains(175));
+    }
+
+    #[test]
+    fn drain_empties_in_order() {
+        let mut q: PendingQueue = (0..5).map(job).collect();
+        q.remove(1);
+        let drained: Vec<u64> = q.drain().into_iter().map(|p| p.spec.id).collect();
+        assert_eq!(drained, vec![0, 2, 3, 4]);
+        assert!(q.is_empty());
+        assert_eq!(q.iter().count(), 0);
+    }
+}

@@ -17,8 +17,8 @@
 //! count — returned as `work_units` — grows superlinearly in jobs×configs,
 //! while HAS stays linear.
 
-use super::{derive_placement, Decision, PendingJob, SchedRound, Scheduler};
-use crate::cluster::{Allocation, ClusterState};
+use super::{derive_placement, Decision, PendingJob, PendingQueue, SchedRound, Scheduler};
+use crate::cluster::{Allocation, ClusterState, ClusterView};
 use crate::config::ClusterSpec;
 use crate::ilp;
 use crate::job::JobSpec;
@@ -210,7 +210,17 @@ impl Scheduler for Sia {
         self.type_names = type_names;
     }
 
-    fn schedule(&mut self, pending: &[PendingJob], snapshot: &ClusterState, _now: f64) -> SchedRound {
+    fn schedule(
+        &mut self,
+        pending: &PendingQueue,
+        view: &ClusterView<'_>,
+        _now: f64,
+    ) -> SchedRound {
+        // Sia re-solves over the whole queue; its candidate enumeration is
+        // inherently O(nodes) per round (that is the baseline's point — see
+        // Fig 5a), so it reads the raw state rather than the index.
+        let snapshot = view.state();
+        let pending: Vec<&PendingJob> = pending.iter().collect();
         let mut round = SchedRound::default();
         if pending.is_empty() {
             return round;
@@ -284,12 +294,17 @@ mod tests {
         }
     }
 
+    fn q(jobs: Vec<PendingJob>) -> PendingQueue {
+        PendingQueue::from(jobs)
+    }
+
     #[test]
     fn schedules_one_job_memory_safely() {
         let spec = sia_sim();
         let mut s = Sia::new(&spec);
         let snap = ClusterState::from_spec(&spec);
-        let round = s.schedule(&[pending(1, "gpt2-350m", 8)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = s.schedule(&q(vec![pending(1, "gpt2-350m", 8)]), &view, 0.0);
         assert_eq!(round.decisions.len(), 1);
         // goodput-optimal for a small model: the A100 pool, which also
         // happens to be memory-safe for this job
@@ -301,8 +316,9 @@ mod tests {
         let spec = real_testbed();
         let mut s = Sia::new(&spec);
         let snap = ClusterState::from_spec(&spec);
+        let view = ClusterView::build(&snap);
         let jobs: Vec<PendingJob> = (0..6).map(|i| pending(i, "gpt2-350m", 8)).collect();
-        let round = s.schedule(&jobs, &snap, 0.0);
+        let round = s.schedule(&q(jobs), &view, 0.0);
         let mut orch = crate::cluster::Orchestrator::new(&spec);
         for d in &round.decisions {
             orch.allocate(d.alloc.clone()).expect("capacity respected");
@@ -315,7 +331,8 @@ mod tests {
         let spec = real_testbed();
         let mut s = Sia::new(&spec);
         let snap = ClusterState::from_spec(&spec);
-        let round = s.schedule(&[pending(1, "gpt2-7b", 2)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = s.schedule(&q(vec![pending(1, "gpt2-7b", 2)]), &view, 0.0);
         assert_eq!(round.decisions.len(), 1);
         let d = &round.decisions[0];
         assert!(d.gpu.mem_bytes >= 40 * crate::config::GIB);
@@ -332,14 +349,15 @@ mod tests {
         let spec = parse_cluster("cluster t\nnode RTX2080Ti x2 pcie\n").unwrap();
         let mut s = Sia::new(&spec);
         let snap = ClusterState::from_spec(&spec);
-        let round0 = s.schedule(&[pending(1, "gpt2-350m", 8)], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round0 = s.schedule(&q(vec![pending(1, "gpt2-350m", 8)]), &view, 0.0);
         assert_eq!(round0.decisions.len(), 1);
         assert!(round0.decisions[0].will_oom, "naive t=1 on 11 GB must OOM");
         let retried = PendingJob {
             spec: JobSpec::new(1, model_by_name("gpt2-350m").unwrap(), 8, 10_000, 0.0),
             attempts: 3,
         };
-        let round3 = s.schedule(&[retried], &snap, 100.0);
+        let round3 = s.schedule(&q(vec![retried]), &view, 100.0);
         if let Some(d) = round3.decisions.first() {
             assert!(!d.will_oom, "after retries the user sizes memory properly");
         }
@@ -349,6 +367,7 @@ mod tests {
     fn work_grows_superlinearly_with_jobs() {
         let spec = sia_sim();
         let snap = ClusterState::from_spec(&spec);
+        let view = ClusterView::build(&snap);
         let run = |n: usize| {
             let mut s = Sia::new(&spec);
             let jobs: Vec<PendingJob> = (0..n as u64)
@@ -357,7 +376,7 @@ mod tests {
                     pending(i, model, 4 + (i % 3) as u32 * 4)
                 })
                 .collect();
-            s.schedule(&jobs, &snap, 0.0).work_units
+            s.schedule(&q(jobs), &view, 0.0).work_units
         };
         let w4 = run(4);
         let w16 = run(16);
@@ -370,7 +389,8 @@ mod tests {
         let spec = sia_sim();
         let mut s = Sia::new(&spec);
         let snap = ClusterState::from_spec(&spec);
-        let round = s.schedule(&[], &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = s.schedule(&q(vec![]), &view, 0.0);
         assert_eq!(round.work_units, 0);
         assert!(round.decisions.is_empty());
     }

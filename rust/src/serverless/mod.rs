@@ -36,7 +36,8 @@ use crate::cluster::ClusterState;
 use crate::config::{ClusterSpec, LinkKind, NodeSpec};
 use crate::engine::clock::{Clock, WallClock};
 use crate::engine::{
-    ClusterEvent, Effects, EngineConfig, PlacedJob, PlacementRecord, SchedulingEngine,
+    ClusterEvent, Effects, EngineConfig, PlacedJob, PlacementRecord, RetentionQueue,
+    SchedulingEngine,
 };
 use crate::job::{JobId, JobSpec, JobState};
 use crate::marp::{Marp, ResourcePlan};
@@ -301,6 +302,12 @@ pub struct CoordinatorConfig {
     /// instantly; tests use a nonzero value to observe `Running` jobs and
     /// exercise cancel-while-running / preempt-while-running.
     pub stub_delay_ms: u64,
+    /// Retention policy for the status table: keep at most this many
+    /// *terminal* jobs (Completed/Rejected/Cancelled), evicting the
+    /// oldest-terminal first so a long-running coordinator's memory stays
+    /// bounded. An evicted job's `GET /v1/jobs/<id>` returns 404 and it no
+    /// longer appears in listings; queued/running jobs are never evicted.
+    pub retain_terminal_jobs: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -311,6 +318,7 @@ impl Default for CoordinatorConfig {
             artifacts_dir: crate::util::repo_path("artifacts"),
             runtime_model: "gpt2-tiny".into(),
             stub_delay_ms: 0,
+            retain_terminal_jobs: 16_384,
         }
     }
 }
@@ -391,10 +399,30 @@ fn all_terminal(jobs: &HashMap<JobId, LiveJob>) -> bool {
     jobs.values().all(|j| j.state.is_terminal())
 }
 
+/// Retention: record that `id` went terminal; evict the oldest terminal
+/// jobs from the status table beyond the configured cap (same
+/// [`RetentionQueue`] mechanism the engine uses for its per-job maps).
+/// Must be called exactly once per terminal transition (terminal states
+/// never transition again, so each id is noted at most once).
+fn note_terminal(jobs: &mut HashMap<JobId, LiveJob>, retention: &mut RetentionQueue, id: JobId) {
+    debug_assert!(
+        jobs.get(&id).is_none_or(|j| j.state.is_terminal()),
+        "job {id} noted terminal while still live"
+    );
+    for old in retention.note(id) {
+        jobs.remove(&old);
+    }
+}
+
 /// Reflect engine [`Effects`] into the job-status table. Order matters: a
 /// job can be preempted by a NodeLeave *and* re-placed in the same round —
 /// the placement must win.
-fn apply_effects(fx: &Effects, jobs: &mut HashMap<JobId, LiveJob>, now: f64) {
+fn apply_effects(
+    fx: &Effects,
+    jobs: &mut HashMap<JobId, LiveJob>,
+    retention: &mut RetentionQueue,
+    now: f64,
+) {
     for id in &fx.preempted {
         if let Some(j) = jobs.get_mut(id) {
             j.state = JobState::Queued;
@@ -402,11 +430,11 @@ fn apply_effects(fx: &Effects, jobs: &mut HashMap<JobId, LiveJob>, now: f64) {
         }
     }
     for id in &fx.rejected {
-        if let Some(j) = jobs.get_mut(id) {
-            j.state = JobState::Rejected;
-            j.gpus = 0;
-            j.finish_t = Some(now);
-        }
+        let Some(j) = jobs.get_mut(id) else { continue };
+        j.state = JobState::Rejected;
+        j.gpus = 0;
+        j.finish_t = Some(now);
+        note_terminal(jobs, retention, *id);
     }
     for p in &fx.placed {
         if let Some(j) = jobs.get_mut(&p.job) {
@@ -440,6 +468,7 @@ fn coordinator_loop(
         },
     );
     let mut jobs: HashMap<JobId, LiveJob> = HashMap::new();
+    let mut retention = RetentionQueue::new(cfg.retain_terminal_jobs);
     let mut next_id: JobId = 1;
     let mut admission_rejected = 0usize;
     let mut drain_waiters: Vec<mpsc::Sender<()>> = Vec::new();
@@ -483,12 +512,13 @@ fn coordinator_loop(
                 );
                 if plans.is_empty() {
                     admission_rejected += 1;
+                    note_terminal(&mut jobs, &mut retention, id);
                     let _ = reply.send(Ok(id)); // accepted-but-rejected, visible via status
                     continue;
                 }
                 let mut fx = engine.handle(ClusterEvent::Arrival(spec_job), &mut wall);
                 fx.merge(engine.run_round(&mut wall));
-                apply_effects(&fx, &mut jobs, wall.now());
+                apply_effects(&fx, &mut jobs, &mut retention, wall.now());
                 dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
                 // Reply after dispatch so an instant stub's completion is
                 // already in the mailbox before the caller's next message —
@@ -513,6 +543,7 @@ fn coordinator_loop(
                         job.losses = res.losses.clone();
                         job.finish_t = Some(wall.now());
                         job.state = JobState::Completed;
+                        note_terminal(&mut jobs, &mut retention, res.job_id);
                     }
                     // else: stale epoch — the job was preempted and re-placed
                     // since; its current run's result is still in flight.
@@ -520,7 +551,7 @@ fn coordinator_loop(
                 // Newly freed resources: run another round, dispatching work
                 // for anything that starts.
                 fx.merge(engine.run_round(&mut wall));
-                apply_effects(&fx, &mut jobs, wall.now());
+                apply_effects(&fx, &mut jobs, &mut retention, wall.now());
                 dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
                 if all_terminal(&jobs) {
                     for w in drain_waiters.drain(..) {
@@ -554,10 +585,11 @@ fn coordinator_loop(
                 let freed = matches!(outcome, CancelOutcome::Cancelled(_));
                 let _ = reply.send(outcome);
                 if freed {
+                    note_terminal(&mut jobs, &mut retention, id);
                     // A cancel can free GPUs (running job) or just shrink the
                     // queue; either way give waiters a chance.
                     let fx = engine.run_round(&mut wall);
-                    apply_effects(&fx, &mut jobs, wall.now());
+                    apply_effects(&fx, &mut jobs, &mut retention, wall.now());
                     dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
                     if all_terminal(&jobs) {
                         for w in drain_waiters.drain(..) {
@@ -610,7 +642,7 @@ fn coordinator_loop(
                         let mut preempted = fx.preempted.clone();
                         preempted.extend(fx.rejected.iter().copied());
                         fx.merge(engine.run_round(&mut wall));
-                        apply_effects(&fx, &mut jobs, wall.now());
+                        apply_effects(&fx, &mut jobs, &mut retention, wall.now());
                         dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
                         let s = engine.cluster_state();
                         let _ = reply.send(Ok(ScaleReport {
@@ -880,6 +912,43 @@ mod tests {
         let report = h.report().unwrap();
         assert_eq!(report.n_completed, 1);
         assert_eq!(report.total_oom_retries, 1, "the preemption shows as one extra attempt");
+        h.shutdown();
+    }
+
+    #[test]
+    fn terminal_job_retention_evicts_oldest_from_status_table() {
+        let cfg = CoordinatorConfig {
+            execute_training: false,
+            retain_terminal_jobs: 2,
+            ..CoordinatorConfig::default()
+        };
+        let (h, _j) = spawn(real_testbed(), cfg);
+        let ids: Vec<_> = (0..5)
+            .map(|_| {
+                h.submit(SubmitRequest {
+                    model: "gpt2-125m".into(),
+                    global_batch: 4,
+                    total_samples: 50,
+                })
+                .unwrap()
+            })
+            .collect();
+        h.drain().unwrap();
+        // Only the newest terminal jobs remain queryable.
+        assert!(h.status(ids[0]).unwrap().is_none(), "oldest terminal job evicted");
+        assert!(h.status(ids[4]).unwrap().is_some(), "newest terminal job retained");
+        let page = h.list(&api::ListRequestV1::default()).unwrap();
+        assert_eq!(page.total, 2, "status table bounded by retain_terminal_jobs");
+        // The control plane still works after eviction.
+        let id = h
+            .submit(SubmitRequest {
+                model: "gpt2-125m".into(),
+                global_batch: 4,
+                total_samples: 50,
+            })
+            .unwrap();
+        h.drain().unwrap();
+        assert_eq!(h.status(id).unwrap().unwrap().state, JobState::Completed);
         h.shutdown();
     }
 

@@ -55,6 +55,7 @@ impl SimConfig {
             oom_detect_s: self.oom_detect_s,
             sched_work_unit_s: self.sched_work_unit_s,
             max_attempts: self.max_attempts,
+            ..EngineConfig::default()
         }
     }
 }

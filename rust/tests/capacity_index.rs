@@ -1,0 +1,333 @@
+//! The capacity index's correctness contract: every answer the index (or
+//! an overlay on top of it) gives must equal the naive full scan over the
+//! authoritative `ClusterState`, under arbitrary allocate / release /
+//! grow / shrink churn — and HAS decisions must be byte-identical whether
+//! Algorithm 1 runs against the index or the reference scans.
+
+use frenzy::cluster::{Allocation, ClusterState, ClusterView, Orchestrator};
+use frenzy::config::models::model_zoo;
+use frenzy::config::{gpu_catalog, synthetic_cluster, ClusterSpec, LinkKind, NodeSpec};
+use frenzy::job::JobSpec;
+use frenzy::marp::Marp;
+use frenzy::sched::{has::Has, PendingJob, PendingQueue, Scheduler};
+use frenzy::sim::{SimConfig, Simulator};
+use frenzy::util::prop::{Gen, Runner};
+use frenzy::workload::philly;
+
+fn arb_cluster(g: &mut Gen) -> ClusterSpec {
+    let catalog = gpu_catalog();
+    let n_nodes = g.usize_in(1, 12);
+    let nodes: Vec<NodeSpec> = (0..n_nodes)
+        .map(|_| NodeSpec {
+            gpu: g.pick(&catalog).clone(),
+            count: g.usize_in(1, 8) as u32,
+            link: if g.bool() { LinkKind::NvLink } else { LinkKind::Pcie },
+        })
+        .collect();
+    ClusterSpec { name: "arb".into(), nodes, inter_node_gbps: 12.5 }
+}
+
+/// Memory thresholds worth probing: every size present, plus off-by-one
+/// values around them and the extremes.
+fn probe_mems(state: &ClusterState) -> Vec<u64> {
+    let mut mems = vec![1u64];
+    for n in &state.nodes {
+        mems.push(n.gpu.mem_bytes.saturating_sub(1));
+        mems.push(n.gpu.mem_bytes);
+        mems.push(n.gpu.mem_bytes + 1);
+    }
+    mems
+}
+
+#[test]
+fn prop_index_matches_naive_scans_under_churn() {
+    Runner::new("index == naive scans", 0x1DEC5, 60).run(|g| {
+        let spec = arb_cluster(g);
+        let mut orch = Orchestrator::new(&spec);
+        let mut next_job: u64 = 1;
+        let mut active: Vec<u64> = Vec::new();
+        let catalog = gpu_catalog();
+        for _step in 0..g.usize_in(5, 40) {
+            match g.usize_in(0, 3) {
+                // Allocate a random feasible job.
+                0 => {
+                    let candidates: Vec<(usize, u32)> = orch
+                        .state()
+                        .nodes
+                        .iter()
+                        .filter(|n| n.idle > 0)
+                        .map(|n| (n.id, n.idle))
+                        .collect();
+                    if candidates.is_empty() {
+                        continue;
+                    }
+                    let n_parts = g.usize_in(1, candidates.len().min(3));
+                    let start = g.usize_in(0, candidates.len() - 1);
+                    let mut parts = Vec::new();
+                    for k in 0..n_parts {
+                        let (node, idle) = candidates[(start + k) % candidates.len()];
+                        parts.push((node, g.usize_in(1, idle as usize) as u32));
+                    }
+                    parts.sort_unstable();
+                    parts.dedup_by_key(|p| p.0);
+                    let job = next_job;
+                    next_job += 1;
+                    orch.allocate(Allocation { job, parts })
+                        .map_err(|e| format!("feasible allocate failed: {e}"))?;
+                    active.push(job);
+                }
+                // Release a random active job.
+                1 => {
+                    if active.is_empty() {
+                        continue;
+                    }
+                    let i = g.usize_in(0, active.len() - 1);
+                    let job = active.swap_remove(i);
+                    orch.release(job).map_err(|e| format!("release failed: {e}"))?;
+                }
+                // Elastic grow (sometimes with a never-seen GPU type).
+                2 => {
+                    let node = NodeSpec {
+                        gpu: g.pick(&catalog).clone(),
+                        count: g.usize_in(1, 8) as u32,
+                        link: LinkKind::Pcie,
+                    };
+                    orch.grow(&node);
+                }
+                // Elastic shrink of a random live node.
+                _ => {
+                    let live: Vec<usize> =
+                        orch.state().active_nodes().map(|n| n.id).collect();
+                    if live.len() <= 1 {
+                        continue; // keep at least one node around
+                    }
+                    let node = *g.pick(&live);
+                    let released =
+                        orch.shrink(node).map_err(|e| format!("shrink failed: {e}"))?;
+                    for alloc in released {
+                        active.retain(|&j| j != alloc.job);
+                    }
+                }
+            }
+            if !orch.check_index() {
+                return Err("incremental index diverged from rebuilt index".into());
+            }
+            for mem in probe_mems(orch.state()) {
+                let naive = orch.state().idle_gpus_with_mem(mem);
+                let indexed = orch.index().idle_with_mem(mem);
+                if naive != indexed {
+                    return Err(format!(
+                        "idle_with_mem({mem}) mismatch: naive {naive} vs index {indexed}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overlay_queries_match_reference_scans() {
+    Runner::new("overlay == reference scans", 0x0EA1, 80).run(|g| {
+        let spec = arb_cluster(g);
+        let mut state = ClusterState::from_spec(&spec);
+        // Random committed occupancy first.
+        for i in 0..state.nodes.len() {
+            let idle = state.nodes[i].idle;
+            if idle > 0 && g.bool() {
+                state.nodes[i].idle = g.usize_in(0, idle as usize) as u32;
+            }
+        }
+        let view = ClusterView::build(&state);
+        let mut ov = view.overlay();
+        // Reference: effective idle under tentative takes.
+        let mut eff: Vec<u32> = state.nodes.iter().map(|n| n.idle).collect();
+        for _ in 0..g.usize_in(0, 10) {
+            let takeable: Vec<usize> =
+                (0..eff.len()).filter(|&i| eff[i] > 0).collect();
+            if takeable.is_empty() {
+                break;
+            }
+            let node = *g.pick(&takeable);
+            let amount = g.usize_in(1, eff[node] as usize) as u32;
+            ov.take(node, amount);
+            eff[node] -= amount;
+        }
+
+        for mem in probe_mems(&state) {
+            let want: u32 = state
+                .nodes
+                .iter()
+                .filter(|n| n.gpu.mem_bytes >= mem)
+                .map(|n| eff[n.id])
+                .sum();
+            if ov.idle_with_mem(mem) != want {
+                return Err(format!(
+                    "overlay idle_with_mem({mem}) = {} want {want}",
+                    ov.idle_with_mem(mem)
+                ));
+            }
+            // Reference fit size + candidate list, mirroring Has::allocate_one.
+            let fit_sz = state
+                .nodes
+                .iter()
+                .filter(|n| eff[n.id] > 0 && n.gpu.mem_bytes >= mem)
+                .map(|n| n.gpu.mem_bytes)
+                .min();
+            let got_fit = ov.fit_class(mem).map(|c| view.index().class_size(c));
+            if got_fit != fit_sz {
+                return Err(format!("fit size for {mem}: {got_fit:?} want {fit_sz:?}"));
+            }
+            let Some(fit_sz) = fit_sz else { continue };
+            let fit_c = ov.fit_class(mem).expect("checked");
+            let mut nlst: Vec<usize> = state
+                .nodes
+                .iter()
+                .filter(|n| eff[n.id] > 0 && n.gpu.mem_bytes >= fit_sz)
+                .map(|n| n.id)
+                .collect();
+            nlst.sort_by_key(|&id| eff[id]);
+            if ov.avail_nodes(fit_c) != nlst.len() as u64 {
+                return Err(format!(
+                    "avail_nodes = {} want {}",
+                    ov.avail_nodes(fit_c),
+                    nlst.len()
+                ));
+            }
+            for req in [1u32, 2, 3, 5, 8, 16] {
+                let want_bf = nlst
+                    .iter()
+                    .find(|&&id| eff[id] >= req)
+                    .map(|&id| (id, eff[id]));
+                if ov.best_fit(fit_c, req) != want_bf {
+                    return Err(format!(
+                        "best_fit(req={req}) = {:?} want {want_bf:?}",
+                        ov.best_fit(fit_c, req)
+                    ));
+                }
+            }
+            let want_mi = nlst.last().map(|&id| (id, eff[id]));
+            if ov.most_idle(fit_c) != want_mi {
+                return Err(format!(
+                    "most_idle = {:?} want {want_mi:?}",
+                    ov.most_idle(fit_c)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_has_indexed_equals_naive_rounds() {
+    Runner::new("HAS indexed == naive", 0x11A5, 60).run(|g| {
+        let cluster = arb_cluster(g);
+        let zoo = model_zoo();
+        let n_jobs = g.usize_in(1, 12);
+        let jobs: Vec<PendingJob> = (0..n_jobs)
+            .map(|i| PendingJob {
+                spec: JobSpec::new(
+                    i as u64,
+                    g.pick(&zoo).clone(),
+                    (1 << g.usize_in(0, 5)) as u32,
+                    1000,
+                    0.0,
+                ),
+                attempts: 0,
+            })
+            .collect();
+        let snap = ClusterState::from_spec(&cluster);
+        let view = ClusterView::build(&snap);
+        let mut hi = Has::new(Marp::with_defaults(cluster.clone()));
+        let mut hn = Has::new(Marp::with_defaults(cluster.clone()));
+        hn.indexed = false;
+        let ri = hi.schedule(&PendingQueue::from(jobs.clone()), &view, 0.0);
+        let rn = hn.schedule(&PendingQueue::from(jobs), &view, 0.0);
+        if ri.work_units != rn.work_units {
+            return Err(format!(
+                "work units diverged: indexed {} naive {}",
+                ri.work_units, rn.work_units
+            ));
+        }
+        if ri.decisions.len() != rn.decisions.len() {
+            return Err(format!(
+                "decision counts diverged: indexed {} naive {}",
+                ri.decisions.len(),
+                rn.decisions.len()
+            ));
+        }
+        for (a, b) in ri.decisions.iter().zip(&rn.decisions) {
+            if a.job != b.job
+                || a.alloc.parts != b.alloc.parts
+                || a.par != b.par
+                || a.will_oom != b.will_oom
+            {
+                return Err(format!(
+                    "decision diverged for job {}: {:?} vs {:?}",
+                    a.job, a.alloc.parts, b.alloc.parts
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The regression the tentpole must not break: running the Philly trace
+/// prefix through the full simulator, the indexed engine produces a
+/// byte-identical placement log (and identical modeled overhead) to the
+/// pre-index reference implementation.
+#[test]
+fn philly_trace_decisions_identical_pre_post_index() {
+    let spec = synthetic_cluster(9);
+    let trace = philly::generate(120, 42);
+    let run = |indexed: bool| {
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        has.indexed = indexed;
+        let mut sim = Simulator::new(&spec, &mut has, SimConfig::default());
+        sim.submit_all(&trace);
+        let report = sim.run("philly-prefix");
+        let log = sim.engine().decision_log().to_vec();
+        (log, report)
+    };
+    let (log_idx, rep_idx) = run(true);
+    let (log_naive, rep_naive) = run(false);
+    assert!(!log_idx.is_empty(), "trace must produce placements");
+    assert_eq!(log_idx, log_naive, "placement logs must be byte-identical");
+    assert_eq!(rep_idx.sched_work_units, rep_naive.sched_work_units);
+    assert_eq!(rep_idx.n_completed, rep_naive.n_completed);
+    assert_eq!(rep_idx.n_rejected, rep_naive.n_rejected);
+    assert_eq!(rep_idx.avg_jct_s, rep_naive.avg_jct_s);
+    assert_eq!(rep_idx.makespan_s, rep_naive.makespan_s);
+}
+
+/// Same regression on the paper's sim topology with the engine's
+/// elasticity events in the mix: index answers must stay correct through
+/// mid-trace NodeJoin/NodeLeave.
+#[test]
+fn elastic_trace_decisions_identical_pre_post_index() {
+    use frenzy::engine::ClusterEvent;
+    let spec = synthetic_cluster(6);
+    let trace = philly::generate(60, 7);
+    let join = NodeSpec {
+        gpu: frenzy::config::gpu_by_name("A100-80G").unwrap(),
+        count: 4,
+        link: LinkKind::NvLink,
+    };
+    let run = |indexed: bool| {
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        has.indexed = indexed;
+        let mut sim = Simulator::new(&spec, &mut has, SimConfig::default());
+        sim.submit_all(&trace);
+        sim.schedule_event(500.0, ClusterEvent::NodeLeave(1));
+        sim.schedule_event(2000.0, ClusterEvent::NodeJoin(join.clone()));
+        let report = sim.run("philly-elastic");
+        let log = sim.engine().decision_log().to_vec();
+        assert!(sim.conservation_ok());
+        (log, report)
+    };
+    let (log_idx, rep_idx) = run(true);
+    let (log_naive, rep_naive) = run(false);
+    assert_eq!(log_idx, log_naive);
+    assert_eq!(rep_idx.sched_work_units, rep_naive.sched_work_units);
+    assert_eq!(rep_idx.n_completed, rep_naive.n_completed);
+}

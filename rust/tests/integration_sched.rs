@@ -1,17 +1,23 @@
 //! Integration: scheduler behaviour on the paper's topologies.
 
-use frenzy::cluster::{ClusterState, Orchestrator};
+use frenzy::cluster::{ClusterState, ClusterView, Orchestrator};
 use frenzy::config::models::model_by_name;
 use frenzy::config::{real_testbed, sia_sim, GIB};
 use frenzy::job::JobSpec;
 use frenzy::marp::Marp;
-use frenzy::sched::{has::Has, opportunistic::Opportunistic, sia::Sia, PendingJob, Scheduler};
+use frenzy::sched::{
+    has::Has, opportunistic::Opportunistic, sia::Sia, PendingJob, PendingQueue, Scheduler,
+};
 
 fn pending(id: u64, model: &str, batch: u32) -> PendingJob {
     PendingJob {
         spec: JobSpec::new(id, model_by_name(model).unwrap(), batch, 10_000, 0.0),
         attempts: 0,
     }
+}
+
+fn q(jobs: Vec<PendingJob>) -> PendingQueue {
+    PendingQueue::from(jobs)
 }
 
 #[test]
@@ -49,7 +55,7 @@ fn has_best_fit_preserves_big_gpus_for_big_jobs() {
 
     // The 7B job now arrives; the 80G pool is untouched, so it schedules.
     let mut has = Has::new(Marp::with_defaults(spec.clone()));
-    let round2 = has.schedule(&[pending(3, "gpt2-7b", 2)], &orch.snapshot(), 1.0);
+    let round2 = has.schedule(&q(vec![pending(3, "gpt2-7b", 2)]), &orch.view(), 1.0);
     assert_eq!(round2.decisions.len(), 1, "7B must still fit");
     let d2 = &round2.decisions[0];
     assert!(!d2.will_oom);
@@ -63,9 +69,10 @@ fn opportunistic_grabs_fast_nodes_first_and_fragments() {
     let spec = sia_sim();
     let mut opp = Opportunistic::new(&spec);
     let snap = ClusterState::from_spec(&spec);
+    let view = ClusterView::build(&snap);
     // Four small jobs: all land on the A100 nodes, leaving 2080Tis idle.
     let jobs: Vec<PendingJob> = (0..4).map(|i| pending(i, "gpt2-125m", 4)).collect();
-    let round = opp.schedule(&jobs, &snap, 0.0);
+    let round = opp.schedule(&q(jobs), &view, 0.0);
     assert_eq!(round.decisions.len(), 4);
     for d in &round.decisions {
         assert_eq!(d.gpu.name, "A100-40G", "fastest-first policy");
@@ -78,13 +85,14 @@ fn sia_allocations_feasible_under_pressure() {
     let mut sia = Sia::new(&spec);
     sia.node_limit = 500_000;
     let snap = ClusterState::from_spec(&spec);
+    let view = ClusterView::build(&snap);
     let jobs: Vec<PendingJob> = (0..20)
         .map(|i| {
             let m = ["gpt2-125m", "gpt2-350m", "gpt2-760m", "gpt2-1.3b"][i as usize % 4];
             pending(i, m, 8)
         })
         .collect();
-    let round = sia.schedule(&jobs, &snap, 0.0);
+    let round = sia.schedule(&q(jobs), &view, 0.0);
     assert!(!round.decisions.is_empty());
     let mut orch = Orchestrator::new(&spec);
     for d in &round.decisions {
@@ -103,14 +111,19 @@ fn all_schedulers_handle_empty_and_full_cluster() {
         }
         s
     };
-    let jobs = vec![pending(1, "gpt2-350m", 8)];
+    let fresh_snap = ClusterState::from_spec(&spec);
+    let fresh_view = ClusterView::build(&fresh_snap);
+    let empty_view = ClusterView::build(&empty_snap);
     let mut has = Has::new(Marp::with_defaults(spec.clone()));
     let mut opp = Opportunistic::new(&spec);
     let mut sia = Sia::new(&spec);
     for sched in [&mut has as &mut dyn Scheduler, &mut opp, &mut sia] {
-        assert!(sched.schedule(&[], &ClusterState::from_spec(&spec), 0.0).decisions.is_empty());
+        assert!(sched.schedule(&q(vec![]), &fresh_view, 0.0).decisions.is_empty());
         assert!(
-            sched.schedule(&jobs, &empty_snap, 0.0).decisions.is_empty(),
+            sched
+                .schedule(&q(vec![pending(1, "gpt2-350m", 8)]), &empty_view, 0.0)
+                .decisions
+                .is_empty(),
             "{}: nothing to give",
             sched.name()
         );

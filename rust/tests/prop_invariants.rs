@@ -1,7 +1,7 @@
 //! Property-based invariants over MARP, HAS, the orchestrator, the ILP
 //! solver, and the simulator (using the in-house prop runner).
 
-use frenzy::cluster::{ClusterState, Orchestrator};
+use frenzy::cluster::{ClusterState, ClusterView, Orchestrator};
 use frenzy::config::models::model_zoo;
 use frenzy::config::{gpu_catalog, ClusterSpec, LinkKind, NodeSpec};
 use frenzy::ilp;
@@ -11,7 +11,7 @@ use frenzy::memory::{
     activation_bytes_per_gpu, exact::exact_peak_bytes, marp_peak_bytes, static_bytes_per_gpu,
     Parallelism, TrainConfig,
 };
-use frenzy::sched::{has::Has, PendingJob, Scheduler};
+use frenzy::sched::{has::Has, PendingJob, PendingQueue, Scheduler};
 use frenzy::sim::{simulate, SimConfig};
 use frenzy::util::prop::{Gen, Runner};
 
@@ -119,7 +119,8 @@ fn prop_has_never_overallocates_and_covers_request() {
             })
             .collect();
         let snap = ClusterState::from_spec(&cluster);
-        let round = has.schedule(&pending, &snap, 0.0);
+        let view = ClusterView::build(&snap);
+        let round = has.schedule(&PendingQueue::from(pending), &view, 0.0);
         let mut orch = Orchestrator::new(&cluster);
         for d in &round.decisions {
             if d.will_oom {
