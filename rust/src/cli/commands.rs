@@ -11,10 +11,14 @@
 
 use super::Args;
 use crate::config::cluster_by_name;
+use crate::engine::EventKind;
 use crate::job::JobSpec;
-use crate::serverless::api::{JobStatusV1, ListRequestV1, PlanV1, ScaleRequestV1, state_from_str};
+use crate::serverless::api::{
+    EventV1, EventsRequestV1, JobStatusV1, ListRequestV1, PlanV1, ReportV1, ScaleRequestV1,
+    state_from_str,
+};
 use crate::serverless::client::FrenzyClient;
-use crate::serverless::{CoordinatorConfig, PredictReport, SubmitRequest};
+use crate::serverless::{CoordinatorConfig, PredictReport, SchedulerKind, SubmitRequest};
 use crate::util::table::{fmt_bytes, fmt_duration, Table};
 use crate::workload::{helios, newworkload, philly, trace};
 use anyhow::{anyhow, bail, Result};
@@ -242,6 +246,135 @@ pub fn cmd_scale(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve `--sched` into a live [`SchedulerKind`]. Interval schedulers
+/// (Sia) take their round cadence from `--round-interval` (seconds,
+/// defaulting to `default_interval_s`).
+pub fn scheduler_arg(args: &Args, default_interval_s: f64) -> Result<SchedulerKind> {
+    Ok(match args.opt_or("sched", "has") {
+        "has" | "frenzy" => SchedulerKind::Has,
+        "sia" => SchedulerKind::Sia {
+            round_interval_s: args.opt_parse_or("round-interval", default_interval_s)?,
+        },
+        "opportunistic" | "opp" => SchedulerKind::Opportunistic,
+        other => bail!("unknown scheduler '{other}' (has|sia|opportunistic)"),
+    })
+}
+
+/// One human-readable event-log line.
+fn fmt_event(e: &EventV1) -> String {
+    let detail = match &e.kind {
+        EventKind::Arrival { job } => format!("job {job} arrived"),
+        EventKind::Placed { job, epoch, attempts, gpus, d, t, parts, will_oom } => format!(
+            "job {job} placed: {gpus} GPUs (d={d} t={t}) on {parts:?} (epoch {epoch}, attempt {attempts}{})",
+            if *will_oom { ", will OOM" } else { "" }
+        ),
+        EventKind::Finished { job, epoch } => format!("job {job} finished (epoch {epoch})"),
+        EventKind::Oomed { job, epoch, requeued } => format!(
+            "job {job} OOMed (epoch {epoch}) — {}",
+            if *requeued { "requeued" } else { "attempt budget exhausted" }
+        ),
+        EventKind::Preempted { job, node } => {
+            format!("job {job} preempted (node {node} retired)")
+        }
+        EventKind::Rejected { job, reason } => {
+            format!("job {job} rejected: {}", reason.as_str())
+        }
+        EventKind::Cancelled { job, was_running } => format!(
+            "job {job} cancelled ({})",
+            if *was_running { "was running" } else { "was queued" }
+        ),
+        EventKind::NodeJoined { node, gpu, gpus } => {
+            format!("node {node} joined: {gpus}x {gpu}")
+        }
+        EventKind::NodeLeft { node, preempted } => {
+            format!("node {node} left; displaced jobs {preempted:?}")
+        }
+    };
+    format!("[{:>9.3}s] #{:<5} {detail}", e.time, e.seq)
+}
+
+/// `frenzy events [--since N] [--limit L] [--follow] [--addr A]`
+///
+/// Prints the cluster event log — the audit trail of arrivals, placements
+/// (with the chosen plan), finishes, OOMs, preemptions, rejections, and
+/// node joins/leaves. `--follow` tails the stream, polling from the last
+/// seen sequence number twice a second.
+pub fn cmd_events(args: &Args) -> Result<()> {
+    let mut c = client(args);
+    let mut req = EventsRequestV1 {
+        since: args.opt_parse_or("since", 0u64)?,
+        // Clamp like the server does: a zero limit makes no progress.
+        limit: args
+            .opt_parse_or("limit", crate::serverless::api::DEFAULT_EVENTS_LIMIT)?
+            .clamp(1, crate::serverless::api::MAX_EVENTS_LIMIT),
+    };
+    let follow = args.flag("follow");
+    let mut printed = 0usize;
+    loop {
+        let page = c.events(&req)?;
+        if page.dropped {
+            eprintln!(
+                "warning: events before seq {} were evicted from the ring — history has a gap",
+                page.first_seq
+            );
+        }
+        for e in &page.events {
+            println!("{}", fmt_event(e));
+        }
+        printed += page.events.len();
+        req.since = page.next_since;
+        // Keep paging while the log has records past this page — a one-shot
+        // invocation must print the whole retained history, not one page.
+        // An empty page means no progress is possible; never spin on it.
+        if !page.events.is_empty() && page.next_since < page.last_seq {
+            continue;
+        }
+        if !follow {
+            if printed == 0 {
+                println!("(no events)");
+            }
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(500));
+    }
+}
+
+/// `frenzy report [--addr A]` — the coordinator's streaming run report.
+pub fn cmd_report(args: &Args) -> Result<()> {
+    let mut c = client(args);
+    let r: ReportV1 = c.report()?;
+    let mut t = Table::new(&["metric", "value"])
+        .with_title(&format!("run report: {} ({})", r.scheduler, r.workload));
+    t.row_str(&["jobs", &r.n_jobs.to_string()]);
+    t.row_str(&["completed", &r.n_completed.to_string()]);
+    t.row_str(&["rejected", &r.n_rejected.to_string()]);
+    t.row_str(&["cancelled", &r.n_cancelled.to_string()]);
+    t.row_str(&["avg JCT", &fmt_duration(r.avg_jct_s)]);
+    t.row_str(&["p50 JCT (approx)", &fmt_duration(r.p50_jct_s)]);
+    t.row_str(&["p99 JCT (approx)", &fmt_duration(r.p99_jct_s)]);
+    let minmax = format!("{} / {}", fmt_duration(r.jct_min_s), fmt_duration(r.jct_max_s));
+    t.row_str(&["JCT min/max", &minmax]);
+    t.row_str(&["avg queue", &fmt_duration(r.avg_queue_s)]);
+    t.row_str(&["makespan", &fmt_duration(r.makespan_s)]);
+    t.row_str(&["OOM events", &r.n_oom_events.to_string()]);
+    t.row_str(&["OOM/preempt retries", &r.total_oom_retries.to_string()]);
+    t.row_str(&["sched overhead (wall)", &fmt_duration(r.sched_overhead_s)]);
+    t.row_str(&["utilization", &format!("{:.1}%", r.avg_utilization * 100.0)]);
+    println!("{}", t.render());
+    let occupied: Vec<&(f64, u64)> = r.jct_hist.iter().filter(|&&(_, c)| c > 0).collect();
+    if !occupied.is_empty() {
+        let mut h = Table::new(&["JCT <=", "jobs"]).with_title("JCT histogram");
+        for &&(le, count) in &occupied {
+            h.row_str(&[&fmt_duration(le), &count.to_string()]);
+        }
+        if r.jct_hist_overflow > 0 {
+            h.row_str(&["(overflow)", &r.jct_hist_overflow.to_string()]);
+        }
+        println!("{}", h.render());
+    }
+    Ok(())
+}
+
 /// `frenzy replay --workload philly --tasks 20 [--speedup 1000] [--stub-ms 20]
 ///               [--cluster real|sim] [--seed S]`
 ///
@@ -264,19 +397,24 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
         bail!("--speedup must be > 0");
     }
 
+    // Interval schedulers replay with a fast default round cadence so the
+    // wall-clock run finishes promptly; override with --round-interval.
+    let scheduler = scheduler_arg(args, 0.2)?;
     let cfg = CoordinatorConfig {
         execute_training: false,
         stub_delay_ms: stub_ms,
+        scheduler,
         ..CoordinatorConfig::default()
     };
     let (h, _join) = crate::serverless::spawn(cluster.clone(), cfg);
     println!(
-        "replaying {} jobs from '{}' through the live engine on {} ({}x speedup, {} ms stub)",
+        "replaying {} jobs from '{}' through the live engine on {} ({}x speedup, {} ms stub, {} scheduler)",
         jobs.len(),
         workload,
         cluster.name,
         speedup,
-        stub_ms
+        stub_ms,
+        args.opt_or("sched", "has"),
     );
     let mut last_submit = 0.0f64;
     for j in &jobs {
@@ -301,6 +439,7 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
     t.row_str(&["placements", &decisions.len().to_string()]);
     t.row_str(&["avg JCT (wall)", &fmt_duration(report.avg_jct_s)]);
     t.row_str(&["avg queue (wall)", &fmt_duration(report.avg_queue_s)]);
+    t.row_str(&["OOM events", &report.n_oom_events.to_string()]);
     t.row_str(&["sched overhead (wall)", &fmt_duration(report.sched_overhead_s)]);
     t.row_str(&["utilization", &format!("{:.1}%", report.avg_utilization * 100.0)]);
     println!("{}", t.render());
@@ -308,12 +447,14 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `frenzy serve [--addr A] [--cluster C] [--steps N]`
+/// `frenzy serve [--addr A] [--cluster C] [--steps N]
+///              [--sched has|sia|opportunistic] [--round-interval S]`
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let cluster = cluster_arg(args)?;
     let addr = args.opt_or("addr", DEFAULT_ADDR);
     let steps: u64 = args.opt_parse_or("steps", 50)?;
-    let cfg = CoordinatorConfig { max_real_steps: steps, ..Default::default() };
+    let scheduler = scheduler_arg(args, 30.0)?;
+    let cfg = CoordinatorConfig { max_real_steps: steps, scheduler, ..Default::default() };
     let (handle, _join) = crate::serverless::spawn(cluster, cfg);
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let local = crate::serverless::server::serve(handle, addr, stop)?;
@@ -323,6 +464,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     println!("  GET  /v1/jobs/<id>");
     println!("  POST /v1/jobs/<id>/cancel");
     println!("  POST /v1/predict         {{\"model\":\"gpt2-7b\",\"batch\":2}}  (dry run)");
+    println!("  GET  /v1/cluster/events  ?since=0&limit=500   (audit log)");
+    println!("  GET  /v1/report          (streaming run report)");
     println!("  GET  /v1/cluster | /v1/healthz    (see API.md; unversioned aliases served)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -26,6 +26,16 @@ pub trait Clock {
     /// enqueue it and return `true`; wall clocks return `false` — delivery
     /// of future events is then the driver's job (executor callbacks).
     fn schedule(&mut self, time: f64, ev: ClusterEvent) -> bool;
+
+    /// True when the driver guarantees periodic `RoundTick` delivery even
+    /// though `schedule` declines (a wall clock backed by the coordinator's
+    /// round-timer thread). Interval schedulers may then *defer* a round to
+    /// the next tick instead of rounding immediately; on a bare wall clock
+    /// (no timer) deferring would stall forever, so the engine rounds
+    /// immediately there.
+    fn delivers_ticks(&self) -> bool {
+        false
+    }
 }
 
 struct Entry {
@@ -105,11 +115,21 @@ impl Clock for VirtualClock {
 /// Real time since construction — the live coordinator's clock.
 pub struct WallClock {
     t0: Instant,
+    /// Set when a round-timer thread feeds `ClusterEvent::RoundTick` into
+    /// the driver's mailbox (see `CoordinatorConfig::round_tick_period_s`).
+    ticking: bool,
 }
 
 impl WallClock {
     pub fn new() -> Self {
-        Self { t0: Instant::now() }
+        Self { t0: Instant::now(), ticking: false }
+    }
+
+    /// A wall clock whose driver runs a round-timer thread: interval
+    /// schedulers defer rounds to timer ticks instead of rounding
+    /// immediately, matching the virtual clock's semantics.
+    pub fn with_round_timer() -> Self {
+        Self { t0: Instant::now(), ticking: true }
     }
 }
 
@@ -126,6 +146,10 @@ impl Clock for WallClock {
 
     fn schedule(&mut self, _time: f64, _ev: ClusterEvent) -> bool {
         false
+    }
+
+    fn delivers_ticks(&self) -> bool {
+        self.ticking
     }
 }
 
@@ -171,8 +195,16 @@ mod tests {
     fn wall_clock_declines_future_events_and_advances() {
         let mut w = WallClock::new();
         assert!(!w.schedule(10.0, ClusterEvent::RoundTick));
+        assert!(!w.delivers_ticks());
         let a = w.now();
         let b = w.now();
         assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn timer_backed_wall_clock_promises_ticks_but_still_declines_schedule() {
+        let mut w = WallClock::with_round_timer();
+        assert!(w.delivers_ticks());
+        assert!(!w.schedule(10.0, ClusterEvent::RoundTick), "delivery is the timer's job");
     }
 }

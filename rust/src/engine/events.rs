@@ -1,0 +1,280 @@
+//! The cluster event log: a bounded, ring-buffered audit stream of
+//! everything the scheduling engine did.
+//!
+//! Operators of an elastic heterogeneous cluster need to answer "what
+//! happened?" without replaying a trace: which nodes joined or left, which
+//! jobs were preempted by a drain, what plan a placement chose, why a job
+//! was rejected. Every [`crate::engine::ClusterEvent`] the engine processes
+//! (and every effect it produces) is appended here as an [`EventRecord`]
+//! with a **monotonically increasing sequence number** and the engine-clock
+//! timestamp.
+//!
+//! The log is a fixed-capacity ring: old records are evicted
+//! oldest-first, but sequence numbers never reset, so a client polling
+//! `GET /v1/cluster/events?since=<seq>` can detect a gap (eviction outran
+//! its polling) via the `dropped` flag instead of silently missing events.
+//! `RoundTick`s are deliberately **not** logged — an idle live coordinator
+//! ticking every few tens of milliseconds would flood the ring with noise.
+
+use crate::cluster::NodeId;
+use crate::job::JobId;
+use std::collections::VecDeque;
+
+/// Why the engine rejected a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Admission control: MARP found no feasible plan on this cluster.
+    AdmissionInfeasible,
+    /// The job exhausted its scheduling-attempt budget (OOM retries or
+    /// preemptions past `EngineConfig::max_attempts`).
+    AttemptsExhausted,
+    /// The cluster was fully idle and the scheduler still could not place
+    /// the job — it never will.
+    Unplaceable,
+    /// The run ended (simulation time cap / final drain) while the job was
+    /// still queued. Unlike `Unplaceable`, the job may have been perfectly
+    /// placeable — it just never got resources before the end.
+    RunEnded,
+}
+
+impl RejectReason {
+    /// Wire name (used by the `/v1/cluster/events` DTOs).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectReason::AdmissionInfeasible => "admission_infeasible",
+            RejectReason::AttemptsExhausted => "attempts_exhausted",
+            RejectReason::Unplaceable => "unplaceable",
+            RejectReason::RunEnded => "run_ended",
+        }
+    }
+
+    /// Inverse of [`RejectReason::as_str`].
+    pub fn from_wire(s: &str) -> Option<Self> {
+        match s {
+            "admission_infeasible" => Some(RejectReason::AdmissionInfeasible),
+            "attempts_exhausted" => Some(RejectReason::AttemptsExhausted),
+            "unplaceable" => Some(RejectReason::Unplaceable),
+            "run_ended" => Some(RejectReason::RunEnded),
+            _ => None,
+        }
+    }
+}
+
+/// One thing that happened on the cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A job entered the pending queue.
+    Arrival { job: JobId },
+    /// A job started running under the chosen plan.
+    Placed {
+        job: JobId,
+        /// Placement epoch (increments per start of the same job).
+        epoch: u64,
+        /// Scheduling attempts including this one.
+        attempts: u32,
+        gpus: u32,
+        /// Data-parallel degree of the chosen plan.
+        d: u32,
+        /// Tensor-parallel degree of the chosen plan.
+        t: u32,
+        /// Sorted `(node, gpu-count)` parts of the allocation.
+        parts: Vec<(NodeId, u32)>,
+        /// The plan is memory-oblivious and will OOM (baselines only).
+        will_oom: bool,
+    },
+    /// A running job completed; `epoch` is the run it belongs to.
+    Finished { job: JobId, epoch: u64 },
+    /// A running job hit an out-of-memory crash. `requeued` is false when
+    /// the attempt budget was exhausted (the job was rejected instead).
+    Oomed { job: JobId, epoch: u64, requeued: bool },
+    /// A job lost its GPUs to a node retirement and went back to the queue.
+    Preempted { job: JobId, node: NodeId },
+    /// A job reached the `Rejected` terminal state.
+    Rejected { job: JobId, reason: RejectReason },
+    /// A job was cancelled by the user.
+    Cancelled { job: JobId, was_running: bool },
+    /// Elasticity: a node joined the cluster.
+    NodeJoined { node: NodeId, gpu: String, gpus: u32 },
+    /// Elasticity: a node left; `preempted` lists every job it displaced
+    /// (each also gets its own `Preempted` or `Rejected` record).
+    NodeLeft { node: NodeId, preempted: Vec<JobId> },
+}
+
+/// One entry in the cluster event log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRecord {
+    /// Monotonically increasing sequence number, starting at 1. Never
+    /// reused, even after ring eviction.
+    pub seq: u64,
+    /// Engine-clock time of the event (virtual seconds in simulation,
+    /// seconds since start for a live coordinator).
+    pub time: f64,
+    pub kind: EventKind,
+}
+
+/// A page of events returned by [`EventLog::since`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventsPage {
+    /// Records with `seq > since`, ascending, at most the requested limit.
+    pub events: Vec<EventRecord>,
+    /// True when events after `since` were already evicted from the ring —
+    /// the client has a gap it can never recover from this log.
+    pub dropped: bool,
+    /// Oldest sequence number still retained (0 when the log is empty).
+    pub first_seq: u64,
+    /// Newest sequence number ever assigned (0 when nothing was logged).
+    pub last_seq: u64,
+}
+
+/// Bounded ring buffer of [`EventRecord`]s with stable sequence numbers.
+#[derive(Debug)]
+pub struct EventLog {
+    ring: VecDeque<EventRecord>,
+    cap: usize,
+    next_seq: u64,
+}
+
+impl EventLog {
+    /// `cap` is the maximum number of retained records (at least 1).
+    pub fn new(cap: usize) -> Self {
+        Self { ring: VecDeque::new(), cap: cap.max(1), next_seq: 1 }
+    }
+
+    /// Append a record; evicts the oldest when full. Returns the assigned
+    /// sequence number.
+    pub fn push(&mut self, time: f64, kind: EventKind) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(EventRecord { seq, time, kind });
+        seq
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Oldest retained sequence number (0 when empty).
+    pub fn first_seq(&self) -> u64 {
+        self.ring.front().map(|r| r.seq).unwrap_or(0)
+    }
+
+    /// Newest sequence number ever assigned (0 before the first push).
+    pub fn last_seq(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    /// Records with `seq > since`, ascending, truncated to `limit`.
+    /// `dropped` is set when the ring evicted records the client has not
+    /// seen (i.e. `since + 1 < first_seq` while such records existed).
+    pub fn since(&self, since: u64, limit: usize) -> EventsPage {
+        let first = self.first_seq();
+        let dropped = self.last_seq() > since && first > since + 1;
+        // seq values are dense (one per push), so the start offset is
+        // computable without scanning.
+        let start = if first == 0 || since < first {
+            0
+        } else {
+            (since - first + 1) as usize
+        };
+        let events: Vec<EventRecord> =
+            self.ring.iter().skip(start).take(limit).cloned().collect();
+        EventsPage { events, dropped, first_seq: first, last_seq: self.last_seq() }
+    }
+
+    /// Iterate over all retained records, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &EventRecord> {
+        self.ring.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_n(log: &mut EventLog, n: u64) {
+        for i in 0..n {
+            log.push(i as f64, EventKind::Arrival { job: i });
+        }
+    }
+
+    #[test]
+    fn seq_is_monotonic_and_dense() {
+        let mut log = EventLog::new(4);
+        push_n(&mut log, 10);
+        let seqs: Vec<u64> = log.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![7, 8, 9, 10], "ring keeps the newest, seqs never reset");
+        assert_eq!(log.first_seq(), 7);
+        assert_eq!(log.last_seq(), 10);
+        assert_eq!(log.len(), 4);
+    }
+
+    #[test]
+    fn since_before_eviction_returns_tail() {
+        let mut log = EventLog::new(100);
+        push_n(&mut log, 5);
+        let page = log.since(2, 100);
+        assert!(!page.dropped);
+        assert_eq!(page.events.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![3, 4, 5]);
+        assert_eq!(page.last_seq, 5);
+    }
+
+    #[test]
+    fn since_across_eviction_flags_dropped() {
+        let mut log = EventLog::new(3);
+        push_n(&mut log, 10); // retained: 8, 9, 10
+        let page = log.since(5, 100);
+        assert!(page.dropped, "seqs 6..=7 were evicted unseen");
+        assert_eq!(page.events.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![8, 9, 10]);
+        // A client that already saw everything is not "dropped".
+        let page = log.since(10, 100);
+        assert!(!page.dropped);
+        assert!(page.events.is_empty());
+        // The boundary: since = first_seq - 1 has no gap.
+        let page = log.since(7, 100);
+        assert!(!page.dropped);
+        assert_eq!(page.events.len(), 3);
+    }
+
+    #[test]
+    fn since_respects_limit() {
+        let mut log = EventLog::new(100);
+        push_n(&mut log, 50);
+        let page = log.since(0, 10);
+        assert_eq!(page.events.len(), 10);
+        assert_eq!(page.events.first().unwrap().seq, 1);
+        assert_eq!(page.events.last().unwrap().seq, 10);
+        // Resume from the page end.
+        let page2 = log.since(page.events.last().unwrap().seq, 10);
+        assert_eq!(page2.events.first().unwrap().seq, 11);
+    }
+
+    #[test]
+    fn empty_log_page() {
+        let log = EventLog::new(8);
+        let page = log.since(0, 10);
+        assert!(page.events.is_empty());
+        assert!(!page.dropped);
+        assert_eq!(page.first_seq, 0);
+        assert_eq!(page.last_seq, 0);
+    }
+
+    #[test]
+    fn reject_reason_bijection() {
+        for r in [
+            RejectReason::AdmissionInfeasible,
+            RejectReason::AttemptsExhausted,
+            RejectReason::Unplaceable,
+            RejectReason::RunEnded,
+        ] {
+            assert_eq!(RejectReason::from_wire(r.as_str()), Some(r));
+        }
+        assert_eq!(RejectReason::from_wire("cosmic_rays"), None);
+    }
+}

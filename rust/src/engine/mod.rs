@@ -10,7 +10,14 @@
 //! * the [`crate::cluster::Orchestrator`] (authoritative resource state),
 //! * the pending queue and per-job attempt counters,
 //! * the active [`Scheduler`] policy,
-//! * run metrics (outcomes, rejections, work units, utilization integral).
+//! * run metrics — folded **incrementally** into
+//!   [`crate::metrics::RunAggregates`] (per-state counters, JCT histogram,
+//!   queueing delay, OOM counts) so a long-running coordinator's memory
+//!   stays bounded; there is no per-job outcome vector,
+//! * the bounded [`events::EventLog`]: an audit ring of every event and
+//!   effect (arrivals, placements with the chosen plan, finishes, OOMs,
+//!   preemptions, rejections with reason, node joins/leaves), exposed live
+//!   via `GET /v1/cluster/events`.
 //!
 //! State changes enter as one [`ClusterEvent`] enum — `Arrival`, `Finish`,
 //! `Oom`, `RoundTick`, plus the elastic `NodeJoin` / `NodeLeave` (a leave
@@ -31,10 +38,14 @@
 //! trace test in `tests/integration_engine.rs` asserts exactly that.
 
 pub mod clock;
+pub mod events;
+
+pub use events::{EventKind, EventLog, EventRecord, EventsPage, RejectReason};
 
 use crate::cluster::{ClusterState, NodeId, Orchestrator};
 use crate::config::{ClusterSpec, NodeSpec};
-use crate::job::{JobId, JobOutcome, JobSpec};
+use crate::job::{JobId, JobSpec};
+use crate::metrics::RunAggregates;
 use crate::perfmodel::PerfModel;
 use crate::sched::{PendingJob, PendingQueue, Scheduler};
 use clock::Clock;
@@ -81,9 +92,12 @@ pub struct EngineConfig {
     /// (`epochs`, `submit_times`, `first_starts`) keep entries for at most
     /// this many *terminal* jobs, oldest-terminal-first eviction. Bounds a
     /// long-running coordinator's memory; running/pending jobs are never
-    /// evicted. Completed outcomes (`JobOutcome`) are the run's result set
-    /// and are not subject to this cap.
+    /// evicted. The run's result *aggregates*
+    /// ([`crate::metrics::RunAggregates`]) are O(1) and never evicted.
     pub retain_terminal: usize,
+    /// Capacity of the [`EventLog`] ring (records retained; sequence
+    /// numbers stay monotonic across eviction).
+    pub event_log_cap: usize,
 }
 
 impl Default for EngineConfig {
@@ -93,6 +107,7 @@ impl Default for EngineConfig {
             sched_work_unit_s: 2.0e-5,
             max_attempts: 6,
             retain_terminal: 16_384,
+            event_log_cap: 65_536,
         }
     }
 }
@@ -232,8 +247,10 @@ pub struct SchedulingEngine<'a> {
     cfg: EngineConfig,
     pending: PendingQueue,
     running: HashMap<JobId, RunningJob>,
-    outcomes: Vec<JobOutcome>,
-    rejected: usize,
+    /// Streaming run metrics — O(1) memory regardless of job count.
+    agg: RunAggregates,
+    /// Bounded audit ring of everything that happened.
+    events: EventLog,
     work_units: u64,
     sched_wall_s: f64,
     util: UtilIntegrator,
@@ -253,6 +270,7 @@ pub struct SchedulingEngine<'a> {
 impl<'a> SchedulingEngine<'a> {
     pub fn new(spec: &ClusterSpec, sched: &'a mut dyn Scheduler, cfg: EngineConfig) -> Self {
         let retention = RetentionQueue::new(cfg.retain_terminal);
+        let events = EventLog::new(cfg.event_log_cap);
         Self {
             orch: Orchestrator::new(spec),
             sched,
@@ -260,8 +278,8 @@ impl<'a> SchedulingEngine<'a> {
             cfg,
             pending: PendingQueue::new(),
             running: HashMap::new(),
-            outcomes: Vec::new(),
-            rejected: 0,
+            agg: RunAggregates::new(),
+            events,
             work_units: 0,
             sched_wall_s: 0.0,
             util: UtilIntegrator::new(),
@@ -295,6 +313,7 @@ impl<'a> SchedulingEngine<'a> {
         match ev {
             ClusterEvent::Arrival(spec) => {
                 self.submit_times.insert(spec.id, spec.submit_time);
+                self.events.push(now, EventKind::Arrival { job: spec.id });
                 self.pending.push(PendingJob { spec, attempts: 0 });
             }
             ClusterEvent::Finish { job, epoch } => {
@@ -304,17 +323,9 @@ impl<'a> SchedulingEngine<'a> {
                 let run = self.running.remove(&job).expect("checked above");
                 let _ = self.orch.release(job);
                 let submit = *self.submit_times.get(&job).unwrap_or(&0.0);
-                self.outcomes.push(JobOutcome {
-                    id: job,
-                    name: run.spec.name.clone(),
-                    submit_time: submit,
-                    start_time: run.first_start,
-                    finish_time: now,
-                    gpus_used: run.gpus,
-                    samples_per_sec: run.spec.total_samples as f64
-                        / (now - run.first_start).max(1e-9),
-                    attempts: run.attempts,
-                });
+                let sps = run.spec.total_samples as f64 / (now - run.first_start).max(1e-9);
+                self.agg.record_completed(submit, run.first_start, now, sps, run.attempts);
+                self.events.push(now, EventKind::Finished { job, epoch });
                 self.note_terminal(job);
                 fx.finished.push(job);
             }
@@ -324,30 +335,37 @@ impl<'a> SchedulingEngine<'a> {
                 }
                 let run = self.running.remove(&job).expect("checked above");
                 let _ = self.orch.release(job);
-                if run.attempts >= self.cfg.max_attempts {
-                    self.rejected += 1;
-                    self.note_terminal(job);
-                    fx.rejected.push(job);
-                } else {
+                self.agg.record_oom_event();
+                let requeued = run.attempts < self.cfg.max_attempts;
+                self.events.push(now, EventKind::Oomed { job, epoch, requeued });
+                if requeued {
                     self.pending.push(PendingJob { spec: run.spec, attempts: run.attempts });
+                } else {
+                    self.reject(now, job, RejectReason::AttemptsExhausted, &mut fx);
                 }
             }
             ClusterEvent::RoundTick => {
                 self.tick_queued = false;
             }
             ClusterEvent::NodeJoin(node) => {
-                self.orch.grow(&node);
+                let gpu = node.gpu.name.to_string();
+                let gpus = node.count;
+                let id = self.orch.grow(&node);
+                self.events.push(now, EventKind::NodeJoined { node: id, gpu, gpus });
                 self.sched.cluster_changed(self.orch.state());
             }
             ClusterEvent::NodeLeave(node) => {
                 if let Ok(released) = self.orch.shrink(node) {
+                    let displaced: Vec<JobId> = released.iter().map(|a| a.job).collect();
+                    self.events
+                        .push(now, EventKind::NodeLeft { node, preempted: displaced });
                     for alloc in released {
                         let Some(run) = self.running.remove(&alloc.job) else { continue };
                         if run.attempts >= self.cfg.max_attempts {
-                            self.rejected += 1;
-                            self.note_terminal(alloc.job);
-                            fx.rejected.push(alloc.job);
+                            self.reject(now, alloc.job, RejectReason::AttemptsExhausted, &mut fx);
                         } else {
+                            self.events
+                                .push(now, EventKind::Preempted { job: alloc.job, node });
                             self.pending
                                 .push(PendingJob { spec: run.spec, attempts: run.attempts });
                             fx.preempted.push(alloc.job);
@@ -360,10 +378,21 @@ impl<'a> SchedulingEngine<'a> {
         fx
     }
 
+    /// Record a rejection everywhere it must land: aggregates, event log,
+    /// retention, and the driver-visible effects.
+    fn reject(&mut self, now: f64, job: JobId, reason: RejectReason, fx: &mut Effects) {
+        self.agg.record_rejected();
+        self.events.push(now, EventKind::Rejected { job, reason });
+        self.note_terminal(job);
+        fx.rejected.push(job);
+    }
+
     /// Run one scheduling round over the pending queue, then reject
     /// structurally unplaceable jobs. Interval schedulers (Sia-style) defer
-    /// to a queued `RoundTick` on a virtual clock; a wall clock cannot
-    /// deliver future events, so they round immediately instead.
+    /// to a queued `RoundTick` on a virtual clock, or to the driver's
+    /// round-timer thread on a timer-backed wall clock
+    /// ([`Clock::delivers_ticks`]); on a bare wall clock — no way to receive
+    /// a future tick — they round immediately instead.
     pub fn run_round(&mut self, clock: &mut dyn Clock) -> Effects {
         let mut fx = Effects::default();
         let now = clock.now();
@@ -377,7 +406,7 @@ impl<'a> SchedulingEngine<'a> {
                 if !self.tick_queued && clock.schedule(due, ClusterEvent::RoundTick) {
                     self.tick_queued = true;
                 }
-                if self.tick_queued {
+                if self.tick_queued || clock.delivers_ticks() {
                     return fx;
                 }
             }
@@ -429,7 +458,7 @@ impl<'a> SchedulingEngine<'a> {
             if self.decision_log.len() >= MAX_DECISION_LOG {
                 self.decision_log.drain(..MAX_DECISION_LOG / 2);
             }
-            self.decision_log.push((d.job, parts));
+            self.decision_log.push((d.job, parts.clone()));
             let gpus = d.alloc.total_gpus();
             let (will_oom, thr, runtime) = if d.will_oom {
                 (true, 0.0, self.cfg.oom_detect_s)
@@ -443,6 +472,19 @@ impl<'a> SchedulingEngine<'a> {
                 );
                 (false, thr, pj.spec.total_samples as f64 / thr.max(1e-9))
             };
+            self.events.push(
+                now,
+                EventKind::Placed {
+                    job: d.job,
+                    epoch,
+                    attempts,
+                    gpus,
+                    d: d.par.d,
+                    t: d.par.t,
+                    parts,
+                    will_oom: d.will_oom,
+                },
+            );
             self.running.insert(
                 d.job,
                 RunningJob { spec: pj.spec.clone(), first_start, gpus, attempts, epoch },
@@ -483,23 +525,21 @@ impl<'a> SchedulingEngine<'a> {
         let now = clock.now();
         let drained = self.pending.drain();
         let mut keep = Vec::new();
-        let mut rejects: Vec<JobId> = Vec::new();
+        let mut rejects: Vec<(JobId, RejectReason)> = Vec::new();
         {
             let view = self.orch.view();
             for p in drained {
                 if p.attempts >= self.cfg.max_attempts {
-                    rejects.push(p.spec.id);
+                    rejects.push((p.spec.id, RejectReason::AttemptsExhausted));
                 } else if self.sched.can_place(&p, &view, now) {
                     keep.push(p);
                 } else {
-                    rejects.push(p.spec.id);
+                    rejects.push((p.spec.id, RejectReason::Unplaceable));
                 }
             }
         }
-        for id in rejects {
-            self.rejected += 1;
-            self.note_terminal(id);
-            fx.rejected.push(id);
+        for (id, reason) in rejects {
+            self.reject(now, id, reason, fx);
         }
         for p in keep {
             self.pending.push(p);
@@ -521,8 +561,10 @@ impl<'a> SchedulingEngine<'a> {
     }
 
     /// Remove a queued job (user cancel). True when it was pending.
-    pub fn cancel_pending(&mut self, id: JobId) -> bool {
+    pub fn cancel_pending(&mut self, id: JobId, now: f64) -> bool {
         if self.pending.remove(id).is_some() {
+            self.agg.record_cancelled();
+            self.events.push(now, EventKind::Cancelled { job: id, was_running: false });
             self.note_terminal(id);
             true
         } else {
@@ -530,24 +572,29 @@ impl<'a> SchedulingEngine<'a> {
         }
     }
 
-    /// Cancel a running job: release its resources without recording an
-    /// outcome. Any in-flight `Finish`/`Oom` for the old epoch goes stale.
-    pub fn cancel_running(&mut self, id: JobId) -> bool {
+    /// Cancel a running job: release its resources without recording a
+    /// completion. Any in-flight `Finish`/`Oom` for the old epoch goes
+    /// stale.
+    pub fn cancel_running(&mut self, id: JobId, now: f64) -> bool {
         if self.running.remove(&id).is_none() {
             return false;
         }
         let _ = self.orch.release(id);
+        self.agg.record_cancelled();
+        self.events.push(now, EventKind::Cancelled { job: id, was_running: true });
         self.note_terminal(id);
         true
     }
 
     /// Drain the pending queue into rejections (end-of-run bookkeeping:
-    /// whatever is still pending never got resources).
-    pub fn reject_remaining(&mut self) -> Vec<JobId> {
+    /// whatever is still pending never got resources). Logged as
+    /// [`RejectReason::RunEnded`] — these jobs may have been placeable, the
+    /// run just stopped first.
+    pub fn reject_remaining(&mut self, now: f64) -> Vec<JobId> {
         let ids: Vec<JobId> = self.pending.drain().into_iter().map(|p| p.spec.id).collect();
-        self.rejected += ids.len();
+        let mut fx = Effects::default();
         for &id in &ids {
-            self.note_terminal(id);
+            self.reject(now, id, RejectReason::RunEnded, &mut fx);
         }
         ids
     }
@@ -566,8 +613,22 @@ impl<'a> SchedulingEngine<'a> {
         self.orch.check_conservation()
     }
 
-    pub fn outcomes(&self) -> &[JobOutcome] {
-        &self.outcomes
+    /// The run's streaming metrics (replaces the old unbounded per-job
+    /// outcome vector).
+    pub fn aggregates(&self) -> &RunAggregates {
+        &self.agg
+    }
+
+    /// The bounded audit ring of everything that happened.
+    pub fn event_log(&self) -> &EventLog {
+        &self.events
+    }
+
+    /// Append a driver-originated record to the event log (e.g. the live
+    /// coordinator's admission-control rejections, which never reach the
+    /// engine's queue). Returns the assigned sequence number.
+    pub fn record_event(&mut self, time: f64, kind: EventKind) -> u64 {
+        self.events.push(time, kind)
     }
 
     pub fn pending_count(&self) -> usize {
@@ -579,7 +640,7 @@ impl<'a> SchedulingEngine<'a> {
     }
 
     pub fn rejected_count(&self) -> usize {
-        self.rejected
+        self.agg.n_rejected
     }
 
     pub fn work_units(&self) -> u64 {
@@ -667,9 +728,16 @@ mod tests {
         assert_eq!(fx.placed.len(), 1);
         assert_eq!(fx.finished, vec![1]);
         assert!(fx.rejected.is_empty());
-        assert_eq!(engine.outcomes().len(), 1);
+        assert_eq!(engine.aggregates().n_completed, 1);
         assert!(engine.conservation_ok());
         assert_eq!(engine.cluster_state().idle_gpus(), engine.cluster_state().total_gpus());
+        // The audit trail tells the whole story, in order.
+        let kinds: Vec<&EventKind> = engine.event_log().iter().map(|r| &r.kind).collect();
+        assert!(matches!(kinds[0], EventKind::Arrival { job: 1 }));
+        assert!(matches!(kinds[1], EventKind::Placed { job: 1, epoch: 1, will_oom: false, .. }));
+        assert!(matches!(kinds[2], EventKind::Finished { job: 1, epoch: 1 }));
+        let seqs: Vec<u64> = engine.event_log().iter().map(|r| r.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[1] == w[0] + 1), "dense monotonic seqs: {seqs:?}");
     }
 
     #[test]
@@ -744,8 +812,21 @@ mod tests {
         // once, and its stale Finish from the first placement is discarded.
         drive(&mut engine, &mut clock);
         assert!(engine.conservation_ok());
-        let finishes_of_1 = engine.outcomes().iter().filter(|o| o.id == 1).count();
+        let finishes_of_1 = engine
+            .event_log()
+            .iter()
+            .filter(|r| matches!(r.kind, EventKind::Finished { job: 1, .. }))
+            .count();
         assert!(finishes_of_1 <= 1, "a preempted job completes at most once");
+        // The leave is auditable: a NodeLeft naming job 1 and a matching
+        // Preempted record.
+        assert!(engine.event_log().iter().any(
+            |r| matches!(&r.kind, EventKind::NodeLeft { preempted, .. } if preempted == &vec![1])
+        ));
+        assert!(engine
+            .event_log()
+            .iter()
+            .any(|r| matches!(r.kind, EventKind::Preempted { job: 1, .. })));
         assert_eq!(engine.cluster_state().idle_gpus(), engine.cluster_state().total_gpus());
     }
 
@@ -801,7 +882,7 @@ mod tests {
             );
         }
         drive(&mut engine, &mut clock);
-        assert_eq!(engine.outcomes().len(), 5, "outcomes are the result set — never evicted");
+        assert_eq!(engine.aggregates().n_completed, 5, "aggregates are O(1) — never evicted");
         assert_eq!(engine.retained_terminal(), 2, "only the 2 newest terminal jobs tracked");
         assert_eq!(engine.run_epoch(0), 0, "evicted terminal job's epoch dropped");
         assert!(engine.run_epoch(4) >= 1, "recent terminal job retained");
@@ -835,10 +916,65 @@ mod tests {
             assert!(guard < 100_000);
         }
         assert_eq!(
-            engine.outcomes().len() + engine.rejected_count(),
+            engine.aggregates().n_completed + engine.rejected_count(),
             8,
             "every job reaches a terminal state"
         );
         assert_eq!(engine.cluster_state().idle_gpus(), engine.cluster_state().total_gpus());
+    }
+
+    #[test]
+    fn interval_scheduler_defers_on_timer_backed_wall_clock() {
+        use super::clock::WallClock;
+        use crate::sched::sia::Sia;
+        let spec = crate::config::sia_sim();
+        let mut sia = Sia::new(&spec);
+        sia.round_interval = 1_000.0; // far beyond this test's wall time
+        let mut engine = SchedulingEngine::new(&spec, &mut sia, EngineConfig::default());
+        let mut wall = WallClock::with_round_timer();
+        // First round ever is immediate (last_round = -inf).
+        engine.handle(ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 10_000, 0.0)), &mut wall);
+        let fx = engine.run_round(&mut wall);
+        assert_eq!(fx.placed.len(), 1, "first round executes immediately");
+        // A second arrival inside the interval must WAIT for the timer's
+        // RoundTick instead of rounding immediately.
+        engine.handle(ClusterEvent::Arrival(job(2, "gpt2-350m", 8, 10_000, 0.0)), &mut wall);
+        let fx = engine.run_round(&mut wall);
+        assert!(fx.placed.is_empty(), "deferred to the round timer");
+        assert!(engine.is_pending(2));
+        // On a bare wall clock (no timer thread) deferring would stall
+        // forever, so the engine rounds immediately — the pre-timer
+        // behavior.
+        let mut sia2 = Sia::new(&spec);
+        sia2.round_interval = 1_000.0;
+        let mut engine2 = SchedulingEngine::new(&spec, &mut sia2, EngineConfig::default());
+        let mut bare = WallClock::new();
+        engine2.handle(ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 10_000, 0.0)), &mut bare);
+        engine2.run_round(&mut bare);
+        engine2.handle(ClusterEvent::Arrival(job(2, "gpt2-350m", 8, 10_000, 0.0)), &mut bare);
+        let fx = engine2.run_round(&mut bare);
+        assert_eq!(fx.placed.len(), 1, "bare wall clock rounds immediately");
+    }
+
+    #[test]
+    fn cancelled_jobs_count_in_aggregates_and_events() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+        let mut clock = VirtualClock::new();
+        engine.handle(ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 10_000, 0.0)), &mut clock);
+        engine.handle(ClusterEvent::Arrival(job(2, "gpt2-350m", 8, 10_000, 0.0)), &mut clock);
+        let fx = engine.run_round(&mut clock);
+        assert_eq!(fx.placed.len(), 2);
+        assert!(engine.cancel_running(1, clock.now()));
+        assert!(!engine.cancel_running(1, clock.now()), "already cancelled");
+        assert_eq!(engine.aggregates().n_cancelled, 1);
+        assert!(engine
+            .event_log()
+            .iter()
+            .any(|r| matches!(r.kind, EventKind::Cancelled { job: 1, was_running: true })));
+        drive(&mut engine, &mut clock);
+        assert_eq!(engine.aggregates().n_completed, 1, "only job 2 completes");
+        assert!(engine.conservation_ok());
     }
 }

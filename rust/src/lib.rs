@@ -19,7 +19,8 @@
 //! }
 //! ```
 //!
-//! Architecture (see DESIGN.md):
+//! Architecture (one-page map in `ARCHITECTURE.md`; design rationale in
+//! DESIGN.md):
 //! * [`memory`] / [`marp`] — the Memory-Aware Resource Predictor (§IV.A),
 //! * [`sched`] — HAS (Algorithm 1) plus the Sia and Opportunistic baselines,
 //! * [`cluster`] — the Resource Orchestrator (with elastic grow/shrink)
@@ -28,17 +29,23 @@
 //! * [`engine`] — the unified event-driven scheduling engine: one
 //!   [`engine::ClusterEvent`] loop (arrival, finish, OOM, round ticks,
 //!   node join/leave) behind a clock abstraction, shared by the simulator
-//!   and the live coordinator,
+//!   and the live coordinator; it folds results into streaming
+//!   [`metrics::RunAggregates`] and records every event in a bounded
+//!   [`engine::EventLog`] audit ring,
 //! * [`sim`] — discrete-event cluster simulator (the "PAI simulator"
 //!   stand-in): a thin trace feeder over [`engine`] on a virtual clock,
 //! * [`workload`] — NewWorkload / Philly / Helios generators,
-//! * [`serverless`] — the v1 control plane: coordinator plus
-//!   [`serverless::api`] (typed DTOs), [`serverless::server`] (thread-pool
-//!   HTTP front-end), and [`serverless::client`] (the blocking Rust SDK).
-//!   Every route is documented with request/response examples in `API.md`
-//!   at the repository root,
+//! * [`serverless`] — the v1 control plane: coordinator (round-timer
+//!   thread for interval schedulers, live OOM modeling for the baselines)
+//!   plus [`serverless::api`] (typed DTOs), [`serverless::server`]
+//!   (thread-pool HTTP front-end), and [`serverless::client`] (the
+//!   blocking Rust SDK). Observability rides along: the event log at
+//!   `GET /v1/cluster/events` and the streaming report at
+//!   `GET /v1/report`. Every route is documented with request/response
+//!   examples in `API.md` at the repository root,
 //! * [`runtime`] — PJRT executor running the AOT-compiled JAX/Pallas
 //!   training step (the request path never touches python),
+//! * [`metrics`] — streaming run aggregates → [`metrics::RunReport`],
 //! * [`exp`] — harnesses regenerating every figure in the paper.
 
 pub mod bench_harness;

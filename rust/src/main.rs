@@ -1,16 +1,18 @@
 //! `frenzy` — the serverless LLM-training leader binary.
 //!
 //! ```text
-//! frenzy serve    [--addr 127.0.0.1:8315] [--cluster real]
+//! frenzy serve    [--addr 127.0.0.1:8315] [--cluster real] [--sched has]
 //! frenzy submit   --model gpt2-350m --batch 8 --samples 400 [--addr ...]
 //! frenzy status   <job-id> [--addr ...]
 //! frenzy cancel   <job-id> [--addr ...]
 //! frenzy list     [--state running] [--offset 0] [--limit 100] [--addr ...]
+//! frenzy events   [--since 0] [--limit 500] [--follow] [--addr ...]
+//! frenzy report   [--addr ...]
 //! frenzy predict  --model gpt2-7b --batch 2 [--addr ... | --cluster real]
 //! frenzy scale    --join --gpu A100-80G --count 4 --link nvlink [--addr ...]
 //! frenzy scale    --leave 2 [--addr ...]
 //! frenzy simulate --workload newworkload --tasks 30 --sched has [--seed 11]
-//! frenzy replay   --workload philly --tasks 20 [--speedup 1000]
+//! frenzy replay   --workload philly --tasks 20 [--speedup 1000] [--sched has]
 //! frenzy train    --model gpt2-tiny --steps 50        (direct PJRT run)
 //! frenzy fig4 | fig5a | fig5b | fig6 | figures
 //! frenzy trace    --workload philly --n 100 --out trace.csv
@@ -48,17 +50,22 @@ fn usage() -> &'static str {
 
 USAGE:
   frenzy serve    [--addr 127.0.0.1:8315] [--cluster real|sim] [--steps N]
+                  [--sched has|sia|opportunistic] [--round-interval S]
   frenzy submit   --model <name> --batch <B> --samples <N> [--addr A]
   frenzy status   <job-id> [--addr A]
   frenzy cancel   <job-id> [--addr A]
   frenzy list     [--state queued|running|completed|rejected|cancelled]
                   [--offset O] [--limit L] [--addr A]
+  frenzy events   [--since SEQ] [--limit L] [--follow] [--addr A]
+                  (cluster audit log: placements, OOMs, joins/leaves, ...)
+  frenzy report   [--addr A]    (streaming run report: JCT histogram, counters)
   frenzy predict  --model <name> --batch <B> [--addr A | --cluster real|sim]
   frenzy scale    --join --gpu <type> [--count N] [--link nvlink|pcie] [--addr A]
   frenzy scale    --leave <node> [--addr A]
   frenzy simulate --workload newworkload|philly|helios --tasks <n>
                   --sched has|sia|opportunistic [--cluster real|sim] [--seed S]
   frenzy replay   --workload <w> --tasks <n> [--speedup X] [--stub-ms M]
+                  [--sched has|sia|opportunistic] [--round-interval S]
                   [--cluster real|sim] [--seed S]   (trace through the LIVE engine)
   frenzy train    --model gpt2-tiny [--steps N]
   frenzy fig4 | fig5a | fig5b | fig6 | figures
@@ -105,6 +112,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("status") => commands::cmd_status(args),
         Some("cancel") => commands::cmd_cancel(args),
         Some("list") => commands::cmd_list(args),
+        Some("events") => commands::cmd_events(args),
+        Some("report") => commands::cmd_report(args),
         Some("scale") => commands::cmd_scale(args),
         Some("serve") => commands::cmd_serve(args),
         Some("replay") => commands::cmd_replay(args),

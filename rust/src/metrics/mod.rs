@@ -1,12 +1,194 @@
-//! Run-level metrics: JCT / queue-time / samples-per-second aggregation and
-//! report rendering. Consumed by the simulator, the serverless coordinator,
-//! and every figure harness.
+//! Run-level metrics: streaming JCT / queue-time / samples-per-second
+//! aggregation and report rendering. Consumed by the simulator, the
+//! serverless coordinator, and every figure harness.
+//!
+//! The central type is [`RunAggregates`], a **bounded-memory streaming
+//! accumulator**: both the simulator and the live coordinator fold every
+//! terminal job into it incrementally instead of retaining a per-job
+//! outcome vector (which grew without bound in a long-running
+//! coordinator). A finished [`RunReport`] is a snapshot of those
+//! aggregates plus run-level counters, rendered to JSON for
+//! `GET /v1/report` and the figure harnesses.
 
 use crate::job::JobOutcome;
 use crate::util::json::Json;
-use crate::util::stats::Sample;
+use crate::util::stats::{Histogram, Running};
 
-/// Aggregated results of one scheduling run (simulated or live).
+/// Number of exponential JCT histogram buckets (1 ms · 2^i bounds); one
+/// overflow bucket is kept on top. The 1 ms floor keeps sub-second runs
+/// (live replays with the instant stub) resolvable instead of collapsing
+/// into a single bucket; the last bound, 0.001 · 2^33 s ≈ 99 days, is far
+/// beyond any simulated or live run.
+pub const JCT_HIST_BUCKETS: usize = 34;
+
+/// Smallest JCT histogram bound, seconds.
+pub const JCT_HIST_START_S: f64 = 1e-3;
+
+/// Streaming aggregates of one scheduling run (simulated or live).
+///
+/// Memory is O(1) in the number of jobs: means/min/max are Welford
+/// accumulators ([`Running`]) and the JCT distribution is a fixed-bucket
+/// exponential [`Histogram`]. Percentiles derived from the histogram are
+/// therefore *approximate* (bucket upper bounds), unlike the exact
+/// per-outcome percentiles the pre-streaming report computed — see
+/// `EXPERIMENTS.md` for how to read them.
+#[derive(Debug, Clone)]
+pub struct RunAggregates {
+    /// Jobs that completed all their samples.
+    pub n_completed: usize,
+    /// Jobs rejected (admission, attempt budget, or structurally
+    /// unplaceable).
+    pub n_rejected: usize,
+    /// Jobs cancelled by the user.
+    pub n_cancelled: usize,
+    /// OOM events observed (each requeues or rejects a job).
+    pub n_oom_events: u64,
+    jct: Running,
+    queue: Running,
+    sps: Running,
+    jct_hist: Histogram,
+    makespan: f64,
+    oom_retries: u64,
+}
+
+impl Default for RunAggregates {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunAggregates {
+    pub fn new() -> Self {
+        Self {
+            n_completed: 0,
+            n_rejected: 0,
+            n_cancelled: 0,
+            n_oom_events: 0,
+            jct: Running::new(),
+            queue: Running::new(),
+            sps: Running::new(),
+            jct_hist: Histogram::exponential(JCT_HIST_START_S, 2.0, JCT_HIST_BUCKETS),
+            makespan: 0.0,
+            oom_retries: 0,
+        }
+    }
+
+    /// Fold one completed job into the aggregates.
+    pub fn record_completed(
+        &mut self,
+        submit_time: f64,
+        start_time: f64,
+        finish_time: f64,
+        samples_per_sec: f64,
+        attempts: u32,
+    ) {
+        self.n_completed += 1;
+        let jct = finish_time - submit_time;
+        self.jct.push(jct);
+        self.jct_hist.record(jct);
+        self.queue.push(start_time - submit_time);
+        self.sps.push(samples_per_sec);
+        self.makespan = self.makespan.max(finish_time);
+        self.oom_retries += attempts.saturating_sub(1) as u64;
+    }
+
+    /// Convenience: fold a [`JobOutcome`] record.
+    pub fn record_outcome(&mut self, o: &JobOutcome) {
+        self.record_completed(
+            o.submit_time,
+            o.start_time,
+            o.finish_time,
+            o.samples_per_sec,
+            o.attempts,
+        );
+    }
+
+    pub fn record_rejected(&mut self) {
+        self.n_rejected += 1;
+    }
+
+    pub fn record_cancelled(&mut self) {
+        self.n_cancelled += 1;
+    }
+
+    pub fn record_oom_event(&mut self) {
+        self.n_oom_events += 1;
+    }
+
+    /// Jobs that reached any terminal state.
+    pub fn n_terminal(&self) -> usize {
+        self.n_completed + self.n_rejected + self.n_cancelled
+    }
+
+    /// Latest finish time seen (0 when nothing completed).
+    pub fn makespan_s(&self) -> f64 {
+        self.makespan
+    }
+
+    /// Total OOM-retry / preemption re-placements across completed jobs
+    /// (attempts beyond the first).
+    pub fn total_oom_retries(&self) -> u64 {
+        self.oom_retries
+    }
+
+    /// Mean JCT in seconds (NaN when nothing completed — mirrors the
+    /// pre-streaming report).
+    pub fn avg_jct_s(&self) -> f64 {
+        self.jct.mean()
+    }
+
+    /// Smallest observed JCT (0 when nothing completed).
+    pub fn jct_min_s(&self) -> f64 {
+        if self.n_completed == 0 {
+            0.0
+        } else {
+            self.jct.min()
+        }
+    }
+
+    /// Largest observed JCT (0 when nothing completed).
+    pub fn jct_max_s(&self) -> f64 {
+        if self.n_completed == 0 {
+            0.0
+        } else {
+            self.jct.max()
+        }
+    }
+
+    pub fn avg_queue_s(&self) -> f64 {
+        self.queue.mean()
+    }
+
+    pub fn min_queue_s(&self) -> f64 {
+        if self.n_completed == 0 {
+            0.0
+        } else {
+            self.queue.min()
+        }
+    }
+
+    pub fn avg_samples_per_sec(&self) -> f64 {
+        self.sps.mean()
+    }
+
+    /// The JCT histogram (exponential bounds + overflow bucket).
+    pub fn jct_histogram(&self) -> &Histogram {
+        &self.jct_hist
+    }
+
+    /// Approximate JCT percentile from the histogram: the upper bound of
+    /// the bucket the quantile falls in, clamped to the exact max.
+    pub fn jct_percentile_s(&self, p: f64) -> f64 {
+        if self.n_completed == 0 {
+            return f64::NAN;
+        }
+        self.jct_hist.quantile(p / 100.0).min(self.jct_max_s())
+    }
+}
+
+/// Aggregated results of one scheduling run (simulated or live) — a
+/// snapshot of [`RunAggregates`] plus run-level counters, ready for
+/// rendering (`GET /v1/report`, figure JSON under `results/`).
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub scheduler: String,
@@ -14,13 +196,25 @@ pub struct RunReport {
     pub n_jobs: usize,
     pub n_completed: usize,
     pub n_rejected: usize,
+    /// Jobs cancelled by the user (live runs; always 0 in simulation).
+    pub n_cancelled: usize,
     pub avg_jct_s: f64,
+    /// Approximate (histogram-bucket) median JCT — see `EXPERIMENTS.md`.
     pub p50_jct_s: f64,
+    /// Approximate (histogram-bucket) 99th-percentile JCT.
     pub p99_jct_s: f64,
+    pub jct_min_s: f64,
+    pub jct_max_s: f64,
+    /// JCT histogram as `(upper_bound_s, count)` pairs, exponential bounds.
+    pub jct_hist: Vec<(f64, u64)>,
+    /// Count of JCTs above the last finite bound.
+    pub jct_hist_overflow: u64,
     pub avg_queue_s: f64,
     pub avg_samples_per_sec: f64,
     pub makespan_s: f64,
     pub total_oom_retries: u64,
+    /// OOM events observed during the run (requeues and rejects).
+    pub n_oom_events: u64,
     /// Total scheduler algorithmic work (see `SchedRound::work_units`).
     pub sched_work_units: u64,
     /// Total wall-clock the scheduler itself consumed (measured).
@@ -30,7 +224,57 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// Build from outcomes + run-level counters.
+    /// Snapshot streaming aggregates into a report. `extra_rejected` covers
+    /// rejections recorded outside the aggregates (the live coordinator's
+    /// admission-control rejections).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_aggregates(
+        scheduler: &str,
+        workload: &str,
+        agg: &RunAggregates,
+        extra_rejected: usize,
+        sched_work_units: u64,
+        sched_overhead_s: f64,
+        avg_utilization: f64,
+    ) -> RunReport {
+        let n_rejected = agg.n_rejected + extra_rejected;
+        let mut jct_hist = Vec::with_capacity(JCT_HIST_BUCKETS);
+        let mut overflow = 0u64;
+        for (bound, count) in agg.jct_histogram().buckets() {
+            if bound.is_finite() {
+                jct_hist.push((bound, count));
+            } else {
+                overflow = count;
+            }
+        }
+        RunReport {
+            scheduler: scheduler.to_string(),
+            workload: workload.to_string(),
+            n_jobs: agg.n_completed + n_rejected + agg.n_cancelled,
+            n_completed: agg.n_completed,
+            n_rejected,
+            n_cancelled: agg.n_cancelled,
+            avg_jct_s: agg.avg_jct_s(),
+            p50_jct_s: agg.jct_percentile_s(50.0),
+            p99_jct_s: agg.jct_percentile_s(99.0),
+            jct_min_s: agg.jct_min_s(),
+            jct_max_s: agg.jct_max_s(),
+            jct_hist,
+            jct_hist_overflow: overflow,
+            avg_queue_s: agg.avg_queue_s(),
+            avg_samples_per_sec: agg.avg_samples_per_sec(),
+            makespan_s: agg.makespan_s(),
+            total_oom_retries: agg.total_oom_retries(),
+            n_oom_events: agg.n_oom_events,
+            sched_work_units,
+            sched_overhead_s,
+            avg_utilization,
+        }
+    }
+
+    /// Build from a slice of outcomes + run-level counters (folds the
+    /// outcomes through [`RunAggregates`]; kept for harnesses and tests
+    /// that still hold explicit outcome records).
     #[allow(clippy::too_many_arguments)]
     pub fn from_outcomes(
         scheduler: &str,
@@ -41,35 +285,19 @@ impl RunReport {
         sched_overhead_s: f64,
         avg_utilization: f64,
     ) -> RunReport {
-        let mut jct = Sample::new();
-        let mut queue = Sample::new();
-        let mut sps = Sample::new();
-        let mut makespan: f64 = 0.0;
-        let mut retries = 0u64;
+        let mut agg = RunAggregates::new();
         for o in outcomes {
-            jct.push(o.jct());
-            queue.push(o.queue_time());
-            sps.push(o.samples_per_sec);
-            makespan = makespan.max(o.finish_time);
-            retries += (o.attempts.saturating_sub(1)) as u64;
+            agg.record_outcome(o);
         }
-        RunReport {
-            scheduler: scheduler.to_string(),
-            workload: workload.to_string(),
-            n_jobs: outcomes.len() + n_rejected,
-            n_completed: outcomes.len(),
+        Self::from_aggregates(
+            scheduler,
+            workload,
+            &agg,
             n_rejected,
-            avg_jct_s: jct.mean(),
-            p50_jct_s: jct.median(),
-            p99_jct_s: jct.p99(),
-            avg_queue_s: queue.mean(),
-            avg_samples_per_sec: sps.mean(),
-            makespan_s: makespan,
-            total_oom_retries: retries,
             sched_work_units,
             sched_overhead_s,
             avg_utilization,
-        }
+        )
     }
 
     pub fn to_json(&self) -> Json {
@@ -79,16 +307,31 @@ impl RunReport {
             .set("n_jobs", self.n_jobs)
             .set("n_completed", self.n_completed)
             .set("n_rejected", self.n_rejected)
+            .set("n_cancelled", self.n_cancelled)
             .set("avg_jct_s", self.avg_jct_s)
             .set("p50_jct_s", self.p50_jct_s)
             .set("p99_jct_s", self.p99_jct_s)
+            .set("jct_min_s", self.jct_min_s)
+            .set("jct_max_s", self.jct_max_s)
             .set("avg_queue_s", self.avg_queue_s)
             .set("avg_samples_per_sec", self.avg_samples_per_sec)
             .set("makespan_s", self.makespan_s)
             .set("total_oom_retries", self.total_oom_retries)
+            .set("n_oom_events", self.n_oom_events)
             .set("sched_work_units", self.sched_work_units)
             .set("sched_overhead_s", self.sched_overhead_s)
             .set("avg_utilization", self.avg_utilization);
+        let hist: Vec<Json> = self
+            .jct_hist
+            .iter()
+            .map(|&(le, count)| {
+                let mut b = Json::obj();
+                b.set("le_s", le).set("count", count);
+                b
+            })
+            .collect();
+        j.set("jct_hist", Json::Arr(hist));
+        j.set("jct_hist_overflow", self.jct_hist_overflow);
         j
     }
 
@@ -148,6 +391,73 @@ mod tests {
         assert!((r.avg_samples_per_sec - 7.5).abs() < 1e-9);
         assert_eq!(r.makespan_s, 220.0);
         assert_eq!(r.total_oom_retries, 1);
+        assert_eq!(r.jct_min_s, 110.0);
+        assert_eq!(r.jct_max_s, 220.0);
+        assert_eq!(r.jct_hist.iter().map(|&(_, c)| c).sum::<u64>() + r.jct_hist_overflow, 2);
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        // Folding outcomes one by one must equal the batch constructor.
+        let outs: Vec<JobOutcome> = (1..=20)
+            .map(|i| outcome(i as f64, i as f64 + 5.0, i as f64 * 37.0 + 10.0, i as f64, 1))
+            .collect();
+        let batch = RunReport::from_outcomes("s", "w", &outs, 2, 7, 0.1, 0.5);
+        let mut agg = RunAggregates::new();
+        for o in &outs {
+            agg.record_outcome(o);
+        }
+        let streamed = RunReport::from_aggregates("s", "w", &agg, 2, 7, 0.1, 0.5);
+        assert_eq!(batch.n_jobs, streamed.n_jobs);
+        assert!((batch.avg_jct_s - streamed.avg_jct_s).abs() < 1e-9);
+        assert_eq!(batch.p50_jct_s, streamed.p50_jct_s);
+        assert_eq!(batch.p99_jct_s, streamed.p99_jct_s);
+        assert_eq!(batch.jct_hist, streamed.jct_hist);
+        assert_eq!(batch.makespan_s, streamed.makespan_s);
+    }
+
+    #[test]
+    fn approx_percentiles_bound_the_exact_values() {
+        // Histogram percentiles are bucket upper bounds: never below the
+        // quantile's order statistic and <= 2x the interpolated exact
+        // percentile (factor-2 buckets), capped at the exact max. On this
+        // uniform grid both bounds are easy to state numerically.
+        let outs: Vec<JobOutcome> =
+            (1..=100).map(|i| outcome(0.0, 0.0, i as f64 * 3.0, 1.0, 1)).collect();
+        let r = RunReport::from_outcomes("s", "w", &outs, 0, 0, 0.0, 0.0);
+        assert!(r.p50_jct_s >= 150.0 && r.p50_jct_s <= 300.0, "p50 {}", r.p50_jct_s);
+        assert!(r.p99_jct_s >= 297.0 && r.p99_jct_s <= 300.0, "p99 {}", r.p99_jct_s);
+        assert_eq!(r.jct_max_s, 300.0);
+    }
+
+    #[test]
+    fn sub_second_jcts_keep_percentile_resolution() {
+        // The 1 ms bucket floor: a run whose JCTs are all sub-second (live
+        // replays with the instant stub) must not collapse into one bucket
+        // with p50 == p99 == max.
+        let outs: Vec<JobOutcome> = (1..=100)
+            .map(|i| outcome(0.0, 0.0, i as f64 * 0.005, 1.0, 1))
+            .collect(); // JCTs 5 ms .. 500 ms
+        let r = RunReport::from_outcomes("s", "w", &outs, 0, 0, 0.0, 0.0);
+        assert!(r.p50_jct_s <= 0.512, "p50 {} must stay near the exact 0.25", r.p50_jct_s);
+        assert!(r.p50_jct_s < r.p99_jct_s, "sub-second distribution keeps shape");
+        assert!((r.jct_max_s - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cancelled_and_oom_counters() {
+        let mut agg = RunAggregates::new();
+        agg.record_completed(0.0, 1.0, 10.0, 5.0, 3);
+        agg.record_cancelled();
+        agg.record_rejected();
+        agg.record_oom_event();
+        agg.record_oom_event();
+        let r = RunReport::from_aggregates("s", "w", &agg, 1, 0, 0.0, 0.0);
+        assert_eq!(r.n_jobs, 4, "completed + 2 rejected + cancelled");
+        assert_eq!(r.n_cancelled, 1);
+        assert_eq!(r.n_rejected, 2);
+        assert_eq!(r.n_oom_events, 2);
+        assert_eq!(r.total_oom_retries, 2, "attempts 3 => 2 retries");
     }
 
     #[test]
@@ -164,5 +474,7 @@ mod tests {
         let j = r.to_json();
         assert!(j.get("scheduler").is_some());
         assert!(j.get("avg_jct_s").is_some());
+        assert!(j.get("jct_hist").is_some());
+        assert!(j.get("n_cancelled").is_some());
     }
 }

@@ -10,8 +10,10 @@
 //! The full route table lives in `API.md` at the repository root.
 
 use crate::config::LinkKind;
+use crate::engine::{EventKind, EventRecord, EventsPage, RejectReason};
 use crate::job::JobState;
 use crate::marp::ResourcePlan;
+use crate::metrics::RunReport;
 use crate::serverless::{GpuTypeInfo, JobStatus, ListPage, PredictReport, ScaleReport};
 use crate::util::json::Json;
 
@@ -19,6 +21,10 @@ use crate::util::json::Json;
 pub const DEFAULT_LIST_LIMIT: usize = 100;
 /// Hard cap on a single list page.
 pub const MAX_LIST_LIMIT: usize = 1000;
+/// Default page size for `GET /v1/cluster/events` when `limit` is absent.
+pub const DEFAULT_EVENTS_LIMIT: usize = 500;
+/// Hard cap on a single events page.
+pub const MAX_EVENTS_LIMIT: usize = 5000;
 
 /// Wire name of a [`JobState`].
 pub fn state_to_str(s: JobState) -> &'static str {
@@ -84,6 +90,10 @@ impl ApiError {
 }
 
 /// `POST /v1/jobs` request body.
+///
+/// JSON shape: `{"model":"gpt2-350m","batch":8,"samples":400}` — `model`
+/// is a zoo name (see `frenzy models`), `batch` the global batch size
+/// (1..=2^32-1), `samples` the total sample budget (> 0).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SubmitRequestV1 {
     pub model: String,
@@ -120,6 +130,8 @@ impl SubmitRequestV1 {
 }
 
 /// `POST /v1/jobs` response body.
+///
+/// JSON shape: `{"job_id":7}`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SubmitResponseV1 {
     pub job_id: u64,
@@ -140,6 +152,12 @@ impl SubmitResponseV1 {
 }
 
 /// `GET /v1/jobs/<id>` response body; also the element type of a list page.
+///
+/// JSON shape: `{"job_id":7,"name":"gpt2-350m-b8-#7","state":"running",
+/// "gpus":4,"losses":[{"step":0,"loss":9.7}],"submit_time":12.5,
+/// "finish_time":null}` — `state` is one of
+/// `queued|running|completed|rejected|cancelled`; `finish_time` is `null`
+/// until terminal.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobStatusV1 {
     pub job_id: u64,
@@ -219,6 +237,8 @@ impl JobStatusV1 {
 }
 
 /// `POST /v1/jobs/<id>/cancel` response body.
+///
+/// JSON shape: `{"job_id":7,"state":"cancelled","cancelled":true}`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CancelResponseV1 {
     pub job_id: u64,
@@ -249,6 +269,9 @@ impl CancelResponseV1 {
 }
 
 /// `GET /v1/jobs` query parameters.
+///
+/// Query shape: `?state=running&offset=0&limit=100` — all optional;
+/// `limit` is clamped to [`MAX_LIST_LIMIT`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct ListRequestV1 {
     /// Only return jobs in this state (all states when `None`).
@@ -304,6 +327,9 @@ impl ListRequestV1 {
 }
 
 /// `GET /v1/jobs` response body.
+///
+/// JSON shape: `{"jobs":[<JobStatusV1>...],"total":25,"offset":0,
+/// "limit":100}` — `total` counts matches before pagination.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ListResponseV1 {
     pub jobs: Vec<JobStatusV1>,
@@ -348,6 +374,8 @@ impl ListResponseV1 {
 
 /// `POST /v1/predict` request body: a dry-run MARP query — nothing is
 /// enqueued, no job id is allocated.
+///
+/// JSON shape: `{"model":"gpt2-7b","batch":2}`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PredictRequestV1 {
     pub model: String,
@@ -376,6 +404,10 @@ impl PredictRequestV1 {
 }
 
 /// One MARP resource plan on the wire.
+///
+/// JSON shape: `{"d":2,"t":2,"gpus":4,"min_gpu_mem":42949672960,
+/// "predicted_bytes":39583000000,"est_samples_per_sec":61.2,
+/// "est_efficiency":0.83}`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlanV1 {
     /// Data-parallel degree.
@@ -499,6 +531,10 @@ impl GpuTypePredictionV1 {
 }
 
 /// `POST /v1/predict` response body.
+///
+/// JSON shape: `{"model":"gpt2-7b","batch":2,"feasible":true,
+/// "chosen":<PlanV1>|null,"plans":[<PlanV1>...],
+/// "per_gpu_type":[<GpuTypePredictionV1>...]}`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PredictResponseV1 {
     pub model: String,
@@ -669,6 +705,9 @@ impl ScaleRequestV1 {
 }
 
 /// `POST /v1/cluster/scale` response body.
+///
+/// JSON shape: `{"op":"leave","node":2,"preempted":[7,9],
+/// "total_gpus":7,"idle_gpus":5}` — `preempted` is empty for a join.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScaleResponseV1 {
     /// `"join"` or `"leave"`.
@@ -727,6 +766,8 @@ impl ScaleResponseV1 {
 }
 
 /// `GET /v1/cluster` response body.
+///
+/// JSON shape: `{"total_gpus":11,"idle_gpus":3,"utilization":0.72}`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterInfoV1 {
     pub total_gpus: u32,
@@ -750,6 +791,424 @@ impl ClusterInfoV1 {
             idle_gpus: j.get("idle_gpus").and_then(Json::as_u64).ok_or("missing 'idle_gpus'")?
                 as u32,
             utilization: j.get("utilization").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+/// One cluster event on the wire — the element type of
+/// `GET /v1/cluster/events`.
+///
+/// JSON shape: `{"seq":12,"time":3.52,"type":"<kind>",...}` where the
+/// remaining fields depend on `type`:
+///
+/// * `arrival` — `{"job":7}`
+/// * `placed` — `{"job":7,"epoch":1,"attempts":1,"gpus":4,"d":2,"t":2,
+///   "parts":[{"node":0,"gpus":2},{"node":3,"gpus":2}],"will_oom":false}`
+/// * `finished` — `{"job":7,"epoch":1}`
+/// * `oomed` — `{"job":7,"epoch":2,"requeued":true}`
+/// * `preempted` — `{"job":7,"node":3}`
+/// * `rejected` — `{"job":7,"reason":"unplaceable"}` (reasons:
+///   `admission_infeasible` | `attempts_exhausted` | `unplaceable` |
+///   `run_ended`)
+/// * `cancelled` — `{"job":7,"was_running":true}`
+/// * `node_joined` — `{"node":5,"gpu":"A100-80G","gpus":4}`
+/// * `node_left` — `{"node":5,"preempted":[7,9]}`
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventV1 {
+    /// Monotonic sequence number (never reused, even across ring
+    /// eviction); poll with `?since=<last seen seq>`.
+    pub seq: u64,
+    /// Coordinator-clock timestamp in seconds since start.
+    pub time: f64,
+    pub kind: EventKind,
+}
+
+impl EventV1 {
+    pub fn from_record(r: &EventRecord) -> Self {
+        Self { seq: r.seq, time: r.time, kind: r.kind.clone() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seq", self.seq).set("time", self.time);
+        match &self.kind {
+            EventKind::Arrival { job } => {
+                j.set("type", "arrival").set("job", *job);
+            }
+            EventKind::Placed { job, epoch, attempts, gpus, d, t, parts, will_oom } => {
+                let parts: Vec<Json> = parts
+                    .iter()
+                    .map(|&(node, gpus)| {
+                        let mut p = Json::obj();
+                        p.set("node", node).set("gpus", gpus);
+                        p
+                    })
+                    .collect();
+                j.set("type", "placed")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("attempts", *attempts)
+                    .set("gpus", *gpus)
+                    .set("d", *d)
+                    .set("t", *t)
+                    .set("parts", Json::Arr(parts))
+                    .set("will_oom", *will_oom);
+            }
+            EventKind::Finished { job, epoch } => {
+                j.set("type", "finished").set("job", *job).set("epoch", *epoch);
+            }
+            EventKind::Oomed { job, epoch, requeued } => {
+                j.set("type", "oomed")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("requeued", *requeued);
+            }
+            EventKind::Preempted { job, node } => {
+                j.set("type", "preempted").set("job", *job).set("node", *node);
+            }
+            EventKind::Rejected { job, reason } => {
+                j.set("type", "rejected").set("job", *job).set("reason", reason.as_str());
+            }
+            EventKind::Cancelled { job, was_running } => {
+                j.set("type", "cancelled").set("job", *job).set("was_running", *was_running);
+            }
+            EventKind::NodeJoined { node, gpu, gpus } => {
+                j.set("type", "node_joined")
+                    .set("node", *node)
+                    .set("gpu", gpu.as_str())
+                    .set("gpus", *gpus);
+            }
+            EventKind::NodeLeft { node, preempted } => {
+                j.set("type", "node_left").set("node", *node).set(
+                    "preempted",
+                    Json::Arr(preempted.iter().map(|&id| Json::from(id)).collect()),
+                );
+            }
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let seq = j.get("seq").and_then(Json::as_u64).ok_or("missing field 'seq'")?;
+        let time = j.get("time").and_then(Json::as_f64).ok_or("missing field 'time'")?;
+        let ty = j.get("type").and_then(Json::as_str).ok_or("missing string field 'type'")?;
+        let job = || j.get("job").and_then(Json::as_u64).ok_or("missing field 'job'");
+        let node = || j.get("node").and_then(Json::as_usize).ok_or("missing field 'node'");
+        let epoch = || j.get("epoch").and_then(Json::as_u64).ok_or("missing field 'epoch'");
+        let kind = match ty {
+            "arrival" => EventKind::Arrival { job: job()? },
+            "placed" => {
+                let mut parts = Vec::new();
+                for p in j.get("parts").and_then(Json::as_arr).unwrap_or(&[]) {
+                    let n = p.get("node").and_then(Json::as_usize).ok_or("part missing 'node'")?;
+                    let g =
+                        p.get("gpus").and_then(Json::as_u64).ok_or("part missing 'gpus'")? as u32;
+                    parts.push((n, g));
+                }
+                EventKind::Placed {
+                    job: job()?,
+                    epoch: epoch()?,
+                    attempts: j.get("attempts").and_then(Json::as_u64).unwrap_or(0) as u32,
+                    gpus: j.get("gpus").and_then(Json::as_u64).unwrap_or(0) as u32,
+                    d: j.get("d").and_then(Json::as_u64).unwrap_or(0) as u32,
+                    t: j.get("t").and_then(Json::as_u64).unwrap_or(0) as u32,
+                    parts,
+                    will_oom: j.get("will_oom").and_then(Json::as_bool).unwrap_or(false),
+                }
+            }
+            "finished" => EventKind::Finished { job: job()?, epoch: epoch()? },
+            "oomed" => EventKind::Oomed {
+                job: job()?,
+                epoch: epoch()?,
+                requeued: j.get("requeued").and_then(Json::as_bool).unwrap_or(false),
+            },
+            "preempted" => EventKind::Preempted { job: job()?, node: node()? },
+            "rejected" => {
+                let reason_s = j
+                    .get("reason")
+                    .and_then(Json::as_str)
+                    .ok_or("missing string field 'reason'")?;
+                let reason = RejectReason::from_wire(reason_s)
+                    .ok_or_else(|| format!("unknown reason '{reason_s}'"))?;
+                EventKind::Rejected { job: job()?, reason }
+            }
+            "cancelled" => EventKind::Cancelled {
+                job: job()?,
+                was_running: j.get("was_running").and_then(Json::as_bool).unwrap_or(false),
+            },
+            "node_joined" => EventKind::NodeJoined {
+                node: node()?,
+                gpu: j
+                    .get("gpu")
+                    .and_then(Json::as_str)
+                    .ok_or("missing string field 'gpu'")?
+                    .to_string(),
+                gpus: j.get("gpus").and_then(Json::as_u64).unwrap_or(0) as u32,
+            },
+            "node_left" => {
+                let mut preempted = Vec::new();
+                for id in j.get("preempted").and_then(Json::as_arr).unwrap_or(&[]) {
+                    preempted.push(id.as_u64().ok_or("'preempted' items must be integers")?);
+                }
+                EventKind::NodeLeft { node: node()?, preempted }
+            }
+            other => return Err(format!("unknown event type '{other}'")),
+        };
+        Ok(Self { seq, time, kind })
+    }
+}
+
+/// `GET /v1/cluster/events` query parameters.
+///
+/// `?since=<seq>&limit=<n>` — both optional; `since` defaults to 0 (from
+/// the beginning of the retained ring), `limit` defaults to
+/// [`DEFAULT_EVENTS_LIMIT`] and is clamped to `1..=`[`MAX_EVENTS_LIMIT`]
+/// (a zero limit could never make progress and would spin pollers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventsRequestV1 {
+    /// Return events with `seq > since`.
+    pub since: u64,
+    pub limit: usize,
+}
+
+impl Default for EventsRequestV1 {
+    fn default() -> Self {
+        Self { since: 0, limit: DEFAULT_EVENTS_LIMIT }
+    }
+}
+
+impl EventsRequestV1 {
+    /// Parse from an URL query string (the part after `?`, possibly empty).
+    pub fn from_query(query: &str) -> Result<Self, String> {
+        let mut out = Self::default();
+        for pair in query.split('&').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            match k {
+                "since" => {
+                    out.since = v.parse().map_err(|_| format!("bad since '{v}'"))?;
+                }
+                "limit" => {
+                    let l: usize = v.parse().map_err(|_| format!("bad limit '{v}'"))?;
+                    out.limit = l.clamp(1, MAX_EVENTS_LIMIT);
+                }
+                other => return Err(format!("unknown query parameter '{other}'")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Render as an URL query string (no leading `?`; empty for defaults).
+    pub fn to_query(&self) -> String {
+        let mut parts = Vec::new();
+        if self.since != 0 {
+            parts.push(format!("since={}", self.since));
+        }
+        if self.limit != DEFAULT_EVENTS_LIMIT {
+            parts.push(format!("limit={}", self.limit));
+        }
+        parts.join("&")
+    }
+}
+
+/// `GET /v1/cluster/events` response body.
+///
+/// JSON shape: `{"events":[...],"next_since":37,"dropped":false,
+/// "first_seq":1,"last_seq":37}` — poll again with
+/// `?since=<next_since>`; `dropped` means the ring evicted events the
+/// caller never saw (poll faster or raise the engine's log capacity).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventsResponseV1 {
+    pub events: Vec<EventV1>,
+    /// Pass as the next request's `since` to continue without gaps.
+    pub next_since: u64,
+    /// True when events after the requested `since` were already evicted.
+    pub dropped: bool,
+    /// Oldest sequence number still retained (0 when the log is empty).
+    pub first_seq: u64,
+    /// Newest sequence number ever assigned.
+    pub last_seq: u64,
+}
+
+impl EventsResponseV1 {
+    /// Build from the engine's [`EventsPage`] for a request with `since`.
+    pub fn from_page(page: &EventsPage, since: u64) -> Self {
+        let next_since = page.events.last().map(|r| r.seq).unwrap_or(since);
+        Self {
+            events: page.events.iter().map(EventV1::from_record).collect(),
+            next_since,
+            dropped: page.dropped,
+            first_seq: page.first_seq,
+            last_seq: page.last_seq,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("events", Json::Arr(self.events.iter().map(|e| e.to_json()).collect()))
+            .set("next_since", self.next_since)
+            .set("dropped", self.dropped)
+            .set("first_seq", self.first_seq)
+            .set("last_seq", self.last_seq);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut events = Vec::new();
+        for e in j.get("events").and_then(Json::as_arr).ok_or("missing array field 'events'")? {
+            events.push(EventV1::from_json(e)?);
+        }
+        Ok(Self {
+            events,
+            next_since: j
+                .get("next_since")
+                .and_then(Json::as_u64)
+                .ok_or("missing field 'next_since'")?,
+            dropped: j.get("dropped").and_then(Json::as_bool).unwrap_or(false),
+            first_seq: j.get("first_seq").and_then(Json::as_u64).unwrap_or(0),
+            last_seq: j.get("last_seq").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// `GET /v1/report` response body — the streaming run report.
+///
+/// JSON shape: every scalar field of the report as a number/string plus
+/// `"jct_hist":[{"le_s":1,"count":0},...]` (cumulative-style exponential
+/// buckets: `count` JCTs fell at or below `le_s` seconds and above the
+/// previous bound) and `"jct_hist_overflow"` for JCTs beyond the last
+/// bound. Non-finite values (an empty run has no mean JCT) are serialized
+/// as 0.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReportV1 {
+    pub scheduler: String,
+    pub workload: String,
+    pub n_jobs: usize,
+    pub n_completed: usize,
+    pub n_rejected: usize,
+    pub n_cancelled: usize,
+    pub avg_jct_s: f64,
+    /// Approximate (histogram-bucket upper bound) median JCT.
+    pub p50_jct_s: f64,
+    /// Approximate (histogram-bucket upper bound) p99 JCT.
+    pub p99_jct_s: f64,
+    pub jct_min_s: f64,
+    pub jct_max_s: f64,
+    /// `(upper_bound_s, count)` exponential buckets.
+    pub jct_hist: Vec<(f64, u64)>,
+    pub jct_hist_overflow: u64,
+    pub avg_queue_s: f64,
+    pub avg_samples_per_sec: f64,
+    pub makespan_s: f64,
+    pub total_oom_retries: u64,
+    pub n_oom_events: u64,
+    pub sched_work_units: u64,
+    pub sched_overhead_s: f64,
+    pub avg_utilization: f64,
+}
+
+/// JSON cannot carry NaN/inf: empty-run means are serialized as 0.
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+impl ReportV1 {
+    pub fn from_report(r: &RunReport) -> Self {
+        Self {
+            scheduler: r.scheduler.clone(),
+            workload: r.workload.clone(),
+            n_jobs: r.n_jobs,
+            n_completed: r.n_completed,
+            n_rejected: r.n_rejected,
+            n_cancelled: r.n_cancelled,
+            avg_jct_s: finite(r.avg_jct_s),
+            p50_jct_s: finite(r.p50_jct_s),
+            p99_jct_s: finite(r.p99_jct_s),
+            jct_min_s: finite(r.jct_min_s),
+            jct_max_s: finite(r.jct_max_s),
+            jct_hist: r.jct_hist.clone(),
+            jct_hist_overflow: r.jct_hist_overflow,
+            avg_queue_s: finite(r.avg_queue_s),
+            avg_samples_per_sec: finite(r.avg_samples_per_sec),
+            makespan_s: finite(r.makespan_s),
+            total_oom_retries: r.total_oom_retries,
+            n_oom_events: r.n_oom_events,
+            sched_work_units: r.sched_work_units,
+            sched_overhead_s: finite(r.sched_overhead_s),
+            avg_utilization: finite(r.avg_utilization),
+        }
+    }
+
+    /// Renders through [`RunReport::to_json`] — the field list and the
+    /// `jct_hist` bucket encoding exist in exactly one place, so the wire
+    /// form and the figure-harness JSON cannot silently diverge.
+    pub fn to_json(&self) -> Json {
+        RunReport {
+            scheduler: self.scheduler.clone(),
+            workload: self.workload.clone(),
+            n_jobs: self.n_jobs,
+            n_completed: self.n_completed,
+            n_rejected: self.n_rejected,
+            n_cancelled: self.n_cancelled,
+            avg_jct_s: self.avg_jct_s,
+            p50_jct_s: self.p50_jct_s,
+            p99_jct_s: self.p99_jct_s,
+            jct_min_s: self.jct_min_s,
+            jct_max_s: self.jct_max_s,
+            jct_hist: self.jct_hist.clone(),
+            jct_hist_overflow: self.jct_hist_overflow,
+            avg_queue_s: self.avg_queue_s,
+            avg_samples_per_sec: self.avg_samples_per_sec,
+            makespan_s: self.makespan_s,
+            total_oom_retries: self.total_oom_retries,
+            n_oom_events: self.n_oom_events,
+            sched_work_units: self.sched_work_units,
+            sched_overhead_s: self.sched_overhead_s,
+            avg_utilization: self.avg_utilization,
+        }
+        .to_json()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let req_str = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or(format!("missing string field '{k}'"))
+        };
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let int = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+        let mut jct_hist = Vec::new();
+        for b in j.get("jct_hist").and_then(Json::as_arr).unwrap_or(&[]) {
+            let le = b.get("le_s").and_then(Json::as_f64).ok_or("bucket missing 'le_s'")?;
+            let count = b.get("count").and_then(Json::as_u64).ok_or("bucket missing 'count'")?;
+            jct_hist.push((le, count));
+        }
+        Ok(Self {
+            scheduler: req_str("scheduler")?,
+            workload: req_str("workload")?,
+            n_jobs: int("n_jobs") as usize,
+            n_completed: int("n_completed") as usize,
+            n_rejected: int("n_rejected") as usize,
+            n_cancelled: int("n_cancelled") as usize,
+            avg_jct_s: num("avg_jct_s"),
+            p50_jct_s: num("p50_jct_s"),
+            p99_jct_s: num("p99_jct_s"),
+            jct_min_s: num("jct_min_s"),
+            jct_max_s: num("jct_max_s"),
+            jct_hist,
+            jct_hist_overflow: int("jct_hist_overflow"),
+            avg_queue_s: num("avg_queue_s"),
+            avg_samples_per_sec: num("avg_samples_per_sec"),
+            makespan_s: num("makespan_s"),
+            total_oom_retries: int("total_oom_retries"),
+            n_oom_events: int("n_oom_events"),
+            sched_work_units: int("sched_work_units"),
+            sched_overhead_s: num("sched_overhead_s"),
+            avg_utilization: num("avg_utilization"),
         })
     }
 }
@@ -916,6 +1375,153 @@ mod tests {
             roundtrip(&resp, ScaleResponseV1::to_json, ScaleResponseV1::from_json);
             Ok(())
         });
+    }
+
+    fn gen_event_kind(g: &mut Gen) -> EventKind {
+        match g.usize_in(0, 8) {
+            0 => EventKind::Arrival { job: g.u64_in(0, MAX_EXACT) },
+            1 => EventKind::Placed {
+                job: g.u64_in(0, MAX_EXACT),
+                epoch: g.u64_in(1, 64),
+                attempts: g.u64_in(1, 6) as u32,
+                gpus: g.u64_in(1, 64) as u32,
+                d: g.u64_in(1, 16) as u32,
+                t: g.u64_in(1, 8) as u32,
+                parts: (0..g.usize_in(1, 3))
+                    .map(|i| (i, g.u64_in(1, 8) as u32))
+                    .collect(),
+                will_oom: g.bool(),
+            },
+            2 => EventKind::Finished { job: g.u64_in(0, MAX_EXACT), epoch: g.u64_in(1, 64) },
+            3 => EventKind::Oomed {
+                job: g.u64_in(0, MAX_EXACT),
+                epoch: g.u64_in(1, 64),
+                requeued: g.bool(),
+            },
+            4 => EventKind::Preempted { job: g.u64_in(0, MAX_EXACT), node: g.usize_in(0, 999) },
+            5 => EventKind::Rejected {
+                job: g.u64_in(0, MAX_EXACT),
+                reason: *g.pick(&[
+                    crate::engine::RejectReason::AdmissionInfeasible,
+                    crate::engine::RejectReason::AttemptsExhausted,
+                    crate::engine::RejectReason::Unplaceable,
+                    crate::engine::RejectReason::RunEnded,
+                ]),
+            },
+            6 => EventKind::Cancelled { job: g.u64_in(0, MAX_EXACT), was_running: g.bool() },
+            7 => EventKind::NodeJoined {
+                node: g.usize_in(0, 999),
+                gpu: gen_string(g),
+                gpus: g.u64_in(1, 64) as u32,
+            },
+            _ => EventKind::NodeLeft {
+                node: g.usize_in(0, 999),
+                preempted: (0..g.usize_in(0, 4)).map(|i| i as u64).collect(),
+            },
+        }
+    }
+
+    #[test]
+    fn prop_event_roundtrip() {
+        Runner::new("event dto roundtrip", 0xE7E27, 300).run(|g| {
+            let v = EventV1 {
+                seq: g.u64_in(1, MAX_EXACT),
+                time: g.f64_in(0.0, 1e6),
+                kind: gen_event_kind(g),
+            };
+            roundtrip(&v, EventV1::to_json, EventV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_events_response_roundtrip() {
+        Runner::new("events page dto roundtrip", 0xE7E28, 100).run(|g| {
+            let events: Vec<EventV1> = (0..g.usize_in(0, 5))
+                .map(|i| EventV1 {
+                    seq: i as u64 + 1,
+                    time: g.f64_in(0.0, 100.0),
+                    kind: gen_event_kind(g),
+                })
+                .collect();
+            let v = EventsResponseV1 {
+                next_since: events.last().map(|e| e.seq).unwrap_or(0),
+                dropped: g.bool(),
+                first_seq: events.first().map(|e| e.seq).unwrap_or(0),
+                last_seq: events.last().map(|e| e.seq).unwrap_or(0),
+                events,
+            };
+            roundtrip(&v, EventsResponseV1::to_json, EventsResponseV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn events_query_roundtrip_and_validation() {
+        let req = EventsRequestV1 { since: 42, limit: 7 };
+        assert_eq!(EventsRequestV1::from_query(&req.to_query()).unwrap(), req);
+        assert_eq!(EventsRequestV1::from_query("").unwrap(), EventsRequestV1::default());
+        assert!(EventsRequestV1::from_query("since=minus").is_err());
+        assert!(EventsRequestV1::from_query("bogus=1").is_err());
+        // limit clamped on both ends, not rejected: a zero limit can make
+        // no progress and would spin a ?since=-polling client forever.
+        assert_eq!(
+            EventsRequestV1::from_query("limit=999999999").unwrap().limit,
+            MAX_EVENTS_LIMIT
+        );
+        assert_eq!(EventsRequestV1::from_query("limit=0").unwrap().limit, 1);
+    }
+
+    #[test]
+    fn event_rejects_garbage() {
+        let parse = |s: &str| EventV1::from_json(&json::parse(s).unwrap());
+        assert!(parse(r#"{"seq":1,"time":0,"type":"warp","job":1}"#).is_err());
+        assert!(parse(r#"{"seq":1,"time":0,"type":"rejected","job":1,"reason":"vibes"}"#).is_err());
+        assert!(parse(r#"{"time":0,"type":"arrival","job":1}"#).is_err());
+        assert!(parse(r#"{"seq":1,"time":0,"type":"arrival"}"#).is_err());
+    }
+
+    #[test]
+    fn prop_report_roundtrip() {
+        Runner::new("report dto roundtrip", 0x4E9047, 100).run(|g| {
+            let v = ReportV1 {
+                scheduler: gen_string(g),
+                workload: gen_string(g),
+                n_jobs: g.usize_in(0, 9000),
+                n_completed: g.usize_in(0, 9000),
+                n_rejected: g.usize_in(0, 100),
+                n_cancelled: g.usize_in(0, 100),
+                avg_jct_s: g.f64_in(0.0, 1e6),
+                p50_jct_s: g.f64_in(0.0, 1e6),
+                p99_jct_s: g.f64_in(0.0, 1e6),
+                jct_min_s: g.f64_in(0.0, 1e3),
+                jct_max_s: g.f64_in(0.0, 1e6),
+                jct_hist: (0..g.usize_in(0, 6))
+                    .map(|i| (2f64.powi(i as i32), g.u64_in(0, 1000)))
+                    .collect(),
+                jct_hist_overflow: g.u64_in(0, 10),
+                avg_queue_s: g.f64_in(0.0, 1e5),
+                avg_samples_per_sec: g.f64_in(0.0, 1e4),
+                makespan_s: g.f64_in(0.0, 1e6),
+                total_oom_retries: g.u64_in(0, 100),
+                n_oom_events: g.u64_in(0, 100),
+                sched_work_units: g.u64_in(0, MAX_EXACT),
+                sched_overhead_s: g.f64_in(0.0, 100.0),
+                avg_utilization: g.f64_in(0.0, 1.0),
+            };
+            roundtrip(&v, ReportV1::to_json, ReportV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn report_from_run_report_sanitizes_non_finite() {
+        let r = RunReport::from_outcomes("s", "w", &[], 0, 0, 0.0, 0.0);
+        assert!(r.avg_jct_s.is_nan(), "empty run has no mean JCT");
+        let v = ReportV1::from_report(&r);
+        assert_eq!(v.avg_jct_s, 0.0, "wire form must be valid JSON");
+        // And the wire form parses back.
+        roundtrip(&v, ReportV1::to_json, ReportV1::from_json);
     }
 
     #[test]

@@ -16,9 +16,9 @@
 //! connection is re-established transparently (one retry per request).
 
 use super::api::{
-    ApiError, CancelResponseV1, ClusterInfoV1, JobStatusV1, ListRequestV1, ListResponseV1,
-    PredictRequestV1, PredictResponseV1, ScaleRequestV1, ScaleResponseV1, SubmitRequestV1,
-    SubmitResponseV1,
+    ApiError, CancelResponseV1, ClusterInfoV1, EventsRequestV1, EventsResponseV1, JobStatusV1,
+    ListRequestV1, ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1, ScaleRequestV1,
+    ScaleResponseV1, SubmitRequestV1, SubmitResponseV1,
 };
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Context, Result};
@@ -242,6 +242,27 @@ impl FrenzyClient {
     pub fn cluster(&mut self) -> Result<ClusterInfoV1> {
         let j = self.call("GET", "/v1/cluster", "", true)?;
         ClusterInfoV1::from_json(&j).map_err(|e| anyhow!(e))
+    }
+
+    /// `GET /v1/cluster/events` — a page of the cluster event log.
+    /// Poll with `req.since = previous_response.next_since` to tail the
+    /// stream without gaps; `dropped` flags that the ring evicted events
+    /// the caller never saw.
+    pub fn events(&mut self, req: &EventsRequestV1) -> Result<EventsResponseV1> {
+        let q = req.to_query();
+        let path = if q.is_empty() {
+            "/v1/cluster/events".to_string()
+        } else {
+            format!("/v1/cluster/events?{q}")
+        };
+        let j = self.call("GET", &path, "", true)?;
+        EventsResponseV1::from_json(&j).map_err(|e| anyhow!(e))
+    }
+
+    /// `GET /v1/report` — the coordinator's streaming run report.
+    pub fn report(&mut self) -> Result<ReportV1> {
+        let j = self.call("GET", "/v1/report", "", true)?;
+        ReportV1::from_json(&j).map_err(|e| anyhow!(e))
     }
 
     /// `POST /v1/cluster/scale` — elastic join/leave. Not idempotent (a

@@ -14,9 +14,9 @@
 //! `413` instead of silent truncation.
 
 use super::api::{
-    ApiError, CancelResponseV1, ClusterInfoV1, JobStatusV1, ListRequestV1, ListResponseV1,
-    PredictRequestV1, PredictResponseV1, ScaleRequestV1, ScaleResponseV1, SubmitRequestV1,
-    SubmitResponseV1,
+    ApiError, CancelResponseV1, ClusterInfoV1, EventsRequestV1, EventsResponseV1, JobStatusV1,
+    ListRequestV1, ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1, ScaleRequestV1,
+    ScaleResponseV1, SubmitRequestV1, SubmitResponseV1,
 };
 use super::{CancelOutcome, Handle, ScaleOp, SubmitRequest};
 use crate::util::json::{self, Json};
@@ -193,7 +193,7 @@ fn normalize_path(path: &str) -> String {
 /// `None` means the path itself is unknown (404).
 fn allowed_methods(path: &str) -> Option<&'static str> {
     match path {
-        "/v1/healthz" | "/v1/cluster" => Some("GET"),
+        "/v1/healthz" | "/v1/cluster" | "/v1/cluster/events" | "/v1/report" => Some("GET"),
         "/v1/jobs" => Some("GET, POST"),
         "/v1/predict" | "/v1/cluster/scale" => Some("POST"),
         _ => {
@@ -242,6 +242,8 @@ pub fn route_full(handle: &Handle, req: &Request) -> Response {
         ("GET", "/v1/jobs") => Some(handle_list(handle, query)),
         ("POST", "/v1/predict") => Some(handle_predict(handle, &req.body)),
         ("POST", "/v1/cluster/scale") => Some(handle_scale(handle, &req.body)),
+        ("GET", "/v1/cluster/events") => Some(handle_events(handle, query)),
+        ("GET", "/v1/report") => Some(handle_report(handle)),
         _ => None,
     };
     if let Some(r) = resp {
@@ -377,6 +379,28 @@ fn handle_scale(handle: &Handle, body: &str) -> Response {
         // Unknown GPU type / bad node id is the caller's fault …
         Ok(Err(e)) => Response::err(400, e),
         // … a dead coordinator is ours.
+        Err(e) => Response::err(500, e.to_string()),
+    }
+}
+
+fn handle_events(handle: &Handle, query: &str) -> Response {
+    let req = match EventsRequestV1::from_query(query) {
+        Ok(r) => r,
+        Err(e) => return Response::err(400, e),
+    };
+    match handle.events(req.since, req.limit) {
+        Ok(page) => Response::ok(
+            EventsResponseV1::from_page(&page, req.since).to_json().to_string_compact(),
+        ),
+        Err(e) => Response::err(500, e.to_string()),
+    }
+}
+
+fn handle_report(handle: &Handle) -> Response {
+    match handle.report() {
+        Ok(report) => {
+            Response::ok(ReportV1::from_report(&report).to_json().to_string_compact())
+        }
         Err(e) => Response::err(500, e.to_string()),
     }
 }
@@ -711,6 +735,47 @@ mod tests {
         assert_eq!(r.status, 405);
         assert_eq!(r.allow, Some("POST"));
         assert_eq!(post(&h, "/cluster/scale", r#"{"op":"leave","node":0}"#).status, 404);
+        h.shutdown();
+    }
+
+    #[test]
+    fn events_and_report_routes() {
+        let h = test_handle();
+        let r = post(&h, "/v1/jobs", r#"{"model":"gpt2-350m","batch":8,"samples":100}"#);
+        assert_eq!(r.status, 200, "{}", r.body);
+        h.drain().unwrap();
+        // The event log over HTTP: arrival, placement, finish are all there.
+        let r = get(&h, "/v1/cluster/events");
+        assert_eq!(r.status, 200, "{}", r.body);
+        let page = EventsResponseV1::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert!(page.events.len() >= 3, "arrival+placed+finished, got {}", page.events.len());
+        assert!(!page.dropped);
+        // Incremental poll from next_since yields nothing new.
+        let r = get(&h, &format!("/v1/cluster/events?since={}", page.next_since));
+        let page2 = EventsResponseV1::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert!(page2.events.is_empty());
+        assert_eq!(page2.next_since, page.next_since);
+        // limit=1 pages one record at a time.
+        let r = get(&h, "/v1/cluster/events?since=0&limit=1");
+        let one = EventsResponseV1::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert_eq!(one.events.len(), 1);
+        // The streaming report over HTTP.
+        let r = get(&h, "/v1/report");
+        assert_eq!(r.status, 200, "{}", r.body);
+        let rep = ReportV1::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert_eq!(rep.n_completed, 1);
+        assert!(!rep.jct_hist.is_empty());
+        // Bad query and wrong method behave like the other routes.
+        assert_eq!(get(&h, "/v1/cluster/events?since=minus").status, 400);
+        let r = post(&h, "/v1/cluster/events", "");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("GET"));
+        let r = post(&h, "/v1/report", "");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("GET"));
+        // No legacy unversioned aliases for the new routes.
+        assert_eq!(get(&h, "/report").status, 404);
+        assert_eq!(get(&h, "/cluster/events").status, 404);
         h.shutdown();
     }
 

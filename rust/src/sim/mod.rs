@@ -18,9 +18,9 @@
 
 use crate::config::ClusterSpec;
 use crate::engine::clock::{Clock, VirtualClock};
-use crate::engine::{ClusterEvent, EngineConfig, SchedulingEngine};
-use crate::job::{JobOutcome, JobSpec};
-use crate::metrics::RunReport;
+use crate::engine::{ClusterEvent, EngineConfig, EventLog, SchedulingEngine};
+use crate::job::JobSpec;
+use crate::metrics::{RunAggregates, RunReport};
 use crate::sched::Scheduler;
 
 /// Simulator tuning knobs.
@@ -110,22 +110,30 @@ impl<'a> Simulator<'a> {
             let _ = self.engine.run_round(&mut self.clock);
         }
         // Whatever is still pending never got resources.
-        let _ = self.engine.reject_remaining();
-        let end = self.clock.now().max(1e-9);
+        let now = self.clock.now();
+        let _ = self.engine.reject_remaining(now);
+        let end = now.max(1e-9);
         let util = self.engine.utilization_to(end);
-        RunReport::from_outcomes(
+        RunReport::from_aggregates(
             self.engine.scheduler_name(),
             workload_name,
-            self.engine.outcomes(),
-            self.engine.rejected_count(),
+            self.engine.aggregates(),
+            0,
             self.engine.work_units(),
             self.engine.sched_wall_s(),
             util,
         )
     }
 
-    pub fn outcomes(&self) -> &[JobOutcome] {
-        self.engine.outcomes()
+    /// The run's streaming metrics (see [`RunAggregates`]).
+    pub fn aggregates(&self) -> &RunAggregates {
+        self.engine.aggregates()
+    }
+
+    /// The engine's bounded audit log — arrivals, placements, finishes,
+    /// OOMs, elasticity — in event order.
+    pub fn event_log(&self) -> &EventLog {
+        self.engine.event_log()
     }
 
     pub fn cluster_state(&self) -> &crate::cluster::ClusterState {

@@ -1,0 +1,234 @@
+//! Integration coverage for the observability subsystem: the bounded
+//! cluster event log (ring eviction, `?since=` paging semantics) and the
+//! streaming `RunReport` aggregates, including the property that a trace
+//! replayed through the simulator and through the live coordinator folds
+//! to identical aggregate counters.
+
+use frenzy::config::real_testbed;
+use frenzy::engine::clock::VirtualClock;
+use frenzy::engine::{ClusterEvent, EngineConfig, EventKind, SchedulingEngine};
+use frenzy::job::{JobSpec, JobState};
+use frenzy::marp::Marp;
+use frenzy::sched::has::Has;
+use frenzy::serverless::{spawn, CoordinatorConfig, SubmitRequest};
+use frenzy::sim::{SimConfig, Simulator};
+use frenzy::util::prop::Runner;
+
+fn job(id: u64, model: &str, batch: u32, samples: u64, t: f64) -> JobSpec {
+    JobSpec::new(
+        id,
+        frenzy::config::models::model_by_name(model).unwrap(),
+        batch,
+        samples,
+        t,
+    )
+}
+
+/// Drive an engine + virtual clock to completion.
+fn drive(engine: &mut SchedulingEngine, clock: &mut VirtualClock) {
+    let mut guard = 0;
+    while let Some((_, ev)) = clock.pop() {
+        engine.handle(ev, clock);
+        engine.run_round(clock);
+        guard += 1;
+        assert!(guard < 100_000, "event loop did not terminate");
+    }
+}
+
+#[test]
+fn ring_eviction_keeps_monotonic_seqs_and_since_semantics() {
+    // A tiny ring under a real engine run: many more events than capacity.
+    let spec = real_testbed();
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let cfg = EngineConfig { event_log_cap: 8, ..EngineConfig::default() };
+    let mut engine = SchedulingEngine::new(&spec, &mut has, cfg);
+    let mut clock = VirtualClock::new();
+    let n_jobs = 12u64;
+    for i in 0..n_jobs {
+        clock.schedule(
+            i as f64 * 10_000.0,
+            ClusterEvent::Arrival(job(i, "gpt2-350m", 8, 1_000, i as f64 * 10_000.0)),
+        );
+    }
+    drive(&mut engine, &mut clock);
+    assert_eq!(engine.aggregates().n_completed, n_jobs as usize);
+
+    let log = engine.event_log();
+    // 3 events per job (arrival, placed, finished) >> cap of 8.
+    assert_eq!(log.len(), 8, "ring bounded at capacity");
+    assert_eq!(log.last_seq(), 3 * n_jobs, "every event got a seq, evicted or not");
+    let seqs: Vec<u64> = log.iter().map(|r| r.seq).collect();
+    assert!(
+        seqs.windows(2).all(|w| w[1] == w[0] + 1),
+        "retained seqs stay dense and monotonic after eviction: {seqs:?}"
+    );
+    assert_eq!(*seqs.first().unwrap(), log.first_seq());
+
+    // since=0 (from the beginning) must flag the gap and return the tail.
+    let page = log.since(0, 100);
+    assert!(page.dropped, "records before the ring were evicted unseen");
+    assert_eq!(page.events.len(), 8);
+    assert_eq!(page.events.first().unwrap().seq, log.first_seq());
+
+    // A client that kept up sees no gap.
+    let page = log.since(log.first_seq() - 1, 100);
+    assert!(!page.dropped);
+    assert_eq!(page.events.len(), 8);
+    let page = log.since(log.last_seq(), 100);
+    assert!(!page.dropped);
+    assert!(page.events.is_empty());
+
+    // Paging with a limit walks the ring without skipping or repeating.
+    let mut since = 0;
+    let mut walked = Vec::new();
+    loop {
+        let page = log.since(since, 3);
+        if page.events.is_empty() {
+            break;
+        }
+        walked.extend(page.events.iter().map(|r| r.seq));
+        since = page.events.last().unwrap().seq;
+    }
+    assert_eq!(walked, seqs, "limit-paged walk reconstructs the retained window");
+
+    // Times never decrease along the log.
+    let times: Vec<f64> = log.iter().map(|r| r.time).collect();
+    assert!(times.windows(2).all(|w| w[1] >= w[0]), "event times are monotone: {times:?}");
+}
+
+#[test]
+fn prop_sim_and_live_replay_fold_to_identical_aggregates() {
+    // The acceptance property for the streaming report: a serialized trace
+    // (each job runs on an otherwise-empty cluster) replayed through the
+    // simulator and through the live coordinator must produce the same
+    // placements and the same aggregate counters — only clock-dependent
+    // values (JCT seconds) may differ.
+    let models = ["gpt2-125m", "gpt2-350m", "gpt2-760m", "gpt2-1.3b"];
+    let batches = [4u32, 8, 16];
+    Runner::new("sim/live aggregate parity", 0x0B5E6E, 12).run(|g| {
+        let n = g.usize_in(1, 5);
+        let trace: Vec<JobSpec> = (0..n)
+            .map(|i| {
+                job(
+                    i as u64,
+                    g.pick(&models),
+                    *g.pick(&batches),
+                    g.u64_in(50, 20_000),
+                    i as f64 * 1e9,
+                )
+            })
+            .collect();
+
+        // Simulator path.
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let cfg = SimConfig { max_sim_time_s: 1e18, ..SimConfig::default() };
+        let mut sim = Simulator::new(&spec, &mut has, cfg);
+        sim.submit_all(&trace);
+        let sim_report = sim.run("prop");
+        let sim_decisions = sim.engine().decision_log().to_vec();
+
+        // Live path (instant stub serializes: each job completes before
+        // the next submit is processed).
+        let (h, _j) = spawn(
+            spec,
+            CoordinatorConfig { execute_training: false, ..CoordinatorConfig::default() },
+        );
+        for j in &trace {
+            h.submit(SubmitRequest {
+                model: j.model.name.to_string(),
+                global_batch: j.train.global_batch,
+                total_samples: j.total_samples,
+            })
+            .map_err(|e| format!("submit: {e}"))?;
+        }
+        h.drain().map_err(|e| format!("drain: {e}"))?;
+        let live_report = h.report().map_err(|e| format!("report: {e}"))?;
+        let live_decisions = h.decisions().map_err(|e| format!("decisions: {e}"))?;
+        h.shutdown();
+
+        // Identical placements (live ids are 1-based).
+        if sim_decisions.len() != live_decisions.len() {
+            return Err(format!(
+                "decision count: sim {} vs live {}",
+                sim_decisions.len(),
+                live_decisions.len()
+            ));
+        }
+        for (s, l) in sim_decisions.iter().zip(live_decisions.iter()) {
+            if s.0 + 1 != l.0 || s.1 != l.1 {
+                return Err(format!("decision mismatch: sim {s:?} vs live {l:?}"));
+            }
+        }
+        // Identical aggregate counters.
+        let pairs = [
+            ("n_jobs", sim_report.n_jobs, live_report.n_jobs),
+            ("n_completed", sim_report.n_completed, live_report.n_completed),
+            ("n_rejected", sim_report.n_rejected, live_report.n_rejected),
+            ("n_cancelled", sim_report.n_cancelled, live_report.n_cancelled),
+            (
+                "oom_retries",
+                sim_report.total_oom_retries as usize,
+                live_report.total_oom_retries as usize,
+            ),
+            (
+                "oom_events",
+                sim_report.n_oom_events as usize,
+                live_report.n_oom_events as usize,
+            ),
+        ];
+        for (name, s, l) in pairs {
+            if s != l {
+                return Err(format!("{name}: sim {s} vs live {l}"));
+            }
+        }
+        // The histograms account for every completed job on both sides.
+        let total = |hist: &[(f64, u64)], overflow: u64| {
+            hist.iter().map(|&(_, c)| c).sum::<u64>() + overflow
+        };
+        if total(&sim_report.jct_hist, sim_report.jct_hist_overflow)
+            != sim_report.n_completed as u64
+        {
+            return Err("sim histogram does not cover all completions".into());
+        }
+        if total(&live_report.jct_hist, live_report.jct_hist_overflow)
+            != live_report.n_completed as u64
+        {
+            return Err("live histogram does not cover all completions".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn live_event_log_matches_terminal_states() {
+    // Every terminal state the status table reports must have a matching
+    // record in the event log (completed -> Finished, etc.).
+    let (h, _j) = spawn(
+        real_testbed(),
+        CoordinatorConfig { execute_training: false, ..CoordinatorConfig::default() },
+    );
+    let ids: Vec<u64> = (0..6)
+        .map(|_| {
+            h.submit(SubmitRequest {
+                model: "gpt2-350m".into(),
+                global_batch: 8,
+                total_samples: 200,
+            })
+            .unwrap()
+        })
+        .collect();
+    h.drain().unwrap();
+    let page = h.events(0, 1000).unwrap();
+    for id in ids {
+        let st = h.status(id).unwrap().unwrap().state;
+        assert_eq!(st, JobState::Completed);
+        assert!(
+            page.events
+                .iter()
+                .any(|r| matches!(r.kind, EventKind::Finished { job, .. } if job == id)),
+            "job {id} completed but has no Finished event"
+        );
+    }
+    h.shutdown();
+}

@@ -3,8 +3,9 @@
 //! fixed-size worker pool, and the HTTP edge cases (405/413).
 
 use frenzy::config::{model_zoo, real_testbed, sia_sim};
+use frenzy::engine::EventKind;
 use frenzy::job::JobState;
-use frenzy::serverless::api::ListRequestV1;
+use frenzy::serverless::api::{EventsRequestV1, ListRequestV1, ScaleRequestV1};
 use frenzy::serverless::client::FrenzyClient;
 use frenzy::serverless::{server, spawn, CoordinatorConfig, Handle};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -230,6 +231,50 @@ fn thread_pool_handles_concurrent_clients() {
     h.drain().unwrap();
     let report = h.report().unwrap();
     assert_eq!(report.n_completed, 40);
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+#[test]
+fn events_and_report_over_tcp() {
+    // The full observability path over the wire: SDK tails the event log
+    // incrementally and reads the streaming report.
+    let (h, addr, stop) = start(real_testbed(), 0);
+    let mut client = FrenzyClient::new(addr.to_string());
+    let id = client.submit("gpt2-350m", 8, 200).unwrap();
+    h.drain().unwrap();
+    // Elastic churn shows up in the log with the preempted job ids.
+    client
+        .scale(&ScaleRequestV1::Join {
+            gpu: "A100-80G".into(),
+            count: 2,
+            link: frenzy::config::LinkKind::NvLink,
+        })
+        .unwrap();
+    client.scale(&ScaleRequestV1::Leave { node: 5 }).unwrap();
+
+    let page = client.events(&EventsRequestV1::default()).unwrap();
+    assert!(!page.dropped);
+    let has = |pred: &dyn Fn(&EventKind) -> bool| page.events.iter().any(|e| pred(&e.kind));
+    assert!(has(&|k| matches!(k, EventKind::Arrival { job } if *job == id)));
+    assert!(has(&|k| matches!(k, EventKind::Placed { job, .. } if *job == id)));
+    assert!(has(&|k| matches!(k, EventKind::Finished { job, .. } if *job == id)));
+    assert!(has(&|k| matches!(k, EventKind::NodeJoined { node: 5, .. })));
+    assert!(has(&|k| matches!(k, EventKind::NodeLeft { node: 5, .. })));
+    // Tail from next_since: quiet cluster, no new events.
+    let tail = client
+        .events(&EventsRequestV1 { since: page.next_since, limit: 100 })
+        .unwrap();
+    assert!(tail.events.is_empty());
+    assert_eq!(tail.next_since, page.next_since);
+
+    let report = client.report().unwrap();
+    assert_eq!(report.n_completed, 1);
+    assert_eq!(report.n_jobs, 1);
+    let hist_total: u64 =
+        report.jct_hist.iter().map(|&(_, c)| c).sum::<u64>() + report.jct_hist_overflow;
+    assert_eq!(hist_total, 1, "one completed job lands in exactly one bucket");
+    assert!(report.avg_utilization >= 0.0 && report.avg_utilization <= 1.0);
     stop.store(true, Ordering::Relaxed);
     h.shutdown();
 }

@@ -9,7 +9,8 @@ use frenzy::engine::ClusterEvent;
 use frenzy::job::{JobSpec, JobState};
 use frenzy::marp::Marp;
 use frenzy::sched::has::Has;
-use frenzy::serverless::{spawn, CoordinatorConfig, ScaleOp, SubmitRequest};
+use frenzy::sched::sia::Sia;
+use frenzy::serverless::{spawn, CoordinatorConfig, Handle, ScaleOp, SchedulerKind, SubmitRequest};
 use frenzy::sim::{SimConfig, Simulator};
 use frenzy::workload::{helios, philly};
 
@@ -45,7 +46,14 @@ fn differential(trace_name: &str, trace: Vec<JobSpec>) {
     let sim_report = sim.run(trace_name);
     let sim_decisions: Vec<(u64, Vec<(usize, u32)>)> = sim.engine().decision_log().to_vec();
     let sim_completed: Vec<u64> = {
-        let mut ids: Vec<u64> = sim.outcomes().iter().map(|o| o.id).collect();
+        let mut ids: Vec<u64> = sim
+            .event_log()
+            .iter()
+            .filter_map(|r| match r.kind {
+                frenzy::engine::EventKind::Finished { job, .. } => Some(job),
+                _ => None,
+            })
+            .collect();
         ids.sort_unstable();
         ids
     };
@@ -130,6 +138,110 @@ fn differential_helios_prefix_sim_vs_live() {
     differential("helios", trace);
 }
 
+/// Poll a job until it reaches a terminal state (live runs with real OOM
+/// detection delays and round-timer ticks need more than an instant).
+fn wait_terminal(h: &Handle, id: u64) -> JobState {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let st = h.status(id).unwrap().unwrap().state;
+        if st.is_terminal() {
+            return st;
+        }
+        assert!(std::time::Instant::now() < deadline, "job {id} not terminal after 30s");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn differential_sia_live_timer_vs_sim() {
+    // The timer acceptance test: Sia — an *interval* scheduler — driven by
+    // the live coordinator's round-timer thread on a WallClock must make
+    // exactly the placements the simulator makes on the same serialized
+    // trace, and fold to the same RunReport aggregates. Before the timer
+    // existed the live engine rounded immediately, so Sia's cadence
+    // semantics only existed in simulation.
+    let spec = sia_sim();
+    let models = ["gpt2-125m", "gpt2-350m", "gpt2-760m"];
+    let trace: Vec<JobSpec> = (0..6)
+        .map(|i| {
+            JobSpec::new(
+                i as u64,
+                frenzy::config::models::model_by_name(models[i % models.len()]).unwrap(),
+                8,
+                5_000,
+                i as f64 * 1e9, // serialized: each job runs on an empty cluster
+            )
+        })
+        .collect();
+
+    // --- virtual-clock path: the simulator with Sia -------------------
+    let mut sia = Sia::new(&spec);
+    let cfg = SimConfig { max_sim_time_s: 1e18, ..SimConfig::default() };
+    let mut sim = Simulator::new(&spec, &mut sia, cfg);
+    sim.submit_all(&trace);
+    let sim_report = sim.run("sia-diff");
+    let sim_decisions = sim.engine().decision_log().to_vec();
+
+    // --- wall-clock path: live coordinator + round timer --------------
+    // Submissions are serialized by *waiting for each job to go terminal*
+    // (not by the instant stub alone: an OOM retry keeps a job alive
+    // across several rounds), so every round sees the same single-job
+    // queue and empty cluster as the simulator.
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        scheduler: SchedulerKind::Sia { round_interval_s: 0.05 },
+        round_tick_period_s: 0.01,
+        oom_detect_ms: 20,
+        ..CoordinatorConfig::default()
+    };
+    let (h, _j) = spawn(spec, cfg);
+    let mut live_states = Vec::new();
+    for j in &trace {
+        let id = h
+            .submit(SubmitRequest {
+                model: j.model.name.to_string(),
+                global_batch: j.train.global_batch,
+                total_samples: j.total_samples,
+            })
+            .unwrap();
+        live_states.push(wait_terminal(&h, id));
+    }
+    let live_report = h.report().unwrap();
+    let live_decisions = h.decisions().unwrap();
+
+    // Same placements, in order (live ids are 1-based).
+    assert_eq!(
+        sim_decisions.len(),
+        live_decisions.len(),
+        "sim and live Sia must place the same number of times"
+    );
+    for (k, (s, l)) in sim_decisions.iter().zip(live_decisions.iter()).enumerate() {
+        assert_eq!(s.0 + 1, l.0, "placement #{k} is for a different job");
+        assert_eq!(s.1, l.1, "placement #{k} (job {}) differs: {:?} vs {:?}", s.0, s.1, l.1);
+    }
+    // Same aggregates (clock-independent counters).
+    assert_eq!(sim_report.n_jobs, live_report.n_jobs);
+    assert_eq!(sim_report.n_completed, live_report.n_completed);
+    assert_eq!(sim_report.n_rejected, live_report.n_rejected);
+    assert_eq!(sim_report.total_oom_retries, live_report.total_oom_retries);
+    assert_eq!(sim_report.n_oom_events, live_report.n_oom_events);
+    assert_eq!(live_report.scheduler, "sia");
+    // Terminal states agree job by job.
+    for (i, st) in live_states.iter().enumerate() {
+        let sim_done = sim.event_log().iter().any(|r| {
+            matches!(r.kind, frenzy::engine::EventKind::Finished { job, .. } if job == i as u64)
+        });
+        match st {
+            JobState::Completed => assert!(sim_done, "job {i}: live-only completion"),
+            JobState::Rejected => assert!(!sim_done, "job {i}: live-only rejection"),
+            other => panic!("job {i} not terminal: {other:?}"),
+        }
+    }
+    let (total, idle, _) = h.cluster_info().unwrap();
+    assert_eq!(total, idle, "live resources all released");
+    h.shutdown();
+}
+
 #[test]
 fn node_leave_mid_sim_preempts_and_recovers() {
     // Elasticity through the *simulator* wrapper: jobs running when node 2
@@ -152,9 +264,24 @@ fn node_leave_mid_sim_preempts_and_recovers() {
     assert!(sim.conservation_ok());
     assert_eq!(sim.cluster_state().idle_gpus(), sim.cluster_state().total_gpus());
     assert_eq!(sim.cluster_state().total_gpus(), 7, "the A800 node is gone");
-    // If the 7b job completed, it must record the preemption as a retry.
-    if let Some(o) = sim.outcomes().iter().find(|o| o.id == 0) {
-        assert!(o.attempts >= 2, "preempted job re-placed with attempts+1, got {}", o.attempts);
+    // If the 7b job completed, it must record the preemption as a retry:
+    // the event log shows a second placement with attempts >= 2.
+    use frenzy::engine::EventKind;
+    let completed_0 = sim
+        .event_log()
+        .iter()
+        .any(|r| matches!(r.kind, EventKind::Finished { job: 0, .. }));
+    if completed_0 {
+        let max_attempts = sim
+            .event_log()
+            .iter()
+            .filter_map(|r| match r.kind {
+                EventKind::Placed { job: 0, attempts, .. } => Some(attempts),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0);
+        assert!(max_attempts >= 2, "preempted job re-placed with attempts+1, got {max_attempts}");
     }
 }
 
