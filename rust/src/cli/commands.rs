@@ -7,7 +7,9 @@
 //! coordinator plus the thread-pool HTTP front-end. `replay` drives a
 //! workload trace through the **live** engine (wall-clock coordinator +
 //! timing stub) instead of the simulator — same
-//! [`crate::engine::SchedulingEngine`], different clock.
+//! [`crate::engine::SchedulingEngine`], different clock — and with
+//! `--addr` replays against a *remote* `frenzy serve` over HTTP,
+//! exercising the full network path.
 
 use super::Args;
 use crate::config::cluster_by_name;
@@ -273,6 +275,23 @@ fn fmt_event(e: &EventV1) -> String {
             "job {job} OOMed (epoch {epoch}) — {}",
             if *requeued { "requeued" } else { "attempt budget exhausted" }
         ),
+        EventKind::OomObserved { job, epoch, node, predicted_bytes, observed_bytes, capacity_bytes } => {
+            format!(
+                "job {job} observed OOM on node {node} (epoch {epoch}): {} used vs {} capacity (predicted {})",
+                fmt_bytes(*observed_bytes),
+                fmt_bytes(*capacity_bytes),
+                fmt_bytes(*predicted_bytes)
+            )
+        }
+        EventKind::DrainRequested { job, epoch, node, deadline_s } => format!(
+            "job {job} asked to drain (epoch {epoch}, node {node} retiring, deadline {deadline_s:.3}s)"
+        ),
+        EventKind::Drained { job, epoch, node, steps_ckpt, state_digest } => format!(
+            "job {job} drained off node {node} (epoch {epoch}): checkpointed at step {steps_ckpt} (digest {state_digest:#x})"
+        ),
+        EventKind::ResumedFromCkpt { job, epoch, steps_ckpt } => {
+            format!("job {job} resumed from checkpoint at step {steps_ckpt} (epoch {epoch})")
+        }
         EventKind::Preempted { job, node } => {
             format!("job {job} preempted (node {node} retired)")
         }
@@ -289,16 +308,21 @@ fn fmt_event(e: &EventV1) -> String {
         EventKind::NodeLeft { node, preempted } => {
             format!("node {node} left; displaced jobs {preempted:?}")
         }
+        EventKind::NodeRetired { node } => {
+            format!("node {node} fully retired (drain complete; safe to power off)")
+        }
     };
     format!("[{:>9.3}s] #{:<5} {detail}", e.time, e.seq)
 }
 
-/// `frenzy events [--since N] [--limit L] [--follow] [--addr A]`
+/// `frenzy events [--since N] [--limit L] [--follow] [--wait-ms W] [--addr A]`
 ///
 /// Prints the cluster event log — the audit trail of arrivals, placements
-/// (with the chosen plan), finishes, OOMs, preemptions, rejections, and
-/// node joins/leaves. `--follow` tails the stream, polling from the last
-/// seen sequence number twice a second.
+/// (with the chosen plan), finishes, observed OOMs, drains, preemptions,
+/// rejections, and node joins/leaves. `--follow` tails the stream via the
+/// server's long-poll (`?wait_ms=`): each request parks on the server
+/// until a new event lands or the wait elapses, so an idle follower sends
+/// a few quiet requests per minute instead of busy-polling.
 pub fn cmd_events(args: &Args) -> Result<()> {
     let mut c = client(args);
     let mut req = EventsRequestV1 {
@@ -307,10 +331,15 @@ pub fn cmd_events(args: &Args) -> Result<()> {
         limit: args
             .opt_parse_or("limit", crate::serverless::api::DEFAULT_EVENTS_LIMIT)?
             .clamp(1, crate::serverless::api::MAX_EVENTS_LIMIT),
+        wait_ms: 0,
     };
     let follow = args.flag("follow");
+    let follow_wait: u64 = args
+        .opt_parse_or("wait-ms", 5_000u64)?
+        .clamp(1, crate::serverless::api::MAX_EVENTS_WAIT_MS);
     let mut printed = 0usize;
     loop {
+        let t0 = std::time::Instant::now();
         let page = c.events(&req)?;
         if page.dropped {
             eprintln!(
@@ -335,14 +364,24 @@ pub fn cmd_events(args: &Args) -> Result<()> {
             }
             return Ok(());
         }
-        std::thread::sleep(std::time::Duration::from_millis(500));
+        // Tail mode: long-poll from the last seen sequence number. If the
+        // server answered an empty page early (its long-poll slots were
+        // all taken, so it degraded to an immediate answer), pace the next
+        // request ourselves instead of hammering it in a tight loop.
+        if req.wait_ms > 0 && page.events.is_empty() {
+            let want = std::time::Duration::from_millis(req.wait_ms);
+            let elapsed = t0.elapsed();
+            if elapsed < want {
+                std::thread::sleep(want - elapsed);
+            }
+        }
+        req.wait_ms = follow_wait;
     }
 }
 
-/// `frenzy report [--addr A]` — the coordinator's streaming run report.
-pub fn cmd_report(args: &Args) -> Result<()> {
-    let mut c = client(args);
-    let r: ReportV1 = c.report()?;
+/// Render a v1 report as tables (shared by `frenzy report` and the remote
+/// replay summary).
+fn render_report(r: &ReportV1) {
     let mut t = Table::new(&["metric", "value"])
         .with_title(&format!("run report: {} ({})", r.scheduler, r.workload));
     t.row_str(&["jobs", &r.n_jobs.to_string()]);
@@ -358,6 +397,17 @@ pub fn cmd_report(args: &Args) -> Result<()> {
     t.row_str(&["makespan", &fmt_duration(r.makespan_s)]);
     t.row_str(&["OOM events", &r.n_oom_events.to_string()]);
     t.row_str(&["OOM/preempt retries", &r.total_oom_retries.to_string()]);
+    t.row_str(&["graceful drains", &r.n_drains.to_string()]);
+    t.row_str(&["steps executed", &r.total_steps_executed.to_string()]);
+    if r.mem_pred_samples > 0 {
+        let acc = format!(
+            "{:.1}% avg / {:.1}% min ({} dispatches)",
+            r.mem_pred_accuracy_avg * 100.0,
+            r.mem_pred_accuracy_min * 100.0,
+            r.mem_pred_samples
+        );
+        t.row_str(&["memory prediction", &acc]);
+    }
     t.row_str(&["sched overhead (wall)", &fmt_duration(r.sched_overhead_s)]);
     t.row_str(&["utilization", &format!("{:.1}%", r.avg_utilization * 100.0)]);
     println!("{}", t.render());
@@ -372,16 +422,98 @@ pub fn cmd_report(args: &Args) -> Result<()> {
         }
         println!("{}", h.render());
     }
+}
+
+/// `frenzy report [--addr A]` — the coordinator's streaming run report.
+pub fn cmd_report(args: &Args) -> Result<()> {
+    let mut c = client(args);
+    let r: ReportV1 = c.report()?;
+    render_report(&r);
+    Ok(())
+}
+
+/// Remote half of `frenzy replay --addr`: drive the trace against a
+/// running `frenzy serve` over the v1 HTTP API. The server executes with
+/// whatever scheduler/cluster/executor it was started with; this side only
+/// submits, polls until every submitted job goes terminal, and renders the
+/// server's streaming report. The stall deadline (`--timeout`, seconds)
+/// only fires when *no job makes progress* for that long — a slow server
+/// that keeps completing jobs is never aborted.
+fn replay_remote(
+    addr: &str,
+    workload: &str,
+    jobs: &[JobSpec],
+    speedup: f64,
+    stall_timeout_s: u64,
+) -> Result<()> {
+    let mut c = FrenzyClient::new(addr);
+    if !c.health()? {
+        bail!("server at {addr} is not healthy");
+    }
+    println!(
+        "replaying {} jobs from '{}' against {} over HTTP ({}x speedup)",
+        jobs.len(),
+        workload,
+        addr,
+        speedup,
+    );
+    let mut last_submit = 0.0f64;
+    for j in jobs {
+        let gap = ((j.submit_time - last_submit) / speedup).clamp(0.0, 0.25);
+        if gap > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(gap));
+        }
+        last_submit = j.submit_time;
+        c.submit(&j.model.name, j.train.global_batch, j.total_samples)?;
+    }
+    // Wait until every submitted job is terminal. Two filtered list
+    // queries per cycle (not one status request per job, which would load
+    // the server we are measuring with O(jobs) requests every 100 ms);
+    // this assumes the replay is the server's only submitter, which is
+    // the point of a replay run. The deadline resets whenever the live
+    // count drops, so it bounds *stall* time, not total runtime.
+    let stall = std::time::Duration::from_secs(stall_timeout_s.max(1));
+    let mut deadline = std::time::Instant::now() + stall;
+    let mut last_remaining = usize::MAX;
+    let live_count = |c: &mut FrenzyClient, state| -> Result<usize> {
+        Ok(c.list(&ListRequestV1 { state: Some(state), offset: 0, limit: 1 })?.total)
+    };
+    loop {
+        let remaining = live_count(&mut c, crate::job::JobState::Queued)?
+            + live_count(&mut c, crate::job::JobState::Running)?;
+        if remaining == 0 {
+            break;
+        }
+        if remaining < last_remaining {
+            last_remaining = remaining;
+            deadline = std::time::Instant::now() + stall;
+        }
+        if std::time::Instant::now() > deadline {
+            bail!(
+                "{remaining} jobs made no progress for {}s — check the server \
+                 (raise --timeout for slow executors)",
+                stall.as_secs()
+            );
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let report = c.report()?;
+    render_report(&report);
     Ok(())
 }
 
 /// `frenzy replay --workload philly --tasks 20 [--speedup 1000] [--stub-ms 20]
-///               [--cluster real|sim] [--seed S]`
+///               [--cluster real|sim] [--seed S] [--addr host:port]
+///               [--timeout 300]`
 ///
-/// Replays a workload trace through the **live** scheduling path: spawns
-/// the wall-clock coordinator with the timing stub as executor, submits the
-/// trace's jobs in arrival order (inter-arrival gaps divided by
-/// `--speedup`, capped at 250 ms each), drains, and prints the run report.
+/// Replays a workload trace through the **live** scheduling path. Without
+/// `--addr` it spawns the wall-clock coordinator in-process with the
+/// timing stub as executor; with `--addr` it submits the same trace to a
+/// remote `frenzy serve` over the v1 HTTP API — exercising the full
+/// network path (SDK framing, server routing, coordinator mailbox) — then
+/// waits for every submitted job to go terminal and prints the server's
+/// streaming report. In both modes jobs are submitted in arrival order
+/// (inter-arrival gaps divided by `--speedup`, capped at 250 ms each).
 /// Because the live coordinator and the simulator share one
 /// `SchedulingEngine`, this exercises exactly the code the figures
 /// simulate — on real threads, real time, and the real dispatch path.
@@ -395,6 +527,10 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
     let jobs = load_workload(workload, n, seed)?;
     if speedup <= 0.0 {
         bail!("--speedup must be > 0");
+    }
+    if let Some(addr) = args.opt("addr") {
+        let stall_timeout_s: u64 = args.opt_parse_or("timeout", 300)?;
+        return replay_remote(addr, workload, &jobs, speedup, stall_timeout_s);
     }
 
     // Interval schedulers replay with a fast default round cadence so the
@@ -448,13 +584,21 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
 }
 
 /// `frenzy serve [--addr A] [--cluster C] [--steps N]
-///              [--sched has|sia|opportunistic] [--round-interval S]`
+///              [--sched has|sia|opportunistic] [--round-interval S]
+///              [--drain-ms M] [--ckpt-steps K]`
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let cluster = cluster_arg(args)?;
     let addr = args.opt_or("addr", DEFAULT_ADDR);
     let steps: u64 = args.opt_parse_or("steps", 50)?;
     let scheduler = scheduler_arg(args, 30.0)?;
-    let cfg = CoordinatorConfig { max_real_steps: steps, scheduler, ..Default::default() };
+    let defaults = CoordinatorConfig::default();
+    let cfg = CoordinatorConfig {
+        max_real_steps: steps,
+        scheduler,
+        drain_grace_ms: args.opt_parse_or("drain-ms", defaults.drain_grace_ms)?,
+        ckpt_every_steps: args.opt_parse_or("ckpt-steps", defaults.ckpt_every_steps)?,
+        ..defaults
+    };
     let (handle, _join) = crate::serverless::spawn(cluster, cfg);
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let local = crate::serverless::server::serve(handle, addr, stop)?;
@@ -464,8 +608,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     println!("  GET  /v1/jobs/<id>");
     println!("  POST /v1/jobs/<id>/cancel");
     println!("  POST /v1/predict         {{\"model\":\"gpt2-7b\",\"batch\":2}}  (dry run)");
-    println!("  GET  /v1/cluster/events  ?since=0&limit=500   (audit log)");
-    println!("  GET  /v1/report          (streaming run report)");
+    println!("  GET  /v1/cluster/events  ?since=0&limit=500&wait_ms=5000  (audit log; long-poll)");
+    println!("  GET  /v1/report          (streaming run report + memory-prediction accuracy)");
     println!("  GET  /v1/cluster | /v1/healthz    (see API.md; unversioned aliases served)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -191,12 +191,14 @@ impl CapacityIndex {
         }
     }
 
-    /// Register a freshly appended node. Returns `false` when the node's
-    /// GPU size introduces a *new* size class — the caller must rebuild
-    /// (rare: only when an elastic join brings a never-seen GPU type).
-    pub(crate) fn on_grow(&mut self, node: &Node) -> bool {
-        let Ok(c) = self.sizes.binary_search(&node.gpu.mem_bytes) else {
-            return false;
+    /// Register a freshly appended node. A node of a previously seen GPU
+    /// size is O(log n); a *never-seen* size class is inserted incrementally
+    /// via [`CapacityIndex::insert_class`] — O(n + S log S), no sort and no
+    /// per-node re-bucketing — instead of the old full O(n log n) rebuild.
+    pub(crate) fn on_grow(&mut self, node: &Node) {
+        let c = match self.sizes.binary_search(&node.gpu.mem_bytes) {
+            Ok(c) => c,
+            Err(_) => self.insert_class(node.gpu.mem_bytes),
         };
         debug_assert_eq!(node.id, self.node_class.len(), "grow appends node ids");
         self.node_class.push(c);
@@ -205,7 +207,36 @@ impl CapacityIndex {
             self.nonzero.add(c, 1);
             self.buckets[c].entry(node.idle).or_default().insert(node.id);
         }
-        true
+    }
+
+    /// Splice a new (empty) size class into the index at its sorted
+    /// position: existing classes at or above it shift up by one, every
+    /// node's class id is bumped accordingly, and the two Fenwick trees are
+    /// re-summed from the (already correct) per-class buckets. Costs
+    /// O(nodes) for the class-id bump plus O(S log S) for the trees —
+    /// cheaper than the old rebuild, which also re-sorted and re-bucketed
+    /// every node. Returns the new class id.
+    fn insert_class(&mut self, size: u64) -> usize {
+        let p = self.sizes.partition_point(|&s| s < size);
+        self.sizes.insert(p, size);
+        self.buckets.insert(p, IdleBuckets::new());
+        for c in &mut self.node_class {
+            if *c >= p {
+                *c += 1;
+            }
+        }
+        let s = self.sizes.len();
+        let mut idle = Fenwick::new(s);
+        let mut nonzero = Fenwick::new(s);
+        for (c, bucket) in self.buckets.iter().enumerate() {
+            for (&count, nodes) in bucket {
+                idle.add(c, count as i64 * nodes.len() as i64);
+                nonzero.add(c, nodes.len() as i64);
+            }
+        }
+        self.idle = idle;
+        self.nonzero = nonzero;
+        p
     }
 
     /// Invariant check used by tests and debug assertions: the incremental
@@ -496,12 +527,15 @@ mod tests {
             link: crate::config::LinkKind::NvLink,
         };
         let id = s.add_node(&spec);
-        assert!(idx.on_grow(&s.nodes[id]), "80G class already exists");
+        idx.on_grow(&s.nodes[id]);
         assert!(idx.check_against(&s));
     }
 
     #[test]
-    fn grow_new_class_requests_rebuild() {
+    fn grow_new_class_inserts_incrementally() {
+        // A never-seen GPU size (11G, below every existing class) must be
+        // spliced in without a rebuild: the incremental index equals a
+        // fresh build and answers suffix queries across the new boundary.
         let mut s = state();
         let mut idx = CapacityIndex::build(&s);
         let spec = crate::config::NodeSpec {
@@ -510,10 +544,21 @@ mod tests {
             link: crate::config::LinkKind::Pcie,
         };
         let id = s.add_node(&spec);
-        assert!(!idx.on_grow(&s.nodes[id]));
-        let rebuilt = CapacityIndex::build(&s);
-        assert_eq!(rebuilt.idle_with_mem(11 * GIB), 19);
-        assert_eq!(rebuilt.idle_with_mem(40 * GIB), 11);
+        idx.on_grow(&s.nodes[id]);
+        assert!(idx.check_against(&s));
+        assert_eq!(idx.idle_with_mem(11 * GIB), 19);
+        assert_eq!(idx.idle_with_mem(40 * GIB), 11);
+        // A middle class (24G) shifts ids of the classes above it.
+        let spec = crate::config::NodeSpec {
+            gpu: crate::config::gpu_by_name("RTX6000").unwrap(), // 24G
+            count: 4,
+            link: crate::config::LinkKind::Pcie,
+        };
+        let id = s.add_node(&spec);
+        idx.on_grow(&s.nodes[id]);
+        assert!(idx.check_against(&s));
+        assert_eq!(idx.idle_with_mem(24 * GIB), 15);
+        assert_eq!(idx.idle_with_mem(80 * GIB), 8);
     }
 
     #[test]

@@ -5,7 +5,18 @@
 //! The orchestrator also maintains the [`CapacityIndex`] incrementally on
 //! every take/give/grow/shrink, so scheduling rounds answer capacity
 //! questions in logarithmic time instead of scanning the node list — see
-//! [`index`] for the design.
+//! [`index`] for the design. A [`DeviceMemory`] byte ledger sits beside the
+//! index: the engine charges every dispatch's observed per-GPU peak bytes
+//! through [`Orchestrator::charge_memory`], and [`Orchestrator::release`]
+//! frees GPUs *and* bytes atomically so the two ledgers cannot diverge.
+//!
+//! Node retirement comes in two flavors: [`Orchestrator::shrink`] is the
+//! instant preemption path (every hosted job released immediately), while
+//! [`Orchestrator::retire_begin`] / [`Orchestrator::reap_retiring`]
+//! implement graceful drain — the node stops accepting placements (idle
+//! capacity stripped), hosted jobs keep their GPUs until they checkpoint
+//! and release, and each release is reaped from the retiring node until its
+//! capacity reaches zero.
 
 pub mod index;
 
@@ -13,7 +24,8 @@ pub use index::{CapacityIndex, CapacityOverlay, ClusterView, IdleBuckets};
 
 use crate::config::{ClusterSpec, GpuSpec, LinkKind, NodeSpec};
 use crate::job::JobId;
-use std::collections::BTreeMap;
+use crate::runtime::device::{DeviceMemory, DeviceOom};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Node identifier (index into the cluster's node list).
 pub type NodeId = usize;
@@ -66,6 +78,12 @@ pub enum ClusterError {
     AlreadyAllocated(JobId),
     /// Job holds no allocation.
     NotAllocated(JobId),
+    /// A device-memory charge exceeded a node's per-GPU capacity — a real
+    /// out-of-memory, carrying the observed bytes.
+    MemoryExceeded { node: NodeId, observed_bytes: u64, capacity_bytes: u64 },
+    /// The node exists but is already in graceful drain — a second
+    /// retirement must not reset its jobs' deadlines.
+    AlreadyDraining(NodeId),
 }
 
 impl std::fmt::Display for ClusterError {
@@ -77,6 +95,12 @@ impl std::fmt::Display for ClusterError {
             ClusterError::NoSuchNode(n) => write!(f, "no such node {n}"),
             ClusterError::AlreadyAllocated(j) => write!(f, "job {j} already allocated"),
             ClusterError::NotAllocated(j) => write!(f, "job {j} not allocated"),
+            ClusterError::MemoryExceeded { node, observed_bytes, capacity_bytes } => write!(
+                f,
+                "node {node}: observed {observed_bytes} bytes/GPU exceeds capacity \
+                 {capacity_bytes}"
+            ),
+            ClusterError::AlreadyDraining(n) => write!(f, "node {n} is already draining"),
         }
     }
 }
@@ -185,13 +209,19 @@ pub struct Orchestrator {
     state: ClusterState,
     ledger: BTreeMap<JobId, Allocation>,
     index: CapacityIndex,
+    /// Device-memory byte ledger, maintained beside the GPU-count ledger.
+    device: DeviceMemory,
+    /// Nodes in graceful drain: no idle capacity, hosted jobs still
+    /// resident; fully retired (total = 0) once the last job releases.
+    retiring: BTreeSet<NodeId>,
 }
 
 impl Orchestrator {
     pub fn new(spec: &ClusterSpec) -> Self {
         let state = ClusterState::from_spec(spec);
         let index = CapacityIndex::build(&state);
-        Self { state, ledger: BTreeMap::new(), index }
+        let device = DeviceMemory::new(state.nodes.iter().map(|n| n.gpu.mem_bytes).collect());
+        Self { state, ledger: BTreeMap::new(), index, device, retiring: BTreeSet::new() }
     }
 
     pub fn state(&self) -> &ClusterState {
@@ -264,7 +294,8 @@ impl Orchestrator {
         Ok(())
     }
 
-    /// Release a job's resources.
+    /// Release a job's resources — GPUs and any device-memory charge,
+    /// atomically (the byte ledger cannot outlive the GPU allocation).
     pub fn release(&mut self, job: JobId) -> Result<Allocation, ClusterError> {
         let alloc = self.ledger.remove(&job).ok_or(ClusterError::NotAllocated(job))?;
         for &(node, count) in &alloc.parts {
@@ -277,18 +308,116 @@ impl Orchestrator {
             };
             self.index.set_idle(node, old, new);
         }
+        let _ = self.device.release(job);
         Ok(alloc)
     }
 
-    /// Elastic grow: add a node whose GPUs are immediately idle.
+    /// Charge a job's observed per-GPU peak bytes against the device-memory
+    /// ledger of every node in its allocation. The job must already hold a
+    /// GPU allocation; a charge that does not fit a node's per-GPU capacity
+    /// fails with [`ClusterError::MemoryExceeded`] — a *real* OOM — and
+    /// pins nothing.
+    pub fn charge_memory(&mut self, job: JobId, per_gpu_bytes: u64) -> Result<(), ClusterError> {
+        let alloc = self.ledger.get(&job).ok_or(ClusterError::NotAllocated(job))?;
+        let parts = alloc.parts.clone();
+        match self.device.try_charge(job, &parts, per_gpu_bytes) {
+            Ok(()) => Ok(()),
+            Err(DeviceOom { node, observed_bytes, capacity_bytes }) => {
+                Err(ClusterError::MemoryExceeded { node, observed_bytes, capacity_bytes })
+            }
+        }
+    }
+
+    /// The device-memory byte ledger (read access for tests and reports).
+    pub fn device_memory(&self) -> &DeviceMemory {
+        &self.device
+    }
+
+    /// Elastic grow: add a node whose GPUs are immediately idle. Both a
+    /// previously seen GPU size and a brand-new size class are inserted
+    /// into the capacity index incrementally (no O(n log n) rebuild).
     pub fn grow(&mut self, spec: &NodeSpec) -> NodeId {
         let id = self.state.add_node(spec);
-        if !self.index.on_grow(&self.state.nodes[id]) {
-            // The join introduced a brand-new GPU size class; rebuild the
-            // index (rare — a never-seen GPU type — and O(n log n)).
-            self.index = CapacityIndex::build(&self.state);
-        }
+        self.index.on_grow(&self.state.nodes[id]);
+        self.device.on_grow(spec.gpu.mem_bytes);
         id
+    }
+
+    /// True when `node` exists, still has capacity, and is not draining.
+    pub fn node_active(&self, node: NodeId) -> bool {
+        self.state.nodes.get(node).is_some_and(|n| n.total > 0)
+            && !self.retiring.contains(&node)
+    }
+
+    /// Jobs whose allocation touches `node` (the set a retirement
+    /// displaces — shared by [`Orchestrator::shrink`] and
+    /// [`Orchestrator::retire_begin`]).
+    fn jobs_on(&self, node: NodeId) -> Vec<JobId> {
+        self.ledger
+            .values()
+            .filter(|a| a.parts.iter().any(|&(nid, _)| nid == node))
+            .map(|a| a.job)
+            .collect()
+    }
+
+    /// Strip a node's idle GPUs out of its capacity (index kept in sync);
+    /// returns the remaining (still-allocated) capacity. The single place
+    /// where retirement removes capacity, used at drain start and on every
+    /// reap.
+    fn strip_idle(&mut self, node: NodeId) -> u32 {
+        let (old_idle, remaining) = {
+            let n = &mut self.state.nodes[node];
+            let old = n.idle;
+            n.total -= old;
+            n.idle = 0;
+            (old, n.total)
+        };
+        self.index.set_idle(node, old_idle, 0);
+        remaining
+    }
+
+    /// Begin a graceful drain of `node`: strip its idle capacity (no new
+    /// placements land on it) and return the jobs still resident there —
+    /// their GPUs stay allocated until each checkpoints and releases. A
+    /// node with no resident jobs is fully retired immediately. Errors on
+    /// unknown/retired ([`ClusterError::NoSuchNode`]) and on
+    /// already-draining nodes ([`ClusterError::AlreadyDraining`] — a
+    /// second leave must not reset the jobs' deadlines).
+    pub fn retire_begin(&mut self, node: NodeId) -> Result<Vec<JobId>, ClusterError> {
+        let n = self.state.nodes.get(node).ok_or(ClusterError::NoSuchNode(node))?;
+        if self.retiring.contains(&node) {
+            return Err(ClusterError::AlreadyDraining(node));
+        }
+        if n.total == 0 {
+            return Err(ClusterError::NoSuchNode(node));
+        }
+        let affected = self.jobs_on(node);
+        if self.strip_idle(node) > 0 {
+            self.retiring.insert(node);
+        }
+        Ok(affected)
+    }
+
+    /// Reap freed capacity off every retiring node: GPUs released back to a
+    /// draining node are stripped instead of becoming placeable, and a node
+    /// whose capacity reaches zero is fully retired. Call after any release
+    /// that may have touched a retiring node; returns the node ids that
+    /// completed retirement.
+    pub fn reap_retiring(&mut self) -> Vec<NodeId> {
+        let mut done = Vec::new();
+        let nodes: Vec<NodeId> = self.retiring.iter().copied().collect();
+        for node in nodes {
+            if self.strip_idle(node) == 0 {
+                self.retiring.remove(&node);
+                done.push(node);
+            }
+        }
+        done
+    }
+
+    /// Nodes currently in graceful drain.
+    pub fn retiring_count(&self) -> usize {
+        self.retiring.len()
     }
 
     /// Elastic shrink: retire `node`, releasing every allocation touching
@@ -302,12 +431,7 @@ impl Orchestrator {
         if n.total == 0 {
             return Err(ClusterError::NoSuchNode(node));
         }
-        let affected: Vec<JobId> = self
-            .ledger
-            .values()
-            .filter(|a| a.parts.iter().any(|&(nid, _)| nid == node))
-            .map(|a| a.job)
-            .collect();
+        let affected = self.jobs_on(node);
         let mut released = Vec::with_capacity(affected.len());
         for job in affected {
             released.push(self.release(job).expect("ledger entry exists"));
@@ -323,7 +447,10 @@ impl Orchestrator {
         Ok(released)
     }
 
-    /// Invariant check used by tests: ledger totals + idle == totals.
+    /// Invariant check used by tests: ledger totals + idle == totals, and
+    /// the device-memory byte ledger agrees with the GPU-count ledger
+    /// (every charge belongs to a resident job, per-node bytes add up, no
+    /// per-GPU charge exceeds its node's capacity).
     pub fn check_conservation(&self) -> bool {
         let mut used = vec![0u32; self.state.nodes.len()];
         for alloc in self.ledger.values() {
@@ -338,6 +465,7 @@ impl Orchestrator {
             .nodes
             .iter()
             .all(|n| n.idle + used[n.id] == n.total)
+            && self.device.check_conservation(|job| self.ledger.contains_key(&job))
     }
 }
 
@@ -470,7 +598,7 @@ mod tests {
         assert!(o.check_index());
         o.allocate(Allocation { job: 1, parts: vec![(2, 3), (0, 1)] }).unwrap();
         assert!(o.check_index());
-        // A never-seen GPU size forces the rebuild path.
+        // A never-seen GPU size takes the incremental class-insert path.
         let spec = NodeSpec {
             gpu: crate::config::gpu_by_name("RTX3090").unwrap(),
             count: 2,
@@ -501,6 +629,81 @@ mod tests {
         assert!(o.check_index());
         // The aggregated form within capacity succeeds.
         o.allocate(Allocation { job: 1, parts: vec![(2, 2), (2, 2)] }).unwrap();
+        assert!(o.check_conservation());
+        assert!(o.check_index());
+    }
+
+    #[test]
+    fn charge_memory_tracks_bytes_and_raises_real_oom() {
+        let mut o = Orchestrator::new(&real_testbed());
+        // Job 1 spans a 40G node (node 0) and an 80G node (node 3).
+        o.allocate(Allocation { job: 1, parts: vec![(0, 2), (3, 1)] }).unwrap();
+        o.charge_memory(1, 30 * GIB).unwrap();
+        assert_eq!(o.device_memory().used_bytes(0), 60 * GIB);
+        assert_eq!(o.device_memory().used_bytes(3), 30 * GIB);
+        assert!(o.check_conservation());
+        // Job 2's observed peak exceeds the 40G card: a real OOM naming the
+        // node, with nothing pinned.
+        o.allocate(Allocation { job: 2, parts: vec![(1, 1)] }).unwrap();
+        let err = o.charge_memory(2, 50 * GIB).unwrap_err();
+        assert_eq!(
+            err,
+            ClusterError::MemoryExceeded {
+                node: 1,
+                observed_bytes: 50 * GIB,
+                capacity_bytes: 40 * GIB
+            }
+        );
+        assert_eq!(o.device_memory().used_bytes(1), 0);
+        assert!(o.check_conservation());
+        // Charging an unallocated job is a ledger error, not an OOM.
+        assert_eq!(o.charge_memory(9, 1).unwrap_err(), ClusterError::NotAllocated(9));
+        // Release frees GPUs and bytes together.
+        o.release(1).unwrap();
+        assert_eq!(o.device_memory().total_used_bytes(), 0);
+        assert!(o.check_conservation());
+    }
+
+    #[test]
+    fn retire_begin_drains_then_reap_completes() {
+        let mut o = Orchestrator::new(&real_testbed());
+        // Job 1 holds 2 of node 2's 4 GPUs; the other 2 are idle.
+        o.allocate(Allocation { job: 1, parts: vec![(2, 2)] }).unwrap();
+        o.charge_memory(1, 10 * GIB).unwrap();
+        let affected = o.retire_begin(2).unwrap();
+        assert_eq!(affected, vec![1]);
+        // Idle capacity stripped immediately; the job keeps its GPUs.
+        assert_eq!(o.state().nodes[2].total, 2);
+        assert_eq!(o.state().nodes[2].idle, 0);
+        assert!(!o.node_active(2), "draining node accepts no placements");
+        assert_eq!(o.retiring_count(), 1);
+        assert!(o.check_conservation());
+        assert!(o.check_index());
+        // A second drain of the same node is rejected.
+        assert!(o.retire_begin(2).is_err());
+        // Nothing released yet: reap finds nothing to strip.
+        assert!(o.reap_retiring().is_empty());
+        // The job releases (post-checkpoint): its GPUs are reaped, the node
+        // completes retirement, and the bytes are freed.
+        o.release(1).unwrap();
+        let done = o.reap_retiring();
+        assert_eq!(done, vec![2]);
+        assert_eq!(o.state().nodes[2].total, 0);
+        assert_eq!(o.retiring_count(), 0);
+        assert_eq!(o.device_memory().total_used_bytes(), 0);
+        assert!(o.check_conservation());
+        assert!(o.check_index());
+        // Fully retired nodes cannot drain again.
+        assert!(o.retire_begin(2).is_err());
+    }
+
+    #[test]
+    fn retire_begin_idle_node_completes_immediately() {
+        let mut o = Orchestrator::new(&real_testbed());
+        let affected = o.retire_begin(0).unwrap();
+        assert!(affected.is_empty());
+        assert_eq!(o.state().nodes[0].total, 0);
+        assert_eq!(o.retiring_count(), 0, "no resident jobs: retired in one step");
         assert!(o.check_conservation());
         assert!(o.check_index());
     }

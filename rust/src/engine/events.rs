@@ -87,6 +87,28 @@ pub enum EventKind {
     /// A running job hit an out-of-memory crash. `requeued` is false when
     /// the attempt budget was exhausted (the job was rejected instead).
     Oomed { job: JobId, epoch: u64, requeued: bool },
+    /// The device-memory byte ledger observed a dispatch that does not fit:
+    /// the job's observed per-GPU peak exceeds `node`'s capacity. A real
+    /// OOM (an `Oomed` record follows once the crash is processed), with
+    /// the predicted-vs-observed bytes that produced it.
+    OomObserved {
+        job: JobId,
+        epoch: u64,
+        node: NodeId,
+        predicted_bytes: u64,
+        observed_bytes: u64,
+        capacity_bytes: u64,
+    },
+    /// A node retirement asked this job to drain gracefully: finish the
+    /// in-flight step, checkpoint, then release by `deadline_s`.
+    DrainRequested { job: JobId, epoch: u64, node: NodeId, deadline_s: f64 },
+    /// A draining job checkpointed and released its GPUs; it resumes from
+    /// `steps_ckpt` (cumulative) on its next placement. `state_digest`
+    /// fingerprints the snapshot.
+    Drained { job: JobId, epoch: u64, node: NodeId, steps_ckpt: u64, state_digest: u64 },
+    /// A placement picked up a checkpoint: the job restarts from
+    /// `steps_ckpt` instead of step 0.
+    ResumedFromCkpt { job: JobId, epoch: u64, steps_ckpt: u64 },
     /// A job lost its GPUs to a node retirement and went back to the queue.
     Preempted { job: JobId, node: NodeId },
     /// A job reached the `Rejected` terminal state.
@@ -96,8 +118,17 @@ pub enum EventKind {
     /// Elasticity: a node joined the cluster.
     NodeJoined { node: NodeId, gpu: String, gpus: u32 },
     /// Elasticity: a node left; `preempted` lists every job it displaced
-    /// (each also gets its own `Preempted` or `Rejected` record).
+    /// (each also gets its own `Preempted`, `Drained`, or `Rejected`
+    /// record). Under graceful drain this marks the *start* of the
+    /// retirement — the node still hosts its draining jobs.
     NodeLeft { node: NodeId, preempted: Vec<JobId> },
+    /// A drain-mode retirement completed — the node's capacity reached
+    /// zero (immediately for an idle node, after the last resident job
+    /// released otherwise) and the hardware is safe to power off. Every
+    /// graceful-drain `NodeLeft` is eventually followed by one of these;
+    /// instant-preemption leaves retire within their `NodeLeft` record and
+    /// do not emit it.
+    NodeRetired { node: NodeId },
 }
 
 /// One entry in the cluster event log.

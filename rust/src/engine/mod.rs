@@ -20,10 +20,19 @@
 //!   via `GET /v1/cluster/events`.
 //!
 //! State changes enter as one [`ClusterEvent`] enum — `Arrival`, `Finish`,
-//! `Oom`, `RoundTick`, plus the elastic `NodeJoin` / `NodeLeave` (a leave
-//! preempts and requeues every job allocated on that node, releasing
-//! resources exactly once). The engine is driven through the
-//! [`clock::Clock`] abstraction:
+//! `Oom`, `RoundTick`, plus the elastic `NodeJoin` / `NodeLeave` and the
+//! drain completion `Drained`. A leave either preempts instantly
+//! (releasing resources exactly once) or, with
+//! [`EngineConfig::drain_grace_s`] set, drains gracefully: hosted jobs
+//! finish their in-flight step, checkpoint
+//! ([`crate::runtime::checkpoint`]), release, and requeue with their
+//! progress preserved. Dispatches charge observed peak bytes against the
+//! [`crate::runtime::device::DeviceMemory`] ledger
+//! ([`EngineConfig::device_memory`]), so out-of-memory is an *observed*
+//! event (`oom_observed`) rather than a scripted timer, and every
+//! placement contributes a predicted-vs-observed accuracy sample to the
+//! run aggregates. The engine is driven through the [`clock::Clock`]
+//! abstraction:
 //!
 //! * [`clock::VirtualClock`] — simulation: the engine's own Finish/Oom
 //!   predictions are scheduled back into the clock's event heap and
@@ -42,12 +51,16 @@ pub mod events;
 
 pub use events::{EventKind, EventLog, EventRecord, EventsPage, RejectReason};
 
-use crate::cluster::{ClusterState, NodeId, Orchestrator};
+use crate::cluster::{ClusterError, ClusterState, NodeId, Orchestrator};
 use crate::config::{ClusterSpec, NodeSpec};
 use crate::job::{JobId, JobSpec};
+use crate::memory::{exact, marp_peak_bytes, Parallelism};
 use crate::metrics::RunAggregates;
 use crate::perfmodel::PerfModel;
+use crate::runtime::checkpoint::{self, Checkpoint, CheckpointStore};
+use crate::runtime::device::DeviceMemory;
 use crate::sched::{PendingJob, PendingQueue, Scheduler};
+use crate::util::prng::SplitMix64;
 use clock::Clock;
 use std::collections::{HashMap, VecDeque};
 
@@ -70,9 +83,20 @@ pub enum ClusterEvent {
     RoundTick,
     /// Elasticity: a node joins the cluster, its GPUs immediately idle.
     NodeJoin(NodeSpec),
-    /// Elasticity: a node leaves. Every job with any GPUs on it is
-    /// preempted — released exactly once and requeued with `attempts + 1`.
+    /// Elasticity: a node leaves. With graceful drain disabled
+    /// (`EngineConfig::drain_grace_s == 0`) every job with any GPUs on it
+    /// is preempted instantly — released exactly once and requeued with
+    /// `attempts + 1`. With drain enabled the node stops accepting
+    /// placements and each hosted job gets a `DrainRequested` deadline
+    /// instead; its GPUs release when the matching [`Self::Drained`]
+    /// arrives.
     NodeLeave(NodeId),
+    /// A draining job finished its in-flight step and wrote its
+    /// checkpoint: release its GPUs, reap the retiring node, and requeue
+    /// the job with its progress preserved. Stale epochs (the job
+    /// finished, OOMed, or was cancelled since the drain request) are
+    /// ignored.
+    Drained { job: JobId, epoch: u64 },
 }
 
 /// Engine tuning knobs (the scheduling-relevant subset of the old
@@ -80,8 +104,39 @@ pub enum ClusterEvent {
 /// real scheduler wall time already elapses on its clock).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    /// Seconds before an OOM is detected and the job is requeued.
+    /// Seconds before an OOM is detected and the job is requeued — the
+    /// *fallback* timer, used only when [`EngineConfig::device_memory`] is
+    /// off and the engine must trust the scheduler's `will_oom` flag.
     pub oom_detect_s: f64,
+    /// Account device memory in bytes: every dispatch charges the job's
+    /// observed per-GPU peak (the exact memory model plus
+    /// [`EngineConfig::mem_jitter_frac`]) against the
+    /// [`crate::runtime::device::DeviceMemory`] ledger, a failed charge is
+    /// a *real* OOM (`oom_observed` in the event log, crash after
+    /// [`EngineConfig::oom_observe_s`]), and every placement folds a
+    /// predicted-vs-observed accuracy sample into the run aggregates.
+    pub device_memory: bool,
+    /// Per-dispatch activation jitter: the observed peak is the exact
+    /// model's bytes times `1 + mem_jitter_frac · u` with deterministic
+    /// `u ∈ [0, 1)` drawn from `(job, epoch)`. Zero (the default) keeps
+    /// runs bit-reproducible with the pre-ledger behavior.
+    pub mem_jitter_frac: f64,
+    /// Seconds from start until a ledger-observed OOM crashes the run and
+    /// is processed. Defaults to the same 45 s as the fallback detection
+    /// timer so enabling the ledger changes the *cause* of an OOM (an
+    /// observed over-capacity charge vs. a trusted scheduler flag), never
+    /// the timing of existing runs.
+    pub oom_observe_s: f64,
+    /// Checkpoint cadence in training steps (0 disables checkpointing: a
+    /// drained job restarts from step 0).
+    pub ckpt_every_steps: u64,
+    /// Seconds a drain spends writing the checkpoint.
+    pub ckpt_write_s: f64,
+    /// Graceful-drain budget for `NodeLeave`: hosted jobs get
+    /// `min(in-flight step + ckpt_write_s, drain_grace_s)` to checkpoint
+    /// and release. Zero (the default) preempts instantly — the
+    /// pre-checkpoint behavior.
+    pub drain_grace_s: f64,
     /// Seconds charged per scheduler work unit (models the paper's
     /// scheduling-overhead effect in virtual time).
     pub sched_work_unit_s: f64,
@@ -104,6 +159,12 @@ impl Default for EngineConfig {
     fn default() -> Self {
         Self {
             oom_detect_s: 45.0,
+            device_memory: true,
+            mem_jitter_frac: 0.0,
+            oom_observe_s: 45.0,
+            ckpt_every_steps: 100,
+            ckpt_write_s: 5.0,
+            drain_grace_s: 0.0,
             sched_work_unit_s: 2.0e-5,
             max_attempts: 6,
             retain_terminal: 16_384,
@@ -127,12 +188,40 @@ pub struct PlacedJob {
     pub gpus: u32,
     /// When the job starts (now + modeled scheduling overhead).
     pub start_time: f64,
-    /// The placement will OOM (memory-oblivious baselines only).
+    /// The placement will OOM. With device-memory accounting on, this is
+    /// the byte ledger's verdict (observed peak > capacity); otherwise it
+    /// echoes the scheduler's flag (memory-oblivious baselines only).
     pub will_oom: bool,
+    /// Samples already completed before this run (resumed from checkpoint;
+    /// 0 on a fresh start). Drivers subtract these from the work they
+    /// dispatch.
+    pub resumed_samples: u64,
     /// Throughput estimate from the performance model (0 when `will_oom`).
     pub est_samples_per_sec: f64,
-    /// Estimated runtime (OOM-detection delay when `will_oom`).
+    /// Estimated runtime of the *remaining* work (OOM delay when
+    /// `will_oom`).
     pub est_runtime_s: f64,
+}
+
+/// A ledger-observed OOM on a wall clock: the driver must deliver
+/// [`ClusterEvent::Oom`] `{job, epoch}` after `delay_s` (virtual clocks
+/// self-schedule it instead, so this list stays empty in simulation).
+#[derive(Debug, Clone)]
+pub struct OomDirective {
+    pub job: JobId,
+    pub epoch: u64,
+    pub delay_s: f64,
+}
+
+/// A graceful-drain deadline on a wall clock: the driver must deliver
+/// [`ClusterEvent::Drained`] `{job, epoch}` after `delay_s` (virtual
+/// clocks self-schedule it instead).
+#[derive(Debug, Clone)]
+pub struct DrainDirective {
+    pub job: JobId,
+    pub epoch: u64,
+    pub node: NodeId,
+    pub delay_s: f64,
 }
 
 /// What one event (plus the scheduling round it triggered) did — the
@@ -145,8 +234,17 @@ pub struct Effects {
     pub finished: Vec<JobId>,
     /// Jobs rejected (attempt budget exhausted or structurally unplaceable).
     pub rejected: Vec<JobId>,
-    /// Jobs preempted by a `NodeLeave` and returned to the pending queue.
+    /// Jobs preempted by a `NodeLeave` (or drained and requeued) and
+    /// returned to the pending queue.
     pub preempted: Vec<JobId>,
+    /// Ledger-observed OOMs the driver must feed back as
+    /// [`ClusterEvent::Oom`] after each directive's delay (wall clock
+    /// only).
+    pub oom_observed: Vec<OomDirective>,
+    /// Drain deadlines the driver must feed back as
+    /// [`ClusterEvent::Drained`] after each directive's delay (wall clock
+    /// only).
+    pub drain_requested: Vec<DrainDirective>,
 }
 
 impl Effects {
@@ -155,6 +253,8 @@ impl Effects {
         self.finished.append(&mut other.finished);
         self.rejected.append(&mut other.rejected);
         self.preempted.append(&mut other.preempted);
+        self.oom_observed.append(&mut other.oom_observed);
+        self.drain_requested.append(&mut other.drain_requested);
     }
 }
 
@@ -206,6 +306,16 @@ struct RunningJob {
     gpus: u32,
     attempts: u32,
     epoch: u64,
+    /// When this run (this epoch) started — drain progress is measured
+    /// from here.
+    start_time: f64,
+    /// Modeled throughput of this run (0 for a doomed placement).
+    sps: f64,
+    /// Samples completed before this run (resumed from checkpoint).
+    resumed_samples: u64,
+    /// Set when a node retirement asked this job to drain; names the
+    /// triggering node.
+    draining: Option<NodeId>,
 }
 
 /// GPU-time utilization integrator. Integrates capacity as well as busy
@@ -259,6 +369,9 @@ pub struct SchedulingEngine<'a> {
     epochs: HashMap<JobId, u64>,
     /// Eviction queue for [`EngineConfig::retain_terminal`].
     retention: RetentionQueue,
+    /// Checkpoints of drained jobs awaiting re-placement (entries are
+    /// dropped when the job goes terminal).
+    ckpts: CheckpointStore,
     /// Every applied placement, in order: (job, sorted (node, gpus) parts).
     decision_log: Vec<PlacementRecord>,
     /// Interval schedulers: time of the last executed round and whether a
@@ -287,6 +400,7 @@ impl<'a> SchedulingEngine<'a> {
             first_starts: HashMap::new(),
             epochs: HashMap::new(),
             retention,
+            ckpts: CheckpointStore::new(),
             decision_log: Vec::new(),
             last_round: f64::NEG_INFINITY,
             tick_queued: false,
@@ -322,6 +436,11 @@ impl<'a> SchedulingEngine<'a> {
                 }
                 let run = self.running.remove(&job).expect("checked above");
                 let _ = self.orch.release(job);
+                self.reap_retired(now);
+                let batch = run.spec.train.global_batch.max(1) as u64;
+                let steps_this_run =
+                    run.spec.total_samples.saturating_sub(run.resumed_samples).div_ceil(batch);
+                self.agg.record_run_steps(steps_this_run);
                 let submit = *self.submit_times.get(&job).unwrap_or(&0.0);
                 let sps = run.spec.total_samples as f64 / (now - run.first_start).max(1e-9);
                 self.agg.record_completed(submit, run.first_start, now, sps, run.attempts);
@@ -334,7 +453,9 @@ impl<'a> SchedulingEngine<'a> {
                     return fx;
                 }
                 let run = self.running.remove(&job).expect("checked above");
+                self.agg.record_run_steps(Self::steps_this_run(&run, now));
                 let _ = self.orch.release(job);
+                self.reap_retired(now);
                 self.agg.record_oom_event();
                 let requeued = run.attempts < self.cfg.max_attempts;
                 self.events.push(now, EventKind::Oomed { job, epoch, requeued });
@@ -343,6 +464,9 @@ impl<'a> SchedulingEngine<'a> {
                 } else {
                     self.reject(now, job, RejectReason::AttemptsExhausted, &mut fx);
                 }
+            }
+            ClusterEvent::Drained { job, epoch } => {
+                self.handle_drained(job, epoch, now, &mut fx);
             }
             ClusterEvent::RoundTick => {
                 self.tick_queued = false;
@@ -355,12 +479,19 @@ impl<'a> SchedulingEngine<'a> {
                 self.sched.cluster_changed(self.orch.state());
             }
             ClusterEvent::NodeLeave(node) => {
-                if let Ok(released) = self.orch.shrink(node) {
+                if self.cfg.drain_grace_s > 0.0 {
+                    self.node_leave_drain(node, now, clock, &mut fx);
+                } else if let Ok(released) = self.orch.shrink(node) {
                     let displaced: Vec<JobId> = released.iter().map(|a| a.job).collect();
                     self.events
                         .push(now, EventKind::NodeLeft { node, preempted: displaced });
                     for alloc in released {
                         let Some(run) = self.running.remove(&alloc.job) else { continue };
+                        // The killed run's progress is real executed work —
+                        // all of it re-executes (no checkpoint on this
+                        // path), which is exactly what the report's
+                        // `total_steps_executed` excess must show.
+                        self.agg.record_run_steps(Self::steps_this_run(&run, now));
                         if run.attempts >= self.cfg.max_attempts {
                             self.reject(now, alloc.job, RejectReason::AttemptsExhausted, &mut fx);
                         } else {
@@ -376,6 +507,129 @@ impl<'a> SchedulingEngine<'a> {
             }
         }
         fx
+    }
+
+    /// Graceful `NodeLeave`: stop placements on the node, then give every
+    /// hosted job a drain deadline — finish the in-flight step, write the
+    /// checkpoint, release — instead of yanking its GPUs. The matching
+    /// [`ClusterEvent::Drained`] is self-scheduled on a virtual clock and
+    /// handed to the driver as a [`DrainDirective`] on a wall clock.
+    fn node_leave_drain(
+        &mut self,
+        node: NodeId,
+        now: f64,
+        clock: &mut dyn Clock,
+        fx: &mut Effects,
+    ) {
+        let Ok(affected) = self.orch.retire_begin(node) else { return };
+        self.events.push(now, EventKind::NodeLeft { node, preempted: affected.clone() });
+        if self.orch.state().nodes[node].total == 0 {
+            // No resident jobs: the retirement completed in one step — emit
+            // the safe-to-power-off record now, so drain-mode leaves always
+            // produce one, idle or busy.
+            self.events.push(now, EventKind::NodeRetired { node });
+        }
+        for job in affected {
+            let Some(run) = self.running.get_mut(&job) else { continue };
+            if run.draining.is_some() {
+                continue; // already draining for another retiring node
+            }
+            run.draining = Some(node);
+            let epoch = run.epoch;
+            let step_s = if run.sps > 0.0 {
+                run.spec.train.global_batch.max(1) as f64 / run.sps
+            } else {
+                0.0
+            };
+            let delay = (step_s + self.cfg.ckpt_write_s).min(self.cfg.drain_grace_s);
+            let deadline = now + delay;
+            self.events
+                .push(now, EventKind::DrainRequested { job, epoch, node, deadline_s: deadline });
+            if !clock.schedule(deadline, ClusterEvent::Drained { job, epoch }) {
+                fx.drain_requested.push(DrainDirective { job, epoch, node, delay_s: delay });
+            }
+        }
+        self.sched.cluster_changed(self.orch.state());
+    }
+
+    /// A drain deadline fired: floor the job's progress to its last
+    /// checkpoint boundary, snapshot it, release the GPUs (reaping the
+    /// retiring node), and requeue the job — its next placement resumes
+    /// from the checkpoint instead of step 0.
+    fn handle_drained(&mut self, job: JobId, epoch: u64, now: f64, fx: &mut Effects) {
+        if self
+            .running
+            .get(&job)
+            .is_none_or(|r| r.epoch != epoch || r.draining.is_none())
+        {
+            return; // stale: finished/OOMed/cancelled since the drain request
+        }
+        let run = self.running.remove(&job).expect("checked above");
+        let node = run.draining.expect("checked above");
+        let batch = run.spec.train.global_batch.max(1) as u64;
+        let executed = Self::steps_this_run(&run, now);
+        let steps_total = run.resumed_samples / batch + executed;
+        let steps_ckpt = checkpoint::ckpt_floor(steps_total, self.cfg.ckpt_every_steps);
+        let digest = checkpoint::state_digest(job, steps_ckpt);
+        if steps_ckpt > 0 {
+            self.ckpts.save(Checkpoint { job, steps_done: steps_ckpt, state_digest: digest });
+        }
+        self.agg.record_drained(executed);
+        let _ = self.orch.release(job);
+        self.reap_retired(now);
+        self.events
+            .push(now, EventKind::Drained { job, epoch, node, steps_ckpt, state_digest: digest });
+        // A drained job did nothing wrong: graceful drains never consume
+        // the failure budget, so a healthy long job survives any number of
+        // node retirements. (`attempts` still counts placements for the
+        // retry metrics; the `max_attempts` cap applies to OOM crashes and
+        // instant preemptions only.)
+        self.pending.push(PendingJob { spec: run.spec, attempts: run.attempts });
+        fx.preempted.push(job);
+    }
+
+    /// Whole training steps an interrupted run executed so far (modeled:
+    /// elapsed × throughput, counted in cumulative step units past any
+    /// resume point). Zero for doomed (`sps == 0`) placements. Feeds the
+    /// report's `total_steps_executed` for drained, preempted, OOMed, and
+    /// cancelled runs alike, so the excess over the nominal step total is
+    /// exactly the re-execution cost of elasticity.
+    fn steps_this_run(run: &RunningJob, now: f64) -> u64 {
+        let batch = run.spec.train.global_batch.max(1) as u64;
+        let elapsed = (now - run.start_time).max(0.0);
+        let samples = ((elapsed * run.sps) as u64)
+            .min(run.spec.total_samples.saturating_sub(run.resumed_samples));
+        (run.resumed_samples + samples) / batch - run.resumed_samples / batch
+    }
+
+    /// Strip freed capacity off retiring nodes after a release; log a
+    /// `NodeRetired` record and tell the scheduler when any node completed
+    /// retirement (that record — not `NodeLeft`, which marks the *start*
+    /// of the drain — is the operator's safe-to-power-off signal).
+    fn reap_retired(&mut self, now: f64) {
+        if self.orch.retiring_count() == 0 {
+            return;
+        }
+        let done = self.orch.reap_retiring();
+        if !done.is_empty() {
+            for node in done {
+                self.events.push(now, EventKind::NodeRetired { node });
+            }
+            self.sched.cluster_changed(self.orch.state());
+        }
+    }
+
+    /// The observed per-GPU peak this dispatch will pin: the exact memory
+    /// model's bytes, inflated by a deterministic per-`(job, epoch)`
+    /// activation jitter of up to [`EngineConfig::mem_jitter_frac`].
+    fn observed_peak_bytes(&self, spec: &JobSpec, par: Parallelism, job: JobId, epoch: u64) -> u64 {
+        let exact_bytes = exact::exact_peak_bytes(&spec.model, &spec.train, par);
+        if self.cfg.mem_jitter_frac <= 0.0 {
+            return exact_bytes;
+        }
+        let mut sm = SplitMix64::new(job.wrapping_mul(0x2545F4914F6CDD1D) ^ epoch);
+        let u = (sm.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        (exact_bytes as f64 * (1.0 + self.cfg.mem_jitter_frac * u)).round() as u64
     }
 
     /// Record a rejection everywhere it must land: aggregates, event log,
@@ -460,7 +714,37 @@ impl<'a> SchedulingEngine<'a> {
             }
             self.decision_log.push((d.job, parts.clone()));
             let gpus = d.alloc.total_gpus();
-            let (will_oom, thr, runtime) = if d.will_oom {
+            // Resume from checkpoint: samples completed before a drain
+            // survive preemption and shrink this run's remaining work.
+            let batch = pj.spec.train.global_batch.max(1) as u64;
+            let resumed_samples = if self.cfg.ckpt_every_steps > 0 {
+                self.ckpts
+                    .get(d.job)
+                    .map(|c| (c.steps_done * batch).min(pj.spec.total_samples))
+                    .unwrap_or(0)
+            } else {
+                0
+            };
+            // Device-memory accounting: charge the observed per-GPU peak
+            // against the byte ledger. A charge that does not fit is a
+            // REAL OOM — the ledger decides, not the scheduler's flag —
+            // and the predicted-vs-observed pair feeds the run's
+            // prediction-accuracy aggregate either way.
+            let mut ledger_oom = None;
+            if self.cfg.device_memory {
+                let predicted = marp_peak_bytes(&pj.spec.model, &pj.spec.train, d.par);
+                let observed = self.observed_peak_bytes(&pj.spec, d.par, d.job, epoch);
+                self.agg.record_mem_prediction(predicted, observed);
+                if let Err(ClusterError::MemoryExceeded { node, observed_bytes, capacity_bytes }) =
+                    self.orch.charge_memory(d.job, observed)
+                {
+                    ledger_oom = Some((node, predicted, observed_bytes, capacity_bytes));
+                }
+            }
+            let (will_oom, thr, runtime) = if ledger_oom.is_some() {
+                (true, 0.0, self.cfg.oom_observe_s)
+            } else if !self.cfg.device_memory && d.will_oom {
+                // Fallback: trust the scheduler's flag and model detection.
                 (true, 0.0, self.cfg.oom_detect_s)
             } else {
                 let thr = self.pm.samples_per_sec(
@@ -470,7 +754,8 @@ impl<'a> SchedulingEngine<'a> {
                     &d.gpu,
                     d.placement,
                 );
-                (false, thr, pj.spec.total_samples as f64 / thr.max(1e-9))
+                let remaining = pj.spec.total_samples.saturating_sub(resumed_samples);
+                (false, thr, remaining as f64 / thr.max(1e-9))
             };
             self.events.push(
                 now,
@@ -482,18 +767,58 @@ impl<'a> SchedulingEngine<'a> {
                     d: d.par.d,
                     t: d.par.t,
                     parts,
-                    will_oom: d.will_oom,
+                    will_oom,
                 },
             );
+            if let Some((node, predicted_bytes, observed_bytes, capacity_bytes)) = ledger_oom {
+                self.events.push(
+                    now,
+                    EventKind::OomObserved {
+                        job: d.job,
+                        epoch,
+                        node,
+                        predicted_bytes,
+                        observed_bytes,
+                        capacity_bytes,
+                    },
+                );
+            } else if resumed_samples > 0 {
+                self.events.push(
+                    now,
+                    EventKind::ResumedFromCkpt {
+                        job: d.job,
+                        epoch,
+                        steps_ckpt: resumed_samples / batch,
+                    },
+                );
+            }
             self.running.insert(
                 d.job,
-                RunningJob { spec: pj.spec.clone(), first_start, gpus, attempts, epoch },
+                RunningJob {
+                    spec: pj.spec.clone(),
+                    first_start,
+                    gpus,
+                    attempts,
+                    epoch,
+                    start_time,
+                    sps: thr,
+                    resumed_samples,
+                    draining: None,
+                },
             );
             if will_oom {
-                clock.schedule(
-                    start_time + self.cfg.oom_detect_s,
-                    ClusterEvent::Oom { job: d.job, epoch },
-                );
+                let scheduled = clock
+                    .schedule(start_time + runtime, ClusterEvent::Oom { job: d.job, epoch });
+                if !scheduled && ledger_oom.is_some() {
+                    // Wall clock + ledger OOM: the driver must crash the
+                    // run after the observe delay. (Without the ledger the
+                    // driver's own `will_oom` fallback timer applies.)
+                    fx.oom_observed.push(OomDirective {
+                        job: d.job,
+                        epoch,
+                        delay_s: (start_time - now) + runtime,
+                    });
+                }
             } else {
                 clock.schedule(start_time + runtime, ClusterEvent::Finish { job: d.job, epoch });
             }
@@ -504,6 +829,7 @@ impl<'a> SchedulingEngine<'a> {
                 gpus,
                 start_time,
                 will_oom,
+                resumed_samples,
                 est_samples_per_sec: thr,
                 est_runtime_s: runtime,
             });
@@ -552,7 +878,10 @@ impl<'a> SchedulingEngine<'a> {
 
     /// Record that `job` reached a terminal state and evict the oldest
     /// terminal jobs' bookkeeping beyond [`EngineConfig::retain_terminal`].
+    /// Terminal jobs also drop their checkpoint — the store holds entries
+    /// only for jobs that may still resume.
     fn note_terminal(&mut self, job: JobId) {
+        self.ckpts.remove(job);
         for old in self.retention.note(job) {
             self.epochs.remove(&old);
             self.submit_times.remove(&old);
@@ -576,10 +905,12 @@ impl<'a> SchedulingEngine<'a> {
     /// completion. Any in-flight `Finish`/`Oom` for the old epoch goes
     /// stale.
     pub fn cancel_running(&mut self, id: JobId, now: f64) -> bool {
-        if self.running.remove(&id).is_none() {
+        let Some(run) = self.running.remove(&id) else {
             return false;
-        }
+        };
+        self.agg.record_run_steps(Self::steps_this_run(&run, now));
         let _ = self.orch.release(id);
+        self.reap_retired(now);
         self.agg.record_cancelled();
         self.events.push(now, EventKind::Cancelled { job: id, was_running: true });
         self.note_terminal(id);
@@ -611,6 +942,26 @@ impl<'a> SchedulingEngine<'a> {
 
     pub fn conservation_ok(&self) -> bool {
         self.orch.check_conservation()
+    }
+
+    /// True when `node` still has capacity and is not draining.
+    pub fn node_active(&self, node: NodeId) -> bool {
+        self.orch.node_active(node)
+    }
+
+    /// The device-memory byte ledger (bytes pinned per node).
+    pub fn device_memory(&self) -> &DeviceMemory {
+        self.orch.device_memory()
+    }
+
+    /// A drained job's saved checkpoint, if it has one.
+    pub fn checkpoint_of(&self, job: JobId) -> Option<&Checkpoint> {
+        self.ckpts.get(job)
+    }
+
+    /// Number of checkpoints currently stored (tests: no leaks).
+    pub fn checkpoint_count(&self) -> usize {
+        self.ckpts.len()
     }
 
     /// The run's streaming metrics (replaces the old unbounded per-job
@@ -954,6 +1305,121 @@ mod tests {
         engine2.handle(ClusterEvent::Arrival(job(2, "gpt2-350m", 8, 10_000, 0.0)), &mut bare);
         let fx = engine2.run_round(&mut bare);
         assert_eq!(fx.placed.len(), 1, "bare wall clock rounds immediately");
+    }
+
+    #[test]
+    fn graceful_drain_checkpoints_and_resumes() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let cfg = EngineConfig {
+            drain_grace_s: 60.0,
+            ckpt_every_steps: 1,
+            ckpt_write_s: 1.0,
+            ..EngineConfig::default()
+        };
+        let mut engine = SchedulingEngine::new(&spec, &mut has, cfg);
+        let mut clock = VirtualClock::new();
+        // A long job; retire its node mid-run.
+        engine.handle(
+            ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 100_000_000, 0.0)),
+            &mut clock,
+        );
+        let fx = engine.run_round(&mut clock);
+        assert_eq!(fx.placed.len(), 1);
+        assert_eq!(fx.placed[0].resumed_samples, 0);
+        let node = engine.decision_log()[0].1[0].0;
+        clock.schedule(500.0, ClusterEvent::NodeLeave(node));
+        // Let the leave + drain deadline play out.
+        let mut drained_seen = false;
+        let mut guard = 0;
+        while let Some((_, ev)) = clock.pop() {
+            let fx = engine.handle(ev, &mut clock);
+            if !fx.preempted.is_empty() {
+                drained_seen = true;
+                // Drained on a virtual clock: no wall-clock directive.
+                assert!(fx.drain_requested.is_empty());
+                assert!(engine.is_pending(1), "drained job requeued");
+                let ck = engine.checkpoint_of(1).expect("checkpoint saved");
+                assert!(ck.steps_done >= 1, "progress survived the drain");
+                assert_eq!(
+                    ck.state_digest,
+                    crate::runtime::checkpoint::state_digest(1, ck.steps_done)
+                );
+            }
+            engine.run_round(&mut clock);
+            assert!(engine.conservation_ok(), "conservation during drain");
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert!(drained_seen, "the node retirement must have drained the job");
+        assert_eq!(engine.aggregates().n_completed, 1);
+        assert_eq!(engine.aggregates().n_drains, 1);
+        assert_eq!(engine.checkpoint_count(), 0, "terminal job dropped its checkpoint");
+        assert_eq!(engine.device_memory().total_used_bytes(), 0, "no byte leak");
+        // The audit trail tells the drain story in order.
+        let kinds: Vec<&EventKind> = engine.event_log().iter().map(|r| &r.kind).collect();
+        assert!(kinds
+            .iter()
+            .any(|k| matches!(k, EventKind::DrainRequested { job: 1, .. })));
+        assert!(kinds
+            .iter()
+            .any(|k| matches!(k, EventKind::Drained { job: 1, steps_ckpt, .. } if *steps_ckpt >= 1)));
+        assert!(kinds
+            .iter()
+            .any(|k| matches!(k, EventKind::ResumedFromCkpt { job: 1, steps_ckpt, .. } if *steps_ckpt >= 1)));
+        // Resume means strictly less than double work.
+        let total_steps = 100_000_000u64 / 8;
+        let executed = engine.aggregates().total_steps_executed();
+        assert!(
+            executed >= total_steps && executed < 2 * total_steps,
+            "resumed from checkpoint: executed {executed} of {total_steps} nominal"
+        );
+        // The retired node is gone.
+        assert_eq!(engine.cluster_state().nodes[node].total, 0);
+    }
+
+    #[test]
+    fn byte_ledger_observes_real_oom_without_timer() {
+        use crate::sched::opportunistic::Opportunistic;
+        // Opportunistic mis-sizes gpt2-2.7b on the real testbed (sized for
+        // the 80G card, greedily placed on 40G): with device-memory
+        // accounting the byte ledger itself must raise the OOM — no
+        // `will_oom` detection timer involved.
+        let spec = real_testbed();
+        let mut opp = Opportunistic::new(&spec);
+        let mut engine = SchedulingEngine::new(&spec, &mut opp, EngineConfig::default());
+        let mut clock = VirtualClock::new();
+        for i in 0..4u64 {
+            clock.schedule(
+                i as f64 * 10.0,
+                ClusterEvent::Arrival(job(i, "gpt2-2.7b", 8, 50_000, i as f64 * 10.0)),
+            );
+        }
+        drive(&mut engine, &mut clock);
+        let agg = engine.aggregates();
+        assert_eq!(agg.n_completed + engine.rejected_count(), 4);
+        assert!(agg.n_oom_events > 0, "expected ledger-observed OOMs");
+        // Every OOM is explained by an OomObserved record whose observed
+        // bytes exceed the node's capacity.
+        let observed: Vec<_> = engine
+            .event_log()
+            .iter()
+            .filter_map(|r| match r.kind {
+                EventKind::OomObserved { observed_bytes, capacity_bytes, .. } => {
+                    Some((observed_bytes, capacity_bytes))
+                }
+                _ => None,
+            })
+            .collect();
+        assert!(!observed.is_empty());
+        assert!(observed.iter().all(|&(o, c)| o > c), "observed bytes exceed capacity");
+        // Prediction accuracy was sampled on every dispatch, in the
+        // paper's >92% band on average.
+        assert!(agg.mem_pred_samples() > 0);
+        let acc = agg.mem_pred_accuracy_avg();
+        assert!((0.85..=1.0).contains(&acc), "accuracy {acc} out of band");
+        assert!(engine.conservation_ok());
+        assert_eq!(engine.device_memory().total_used_bytes(), 0, "all bytes released");
     }
 
     #[test]

@@ -51,22 +51,27 @@ fn usage() -> &'static str {
 USAGE:
   frenzy serve    [--addr 127.0.0.1:8315] [--cluster real|sim] [--steps N]
                   [--sched has|sia|opportunistic] [--round-interval S]
+                  [--drain-ms M] [--ckpt-steps K]   (graceful-drain tuning)
   frenzy submit   --model <name> --batch <B> --samples <N> [--addr A]
   frenzy status   <job-id> [--addr A]
   frenzy cancel   <job-id> [--addr A]
   frenzy list     [--state queued|running|completed|rejected|cancelled]
                   [--offset O] [--limit L] [--addr A]
-  frenzy events   [--since SEQ] [--limit L] [--follow] [--addr A]
-                  (cluster audit log: placements, OOMs, joins/leaves, ...)
-  frenzy report   [--addr A]    (streaming run report: JCT histogram, counters)
+  frenzy events   [--since SEQ] [--limit L] [--follow] [--wait-ms W] [--addr A]
+                  (cluster audit log: placements, observed OOMs, drains,
+                   joins/leaves, ...; --follow long-polls, no busy-polling)
+  frenzy report   [--addr A]    (streaming run report: JCT histogram, drains,
+                   memory-prediction accuracy)
   frenzy predict  --model <name> --batch <B> [--addr A | --cluster real|sim]
   frenzy scale    --join --gpu <type> [--count N] [--link nvlink|pcie] [--addr A]
-  frenzy scale    --leave <node> [--addr A]
+  frenzy scale    --leave <node> [--addr A]   (graceful drain + checkpoint)
   frenzy simulate --workload newworkload|philly|helios --tasks <n>
                   --sched has|sia|opportunistic [--cluster real|sim] [--seed S]
   frenzy replay   --workload <w> --tasks <n> [--speedup X] [--stub-ms M]
                   [--sched has|sia|opportunistic] [--round-interval S]
                   [--cluster real|sim] [--seed S]   (trace through the LIVE engine)
+  frenzy replay   --workload <w> --tasks <n> --addr <host:port>
+                  (same trace against a REMOTE frenzy serve over HTTP)
   frenzy train    --model gpt2-tiny [--steps N]
   frenzy fig4 | fig5a | fig5b | fig6 | figures
   frenzy trace    --workload <w> --n <n> --out <file> [--seed S]

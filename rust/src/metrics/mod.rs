@@ -43,12 +43,22 @@ pub struct RunAggregates {
     pub n_cancelled: usize,
     /// OOM events observed (each requeues or rejects a job).
     pub n_oom_events: u64,
+    /// Graceful drains completed (each checkpoints and requeues a job).
+    pub n_drains: u64,
     jct: Running,
     queue: Running,
     sps: Running,
     jct_hist: Histogram,
     makespan: f64,
     oom_retries: u64,
+    /// Training steps actually executed across all runs, including work
+    /// past the last checkpoint that a drain discarded. Compare against
+    /// the jobs' nominal step counts to see how much work elasticity
+    /// wasted (a checkpoint-less preemption re-executes everything).
+    steps_executed: u64,
+    /// Memory prediction accuracy samples: `1 − |predicted − observed| /
+    /// observed` per dispatch (the paper's §V.C metric, >92% expected).
+    mem_pred: Running,
 }
 
 impl Default for RunAggregates {
@@ -64,12 +74,15 @@ impl RunAggregates {
             n_rejected: 0,
             n_cancelled: 0,
             n_oom_events: 0,
+            n_drains: 0,
             jct: Running::new(),
             queue: Running::new(),
             sps: Running::new(),
             jct_hist: Histogram::exponential(JCT_HIST_START_S, 2.0, JCT_HIST_BUCKETS),
             makespan: 0.0,
             oom_retries: 0,
+            steps_executed: 0,
+            mem_pred: Running::new(),
         }
     }
 
@@ -113,6 +126,49 @@ impl RunAggregates {
 
     pub fn record_oom_event(&mut self) {
         self.n_oom_events += 1;
+    }
+
+    /// Fold one graceful drain: `steps_executed_this_run` counts every
+    /// step the interrupted run performed, checkpointed or not.
+    pub fn record_drained(&mut self, steps_executed_this_run: u64) {
+        self.n_drains += 1;
+        self.steps_executed += steps_executed_this_run;
+    }
+
+    /// Steps a completed run executed (remaining work after any resume).
+    pub fn record_run_steps(&mut self, steps: u64) {
+        self.steps_executed += steps;
+    }
+
+    /// Fold one dispatch's predicted-vs-observed peak-memory pair into the
+    /// prediction-accuracy aggregate (the paper's `1 − |p − m|/m`).
+    pub fn record_mem_prediction(&mut self, predicted_bytes: u64, observed_bytes: u64) {
+        self.mem_pred
+            .push(crate::memory::exact::prediction_accuracy(predicted_bytes, observed_bytes));
+    }
+
+    /// Training steps executed across all runs (including drained work).
+    pub fn total_steps_executed(&self) -> u64 {
+        self.steps_executed
+    }
+
+    /// Number of prediction-accuracy samples folded so far.
+    pub fn mem_pred_samples(&self) -> u64 {
+        self.mem_pred.count()
+    }
+
+    /// Mean memory-prediction accuracy in [0, 1] (NaN with no samples).
+    pub fn mem_pred_accuracy_avg(&self) -> f64 {
+        self.mem_pred.mean()
+    }
+
+    /// Worst observed memory-prediction accuracy (0 with no samples).
+    pub fn mem_pred_accuracy_min(&self) -> f64 {
+        if self.mem_pred.count() == 0 {
+            0.0
+        } else {
+            self.mem_pred.min()
+        }
     }
 
     /// Jobs that reached any terminal state.
@@ -215,6 +271,19 @@ pub struct RunReport {
     pub total_oom_retries: u64,
     /// OOM events observed during the run (requeues and rejects).
     pub n_oom_events: u64,
+    /// Graceful drains completed (checkpoint + requeue).
+    pub n_drains: u64,
+    /// Training steps actually executed across all runs — including work a
+    /// drain discarded past the last checkpoint. Compare with the nominal
+    /// step total to read elasticity's re-execution cost.
+    pub total_steps_executed: u64,
+    /// Peak-memory prediction accuracy (the paper's §V.C `1 − |p − m|/m`,
+    /// >92% expected): dispatches sampled.
+    pub mem_pred_samples: u64,
+    /// Mean prediction accuracy over the sampled dispatches (0 when none).
+    pub mem_pred_accuracy_avg: f64,
+    /// Worst sampled prediction accuracy (0 when none).
+    pub mem_pred_accuracy_min: f64,
     /// Total scheduler algorithmic work (see `SchedRound::work_units`).
     pub sched_work_units: u64,
     /// Total wall-clock the scheduler itself consumed (measured).
@@ -266,6 +335,15 @@ impl RunReport {
             makespan_s: agg.makespan_s(),
             total_oom_retries: agg.total_oom_retries(),
             n_oom_events: agg.n_oom_events,
+            n_drains: agg.n_drains,
+            total_steps_executed: agg.total_steps_executed(),
+            mem_pred_samples: agg.mem_pred_samples(),
+            mem_pred_accuracy_avg: if agg.mem_pred_samples() == 0 {
+                0.0
+            } else {
+                agg.mem_pred_accuracy_avg()
+            },
+            mem_pred_accuracy_min: agg.mem_pred_accuracy_min(),
             sched_work_units,
             sched_overhead_s,
             avg_utilization,
@@ -318,6 +396,11 @@ impl RunReport {
             .set("makespan_s", self.makespan_s)
             .set("total_oom_retries", self.total_oom_retries)
             .set("n_oom_events", self.n_oom_events)
+            .set("n_drains", self.n_drains)
+            .set("total_steps_executed", self.total_steps_executed)
+            .set("mem_pred_samples", self.mem_pred_samples)
+            .set("mem_pred_accuracy_avg", self.mem_pred_accuracy_avg)
+            .set("mem_pred_accuracy_min", self.mem_pred_accuracy_min)
             .set("sched_work_units", self.sched_work_units)
             .set("sched_overhead_s", self.sched_overhead_s)
             .set("avg_utilization", self.avg_utilization);
@@ -458,6 +541,37 @@ mod tests {
         assert_eq!(r.n_rejected, 2);
         assert_eq!(r.n_oom_events, 2);
         assert_eq!(r.total_oom_retries, 2, "attempts 3 => 2 retries");
+    }
+
+    #[test]
+    fn drain_step_and_mem_prediction_counters() {
+        let mut agg = RunAggregates::new();
+        // A run drained after 70 executed steps (60 checkpointed), then the
+        // resumed run executes the remaining 40 of a 100-step job.
+        agg.record_drained(70);
+        agg.record_run_steps(40);
+        agg.record_completed(0.0, 1.0, 10.0, 5.0, 2);
+        // Two dispatches sampled: 95% and 105% of observed (both 0.95).
+        agg.record_mem_prediction(95, 100);
+        agg.record_mem_prediction(105, 100);
+        assert_eq!(agg.n_drains, 1);
+        assert_eq!(agg.total_steps_executed(), 110, "wasted steps counted");
+        assert_eq!(agg.mem_pred_samples(), 2);
+        assert!((agg.mem_pred_accuracy_avg() - 0.95).abs() < 1e-12);
+        assert!((agg.mem_pred_accuracy_min() - 0.95).abs() < 1e-12);
+        let r = RunReport::from_aggregates("s", "w", &agg, 0, 0, 0.0, 0.0);
+        assert_eq!(r.n_drains, 1);
+        assert_eq!(r.total_steps_executed, 110);
+        assert_eq!(r.mem_pred_samples, 2);
+        assert!((r.mem_pred_accuracy_avg - 0.95).abs() < 1e-12);
+        let j = r.to_json();
+        assert!(j.get("n_drains").is_some());
+        assert!(j.get("mem_pred_accuracy_avg").is_some());
+        assert!(j.get("total_steps_executed").is_some());
+        // No samples → serialized as 0, never NaN.
+        let empty = RunReport::from_aggregates("s", "w", &RunAggregates::new(), 0, 0, 0.0, 0.0);
+        assert_eq!(empty.mem_pred_accuracy_avg, 0.0);
+        assert_eq!(empty.mem_pred_accuracy_min, 0.0);
     }
 
     #[test]

@@ -1,0 +1,119 @@
+//! Job checkpointing: snapshot `(steps_done, state_digest)` so preempted
+//! jobs resume instead of restarting.
+//!
+//! The modeled runtime checkpoints on a fixed cadence
+//! (`ckpt_every_steps`): when a graceful drain interrupts a job, its
+//! progress is floored to the last checkpoint boundary ([`ckpt_floor`]) —
+//! work past the boundary is lost (and accounted as *wasted* steps), work
+//! up to it survives in the [`CheckpointStore`] and is subtracted from the
+//! job's remaining samples on its next placement (the engine emits
+//! `resumed_from_ckpt`). The digest is a deterministic fingerprint of
+//! `(job, steps)` so the sim-vs-live differential tests can assert both
+//! paths resumed from the *same* snapshot, not merely the same step count.
+
+use crate::job::JobId;
+use std::collections::HashMap;
+
+/// One saved snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Checkpoint {
+    pub job: JobId,
+    /// Training steps completed at snapshot time (cumulative across runs).
+    pub steps_done: u64,
+    /// Deterministic fingerprint of the snapshotted state.
+    pub state_digest: u64,
+}
+
+/// Deterministic state fingerprint (SplitMix64 finalizer over job ⊕ steps):
+/// equal inputs — same job, same step count — produce the same digest on
+/// every clock, which is what lets the differential tests compare resumes
+/// across sim and live. Truncated to 53 bits so the value survives JSON
+/// (f64) transport exactly.
+pub fn state_digest(job: JobId, steps_done: u64) -> u64 {
+    let mut z = job
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(steps_done)
+        .wrapping_add(0x243F6A8885A308D3);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    (z ^ (z >> 31)) & ((1 << 53) - 1)
+}
+
+/// Floor `steps` to the last checkpoint boundary (`every == 0` disables
+/// checkpointing: everything is lost on preemption).
+pub fn ckpt_floor(steps: u64, every: u64) -> u64 {
+    if every == 0 {
+        0
+    } else {
+        steps - steps % every
+    }
+}
+
+/// In-memory checkpoint store, one snapshot per job (a newer snapshot
+/// replaces the older one — the runtime keeps only the latest).
+#[derive(Debug, Default)]
+pub struct CheckpointStore {
+    map: HashMap<JobId, Checkpoint>,
+}
+
+impl CheckpointStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Save (or replace) a job's snapshot.
+    pub fn save(&mut self, ckpt: Checkpoint) {
+        self.map.insert(ckpt.job, ckpt);
+    }
+
+    pub fn get(&self, job: JobId) -> Option<&Checkpoint> {
+        self.map.get(&job)
+    }
+
+    /// Drop a job's snapshot (terminal jobs must not leak store entries).
+    pub fn remove(&mut self, job: JobId) -> Option<Checkpoint> {
+        self.map.remove(&job)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_boundaries() {
+        assert_eq!(ckpt_floor(0, 10), 0);
+        assert_eq!(ckpt_floor(9, 10), 0);
+        assert_eq!(ckpt_floor(10, 10), 10);
+        assert_eq!(ckpt_floor(29, 10), 20);
+        assert_eq!(ckpt_floor(123, 0), 0, "every=0 disables checkpointing");
+    }
+
+    #[test]
+    fn digest_deterministic_and_input_sensitive() {
+        assert_eq!(state_digest(7, 100), state_digest(7, 100));
+        assert_ne!(state_digest(7, 100), state_digest(7, 110));
+        assert_ne!(state_digest(7, 100), state_digest(8, 100));
+        assert_ne!(state_digest(0, 0), 0);
+    }
+
+    #[test]
+    fn store_keeps_latest_snapshot() {
+        let mut s = CheckpointStore::new();
+        s.save(Checkpoint { job: 1, steps_done: 10, state_digest: state_digest(1, 10) });
+        s.save(Checkpoint { job: 1, steps_done: 20, state_digest: state_digest(1, 20) });
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(1).unwrap().steps_done, 20);
+        assert_eq!(s.remove(1).unwrap().steps_done, 20);
+        assert!(s.is_empty());
+        assert!(s.remove(1).is_none());
+    }
+}

@@ -1,0 +1,203 @@
+//! Device-memory accounting: a per-node byte ledger for GPU memory.
+//!
+//! Until this module existed the execution layer tracked GPU *counts* only;
+//! out-of-memory was a scripted outcome (the scheduler's `will_oom` flag
+//! armed a detection timer). The [`DeviceMemory`] ledger makes OOM an
+//! *observed* event instead: every dispatch charges the job's per-GPU peak
+//! bytes against the hosting nodes' device memory, and a charge that does
+//! not fit raises a [`DeviceOom`] carrying the observed bytes — the engine
+//! turns that into a real `oom_observed` event and an OOM crash, with the
+//! old detection timer demoted to a fallback (see
+//! `EngineConfig::device_memory`).
+//!
+//! GPUs are allocated exclusively (one job per GPU), so the fit check is
+//! per-GPU: a charge of `per_gpu_bytes` on a node fails iff it exceeds that
+//! node's per-GPU capacity. The ledger still tracks aggregate used bytes
+//! per node so observability and the conservation property tests can assert
+//! "no leak, no double-free" in *bytes*, not just GPU counts.
+
+use crate::cluster::NodeId;
+use crate::job::JobId;
+use std::collections::BTreeMap;
+
+/// A memory charge that did not fit its device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceOom {
+    /// Node whose GPUs overflowed.
+    pub node: NodeId,
+    /// Bytes the job tried to pin per GPU (the *observed* peak).
+    pub observed_bytes: u64,
+    /// Per-GPU capacity of that node.
+    pub capacity_bytes: u64,
+}
+
+/// One job's memory charge: `(node, gpus, per_gpu_bytes)` per part.
+type Charge = Vec<(NodeId, u32, u64)>;
+
+/// Per-node device-memory ledger (bytes, not just GPU counts).
+#[derive(Debug, Clone, Default)]
+pub struct DeviceMemory {
+    /// Per-GPU capacity of every node id (stable ids, like the cluster).
+    capacity_per_gpu: Vec<u64>,
+    /// Bytes currently pinned per node (sum over resident jobs).
+    used: Vec<u64>,
+    /// Outstanding charges by job.
+    charges: BTreeMap<JobId, Charge>,
+}
+
+impl DeviceMemory {
+    /// Build from per-GPU capacities, one entry per node id.
+    pub fn new(capacities: Vec<u64>) -> Self {
+        let used = vec![0; capacities.len()];
+        Self { capacity_per_gpu: capacities, used, charges: BTreeMap::new() }
+    }
+
+    /// Register a freshly appended node (elastic join).
+    pub fn on_grow(&mut self, per_gpu_capacity: u64) {
+        self.capacity_per_gpu.push(per_gpu_capacity);
+        self.used.push(0);
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.capacity_per_gpu.len()
+    }
+
+    /// Per-GPU capacity of a node.
+    pub fn capacity_of(&self, node: NodeId) -> u64 {
+        self.capacity_per_gpu[node]
+    }
+
+    /// Bytes currently pinned on a node.
+    pub fn used_bytes(&self, node: NodeId) -> u64 {
+        self.used[node]
+    }
+
+    /// Bytes currently pinned across the cluster.
+    pub fn total_used_bytes(&self) -> u64 {
+        self.used.iter().sum()
+    }
+
+    /// Jobs holding an outstanding charge.
+    pub fn charged_jobs(&self) -> usize {
+        self.charges.len()
+    }
+
+    /// Atomically charge `per_gpu_bytes` on every GPU of `parts`: either the
+    /// whole charge lands or none of it does. Fails with [`DeviceOom`] on
+    /// the first node whose per-GPU capacity is exceeded (parts order), and
+    /// on a double charge for the same job (a leak guard — the engine must
+    /// release before re-charging).
+    pub fn try_charge(
+        &mut self,
+        job: JobId,
+        parts: &[(NodeId, u32)],
+        per_gpu_bytes: u64,
+    ) -> Result<(), DeviceOom> {
+        debug_assert!(
+            !self.charges.contains_key(&job),
+            "job {job} charged twice without a release"
+        );
+        for &(node, _) in parts {
+            let cap = self.capacity_per_gpu[node];
+            if per_gpu_bytes > cap {
+                return Err(DeviceOom { node, observed_bytes: per_gpu_bytes, capacity_bytes: cap });
+            }
+        }
+        let mut charge = Charge::with_capacity(parts.len());
+        for &(node, gpus) in parts {
+            self.used[node] += per_gpu_bytes * gpus as u64;
+            charge.push((node, gpus, per_gpu_bytes));
+        }
+        self.charges.insert(job, charge);
+        Ok(())
+    }
+
+    /// Release a job's charge; returns the bytes freed (0 when the job held
+    /// none — releasing an uncharged job is not an error, because
+    /// memory-accounting can be disabled while the GPU-count ledger runs).
+    pub fn release(&mut self, job: JobId) -> u64 {
+        let Some(charge) = self.charges.remove(&job) else { return 0 };
+        let mut freed = 0;
+        for (node, gpus, per_gpu) in charge {
+            let bytes = per_gpu * gpus as u64;
+            debug_assert!(self.used[node] >= bytes, "byte ledger underflow on node {node}");
+            self.used[node] = self.used[node].saturating_sub(bytes);
+            freed += bytes;
+        }
+        freed
+    }
+
+    /// Invariant check: per-node used bytes equal the sum of outstanding
+    /// charges, every charge fits its node per-GPU, and nothing is negative.
+    /// `allocated` is the set of jobs the GPU-count ledger considers
+    /// resident; every charged job must be in it (no byte leak past a GPU
+    /// release).
+    pub fn check_conservation(&self, allocated: impl Fn(JobId) -> bool) -> bool {
+        let mut used = vec![0u64; self.used.len()];
+        for (&job, charge) in &self.charges {
+            if !allocated(job) {
+                return false;
+            }
+            for &(node, gpus, per_gpu) in charge {
+                if node >= used.len() || per_gpu > self.capacity_per_gpu[node] {
+                    return false;
+                }
+                used[node] += per_gpu * gpus as u64;
+            }
+        }
+        used == self.used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_nodes() -> DeviceMemory {
+        DeviceMemory::new(vec![40, 80])
+    }
+
+    #[test]
+    fn charge_release_roundtrip() {
+        let mut d = two_nodes();
+        d.try_charge(1, &[(0, 2), (1, 1)], 30).unwrap();
+        assert_eq!(d.used_bytes(0), 60);
+        assert_eq!(d.used_bytes(1), 30);
+        assert_eq!(d.total_used_bytes(), 90);
+        assert_eq!(d.charged_jobs(), 1);
+        assert!(d.check_conservation(|j| j == 1));
+        assert_eq!(d.release(1), 90);
+        assert_eq!(d.total_used_bytes(), 0);
+        assert_eq!(d.release(1), 0, "double release frees nothing");
+        assert!(d.check_conservation(|_| false));
+    }
+
+    #[test]
+    fn overflow_is_atomic_and_names_the_node() {
+        let mut d = two_nodes();
+        // Node 1 (80) fits, node 0 (40) does not; parts order decides the
+        // reported node, and nothing may have been charged.
+        let err = d.try_charge(1, &[(1, 1), (0, 2)], 50).unwrap_err();
+        assert_eq!(err, DeviceOom { node: 0, observed_bytes: 50, capacity_bytes: 40 });
+        assert_eq!(d.total_used_bytes(), 0);
+        assert_eq!(d.charged_jobs(), 0);
+    }
+
+    #[test]
+    fn grow_adds_capacity() {
+        let mut d = two_nodes();
+        d.on_grow(24);
+        assert_eq!(d.n_nodes(), 3);
+        assert_eq!(d.capacity_of(2), 24);
+        assert!(d.try_charge(1, &[(2, 4)], 24).is_ok());
+        assert_eq!(d.used_bytes(2), 96);
+    }
+
+    #[test]
+    fn conservation_flags_orphan_charge() {
+        let mut d = two_nodes();
+        d.try_charge(7, &[(0, 1)], 10).unwrap();
+        assert!(d.check_conservation(|j| j == 7));
+        assert!(!d.check_conservation(|_| false), "charge for a job the GPU ledger dropped");
+    }
+}

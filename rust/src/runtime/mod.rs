@@ -3,6 +3,12 @@
 //! serialized protos) and executes training steps from rust. Python never
 //! runs on this path.
 //!
+//! Two control-plane submodules ride alongside the PJRT executor:
+//! [`device`] — the per-node device-memory byte ledger that turns OOM from
+//! a scripted timer into an observed event — and [`checkpoint`] — job
+//! snapshots `(steps_done, state_digest)` that let a graceful drain resume
+//! training from the last boundary instead of restarting from step 0.
+//!
 //! Artifact contract (per model variant, see `artifacts/manifest.json`):
 //!
 //! * `<name>_init.hlo.txt` — `() -> f32[S]`: deterministic parameter +
@@ -19,6 +25,8 @@
 //! implement `CopyRawToHost`, so a tiny slice executable stands in for an
 //! offset host read).
 
+pub mod checkpoint;
+pub mod device;
 pub mod executor;
 
 use crate::util::json::{self, Json};

@@ -25,6 +25,8 @@ pub const MAX_LIST_LIMIT: usize = 1000;
 pub const DEFAULT_EVENTS_LIMIT: usize = 500;
 /// Hard cap on a single events page.
 pub const MAX_EVENTS_LIMIT: usize = 5000;
+/// Hard cap on `GET /v1/cluster/events?wait_ms=` (long-poll hold time).
+pub const MAX_EVENTS_WAIT_MS: u64 = 30_000;
 
 /// Wire name of a [`JobState`].
 pub fn state_to_str(s: JobState) -> &'static str {
@@ -806,6 +808,14 @@ impl ClusterInfoV1 {
 ///   "parts":[{"node":0,"gpus":2},{"node":3,"gpus":2}],"will_oom":false}`
 /// * `finished` — `{"job":7,"epoch":1}`
 /// * `oomed` — `{"job":7,"epoch":2,"requeued":true}`
+/// * `oom_observed` — `{"job":7,"epoch":2,"node":3,
+///   "predicted_bytes":41000000000,"observed_bytes":43000000000,
+///   "capacity_bytes":42949672960}` (the byte ledger caught an
+///   over-capacity dispatch; an `oomed` follows)
+/// * `drain_requested` — `{"job":7,"epoch":1,"node":3,"deadline_s":52.1}`
+/// * `drained` — `{"job":7,"epoch":1,"node":3,"steps_ckpt":400,
+///   "state_digest":1234567}` (checkpointed and requeued)
+/// * `resumed_from_ckpt` — `{"job":7,"epoch":2,"steps_ckpt":400}`
 /// * `preempted` — `{"job":7,"node":3}`
 /// * `rejected` — `{"job":7,"reason":"unplaceable"}` (reasons:
 ///   `admission_infeasible` | `attempts_exhausted` | `unplaceable` |
@@ -863,6 +873,43 @@ impl EventV1 {
                     .set("epoch", *epoch)
                     .set("requeued", *requeued);
             }
+            EventKind::OomObserved {
+                job,
+                epoch,
+                node,
+                predicted_bytes,
+                observed_bytes,
+                capacity_bytes,
+            } => {
+                j.set("type", "oom_observed")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("node", *node)
+                    .set("predicted_bytes", *predicted_bytes)
+                    .set("observed_bytes", *observed_bytes)
+                    .set("capacity_bytes", *capacity_bytes);
+            }
+            EventKind::DrainRequested { job, epoch, node, deadline_s } => {
+                j.set("type", "drain_requested")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("node", *node)
+                    .set("deadline_s", *deadline_s);
+            }
+            EventKind::Drained { job, epoch, node, steps_ckpt, state_digest } => {
+                j.set("type", "drained")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("node", *node)
+                    .set("steps_ckpt", *steps_ckpt)
+                    .set("state_digest", *state_digest);
+            }
+            EventKind::ResumedFromCkpt { job, epoch, steps_ckpt } => {
+                j.set("type", "resumed_from_ckpt")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("steps_ckpt", *steps_ckpt);
+            }
             EventKind::Preempted { job, node } => {
                 j.set("type", "preempted").set("job", *job).set("node", *node);
             }
@@ -883,6 +930,9 @@ impl EventV1 {
                     "preempted",
                     Json::Arr(preempted.iter().map(|&id| Json::from(id)).collect()),
                 );
+            }
+            EventKind::NodeRetired { node } => {
+                j.set("type", "node_retired").set("node", *node);
             }
         }
         j
@@ -922,6 +972,53 @@ impl EventV1 {
                 epoch: epoch()?,
                 requeued: j.get("requeued").and_then(Json::as_bool).unwrap_or(false),
             },
+            "oom_observed" => EventKind::OomObserved {
+                job: job()?,
+                epoch: epoch()?,
+                node: node()?,
+                predicted_bytes: j
+                    .get("predicted_bytes")
+                    .and_then(Json::as_u64)
+                    .ok_or("missing field 'predicted_bytes'")?,
+                observed_bytes: j
+                    .get("observed_bytes")
+                    .and_then(Json::as_u64)
+                    .ok_or("missing field 'observed_bytes'")?,
+                capacity_bytes: j
+                    .get("capacity_bytes")
+                    .and_then(Json::as_u64)
+                    .ok_or("missing field 'capacity_bytes'")?,
+            },
+            "drain_requested" => EventKind::DrainRequested {
+                job: job()?,
+                epoch: epoch()?,
+                node: node()?,
+                deadline_s: j
+                    .get("deadline_s")
+                    .and_then(Json::as_f64)
+                    .ok_or("missing field 'deadline_s'")?,
+            },
+            "drained" => EventKind::Drained {
+                job: job()?,
+                epoch: epoch()?,
+                node: node()?,
+                steps_ckpt: j
+                    .get("steps_ckpt")
+                    .and_then(Json::as_u64)
+                    .ok_or("missing field 'steps_ckpt'")?,
+                state_digest: j
+                    .get("state_digest")
+                    .and_then(Json::as_u64)
+                    .ok_or("missing field 'state_digest'")?,
+            },
+            "resumed_from_ckpt" => EventKind::ResumedFromCkpt {
+                job: job()?,
+                epoch: epoch()?,
+                steps_ckpt: j
+                    .get("steps_ckpt")
+                    .and_then(Json::as_u64)
+                    .ok_or("missing field 'steps_ckpt'")?,
+            },
             "preempted" => EventKind::Preempted { job: job()?, node: node()? },
             "rejected" => {
                 let reason_s = j
@@ -952,6 +1049,7 @@ impl EventV1 {
                 }
                 EventKind::NodeLeft { node: node()?, preempted }
             }
+            "node_retired" => EventKind::NodeRetired { node: node()? },
             other => return Err(format!("unknown event type '{other}'")),
         };
         Ok(Self { seq, time, kind })
@@ -960,20 +1058,26 @@ impl EventV1 {
 
 /// `GET /v1/cluster/events` query parameters.
 ///
-/// `?since=<seq>&limit=<n>` — both optional; `since` defaults to 0 (from
-/// the beginning of the retained ring), `limit` defaults to
+/// `?since=<seq>&limit=<n>&wait_ms=<ms>` — all optional; `since` defaults
+/// to 0 (from the beginning of the retained ring), `limit` defaults to
 /// [`DEFAULT_EVENTS_LIMIT`] and is clamped to `1..=`[`MAX_EVENTS_LIMIT`]
 /// (a zero limit could never make progress and would spin pollers).
+/// `wait_ms > 0` long-polls: the server holds the request until an event
+/// with `seq > since` exists or the wait (clamped to
+/// [`MAX_EVENTS_WAIT_MS`]) elapses — `frenzy events --follow` rides on
+/// this instead of busy-polling.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EventsRequestV1 {
     /// Return events with `seq > since`.
     pub since: u64,
     pub limit: usize,
+    /// Long-poll hold time in milliseconds (0 = answer immediately).
+    pub wait_ms: u64,
 }
 
 impl Default for EventsRequestV1 {
     fn default() -> Self {
-        Self { since: 0, limit: DEFAULT_EVENTS_LIMIT }
+        Self { since: 0, limit: DEFAULT_EVENTS_LIMIT, wait_ms: 0 }
     }
 }
 
@@ -991,6 +1095,10 @@ impl EventsRequestV1 {
                     let l: usize = v.parse().map_err(|_| format!("bad limit '{v}'"))?;
                     out.limit = l.clamp(1, MAX_EVENTS_LIMIT);
                 }
+                "wait_ms" => {
+                    let w: u64 = v.parse().map_err(|_| format!("bad wait_ms '{v}'"))?;
+                    out.wait_ms = w.min(MAX_EVENTS_WAIT_MS);
+                }
                 other => return Err(format!("unknown query parameter '{other}'")),
             }
         }
@@ -1005,6 +1113,9 @@ impl EventsRequestV1 {
         }
         if self.limit != DEFAULT_EVENTS_LIMIT {
             parts.push(format!("limit={}", self.limit));
+        }
+        if self.wait_ms != 0 {
+            parts.push(format!("wait_ms={}", self.wait_ms));
         }
         parts.join("&")
     }
@@ -1101,6 +1212,18 @@ pub struct ReportV1 {
     pub makespan_s: f64,
     pub total_oom_retries: u64,
     pub n_oom_events: u64,
+    /// Graceful drains completed (checkpoint + requeue).
+    pub n_drains: u64,
+    /// Training steps actually executed, including drained work past the
+    /// last checkpoint.
+    pub total_steps_executed: u64,
+    /// Peak-memory prediction-accuracy dispatches sampled.
+    pub mem_pred_samples: u64,
+    /// Mean `1 − |predicted − observed|/observed` over sampled dispatches
+    /// (the paper's §V.C metric; 0 when nothing was sampled).
+    pub mem_pred_accuracy_avg: f64,
+    /// Worst sampled prediction accuracy (0 when nothing was sampled).
+    pub mem_pred_accuracy_min: f64,
     pub sched_work_units: u64,
     pub sched_overhead_s: f64,
     pub avg_utilization: f64,
@@ -1136,6 +1259,11 @@ impl ReportV1 {
             makespan_s: finite(r.makespan_s),
             total_oom_retries: r.total_oom_retries,
             n_oom_events: r.n_oom_events,
+            n_drains: r.n_drains,
+            total_steps_executed: r.total_steps_executed,
+            mem_pred_samples: r.mem_pred_samples,
+            mem_pred_accuracy_avg: finite(r.mem_pred_accuracy_avg),
+            mem_pred_accuracy_min: finite(r.mem_pred_accuracy_min),
             sched_work_units: r.sched_work_units,
             sched_overhead_s: finite(r.sched_overhead_s),
             avg_utilization: finite(r.avg_utilization),
@@ -1165,6 +1293,11 @@ impl ReportV1 {
             makespan_s: self.makespan_s,
             total_oom_retries: self.total_oom_retries,
             n_oom_events: self.n_oom_events,
+            n_drains: self.n_drains,
+            total_steps_executed: self.total_steps_executed,
+            mem_pred_samples: self.mem_pred_samples,
+            mem_pred_accuracy_avg: self.mem_pred_accuracy_avg,
+            mem_pred_accuracy_min: self.mem_pred_accuracy_min,
             sched_work_units: self.sched_work_units,
             sched_overhead_s: self.sched_overhead_s,
             avg_utilization: self.avg_utilization,
@@ -1206,6 +1339,11 @@ impl ReportV1 {
             makespan_s: num("makespan_s"),
             total_oom_retries: int("total_oom_retries"),
             n_oom_events: int("n_oom_events"),
+            n_drains: int("n_drains"),
+            total_steps_executed: int("total_steps_executed"),
+            mem_pred_samples: int("mem_pred_samples"),
+            mem_pred_accuracy_avg: num("mem_pred_accuracy_avg"),
+            mem_pred_accuracy_min: num("mem_pred_accuracy_min"),
             sched_work_units: int("sched_work_units"),
             sched_overhead_s: num("sched_overhead_s"),
             avg_utilization: num("avg_utilization"),
@@ -1378,7 +1516,7 @@ mod tests {
     }
 
     fn gen_event_kind(g: &mut Gen) -> EventKind {
-        match g.usize_in(0, 8) {
+        match g.usize_in(0, 13) {
             0 => EventKind::Arrival { job: g.u64_in(0, MAX_EXACT) },
             1 => EventKind::Placed {
                 job: g.u64_in(0, MAX_EXACT),
@@ -1414,6 +1552,33 @@ mod tests {
                 gpu: gen_string(g),
                 gpus: g.u64_in(1, 64) as u32,
             },
+            8 => EventKind::OomObserved {
+                job: g.u64_in(0, MAX_EXACT),
+                epoch: g.u64_in(1, 64),
+                node: g.usize_in(0, 999),
+                predicted_bytes: g.u64_in(0, MAX_EXACT),
+                observed_bytes: g.u64_in(0, MAX_EXACT),
+                capacity_bytes: g.u64_in(0, MAX_EXACT),
+            },
+            9 => EventKind::DrainRequested {
+                job: g.u64_in(0, MAX_EXACT),
+                epoch: g.u64_in(1, 64),
+                node: g.usize_in(0, 999),
+                deadline_s: g.f64_in(0.0, 1e6),
+            },
+            10 => EventKind::Drained {
+                job: g.u64_in(0, MAX_EXACT),
+                epoch: g.u64_in(1, 64),
+                node: g.usize_in(0, 999),
+                steps_ckpt: g.u64_in(0, MAX_EXACT),
+                state_digest: g.u64_in(0, MAX_EXACT),
+            },
+            11 => EventKind::ResumedFromCkpt {
+                job: g.u64_in(0, MAX_EXACT),
+                epoch: g.u64_in(1, 64),
+                steps_ckpt: g.u64_in(0, MAX_EXACT),
+            },
+            12 => EventKind::NodeRetired { node: g.usize_in(0, 999) },
             _ => EventKind::NodeLeft {
                 node: g.usize_in(0, 999),
                 preempted: (0..g.usize_in(0, 4)).map(|i| i as u64).collect(),
@@ -1458,10 +1623,11 @@ mod tests {
 
     #[test]
     fn events_query_roundtrip_and_validation() {
-        let req = EventsRequestV1 { since: 42, limit: 7 };
+        let req = EventsRequestV1 { since: 42, limit: 7, wait_ms: 2500 };
         assert_eq!(EventsRequestV1::from_query(&req.to_query()).unwrap(), req);
         assert_eq!(EventsRequestV1::from_query("").unwrap(), EventsRequestV1::default());
         assert!(EventsRequestV1::from_query("since=minus").is_err());
+        assert!(EventsRequestV1::from_query("wait_ms=forever").is_err());
         assert!(EventsRequestV1::from_query("bogus=1").is_err());
         // limit clamped on both ends, not rejected: a zero limit can make
         // no progress and would spin a ?since=-polling client forever.
@@ -1470,6 +1636,12 @@ mod tests {
             MAX_EVENTS_LIMIT
         );
         assert_eq!(EventsRequestV1::from_query("limit=0").unwrap().limit, 1);
+        // wait_ms clamped to the long-poll cap (holding a worker forever
+        // would starve the pool).
+        assert_eq!(
+            EventsRequestV1::from_query("wait_ms=999999999").unwrap().wait_ms,
+            MAX_EVENTS_WAIT_MS
+        );
     }
 
     #[test]
@@ -1505,6 +1677,11 @@ mod tests {
                 makespan_s: g.f64_in(0.0, 1e6),
                 total_oom_retries: g.u64_in(0, 100),
                 n_oom_events: g.u64_in(0, 100),
+                n_drains: g.u64_in(0, 100),
+                total_steps_executed: g.u64_in(0, MAX_EXACT),
+                mem_pred_samples: g.u64_in(0, 10_000),
+                mem_pred_accuracy_avg: g.f64_in(0.0, 1.0),
+                mem_pred_accuracy_min: g.f64_in(0.0, 1.0),
                 sched_work_units: g.u64_in(0, MAX_EXACT),
                 sched_overhead_s: g.f64_in(0.0, 100.0),
                 avg_utilization: g.f64_in(0.0, 1.0),

@@ -93,6 +93,9 @@ impl FrenzyClient {
         if fresh {
             self.conn = Some(self.connect()?);
         }
+        // Re-apply the (possibly per-call, e.g. long-poll) read timeout to
+        // the cached socket; reader and writer share one fd.
+        let _ = self.conn.as_ref().unwrap().writer.set_read_timeout(Some(self.timeout));
         match Self::exchange(self.conn.as_mut().unwrap(), method, path, body) {
             Ok(r) => {
                 self.conn.as_mut().unwrap().last_used = Instant::now();
@@ -247,7 +250,9 @@ impl FrenzyClient {
     /// `GET /v1/cluster/events` — a page of the cluster event log.
     /// Poll with `req.since = previous_response.next_since` to tail the
     /// stream without gaps; `dropped` flags that the ring evicted events
-    /// the caller never saw.
+    /// the caller never saw. With `req.wait_ms > 0` the server long-polls
+    /// (holds the request until an event past `since` or the wait
+    /// elapses); the client stretches its read timeout to cover the hold.
     pub fn events(&mut self, req: &EventsRequestV1) -> Result<EventsResponseV1> {
         let q = req.to_query();
         let path = if q.is_empty() {
@@ -255,8 +260,17 @@ impl FrenzyClient {
         } else {
             format!("/v1/cluster/events?{q}")
         };
-        let j = self.call("GET", &path, "", true)?;
-        EventsResponseV1::from_json(&j).map_err(|e| anyhow!(e))
+        let result = if req.wait_ms > 0 {
+            let prev = self.timeout;
+            let hold = Duration::from_millis(req.wait_ms) + Duration::from_secs(5);
+            self.timeout = prev.max(hold);
+            let r = self.call("GET", &path, "", true);
+            self.timeout = prev;
+            r
+        } else {
+            self.call("GET", &path, "", true)
+        };
+        EventsResponseV1::from_json(&result?).map_err(|e| anyhow!(e))
     }
 
     /// `GET /v1/report` — the coordinator's streaming run report.

@@ -21,13 +21,25 @@
 //!   interval-driven ([`SchedulerKind::Sia`]): the timer feeds
 //!   `ClusterEvent::RoundTick` through the engine mailbox so live rounds
 //!   execute on the same cadence semantics as simulated ones,
-//! * models **live OOM detection** for memory-oblivious baselines: a
-//!   `will_oom` placement is fed back as an engine `Oom` event after
-//!   [`CoordinatorConfig::oom_detect_ms`], requeueing the job exactly as
-//!   the simulator does in virtual time,
+//! * runs **device-memory accounting** by default
+//!   ([`CoordinatorConfig::device_memory`]): dispatches charge observed
+//!   peak bytes against the engine's byte ledger, so a memory-oblivious
+//!   placement produces a *real* ledger-observed OOM (`oom_observed` +
+//!   crash after [`CoordinatorConfig::oom_observe_ms`]) with no
+//!   `oom_detect_ms` timer involved; the modeled `will_oom` timer remains
+//!   as the fallback when accounting is disabled,
+//! * implements **graceful drain** on node leaves
+//!   ([`CoordinatorConfig::drain_grace_ms`]): hosted jobs finish their
+//!   in-flight step, checkpoint
+//!   ([`CoordinatorConfig::ckpt_every_steps`]), release, and requeue with
+//!   their progress preserved — the engine's drain directives come back
+//!   through the mailbox as [`ClusterEvent::Drained`] after each
+//!   deadline,
 //! * exposes **observability**: the engine's bounded event log
-//!   (`GET /v1/cluster/events?since=<seq>`, [`Handle::events`]) and the
-//!   streaming run report (`GET /v1/report`, [`Handle::report`]).
+//!   (`GET /v1/cluster/events?since=<seq>`, [`Handle::events`]) with
+//!   long-poll push delivery (`?wait_ms=`, [`Handle::events_wait`] — the
+//!   coordinator parks listeners and wakes them on the next event) and
+//!   the streaming run report (`GET /v1/report`, [`Handle::report`]).
 //!
 //! Because the simulator drives the *same* engine on a virtual clock, every
 //! policy and scenario behaves identically in simulation and live mode (the
@@ -48,8 +60,8 @@ use crate::cluster::ClusterState;
 use crate::config::{ClusterSpec, LinkKind, NodeSpec};
 use crate::engine::clock::{Clock, WallClock};
 use crate::engine::{
-    ClusterEvent, Effects, EngineConfig, EventKind, EventsPage, PlacedJob, PlacementRecord,
-    RejectReason, RetentionQueue, SchedulingEngine,
+    ClusterEvent, Effects, EngineConfig, EventKind, EventsPage, PlacementRecord, RejectReason,
+    RetentionQueue, SchedulingEngine,
 };
 use crate::job::{JobId, JobSpec, JobState};
 use crate::marp::{Marp, ResourcePlan};
@@ -180,9 +192,20 @@ enum Msg {
     /// Executor completion, tagged with the placement epoch it belongs to
     /// (a result from a preempted/cancelled run must be discarded).
     TrainDone(TrainResult, u64),
-    /// Live OOM detection for a memory-oblivious placement (`will_oom`),
-    /// tagged with its placement epoch like `TrainDone`.
+    /// Live OOM for a doomed placement — ledger-observed (device-memory
+    /// accounting) or modeled (`will_oom` fallback timer) — tagged with
+    /// its placement epoch like `TrainDone`.
     TrainOom(JobId, u64),
+    /// A graceful-drain deadline elapsed: the job checkpoints, releases,
+    /// and requeues (engine `ClusterEvent::Drained`). Sent by the drain
+    /// timer threads, never by clients; stale epochs are discarded.
+    Drained(JobId, u64),
+    /// Long-poll event-log page: `(since_seq, limit, deadline)` — answered
+    /// immediately when events past `since` exist, otherwise parked until
+    /// one arrives or the deadline passes (expired waiters are pruned; the
+    /// waiting client has already given up and fallen back to a plain
+    /// [`Msg::Events`]).
+    EventsWait(u64, usize, std::time::Instant, mpsc::Sender<EventsPage>),
     /// Round-timer tick: interval schedulers (Sia) execute their deferred
     /// round now. Sent by the timer thread, never by clients.
     Tick,
@@ -273,6 +296,33 @@ impl Handle {
         self.ask(|rtx| Msg::Events(since, limit, rtx))
     }
 
+    /// Long-poll variant of [`Handle::events`]: blocks until an event with
+    /// `seq > since` exists or `wait` elapses, then returns the page (empty
+    /// on timeout). This is what `GET /v1/cluster/events?wait_ms=` and
+    /// `frenzy events --follow` ride on — no busy-polling anywhere.
+    pub fn events_wait(
+        &self,
+        since: u64,
+        limit: usize,
+        wait: std::time::Duration,
+    ) -> Result<EventsPage> {
+        let (rtx, rrx) = mpsc::channel();
+        // Slack past our own timeout: the coordinator prunes the parked
+        // waiter once this deadline passes (we will have stopped
+        // listening), so a quiet cluster cannot accumulate dead entries.
+        let deadline = std::time::Instant::now() + wait + std::time::Duration::from_secs(1);
+        self.tx
+            .send(Msg::EventsWait(since, limit, deadline, rtx))
+            .map_err(|_| anyhow!("coordinator gone"))?;
+        match rrx.recv_timeout(wait) {
+            Ok(page) => Ok(page),
+            // Timeout: fall back to an immediate (likely empty) page; the
+            // parked waiter is reaped on the coordinator's next flush.
+            Err(mpsc::RecvTimeoutError::Timeout) => self.events(since, limit),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(anyhow!("coordinator gone")),
+        }
+    }
+
     /// The engine's placement decision log — `(job, sorted (node, gpus))`
     /// in placement order. Used by the sim/live differential tests.
     pub fn decisions(&self) -> Result<Vec<PlacementRecord>> {
@@ -346,9 +396,33 @@ pub struct CoordinatorConfig {
     /// (HAS, Opportunistic) never need ticks. Clamped to >= 1 ms.
     pub round_tick_period_s: f64,
     /// Milliseconds before a `will_oom` placement is detected as OOM and
-    /// fed back as an engine `Oom` event (the live counterpart of the
-    /// simulator's `oom_detect_s`; only baselines ever trigger it).
+    /// fed back as an engine `Oom` event — the **fallback** path, used
+    /// only when [`CoordinatorConfig::device_memory`] is off (the live
+    /// counterpart of the simulator's `oom_detect_s`).
     pub oom_detect_ms: u64,
+    /// Account device memory in bytes (default on): every dispatch
+    /// charges its observed per-GPU peak against the engine's
+    /// [`crate::runtime::device::DeviceMemory`] ledger, and an
+    /// over-capacity charge is a *real* OOM — `oom_observed` in the event
+    /// log, crash after [`CoordinatorConfig::oom_observe_ms`] — with no
+    /// `oom_detect_ms` timer involved.
+    pub device_memory: bool,
+    /// Per-dispatch activation jitter on the observed peak (deterministic
+    /// per `(job, epoch)`; 0 keeps live runs aligned with simulation).
+    pub mem_jitter_frac: f64,
+    /// Milliseconds from dispatch until a ledger-observed OOM crashes the
+    /// run (the first step attempt faults fast).
+    pub oom_observe_ms: u64,
+    /// Graceful-drain budget on a node leave, in milliseconds: hosted
+    /// jobs get `min(in-flight step + ckpt_write_ms, drain_grace_ms)` to
+    /// checkpoint and release before requeueing. Zero preempts instantly
+    /// (the pre-checkpoint behavior).
+    pub drain_grace_ms: u64,
+    /// Checkpoint cadence in training steps (0 disables checkpointing —
+    /// a drained job restarts from step 0).
+    pub ckpt_every_steps: u64,
+    /// Milliseconds a drain spends writing the checkpoint.
+    pub ckpt_write_ms: u64,
     /// Cap on real training steps per job (CPU demo scaling).
     pub max_real_steps: u64,
     /// Use the PJRT executor (true) or a timing stub (false; unit tests).
@@ -375,6 +449,12 @@ impl Default for CoordinatorConfig {
             scheduler: SchedulerKind::Has,
             round_tick_period_s: 0.05,
             oom_detect_ms: 50,
+            device_memory: true,
+            mem_jitter_frac: 0.0,
+            oom_observe_ms: 20,
+            drain_grace_ms: 150,
+            ckpt_every_steps: 50,
+            ckpt_write_ms: 10,
             max_real_steps: 50,
             execute_training: true,
             artifacts_dir: crate::util::repo_path("artifacts"),
@@ -396,39 +476,62 @@ pub fn spawn(spec: ClusterSpec, cfg: CoordinatorConfig) -> (Handle, std::thread:
     (Handle { tx }, handle)
 }
 
-/// Start training (or the stub) for every newly placed job.
-fn dispatch_jobs(
-    placed: &[PlacedJob],
+/// Deliver `msg` to the coordinator mailbox after `delay_s` (immediately
+/// when the delay rounds to zero — still via the mailbox so ordering
+/// matches the timer path).
+fn send_after(tx_internal: &mpsc::Sender<Msg>, delay_s: f64, msg: Msg) {
+    let millis = (delay_s.max(0.0) * 1e3).round() as u64;
+    if millis == 0 {
+        let _ = tx_internal.send(msg);
+        return;
+    }
+    let tx = tx_internal.clone();
+    std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(millis));
+        let _ = tx.send(msg);
+    });
+}
+
+/// Start training (or the stub) for every newly placed job, and arm the
+/// timers behind the engine's wall-clock directives: ledger-observed OOM
+/// crashes and graceful-drain deadlines come back through the mailbox as
+/// `TrainOom` / `Drained` once their delay elapses.
+fn dispatch_effects(
+    fx: &Effects,
     jobs: &HashMap<JobId, LiveJob>,
     cfg: &CoordinatorConfig,
     executor: &Option<TrainExecutor>,
     tx_internal: &mpsc::Sender<Msg>,
 ) {
-    for p in placed {
-        // Live OOM modeling: HAS plans are MARP-hardened and never OOM,
-        // but the memory-oblivious baselines (Sia/Opportunistic) can place
-        // a job where its peak exceeds the GPU. The stand-in executor has
-        // no real GPU memory to exhaust, so the coordinator models the
-        // crash: after `oom_detect_ms` the placement is reported back as
-        // an engine `Oom` event (release + requeue with `attempts + 1`) —
-        // exactly what the simulator does in virtual time.
+    for d in &fx.oom_observed {
+        // The byte ledger already observed the overflow; crash the run
+        // after the engine-chosen observe delay.
+        send_after(tx_internal, d.delay_s, Msg::TrainOom(d.job, d.epoch));
+    }
+    for d in &fx.drain_requested {
+        send_after(tx_internal, d.delay_s, Msg::Drained(d.job, d.epoch));
+    }
+    for p in &fx.placed {
         if p.will_oom {
-            let tx = tx_internal.clone();
-            let job = p.job;
-            let epoch = p.epoch;
-            if cfg.oom_detect_ms == 0 {
-                let _ = tx.send(Msg::TrainOom(job, epoch));
-            } else {
-                let delay = std::time::Duration::from_millis(cfg.oom_detect_ms);
-                std::thread::spawn(move || {
-                    std::thread::sleep(delay);
-                    let _ = tx.send(Msg::TrainOom(job, epoch));
-                });
+            // With device-memory accounting on, the ledger raised an
+            // `oom_observed` directive above — nothing more to arm here.
+            // Without it, fall back to modeling detection: after
+            // `oom_detect_ms` the placement is reported back as an engine
+            // `Oom` event (release + requeue with `attempts + 1`) —
+            // exactly what the simulator's fallback does in virtual time.
+            if !cfg.device_memory {
+                send_after(
+                    tx_internal,
+                    cfg.oom_detect_ms as f64 / 1e3,
+                    Msg::TrainOom(p.job, p.epoch),
+                );
             }
             continue;
         }
         let Some(job) = jobs.get(&p.job) else { continue };
-        let steps = (job.spec.total_samples / job.spec.train.global_batch.max(1) as u64)
+        // A resumed job only re-executes its remaining samples.
+        let remaining = job.spec.total_samples.saturating_sub(p.resumed_samples);
+        let steps = (remaining / job.spec.train.global_batch.max(1) as u64)
             .clamp(1, cfg.max_real_steps);
         let epoch = p.epoch;
         if let Some(ex) = executor {
@@ -577,6 +680,12 @@ fn coordinator_loop(
             // Live mode: the scheduler's real wall time already elapses on
             // the clock — never charge modeled overhead on top.
             sched_work_unit_s: 0.0,
+            device_memory: cfg.device_memory,
+            mem_jitter_frac: cfg.mem_jitter_frac,
+            oom_observe_s: cfg.oom_observe_ms as f64 / 1e3,
+            drain_grace_s: cfg.drain_grace_ms as f64 / 1e3,
+            ckpt_every_steps: cfg.ckpt_every_steps,
+            ckpt_write_s: cfg.ckpt_write_ms as f64 / 1e3,
             ..EngineConfig::default()
         },
     );
@@ -585,6 +694,21 @@ fn coordinator_loop(
     let mut next_id: JobId = 1;
     let mut admission_rejected = 0usize;
     let mut drain_waiters: Vec<mpsc::Sender<()>> = Vec::new();
+    // Long-poll event listeners: parked until an event past their `since`
+    // or their deadline. Every parked listener holds one HTTP worker on
+    // the server side, so the table is capped below the default pool size
+    // (16 workers) — excess long-polls are answered immediately and the
+    // client degrades to paced polling instead of starving other routes.
+    const MAX_PARKED_EVENT_WAITERS: usize = 8;
+    let mut event_waiters: Vec<(u64, usize, std::time::Instant, mpsc::Sender<EventsPage>)> =
+        Vec::new();
+    // Topology signature for admission-MARP freshness: capacity can change
+    // outside the Scale arm too — a graceful drain completes (the retiring
+    // node is reaped) whenever a draining job finishes, OOMs, drains, or
+    // is cancelled — and a stale MARP would keep admitting models only the
+    // retired hardware could host.
+    let mut marp_topology =
+        (engine.cluster_state().nodes.len(), engine.cluster_state().total_gpus());
     let executor = if cfg.execute_training {
         Some(TrainExecutor::spawn(cfg.artifacts_dir.clone()))
     } else {
@@ -642,19 +766,12 @@ fn coordinator_loop(
                 let mut fx = engine.handle(ClusterEvent::Arrival(spec_job), &mut wall);
                 fx.merge(engine.run_round(&mut wall));
                 apply_effects(&fx, &mut jobs, &mut retention, wall.now());
-                dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
+                dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
                 // Reply after dispatch so an instant stub's completion is
                 // already in the mailbox before the caller's next message —
                 // sequential submitters then observe deterministic ordering
                 // (the differential trace test relies on this).
                 let _ = reply.send(Ok(id));
-                if all_terminal(&jobs) {
-                    // The submitted job can be rejected as unplaceable in
-                    // its own round; don't leave drain waiters parked.
-                    for w in drain_waiters.drain(..) {
-                        let _ = w.send(());
-                    }
-                }
             }
             Msg::Tick => {
                 // Round-timer tick: clear the engine's tick latch and give
@@ -663,12 +780,7 @@ fn coordinator_loop(
                 let mut fx = engine.handle(ClusterEvent::RoundTick, &mut wall);
                 fx.merge(engine.run_round(&mut wall));
                 apply_effects(&fx, &mut jobs, &mut retention, wall.now());
-                dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
-                if !drain_waiters.is_empty() && all_terminal(&jobs) {
-                    for w in drain_waiters.drain(..) {
-                        let _ = w.send(());
-                    }
-                }
+                dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
             }
             Msg::TrainOom(id, epoch) => {
                 // Modeled OOM of a memory-oblivious placement. The epoch
@@ -686,12 +798,17 @@ fn coordinator_loop(
                 }
                 fx.merge(engine.run_round(&mut wall));
                 apply_effects(&fx, &mut jobs, &mut retention, wall.now());
-                dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
-                if all_terminal(&jobs) {
-                    for w in drain_waiters.drain(..) {
-                        let _ = w.send(());
-                    }
-                }
+                dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
+            }
+            Msg::Drained(id, epoch) => {
+                // A drain deadline elapsed: the engine checkpoints the job,
+                // releases its GPUs (reaping the retiring node), and
+                // requeues it. The epoch guard inside the engine discards
+                // stale deadlines (job finished/cancelled/re-placed since).
+                let mut fx = engine.handle(ClusterEvent::Drained { job: id, epoch }, &mut wall);
+                fx.merge(engine.run_round(&mut wall));
+                apply_effects(&fx, &mut jobs, &mut retention, wall.now());
+                dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
             }
             Msg::TrainDone(res, epoch) => {
                 let mut fx = Effects::default();
@@ -712,12 +829,7 @@ fn coordinator_loop(
                 // for anything that starts.
                 fx.merge(engine.run_round(&mut wall));
                 apply_effects(&fx, &mut jobs, &mut retention, wall.now());
-                dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
-                if all_terminal(&jobs) {
-                    for w in drain_waiters.drain(..) {
-                        let _ = w.send(());
-                    }
-                }
+                dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
             }
             Msg::Query(id, reply) => {
                 let _ = reply.send(jobs.get(&id).map(LiveJob::status));
@@ -750,12 +862,7 @@ fn coordinator_loop(
                     // queue; either way give waiters a chance.
                     let fx = engine.run_round(&mut wall);
                     apply_effects(&fx, &mut jobs, &mut retention, wall.now());
-                    dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
-                    if all_terminal(&jobs) {
-                        for w in drain_waiters.drain(..) {
-                            let _ = w.send(());
-                        }
-                    }
+                    dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
                 }
             }
             Msg::Scale(op, reply) => {
@@ -774,16 +881,22 @@ fn coordinator_loop(
                         }
                     }
                     ScaleOp::Leave { node } => {
-                        let active = engine
+                        // `node_active` also rejects nodes already in
+                        // graceful drain — a second leave must not reset
+                        // their deadlines — with an error that says so
+                        // (the node visibly still exists while draining).
+                        if engine.node_active(node) {
+                            let fx = engine.handle(ClusterEvent::NodeLeave(node), &mut wall);
+                            Ok((node, fx))
+                        } else if engine
                             .cluster_state()
                             .nodes
                             .get(node)
-                            .is_some_and(|n| n.total > 0);
-                        if !active {
-                            Err(format!("no such node {node}"))
+                            .is_some_and(|n| n.total > 0)
+                        {
+                            Err(format!("node {node} is already draining"))
                         } else {
-                            let fx = engine.handle(ClusterEvent::NodeLeave(node), &mut wall);
-                            Ok((node, fx))
+                            Err(format!("no such node {node}"))
                         }
                     }
                 };
@@ -792,18 +905,20 @@ fn coordinator_loop(
                         let _ = reply.send(Err(e));
                     }
                     Ok((node, mut fx)) => {
-                        // The topology changed: rebuild admission MARP so
-                        // new GPU types are admitted (the engine already
-                        // told its scheduler via `cluster_changed`).
-                        marp = Marp::with_defaults(engine.cluster_state().to_spec("scaled"));
-                        // Report every job the leave displaced — including
-                        // those the engine rejected for an exhausted
-                        // attempt budget, which land in `fx.rejected`.
+                        // (Admission MARP follows the topology change via
+                        // the end-of-loop signature check below; the
+                        // engine already told its scheduler through
+                        // `cluster_changed`.)
+                        // Report every job the leave displaced — instantly
+                        // preempted, rejected for an exhausted attempt
+                        // budget, or asked to drain gracefully (those
+                        // requeue once their checkpoint lands).
                         let mut preempted = fx.preempted.clone();
                         preempted.extend(fx.rejected.iter().copied());
+                        preempted.extend(fx.drain_requested.iter().map(|d| d.job));
                         fx.merge(engine.run_round(&mut wall));
                         apply_effects(&fx, &mut jobs, &mut retention, wall.now());
-                        dispatch_jobs(&fx.placed, &jobs, &cfg, &executor, &tx_internal);
+                        dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
                         let s = engine.cluster_state();
                         let _ = reply.send(Ok(ScaleReport {
                             node,
@@ -811,11 +926,6 @@ fn coordinator_loop(
                             total_gpus: s.total_gpus(),
                             idle_gpus: s.idle_gpus(),
                         }));
-                        if all_terminal(&jobs) {
-                            for w in drain_waiters.drain(..) {
-                                let _ = w.send(());
-                            }
-                        }
                     }
                 }
             }
@@ -865,6 +975,20 @@ fn coordinator_loop(
             Msg::Events(since, limit, reply) => {
                 let _ = reply.send(engine.event_log().since(since, limit));
             }
+            Msg::EventsWait(since, limit, deadline, reply) => {
+                // Reclaim slots from listeners whose clients gave up.
+                let now_i = std::time::Instant::now();
+                event_waiters.retain(|&(_, _, dl, _)| now_i < dl);
+                if engine.event_log().last_seq() > since
+                    || event_waiters.len() >= MAX_PARKED_EVENT_WAITERS
+                {
+                    // Events already available (or every long-poll slot is
+                    // taken): answer immediately — degenerates to a poll.
+                    let _ = reply.send(engine.event_log().since(since, limit));
+                } else {
+                    event_waiters.push((since, limit, deadline, reply));
+                }
+            }
             Msg::Decisions(reply) => {
                 let _ = reply.send(engine.decision_log().to_vec());
             }
@@ -875,6 +999,41 @@ fn coordinator_loop(
                     drain_waiters.push(reply);
                 }
             }
+        }
+        // Every arm that can move jobs to a terminal state funnels through
+        // here: wake drain() waiters once nothing is live. (One flush
+        // point instead of a copy per message arm — a new arm cannot
+        // forget it.)
+        if !drain_waiters.is_empty() && all_terminal(&jobs) {
+            for w in drain_waiters.drain(..) {
+                let _ = w.send(());
+            }
+        }
+        // Admission/predict MARP follows the live topology: rebuild when
+        // capacity changed under this message (elastic scale, or a
+        // retiring node completing its drain).
+        let topology_now =
+            (engine.cluster_state().nodes.len(), engine.cluster_state().total_gpus());
+        if topology_now != marp_topology {
+            marp_topology = topology_now;
+            marp = Marp::with_defaults(engine.cluster_state().to_spec("scaled"));
+        }
+        // Push delivery for long-poll event listeners: wake every parked
+        // waiter whose `since` fell behind the log head, and prune waiters
+        // whose deadline passed (their client stopped listening). A waiter
+        // whose client just timed out drops on send; either way it leaves
+        // the table.
+        if !event_waiters.is_empty() {
+            let last = engine.event_log().last_seq();
+            let now_i = std::time::Instant::now();
+            event_waiters.retain(|(since, limit, deadline, reply)| {
+                if last > *since {
+                    let _ = reply.send(engine.event_log().since(*since, *limit));
+                    false
+                } else {
+                    now_i < *deadline
+                }
+            });
         }
     }
 }
@@ -1224,12 +1383,16 @@ mod tests {
     #[test]
     fn live_oom_detection_requeues_and_recovers() {
         // Opportunistic on the real testbed mis-sizes gpt2-2.7b (sized for
-        // 80G, greedily placed on 40G) — the live OOM path must detect it,
-        // requeue with attempts + 1, and still complete the job.
+        // 80G, greedily placed on 40G) — the byte ledger must observe the
+        // real OOM, requeue with attempts + 1, and still complete the job.
+        // `oom_detect_ms` is deliberately configured to an hour: if the
+        // fallback timer (instead of the ledger) ever drives this path
+        // again, the drain below hangs and the test fails by timeout.
         let cfg = CoordinatorConfig {
             execute_training: false,
             scheduler: SchedulerKind::Opportunistic,
-            oom_detect_ms: 20,
+            oom_detect_ms: 3_600_000,
+            oom_observe_ms: 20,
             ..CoordinatorConfig::default()
         };
         let (h, _j) = spawn(real_testbed(), cfg);
@@ -1253,15 +1416,110 @@ mod tests {
         }
         let report = h.report().unwrap();
         assert_eq!(report.n_completed + report.n_rejected, 4);
+        assert!(report.mem_pred_samples > 0, "every dispatch sampled prediction accuracy");
+        assert!(
+            (0.85..=1.0).contains(&report.mem_pred_accuracy_avg),
+            "accuracy {} out of the paper's band",
+            report.mem_pred_accuracy_avg
+        );
         if report.n_oom_events > 0 {
+            // The audit trail explains each crash: an `oom_observed` with
+            // over-capacity bytes precedes the `oomed`.
             let page = h.events(0, 1000).unwrap();
             assert!(page
                 .events
                 .iter()
                 .any(|r| matches!(r.kind, EventKind::Oomed { .. })));
+            assert!(page.events.iter().any(|r| matches!(
+                r.kind,
+                EventKind::OomObserved { observed_bytes, capacity_bytes, .. }
+                    if observed_bytes > capacity_bytes
+            )));
         }
         let (total, idle, _) = h.cluster_info().unwrap();
         assert_eq!(total, idle, "all resources released after OOM churn");
+        h.shutdown();
+    }
+
+    #[test]
+    fn scale_leave_drains_gracefully_with_checkpoint() {
+        // A running job on a retiring node must drain — checkpoint,
+        // release, requeue — and the node must finish retirement once the
+        // drained GPUs are reaped. A long stub delay keeps the job running
+        // across the drain deadline.
+        let cfg = CoordinatorConfig {
+            execute_training: false,
+            stub_delay_ms: 400,
+            drain_grace_ms: 50,
+            ckpt_write_ms: 5,
+            ckpt_every_steps: 1,
+            ..CoordinatorConfig::default()
+        };
+        let (h, _j) = spawn(real_testbed(), cfg);
+        let id = h
+            .submit(SubmitRequest {
+                model: "gpt2-350m".into(),
+                global_batch: 8,
+                total_samples: 400,
+            })
+            .unwrap();
+        assert_eq!(h.status(id).unwrap().unwrap().state, JobState::Running);
+        let decisions = h.decisions().unwrap();
+        let node = decisions[0].1[0].0;
+        let rep = h.scale(ScaleOp::Leave { node }).unwrap();
+        assert_eq!(rep.preempted, vec![id], "the hosted job is draining");
+        h.drain().unwrap();
+        assert_eq!(h.status(id).unwrap().unwrap().state, JobState::Completed);
+        let (total, idle, _) = h.cluster_info().unwrap();
+        assert!(total < 11, "the retired node's GPUs are gone");
+        assert_eq!(total, idle, "all resources released");
+        let report = h.report().unwrap();
+        assert_eq!(report.n_completed, 1);
+        assert_eq!(report.n_drains, 1, "the preemption was a graceful drain");
+        // The event log tells the drain story.
+        let page = h.events(0, 1000).unwrap();
+        let kinds: Vec<&EventKind> = page.events.iter().map(|r| &r.kind).collect();
+        assert!(kinds
+            .iter()
+            .any(|k| matches!(k, EventKind::DrainRequested { job, .. } if *job == id)));
+        assert!(kinds.iter().any(|k| matches!(k, EventKind::Drained { job, .. } if *job == id)));
+        // A second leave of the same (now draining/retired) node errors.
+        assert!(h.scale(ScaleOp::Leave { node }).is_err());
+        h.shutdown();
+    }
+
+    #[test]
+    fn events_long_poll_wakes_on_new_event() {
+        let (h, _j) = spawn(real_testbed(), no_exec_cfg());
+        // Nothing has happened: a short wait times out with an empty page.
+        let t0 = std::time::Instant::now();
+        let page = h.events_wait(0, 100, std::time::Duration::from_millis(80)).unwrap();
+        assert!(page.events.is_empty());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(75), "waited, not polled");
+        // A parked waiter is woken by the next event instead of timing out.
+        let h2 = h.clone();
+        let waiter = std::thread::spawn(move || {
+            h2.events_wait(0, 100, std::time::Duration::from_secs(10)).unwrap()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let id = h
+            .submit(SubmitRequest {
+                model: "gpt2-350m".into(),
+                global_batch: 8,
+                total_samples: 100,
+            })
+            .unwrap();
+        let t1 = std::time::Instant::now();
+        let page = waiter.join().unwrap();
+        assert!(t1.elapsed() < std::time::Duration::from_secs(5), "woken by push, not timeout");
+        assert!(page
+            .events
+            .iter()
+            .any(|r| matches!(r.kind, EventKind::Arrival { job } if job == id)));
+        // Already-available events answer immediately.
+        let page = h.events_wait(0, 100, std::time::Duration::from_secs(10)).unwrap();
+        assert!(!page.events.is_empty());
+        h.drain().unwrap();
         h.shutdown();
     }
 

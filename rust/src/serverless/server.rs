@@ -388,7 +388,18 @@ fn handle_events(handle: &Handle, query: &str) -> Response {
         Ok(r) => r,
         Err(e) => return Response::err(400, e),
     };
-    match handle.events(req.since, req.limit) {
+    // `wait_ms` long-polls: this worker thread parks on the coordinator's
+    // waiter table until an event past `since` lands or the (capped) wait
+    // elapses — the client holds one quiet connection instead of polling.
+    // The coordinator bounds concurrently parked listeners below the
+    // worker-pool size (answering excess long-polls immediately), so
+    // followers cannot starve the pool for the other routes.
+    let page = if req.wait_ms > 0 {
+        handle.events_wait(req.since, req.limit, Duration::from_millis(req.wait_ms))
+    } else {
+        handle.events(req.since, req.limit)
+    };
+    match page {
         Ok(page) => Response::ok(
             EventsResponseV1::from_page(&page, req.since).to_json().to_string_compact(),
         ),

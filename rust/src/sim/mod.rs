@@ -26,8 +26,24 @@ use crate::sched::Scheduler;
 /// Simulator tuning knobs.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
-    /// Sim-seconds before an OOM is detected and the job is requeued.
+    /// Sim-seconds before an OOM is detected and the job is requeued (the
+    /// fallback timer, used only with `device_memory` off).
     pub oom_detect_s: f64,
+    /// Account device memory in bytes (see `EngineConfig::device_memory`):
+    /// OOMs come from the byte ledger observing an over-capacity charge,
+    /// and the run report carries prediction-accuracy aggregates.
+    pub device_memory: bool,
+    /// Per-dispatch activation jitter on the observed peak (deterministic
+    /// per `(job, epoch)`; 0 keeps runs bit-reproducible).
+    pub mem_jitter_frac: f64,
+    /// Sim-seconds from start until a ledger-observed OOM crashes the run.
+    pub oom_observe_s: f64,
+    /// Checkpoint cadence in training steps (0 disables checkpointing).
+    pub ckpt_every_steps: u64,
+    /// Sim-seconds a drain spends writing the checkpoint.
+    pub ckpt_write_s: f64,
+    /// Graceful-drain budget on `NodeLeave` (0 = instant preemption).
+    pub drain_grace_s: f64,
     /// Sim-seconds charged per scheduler work unit (models the paper's
     /// scheduling-overhead effect; calibrated so HAS rounds are ~ms and
     /// Sia rounds grow to seconds at large queue depths).
@@ -40,8 +56,15 @@ pub struct SimConfig {
 
 impl Default for SimConfig {
     fn default() -> Self {
+        let e = EngineConfig::default();
         Self {
             oom_detect_s: 45.0,
+            device_memory: e.device_memory,
+            mem_jitter_frac: e.mem_jitter_frac,
+            oom_observe_s: e.oom_observe_s,
+            ckpt_every_steps: e.ckpt_every_steps,
+            ckpt_write_s: e.ckpt_write_s,
+            drain_grace_s: e.drain_grace_s,
             sched_work_unit_s: 2.0e-5,
             max_sim_time_s: 60.0 * 86_400.0,
             max_attempts: 6,
@@ -53,6 +76,12 @@ impl SimConfig {
     fn engine_config(&self) -> EngineConfig {
         EngineConfig {
             oom_detect_s: self.oom_detect_s,
+            device_memory: self.device_memory,
+            mem_jitter_frac: self.mem_jitter_frac,
+            oom_observe_s: self.oom_observe_s,
+            ckpt_every_steps: self.ckpt_every_steps,
+            ckpt_write_s: self.ckpt_write_s,
+            drain_grace_s: self.drain_grace_s,
             sched_work_unit_s: self.sched_work_unit_s,
             max_attempts: self.max_attempts,
             ..EngineConfig::default()
