@@ -1,0 +1,121 @@
+//! Bench: durability cost — raw WAL append latency per fsync policy, and
+//! the end-to-end overhead a journal adds to a Philly replay through the
+//! scheduling engine.
+//!
+//! The acceptance gate is the engine-level one: a journaled replay must
+//! stay within 10% of the in-memory replay (the WAL is a length-prefixed
+//! append + occasional fsync; it must never dominate scheduling). The
+//! gate only runs in full mode — under `FRENZY_BENCH_FAST=1` (CI smoke)
+//! timings are too short to be stable. Results land in `BENCH_wal.json`
+//! at the repository root.
+
+use frenzy::bench_harness::Bench;
+use frenzy::config::real_testbed;
+use frenzy::durability::{FsyncPolicy, SharedJournal, Wal, WalRecord};
+use frenzy::engine::clock::{Clock, VirtualClock};
+use frenzy::engine::{ClusterEvent, EngineConfig, SchedulingEngine};
+use frenzy::job::JobSpec;
+use frenzy::marp::Marp;
+use frenzy::sched::has::Has;
+use frenzy::util::json::Json;
+use frenzy::workload::philly;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// One full virtual-clock replay of `jobs`; journaled when `wal` is set.
+/// Returns completions so the work can't be optimized away.
+fn replay(jobs: &[JobSpec], wal: Option<Rc<RefCell<Wal>>>) -> usize {
+    let spec = real_testbed();
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+    if let Some(w) = wal {
+        engine.set_journal(Box::new(SharedJournal(w)));
+    }
+    let mut clock = VirtualClock::new();
+    for j in jobs {
+        clock.schedule(j.submit_time, ClusterEvent::Arrival(j.clone()));
+    }
+    while let Some((_, ev)) = clock.pop() {
+        engine.handle(ev, &mut clock);
+        engine.run_round(&mut clock);
+    }
+    engine.aggregates().n_completed
+}
+
+fn main() {
+    let fast = std::env::var("FRENZY_BENCH_FAST").ok().is_some_and(|v| v == "1");
+    let n_jobs = if fast { 10 } else { 24 };
+    let jobs = philly::generate(n_jobs, 11);
+
+    let dir = std::env::temp_dir().join("frenzy_bench_wal");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut b = Bench::new("wal");
+
+    // Raw append latency per fsync policy. One representative Event
+    // record; the WAL grows across iterations, which is exactly the
+    // steady state (append is O(1) in log length).
+    let rec = WalRecord::Event {
+        time: 12.5,
+        ev: ClusterEvent::Arrival(jobs[0].clone()),
+    };
+    let mut raw_results: Vec<(String, f64)> = Vec::new();
+    for (name, policy) in [
+        ("append_every64", FsyncPolicy::EveryN(64)),
+        ("append_interval1s", FsyncPolicy::IntervalS(1.0)),
+        ("append_always", FsyncPolicy::Always),
+    ] {
+        let (mut wal, _) = Wal::open(&dir.join(name), policy).expect("open bench WAL");
+        let r = b.bench_throughput(name, 1.0, || wal.append(&rec).unwrap()).clone();
+        raw_results.push((name.to_string(), r.mean_s));
+    }
+
+    // End-to-end: the same Philly replay with and without a journal. The
+    // journaled run shares one WAL across iterations — appends stay O(1),
+    // and no per-iteration setup pollutes the measurement.
+    let (wal, _) = Wal::open(&dir.join("replay"), FsyncPolicy::EveryN(64)).expect("open WAL");
+    let wal = Rc::new(RefCell::new(wal));
+    let mem = b.bench(&format!("replay_{n_jobs}jobs_in_memory"), || replay(&jobs, None)).clone();
+    let jnl = b
+        .bench(&format!("replay_{n_jobs}jobs_journaled"), || replay(&jobs, Some(wal.clone())))
+        .clone();
+    b.report();
+
+    let overhead = (jnl.mean_s - mem.mean_s) / mem.mean_s.max(1e-12);
+    println!(
+        "journal overhead on a {n_jobs}-job philly replay: {:.2}% \
+         (in-memory {:.3e}s, journaled {:.3e}s)",
+        overhead * 100.0,
+        mem.mean_s,
+        jnl.mean_s
+    );
+
+    let mut payload = Json::obj();
+    let mut raw = Json::obj();
+    for (name, mean_s) in &raw_results {
+        raw.set(name.as_str(), *mean_s);
+    }
+    payload
+        .set("bench", "wal")
+        .set("smoke", fast)
+        .set("workload", format!("philly(seed 11, {n_jobs} jobs)"))
+        .set("append_mean_s", raw)
+        .set("replay_in_memory_mean_s", mem.mean_s)
+        .set("replay_journaled_mean_s", jnl.mean_s)
+        .set("journal_overhead_frac", overhead);
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_wal.json");
+    frenzy::util::write_file(&path, &payload.to_string_pretty()).expect("write BENCH_wal.json");
+    println!("wrote {}", path.display());
+
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if !fast {
+        assert!(
+            overhead < 0.10,
+            "journaled replay must stay within 10% of in-memory, got {:.2}%",
+            overhead * 100.0
+        );
+        println!("acceptance: journal overhead <10% — OK ({:.2}%)", overhead * 100.0);
+    }
+}

@@ -315,7 +315,25 @@ fn fmt_event(e: &EventV1) -> String {
     format!("[{:>9.3}s] #{:<5} {detail}", e.time, e.seq)
 }
 
-/// `frenzy events [--since N] [--limit L] [--follow] [--wait-ms W] [--addr A]`
+/// Read a follower cursor file: the last event seq this follower printed,
+/// written by `frenzy events --follow --cursor <path>`. Absent or
+/// unparseable files mean "start from the beginning" — a follower must
+/// never refuse to start over a damaged cursor.
+fn read_cursor(path: &std::path::Path) -> u64 {
+    std::fs::read_to_string(path).ok().and_then(|s| s.trim().parse().ok()).unwrap_or(0)
+}
+
+/// Persist the follower cursor atomically (tmp + rename) so a crash
+/// mid-write can't leave a torn cursor that replays from zero.
+fn write_cursor(path: &std::path::Path, seq: u64) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, format!("{seq}\n"))?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// `frenzy events [--since N] [--limit L] [--follow] [--wait-ms W]
+///               [--cursor PATH] [--addr A]`
 ///
 /// Prints the cluster event log — the audit trail of arrivals, placements
 /// (with the chosen plan), finishes, observed OOMs, drains, preemptions,
@@ -323,10 +341,21 @@ fn fmt_event(e: &EventV1) -> String {
 /// server's long-poll (`?wait_ms=`): each request parks on the server
 /// until a new event lands or the wait elapses, so an idle follower sends
 /// a few quiet requests per minute instead of busy-polling.
+///
+/// `--cursor <path>` makes the follower restartable: the last printed seq
+/// is persisted after every page, and a restarted `frenzy events --cursor
+/// <path>` resumes from it instead of re-printing history. An explicit
+/// `--since` overrides the stored cursor (and the new position is then
+/// persisted as usual).
 pub fn cmd_events(args: &Args) -> Result<()> {
     let mut c = client(args);
+    let cursor = args.opt("cursor").map(std::path::PathBuf::from);
+    let since = match args.opt_parse::<u64>("since")? {
+        Some(s) => s, // explicit --since wins over the stored cursor
+        None => cursor.as_deref().map(read_cursor).unwrap_or(0),
+    };
     let mut req = EventsRequestV1 {
-        since: args.opt_parse_or("since", 0u64)?,
+        since,
         // Clamp like the server does: a zero limit makes no progress.
         limit: args
             .opt_parse_or("limit", crate::serverless::api::DEFAULT_EVENTS_LIMIT)?
@@ -352,6 +381,9 @@ pub fn cmd_events(args: &Args) -> Result<()> {
         }
         printed += page.events.len();
         req.since = page.next_since;
+        if let Some(path) = &cursor {
+            write_cursor(path, req.since)?;
+        }
         // Keep paging while the log has records past this page — a one-shot
         // invocation must print the whole retained history, not one page.
         // An empty page means no progress is possible; never spin on it.
@@ -585,20 +617,33 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
 
 /// `frenzy serve [--addr A] [--cluster C] [--steps N]
 ///              [--sched has|sia|opportunistic] [--round-interval S]
-///              [--drain-ms M] [--ckpt-steps K]`
+///              [--drain-ms M] [--ckpt-steps K]
+///              [--data-dir D] [--fsync always|every:N|interval:S]
+///              [--snapshot-every E]`
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let cluster = cluster_arg(args)?;
     let addr = args.opt_or("addr", DEFAULT_ADDR);
     let steps: u64 = args.opt_parse_or("steps", 50)?;
     let scheduler = scheduler_arg(args, 30.0)?;
     let defaults = CoordinatorConfig::default();
+    let data_dir = args.opt("data-dir").map(std::path::PathBuf::from);
+    let fsync = match args.opt("fsync") {
+        None => defaults.fsync,
+        Some(s) => crate::durability::FsyncPolicy::parse(s).map_err(|e| anyhow!(e))?,
+    };
     let cfg = CoordinatorConfig {
         max_real_steps: steps,
         scheduler,
         drain_grace_ms: args.opt_parse_or("drain-ms", defaults.drain_grace_ms)?,
         ckpt_every_steps: args.opt_parse_or("ckpt-steps", defaults.ckpt_every_steps)?,
+        data_dir,
+        fsync,
+        snapshot_every: args.opt_parse_or("snapshot-every", defaults.snapshot_every)?,
         ..defaults
     };
+    if let Some(dir) = &cfg.data_dir {
+        println!("durability: WAL + snapshots in {} (fsync {fsync})", dir.display());
+    }
     let (handle, _join) = crate::serverless::spawn(cluster, cfg);
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let local = crate::serverless::server::serve(handle, addr, stop)?;
@@ -610,6 +655,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     println!("  POST /v1/predict         {{\"model\":\"gpt2-7b\",\"batch\":2}}  (dry run)");
     println!("  GET  /v1/cluster/events  ?since=0&limit=500&wait_ms=5000  (audit log; long-poll)");
     println!("  GET  /v1/report          (streaming run report + memory-prediction accuracy)");
+    println!("  GET  /v1/durability      (WAL position + snapshot freshness)");
     println!("  GET  /v1/cluster | /v1/healthz    (see API.md; unversioned aliases served)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -247,19 +247,33 @@ impl CapacityIndex {
 }
 
 /// A scheduler's read-only window for one round: the authoritative cluster
-/// state plus the capacity index. The engine hands out a borrowed view (no
-/// clones on the hot path); tests and benches build an owned index from any
-/// standalone `ClusterState` via [`ClusterView::build`].
+/// state plus the capacity index and the set of nodes in graceful drain.
+/// The engine hands out a borrowed view (no clones on the hot path); tests
+/// and benches build an owned index from any standalone `ClusterState` via
+/// [`ClusterView::build`].
+///
+/// Drain awareness: a `DrainRequested` node must not receive *new*
+/// placements — its resident jobs are checkpointing off it. The engine
+/// already strips a draining node's idle capacity, so on the live path the
+/// draining set is belt-and-braces; but schedulers planning against
+/// synthetic or stale views rely on it (see [`ClusterView::is_draining`]),
+/// and [`ClusterView::overlay`] pre-excludes draining idle so every overlay
+/// query is drain-aware with no per-scheduler code.
 #[derive(Debug)]
 pub struct ClusterView<'a> {
     state: &'a ClusterState,
     index: std::borrow::Cow<'a, CapacityIndex>,
+    draining: std::borrow::Cow<'a, BTreeSet<NodeId>>,
 }
 
 impl<'a> ClusterView<'a> {
     /// Build an owned index for a standalone state (tests/benches).
     pub fn build(state: &'a ClusterState) -> Self {
-        Self { state, index: std::borrow::Cow::Owned(CapacityIndex::build(state)) }
+        Self {
+            state,
+            index: std::borrow::Cow::Owned(CapacityIndex::build(state)),
+            draining: std::borrow::Cow::Owned(BTreeSet::new()),
+        }
     }
 
     /// Borrow an index maintained elsewhere (the orchestrator's). The
@@ -267,7 +281,31 @@ impl<'a> ClusterView<'a> {
     /// check_index` in tests and the churn property test — not here, which
     /// sits on the per-round hot path even in debug builds.
     pub fn with_index(state: &'a ClusterState, index: &'a CapacityIndex) -> Self {
-        Self { state, index: std::borrow::Cow::Borrowed(index) }
+        Self {
+            state,
+            index: std::borrow::Cow::Borrowed(index),
+            draining: std::borrow::Cow::Owned(BTreeSet::new()),
+        }
+    }
+
+    /// Borrow index *and* draining set (what [`super::Orchestrator::view`]
+    /// hands the engine).
+    pub fn with_index_draining(
+        state: &'a ClusterState,
+        index: &'a CapacityIndex,
+        draining: &'a BTreeSet<NodeId>,
+    ) -> Self {
+        Self {
+            state,
+            index: std::borrow::Cow::Borrowed(index),
+            draining: std::borrow::Cow::Borrowed(draining),
+        }
+    }
+
+    /// Builder for tests: mark nodes as draining on an owned view.
+    pub fn with_draining(mut self, draining: BTreeSet<NodeId>) -> Self {
+        self.draining = std::borrow::Cow::Owned(draining);
+        self
     }
 
     pub fn state(&self) -> &'a ClusterState {
@@ -278,14 +316,42 @@ impl<'a> ClusterView<'a> {
         &self.index
     }
 
-    /// Stage-1 plan probe against the committed state, O(log S).
-    pub fn idle_gpus_with_mem(&self, min_mem: u64) -> u32 {
-        self.index.idle_with_mem(min_mem)
+    /// True when `node` is in graceful drain — schedulers must not place
+    /// new jobs on it.
+    pub fn is_draining(&self, node: NodeId) -> bool {
+        self.draining.contains(&node)
     }
 
-    /// Start a tentative-placement overlay for one scheduling round.
+    /// Nodes currently in graceful drain, ascending.
+    pub fn draining(&self) -> &BTreeSet<NodeId> {
+        &self.draining
+    }
+
+    /// Stage-1 plan probe, O(log S + draining): idle GPUs with memory ≥
+    /// `min_mem`, excluding capacity stranded on draining nodes.
+    pub fn idle_gpus_with_mem(&self, min_mem: u64) -> u32 {
+        let mut idle = self.index.idle_with_mem(min_mem);
+        for &n in self.draining.iter() {
+            let node = &self.state.nodes[n];
+            if node.gpu.mem_bytes >= min_mem {
+                idle = idle.saturating_sub(node.idle);
+            }
+        }
+        idle
+    }
+
+    /// Start a tentative-placement overlay for one scheduling round, with
+    /// draining nodes' idle capacity pre-taken so best-fit/most-idle/probe
+    /// queries never surface them.
     pub fn overlay(&self) -> CapacityOverlay<'_> {
-        CapacityOverlay::new(self.state, self.index())
+        let mut ov = CapacityOverlay::new(self.state, self.index());
+        for &n in self.draining.iter() {
+            let idle = self.state.nodes[n].idle;
+            if idle > 0 {
+                ov.take(n, idle);
+            }
+        }
+        ov
     }
 }
 
@@ -614,6 +680,25 @@ mod tests {
         // 11G requests still fit the 2080Ti class.
         let c = ov.fit_class(1).expect("11G class");
         assert_eq!(view.index().class_size(c), 11 * GIB);
+    }
+
+    #[test]
+    fn draining_nodes_hidden_from_view_queries() {
+        // Mark node 2 (4×A800, the most-idle node) as draining while it
+        // still shows idle capacity — the stale-view case schedulers must
+        // survive.
+        let s = state();
+        let view = ClusterView::build(&s).with_draining([2].into_iter().collect());
+        assert!(view.is_draining(2));
+        assert!(!view.is_draining(0));
+        assert_eq!(view.idle_gpus_with_mem(80 * GIB), 4, "node 2's 4 GPUs are hidden");
+        let ov = view.overlay();
+        assert_eq!(ov.idle_of(2), 0, "overlay pre-takes draining idle");
+        assert_eq!(ov.most_idle(0), Some((4, 2)), "not the draining node");
+        assert_eq!(ov.best_fit(0, 3), None, "only the draining node could cover 3");
+        // An undrained view still sees it.
+        let plain = ClusterView::build(&s);
+        assert_eq!(plain.overlay().most_idle(0), Some((2, 4)));
     }
 
     #[test]

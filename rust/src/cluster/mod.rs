@@ -25,6 +25,7 @@ pub use index::{CapacityIndex, CapacityOverlay, ClusterView, IdleBuckets};
 use crate::config::{ClusterSpec, GpuSpec, LinkKind, NodeSpec};
 use crate::job::JobId;
 use crate::runtime::device::{DeviceMemory, DeviceOom};
+use crate::util::json::Json;
 use std::collections::{BTreeMap, BTreeSet};
 
 /// Node identifier (index into the cluster's node list).
@@ -234,10 +235,11 @@ impl Orchestrator {
     }
 
     /// Zero-copy planning window for a scheduling round: the live state plus
-    /// the maintained index. This is what the engine hands to schedulers —
-    /// rounds no longer clone the cluster.
+    /// the maintained index and the draining-node set. This is what the
+    /// engine hands to schedulers — rounds no longer clone the cluster, and
+    /// schedulers can skip nodes in graceful drain.
     pub fn view(&self) -> ClusterView<'_> {
-        ClusterView::with_index(&self.state, &self.index)
+        ClusterView::with_index_draining(&self.state, &self.index, &self.retiring)
     }
 
     /// Owned snapshot (kept for tests and offline analysis; the scheduling
@@ -466,6 +468,120 @@ impl Orchestrator {
             .iter()
             .all(|n| n.idle + used[n.id] == n.total)
             && self.device.check_conservation(|job| self.ledger.contains_key(&job))
+    }
+
+    /// Serialize the full orchestrator — topology (GPUs by catalog name),
+    /// idle counts, allocation ledger, device-memory charges, and the
+    /// retiring set — for a durable snapshot. The capacity index is derived
+    /// state and is rebuilt on restore.
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .state
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut j = Json::obj();
+                j.set("gpu", n.gpu.name)
+                    .set("total", n.total)
+                    .set("idle", n.idle)
+                    .set("link", link_to_str(n.link));
+                j
+            })
+            .collect();
+        let ledger: Vec<Json> = self
+            .ledger
+            .values()
+            .map(|a| {
+                let parts: Vec<Json> = a
+                    .parts
+                    .iter()
+                    .map(|&(n, c)| Json::from(vec![Json::from(n), Json::from(c)]))
+                    .collect();
+                let mut j = Json::obj();
+                j.set("job", a.job).set("parts", Json::Arr(parts));
+                j
+            })
+            .collect();
+        let retiring: Vec<Json> = self.retiring.iter().map(|&n| Json::from(n)).collect();
+        let mut j = Json::obj();
+        j.set("inter_node_gbps", self.state.inter_node_gbps)
+            .set("nodes", Json::Arr(nodes))
+            .set("ledger", Json::Arr(ledger))
+            .set("device", self.device.to_json())
+            .set("retiring", Json::Arr(retiring));
+        j
+    }
+
+    /// Rebuild from [`Orchestrator::to_json`] output. Node ids are
+    /// positional (stable across retirement, so positions round-trip);
+    /// conservation is re-checked before the orchestrator is handed back.
+    pub fn from_json(j: &Json) -> Result<Orchestrator, String> {
+        let gbps = j
+            .get("inter_node_gbps")
+            .and_then(Json::as_f64)
+            .ok_or("missing field 'inter_node_gbps'")?;
+        let nodes_j = j.get("nodes").and_then(Json::as_arr).ok_or("missing field 'nodes'")?;
+        let mut nodes = Vec::with_capacity(nodes_j.len());
+        for (id, n) in nodes_j.iter().enumerate() {
+            let gpu_name = n.get("gpu").and_then(Json::as_str).ok_or("node: no gpu")?;
+            let gpu = crate::config::gpu_by_name(gpu_name)
+                .ok_or_else(|| format!("unknown gpu '{gpu_name}'"))?;
+            let link = n
+                .get("link")
+                .and_then(Json::as_str)
+                .and_then(link_from_str)
+                .ok_or("node: bad link")?;
+            let total = n.get("total").and_then(Json::as_u64).ok_or("node: no total")? as u32;
+            let idle = n.get("idle").and_then(Json::as_u64).ok_or("node: no idle")? as u32;
+            if idle > total {
+                return Err(format!("node {id}: idle {idle} > total {total}"));
+            }
+            nodes.push(Node { id, gpu, total, idle, link });
+        }
+        let state = ClusterState { nodes, inter_node_gbps: gbps };
+        let index = CapacityIndex::build(&state);
+        let device = DeviceMemory::from_json(j.get("device").ok_or("missing field 'device'")?)?;
+        if device.n_nodes() != state.nodes.len() {
+            return Err("device ledger / topology size mismatch".into());
+        }
+        let mut ledger = BTreeMap::new();
+        for a in j.get("ledger").and_then(Json::as_arr).ok_or("missing field 'ledger'")? {
+            let job = a.get("job").and_then(Json::as_u64).ok_or("ledger: no job")?;
+            let parts_j = a.get("parts").and_then(Json::as_arr).ok_or("ledger: no parts")?;
+            let mut parts = Vec::with_capacity(parts_j.len());
+            for p in parts_j {
+                let pair = p.as_arr().filter(|x| x.len() == 2).ok_or("ledger: bad part")?;
+                parts.push((
+                    pair[0].as_usize().ok_or("ledger: bad node")?,
+                    pair[1].as_u64().ok_or("ledger: bad count")? as u32,
+                ));
+            }
+            ledger.insert(job, Allocation { job, parts });
+        }
+        let mut retiring = BTreeSet::new();
+        for r in j.get("retiring").and_then(Json::as_arr).ok_or("missing field 'retiring'")? {
+            retiring.insert(r.as_usize().ok_or("retiring: bad node id")?);
+        }
+        let orch = Orchestrator { state, ledger, index, device, retiring };
+        if !orch.check_conservation() {
+            return Err("snapshot violates resource conservation".into());
+        }
+        Ok(orch)
+    }
+}
+
+fn link_to_str(l: LinkKind) -> &'static str {
+    match l {
+        LinkKind::NvLink => "nvlink",
+        LinkKind::Pcie => "pcie",
+    }
+}
+
+fn link_from_str(s: &str) -> Option<LinkKind> {
+    match s {
+        "nvlink" => Some(LinkKind::NvLink),
+        "pcie" => Some(LinkKind::Pcie),
+        _ => None,
     }
 }
 
@@ -706,6 +822,29 @@ mod tests {
         assert_eq!(o.retiring_count(), 0, "no resident jobs: retired in one step");
         assert!(o.check_conservation());
         assert!(o.check_index());
+    }
+
+    #[test]
+    fn orchestrator_json_roundtrip_mid_drain() {
+        let mut o = Orchestrator::new(&real_testbed());
+        o.allocate(Allocation { job: 1, parts: vec![(2, 2)] }).unwrap();
+        o.charge_memory(1, 10 * GIB).unwrap();
+        o.allocate(Allocation { job: 2, parts: vec![(0, 1), (3, 1)] }).unwrap();
+        o.retire_begin(2).unwrap(); // node 2 drains with job 1 resident
+        o.shrink(4).unwrap(); // node 4 fully retired
+        let text = o.to_json().to_string_compact();
+        let back =
+            Orchestrator::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.state(), o.state());
+        assert_eq!(back.allocation_of(1), o.allocation_of(1));
+        assert_eq!(back.allocation_of(2), o.allocation_of(2));
+        assert_eq!(back.retiring_count(), 1);
+        assert!(!back.node_active(2));
+        assert_eq!(back.device_memory().total_used_bytes(), 20 * GIB);
+        assert!(back.check_conservation());
+        assert!(back.check_index(), "index rebuilt from state");
+        // Serialization itself is deterministic.
+        assert_eq!(text, back.to_json().to_string_compact());
     }
 
     #[test]

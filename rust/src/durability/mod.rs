@@ -1,0 +1,193 @@
+//! Crash durability for the live coordinator: WAL + snapshots + recovery.
+//!
+//! The coordinator's entire state is a deterministic fold over its
+//! [`crate::engine::ClusterEvent`] stream (plus a handful of
+//! coordinator-local facts: admission rejects and training losses). This
+//! module makes that stream durable:
+//!
+//! * [`wal`] — an append-only, checksummed, segmented log of every
+//!   transition, written **before** the transition's effects are visible
+//!   anywhere else (persist-before-effect: an acked submit is on disk);
+//! * [`snapshot`] — periodic atomic full-state snapshots keyed by the
+//!   last WAL sequence they cover, bounding replay time and letting old
+//!   segments be pruned;
+//! * [`recovery`] — on restart, restore the newest snapshot and replay
+//!   the WAL tail through the *same* event-application path live
+//!   operation uses, then re-arm timers and resume.
+//!
+//! Everything here is std-only: records are the crate's own compact JSON
+//! framed with a length and a CRC-32.
+
+pub mod recovery;
+pub mod snapshot;
+pub mod wal;
+
+pub use recovery::{recover, Recovered, TailStep};
+pub use snapshot::SnapshotStore;
+pub use wal::{Wal, WalRecord};
+
+use crate::engine::{ClusterEvent, Journal};
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::fmt;
+use std::rc::Rc;
+
+/// When appended WAL records are fsynced to disk. Any policy survives a
+/// process kill (appends reach the kernel page cache synchronously); the
+/// policy only governs exposure to whole-machine crashes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FsyncPolicy {
+    /// fsync after every record. Safest, slowest.
+    Always,
+    /// fsync once per `n` records (default: 32).
+    EveryN(u32),
+    /// fsync when at least this many seconds passed since the last one.
+    IntervalS(f64),
+}
+
+impl FsyncPolicy {
+    /// Parse the `--fsync` CLI form: `always`, `every:<n>`, or
+    /// `interval:<secs>`.
+    pub fn parse(s: &str) -> Result<FsyncPolicy, String> {
+        if s == "always" {
+            return Ok(FsyncPolicy::Always);
+        }
+        if let Some(n) = s.strip_prefix("every:") {
+            let n: u32 = n.parse().map_err(|_| format!("bad fsync record count '{n}'"))?;
+            if n == 0 {
+                return Err("fsync every:0 is invalid (use 'always')".into());
+            }
+            return Ok(FsyncPolicy::EveryN(n));
+        }
+        if let Some(secs) = s.strip_prefix("interval:") {
+            let v: f64 = secs.parse().map_err(|_| format!("bad fsync interval '{secs}'"))?;
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("fsync interval must be positive, got '{secs}'"));
+            }
+            return Ok(FsyncPolicy::IntervalS(v));
+        }
+        Err(format!("unknown fsync policy '{s}' (expected always | every:<n> | interval:<secs>)"))
+    }
+}
+
+impl fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FsyncPolicy::Always => write!(f, "always"),
+            FsyncPolicy::EveryN(n) => write!(f, "every:{n}"),
+            FsyncPolicy::IntervalS(s) => write!(f, "interval:{s}"),
+        }
+    }
+}
+
+/// The engine's [`Journal`] sink backed by a [`Wal`] shared with the
+/// coordinator (which appends its own coordinator-only records to the
+/// same log).
+///
+/// A failed append panics: the engine has not yet applied the event, and
+/// a durable coordinator that cannot write its log must stop rather than
+/// silently diverge from its own recovery story.
+pub struct SharedJournal(pub Rc<RefCell<Wal>>);
+
+impl Journal for SharedJournal {
+    fn event(&mut self, time: f64, ev: &ClusterEvent) {
+        self.0
+            .borrow_mut()
+            .append(&WalRecord::Event { time, ev: ev.clone() })
+            .expect("durability: WAL append failed");
+    }
+
+    fn round(&mut self, time: f64, sched_wall_s: f64) {
+        self.0
+            .borrow_mut()
+            .append(&WalRecord::Round { time, wall_s: sched_wall_s })
+            .expect("durability: WAL append failed");
+    }
+}
+
+/// Durability state reported by `GET /v1/durability`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DurabilityStatus {
+    /// False when the server runs without `--data-dir` (pure in-memory).
+    pub enabled: bool,
+    /// Last WAL sequence number written (0 when empty or disabled).
+    pub last_seq: u64,
+    /// Total bytes across live WAL segments.
+    pub wal_bytes: u64,
+    /// Number of live WAL segments.
+    pub wal_segments: u64,
+    /// WAL sequence covered by the newest snapshot, if one exists.
+    pub snapshot_seq: Option<u64>,
+    /// Engine-time seconds since the newest snapshot was taken.
+    pub snapshot_age_s: Option<f64>,
+}
+
+impl DurabilityStatus {
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            last_seq: 0,
+            wal_bytes: 0,
+            wal_segments: 0,
+            snapshot_seq: None,
+            snapshot_age_s: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("enabled", self.enabled)
+            .set("last_seq", self.last_seq)
+            .set("wal_bytes", self.wal_bytes)
+            .set("wal_segments", self.wal_segments);
+        if let Some(seq) = self.snapshot_seq {
+            j.set("snapshot_seq", seq);
+        }
+        if let Some(age) = self.snapshot_age_s {
+            j.set("snapshot_age_s", age);
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsync_policy_parse_and_display_roundtrip() {
+        for (s, want) in [
+            ("always", FsyncPolicy::Always),
+            ("every:1", FsyncPolicy::EveryN(1)),
+            ("every:64", FsyncPolicy::EveryN(64)),
+            ("interval:0.5", FsyncPolicy::IntervalS(0.5)),
+        ] {
+            let got = FsyncPolicy::parse(s).unwrap();
+            assert_eq!(got, want);
+            assert_eq!(FsyncPolicy::parse(&got.to_string()).unwrap(), got);
+        }
+        for bad in ["", "never", "every:0", "every:x", "interval:-1", "interval:nan"] {
+            assert!(FsyncPolicy::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn status_json_omits_absent_snapshot() {
+        let d = DurabilityStatus::disabled();
+        let j = d.to_json();
+        assert_eq!(j.get("enabled").and_then(Json::as_bool), Some(false));
+        assert!(j.get("snapshot_seq").is_none());
+        let full = DurabilityStatus {
+            enabled: true,
+            last_seq: 41,
+            wal_bytes: 1024,
+            wal_segments: 2,
+            snapshot_seq: Some(30),
+            snapshot_age_s: Some(12.5),
+        };
+        let j = full.to_json();
+        assert_eq!(j.get("last_seq").and_then(Json::as_u64), Some(41));
+        assert_eq!(j.get("snapshot_seq").and_then(Json::as_u64), Some(30));
+        assert_eq!(j.get("snapshot_age_s").and_then(Json::as_f64), Some(12.5));
+    }
+}

@@ -1,0 +1,228 @@
+//! Snapshot + WAL-tail replay.
+//!
+//! Recovery is **pure replay**: the only code path that mutates engine
+//! state here is the same [`ClusterEvent`] application path
+//! (`SchedulingEngine::handle` / `replay_round`) that live operation
+//! uses. There is no special-case recovery mutation — a bug class this
+//! module refuses to admit by construction.
+//!
+//! The sequence on `frenzy serve --data-dir`:
+//!
+//! 1. load the newest valid snapshot (if any) and restore the engine
+//!    from its `engine` section — a pure deserialization of state the
+//!    engine itself wrote;
+//! 2. replay every WAL record with `seq >` the snapshot's covered
+//!    sequence, under a [`ReplayClock`] pinned to each record's
+//!    timestamp, collecting the [`Effects`] each step produced;
+//! 3. hand the coordinator the snapshot's `coord` section plus the
+//!    per-step effects so it can fold its own job table forward.
+//!
+//! After `recover` returns, the caller re-arms live timers from
+//! `SchedulingEngine::rearm_effects` and attaches the journal — in that
+//! order, so replay itself is never re-journaled.
+
+use super::wal::WalRecord;
+use crate::engine::clock::ReplayClock;
+use crate::engine::events::{EventKind, RejectReason};
+use crate::engine::{Effects, SchedulingEngine};
+use crate::util::json::Json;
+
+/// One replayed WAL record plus what applying it produced. `effects` is
+/// `None` for records that are coordinator-only bookkeeping (losses,
+/// admission rejects) and never reach the engine's event path.
+pub struct TailStep {
+    pub seq: u64,
+    pub rec: WalRecord,
+    pub effects: Option<Effects>,
+}
+
+/// Everything recovery reconstructs.
+pub struct Recovered {
+    /// Highest sequence number applied (snapshot or tail); 0 for a cold
+    /// start on an empty data dir.
+    pub last_seq: u64,
+    /// Engine time reached — the floor for the resumed wall clock.
+    pub engine_time: f64,
+    /// The snapshot's coordinator section, if a snapshot was loaded.
+    pub coord: Option<Json>,
+    /// WAL records replayed past the snapshot, in order, with effects.
+    pub tail: Vec<TailStep>,
+}
+
+/// Restore `engine` from `snapshot` (if present) and replay `records`
+/// through it. `records` must be the full WAL contents in sequence
+/// order; entries at or below the snapshot's covered sequence are
+/// skipped.
+pub fn recover(
+    engine: &mut SchedulingEngine<'_>,
+    snapshot: Option<(u64, Json)>,
+    records: Vec<(u64, WalRecord)>,
+) -> Result<Recovered, String> {
+    let mut last_seq = 0u64;
+    let mut engine_time = 0.0f64;
+    let mut coord = None;
+    if let Some((seq, state)) = snapshot {
+        let ej = state.get("engine").ok_or("snapshot: missing 'engine' section")?;
+        engine.restore_from_json(ej)?;
+        engine_time = state
+            .get("time")
+            .and_then(Json::as_f64)
+            .ok_or("snapshot: missing 'time'")?;
+        coord = state.get("coord").cloned();
+        last_seq = seq;
+    }
+    let mut clock = ReplayClock::new();
+    let mut tail = Vec::new();
+    for (seq, rec) in records {
+        if seq <= last_seq {
+            continue; // covered by the snapshot
+        }
+        if seq != last_seq + 1 && last_seq != 0 {
+            return Err(format!(
+                "recovery: WAL continues at seq {seq} but snapshot/tail ends at {last_seq}"
+            ));
+        }
+        let effects = match &rec {
+            WalRecord::Event { time, ev } => {
+                clock.set(*time);
+                engine_time = engine_time.max(*time);
+                Some(engine.handle(ev.clone(), &mut clock))
+            }
+            WalRecord::Round { time, wall_s } => {
+                engine_time = engine_time.max(*time);
+                Some(engine.replay_round(*time, *wall_s))
+            }
+            WalRecord::AdmissionReject { time, job, .. } => {
+                // The reject never became an Arrival; its only engine
+                // trace is the audit-log record the live path wrote.
+                engine_time = engine_time.max(*time);
+                engine.record_event(
+                    *time,
+                    EventKind::Rejected { job: *job, reason: RejectReason::AdmissionInfeasible },
+                );
+                None
+            }
+            WalRecord::Losses { .. } => None, // coordinator-only
+        };
+        last_seq = seq;
+        tail.push(TailStep { seq, rec, effects });
+    }
+    Ok(Recovered { last_seq, engine_time, coord, tail })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::model_by_name;
+    use crate::config::real_testbed;
+    use crate::engine::clock::{Clock, VirtualClock};
+    use crate::engine::{ClusterEvent, EngineConfig, SchedulingEngine};
+    use crate::job::JobSpec;
+    use crate::marp::Marp;
+    use crate::sched::has::Has;
+
+    fn spec_job(id: u64, t: f64) -> JobSpec {
+        JobSpec::new(id, model_by_name("gpt2-350m").unwrap(), 8, 2_000, t)
+    }
+
+    /// Drive an engine through a short run while logging the would-be WAL,
+    /// then recover a fresh engine from (a) nothing and (b) a midpoint
+    /// snapshot, and check both converge to the same state.
+    #[test]
+    fn full_replay_and_snapshot_tail_replay_agree() {
+        let spec = real_testbed();
+        let cfg = EngineConfig::default();
+
+        // Reference run, journaling by hand into `records`.
+        let mut records: Vec<(u64, WalRecord)> = Vec::new();
+        let mut seq = 0u64;
+        let mut snapshot: Option<(u64, Json)> = None;
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, cfg.clone());
+        let mut clock = VirtualClock::new();
+        for id in 1..=3 {
+            let ev = ClusterEvent::Arrival(spec_job(id, 0.0));
+            seq += 1;
+            records.push((seq, WalRecord::Event { time: 0.0, ev: ev.clone() }));
+            engine.handle(ev, &mut clock);
+        }
+        seq += 1;
+        records.push((seq, WalRecord::Round { time: 0.0, wall_s: 0.0 }));
+        engine.replay_round(0.0, 0.0);
+        while let Some((t, ev)) = clock.pop() {
+            seq += 1;
+            records.push((seq, WalRecord::Event { time: t, ev: ev.clone() }));
+            engine.handle(ev, &mut clock);
+            if snapshot.is_none() && engine.aggregates().n_completed >= 1 {
+                let mut j = Json::obj();
+                j.set("time", t).set("engine", engine.snapshot_json());
+                snapshot = Some((seq, j));
+            }
+            seq += 1;
+            records.push((seq, WalRecord::Round { time: t, wall_s: 0.0 }));
+            engine.replay_round(t, 0.0);
+        }
+        assert_eq!(engine.aggregates().n_completed, 3);
+        let want = engine.snapshot_json().to_string_compact();
+        let end_time = clock.now();
+        drop(engine);
+
+        // (a) Full replay from an empty data dir.
+        let mut has_a = Has::new(Marp::with_defaults(spec.clone()));
+        let mut a = SchedulingEngine::new(&spec, &mut has_a, cfg.clone());
+        let got = recover(&mut a, None, records.clone()).unwrap();
+        assert_eq!(got.last_seq, seq);
+        assert_eq!(got.engine_time, end_time);
+        assert!(got.coord.is_none());
+        assert_eq!(a.snapshot_json().to_string_compact(), want);
+
+        // (b) Snapshot + tail replay.
+        let (snap_seq, _) = snapshot.clone().unwrap();
+        let mut has_b = Has::new(Marp::with_defaults(spec.clone()));
+        let mut b = SchedulingEngine::new(&spec, &mut has_b, cfg);
+        let got = recover(&mut b, snapshot, records).unwrap();
+        assert_eq!(got.last_seq, seq);
+        assert!(got.tail.iter().all(|s| s.seq > snap_seq), "covered records skipped");
+        assert_eq!(b.snapshot_json().to_string_compact(), want);
+    }
+
+    #[test]
+    fn admission_reject_replays_into_the_audit_log_only() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+        let records = vec![(
+            1u64,
+            WalRecord::AdmissionReject {
+                time: 2.5,
+                job: 9,
+                model: "gpt2-7b".into(),
+                batch: 1,
+                samples: 10,
+            },
+        )];
+        let got = recover(&mut engine, None, records).unwrap();
+        assert_eq!(got.last_seq, 1);
+        assert_eq!(got.engine_time, 2.5);
+        assert!(got.tail[0].effects.is_none());
+        assert_eq!(engine.pending_count() + engine.running_count(), 0);
+        let page = engine.event_log().since(0, 100);
+        assert!(page
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::Rejected { job: 9, .. })));
+    }
+
+    #[test]
+    fn sequence_gap_in_tail_is_rejected() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+        let records = vec![
+            (1u64, WalRecord::Round { time: 0.0, wall_s: 0.0 }),
+            (3u64, WalRecord::Round { time: 1.0, wall_s: 0.0 }),
+        ];
+        let err = recover(&mut engine, None, records).unwrap_err();
+        assert!(err.contains("seq 3"), "got: {err}");
+    }
+}

@@ -1,0 +1,172 @@
+//! Periodic full-state snapshots bounding WAL replay time.
+//!
+//! A snapshot is one JSON file `snap-<seq>.json` whose name carries the
+//! last WAL sequence number it covers: recovery loads the newest valid
+//! snapshot and replays only records with a higher sequence number, and
+//! the WAL can prune every segment the snapshot covers.
+//!
+//! Writes are atomic — the file is written to `snap-<seq>.json.tmp`,
+//! fsynced, then renamed into place — so a crash mid-snapshot leaves at
+//! worst a stale `.tmp` (ignored on load) and the previous snapshot
+//! intact. An unreadable or truncated snapshot is skipped in favor of the
+//! next-newest; the WAL tail behind it makes that strictly safe, just
+//! slower.
+
+use crate::util::json::{self, Json};
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+fn snap_name(seq: u64) -> String {
+    format!("snap-{seq:020}.json")
+}
+
+/// Snapshot files under one directory.
+pub struct SnapshotStore {
+    dir: PathBuf,
+}
+
+impl SnapshotStore {
+    pub fn new(dir: &Path) -> Result<SnapshotStore, String> {
+        fs::create_dir_all(dir).map_err(|e| format!("snapshot: create {}: {e}", dir.display()))?;
+        Ok(SnapshotStore { dir: dir.to_path_buf() })
+    }
+
+    /// Atomically persist `state` as the snapshot covering WAL seq `seq`.
+    pub fn save(&self, seq: u64, state: &Json) -> Result<(), String> {
+        let path = self.dir.join(snap_name(seq));
+        let tmp = path.with_extension("json.tmp");
+        let mut f =
+            File::create(&tmp).map_err(|e| format!("snapshot: create {}: {e}", tmp.display()))?;
+        f.write_all(state.to_string_compact().as_bytes())
+            .map_err(|e| format!("snapshot: write {}: {e}", tmp.display()))?;
+        f.sync_all().map_err(|e| format!("snapshot: sync {}: {e}", tmp.display()))?;
+        drop(f);
+        fs::rename(&tmp, &path)
+            .map_err(|e| format!("snapshot: rename {} -> {}: {e}", tmp.display(), path.display()))
+    }
+
+    /// Snapshot files present, ascending by covered sequence number.
+    fn list(&self) -> Result<Vec<(u64, PathBuf)>, String> {
+        let mut snaps = Vec::new();
+        let entries = fs::read_dir(&self.dir)
+            .map_err(|e| format!("snapshot: read dir {}: {e}", self.dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("snapshot: read dir entry: {e}"))?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(seq) = name.strip_prefix("snap-").and_then(|s| s.strip_suffix(".json"))
+            else {
+                continue;
+            };
+            let Ok(seq) = seq.parse::<u64>() else { continue };
+            snaps.push((seq, entry.path()));
+        }
+        snaps.sort();
+        Ok(snaps)
+    }
+
+    /// Load the newest snapshot that parses, returning its covered
+    /// sequence number and state. Damaged snapshots are skipped (never
+    /// fatal): the WAL holds everything they held.
+    pub fn load_newest(&self) -> Result<Option<(u64, Json)>, String> {
+        for (seq, path) in self.list()?.into_iter().rev() {
+            let Ok(text) = fs::read_to_string(&path) else { continue };
+            let Ok(state) = json::parse(&text) else { continue };
+            return Ok(Some((seq, state)));
+        }
+        Ok(None)
+    }
+
+    /// Remove every snapshot older than `keep_seq` (after a newer one has
+    /// been durably written).
+    pub fn prune_older_than(&self, keep_seq: u64) -> Result<usize, String> {
+        let mut removed = 0;
+        for (seq, path) in self.list()? {
+            if seq < keep_seq {
+                fs::remove_file(&path)
+                    .map_err(|e| format!("snapshot: remove {}: {e}", path.display()))?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Covered sequence number of the newest snapshot file, if any
+    /// (without reading it).
+    pub fn newest_seq(&self) -> Result<Option<u64>, String> {
+        Ok(self.list()?.last().map(|&(seq, _)| seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("frenzy_snap_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn state(tag: u64) -> Json {
+        let mut j = Json::obj();
+        j.set("tag", tag);
+        j
+    }
+
+    #[test]
+    fn save_then_load_newest() {
+        let dir = tmp("roundtrip");
+        let store = SnapshotStore::new(&dir).unwrap();
+        assert!(store.load_newest().unwrap().is_none());
+        store.save(10, &state(1)).unwrap();
+        store.save(25, &state(2)).unwrap();
+        let (seq, j) = store.load_newest().unwrap().unwrap();
+        assert_eq!(seq, 25);
+        assert_eq!(j.get("tag").and_then(Json::as_u64), Some(2));
+        assert_eq!(store.newest_seq().unwrap(), Some(25));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_older() {
+        let dir = tmp("fallback");
+        let store = SnapshotStore::new(&dir).unwrap();
+        store.save(10, &state(1)).unwrap();
+        store.save(25, &state(2)).unwrap();
+        // Corrupt the newer one (e.g. disk damage): recovery must fall
+        // back to seq 10 rather than fail.
+        fs::write(dir.join("snap-00000000000000000025.json"), b"{truncat").unwrap();
+        let (seq, j) = store.load_newest().unwrap().unwrap();
+        assert_eq!(seq, 10);
+        assert_eq!(j.get("tag").and_then(Json::as_u64), Some(1));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stale_tmp_from_crashed_save_is_ignored() {
+        let dir = tmp("tmpfile");
+        let store = SnapshotStore::new(&dir).unwrap();
+        store.save(10, &state(1)).unwrap();
+        // A crash between write and rename leaves a .tmp behind.
+        fs::write(dir.join("snap-00000000000000000099.json.tmp"), b"{garbage").unwrap();
+        let (seq, _) = store.load_newest().unwrap().unwrap();
+        assert_eq!(seq, 10);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_keeps_newest() {
+        let dir = tmp("prune");
+        let store = SnapshotStore::new(&dir).unwrap();
+        store.save(10, &state(1)).unwrap();
+        store.save(25, &state(2)).unwrap();
+        store.save(40, &state(3)).unwrap();
+        assert_eq!(store.prune_older_than(40).unwrap(), 2);
+        let (seq, _) = store.load_newest().unwrap().unwrap();
+        assert_eq!(seq, 40);
+        assert_eq!(store.list().unwrap().len(), 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

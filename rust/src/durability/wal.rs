@@ -1,0 +1,597 @@
+//! Append-only write-ahead log of coordinator transitions.
+//!
+//! Record framing (all integers little-endian):
+//!
+//! ```text
+//! ┌─────────────┬─────────────┬──────────────────────────┐
+//! │ len: u32 LE │ crc: u32 LE │ payload: len bytes (JSON) │
+//! └─────────────┴─────────────┴──────────────────────────┘
+//! ```
+//!
+//! `crc` is CRC-32 (IEEE) of the payload. The payload is one compact JSON
+//! object carrying the record's monotonic sequence number plus its body —
+//! self-describing, so a segment can be audited with nothing but `xxd` and
+//! a JSON parser.
+//!
+//! Segments are named `wal-<first_seq>.log` (zero-padded so lexicographic
+//! order is numeric order) and rotate at [`Wal::segment_bytes`]. On open,
+//! a torn tail — a partial or checksum-failing record at the end of the
+//! *last* segment, the signature of a crash mid-write — is truncated away;
+//! the same damage in any earlier segment is a hard error, because bytes
+//! before a successfully written successor segment cannot be a crash
+//! artifact.
+
+use super::FsyncPolicy;
+use crate::engine::ClusterEvent;
+use crate::job::JobId;
+use crate::util::json::{self, Json};
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Default segment rotation threshold.
+pub const DEFAULT_SEGMENT_BYTES: u64 = 1 << 20;
+
+/// CRC-32 (IEEE 802.3), bitwise — no lookup table, no dependency. WAL
+/// records are small and appends are dominated by the write syscall, so
+/// the byte-at-a-time loop is not the bottleneck (measured in
+/// `benches/bench_wal.rs`).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// One durable coordinator transition.
+#[derive(Debug, Clone)]
+pub enum WalRecord {
+    /// A [`ClusterEvent`] applied by the engine at `time` — journaled at
+    /// the single point every event funnels through
+    /// (`SchedulingEngine::handle`), *before* the event mutates state.
+    Event { time: f64, ev: ClusterEvent },
+    /// A scheduling round that ran with work queued at `time`; `wall_s` is
+    /// the measured scheduler wall time it charged. Rounds are replayed by
+    /// re-running the (deterministic) scheduler, not by storing decisions.
+    Round { time: f64, wall_s: f64 },
+    /// A submission MARP rejected at admission: it consumed a job id and
+    /// an audit-log record but never produced an `Arrival`.
+    AdmissionReject { time: f64, job: JobId, model: String, batch: u32, samples: u64 },
+    /// Training losses attached to a completed job (coordinator-local
+    /// state the engine never sees).
+    Losses { job: JobId, losses: Vec<(u64, f32)> },
+}
+
+impl WalRecord {
+    fn to_json(&self, seq: u64) -> Json {
+        let mut j = Json::obj();
+        j.set("seq", seq);
+        match self {
+            WalRecord::Event { time, ev } => {
+                j.set("kind", "event").set("time", *time).set("ev", ev.to_json());
+            }
+            WalRecord::Round { time, wall_s } => {
+                j.set("kind", "round").set("time", *time).set("wall_s", *wall_s);
+            }
+            WalRecord::AdmissionReject { time, job, model, batch, samples } => {
+                j.set("kind", "admission_reject")
+                    .set("time", *time)
+                    .set("job", *job)
+                    .set("model", model.as_str())
+                    .set("batch", *batch)
+                    .set("samples", *samples);
+            }
+            WalRecord::Losses { job, losses } => {
+                let ls: Vec<Json> = losses
+                    .iter()
+                    .map(|&(step, loss)| {
+                        // A diverged run's NaN/inf loss has no JSON number
+                        // form; null round-trips it.
+                        let l = if loss.is_finite() { Json::from(loss as f64) } else { Json::Null };
+                        Json::Arr(vec![Json::from(step), l])
+                    })
+                    .collect();
+                j.set("kind", "losses").set("job", *job).set("losses", Json::Arr(ls));
+            }
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<(u64, WalRecord), String> {
+        let seq = j.get("seq").and_then(Json::as_u64).ok_or("wal record: missing 'seq'")?;
+        let kind = j.get("kind").and_then(Json::as_str).ok_or("wal record: missing 'kind'")?;
+        let time = || j.get("time").and_then(Json::as_f64).ok_or("wal record: missing 'time'");
+        let job = || j.get("job").and_then(Json::as_u64).ok_or("wal record: missing 'job'");
+        let rec = match kind {
+            "event" => WalRecord::Event {
+                time: time()?,
+                ev: ClusterEvent::from_json(j.get("ev").ok_or("wal event: missing 'ev'")?)?,
+            },
+            "round" => WalRecord::Round {
+                time: time()?,
+                wall_s: j
+                    .get("wall_s")
+                    .and_then(Json::as_f64)
+                    .ok_or("wal round: missing 'wall_s'")?,
+            },
+            "admission_reject" => WalRecord::AdmissionReject {
+                time: time()?,
+                job: job()?,
+                model: j
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .ok_or("wal reject: missing 'model'")?
+                    .to_string(),
+                batch: j
+                    .get("batch")
+                    .and_then(Json::as_u64)
+                    .and_then(|b| u32::try_from(b).ok())
+                    .ok_or("wal reject: missing 'batch'")?,
+                samples: j
+                    .get("samples")
+                    .and_then(Json::as_u64)
+                    .ok_or("wal reject: missing 'samples'")?,
+            },
+            "losses" => {
+                let arr = j
+                    .get("losses")
+                    .and_then(Json::as_arr)
+                    .ok_or("wal losses: missing 'losses'")?;
+                let mut losses = Vec::with_capacity(arr.len());
+                for e in arr {
+                    let Some([step, loss]) = e.as_arr() else {
+                        return Err("wal losses: bad entry".into());
+                    };
+                    let step = step.as_u64().ok_or("wal losses: bad step")?;
+                    let loss = match loss {
+                        Json::Null => f32::NAN,
+                        other => other.as_f64().ok_or("wal losses: bad loss")? as f32,
+                    };
+                    losses.push((step, loss));
+                }
+                WalRecord::Losses { job: job()?, losses }
+            }
+            other => return Err(format!("wal record: unknown kind '{other}'")),
+        };
+        Ok((seq, rec))
+    }
+}
+
+fn seg_name(first_seq: u64) -> String {
+    format!("wal-{first_seq:020}.log")
+}
+
+/// `wal-*.log` segments under `dir`, ascending by first sequence number.
+fn list_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>, String> {
+    let mut segs = Vec::new();
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("wal: read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("wal: read dir entry: {e}"))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(seq) = name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log")) else {
+            continue;
+        };
+        let Ok(first) = seq.parse::<u64>() else { continue };
+        segs.push((first, entry.path()));
+    }
+    segs.sort();
+    Ok(segs)
+}
+
+/// Parse one segment. Returns the decoded records, the byte offset of the
+/// last valid record's end, and the file's total length — a gap between
+/// the two is a torn tail.
+fn read_segment(path: &Path) -> Result<(Vec<(u64, WalRecord)>, u64, u64), String> {
+    let data = fs::read(path).map_err(|e| format!("wal: read {}: {e}", path.display()))?;
+    let mut recs = Vec::new();
+    let mut off = 0usize;
+    while off + 8 <= data.len() {
+        let len = u32::from_le_bytes(data[off..off + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(data[off + 4..off + 8].try_into().unwrap());
+        let end = match (off + 8).checked_add(len) {
+            Some(e) if e <= data.len() => e,
+            _ => break, // partial record: torn tail
+        };
+        let payload = &data[off + 8..end];
+        if crc32(payload) != crc {
+            break; // checksum mismatch: everything from here is suspect
+        }
+        // The payload passed its checksum: a parse failure here is not
+        // crash damage but a format bug or version skew — surface it.
+        let text = std::str::from_utf8(payload)
+            .map_err(|e| format!("wal {}: non-UTF8 payload: {e}", path.display()))?;
+        let j = json::parse(text).map_err(|e| format!("wal {}: bad payload: {e}", path.display()))?;
+        recs.push(WalRecord::from_json(&j)?);
+        off = end;
+    }
+    Ok((recs, off as u64, data.len() as u64))
+}
+
+/// The append-only log. One instance owns the directory; all appends go
+/// through it so sequence numbers stay dense and monotonic.
+pub struct Wal {
+    dir: PathBuf,
+    policy: FsyncPolicy,
+    /// Active (last) segment, opened for append.
+    file: File,
+    seg_path: PathBuf,
+    bytes_in_seg: u64,
+    /// Rotation threshold; see [`DEFAULT_SEGMENT_BYTES`]. Exposed for
+    /// tests that exercise rotation without writing a mebibyte.
+    pub segment_bytes: u64,
+    next_seq: u64,
+    total_bytes: u64,
+    segments: usize,
+    unsynced: u32,
+    last_sync: Instant,
+}
+
+impl Wal {
+    /// Open (or create) the WAL under `dir`, recovering its tail: returns
+    /// the handle positioned for appending plus every valid record on
+    /// disk, in sequence order. A torn tail on the last segment is
+    /// truncated; torn bytes anywhere else are a hard error.
+    pub fn open(dir: &Path, policy: FsyncPolicy) -> Result<(Wal, Vec<(u64, WalRecord)>), String> {
+        fs::create_dir_all(dir).map_err(|e| format!("wal: create {}: {e}", dir.display()))?;
+        let segs = list_segments(dir)?;
+        let mut records: Vec<(u64, WalRecord)> = Vec::new();
+        let mut next_seq = segs.first().map_or(1, |&(first, _)| first);
+        let mut total_bytes = 0u64;
+        for (i, (first, path)) in segs.iter().enumerate() {
+            let last = i + 1 == segs.len();
+            let (recs, valid, total) = read_segment(path)?;
+            if valid != total {
+                if !last {
+                    return Err(format!(
+                        "wal: segment {} is damaged mid-log ({} of {} bytes valid) — only the \
+                         final segment may have a torn tail",
+                        path.display(),
+                        valid,
+                        total
+                    ));
+                }
+                let f = OpenOptions::new()
+                    .write(true)
+                    .open(path)
+                    .map_err(|e| format!("wal: open {}: {e}", path.display()))?;
+                f.set_len(valid).map_err(|e| format!("wal: truncate {}: {e}", path.display()))?;
+                f.sync_all().map_err(|e| format!("wal: sync {}: {e}", path.display()))?;
+            }
+            if recs.first().is_some_and(|&(seq, _)| seq != *first) {
+                return Err(format!(
+                    "wal: segment {} starts at seq {} but is named for {}",
+                    path.display(),
+                    recs[0].0,
+                    first
+                ));
+            }
+            for (seq, rec) in recs {
+                if seq != next_seq {
+                    return Err(format!("wal: sequence gap: expected {next_seq}, found {seq}"));
+                }
+                next_seq += 1;
+                records.push((seq, rec));
+            }
+            total_bytes += valid;
+        }
+        let (seg_path, bytes_in_seg) = match segs.last() {
+            Some((_, path)) => {
+                let len = fs::metadata(path)
+                    .map_err(|e| format!("wal: stat {}: {e}", path.display()))?
+                    .len();
+                (path.clone(), len)
+            }
+            None => (dir.join(seg_name(next_seq)), 0),
+        };
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&seg_path)
+            .map_err(|e| format!("wal: open {}: {e}", seg_path.display()))?;
+        let segments = segs.len().max(1);
+        Ok((
+            Wal {
+                dir: dir.to_path_buf(),
+                policy,
+                file,
+                seg_path,
+                bytes_in_seg,
+                segment_bytes: DEFAULT_SEGMENT_BYTES,
+                next_seq,
+                total_bytes,
+                segments,
+                unsynced: 0,
+                last_sync: Instant::now(),
+            },
+            records,
+        ))
+    }
+
+    /// Append one record; returns the sequence number it was assigned.
+    /// The write reaches the kernel before this returns (surviving a
+    /// process kill); reaching the *disk* is governed by the
+    /// [`FsyncPolicy`].
+    pub fn append(&mut self, rec: &WalRecord) -> Result<u64, String> {
+        let seq = self.next_seq;
+        let payload = rec.to_json(seq).to_string_compact().into_bytes();
+        let mut buf = Vec::with_capacity(payload.len() + 8);
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        if self.bytes_in_seg > 0 && self.bytes_in_seg + buf.len() as u64 > self.segment_bytes {
+            self.rotate()?;
+        }
+        self.file
+            .write_all(&buf)
+            .map_err(|e| format!("wal: append to {}: {e}", self.seg_path.display()))?;
+        self.bytes_in_seg += buf.len() as u64;
+        self.total_bytes += buf.len() as u64;
+        self.next_seq += 1;
+        self.unsynced += 1;
+        let due = match self.policy {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::EveryN(n) => self.unsynced >= n.max(1),
+            FsyncPolicy::IntervalS(s) => self.last_sync.elapsed().as_secs_f64() >= s,
+        };
+        if due {
+            self.sync()?;
+        }
+        Ok(seq)
+    }
+
+    /// Force an fsync of the active segment.
+    pub fn sync(&mut self) -> Result<(), String> {
+        self.file
+            .sync_data()
+            .map_err(|e| format!("wal: fsync {}: {e}", self.seg_path.display()))?;
+        self.unsynced = 0;
+        self.last_sync = Instant::now();
+        Ok(())
+    }
+
+    fn rotate(&mut self) -> Result<(), String> {
+        self.sync()?;
+        let path = self.dir.join(seg_name(self.next_seq));
+        self.file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("wal: open {}: {e}", path.display()))?;
+        self.seg_path = path;
+        self.bytes_in_seg = 0;
+        self.segments += 1;
+        Ok(())
+    }
+
+    /// Delete every segment whose records are *all* ≤ `seq` (covered by a
+    /// snapshot). The active segment is never deleted. Returns how many
+    /// segments were removed.
+    pub fn prune_through(&mut self, seq: u64) -> Result<usize, String> {
+        let segs = list_segments(&self.dir)?;
+        let mut removed = 0;
+        for i in 0..segs.len().saturating_sub(1) {
+            // A segment's records all precede its successor's first seq.
+            let next_first = segs[i + 1].0;
+            if next_first <= seq + 1 && segs[i].1 != self.seg_path {
+                let len = fs::metadata(&segs[i].1).map(|m| m.len()).unwrap_or(0);
+                fs::remove_file(&segs[i].1)
+                    .map_err(|e| format!("wal: remove {}: {e}", segs[i].1.display()))?;
+                self.total_bytes = self.total_bytes.saturating_sub(len);
+                self.segments -= 1;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Sequence number the next append will get.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Sequence number of the most recent record (0 when empty).
+    pub fn last_seq(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    /// Bytes across all live segments.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// Number of live segments.
+    pub fn segment_count(&self) -> usize {
+        self.segments
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobSpec;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("frenzy_wal_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn ev(job: u64) -> WalRecord {
+        WalRecord::Event { time: job as f64, ev: ClusterEvent::Finish { job, epoch: 1 } }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn append_reopen_roundtrip_all_kinds() {
+        let dir = tmp("roundtrip");
+        let (mut wal, recs) = Wal::open(&dir, FsyncPolicy::EveryN(2)).unwrap();
+        assert!(recs.is_empty());
+        assert_eq!(wal.last_seq(), 0);
+        let spec = JobSpec::new(
+            3,
+            crate::config::models::model_by_name("gpt2-350m").unwrap(),
+            8,
+            1000,
+            0.5,
+        );
+        let records = vec![
+            WalRecord::Event { time: 0.5, ev: ClusterEvent::Arrival(spec) },
+            WalRecord::Round { time: 0.5, wall_s: 0.001 },
+            WalRecord::AdmissionReject {
+                time: 1.0,
+                job: 4,
+                model: "gpt2-7b".into(),
+                batch: 2,
+                samples: 100,
+            },
+            WalRecord::Losses { job: 3, losses: vec![(0, 4.5), (10, f32::NAN)] },
+        ];
+        for (i, r) in records.iter().enumerate() {
+            assert_eq!(wal.append(r).unwrap(), i as u64 + 1, "dense seqs from 1");
+        }
+        drop(wal);
+        let (wal, recs) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(wal.last_seq(), 4);
+        assert_eq!(recs.len(), 4);
+        assert!(matches!(&recs[0].1, WalRecord::Event { ev: ClusterEvent::Arrival(s), .. }
+            if s.id == 3 && s.submit_time == 0.5));
+        assert!(matches!(&recs[1].1, WalRecord::Round { wall_s, .. } if *wall_s == 0.001));
+        assert!(matches!(&recs[2].1, WalRecord::AdmissionReject { model, .. }
+            if model == "gpt2-7b"));
+        match &recs[3].1 {
+            WalRecord::Losses { job: 3, losses } => {
+                assert_eq!(losses[0], (0, 4.5));
+                assert!(losses[1].1.is_nan(), "NaN loss survives via null");
+            }
+            other => panic!("expected losses, got {other:?}"),
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_on_open() {
+        let dir = tmp("torn");
+        let (mut wal, _) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        for j in 1..=3 {
+            wal.append(&ev(j)).unwrap();
+        }
+        let seg = wal.seg_path.clone();
+        drop(wal);
+        // Simulate a crash mid-write: append half a record.
+        let mut f = OpenOptions::new().append(true).open(&seg).unwrap();
+        f.write_all(&[7, 0, 0, 0, 0xAA, 0xBB]).unwrap();
+        drop(f);
+        let before = fs::metadata(&seg).unwrap().len();
+        let (wal, recs) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(recs.len(), 3, "the three whole records survive");
+        assert_eq!(wal.last_seq(), 3);
+        assert!(fs::metadata(&seg).unwrap().len() < before, "torn bytes removed");
+        // The truncated log accepts new appends at the right seq.
+        drop(wal);
+        let (mut wal, _) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(wal.append(&ev(4)).unwrap(), 4);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_checksum_drops_the_record_and_its_successors() {
+        let dir = tmp("crc");
+        let (mut wal, _) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        for j in 1..=3 {
+            wal.append(&ev(j)).unwrap();
+        }
+        let seg = wal.seg_path.clone();
+        drop(wal);
+        // Flip one payload byte in the middle record.
+        let mut data = fs::read(&seg).unwrap();
+        let first_len = u32::from_le_bytes(data[0..4].try_into().unwrap()) as usize;
+        let second_payload = first_len + 8 + 8 + 2; // into record 2's payload
+        data[second_payload] ^= 0xFF;
+        fs::write(&seg, &data).unwrap();
+        let (wal, recs) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(recs.len(), 1, "records at and after the corruption are rejected");
+        assert_eq!(wal.last_seq(), 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn segments_rotate_and_prune() {
+        let dir = tmp("rotate");
+        let (mut wal, _) = Wal::open(&dir, FsyncPolicy::EveryN(1000)).unwrap();
+        wal.segment_bytes = 256; // tiny segments to force rotation
+        for j in 1..=40 {
+            wal.append(&ev(j)).unwrap();
+        }
+        assert!(wal.segment_count() > 2, "rotation happened");
+        let segs_before = wal.segment_count();
+        // Prune through seq 20: every segment fully ≤ 20 goes; later ones
+        // and the active segment stay.
+        let removed = wal.prune_through(20).unwrap();
+        assert!(removed > 0);
+        assert_eq!(wal.segment_count(), segs_before - removed);
+        drop(wal);
+        let (wal, recs) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(wal.last_seq(), 40);
+        assert!(recs.first().unwrap().0 > 1, "pruned records are gone");
+        assert_eq!(recs.last().unwrap().0, 40);
+        // Remaining seqs are dense.
+        let seqs: Vec<u64> = recs.iter().map(|&(s, _)| s).collect();
+        assert!(seqs.windows(2).all(|w| w[1] == w[0] + 1));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn damage_in_a_non_final_segment_is_a_hard_error() {
+        let dir = tmp("midlog");
+        let (mut wal, _) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        wal.segment_bytes = 256;
+        for j in 1..=40 {
+            wal.append(&ev(j)).unwrap();
+        }
+        drop(wal);
+        let segs = list_segments(&dir).unwrap();
+        assert!(segs.len() > 2);
+        // Truncate the *first* segment: not a crash artifact, refuse.
+        let victim = &segs[0].1;
+        let len = fs::metadata(victim).unwrap().len();
+        let f = OpenOptions::new().write(true).open(victim).unwrap();
+        f.set_len(len - 3).unwrap();
+        drop(f);
+        let err = Wal::open(&dir, FsyncPolicy::Always).unwrap_err();
+        assert!(err.contains("damaged mid-log"), "got: {err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seq_gap_after_open_continues_densely() {
+        // Reopen twice with appends in between: seqs stay dense across
+        // process lifetimes (this is what a restarted follower relies on).
+        let dir = tmp("dense");
+        for round in 0..3u64 {
+            let (mut wal, recs) = Wal::open(&dir, FsyncPolicy::EveryN(8)).unwrap();
+            assert_eq!(recs.len() as u64, round * 5);
+            for _ in 0..5 {
+                wal.append(&ev(1)).unwrap();
+            }
+        }
+        let (wal, recs) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(wal.last_seq(), 15);
+        let seqs: Vec<u64> = recs.iter().map(|&(s, _)| s).collect();
+        assert_eq!(seqs, (1..=15).collect::<Vec<u64>>());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

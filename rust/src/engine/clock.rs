@@ -11,6 +11,10 @@
 //!   `schedule` declines: real completions arrive from the executor as
 //!   messages, so the engine reports placements to the driver instead of
 //!   predicting their finish times.
+//! * [`ReplayClock`] — recovery time: pinned to the timestamp of the WAL
+//!   record being replayed. `schedule` declines (the WAL already holds the
+//!   outcome of every prediction) and no ticks are promised, so replay is
+//!   pure event application with no side timers.
 
 use super::ClusterEvent;
 use std::cmp::Ordering;
@@ -112,9 +116,14 @@ impl Clock for VirtualClock {
     }
 }
 
-/// Real time since construction — the live coordinator's clock.
+/// Real time since construction — the live coordinator's clock. After a
+/// crash-recovery the clock resumes from the recovered engine time via
+/// `offset`, so engine time never runs backwards across a restart.
 pub struct WallClock {
     t0: Instant,
+    /// Added to the elapsed time: the engine time recovered from the WAL
+    /// (0.0 for a fresh start).
+    offset: f64,
     /// Set when a round-timer thread feeds `ClusterEvent::RoundTick` into
     /// the driver's mailbox (see `CoordinatorConfig::round_tick_period_s`).
     ticking: bool,
@@ -122,14 +131,23 @@ pub struct WallClock {
 
 impl WallClock {
     pub fn new() -> Self {
-        Self { t0: Instant::now(), ticking: false }
+        Self { t0: Instant::now(), offset: 0.0, ticking: false }
     }
 
     /// A wall clock whose driver runs a round-timer thread: interval
     /// schedulers defer rounds to timer ticks instead of rounding
     /// immediately, matching the virtual clock's semantics.
     pub fn with_round_timer() -> Self {
-        Self { t0: Instant::now(), ticking: true }
+        Self { t0: Instant::now(), offset: 0.0, ticking: true }
+    }
+
+    /// A wall clock resuming at `offset` seconds — the engine time reached
+    /// by WAL replay. New WAL records must carry timestamps ≥ every
+    /// replayed one, which a clock restarting at zero would violate.
+    /// `ticking` mirrors the fresh-start choice: true when the coordinator
+    /// runs a round-timer thread (interval schedulers), false otherwise.
+    pub fn resumed_at(offset: f64, ticking: bool) -> Self {
+        Self { t0: Instant::now(), offset, ticking }
     }
 }
 
@@ -141,7 +159,7 @@ impl Default for WallClock {
 
 impl Clock for WallClock {
     fn now(&self) -> f64 {
-        self.t0.elapsed().as_secs_f64()
+        self.t0.elapsed().as_secs_f64() + self.offset
     }
 
     fn schedule(&mut self, _time: f64, _ev: ClusterEvent) -> bool {
@@ -150,6 +168,38 @@ impl Clock for WallClock {
 
     fn delivers_ticks(&self) -> bool {
         self.ticking
+    }
+}
+
+/// Recovery time: pinned to the WAL record under replay. The recovery loop
+/// sets `t` to each record's timestamp before handing the event to the
+/// engine, so replayed state transitions observe exactly the times the
+/// original run observed.
+#[derive(Debug, Default)]
+pub struct ReplayClock {
+    t: f64,
+}
+
+impl ReplayClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pin the clock to the timestamp of the record about to be replayed.
+    pub fn set(&mut self, t: f64) {
+        self.t = t;
+    }
+}
+
+impl Clock for ReplayClock {
+    fn now(&self) -> f64 {
+        self.t
+    }
+
+    /// Declined: every future the engine would predict is already recorded
+    /// (and will be re-armed after replay from the recovered running set).
+    fn schedule(&mut self, _time: f64, _ev: ClusterEvent) -> bool {
+        false
     }
 }
 
@@ -206,5 +256,23 @@ mod tests {
         let mut w = WallClock::with_round_timer();
         assert!(w.delivers_ticks());
         assert!(!w.schedule(10.0, ClusterEvent::RoundTick), "delivery is the timer's job");
+    }
+
+    #[test]
+    fn resumed_wall_clock_never_runs_backwards() {
+        let w = WallClock::resumed_at(1234.5, true);
+        assert!(w.now() >= 1234.5, "recovered engine time is the floor");
+        assert!(w.delivers_ticks());
+        assert!(!WallClock::resumed_at(7.0, false).delivers_ticks());
+    }
+
+    #[test]
+    fn replay_clock_is_pinned_and_inert() {
+        let mut r = ReplayClock::new();
+        assert_eq!(r.now(), 0.0);
+        r.set(42.25);
+        assert_eq!(r.now(), 42.25);
+        assert!(!r.schedule(99.0, ClusterEvent::RoundTick), "replay predicts nothing");
+        assert!(!r.delivers_ticks());
     }
 }

@@ -18,6 +18,7 @@
 
 use crate::cluster::NodeId;
 use crate::job::JobId;
+use crate::util::json::Json;
 use std::collections::VecDeque;
 
 /// Why the engine rejected a job.
@@ -131,6 +132,220 @@ pub enum EventKind {
     NodeRetired { node: NodeId },
 }
 
+impl EventKind {
+    /// Serialize for the durable snapshot of the event-log ring. Kind and
+    /// field names follow the `/v1/cluster/events` wire DTOs.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            EventKind::Arrival { job } => {
+                j.set("kind", "arrival").set("job", *job);
+            }
+            EventKind::Placed { job, epoch, attempts, gpus, d, t, parts, will_oom } => {
+                let parts: Vec<Json> = parts
+                    .iter()
+                    .map(|&(n, c)| Json::from(vec![Json::from(n), Json::from(c)]))
+                    .collect();
+                j.set("kind", "placed")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("attempts", *attempts)
+                    .set("gpus", *gpus)
+                    .set("d", *d)
+                    .set("t", *t)
+                    .set("parts", Json::Arr(parts))
+                    .set("will_oom", *will_oom);
+            }
+            EventKind::Finished { job, epoch } => {
+                j.set("kind", "finished").set("job", *job).set("epoch", *epoch);
+            }
+            EventKind::Oomed { job, epoch, requeued } => {
+                j.set("kind", "oomed")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("requeued", *requeued);
+            }
+            EventKind::OomObserved {
+                job,
+                epoch,
+                node,
+                predicted_bytes,
+                observed_bytes,
+                capacity_bytes,
+            } => {
+                j.set("kind", "oom_observed")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("node", *node)
+                    .set("predicted_bytes", *predicted_bytes)
+                    .set("observed_bytes", *observed_bytes)
+                    .set("capacity_bytes", *capacity_bytes);
+            }
+            EventKind::DrainRequested { job, epoch, node, deadline_s } => {
+                j.set("kind", "drain_requested")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("node", *node)
+                    .set("deadline_s", *deadline_s);
+            }
+            EventKind::Drained { job, epoch, node, steps_ckpt, state_digest } => {
+                j.set("kind", "drained")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("node", *node)
+                    .set("steps_ckpt", *steps_ckpt)
+                    .set("state_digest", *state_digest);
+            }
+            EventKind::ResumedFromCkpt { job, epoch, steps_ckpt } => {
+                j.set("kind", "resumed_from_ckpt")
+                    .set("job", *job)
+                    .set("epoch", *epoch)
+                    .set("steps_ckpt", *steps_ckpt);
+            }
+            EventKind::Preempted { job, node } => {
+                j.set("kind", "preempted").set("job", *job).set("node", *node);
+            }
+            EventKind::Rejected { job, reason } => {
+                j.set("kind", "rejected").set("job", *job).set("reason", reason.as_str());
+            }
+            EventKind::Cancelled { job, was_running } => {
+                j.set("kind", "cancelled").set("job", *job).set("was_running", *was_running);
+            }
+            EventKind::NodeJoined { node, gpu, gpus } => {
+                j.set("kind", "node_joined")
+                    .set("node", *node)
+                    .set("gpu", gpu.as_str())
+                    .set("gpus", *gpus);
+            }
+            EventKind::NodeLeft { node, preempted } => {
+                let jobs: Vec<Json> = preempted.iter().map(|&id| Json::from(id)).collect();
+                j.set("kind", "node_left").set("node", *node).set("preempted", Json::Arr(jobs));
+            }
+            EventKind::NodeRetired { node } => {
+                j.set("kind", "node_retired").set("node", *node);
+            }
+        }
+        j
+    }
+
+    /// Inverse of [`EventKind::to_json`].
+    pub fn from_json(j: &Json) -> Result<EventKind, String> {
+        let kind = j.get("kind").and_then(Json::as_str).ok_or("missing field 'kind'")?;
+        Ok(match kind {
+            "arrival" => EventKind::Arrival { job: f_u64(j, "job")? },
+            "placed" => {
+                let parts_j = j.get("parts").and_then(Json::as_arr).ok_or("placed: no parts")?;
+                let mut parts = Vec::with_capacity(parts_j.len());
+                for p in parts_j {
+                    let pair = p.as_arr().filter(|a| a.len() == 2).ok_or("placed: bad part")?;
+                    let node = pair[0].as_usize().ok_or("placed: bad part node")?;
+                    let count = pair[1].as_u64().ok_or("placed: bad part count")? as u32;
+                    parts.push((node, count));
+                }
+                EventKind::Placed {
+                    job: f_u64(j, "job")?,
+                    epoch: f_u64(j, "epoch")?,
+                    attempts: f_u32(j, "attempts")?,
+                    gpus: f_u32(j, "gpus")?,
+                    d: f_u32(j, "d")?,
+                    t: f_u32(j, "t")?,
+                    parts,
+                    will_oom: f_bool(j, "will_oom")?,
+                }
+            }
+            "finished" => {
+                EventKind::Finished { job: f_u64(j, "job")?, epoch: f_u64(j, "epoch")? }
+            }
+            "oomed" => EventKind::Oomed {
+                job: f_u64(j, "job")?,
+                epoch: f_u64(j, "epoch")?,
+                requeued: f_bool(j, "requeued")?,
+            },
+            "oom_observed" => EventKind::OomObserved {
+                job: f_u64(j, "job")?,
+                epoch: f_u64(j, "epoch")?,
+                node: f_usize(j, "node")?,
+                predicted_bytes: f_u64(j, "predicted_bytes")?,
+                observed_bytes: f_u64(j, "observed_bytes")?,
+                capacity_bytes: f_u64(j, "capacity_bytes")?,
+            },
+            "drain_requested" => EventKind::DrainRequested {
+                job: f_u64(j, "job")?,
+                epoch: f_u64(j, "epoch")?,
+                node: f_usize(j, "node")?,
+                deadline_s: f_f64(j, "deadline_s")?,
+            },
+            "drained" => EventKind::Drained {
+                job: f_u64(j, "job")?,
+                epoch: f_u64(j, "epoch")?,
+                node: f_usize(j, "node")?,
+                steps_ckpt: f_u64(j, "steps_ckpt")?,
+                state_digest: f_u64(j, "state_digest")?,
+            },
+            "resumed_from_ckpt" => EventKind::ResumedFromCkpt {
+                job: f_u64(j, "job")?,
+                epoch: f_u64(j, "epoch")?,
+                steps_ckpt: f_u64(j, "steps_ckpt")?,
+            },
+            "preempted" => {
+                EventKind::Preempted { job: f_u64(j, "job")?, node: f_usize(j, "node")? }
+            }
+            "rejected" => EventKind::Rejected {
+                job: f_u64(j, "job")?,
+                reason: j
+                    .get("reason")
+                    .and_then(Json::as_str)
+                    .and_then(RejectReason::from_wire)
+                    .ok_or("rejected: bad reason")?,
+            },
+            "cancelled" => EventKind::Cancelled {
+                job: f_u64(j, "job")?,
+                was_running: f_bool(j, "was_running")?,
+            },
+            "node_joined" => EventKind::NodeJoined {
+                node: f_usize(j, "node")?,
+                gpu: j
+                    .get("gpu")
+                    .and_then(Json::as_str)
+                    .ok_or("node_joined: no gpu")?
+                    .to_string(),
+                gpus: f_u32(j, "gpus")?,
+            },
+            "node_left" => {
+                let jobs_j =
+                    j.get("preempted").and_then(Json::as_arr).ok_or("node_left: no preempted")?;
+                let preempted = jobs_j
+                    .iter()
+                    .map(|v| v.as_u64().ok_or("node_left: bad job id".to_string()))
+                    .collect::<Result<Vec<u64>, _>>()?;
+                EventKind::NodeLeft { node: f_usize(j, "node")?, preempted }
+            }
+            "node_retired" => EventKind::NodeRetired { node: f_usize(j, "node")? },
+            other => return Err(format!("unknown event kind '{other}'")),
+        })
+    }
+}
+
+fn f_u64(j: &Json, k: &str) -> Result<u64, String> {
+    j.get(k).and_then(Json::as_u64).ok_or_else(|| format!("missing field '{k}'"))
+}
+
+fn f_u32(j: &Json, k: &str) -> Result<u32, String> {
+    f_u64(j, k).map(|v| v as u32)
+}
+
+fn f_usize(j: &Json, k: &str) -> Result<usize, String> {
+    j.get(k).and_then(Json::as_usize).ok_or_else(|| format!("missing field '{k}'"))
+}
+
+fn f_f64(j: &Json, k: &str) -> Result<f64, String> {
+    j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing field '{k}'"))
+}
+
+fn f_bool(j: &Json, k: &str) -> Result<bool, String> {
+    j.get(k).and_then(Json::as_bool).ok_or_else(|| format!("missing field '{k}'"))
+}
+
 /// One entry in the cluster event log.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EventRecord {
@@ -141,6 +356,22 @@ pub struct EventRecord {
     /// seconds since start for a live coordinator).
     pub time: f64,
     pub kind: EventKind,
+}
+
+impl EventRecord {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seq", self.seq).set("time", self.time).set("event", self.kind.to_json());
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<EventRecord, String> {
+        Ok(EventRecord {
+            seq: f_u64(j, "seq")?,
+            time: f_f64(j, "time")?,
+            kind: EventKind::from_json(j.get("event").ok_or("missing field 'event'")?)?,
+        })
+    }
 }
 
 /// A page of events returned by [`EventLog::since`].
@@ -223,6 +454,35 @@ impl EventLog {
     pub fn iter(&self) -> impl Iterator<Item = &EventRecord> {
         self.ring.iter()
     }
+
+    /// Serialize the retained ring and sequence cursor for a durable
+    /// snapshot: seqs keep ascending across a coordinator restart, so an
+    /// `events --follow` client can resume from its cursor.
+    pub fn to_json(&self) -> Json {
+        let ring: Vec<Json> = self.ring.iter().map(EventRecord::to_json).collect();
+        let mut j = Json::obj();
+        j.set("next_seq", self.next_seq).set("ring", Json::Arr(ring));
+        j
+    }
+
+    /// Rebuild a log of capacity `cap` from [`EventLog::to_json`] output.
+    /// If `cap` shrank since the snapshot, the oldest records are evicted.
+    pub fn from_json(j: &Json, cap: usize) -> Result<EventLog, String> {
+        let next_seq = f_u64(j, "next_seq")?;
+        if next_seq == 0 {
+            return Err("bad next_seq 0".into());
+        }
+        let ring_j = j.get("ring").and_then(Json::as_arr).ok_or("missing field 'ring'")?;
+        let mut log = EventLog::new(cap);
+        for r in ring_j {
+            log.ring.push_back(EventRecord::from_json(r)?);
+        }
+        while log.ring.len() > log.cap {
+            log.ring.pop_front();
+        }
+        log.next_seq = next_seq;
+        Ok(log)
+    }
 }
 
 #[cfg(test)]
@@ -294,6 +554,70 @@ mod tests {
         assert!(!page.dropped);
         assert_eq!(page.first_seq, 0);
         assert_eq!(page.last_seq, 0);
+    }
+
+    #[test]
+    fn event_kind_json_roundtrip() {
+        let kinds = vec![
+            EventKind::Arrival { job: 7 },
+            EventKind::Placed {
+                job: 7,
+                epoch: 2,
+                attempts: 3,
+                gpus: 4,
+                d: 2,
+                t: 2,
+                parts: vec![(0, 2), (3, 2)],
+                will_oom: false,
+            },
+            EventKind::Finished { job: 7, epoch: 2 },
+            EventKind::Oomed { job: 7, epoch: 2, requeued: true },
+            EventKind::OomObserved {
+                job: 7,
+                epoch: 2,
+                node: 3,
+                predicted_bytes: 11_000_000_000,
+                observed_bytes: 12_000_000_000,
+                capacity_bytes: 11_811_160_064,
+            },
+            EventKind::DrainRequested { job: 7, epoch: 2, node: 3, deadline_s: 12.75 },
+            EventKind::Drained { job: 7, epoch: 2, node: 3, steps_ckpt: 100, state_digest: 42 },
+            EventKind::ResumedFromCkpt { job: 7, epoch: 3, steps_ckpt: 100 },
+            EventKind::Preempted { job: 7, node: 3 },
+            EventKind::Rejected { job: 7, reason: RejectReason::Unplaceable },
+            EventKind::Cancelled { job: 7, was_running: true },
+            EventKind::NodeJoined { node: 5, gpu: "A100-40G".into(), gpus: 8 },
+            EventKind::NodeLeft { node: 5, preempted: vec![7, 9] },
+            EventKind::NodeRetired { node: 5 },
+        ];
+        for k in kinds {
+            let text = k.to_json().to_string_compact();
+            let back = EventKind::from_json(&crate::util::json::parse(&text).unwrap())
+                .unwrap_or_else(|e| panic!("{text}: {e}"));
+            assert_eq!(back, k, "{text}");
+        }
+        assert!(EventKind::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn event_log_json_roundtrip_preserves_seqs() {
+        let mut log = EventLog::new(4);
+        push_n(&mut log, 10); // retained: 7..=10
+        let text = log.to_json().to_string_compact();
+        let back = EventLog::from_json(&crate::util::json::parse(&text).unwrap(), 4).unwrap();
+        assert_eq!(back.first_seq(), 7);
+        assert_eq!(back.last_seq(), 10);
+        assert_eq!(back.since(0, 100), log.since(0, 100));
+        // Next push continues the sequence instead of restarting.
+        let seq = {
+            let mut b = back;
+            b.push(11.0, EventKind::Arrival { job: 99 })
+        };
+        assert_eq!(seq, 11);
+        // A shrunken cap evicts oldest-first on restore.
+        let small = EventLog::from_json(&crate::util::json::parse(&text).unwrap(), 2).unwrap();
+        assert_eq!(small.first_seq(), 9);
+        assert_eq!(small.last_seq(), 10);
     }
 
     #[test]

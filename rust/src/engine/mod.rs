@@ -60,6 +60,7 @@ use crate::perfmodel::PerfModel;
 use crate::runtime::checkpoint::{self, Checkpoint, CheckpointStore};
 use crate::runtime::device::DeviceMemory;
 use crate::sched::{PendingJob, PendingQueue, Scheduler};
+use crate::util::json::Json;
 use crate::util::prng::SplitMix64;
 use clock::Clock;
 use std::collections::{HashMap, VecDeque};
@@ -97,6 +98,96 @@ pub enum ClusterEvent {
     /// finished, OOMed, or was cancelled since the drain request) are
     /// ignored.
     Drained { job: JobId, epoch: u64 },
+    /// User cancellation. Routing cancels through the event path (instead
+    /// of the old direct [`SchedulingEngine::cancel_pending`] /
+    /// [`SchedulingEngine::cancel_running`] calls) means the durability
+    /// WAL captures them like every other transition, so crash recovery is
+    /// *pure replay* — no side channel mutates engine state. A cancel for
+    /// a job that is neither pending nor running is a no-op.
+    Cancel { job: JobId },
+}
+
+impl ClusterEvent {
+    /// Serialize for the durability WAL.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            ClusterEvent::Arrival(spec) => {
+                // The full spec (not just the id): replaying an Arrival must
+                // reconstruct the job exactly, submit time included.
+                j.set("kind", "arrival").set("spec", spec.to_json());
+            }
+            ClusterEvent::Finish { job, epoch } => {
+                j.set("kind", "finish").set("job", *job).set("epoch", *epoch);
+            }
+            ClusterEvent::Oom { job, epoch } => {
+                j.set("kind", "oom").set("job", *job).set("epoch", *epoch);
+            }
+            ClusterEvent::RoundTick => {
+                j.set("kind", "round_tick");
+            }
+            ClusterEvent::NodeJoin(node) => {
+                j.set("kind", "node_join")
+                    .set("gpu", node.gpu.name)
+                    .set("count", node.count)
+                    .set("link", match node.link {
+                        crate::config::LinkKind::NvLink => "nvlink",
+                        crate::config::LinkKind::Pcie => "pcie",
+                    });
+            }
+            ClusterEvent::NodeLeave(node) => {
+                j.set("kind", "node_leave").set("node", *node);
+            }
+            ClusterEvent::Drained { job, epoch } => {
+                j.set("kind", "drained").set("job", *job).set("epoch", *epoch);
+            }
+            ClusterEvent::Cancel { job } => {
+                j.set("kind", "cancel").set("job", *job);
+            }
+        }
+        j
+    }
+
+    /// Rebuild from [`ClusterEvent::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<ClusterEvent, String> {
+        let kind = j.get("kind").and_then(Json::as_str).ok_or("event: missing 'kind'")?;
+        let job = || j.get("job").and_then(Json::as_u64).ok_or("event: missing 'job'");
+        let epoch = || j.get("epoch").and_then(Json::as_u64).ok_or("event: missing 'epoch'");
+        Ok(match kind {
+            "arrival" => ClusterEvent::Arrival(JobSpec::from_json(
+                j.get("spec").ok_or("arrival: missing 'spec'")?,
+            )?),
+            "finish" => ClusterEvent::Finish { job: job()?, epoch: epoch()? },
+            "oom" => ClusterEvent::Oom { job: job()?, epoch: epoch()? },
+            "round_tick" => ClusterEvent::RoundTick,
+            "node_join" => {
+                let name =
+                    j.get("gpu").and_then(Json::as_str).ok_or("node_join: missing 'gpu'")?;
+                let gpu = crate::config::gpu_by_name(name)
+                    .ok_or_else(|| format!("node_join: unknown gpu '{name}'"))?;
+                let count = j
+                    .get("count")
+                    .and_then(Json::as_u64)
+                    .and_then(|c| u32::try_from(c).ok())
+                    .ok_or("node_join: missing 'count'")?;
+                let link = match j.get("link").and_then(Json::as_str) {
+                    Some("nvlink") => crate::config::LinkKind::NvLink,
+                    Some("pcie") => crate::config::LinkKind::Pcie,
+                    other => return Err(format!("node_join: bad link {other:?}")),
+                };
+                ClusterEvent::NodeJoin(NodeSpec { gpu, count, link })
+            }
+            "node_leave" => ClusterEvent::NodeLeave(
+                j.get("node")
+                    .and_then(Json::as_u64)
+                    .and_then(|n| usize::try_from(n).ok())
+                    .ok_or("node_leave: missing 'node'")?,
+            ),
+            "drained" => ClusterEvent::Drained { job: job()?, epoch: epoch()? },
+            "cancel" => ClusterEvent::Cancel { job: job()? },
+            other => return Err(format!("event: unknown kind '{other}'")),
+        })
+    }
 }
 
 /// Engine tuning knobs (the scheduling-relevant subset of the old
@@ -290,6 +381,12 @@ impl RetentionQueue {
     pub fn is_empty(&self) -> bool {
         self.order.is_empty()
     }
+
+    /// Terminal ids in noted order (oldest first) — serialized by the
+    /// durability snapshot so eviction order survives recovery.
+    pub fn ids(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.order.iter().copied()
+    }
 }
 
 /// Cap on [`SchedulingEngine::decision_log`] entries: a long-running live
@@ -299,6 +396,19 @@ impl RetentionQueue {
 /// `first_starts`) is bounded separately by
 /// [`EngineConfig::retain_terminal`].
 pub const MAX_DECISION_LOG: usize = 65_536;
+
+/// Sink for the engine's durability journal. The engine calls
+/// [`Journal::event`] at the single point every [`ClusterEvent`] is applied
+/// (before any state changes, so the record is on disk before its effects
+/// exist anywhere else) and [`Journal::round`] after each executed
+/// scheduling round. `RoundTick`s are *not* journaled — they only mark
+/// round boundaries, and the [`Journal::round`] record already captures
+/// each round that actually ran, with its timestamp and measured scheduler
+/// wall time (which a replay cannot re-measure).
+pub trait Journal {
+    fn event(&mut self, time: f64, ev: &ClusterEvent);
+    fn round(&mut self, time: f64, sched_wall_s: f64);
+}
 
 struct RunningJob {
     spec: JobSpec,
@@ -313,9 +423,15 @@ struct RunningJob {
     sps: f64,
     /// Samples completed before this run (resumed from checkpoint).
     resumed_samples: u64,
-    /// Set when a node retirement asked this job to drain; names the
-    /// triggering node.
-    draining: Option<NodeId>,
+    /// Set when a node retirement asked this job to drain: the triggering
+    /// node and the absolute drain deadline (kept so a recovered engine
+    /// can re-arm the deadline timer).
+    draining: Option<(NodeId, f64)>,
+    /// Absolute time of this run's predicted outcome (Finish, or Oom when
+    /// [`RunningJob::will_oom`]) — what crash recovery re-arms.
+    outcome_at: f64,
+    /// Whether the predicted outcome is an OOM crash.
+    will_oom: bool,
 }
 
 /// GPU-time utilization integrator. Integrates capacity as well as busy
@@ -378,6 +494,9 @@ pub struct SchedulingEngine<'a> {
     /// RoundTick is already queued in a virtual clock.
     last_round: f64,
     tick_queued: bool,
+    /// Durability sink, attached by the driver *after* any recovery replay
+    /// (replay must not re-journal the records it is reading).
+    journal: Option<Box<dyn Journal>>,
 }
 
 impl<'a> SchedulingEngine<'a> {
@@ -404,7 +523,14 @@ impl<'a> SchedulingEngine<'a> {
             decision_log: Vec::new(),
             last_round: f64::NEG_INFINITY,
             tick_queued: false,
+            journal: None,
         }
+    }
+
+    /// Attach the durability journal. Call after recovery replay completes
+    /// — replayed events must not be re-journaled.
+    pub fn set_journal(&mut self, journal: Box<dyn Journal>) {
+        self.journal = Some(journal);
     }
 
     fn busy_gpus(&self) -> u32 {
@@ -423,6 +549,15 @@ impl<'a> SchedulingEngine<'a> {
     pub fn handle(&mut self, ev: ClusterEvent, clock: &mut dyn Clock) -> Effects {
         let now = clock.now();
         self.advance_util(now);
+        // Persist-before-effect: the WAL record hits the journal before the
+        // event mutates anything, so no acknowledged transition can be lost
+        // to a crash. RoundTicks are skipped — executed rounds get their own
+        // `Journal::round` record (see `run_round`).
+        if !matches!(ev, ClusterEvent::RoundTick) {
+            if let Some(journal) = self.journal.as_mut() {
+                journal.event(now, &ev);
+            }
+        }
         let mut fx = Effects::default();
         match ev {
             ClusterEvent::Arrival(spec) => {
@@ -467,6 +602,11 @@ impl<'a> SchedulingEngine<'a> {
             }
             ClusterEvent::Drained { job, epoch } => {
                 self.handle_drained(job, epoch, now, &mut fx);
+            }
+            ClusterEvent::Cancel { job } => {
+                if !self.cancel_pending(job, now) {
+                    self.cancel_running(job, now);
+                }
             }
             ClusterEvent::RoundTick => {
                 self.tick_queued = false;
@@ -534,7 +674,6 @@ impl<'a> SchedulingEngine<'a> {
             if run.draining.is_some() {
                 continue; // already draining for another retiring node
             }
-            run.draining = Some(node);
             let epoch = run.epoch;
             let step_s = if run.sps > 0.0 {
                 run.spec.train.global_batch.max(1) as f64 / run.sps
@@ -543,6 +682,7 @@ impl<'a> SchedulingEngine<'a> {
             };
             let delay = (step_s + self.cfg.ckpt_write_s).min(self.cfg.drain_grace_s);
             let deadline = now + delay;
+            run.draining = Some((node, deadline));
             self.events
                 .push(now, EventKind::DrainRequested { job, epoch, node, deadline_s: deadline });
             if !clock.schedule(deadline, ClusterEvent::Drained { job, epoch }) {
@@ -565,7 +705,7 @@ impl<'a> SchedulingEngine<'a> {
             return; // stale: finished/OOMed/cancelled since the drain request
         }
         let run = self.running.remove(&job).expect("checked above");
-        let node = run.draining.expect("checked above");
+        let (node, _) = run.draining.expect("checked above");
         let batch = run.spec.train.global_batch.max(1) as u64;
         let executed = Self::steps_this_run(&run, now);
         let steps_total = run.resumed_samples / batch + executed;
@@ -666,8 +806,41 @@ impl<'a> SchedulingEngine<'a> {
             }
             self.last_round = now;
         }
+        // Journal executed rounds (a round with nothing pending mutates no
+        // state and is not recorded). The measured scheduler wall time goes
+        // into the record because a replay cannot re-measure it.
+        let had_pending = !self.pending.is_empty();
+        let wall_before = self.sched_wall_s;
         self.round_inner(clock, &mut fx);
         self.reject_unplaceable(clock, &mut fx);
+        if had_pending {
+            if let Some(journal) = self.journal.as_mut() {
+                journal.round(now, self.sched_wall_s - wall_before);
+            }
+        }
+        fx
+    }
+
+    /// Re-execute one journaled scheduling round during crash recovery: the
+    /// round runs at the recorded time against the recovered state, and the
+    /// recorded scheduler wall time is credited in place of a meaningless
+    /// re-measurement. Replay is the *same* placement pass as the original
+    /// (`round_inner` + `reject_unplaceable`) — recovery never mutates
+    /// engine state through any other path.
+    pub fn replay_round(&mut self, time: f64, sched_wall_s: f64) -> Effects {
+        let mut clock = clock::ReplayClock::new();
+        clock.set(time);
+        let mut fx = Effects::default();
+        self.advance_util(time);
+        if self.sched.round_interval_s().is_some() {
+            // The record's existence proves the original run passed the
+            // interval gate at this time.
+            self.last_round = time;
+        }
+        let wall_before = self.sched_wall_s;
+        self.round_inner(&mut clock, &mut fx);
+        self.reject_unplaceable(&mut clock, &mut fx);
+        self.sched_wall_s = wall_before + sched_wall_s;
         fx
     }
 
@@ -804,6 +977,8 @@ impl<'a> SchedulingEngine<'a> {
                     sps: thr,
                     resumed_samples,
                     draining: None,
+                    outcome_at: start_time + runtime,
+                    will_oom,
                 },
             );
             if will_oom {
@@ -1040,6 +1215,351 @@ impl<'a> SchedulingEngine<'a> {
         self.advance_util(now);
         self.util.value()
     }
+
+    // ---- durability ----------------------------------------------------
+
+    /// Future events a recovered engine is still owed: the predicted
+    /// outcome of every running job, pending drain deadlines, and the
+    /// queued tick of an interval scheduler. Virtual-clock drivers push
+    /// these back into the clock after a restore. A draining job re-arms
+    /// *both* its drain deadline and its original outcome — whichever fires
+    /// second goes stale via the epoch guard, exactly as in the original
+    /// run.
+    pub fn rearm_events(&self) -> Vec<(f64, ClusterEvent)> {
+        let mut out: Vec<(f64, ClusterEvent)> = Vec::new();
+        let mut jobs: Vec<(&JobId, &RunningJob)> = self.running.iter().collect();
+        jobs.sort_by_key(|(id, _)| **id);
+        for (&job, run) in jobs {
+            if let Some((_, deadline)) = run.draining {
+                out.push((deadline, ClusterEvent::Drained { job, epoch: run.epoch }));
+            }
+            let ev = if run.will_oom {
+                ClusterEvent::Oom { job, epoch: run.epoch }
+            } else {
+                ClusterEvent::Finish { job, epoch: run.epoch }
+            };
+            out.push((run.outcome_at, ev));
+        }
+        if self.tick_queued {
+            if let Some(interval) = self.sched.round_interval_s() {
+                out.push((self.last_round + interval, ClusterEvent::RoundTick));
+            }
+        }
+        out
+    }
+
+    /// What a recovered *live* engine needs re-driven, as ordinary
+    /// [`Effects`]: every running job re-dispatched (the executor that was
+    /// driving it died with the old process) with its remaining-work
+    /// estimate, plus OOM and drain directives carrying their remaining
+    /// delays. The driver routes this through the same dispatch path as
+    /// any other effects.
+    pub fn rearm_effects(&self, now: f64) -> Effects {
+        let mut fx = Effects::default();
+        let mut jobs: Vec<(&JobId, &RunningJob)> = self.running.iter().collect();
+        jobs.sort_by_key(|(id, _)| **id);
+        for (&job, run) in jobs {
+            let delay_s = (run.outcome_at - now).max(0.0);
+            if run.will_oom {
+                fx.oom_observed.push(OomDirective { job, epoch: run.epoch, delay_s });
+            }
+            if let Some((node, deadline)) = run.draining {
+                fx.drain_requested.push(DrainDirective {
+                    job,
+                    epoch: run.epoch,
+                    node,
+                    delay_s: (deadline - now).max(0.0),
+                });
+            }
+            fx.placed.push(PlacedJob {
+                job,
+                epoch: run.epoch,
+                attempts: run.attempts,
+                gpus: run.gpus,
+                start_time: now,
+                will_oom: run.will_oom,
+                resumed_samples: run.resumed_samples,
+                est_samples_per_sec: run.sps,
+                est_runtime_s: delay_s,
+            });
+        }
+        fx
+    }
+
+    /// The determinism-affecting [`EngineConfig`] knobs, serialized into
+    /// every snapshot so recovery can refuse to replay a WAL against a
+    /// config that would make the replay diverge from the original run.
+    fn config_guard_json(cfg: &EngineConfig) -> Json {
+        let mut j = Json::obj();
+        j.set("oom_detect_s", cfg.oom_detect_s)
+            .set("device_memory", cfg.device_memory)
+            .set("mem_jitter_frac", cfg.mem_jitter_frac)
+            .set("oom_observe_s", cfg.oom_observe_s)
+            .set("ckpt_every_steps", cfg.ckpt_every_steps)
+            .set("ckpt_write_s", cfg.ckpt_write_s)
+            .set("drain_grace_s", cfg.drain_grace_s)
+            .set("sched_work_unit_s", cfg.sched_work_unit_s)
+            .set("max_attempts", cfg.max_attempts);
+        j
+    }
+
+    /// Serialize the engine's complete mutable state for a durable
+    /// snapshot. Deterministic: identical states serialize to identical
+    /// bytes (every map is emitted in sorted key order), which the
+    /// crash-recovery differential tests rely on. The memory-jitter PRNG
+    /// needs no cursor here — draws are stateless functions of
+    /// `(job, epoch)` (see [`Self::observed_peak_bytes`]).
+    pub fn snapshot_json(&self) -> Json {
+        let pending: Vec<Json> = self
+            .pending
+            .iter()
+            .map(|p| {
+                let mut j = Json::obj();
+                j.set("spec", p.spec.to_json()).set("attempts", p.attempts);
+                j
+            })
+            .collect();
+        let mut run_ids: Vec<JobId> = self.running.keys().copied().collect();
+        run_ids.sort_unstable();
+        let running: Vec<Json> = run_ids
+            .into_iter()
+            .map(|id| {
+                let r = &self.running[&id];
+                let mut j = Json::obj();
+                j.set("job", id)
+                    .set("spec", r.spec.to_json())
+                    .set("first_start", r.first_start)
+                    .set("gpus", r.gpus)
+                    .set("attempts", r.attempts)
+                    .set("epoch", r.epoch)
+                    .set("start_time", r.start_time)
+                    .set("sps", r.sps)
+                    .set("resumed_samples", r.resumed_samples)
+                    .set("outcome_at", r.outcome_at)
+                    .set("will_oom", r.will_oom);
+                if let Some((node, deadline)) = r.draining {
+                    j.set("draining", Json::Arr(vec![Json::from(node), Json::from(deadline)]));
+                }
+                j
+            })
+            .collect();
+        let mut util = Json::obj();
+        util.set("last_t", self.util.last_t)
+            .set("busy_gpu_seconds", self.util.busy_gpu_seconds)
+            .set("capacity_gpu_seconds", self.util.capacity_gpu_seconds);
+        let retention: Vec<Json> =
+            self.retention.order.iter().map(|&id| Json::from(id)).collect();
+        let decisions: Vec<Json> = self
+            .decision_log
+            .iter()
+            .map(|(job, parts)| {
+                let pj: Vec<Json> = parts
+                    .iter()
+                    .map(|&(n, g)| Json::Arr(vec![Json::from(n), Json::from(g)]))
+                    .collect();
+                Json::Arr(vec![Json::from(*job), Json::Arr(pj)])
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("config", Self::config_guard_json(&self.cfg))
+            .set("orch", self.orch.to_json())
+            .set("pending", Json::Arr(pending))
+            .set("running", Json::Arr(running))
+            .set("agg", self.agg.to_json())
+            .set("events", self.events.to_json())
+            .set("work_units", self.work_units)
+            .set("sched_wall_s", self.sched_wall_s)
+            .set("util", util)
+            .set("submit_times", id_map_f64_json(&self.submit_times))
+            .set("first_starts", id_map_f64_json(&self.first_starts))
+            .set("epochs", id_map_u64_json(&self.epochs))
+            .set("retention", Json::Arr(retention))
+            .set("ckpts", self.ckpts.to_json())
+            .set("decision_log", Json::Arr(decisions))
+            .set("tick_queued", self.tick_queued);
+        if self.last_round != f64::NEG_INFINITY {
+            // NEG_INFINITY (no round yet) has no JSON form — absence is the
+            // sentinel.
+            j.set("last_round", self.last_round);
+        }
+        j
+    }
+
+    /// Restore from [`Self::snapshot_json`] output. The engine must have
+    /// been constructed with the same scheduler policy and an
+    /// [`EngineConfig`] whose determinism-affecting knobs match the
+    /// snapshot's — a mismatch is rejected because WAL replay on top of the
+    /// restored state would silently diverge from the original run.
+    pub fn restore_from_json(&mut self, j: &Json) -> Result<(), String> {
+        let cfgj = j.get("config").ok_or("snapshot: missing 'config'")?;
+        let mine = Self::config_guard_json(&self.cfg);
+        if cfgj != &mine {
+            return Err(format!(
+                "snapshot engine config {} does not match running config {} — replay would \
+                 diverge; restart with the original settings",
+                cfgj.to_string_compact(),
+                mine.to_string_compact()
+            ));
+        }
+        self.orch = Orchestrator::from_json(j.get("orch").ok_or("snapshot: missing 'orch'")?)?;
+        self.pm = PerfModel::new(self.orch.state().inter_node_gbps);
+        self.pending = PendingQueue::new();
+        for p in j.get("pending").and_then(Json::as_arr).ok_or("snapshot: missing 'pending'")? {
+            self.pending.push(PendingJob {
+                spec: JobSpec::from_json(p.get("spec").ok_or("pending: missing 'spec'")?)?,
+                attempts: p
+                    .get("attempts")
+                    .and_then(Json::as_u64)
+                    .and_then(|a| u32::try_from(a).ok())
+                    .ok_or("pending: missing 'attempts'")?,
+            });
+        }
+        self.running = HashMap::new();
+        for r in j.get("running").and_then(Json::as_arr).ok_or("snapshot: missing 'running'")? {
+            let f = |k: &str| {
+                r.get(k).and_then(Json::as_f64).ok_or_else(|| format!("running: missing '{k}'"))
+            };
+            let u = |k: &str| {
+                r.get(k).and_then(Json::as_u64).ok_or_else(|| format!("running: missing '{k}'"))
+            };
+            let draining = match r.get("draining").and_then(Json::as_arr) {
+                Some([n, d]) => Some((
+                    n.as_usize().ok_or("running: bad draining node")?,
+                    d.as_f64().ok_or("running: bad draining deadline")?,
+                )),
+                Some(_) => return Err("running: bad 'draining'".into()),
+                None => None,
+            };
+            let job = u("job")?;
+            self.running.insert(
+                job,
+                RunningJob {
+                    spec: JobSpec::from_json(r.get("spec").ok_or("running: missing 'spec'")?)?,
+                    first_start: f("first_start")?,
+                    gpus: u("gpus")? as u32,
+                    attempts: u("attempts")? as u32,
+                    epoch: u("epoch")?,
+                    start_time: f("start_time")?,
+                    sps: f("sps")?,
+                    resumed_samples: u("resumed_samples")?,
+                    draining,
+                    outcome_at: f("outcome_at")?,
+                    will_oom: r
+                        .get("will_oom")
+                        .and_then(Json::as_bool)
+                        .ok_or("running: missing 'will_oom'")?,
+                },
+            );
+        }
+        self.agg = RunAggregates::from_json(j.get("agg").ok_or("snapshot: missing 'agg'")?)?;
+        self.events = EventLog::from_json(
+            j.get("events").ok_or("snapshot: missing 'events'")?,
+            self.cfg.event_log_cap,
+        )?;
+        self.work_units =
+            j.get("work_units").and_then(Json::as_u64).ok_or("snapshot: missing 'work_units'")?;
+        self.sched_wall_s = j
+            .get("sched_wall_s")
+            .and_then(Json::as_f64)
+            .ok_or("snapshot: missing 'sched_wall_s'")?;
+        let util = j.get("util").ok_or("snapshot: missing 'util'")?;
+        let uf = |k: &str| {
+            util.get(k).and_then(Json::as_f64).ok_or_else(|| format!("util: missing '{k}'"))
+        };
+        self.util = UtilIntegrator {
+            last_t: uf("last_t")?,
+            busy_gpu_seconds: uf("busy_gpu_seconds")?,
+            capacity_gpu_seconds: uf("capacity_gpu_seconds")?,
+        };
+        self.submit_times = id_map_f64_restore(j.get("submit_times"), "submit_times")?;
+        self.first_starts = id_map_f64_restore(j.get("first_starts"), "first_starts")?;
+        self.epochs = id_map_u64_restore(j.get("epochs"), "epochs")?;
+        self.retention = RetentionQueue::new(self.cfg.retain_terminal);
+        for id in
+            j.get("retention").and_then(Json::as_arr).ok_or("snapshot: missing 'retention'")?
+        {
+            let _ = self.retention.note(id.as_u64().ok_or("retention: bad id")?);
+        }
+        self.ckpts = CheckpointStore::from_json(j.get("ckpts").ok_or("snapshot: missing 'ckpts'")?)?;
+        self.decision_log = Vec::new();
+        for d in j
+            .get("decision_log")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot: missing 'decision_log'")?
+        {
+            let Some([job, parts]) = d.as_arr() else {
+                return Err("decision_log: bad entry".into());
+            };
+            let job = job.as_u64().ok_or("decision_log: bad job")?;
+            let mut ps: Vec<(NodeId, u32)> = Vec::new();
+            for p in parts.as_arr().ok_or("decision_log: bad parts")? {
+                let Some([n, g]) = p.as_arr() else {
+                    return Err("decision_log: bad part".into());
+                };
+                ps.push((
+                    n.as_usize().ok_or("decision_log: bad node")?,
+                    g.as_u64()
+                        .and_then(|g| u32::try_from(g).ok())
+                        .ok_or("decision_log: bad gpus")?,
+                ));
+            }
+            self.decision_log.push((job, ps));
+        }
+        self.last_round =
+            j.get("last_round").and_then(Json::as_f64).unwrap_or(f64::NEG_INFINITY);
+        self.tick_queued =
+            j.get("tick_queued").and_then(Json::as_bool).ok_or("snapshot: missing 'tick_queued'")?;
+        // The scheduler's own caches (MARP plan lists, ILP type dimensions)
+        // are derived state: rebuild them against the restored topology.
+        self.sched.cluster_changed(self.orch.state());
+        Ok(())
+    }
+}
+
+fn id_map_f64_json(m: &HashMap<JobId, f64>) -> Json {
+    let mut keys: Vec<JobId> = m.keys().copied().collect();
+    keys.sort_unstable();
+    Json::Arr(
+        keys.into_iter().map(|k| Json::Arr(vec![Json::from(k), Json::from(m[&k])])).collect(),
+    )
+}
+
+fn id_map_u64_json(m: &HashMap<JobId, u64>) -> Json {
+    let mut keys: Vec<JobId> = m.keys().copied().collect();
+    keys.sort_unstable();
+    Json::Arr(
+        keys.into_iter().map(|k| Json::Arr(vec![Json::from(k), Json::from(m[&k])])).collect(),
+    )
+}
+
+fn id_map_f64_restore(j: Option<&Json>, what: &str) -> Result<HashMap<JobId, f64>, String> {
+    let arr = j.and_then(Json::as_arr).ok_or_else(|| format!("snapshot: missing '{what}'"))?;
+    let mut m = HashMap::new();
+    for e in arr {
+        let Some([k, v]) = e.as_arr() else {
+            return Err(format!("{what}: bad entry"));
+        };
+        m.insert(
+            k.as_u64().ok_or_else(|| format!("{what}: bad id"))?,
+            v.as_f64().ok_or_else(|| format!("{what}: bad value"))?,
+        );
+    }
+    Ok(m)
+}
+
+fn id_map_u64_restore(j: Option<&Json>, what: &str) -> Result<HashMap<JobId, u64>, String> {
+    let arr = j.and_then(Json::as_arr).ok_or_else(|| format!("snapshot: missing '{what}'"))?;
+    let mut m = HashMap::new();
+    for e in arr {
+        let Some([k, v]) = e.as_arr() else {
+            return Err(format!("{what}: bad entry"));
+        };
+        m.insert(
+            k.as_u64().ok_or_else(|| format!("{what}: bad id"))?,
+            v.as_u64().ok_or_else(|| format!("{what}: bad value"))?,
+        );
+    }
+    Ok(m)
 }
 
 #[cfg(test)]
@@ -1442,5 +1962,234 @@ mod tests {
         drive(&mut engine, &mut clock);
         assert_eq!(engine.aggregates().n_completed, 1, "only job 2 completes");
         assert!(engine.conservation_ok());
+    }
+
+    // ---- durability ----------------------------------------------------
+
+    /// Snapshot with the one nondeterministic field (measured scheduler
+    /// wall time) zeroed, so runs can be compared byte-for-byte.
+    fn canonical_snapshot(engine: &SchedulingEngine) -> String {
+        let mut j = engine.snapshot_json();
+        j.set("sched_wall_s", 0.0);
+        j.to_string_compact()
+    }
+
+    #[test]
+    fn cluster_event_json_roundtrip() {
+        let evs = vec![
+            ClusterEvent::Arrival(job(5, "gpt2-1.3b", 4, 123, 1.5)),
+            ClusterEvent::Finish { job: 1, epoch: 3 },
+            ClusterEvent::Oom { job: 2, epoch: 1 },
+            ClusterEvent::RoundTick,
+            ClusterEvent::NodeJoin(NodeSpec {
+                gpu: gpu_by_name("A100-40G").unwrap(),
+                count: 2,
+                link: LinkKind::Pcie,
+            }),
+            ClusterEvent::NodeLeave(3),
+            ClusterEvent::Drained { job: 7, epoch: 2 },
+            ClusterEvent::Cancel { job: 9 },
+        ];
+        for ev in evs {
+            let back = ClusterEvent::from_json(&ev.to_json()).expect("roundtrip");
+            assert_eq!(format!("{back:?}"), format!("{ev:?}"));
+        }
+        let mut bogus = Json::obj();
+        bogus.set("kind", "bogus");
+        assert!(ClusterEvent::from_json(&bogus).is_err());
+    }
+
+    #[test]
+    fn journal_sees_events_before_rounds_and_skips_ticks() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        struct Recorder(Rc<RefCell<Vec<String>>>);
+        impl Journal for Recorder {
+            fn event(&mut self, time: f64, ev: &ClusterEvent) {
+                self.0
+                    .borrow_mut()
+                    .push(format!("ev@{time}:{}", ev.to_json().to_string_compact()));
+            }
+            fn round(&mut self, time: f64, _sched_wall_s: f64) {
+                self.0.borrow_mut().push(format!("round@{time}"));
+            }
+        }
+
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+        let log = Rc::new(RefCell::new(Vec::new()));
+        engine.set_journal(Box::new(Recorder(log.clone())));
+        let mut clock = VirtualClock::new();
+        clock.schedule(0.0, ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 10_000, 0.0)));
+        drive(&mut engine, &mut clock);
+        let log = log.borrow();
+        assert!(
+            log[0].starts_with("ev@0") && log[0].contains("\"arrival\""),
+            "the arrival is journaled before anything else: {log:?}"
+        );
+        assert_eq!(
+            log.iter().filter(|l| l.starts_with("round@")).count(),
+            1,
+            "only the placing round is journaled; no-op rounds are skipped: {log:?}"
+        );
+        assert!(log.iter().any(|l| l.contains("\"finish\"")));
+        assert!(!log.iter().any(|l| l.contains("round_tick")), "ticks are never journaled");
+    }
+
+    #[test]
+    fn cancel_event_is_equivalent_to_direct_cancel_calls() {
+        let spec = real_testbed();
+        let mut h1 = Has::new(Marp::with_defaults(spec.clone()));
+        let mut h2 = Has::new(Marp::with_defaults(spec.clone()));
+        let mut by_event = SchedulingEngine::new(&spec, &mut h1, EngineConfig::default());
+        let mut direct = SchedulingEngine::new(&spec, &mut h2, EngineConfig::default());
+        let mut c1 = VirtualClock::new();
+        let mut c2 = VirtualClock::new();
+        for (e, c) in [(&mut by_event, &mut c1), (&mut direct, &mut c2)] {
+            e.handle(ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 10_000, 0.0)), c);
+            e.handle(ClusterEvent::Arrival(job(2, "gpt2-1.3b", 4, 10_000, 0.0)), c);
+            let fx = e.run_round(c);
+            assert_eq!(fx.placed.len(), 2);
+            // Job 3 arrives after the round: still pending when cancelled.
+            e.handle(ClusterEvent::Arrival(job(3, "gpt2-350m", 8, 10_000, 1.0)), c);
+        }
+        by_event.handle(ClusterEvent::Cancel { job: 3 }, &mut c1);
+        by_event.handle(ClusterEvent::Cancel { job: 1 }, &mut c1);
+        by_event.handle(ClusterEvent::Cancel { job: 99 }, &mut c1); // unknown: no-op
+        assert!(direct.cancel_pending(3, c2.now()));
+        assert!(direct.cancel_running(1, c2.now()));
+        assert_eq!(canonical_snapshot(&by_event), canonical_snapshot(&direct));
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_is_byte_identical() {
+        let cfg = EngineConfig { drain_grace_s: 60.0, ..EngineConfig::default() };
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, cfg.clone());
+        let mut clock = VirtualClock::new();
+        engine.handle(ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 500_000, 0.0)), &mut clock);
+        engine.handle(ClusterEvent::Arrival(job(2, "gpt2-7b", 2, 500_000, 0.0)), &mut clock);
+        engine.handle(ClusterEvent::Arrival(job(3, "gpt2-1.3b", 4, 500_000, 0.0)), &mut clock);
+        engine.run_round(&mut clock);
+        // Drain the node hosting job 2 so the snapshot carries a draining
+        // entry, and cancel job 3 so it carries terminal bookkeeping.
+        let node = engine.decision_log().iter().find(|(id, _)| *id == 2).unwrap().1[0].0;
+        engine.handle(ClusterEvent::NodeLeave(node), &mut clock);
+        engine.handle(ClusterEvent::Cancel { job: 3 }, &mut clock);
+
+        let snap = engine.snapshot_json();
+        let mut has2 = Has::new(Marp::with_defaults(spec.clone()));
+        let mut restored = SchedulingEngine::new(&spec, &mut has2, cfg);
+        restored.restore_from_json(&snap).expect("restore");
+        assert_eq!(
+            restored.snapshot_json().to_string_compact(),
+            snap.to_string_compact(),
+            "restore → snapshot reproduces the snapshot byte-for-byte"
+        );
+
+        // A determinism-affecting config mismatch is rejected, not papered
+        // over.
+        let other = EngineConfig { drain_grace_s: 61.0, ..EngineConfig::default() };
+        let mut has3 = Has::new(Marp::with_defaults(spec.clone()));
+        let mut wrong = SchedulingEngine::new(&spec, &mut has3, other);
+        let err = wrong.restore_from_json(&snap).unwrap_err();
+        assert!(err.contains("does not match"), "got: {err}");
+    }
+
+    #[test]
+    fn recovered_engine_finishes_the_run_identically() {
+        // Distinct models → distinct runtimes → no event-time ties, so the
+        // uninterrupted and recovered runs see the same event order.
+        let arrivals = || {
+            vec![
+                ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 200_000, 0.0)),
+                ClusterEvent::Arrival(job(2, "gpt2-1.3b", 4, 200_000, 0.0)),
+                ClusterEvent::Arrival(job(3, "gpt2-7b", 2, 200_000, 0.0)),
+            ]
+        };
+
+        // Run A: uninterrupted.
+        let spec = real_testbed();
+        let mut ha = Has::new(Marp::with_defaults(spec.clone()));
+        let mut a = SchedulingEngine::new(&spec, &mut ha, EngineConfig::default());
+        let mut ca = VirtualClock::new();
+        for ev in arrivals() {
+            ca.schedule(0.0, ev);
+        }
+        drive(&mut a, &mut ca);
+
+        // Run B: same prefix, then snapshot mid-run, restore into a fresh
+        // engine, re-arm the clock from the recovered running set, finish.
+        let mut hb = Has::new(Marp::with_defaults(spec.clone()));
+        let mut b1 = SchedulingEngine::new(&spec, &mut hb, EngineConfig::default());
+        let mut cb = VirtualClock::new();
+        for ev in arrivals() {
+            cb.schedule(0.0, ev);
+        }
+        for _ in 0..4 {
+            // 3 arrivals + the first outcome: jobs still in flight after.
+            let (_, ev) = cb.pop().unwrap();
+            b1.handle(ev, &mut cb);
+            b1.run_round(&mut cb);
+        }
+        assert!(b1.running_count() > 0, "crash point must leave work in flight");
+        let snap = b1.snapshot_json();
+        let rearm = b1.rearm_events();
+        drop(b1); // the "crash"
+
+        let mut has2 = Has::new(Marp::with_defaults(spec.clone()));
+        let mut b2 = SchedulingEngine::new(&spec, &mut has2, EngineConfig::default());
+        b2.restore_from_json(&snap).expect("restore");
+        let mut cb2 = VirtualClock::new();
+        for (t, ev) in rearm {
+            cb2.schedule(t, ev);
+        }
+        drive(&mut b2, &mut cb2);
+
+        assert_eq!(a.aggregates().n_completed, 3);
+        assert_eq!(
+            canonical_snapshot(&a),
+            canonical_snapshot(&b2),
+            "recovered run must converge to the uninterrupted run's exact state"
+        );
+    }
+
+    #[test]
+    fn rearm_effects_redispatch_running_jobs_with_remaining_delays() {
+        let cfg = EngineConfig { drain_grace_s: 50.0, ..EngineConfig::default() };
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, cfg);
+        let mut clock = VirtualClock::new();
+        engine.handle(ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 1_000_000, 0.0)), &mut clock);
+        engine.handle(ClusterEvent::Arrival(job(2, "gpt2-7b", 2, 1_000_000, 0.0)), &mut clock);
+        let fx = engine.run_round(&mut clock);
+        assert_eq!(fx.placed.len(), 2);
+        let node = engine.decision_log().iter().find(|(id, _)| *id == 1).unwrap().1[0].0;
+        engine.handle(ClusterEvent::NodeLeave(node), &mut clock);
+        assert!(engine.is_running(1), "draining keeps the job running until its deadline");
+
+        let fx = engine.rearm_effects(10.0);
+        assert_eq!(fx.placed.len(), 2, "every running job is re-dispatched");
+        assert!(fx.placed.iter().all(|p| p.start_time == 10.0));
+        assert!(fx.placed.iter().all(|p| p.est_runtime_s >= 0.0));
+        let d = fx.drain_requested.iter().find(|d| d.job == 1).expect("drain re-armed");
+        assert!(d.delay_s <= 50.0 && d.delay_s >= 0.0);
+
+        // The virtual-clock mirror: the drained deadline plus an outcome
+        // for every running job (the drained job's original outcome rides
+        // along; its epoch guard makes it stale once the drain lands).
+        let evs = engine.rearm_events();
+        assert!(evs.iter().any(|(_, e)| matches!(e, ClusterEvent::Drained { job: 1, .. })));
+        let outcomes = evs
+            .iter()
+            .filter(|(_, e)| {
+                matches!(e, ClusterEvent::Finish { .. } | ClusterEvent::Oom { .. })
+            })
+            .count();
+        assert_eq!(outcomes, 2);
     }
 }

@@ -2,6 +2,7 @@
 
 use crate::config::ModelConfig;
 use crate::memory::TrainConfig;
+use crate::util::json::Json;
 
 /// Unique job identifier.
 pub type JobId = u64;
@@ -37,6 +38,52 @@ impl JobSpec {
             total_samples,
             submit_time,
         }
+    }
+
+    /// Serialize for the durability WAL. The model is stored by name —
+    /// every `ModelConfig` comes from the static model table (`name` is
+    /// `&'static str`), so the name is a complete reference.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("id", self.id)
+            .set("name", self.name.as_str())
+            .set("model", self.model.name)
+            .set("global_batch", self.train.global_batch)
+            .set("total_samples", self.total_samples)
+            .set("submit_time", self.submit_time);
+        j
+    }
+
+    /// Rebuild from [`JobSpec::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<JobSpec, String> {
+        let model_name =
+            j.get("model").and_then(Json::as_str).ok_or("job spec: missing 'model'")?;
+        let model = crate::config::models::model_by_name(model_name)
+            .ok_or_else(|| format!("job spec: unknown model '{model_name}'"))?;
+        Ok(JobSpec {
+            id: j.get("id").and_then(Json::as_u64).ok_or("job spec: missing 'id'")?,
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("job spec: missing 'name'")?
+                .to_string(),
+            model,
+            train: TrainConfig {
+                global_batch: j
+                    .get("global_batch")
+                    .and_then(Json::as_u64)
+                    .and_then(|b| u32::try_from(b).ok())
+                    .ok_or("job spec: missing 'global_batch'")?,
+            },
+            total_samples: j
+                .get("total_samples")
+                .and_then(Json::as_u64)
+                .ok_or("job spec: missing 'total_samples'")?,
+            submit_time: j
+                .get("submit_time")
+                .and_then(Json::as_f64)
+                .ok_or("job spec: missing 'submit_time'")?,
+        })
     }
 }
 
@@ -132,5 +179,18 @@ mod tests {
         let j = JobSpec::new(7, model_by_name("gpt2-350m").unwrap(), 8, 1000, 0.0);
         assert!(j.name.contains("gpt2-350m"));
         assert!(j.name.contains("b8"));
+    }
+
+    #[test]
+    fn spec_json_roundtrip_is_exact() {
+        let j = JobSpec::new(7, model_by_name("gpt2-350m").unwrap(), 8, 1000, 12.625);
+        let back = JobSpec::from_json(&j.to_json()).expect("roundtrip");
+        assert_eq!(back, j);
+        // Fractional submit times survive the JSON f64 path exactly.
+        assert_eq!(back.submit_time, 12.625);
+        // Unknown models are rejected, not silently substituted.
+        let mut bad = j.to_json();
+        bad.set("model", "not-a-model");
+        assert!(JobSpec::from_json(&bad).is_err());
     }
 }

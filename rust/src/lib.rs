@@ -32,6 +32,10 @@
 //!   and the live coordinator; it folds results into streaming
 //!   [`metrics::RunAggregates`] and records every event in a bounded
 //!   [`engine::EventLog`] audit ring,
+//! * [`durability`] — crash recovery for the live coordinator: a
+//!   checksummed write-ahead log of every [`engine::ClusterEvent`],
+//!   atomic snapshots, and pure-replay recovery (`frenzy serve
+//!   --data-dir`),
 //! * [`sim`] — discrete-event cluster simulator (the "PAI simulator"
 //!   stand-in): a thin trace feeder over [`engine`] on a virtual clock,
 //! * [`workload`] — NewWorkload / Philly / Helios generators,
@@ -52,6 +56,7 @@ pub mod bench_harness;
 pub mod cli;
 pub mod cluster;
 pub mod config;
+pub mod durability;
 pub mod engine;
 pub mod exp;
 pub mod ilp;

@@ -2,11 +2,12 @@
 //!
 //! ```text
 //! frenzy serve    [--addr 127.0.0.1:8315] [--cluster real] [--sched has]
+//!                 [--data-dir ./frenzy-data] [--fsync every:32]
 //! frenzy submit   --model gpt2-350m --batch 8 --samples 400 [--addr ...]
 //! frenzy status   <job-id> [--addr ...]
 //! frenzy cancel   <job-id> [--addr ...]
 //! frenzy list     [--state running] [--offset 0] [--limit 100] [--addr ...]
-//! frenzy events   [--since 0] [--limit 500] [--follow] [--addr ...]
+//! frenzy events   [--since 0] [--limit 500] [--follow] [--cursor PATH] [--addr ...]
 //! frenzy report   [--addr ...]
 //! frenzy predict  --model gpt2-7b --batch 2 [--addr ... | --cluster real]
 //! frenzy scale    --join --gpu A100-80G --count 4 --link nvlink [--addr ...]
@@ -52,14 +53,19 @@ USAGE:
   frenzy serve    [--addr 127.0.0.1:8315] [--cluster real|sim] [--steps N]
                   [--sched has|sia|opportunistic] [--round-interval S]
                   [--drain-ms M] [--ckpt-steps K]   (graceful-drain tuning)
+                  [--data-dir D] [--fsync always|every:N|interval:S]
+                  [--snapshot-every E]   (WAL + snapshots; crash-recoverable)
   frenzy submit   --model <name> --batch <B> --samples <N> [--addr A]
   frenzy status   <job-id> [--addr A]
   frenzy cancel   <job-id> [--addr A]
   frenzy list     [--state queued|running|completed|rejected|cancelled]
                   [--offset O] [--limit L] [--addr A]
-  frenzy events   [--since SEQ] [--limit L] [--follow] [--wait-ms W] [--addr A]
+  frenzy events   [--since SEQ] [--limit L] [--follow] [--wait-ms W]
+                  [--cursor PATH] [--addr A]
                   (cluster audit log: placements, observed OOMs, drains,
-                   joins/leaves, ...; --follow long-polls, no busy-polling)
+                   joins/leaves, ...; --follow long-polls, no busy-polling;
+                   --cursor persists the last seen seq so a restarted
+                   follower resumes instead of re-printing history)
   frenzy report   [--addr A]    (streaming run report: JCT histogram, drains,
                    memory-prediction accuracy)
   frenzy predict  --model <name> --batch <B> [--addr A | --cluster real|sim]

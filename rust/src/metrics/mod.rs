@@ -240,6 +240,97 @@ impl RunAggregates {
         }
         self.jct_hist.quantile(p / 100.0).min(self.jct_max_s())
     }
+
+    /// Serialize the full accumulator state for durable snapshots.
+    ///
+    /// Exact: floats round-trip through Rust's shortest-representation
+    /// `Display`, so an aggregate restored from this JSON and then fed the
+    /// same tail of events produces a bit-identical [`RunReport`].
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("n_completed", self.n_completed)
+            .set("n_rejected", self.n_rejected)
+            .set("n_cancelled", self.n_cancelled)
+            .set("n_oom_events", self.n_oom_events)
+            .set("n_drains", self.n_drains)
+            .set("jct", running_to_json(&self.jct))
+            .set("queue", running_to_json(&self.queue))
+            .set("sps", running_to_json(&self.sps))
+            .set("mem_pred", running_to_json(&self.mem_pred))
+            .set("makespan", self.makespan)
+            .set("oom_retries", self.oom_retries)
+            .set("steps_executed", self.steps_executed)
+            .set("jct_hist_counts", self.jct_hist.counts().to_vec());
+        j
+    }
+
+    /// Rebuild from [`RunAggregates::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<RunAggregates, String> {
+        let mut agg = RunAggregates::new();
+        agg.n_completed = req_usize(j, "n_completed")?;
+        agg.n_rejected = req_usize(j, "n_rejected")?;
+        agg.n_cancelled = req_usize(j, "n_cancelled")?;
+        agg.n_oom_events = req_u64(j, "n_oom_events")?;
+        agg.n_drains = req_u64(j, "n_drains")?;
+        agg.jct = running_from_json(j.get("jct").ok_or("missing field 'jct'")?)?;
+        agg.queue = running_from_json(j.get("queue").ok_or("missing field 'queue'")?)?;
+        agg.sps = running_from_json(j.get("sps").ok_or("missing field 'sps'")?)?;
+        agg.mem_pred = running_from_json(j.get("mem_pred").ok_or("missing field 'mem_pred'")?)?;
+        agg.makespan = req_f64(j, "makespan")?;
+        agg.oom_retries = req_u64(j, "oom_retries")?;
+        agg.steps_executed = req_u64(j, "steps_executed")?;
+        let counts = j
+            .get("jct_hist_counts")
+            .and_then(Json::as_arr)
+            .ok_or("missing field 'jct_hist_counts'")?;
+        let counts: Vec<u64> = counts
+            .iter()
+            .map(|c| c.as_u64().ok_or_else(|| "bad histogram count".to_string()))
+            .collect::<Result<_, _>>()?;
+        if counts.len() != JCT_HIST_BUCKETS + 1 {
+            return Err(format!("histogram shape mismatch: {} buckets", counts.len()));
+        }
+        agg.jct_hist.restore_counts(counts);
+        Ok(agg)
+    }
+}
+
+fn req_f64(j: &Json, k: &str) -> Result<f64, String> {
+    j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing field '{k}'"))
+}
+
+fn req_u64(j: &Json, k: &str) -> Result<u64, String> {
+    j.get(k).and_then(Json::as_u64).ok_or_else(|| format!("missing field '{k}'"))
+}
+
+fn req_usize(j: &Json, k: &str) -> Result<usize, String> {
+    j.get(k).and_then(Json::as_usize).ok_or_else(|| format!("missing field '{k}'"))
+}
+
+/// [`Running`] state as JSON. Empty accumulators hold non-finite min/max
+/// sentinels that JSON cannot carry, so min/max are only emitted when
+/// `n > 0` and restored to the sentinels otherwise.
+fn running_to_json(r: &Running) -> Json {
+    let (n, mean, m2, min, max, sum) = r.to_parts();
+    let mut j = Json::obj();
+    j.set("n", n).set("mean", mean).set("m2", m2).set("sum", sum);
+    if n > 0 {
+        j.set("min", min).set("max", max);
+    }
+    j
+}
+
+fn running_from_json(j: &Json) -> Result<Running, String> {
+    let n = req_u64(j, "n")?;
+    let mean = req_f64(j, "mean")?;
+    let m2 = req_f64(j, "m2")?;
+    let sum = req_f64(j, "sum")?;
+    let (min, max) = if n == 0 {
+        (f64::INFINITY, f64::NEG_INFINITY)
+    } else {
+        (req_f64(j, "min")?, req_f64(j, "max")?)
+    };
+    Ok(Running::from_parts(n, mean, m2, min, max, sum))
 }
 
 /// Aggregated results of one scheduling run (simulated or live) — a
@@ -580,6 +671,35 @@ mod tests {
         let b = RunReport::from_outcomes("b", "w", &[outcome(0.0, 0.0, 100.0, 8.0, 1)], 0, 0, 0.0, 0.5);
         assert!((a.jct_reduction_vs(&b) - 0.2).abs() < 1e-9);
         assert!((a.samples_gain_vs(&b) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregates_snapshot_roundtrip_is_exact() {
+        let mut agg = RunAggregates::new();
+        agg.record_completed(0.1, 1.7, 10.03, 5.25, 3);
+        agg.record_completed(2.0, 3.0, 700.5, 1.125, 1);
+        agg.record_rejected();
+        agg.record_cancelled();
+        agg.record_oom_event();
+        agg.record_drained(70);
+        agg.record_run_steps(40);
+        agg.record_mem_prediction(95, 100);
+        let j = agg.to_json();
+        let text = j.to_string_compact();
+        let back = RunAggregates::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        let a = RunReport::from_aggregates("s", "w", &agg, 0, 3, 0.0, 0.25);
+        let b = RunReport::from_aggregates("s", "w", &back, 0, 3, 0.0, 0.25);
+        assert_eq!(a.to_json().to_string_compact(), b.to_json().to_string_compact());
+        // Empty aggregates (non-finite min/max sentinels) round-trip too.
+        let empty = RunAggregates::new();
+        let back =
+            RunAggregates::from_json(&parse_back(&empty.to_json())).expect("empty roundtrip");
+        assert_eq!(back.n_terminal(), 0);
+        assert_eq!(back.jct_min_s(), 0.0);
+    }
+
+    fn parse_back(j: &Json) -> Json {
+        crate::util::json::parse(&j.to_string_compact()).unwrap()
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! paths resumed from the *same* snapshot, not merely the same step count.
 
 use crate::job::JobId;
+use crate::util::json::Json;
 use std::collections::HashMap;
 
 /// One saved snapshot.
@@ -81,6 +82,41 @@ impl CheckpointStore {
 
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+
+    /// Serialize for a durable snapshot (ascending job order, so identical
+    /// stores always serialize to identical bytes).
+    pub fn to_json(&self) -> Json {
+        let mut jobs: Vec<&Checkpoint> = self.map.values().collect();
+        jobs.sort_by_key(|c| c.job);
+        let arr: Vec<Json> = jobs
+            .into_iter()
+            .map(|c| {
+                let mut j = Json::obj();
+                j.set("job", c.job)
+                    .set("steps_done", c.steps_done)
+                    .set("state_digest", c.state_digest);
+                j
+            })
+            .collect();
+        Json::Arr(arr)
+    }
+
+    /// Rebuild from [`CheckpointStore::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<CheckpointStore, String> {
+        let arr = j.as_arr().ok_or("checkpoint store: not an array")?;
+        let mut store = CheckpointStore::new();
+        for c in arr {
+            let field = |k: &str| {
+                c.get(k).and_then(Json::as_u64).ok_or_else(|| format!("checkpoint: missing '{k}'"))
+            };
+            store.save(Checkpoint {
+                job: field("job")?,
+                steps_done: field("steps_done")?,
+                state_digest: field("state_digest")?,
+            });
+        }
+        Ok(store)
     }
 }
 

@@ -18,6 +18,7 @@
 
 use crate::cluster::NodeId;
 use crate::job::JobId;
+use crate::util::json::Json;
 use std::collections::BTreeMap;
 
 /// A memory charge that did not fit its device.
@@ -146,6 +147,63 @@ impl DeviceMemory {
             }
         }
         used == self.used
+    }
+
+    /// Serialize the ledger for a durable snapshot: per-node capacities
+    /// plus the outstanding charges. Per-node used bytes are recomputed on
+    /// restore, so the round trip re-establishes the conservation invariant
+    /// by construction.
+    pub fn to_json(&self) -> Json {
+        let charges: Vec<Json> = self
+            .charges
+            .iter()
+            .map(|(&job, charge)| {
+                let parts: Vec<Json> = charge
+                    .iter()
+                    .map(|&(n, g, b)| {
+                        Json::from(vec![Json::from(n), Json::from(g), Json::from(b)])
+                    })
+                    .collect();
+                let mut c = Json::obj();
+                c.set("job", job).set("parts", Json::Arr(parts));
+                c
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("capacity_per_gpu", self.capacity_per_gpu.clone()).set("charges", Json::Arr(charges));
+        j
+    }
+
+    /// Rebuild from [`DeviceMemory::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<DeviceMemory, String> {
+        let caps = j
+            .get("capacity_per_gpu")
+            .and_then(Json::as_arr)
+            .ok_or("missing field 'capacity_per_gpu'")?;
+        let caps: Vec<u64> = caps
+            .iter()
+            .map(|c| c.as_u64().ok_or("bad capacity".to_string()))
+            .collect::<Result<_, _>>()?;
+        let mut d = DeviceMemory::new(caps);
+        let charges = j.get("charges").and_then(Json::as_arr).ok_or("missing field 'charges'")?;
+        for c in charges {
+            let job = c.get("job").and_then(Json::as_u64).ok_or("charge: no job")?;
+            let parts = c.get("parts").and_then(Json::as_arr).ok_or("charge: no parts")?;
+            let mut charge = Charge::with_capacity(parts.len());
+            for p in parts {
+                let t = p.as_arr().filter(|a| a.len() == 3).ok_or("charge: bad part")?;
+                let node = t[0].as_usize().ok_or("charge: bad node")?;
+                let gpus = t[1].as_u64().ok_or("charge: bad gpus")? as u32;
+                let bytes = t[2].as_u64().ok_or("charge: bad bytes")?;
+                if node >= d.used.len() {
+                    return Err(format!("charge: node {node} out of range"));
+                }
+                d.used[node] += bytes * gpus as u64;
+                charge.push((node, gpus, bytes));
+            }
+            d.charges.insert(job, charge);
+        }
+        Ok(d)
     }
 }
 

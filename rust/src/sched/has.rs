@@ -271,8 +271,14 @@ impl Scheduler for Has {
             }
         } else {
             // Reference path: the pre-index implementation, full scans over
-            // a cloned snapshot. Kept as the differential oracle.
+            // a cloned snapshot. Kept as the differential oracle. Draining
+            // nodes are hidden by zeroing their idle counts in the clone —
+            // the same capacity the indexed overlay pre-takes, so the two
+            // paths keep producing byte-identical decisions and work units.
             let mut snap = view.state().clone();
+            for &n in view.draining() {
+                snap.nodes[n].idle = 0;
+            }
             for job in pending.iter() {
                 let mut work = 0u64;
                 let placed = {
@@ -497,6 +503,72 @@ mod tests {
             assert_eq!(a.par, b.par);
             assert_eq!(a.will_oom, b.will_oom);
             assert_eq!(a.gpu, b.gpu);
+        }
+    }
+
+    #[test]
+    fn drain_aware_has_avoids_retiring_node_blind_best_fit_picks() {
+        // A 4×(50 GiB) request: best-fit on the full testbed picks node 2,
+        // the only single node with four 80G GPUs. When node 2 is in
+        // graceful drain the same request must split across the two
+        // 2×A100-80 nodes instead — and both execution strategies must
+        // pack the identical parts with identical work units.
+        use crate::marp::ResourcePlan;
+        let plan = ResourcePlan {
+            par: crate::memory::Parallelism::new(4, 1),
+            n_gpus: 4,
+            min_gpu_mem: 50 * GIB,
+            predicted_bytes: 48 * GIB,
+            est_samples_per_sec: 1.0,
+            est_efficiency: 1.0,
+            score: 1.0,
+        };
+        let snap = ClusterState::from_spec(&real_testbed());
+        let mut work = 0;
+        let (_, blind) =
+            Has::allocate_one(std::slice::from_ref(&plan), &snap, &mut work).expect("place");
+        assert_eq!(blind.parts, vec![(2usize, 4u32)], "drain-blind best-fit → node 2");
+
+        let view = ClusterView::build(&snap).with_draining([2].into_iter().collect());
+        let mut drained = snap.clone();
+        for &n in view.draining() {
+            drained.nodes[n].idle = 0;
+        }
+        let mut w_naive = 0;
+        let (_, naive) = Has::allocate_one(std::slice::from_ref(&plan), &drained, &mut w_naive)
+            .expect("must place around the drain");
+        assert!(naive.parts.iter().all(|&(n, _)| n != 2), "landed on draining node: {naive:?}");
+        assert_eq!(naive.total_gpus(), 4, "greedy spill across the A100-80 nodes");
+        let mut ov = view.overlay();
+        let mut w_idx = 0;
+        let (_, idx) = Has::allocate_one_indexed(std::slice::from_ref(&plan), &mut ov, &mut w_idx)
+            .expect("must place around the drain");
+        assert_eq!(idx.parts, naive.parts);
+        assert_eq!(w_idx, w_naive);
+    }
+
+    #[test]
+    fn schedule_queues_rather_than_land_on_draining_node() {
+        // Only node 2 has idle GPUs. A drain-blind scheduler places the job
+        // there; once node 2 drains, HAS must hold the job in the queue
+        // instead of landing it on retiring hardware.
+        let mut snap = ClusterState::from_spec(&real_testbed());
+        for n in &mut snap.nodes {
+            if n.id != 2 {
+                n.idle = 0;
+            }
+        }
+        let blind = ClusterView::build(&snap);
+        let round = has().schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &blind, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        assert!(round.decisions[0].alloc.parts.iter().all(|&(n, _)| n == 2));
+
+        for indexed in [true, false] {
+            let view = ClusterView::build(&snap).with_draining([2].into_iter().collect());
+            let mut h = has();
+            h.indexed = indexed;
+            let round = h.schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &view, 0.0);
+            assert!(round.decisions.is_empty(), "indexed={indexed}: must wait out the drain");
         }
     }
 

@@ -106,7 +106,11 @@ impl Scheduler for Opportunistic {
             // that is the point: allocations fragment across nodes, paying
             // the cross-node communication the paper's Node(4,40) example
             // warns about, while HAS's best-fit keeps jobs on single nodes.
-            let mut order: Vec<usize> = (0..snapshot.nodes.len()).filter(|&i| idle[i] > 0).collect();
+            // Draining nodes are excluded: even a memory-oblivious user's
+            // scheduler refuses to land new work on retiring hardware.
+            let mut order: Vec<usize> = (0..snapshot.nodes.len())
+                .filter(|&i| idle[i] > 0 && !view.is_draining(i))
+                .collect();
             order.sort_by(|&a, &b| {
                 let na = &snapshot.nodes[a];
                 let nb = &snapshot.nodes[b];
@@ -239,6 +243,29 @@ mod tests {
         if d.gpu.mem_bytes <= 40 * GIB {
             assert!(d.will_oom, "2.7B at t={} on 40G must OOM", d.par.t);
         }
+    }
+
+    #[test]
+    fn greedy_skips_draining_node() {
+        // Only node 2 has idle GPUs. The drain-blind greedy lands there;
+        // with node 2 draining, even this memory-oblivious baseline must
+        // leave the job queued rather than place it on retiring hardware.
+        let spec = real_testbed();
+        let mut o = Opportunistic::new(&spec);
+        let mut snap = ClusterState::from_spec(&spec);
+        for n in &mut snap.nodes {
+            if n.id != 2 {
+                n.idle = 0;
+            }
+        }
+        let blind = ClusterView::build(&snap);
+        let round = o.schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &blind, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        assert!(round.decisions[0].alloc.parts.iter().all(|&(n, _)| n == 2));
+
+        let view = ClusterView::build(&snap).with_draining([2].into_iter().collect());
+        let round = o.schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &view, 0.0);
+        assert!(round.decisions.is_empty());
     }
 
     #[test]

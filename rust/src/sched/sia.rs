@@ -225,12 +225,25 @@ impl Scheduler for Sia {
         if pending.is_empty() {
             return round;
         }
+        // Per-node idle capacity with draining nodes masked out — a node in
+        // graceful drain must not receive new placements, however much idle
+        // capacity a (possibly stale) view still shows on it.
+        let idle_mask: Vec<u32> = snapshot
+            .nodes
+            .iter()
+            .map(|n| if view.is_draining(n.id) { 0 } else { n.idle })
+            .collect();
         // Per-type idle capacity.
         let idle_per_type: Vec<u32> = self
             .type_names
             .iter()
             .map(|t| {
-                snapshot.nodes.iter().filter(|n| n.gpu.name == *t).map(|n| n.idle).sum::<u32>()
+                snapshot
+                    .nodes
+                    .iter()
+                    .filter(|n| n.gpu.name == *t)
+                    .map(|n| idle_mask[n.id])
+                    .sum::<u32>()
             })
             .collect();
 
@@ -252,8 +265,8 @@ impl Scheduler for Sia {
         let sol = ilp::solve(&problem, self.node_limit);
         round.work_units = sol.nodes_explored;
 
-        // Realize assignments.
-        let mut idle: Vec<u32> = snapshot.nodes.iter().map(|n| n.idle).collect();
+        // Realize assignments (on the drain-masked idle capacity).
+        let mut idle: Vec<u32> = idle_mask;
         for (ji, choice) in sol.chosen.iter().enumerate() {
             let Some(item_idx) = choice else { continue };
             let c = &cands[*item_idx];
@@ -361,6 +374,29 @@ mod tests {
         if let Some(d) = round3.decisions.first() {
             assert!(!d.will_oom, "after retries the user sizes memory properly");
         }
+    }
+
+    #[test]
+    fn ilp_never_assigns_capacity_on_draining_node() {
+        // Only node 2 (4×A800) has idle GPUs. Drain-blind Sia places the
+        // job there; once the node drains its capacity must vanish from the
+        // ILP's per-type totals and the job stays queued.
+        let spec = real_testbed();
+        let mut snap = ClusterState::from_spec(&spec);
+        for n in &mut snap.nodes {
+            if n.id != 2 {
+                n.idle = 0;
+            }
+        }
+        let blind = ClusterView::build(&snap);
+        let mut s = Sia::new(&spec);
+        let round = s.schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &blind, 0.0);
+        assert_eq!(round.decisions.len(), 1);
+        assert!(round.decisions[0].alloc.parts.iter().all(|&(n, _)| n == 2));
+
+        let view = ClusterView::build(&snap).with_draining([2].into_iter().collect());
+        let round = s.schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &view, 0.0);
+        assert!(round.decisions.is_empty(), "capacity on a draining node is not schedulable");
     }
 
     #[test]

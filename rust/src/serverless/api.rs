@@ -797,6 +797,62 @@ impl ClusterInfoV1 {
     }
 }
 
+/// `GET /v1/durability` — WAL position, size, and snapshot freshness.
+/// `snapshot_seq` / `snapshot_age_s` are omitted on the wire until the
+/// first snapshot exists; everything is zero when the server runs without
+/// `--data-dir` (`enabled: false`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DurabilityV1 {
+    pub enabled: bool,
+    pub last_seq: u64,
+    pub wal_bytes: u64,
+    pub wal_segments: u64,
+    pub snapshot_seq: Option<u64>,
+    pub snapshot_age_s: Option<f64>,
+}
+
+impl DurabilityV1 {
+    pub fn from_status(s: &crate::durability::DurabilityStatus) -> Self {
+        Self {
+            enabled: s.enabled,
+            last_seq: s.last_seq,
+            wal_bytes: s.wal_bytes,
+            wal_segments: s.wal_segments,
+            snapshot_seq: s.snapshot_seq,
+            snapshot_age_s: s.snapshot_age_s,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("enabled", self.enabled)
+            .set("last_seq", self.last_seq)
+            .set("wal_bytes", self.wal_bytes)
+            .set("wal_segments", self.wal_segments);
+        if let Some(seq) = self.snapshot_seq {
+            j.set("snapshot_seq", seq);
+        }
+        if let Some(age) = self.snapshot_age_s {
+            j.set("snapshot_age_s", age);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            enabled: j.get("enabled").and_then(Json::as_bool).ok_or("missing 'enabled'")?,
+            last_seq: j.get("last_seq").and_then(Json::as_u64).ok_or("missing 'last_seq'")?,
+            wal_bytes: j.get("wal_bytes").and_then(Json::as_u64).ok_or("missing 'wal_bytes'")?,
+            wal_segments: j
+                .get("wal_segments")
+                .and_then(Json::as_u64)
+                .ok_or("missing 'wal_segments'")?,
+            snapshot_seq: j.get("snapshot_seq").and_then(Json::as_u64),
+            snapshot_age_s: j.get("snapshot_age_s").and_then(Json::as_f64),
+        })
+    }
+}
+
 /// One cluster event on the wire — the element type of
 /// `GET /v1/cluster/events`.
 ///
@@ -1484,6 +1540,38 @@ mod tests {
             roundtrip(&resp, ListResponseV1::to_json, ListResponseV1::from_json);
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_durability_roundtrip() {
+        Runner::new("durability dto roundtrip", 0xDAB1E, 150).run(|g| {
+            let has_snap = g.bool();
+            let v = DurabilityV1 {
+                enabled: g.bool(),
+                last_seq: g.u64_in(0, MAX_EXACT),
+                wal_bytes: g.u64_in(0, MAX_EXACT),
+                wal_segments: g.u64_in(1, 1000),
+                snapshot_seq: if has_snap { Some(g.u64_in(0, MAX_EXACT)) } else { None },
+                snapshot_age_s: if has_snap { Some(g.f64_in(0.0, 1e6)) } else { None },
+            };
+            roundtrip(&v, DurabilityV1::to_json, DurabilityV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn durability_json_omits_absent_snapshot_keys() {
+        let v = DurabilityV1 {
+            enabled: false,
+            last_seq: 0,
+            wal_bytes: 0,
+            wal_segments: 0,
+            snapshot_seq: None,
+            snapshot_age_s: None,
+        };
+        let wire = v.to_json().to_string_compact();
+        assert!(!wire.contains("snapshot_seq"), "absent snapshot serialized: {wire}");
+        assert!(!wire.contains("snapshot_age_s"), "absent snapshot age serialized: {wire}");
     }
 
     #[test]

@@ -16,9 +16,9 @@
 //! connection is re-established transparently (one retry per request).
 
 use super::api::{
-    ApiError, CancelResponseV1, ClusterInfoV1, EventsRequestV1, EventsResponseV1, JobStatusV1,
-    ListRequestV1, ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1, ScaleRequestV1,
-    ScaleResponseV1, SubmitRequestV1, SubmitResponseV1,
+    ApiError, CancelResponseV1, ClusterInfoV1, DurabilityV1, EventsRequestV1, EventsResponseV1,
+    JobStatusV1, ListRequestV1, ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1,
+    ScaleRequestV1, ScaleResponseV1, SubmitRequestV1, SubmitResponseV1,
 };
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Context, Result};
@@ -277,6 +277,13 @@ impl FrenzyClient {
     pub fn report(&mut self) -> Result<ReportV1> {
         let j = self.call("GET", "/v1/report", "", true)?;
         ReportV1::from_json(&j).map_err(|e| anyhow!(e))
+    }
+
+    /// `GET /v1/durability` — WAL/snapshot status; `enabled: false` when
+    /// the server runs without `--data-dir`.
+    pub fn durability(&mut self) -> Result<DurabilityV1> {
+        let j = self.call("GET", "/v1/durability", "", true)?;
+        DurabilityV1::from_json(&j).map_err(|e| anyhow!(e))
     }
 
     /// `POST /v1/cluster/scale` — elastic join/leave. Not idempotent (a

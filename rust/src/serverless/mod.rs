@@ -58,6 +58,9 @@ pub mod server;
 
 use crate::cluster::ClusterState;
 use crate::config::{ClusterSpec, LinkKind, NodeSpec};
+use crate::durability::{
+    recover, DurabilityStatus, FsyncPolicy, SharedJournal, SnapshotStore, Wal, WalRecord,
+};
 use crate::engine::clock::{Clock, WallClock};
 use crate::engine::{
     ClusterEvent, Effects, EngineConfig, EventKind, EventsPage, PlacementRecord, RejectReason,
@@ -69,8 +72,11 @@ use crate::memory::TrainConfig;
 use crate::metrics::RunReport;
 use crate::runtime::executor::{TrainExecutor, TrainRequest, TrainResult};
 use crate::sched::{has::Has, opportunistic::Opportunistic, sia::Sia, Scheduler};
+use crate::util::json::Json;
 use anyhow::{anyhow, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 use std::sync::mpsc;
 
 /// What a user submits: the serverless API surface.
@@ -209,6 +215,8 @@ enum Msg {
     /// Round-timer tick: interval schedulers (Sia) execute their deferred
     /// round now. Sent by the timer thread, never by clients.
     Tick,
+    /// Durability state for `GET /v1/durability`.
+    Durability(mpsc::Sender<DurabilityStatus>),
     Drain(mpsc::Sender<()>),
     Shutdown,
 }
@@ -329,6 +337,12 @@ impl Handle {
         self.ask(Msg::Decisions)
     }
 
+    /// Durability state: WAL position, bytes, and snapshot freshness
+    /// (`GET /v1/durability`). `enabled` is false without `--data-dir`.
+    pub fn durability(&self) -> Result<DurabilityStatus> {
+        self.ask(Msg::Durability)
+    }
+
     /// Block until every submitted job reached a terminal state.
     pub fn drain(&self) -> Result<()> {
         self.ask(Msg::Drain)
@@ -441,6 +455,16 @@ pub struct CoordinatorConfig {
     /// bounded. An evicted job's `GET /v1/jobs/<id>` returns 404 and it no
     /// longer appears in listings; queued/running jobs are never evicted.
     pub retain_terminal_jobs: usize,
+    /// Durability root (`frenzy serve --data-dir`): the WAL lives under
+    /// `<dir>/wal`, snapshots under `<dir>/snapshots`. `None` (the
+    /// default) runs the coordinator fully in memory, exactly as before.
+    pub data_dir: Option<std::path::PathBuf>,
+    /// WAL fsync policy (see [`FsyncPolicy`]); ignored without
+    /// [`CoordinatorConfig::data_dir`].
+    pub fsync: FsyncPolicy,
+    /// Take a snapshot (and prune covered WAL segments) every this many
+    /// WAL records. Bounds recovery replay time.
+    pub snapshot_every: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -461,6 +485,9 @@ impl Default for CoordinatorConfig {
             runtime_model: "gpt2-tiny".into(),
             stub_delay_ms: 0,
             retain_terminal_jobs: 16_384,
+            data_dir: None,
+            fsync: FsyncPolicy::EveryN(32),
+            snapshot_every: 256,
         }
     }
 }
@@ -627,6 +654,227 @@ fn apply_effects(
     }
 }
 
+/// Durable-mode state owned by the coordinator loop. The WAL is shared
+/// (via `Rc<RefCell<_>>`, thread-local to the coordinator) between the
+/// engine's [`SharedJournal`] sink and the coordinator's own record
+/// appends (admission rejects, losses).
+struct Durability {
+    wal: Rc<RefCell<Wal>>,
+    store: SnapshotStore,
+    /// Newest snapshot: (covered WAL seq, engine time it was taken).
+    snap: Option<(u64, f64)>,
+}
+
+fn losses_to_json(losses: &[(u64, f32)]) -> Json {
+    Json::Arr(
+        losses
+            .iter()
+            .map(|&(step, loss)| {
+                // NaN/inf (a diverged run) has no JSON number form; null
+                // round-trips it.
+                let l = if loss.is_finite() { Json::from(loss as f64) } else { Json::Null };
+                Json::Arr(vec![Json::from(step), l])
+            })
+            .collect(),
+    )
+}
+
+fn losses_from_json(j: &Json) -> Result<Vec<(u64, f32)>, String> {
+    let arr = j.as_arr().ok_or("coord: bad losses")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for e in arr {
+        let Some([step, loss]) = e.as_arr() else {
+            return Err("coord: bad loss entry".into());
+        };
+        let step = step.as_u64().ok_or("coord: bad loss step")?;
+        let loss = match loss {
+            Json::Null => f32::NAN,
+            other => other.as_f64().ok_or("coord: bad loss value")? as f32,
+        };
+        out.push((step, loss));
+    }
+    Ok(out)
+}
+
+/// Serialize the coordinator-local state — everything the engine snapshot
+/// does not already hold — for the durability snapshot.
+fn coord_to_json(
+    jobs: &HashMap<JobId, LiveJob>,
+    next_id: JobId,
+    admission_rejected: usize,
+    retention: &RetentionQueue,
+) -> Json {
+    let mut by_id: Vec<&LiveJob> = jobs.values().collect();
+    by_id.sort_by_key(|j| j.spec.id);
+    let jobs_json: Vec<Json> = by_id
+        .into_iter()
+        .map(|j| {
+            let mut o = Json::obj();
+            o.set("spec", j.spec.to_json())
+                .set("state", api::state_to_str(j.state))
+                .set("gpus", j.gpus)
+                .set("losses", losses_to_json(&j.losses))
+                .set("submit_t", j.submit_t)
+                .set("attempts", j.attempts);
+            if let Some(t) = j.start_t {
+                o.set("start_t", t);
+            }
+            if let Some(t) = j.finish_t {
+                o.set("finish_t", t);
+            }
+            o
+        })
+        .collect();
+    let mut j = Json::obj();
+    j.set("next_id", next_id)
+        .set("admission_rejected", admission_rejected)
+        .set("retention", Json::Arr(retention.ids().map(Json::from).collect()))
+        .set("jobs", Json::Arr(jobs_json));
+    j
+}
+
+/// Inverse of [`coord_to_json`]: the job table, id counter, admission
+/// reject count, and terminal-retention order (oldest first).
+#[allow(clippy::type_complexity)]
+fn coord_from_json(
+    j: &Json,
+) -> Result<(HashMap<JobId, LiveJob>, JobId, usize, Vec<JobId>), String> {
+    let next_id = j.get("next_id").and_then(Json::as_u64).ok_or("coord: missing 'next_id'")?;
+    let admission_rejected = j
+        .get("admission_rejected")
+        .and_then(Json::as_usize)
+        .ok_or("coord: missing 'admission_rejected'")?;
+    let retained: Vec<JobId> = j
+        .get("retention")
+        .and_then(Json::as_arr)
+        .ok_or("coord: missing 'retention'")?
+        .iter()
+        .map(|e| e.as_u64().ok_or_else(|| "coord: bad retention id".to_string()))
+        .collect::<Result<_, _>>()?;
+    let mut jobs = HashMap::new();
+    for e in j.get("jobs").and_then(Json::as_arr).ok_or("coord: missing 'jobs'")? {
+        let spec = JobSpec::from_json(e.get("spec").ok_or("coord: job missing 'spec'")?)?;
+        let job = LiveJob {
+            state: e
+                .get("state")
+                .and_then(Json::as_str)
+                .and_then(api::state_from_str)
+                .ok_or("coord: job missing 'state'")?,
+            gpus: e
+                .get("gpus")
+                .and_then(Json::as_u64)
+                .and_then(|g| u32::try_from(g).ok())
+                .ok_or("coord: job missing 'gpus'")?,
+            losses: losses_from_json(e.get("losses").ok_or("coord: job missing 'losses'")?)?,
+            submit_t: e
+                .get("submit_t")
+                .and_then(Json::as_f64)
+                .ok_or("coord: job missing 'submit_t'")?,
+            start_t: e.get("start_t").and_then(Json::as_f64),
+            finish_t: e.get("finish_t").and_then(Json::as_f64),
+            attempts: e
+                .get("attempts")
+                .and_then(Json::as_u64)
+                .and_then(|a| u32::try_from(a).ok())
+                .ok_or("coord: job missing 'attempts'")?,
+            spec,
+        };
+        jobs.insert(job.spec.id, job);
+    }
+    Ok((jobs, next_id, admission_rejected, retained))
+}
+
+/// Fold one recovered WAL step into the coordinator's job table — the
+/// same bookkeeping each live message arm performs, replayed from the
+/// log. The engine part already replayed inside [`recover`]; this mirrors
+/// only the coordinator-local mutations around it. Transient pending /
+/// running states are reconciled against the engine afterwards (see the
+/// recovery block in `coordinator_loop`).
+fn fold_tail_step(
+    step: &crate::durability::TailStep,
+    jobs: &mut HashMap<JobId, LiveJob>,
+    retention: &mut RetentionQueue,
+    next_id: &mut JobId,
+    admission_rejected: &mut usize,
+) -> Result<(), String> {
+    match &step.rec {
+        WalRecord::Event { time, ev } => {
+            match ev {
+                ClusterEvent::Arrival(spec) => {
+                    *next_id = (*next_id).max(spec.id + 1);
+                    jobs.insert(
+                        spec.id,
+                        LiveJob {
+                            spec: spec.clone(),
+                            state: JobState::Queued,
+                            gpus: 0,
+                            losses: Vec::new(),
+                            submit_t: spec.submit_time,
+                            start_t: None,
+                            finish_t: None,
+                            attempts: 0,
+                        },
+                    );
+                }
+                ClusterEvent::Cancel { job } => {
+                    let cancellable = jobs
+                        .get(job)
+                        .is_some_and(|j| matches!(j.state, JobState::Queued | JobState::Running));
+                    if cancellable {
+                        if let Some(j) = jobs.get_mut(job) {
+                            j.state = JobState::Cancelled;
+                            j.finish_t = Some(*time);
+                        }
+                        note_terminal(jobs, retention, *job);
+                    }
+                }
+                _ => {}
+            }
+            let fx = step.effects.as_ref().ok_or("recovery: event step without effects")?;
+            if let ClusterEvent::Finish { job, .. } = ev {
+                if fx.finished.contains(job) {
+                    if let Some(j) = jobs.get_mut(job) {
+                        j.state = JobState::Completed;
+                        j.finish_t = Some(*time);
+                    }
+                    note_terminal(jobs, retention, *job);
+                }
+            }
+            apply_effects(fx, jobs, retention, *time);
+        }
+        WalRecord::Round { time, .. } => {
+            let fx = step.effects.as_ref().ok_or("recovery: round step without effects")?;
+            apply_effects(fx, jobs, retention, *time);
+        }
+        WalRecord::AdmissionReject { time, job, model, batch, samples } => {
+            let model_cfg = crate::config::models::model_by_name(model)
+                .ok_or_else(|| format!("recovery: unknown model '{model}'"))?;
+            *next_id = (*next_id).max(*job + 1);
+            *admission_rejected += 1;
+            jobs.insert(
+                *job,
+                LiveJob {
+                    spec: JobSpec::new(*job, model_cfg, *batch, *samples, *time),
+                    state: JobState::Rejected,
+                    gpus: 0,
+                    losses: Vec::new(),
+                    submit_t: *time,
+                    start_t: None,
+                    finish_t: Some(*time),
+                    attempts: 0,
+                },
+            );
+            note_terminal(jobs, retention, *job);
+        }
+        WalRecord::Losses { job, losses } => {
+            if let Some(j) = jobs.get_mut(job) {
+                j.losses = losses.clone();
+            }
+        }
+    }
+    Ok(())
+}
+
 fn coordinator_loop(
     spec: ClusterSpec,
     cfg: CoordinatorConfig,
@@ -715,6 +963,71 @@ fn coordinator_loop(
         None
     };
 
+    // ---- Durability: recover, re-arm, then go live ----------------------
+    // Order matters: (1) restore the snapshot and replay the WAL tail
+    // through the ordinary event path, (2) resume the wall clock at the
+    // recovered engine time, (3) re-arm live timers / re-dispatch running
+    // jobs, (4) attach the journal — last, so recovery is never
+    // re-journaled. A durability failure at startup is fatal by design: a
+    // coordinator that cannot read or write its own log must not serve.
+    let mut durable: Option<Durability> = None;
+    if let Some(root) = &cfg.data_dir {
+        let (wal, records) =
+            Wal::open(&root.join("wal"), cfg.fsync).expect("durability: open WAL");
+        let store =
+            SnapshotStore::new(&root.join("snapshots")).expect("durability: snapshot store");
+        let snapshot = store.load_newest().expect("durability: load snapshot");
+        let snap_meta = snapshot
+            .as_ref()
+            .map(|(seq, j)| (*seq, j.get("time").and_then(Json::as_f64).unwrap_or(0.0)));
+        let recovered = recover(&mut engine, snapshot, records).expect("durability: replay WAL");
+        if let Some(cj) = &recovered.coord {
+            let (restored, nid, rejected, retained) =
+                coord_from_json(cj).expect("durability: coord snapshot");
+            jobs = restored;
+            next_id = nid;
+            admission_rejected = rejected;
+            retention = RetentionQueue::new(cfg.retain_terminal_jobs);
+            for id in retained {
+                for old in retention.note(id) {
+                    jobs.remove(&old);
+                }
+            }
+        }
+        for step in &recovered.tail {
+            fold_tail_step(step, &mut jobs, &mut retention, &mut next_id, &mut admission_rejected)
+                .expect("durability: fold WAL tail");
+        }
+        // The engine is the source of truth for non-terminal job states:
+        // any transient divergence in the fold (e.g. an OOM requeue that a
+        // later placement superseded) reconciles here, through the same
+        // queries the live arms use.
+        for (id, j) in jobs.iter_mut() {
+            if engine.is_pending(*id) {
+                j.state = JobState::Queued;
+                j.gpus = 0;
+            } else if engine.is_running(*id) {
+                j.state = JobState::Running;
+            }
+        }
+        if recovered.last_seq > 0 {
+            wall = WallClock::resumed_at(recovered.engine_time, round_interval.is_some());
+        }
+        // Admission MARP follows the recovered (possibly scaled) topology.
+        marp_topology =
+            (engine.cluster_state().nodes.len(), engine.cluster_state().total_gpus());
+        marp = Marp::with_defaults(engine.cluster_state().to_spec("scaled"));
+        // Re-arm: re-dispatch executor work for recovered running jobs and
+        // restart OOM-observe / drain-deadline timers with their remaining
+        // delays.
+        let fx = engine.rearm_effects(wall.now());
+        apply_effects(&fx, &mut jobs, &mut retention, wall.now());
+        dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
+        let wal = Rc::new(RefCell::new(wal));
+        engine.set_journal(Box::new(SharedJournal(wal.clone())));
+        durable = Some(Durability { wal, store, snap: snap_meta });
+    }
+
     loop {
         let msg = match rx.recv() {
             Ok(m) => m,
@@ -751,6 +1064,21 @@ fn coordinator_loop(
                     },
                 );
                 if plans.is_empty() {
+                    // Persist-before-effect: the reject record reaches the
+                    // WAL before the caller's ack (the Arrival path gets
+                    // the same guarantee inside `engine.handle`).
+                    if let Some(d) = &durable {
+                        d.wal
+                            .borrow_mut()
+                            .append(&WalRecord::AdmissionReject {
+                                time: clock,
+                                job: id,
+                                model: req.model.clone(),
+                                batch: req.global_batch,
+                                samples: req.total_samples,
+                            })
+                            .expect("durability: WAL append failed");
+                    }
                     admission_rejected += 1;
                     engine.record_event(
                         clock,
@@ -821,6 +1149,18 @@ fn coordinator_loop(
                         job.finish_t = Some(wall.now());
                         job.state = JobState::Completed;
                         note_terminal(&mut jobs, &mut retention, res.job_id);
+                        // Losses are coordinator-local (the engine never
+                        // sees them); journal them right after the Finish
+                        // event so recovery re-attaches them.
+                        if let Some(d) = &durable {
+                            d.wal
+                                .borrow_mut()
+                                .append(&WalRecord::Losses {
+                                    job: res.job_id,
+                                    losses: res.losses.clone(),
+                                })
+                                .expect("durability: WAL append failed");
+                        }
                     }
                     // else: stale epoch — the job was preempted and re-placed
                     // since; its current run's result is still in flight.
@@ -839,14 +1179,13 @@ fn coordinator_loop(
                 let outcome = match jobs.get_mut(&id) {
                     None => CancelOutcome::NotFound,
                     Some(job) => match job.state {
-                        JobState::Queued => {
-                            engine.cancel_pending(id, clock);
-                            job.state = JobState::Cancelled;
-                            job.finish_t = Some(clock);
-                            CancelOutcome::Cancelled(job.status())
-                        }
-                        JobState::Running => {
-                            engine.cancel_running(id, clock);
+                        JobState::Queued | JobState::Running => {
+                            // Through the event path — not the direct
+                            // `cancel_pending` / `cancel_running` calls —
+                            // so the cancel lands in the durability journal
+                            // like every other transition (the engine
+                            // routes the event to the right one).
+                            let _ = engine.handle(ClusterEvent::Cancel { job: id }, &mut wall);
                             job.state = JobState::Cancelled;
                             job.finish_t = Some(clock);
                             CancelOutcome::Cancelled(job.status())
@@ -992,6 +1331,23 @@ fn coordinator_loop(
             Msg::Decisions(reply) => {
                 let _ = reply.send(engine.decision_log().to_vec());
             }
+            Msg::Durability(reply) => {
+                let status = match &durable {
+                    None => DurabilityStatus::disabled(),
+                    Some(d) => {
+                        let w = d.wal.borrow();
+                        DurabilityStatus {
+                            enabled: true,
+                            last_seq: w.last_seq(),
+                            wal_bytes: w.total_bytes(),
+                            wal_segments: w.segment_count() as u64,
+                            snapshot_seq: d.snap.map(|(seq, _)| seq),
+                            snapshot_age_s: d.snap.map(|(_, t)| (wall.now() - t).max(0.0)),
+                        }
+                    }
+                };
+                let _ = reply.send(status);
+            }
             Msg::Drain(reply) => {
                 if all_terminal(&jobs) {
                     let _ = reply.send(());
@@ -1034,6 +1390,26 @@ fn coordinator_loop(
                     now_i < *deadline
                 }
             });
+        }
+        // Snapshot cadence: once enough WAL records accumulated since the
+        // last snapshot, persist full state and prune what it covers. The
+        // WAL is fsynced first, so a snapshot never claims to cover
+        // records the disk does not hold.
+        if let Some(d) = durable.as_mut() {
+            let last = d.wal.borrow().last_seq();
+            if last >= d.snap.map_or(0, |(seq, _)| seq) + cfg.snapshot_every.max(1) {
+                let t = wall.now();
+                let mut snap = Json::obj();
+                snap.set("time", t).set("engine", engine.snapshot_json()).set(
+                    "coord",
+                    coord_to_json(&jobs, next_id, admission_rejected, &retention),
+                );
+                d.wal.borrow_mut().sync().expect("durability: WAL sync");
+                d.store.save(last, &snap).expect("durability: snapshot save");
+                let _ = d.store.prune_older_than(last);
+                let _ = d.wal.borrow_mut().prune_through(last);
+                d.snap = Some((last, t));
+            }
         }
     }
 }
@@ -1537,5 +1913,71 @@ mod tests {
         h.scale(ScaleOp::Leave { node: 0 }).unwrap();
         assert!(h.scale(ScaleOp::Leave { node: 0 }).is_err());
         h.shutdown();
+    }
+
+    #[test]
+    fn durability_disabled_without_data_dir() {
+        let (h, _j) = spawn(real_testbed(), no_exec_cfg());
+        let d = h.durability().unwrap();
+        assert!(!d.enabled);
+        assert_eq!(d.last_seq, 0);
+        h.shutdown();
+    }
+
+    #[test]
+    fn coordinator_recovers_jobs_across_restart() {
+        let dir = std::env::temp_dir().join("frenzy_coord_recovery_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CoordinatorConfig {
+            data_dir: Some(dir.clone()),
+            fsync: FsyncPolicy::Always,
+            ..no_exec_cfg()
+        };
+        let submit = |h: &Handle| {
+            h.submit(SubmitRequest {
+                model: "gpt2-350m".into(),
+                global_batch: 8,
+                total_samples: 100,
+            })
+            .unwrap()
+        };
+
+        // First life: two completed jobs, one cancelled-while-queued.
+        let (h, j) = spawn(real_testbed(), cfg.clone());
+        let a = submit(&h);
+        let b = submit(&h);
+        h.drain().unwrap();
+        let c = submit(&h);
+        // The instant stub completes c too; cancel then reports terminal.
+        h.drain().unwrap();
+        let _ = h.cancel(c).unwrap();
+        let d1 = h.durability().unwrap();
+        assert!(d1.enabled);
+        assert!(d1.last_seq > 0, "transitions were journaled");
+        let report1 = h.report().unwrap();
+        h.shutdown();
+        j.join().unwrap();
+
+        // Second life: same data dir — everything is back, ids continue.
+        let (h, j) = spawn(real_testbed(), cfg);
+        for id in [a, b] {
+            let st = h.status(id).unwrap().expect("job recovered");
+            assert_eq!(st.state, JobState::Completed, "job {id}");
+            assert!(st.finish_time.is_some());
+            assert!(!st.losses.is_empty(), "losses recovered from the WAL");
+        }
+        let report2 = h.report().unwrap();
+        assert_eq!(report2.n_completed, report1.n_completed);
+        let d2 = h.durability().unwrap();
+        assert!(d2.enabled);
+        assert!(d2.last_seq >= d1.last_seq, "recovered WAL position");
+        // A new submission gets a fresh id — the counter survived too.
+        let d = submit(&h);
+        assert!(d > c, "job ids keep ascending across restarts ({d} vs {c})");
+        h.drain().unwrap();
+        assert_eq!(h.status(d).unwrap().unwrap().state, JobState::Completed);
+        h.shutdown();
+        j.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

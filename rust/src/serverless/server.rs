@@ -14,9 +14,9 @@
 //! `413` instead of silent truncation.
 
 use super::api::{
-    ApiError, CancelResponseV1, ClusterInfoV1, EventsRequestV1, EventsResponseV1, JobStatusV1,
-    ListRequestV1, ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1, ScaleRequestV1,
-    ScaleResponseV1, SubmitRequestV1, SubmitResponseV1,
+    ApiError, CancelResponseV1, ClusterInfoV1, DurabilityV1, EventsRequestV1, EventsResponseV1,
+    JobStatusV1, ListRequestV1, ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1,
+    ScaleRequestV1, ScaleResponseV1, SubmitRequestV1, SubmitResponseV1,
 };
 use super::{CancelOutcome, Handle, ScaleOp, SubmitRequest};
 use crate::util::json::{self, Json};
@@ -193,7 +193,8 @@ fn normalize_path(path: &str) -> String {
 /// `None` means the path itself is unknown (404).
 fn allowed_methods(path: &str) -> Option<&'static str> {
     match path {
-        "/v1/healthz" | "/v1/cluster" | "/v1/cluster/events" | "/v1/report" => Some("GET"),
+        "/v1/healthz" | "/v1/cluster" | "/v1/cluster/events" | "/v1/report"
+        | "/v1/durability" => Some("GET"),
         "/v1/jobs" => Some("GET, POST"),
         "/v1/predict" | "/v1/cluster/scale" => Some("POST"),
         _ => {
@@ -244,6 +245,7 @@ pub fn route_full(handle: &Handle, req: &Request) -> Response {
         ("POST", "/v1/cluster/scale") => Some(handle_scale(handle, &req.body)),
         ("GET", "/v1/cluster/events") => Some(handle_events(handle, query)),
         ("GET", "/v1/report") => Some(handle_report(handle)),
+        ("GET", "/v1/durability") => Some(handle_durability(handle)),
         _ => None,
     };
     if let Some(r) = resp {
@@ -411,6 +413,15 @@ fn handle_report(handle: &Handle) -> Response {
     match handle.report() {
         Ok(report) => {
             Response::ok(ReportV1::from_report(&report).to_json().to_string_compact())
+        }
+        Err(e) => Response::err(500, e.to_string()),
+    }
+}
+
+fn handle_durability(handle: &Handle) -> Response {
+    match handle.durability() {
+        Ok(status) => {
+            Response::ok(DurabilityV1::from_status(&status).to_json().to_string_compact())
         }
         Err(e) => Response::err(500, e.to_string()),
     }
@@ -787,6 +798,23 @@ mod tests {
         // No legacy unversioned aliases for the new routes.
         assert_eq!(get(&h, "/report").status, 404);
         assert_eq!(get(&h, "/cluster/events").status, 404);
+        h.shutdown();
+    }
+
+    #[test]
+    fn durability_route() {
+        let h = test_handle();
+        // In-memory coordinator (no --data-dir): the route reports so.
+        let r = get(&h, "/v1/durability");
+        assert_eq!(r.status, 200, "{}", r.body);
+        let d = DurabilityV1::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert!(!d.enabled);
+        assert_eq!(d.last_seq, 0);
+        let r = post(&h, "/v1/durability", "");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("GET"));
+        // No legacy unversioned alias.
+        assert_eq!(get(&h, "/durability").status, 404);
         h.shutdown();
     }
 

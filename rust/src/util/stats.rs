@@ -79,6 +79,17 @@ impl Running {
         }
     }
 
+    /// Decompose into raw accumulator fields `(n, mean, m2, min, max, sum)`
+    /// so durable snapshots can round-trip the accumulator exactly.
+    pub fn to_parts(&self) -> (u64, f64, f64, f64, f64, f64) {
+        (self.n, self.mean, self.m2, self.min, self.max, self.sum)
+    }
+
+    /// Rebuild from [`Running::to_parts`] output.
+    pub fn from_parts(n: u64, mean: f64, m2: f64, min: f64, max: f64, sum: f64) -> Self {
+        Self { n, mean, m2, min, max, sum }
+    }
+
     /// Merge another accumulator into this one (parallel reduction).
     pub fn merge(&mut self, other: &Running) {
         if other.n == 0 {
@@ -217,6 +228,19 @@ impl Histogram {
 
     pub fn total(&self) -> u64 {
         self.total
+    }
+
+    /// Raw bucket counts (last entry is the overflow bucket).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Overwrite the bucket counts from a snapshot taken off an identically
+    /// configured histogram. Panics if the bucket count differs.
+    pub fn restore_counts(&mut self, counts: Vec<u64>) {
+        assert_eq!(counts.len(), self.counts.len(), "histogram shape mismatch");
+        self.total = counts.iter().sum();
+        self.counts = counts;
     }
 
     pub fn buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
