@@ -1,0 +1,297 @@
+//! Bench: ingest throughput — submits/sec and per-request p99 latency
+//! through the full HTTP path (SDK framing, acceptor, worker pool,
+//! coordinator mailbox, WAL), single submits vs `jobs:batch`, at two
+//! simulated client counts; plus a watermark storm proving pending depth
+//! stays bounded under overload.
+//!
+//! Every simulated client in single mode is a fresh connection that
+//! submits once and disconnects — the serverless cold-path. Batch mode
+//! pushes the same job count as `jobs:batch` bodies over a few persistent
+//! connections. The submitted model is deliberately infeasible for the
+//! bench cluster, so every job takes the cheap admission-reject path:
+//! the full ingest pipeline (parse, admission, id mint, MARP planning,
+//! WAL append + fsync, audit event) runs, but no placement state
+//! accumulates to confound transport measurements across client counts.
+//!
+//! The acceptance gate (full mode only — smoke timings are unstable)
+//! requires batched ingest to beat single-submit throughput at least 5x
+//! at the larger client count: one fsync and one coordinator message per
+//! 256 jobs has to show up. The watermark storm asserts in both modes:
+//! bounded queue depth is a correctness property, not a timing.
+//! Results land in `BENCH_api.json` at the repository root.
+
+use frenzy::config::{gpu_by_name, ClusterSpec, LinkKind, NodeSpec};
+use frenzy::durability::FsyncPolicy;
+use frenzy::job::JobState;
+use frenzy::serverless::api::{ListRequestV1, SubmitRequestV1, SubmitResultV1, MAX_BATCH_SUBMIT};
+use frenzy::serverless::client::{FrenzyClient, SubmitOutcome};
+use frenzy::serverless::{server, spawn, CoordinatorConfig, Handle};
+use frenzy::util::json::Json;
+use frenzy::util::stats::Sample;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One small node: enough to run admission + planning, too small to host
+/// the bench model (see module docs).
+fn bench_cluster() -> ClusterSpec {
+    let gpu = gpu_by_name("RTX2080Ti").expect("zoo gpu");
+    ClusterSpec {
+        name: "bench-ingest".into(),
+        nodes: vec![NodeSpec { gpu, count: 1, link: LinkKind::Pcie }],
+        inter_node_gbps: 12.5,
+    }
+}
+
+fn start(cfg: CoordinatorConfig) -> (Handle, SocketAddr, Arc<AtomicBool>) {
+    let (h, _j) = spawn(bench_cluster(), cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = server::serve(h.clone(), "127.0.0.1:0", stop.clone()).expect("bind bench server");
+    (h, addr, stop)
+}
+
+struct StormResult {
+    elapsed_s: f64,
+    /// Per-request latency (one submit in single mode, one batch body in
+    /// batch mode).
+    latency: Sample,
+    accepted: u64,
+    throttled: u64,
+}
+
+impl StormResult {
+    fn submits_per_s(&self) -> f64 {
+        self.accepted as f64 / self.elapsed_s.max(1e-9)
+    }
+}
+
+/// `n_clients` one-shot clients: fresh connection, one `POST /v1/jobs`,
+/// disconnect — spread over `threads` workers.
+fn storm_single(addr: &str, model: &str, n_clients: usize, threads: usize) -> StormResult {
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..threads)
+        .map(|w| {
+            let addr = addr.to_string();
+            let share = n_clients / threads + usize::from(w < n_clients % threads);
+            let req = SubmitRequestV1::new(model, 8, 1_000);
+            std::thread::spawn(move || {
+                let mut lat = Vec::with_capacity(share);
+                let (mut acc, mut thr) = (0u64, 0u64);
+                for _ in 0..share {
+                    let mut c = FrenzyClient::new(addr.clone());
+                    let s0 = Instant::now();
+                    match c.submit_once(&req).expect("single submit") {
+                        SubmitOutcome::Accepted { .. } => acc += 1,
+                        SubmitOutcome::Throttled { .. } => thr += 1,
+                    }
+                    lat.push(s0.elapsed().as_secs_f64());
+                }
+                (lat, acc, thr)
+            })
+        })
+        .collect();
+    let mut latency = Sample::new();
+    let (mut accepted, mut throttled) = (0u64, 0u64);
+    for w in workers {
+        let (lat, acc, thr) = w.join().expect("storm worker");
+        lat.into_iter().for_each(|l| latency.push(l));
+        accepted += acc;
+        throttled += thr;
+    }
+    StormResult { elapsed_s: t0.elapsed().as_secs_f64(), latency, accepted, throttled }
+}
+
+/// The same `n_clients` submits as `jobs:batch` bodies (up to
+/// [`MAX_BATCH_SUBMIT`] each) over `threads` persistent connections.
+fn storm_batch(addr: &str, model: &str, n_clients: usize, threads: usize) -> StormResult {
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..threads)
+        .map(|w| {
+            let addr = addr.to_string();
+            let share = n_clients / threads + usize::from(w < n_clients % threads);
+            let req = SubmitRequestV1::new(model, 8, 1_000);
+            std::thread::spawn(move || {
+                let mut c = FrenzyClient::new(addr);
+                let mut lat = Vec::new();
+                let (mut acc, mut thr) = (0u64, 0u64);
+                let mut left = share;
+                while left > 0 {
+                    let n = left.min(MAX_BATCH_SUBMIT);
+                    let body = vec![req.clone(); n];
+                    let s0 = Instant::now();
+                    let resp = c.submit_batch(&body).expect("batch submit");
+                    lat.push(s0.elapsed().as_secs_f64());
+                    for r in &resp.results {
+                        match r {
+                            SubmitResultV1::Accepted { .. } => acc += 1,
+                            SubmitResultV1::Rejected(e) if e.code == 429 => thr += 1,
+                            SubmitResultV1::Rejected(e) => {
+                                panic!("unexpected rejection: {}: {}", e.code, e.message)
+                            }
+                        }
+                    }
+                    left -= n;
+                }
+                (lat, acc, thr)
+            })
+        })
+        .collect();
+    let mut latency = Sample::new();
+    let (mut accepted, mut throttled) = (0u64, 0u64);
+    for w in workers {
+        let (lat, acc, thr) = w.join().expect("storm worker");
+        lat.into_iter().for_each(|l| latency.push(l));
+        accepted += acc;
+        throttled += thr;
+    }
+    StormResult { elapsed_s: t0.elapsed().as_secs_f64(), latency, accepted, throttled }
+}
+
+fn entry(clients: usize, mode: &str, r: &mut StormResult) -> Json {
+    let mut j = Json::obj();
+    j.set("clients", clients as u64)
+        .set("mode", mode)
+        .set("submits_per_s", r.submits_per_s())
+        .set("p99_request_s", r.latency.p99())
+        .set("mean_request_s", r.latency.mean())
+        .set("accepted", r.accepted)
+        .set("throttled", r.throttled)
+        .set("elapsed_s", r.elapsed_s);
+    j
+}
+
+/// Overload a watermarked server (tiny `max_pending`, jobs that occupy
+/// the only GPU for minutes) and verify the queue never exceeds the
+/// watermark while a sampler watches — the backpressure path sheds load
+/// instead of buffering it.
+fn watermark_storm(fast: bool) -> (usize, usize, u64) {
+    let max_pending = 32usize;
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        stub_delay_ms: 60_000,
+        max_pending,
+        ..CoordinatorConfig::default()
+    };
+    let (h, addr, stop) = start(cfg);
+    let done = Arc::new(AtomicBool::new(false));
+    let peak = Arc::new(AtomicUsize::new(0));
+    let sampler = {
+        let (addr, done, peak) = (addr.to_string(), done.clone(), peak.clone());
+        std::thread::spawn(move || {
+            let mut c = FrenzyClient::new(addr);
+            while !done.load(Ordering::Relaxed) {
+                let queued = c
+                    .list(&ListRequestV1 { state: Some(JobState::Queued), offset: 0, limit: 1 })
+                    .expect("sampler list")
+                    .total;
+                peak.fetch_max(queued, Ordering::Relaxed);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        })
+    };
+    // gpt2-tiny fits the bench GPU: one job runs for minutes, the rest
+    // queue up to the watermark, everything past it must bounce with 429.
+    let n = if fast { 120 } else { 400 };
+    let r = storm_single(&addr.to_string(), "gpt2-tiny", n, 8);
+    done.store(true, Ordering::Relaxed);
+    sampler.join().expect("sampler");
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+    let observed = peak.load(Ordering::Relaxed);
+    assert!(
+        observed <= max_pending,
+        "pending depth must stay bounded by the watermark: saw {observed} > {max_pending}"
+    );
+    assert!(
+        r.accepted as usize <= max_pending + 1 && r.throttled > 0,
+        "overload must shed: accepted {} (cap {}), throttled {}",
+        r.accepted,
+        max_pending + 1,
+        r.throttled
+    );
+    (max_pending, observed, r.throttled)
+}
+
+fn main() {
+    let fast = std::env::var("FRENZY_BENCH_FAST").ok().is_some_and(|v| v == "1");
+    let client_counts: &[usize] = if fast { &[64, 256] } else { &[1_000, 10_000] };
+    let threads = if fast { 8 } else { 16 };
+    // Infeasible on the 1-GPU bench cluster: ingest-only work (see module
+    // docs). Verified below before any timing is trusted.
+    let model = "gpt2-7b";
+
+    let dir = std::env::temp_dir().join(format!("frenzy_bench_api_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        data_dir: Some(dir.clone()),
+        fsync: FsyncPolicy::Always,
+        ..CoordinatorConfig::default()
+    };
+    let (h, addr, stop) = start(cfg);
+    let addr = addr.to_string();
+    {
+        let mut probe = FrenzyClient::new(addr.clone());
+        let p = probe.predict(model, 8).expect("probe predict");
+        assert!(!p.feasible, "{model} must be infeasible on the bench cluster");
+    }
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut per_count: Vec<(usize, f64, f64)> = Vec::new();
+    for &n in client_counts {
+        let mut single = storm_single(&addr, model, n, threads);
+        let mut batch = storm_batch(&addr, model, n, threads);
+        println!(
+            "{n} clients: single {:.0} submits/s (p99 {:.2} ms), batch {:.0} submits/s \
+             (p99/request {:.2} ms, {} jobs/body max)",
+            single.submits_per_s(),
+            single.latency.p99() * 1e3,
+            batch.submits_per_s(),
+            batch.latency.p99() * 1e3,
+            MAX_BATCH_SUBMIT
+        );
+        per_count.push((n, single.submits_per_s(), batch.submits_per_s()));
+        entries.push(entry(n, "single", &mut single));
+        entries.push(entry(n, "batch", &mut batch));
+    }
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let (watermark, observed_peak, shed) = watermark_storm(fast);
+    println!(
+        "watermark storm: pending peaked at {observed_peak} (cap {watermark}), \
+         {shed} submits shed with 429"
+    );
+
+    let mut payload = Json::obj();
+    let mut wm = Json::obj();
+    wm.set("max_pending", watermark as u64)
+        .set("max_observed_queued", observed_peak as u64)
+        .set("throttled", shed);
+    payload
+        .set("bench", "api")
+        .set("smoke", fast)
+        .set("model", model)
+        .set("wal_fsync", "always")
+        .set("entries", Json::Arr(entries))
+        .set("watermark_storm", wm);
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_api.json");
+    frenzy::util::write_file(&path, &payload.to_string_pretty()).expect("write BENCH_api.json");
+    println!("wrote {}", path.display());
+
+    if !fast {
+        let &(n, single_tput, batch_tput) = per_count.last().expect("at least one client count");
+        assert!(
+            batch_tput >= 5.0 * single_tput,
+            "batched ingest must beat single submits >=5x at {n} clients: \
+             {batch_tput:.0}/s vs {single_tput:.0}/s"
+        );
+        println!(
+            "acceptance: batch {:.1}x single at {n} clients — OK",
+            batch_tput / single_tput.max(1e-9)
+        );
+    }
+}

@@ -15,9 +15,10 @@ use super::Args;
 use crate::config::cluster_by_name;
 use crate::engine::EventKind;
 use crate::job::JobSpec;
+use crate::serverless::admission::QuotaCfg;
 use crate::serverless::api::{
     EventV1, EventsRequestV1, JobStatusV1, ListRequestV1, PlanV1, ReportV1, ScaleRequestV1,
-    state_from_str,
+    SubmitRequestV1, SubmitResultV1, state_from_str, MAX_BATCH_SUBMIT,
 };
 use crate::serverless::client::FrenzyClient;
 use crate::serverless::{CoordinatorConfig, PredictReport, SchedulerKind, SubmitRequest};
@@ -337,10 +338,13 @@ fn write_cursor(path: &std::path::Path, seq: u64) -> Result<()> {
 ///
 /// Prints the cluster event log — the audit trail of arrivals, placements
 /// (with the chosen plan), finishes, observed OOMs, drains, preemptions,
-/// rejections, and node joins/leaves. `--follow` tails the stream via the
-/// server's long-poll (`?wait_ms=`): each request parks on the server
-/// until a new event lands or the wait elapses, so an idle follower sends
-/// a few quiet requests per minute instead of busy-polling.
+/// rejections, and node joins/leaves. `--follow` tails the stream,
+/// preferring the server's SSE push feed (`?stream=1`, events delivered
+/// as they happen over one connection) and falling back to long-poll
+/// (`?wait_ms=`) when the stream cannot be opened: each fallback request
+/// parks on the server until a new event lands or the wait elapses, so
+/// an idle follower sends a few quiet requests per minute instead of
+/// busy-polling.
 ///
 /// `--cursor <path>` makes the follower restartable: the last printed seq
 /// is persisted after every page, and a restarted `frenzy events --cursor
@@ -361,11 +365,13 @@ pub fn cmd_events(args: &Args) -> Result<()> {
             .opt_parse_or("limit", crate::serverless::api::DEFAULT_EVENTS_LIMIT)?
             .clamp(1, crate::serverless::api::MAX_EVENTS_LIMIT),
         wait_ms: 0,
+        stream: false,
     };
     let follow = args.flag("follow");
     let follow_wait: u64 = args
         .opt_parse_or("wait-ms", 5_000u64)?
         .clamp(1, crate::serverless::api::MAX_EVENTS_WAIT_MS);
+    let mut use_sse = true;
     let mut printed = 0usize;
     loop {
         let t0 = std::time::Instant::now();
@@ -408,6 +414,29 @@ pub fn cmd_events(args: &Args) -> Result<()> {
             }
         }
         req.wait_ms = follow_wait;
+        // Prefer the SSE push feed (`?stream=1`): one connection, events
+        // printed as the server emits them, no polling at all. A failed
+        // subscribe (older server, buffering proxy) falls back to the
+        // long-poll loop for good; a cleanly ended stream goes back to
+        // the top for one catch-up long-poll, then resubscribes.
+        if use_sse {
+            let cur = cursor.clone();
+            match c.events_stream(&req, |e| {
+                println!("{}", fmt_event(e));
+                if let Some(path) = &cur {
+                    let _ = write_cursor(path, e.seq);
+                }
+                true
+            }) {
+                Ok(seq) => {
+                    req.since = req.since.max(seq);
+                    if let Some(path) = &cursor {
+                        write_cursor(path, req.since)?;
+                    }
+                }
+                Err(_) => use_sse = false,
+            }
+        }
     }
 }
 
@@ -420,6 +449,13 @@ fn render_report(r: &ReportV1) {
     t.row_str(&["completed", &r.n_completed.to_string()]);
     t.row_str(&["rejected", &r.n_rejected.to_string()]);
     t.row_str(&["cancelled", &r.n_cancelled.to_string()]);
+    if r.n_throttled_backpressure > 0 || r.n_throttled_quota > 0 {
+        let throttled = format!(
+            "{} backpressure / {} quota (since boot)",
+            r.n_throttled_backpressure, r.n_throttled_quota
+        );
+        t.row_str(&["throttled submits (429)", &throttled]);
+    }
     t.row_str(&["avg JCT", &fmt_duration(r.avg_jct_s)]);
     t.row_str(&["p50 JCT (approx)", &fmt_duration(r.p50_jct_s)]);
     t.row_str(&["p99 JCT (approx)", &fmt_duration(r.p99_jct_s)]);
@@ -483,21 +519,53 @@ fn replay_remote(
         bail!("server at {addr} is not healthy");
     }
     println!(
-        "replaying {} jobs from '{}' against {} over HTTP ({}x speedup)",
+        "replaying {} jobs from '{}' against {} over HTTP ({}x speedup, batched submit)",
         jobs.len(),
         workload,
         addr,
         speedup,
     );
+    // Submit in arrival order, coalescing jobs whose (sped-up) inter-
+    // arrival gap rounds to zero into one `jobs:batch` call — one round
+    // trip and one WAL fsync per burst instead of per job. Per-job 429s
+    // honor the largest Retry-After in the batch and resubmit only the
+    // throttled entries; any other rejection aborts the replay.
+    fn flush(c: &mut FrenzyClient, batch: &mut Vec<SubmitRequestV1>) -> Result<()> {
+        while !batch.is_empty() {
+            let resp = c.submit_batch(batch)?;
+            let mut retry = Vec::new();
+            let mut wait_ms = 0u64;
+            for (req, res) in batch.iter().zip(&resp.results) {
+                if let SubmitResultV1::Rejected(e) = res {
+                    if e.code == 429 {
+                        wait_ms = wait_ms.max(e.retry_after_ms.unwrap_or(1000));
+                        retry.push(req.clone());
+                    } else {
+                        bail!("submit of '{}' rejected: {}: {}", req.model, e.code, e.message);
+                    }
+                }
+            }
+            *batch = retry;
+            if !batch.is_empty() {
+                std::thread::sleep(std::time::Duration::from_millis(wait_ms.clamp(50, 5_000)));
+            }
+        }
+        Ok(())
+    }
+    let mut batch: Vec<SubmitRequestV1> = Vec::new();
     let mut last_submit = 0.0f64;
     for j in jobs {
         let gap = ((j.submit_time - last_submit) / speedup).clamp(0.0, 0.25);
+        if gap > 0.0 || batch.len() >= MAX_BATCH_SUBMIT {
+            flush(&mut c, &mut batch)?;
+        }
         if gap > 0.0 {
             std::thread::sleep(std::time::Duration::from_secs_f64(gap));
         }
         last_submit = j.submit_time;
-        c.submit(&j.model.name, j.train.global_batch, j.total_samples)?;
+        batch.push(SubmitRequestV1::new(j.model.name, j.train.global_batch, j.total_samples));
     }
+    flush(&mut c, &mut batch)?;
     // Wait until every submitted job is terminal. Two filtered list
     // queries per cycle (not one status request per job, which would load
     // the server we are measuring with O(jobs) requests every 100 ms);
@@ -615,11 +683,39 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `rate[:burst]` quota spec into token-bucket parameters. The
+/// burst defaults to one second of headroom at the sustained rate (never
+/// below a single token, or no submit could ever pass).
+fn parse_quota(s: &str) -> Result<QuotaCfg> {
+    let (r, b) = match s.split_once(':') {
+        Some((r, b)) => (r, Some(b)),
+        None => (s, None),
+    };
+    let rate_per_s: f64 = r.parse().map_err(|_| anyhow!("bad quota rate '{r}'"))?;
+    if !rate_per_s.is_finite() || rate_per_s < 0.0 {
+        bail!("quota rate must be finite and >= 0, got '{r}'");
+    }
+    let burst: f64 = match b {
+        Some(b) => b.parse().map_err(|_| anyhow!("bad quota burst '{b}'"))?,
+        None => rate_per_s.max(1.0),
+    };
+    if !burst.is_finite() || burst < 1.0 {
+        bail!("quota burst must be finite and >= 1, got {burst}");
+    }
+    Ok(QuotaCfg { rate_per_s, burst })
+}
+
 /// `frenzy serve [--addr A] [--cluster C] [--steps N]
 ///              [--sched has|sia|opportunistic] [--round-interval S]
 ///              [--drain-ms M] [--ckpt-steps K]
 ///              [--data-dir D] [--fsync always|every:N|interval:S]
-///              [--snapshot-every E]`
+///              [--snapshot-every E] [--max-pending N]
+///              [--global-quota R[:B]] [--user-quota R[:B]]`
+///
+/// `--max-pending` caps the scheduler's pending queue (submits past it
+/// get 429 + Retry-After); `--global-quota`/`--user-quota` rate-limit
+/// submits per second with `B` tokens of burst (per-user quotas key on
+/// the submit body's `user` field).
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let cluster = cluster_arg(args)?;
     let addr = args.opt_or("addr", DEFAULT_ADDR);
@@ -639,6 +735,15 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         data_dir,
         fsync,
         snapshot_every: args.opt_parse_or("snapshot-every", defaults.snapshot_every)?,
+        max_pending: args.opt_parse_or("max-pending", defaults.max_pending)?,
+        global_quota: match args.opt("global-quota") {
+            None => defaults.global_quota,
+            Some(s) => Some(parse_quota(s)?),
+        },
+        user_quota: match args.opt("user-quota") {
+            None => defaults.user_quota,
+            Some(s) => Some(parse_quota(s)?),
+        },
         ..defaults
     };
     if let Some(dir) = &cfg.data_dir {
@@ -649,11 +754,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let local = crate::serverless::server::serve(handle, addr, stop)?;
     println!("frenzy serverless API v1 listening on http://{local}");
     println!("  POST /v1/jobs            {{\"model\":\"gpt2-350m\",\"batch\":8,\"samples\":400}}");
+    println!("  POST /v1/jobs:batch      {{\"jobs\":[...]}}  (up to 256; one WAL fsync)");
     println!("  GET  /v1/jobs            ?state=running&offset=0&limit=100");
     println!("  GET  /v1/jobs/<id>");
     println!("  POST /v1/jobs/<id>/cancel");
     println!("  POST /v1/predict         {{\"model\":\"gpt2-7b\",\"batch\":2}}  (dry run)");
     println!("  GET  /v1/cluster/events  ?since=0&limit=500&wait_ms=5000  (audit log; long-poll)");
+    println!("  GET  /v1/cluster/events  ?stream=1  (server-sent-events push feed)");
     println!("  GET  /v1/report          (streaming run report + memory-prediction accuracy)");
     println!("  GET  /v1/durability      (WAL position + snapshot freshness)");
     println!("  GET  /v1/cluster | /v1/healthz    (see API.md; unversioned aliases served)");

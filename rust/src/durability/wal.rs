@@ -232,6 +232,12 @@ pub struct Wal {
     segments: usize,
     unsynced: u32,
     last_sync: Instant,
+    /// Reused frame buffer: each append serializes header + payload here
+    /// instead of allocating a fresh `String` and `Vec` per record.
+    scratch: Vec<u8>,
+    /// Inside a [`Wal::begin_group`] window, policy-driven fsyncs are
+    /// deferred to [`Wal::end_group`].
+    in_group: bool,
 }
 
 impl Wal {
@@ -310,6 +316,8 @@ impl Wal {
                 segments,
                 unsynced: 0,
                 last_sync: Instant::now(),
+                scratch: Vec::new(),
+                in_group: false,
             },
             records,
         ))
@@ -321,21 +329,63 @@ impl Wal {
     /// [`FsyncPolicy`].
     pub fn append(&mut self, rec: &WalRecord) -> Result<u64, String> {
         let seq = self.next_seq;
-        let payload = rec.to_json(seq).to_string_compact().into_bytes();
-        let mut buf = Vec::with_capacity(payload.len() + 8);
-        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        buf.extend_from_slice(&crc32(&payload).to_le_bytes());
-        buf.extend_from_slice(&payload);
+        // Serialize the payload straight after an 8-byte header slot in
+        // the reusable scratch buffer, then patch len + crc in — no
+        // per-record String or Vec allocation on the hot path.
+        let mut buf = std::mem::take(&mut self.scratch);
+        buf.clear();
+        buf.extend_from_slice(&[0u8; 8]);
+        rec.to_json(seq).write_compact(&mut buf);
+        let payload_len = buf.len() - 8;
+        let crc = crc32(&buf[8..]);
+        buf[0..4].copy_from_slice(&(payload_len as u32).to_le_bytes());
+        buf[4..8].copy_from_slice(&crc.to_le_bytes());
         if self.bytes_in_seg > 0 && self.bytes_in_seg + buf.len() as u64 > self.segment_bytes {
-            self.rotate()?;
+            if let Err(e) = self.rotate() {
+                self.scratch = buf;
+                return Err(e);
+            }
         }
-        self.file
+        let res = self
+            .file
             .write_all(&buf)
-            .map_err(|e| format!("wal: append to {}: {e}", self.seg_path.display()))?;
-        self.bytes_in_seg += buf.len() as u64;
-        self.total_bytes += buf.len() as u64;
+            .map_err(|e| format!("wal: append to {}: {e}", self.seg_path.display()));
+        let written = buf.len() as u64;
+        self.scratch = buf;
+        res?;
+        self.bytes_in_seg += written;
+        self.total_bytes += written;
         self.next_seq += 1;
         self.unsynced += 1;
+        if !self.in_group {
+            self.maybe_sync()?;
+        }
+        Ok(seq)
+    }
+
+    /// Begin a write group: appends inside the group defer policy-driven
+    /// fsyncs until [`Wal::end_group`], so a batch costs at most one fsync
+    /// (under [`FsyncPolicy::Always`]) instead of one per record.
+    /// Persist-before-effect ordering is unchanged — every record still
+    /// reaches the kernel before its `append` returns, and callers run
+    /// `end_group` before acknowledging the batch. Groups do not nest.
+    pub fn begin_group(&mut self) {
+        debug_assert!(!self.in_group, "wal groups do not nest");
+        self.in_group = true;
+    }
+
+    /// End a write group, applying the fsync policy once across everything
+    /// appended since [`Wal::begin_group`]. Safe to call with nothing
+    /// pending (a batch whose records were all rejected appends nothing).
+    pub fn end_group(&mut self) -> Result<(), String> {
+        self.in_group = false;
+        self.maybe_sync()
+    }
+
+    fn maybe_sync(&mut self) -> Result<(), String> {
+        if self.unsynced == 0 {
+            return Ok(());
+        }
         let due = match self.policy {
             FsyncPolicy::Always => true,
             FsyncPolicy::EveryN(n) => self.unsynced >= n.max(1),
@@ -344,7 +394,7 @@ impl Wal {
         if due {
             self.sync()?;
         }
-        Ok(seq)
+        Ok(())
     }
 
     /// Force an fsync of the active segment.
@@ -574,6 +624,81 @@ mod tests {
         let err = Wal::open(&dir, FsyncPolicy::Always).unwrap_err();
         assert!(err.contains("damaged mid-log"), "got: {err}");
         fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_group_defers_fsync_until_end_group() {
+        let dir = tmp("group");
+        let (mut wal, _) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        wal.begin_group();
+        for j in 1..=5 {
+            wal.append(&ev(j)).unwrap();
+        }
+        assert_eq!(wal.unsynced, 5, "Always policy deferred inside the group");
+        wal.end_group().unwrap();
+        assert_eq!(wal.unsynced, 0, "end_group applied the policy once");
+        // Appends after the group go back to per-record policy.
+        wal.append(&ev(6)).unwrap();
+        assert_eq!(wal.unsynced, 0);
+        drop(wal);
+        let (wal, recs) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(wal.last_seq(), 6);
+        assert_eq!(recs.len(), 6);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_group_is_a_no_op() {
+        let dir = tmp("group_empty");
+        let (mut wal, _) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        wal.begin_group();
+        wal.end_group().unwrap();
+        assert_eq!(wal.last_seq(), 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn group_rotation_still_syncs_the_old_segment() {
+        let dir = tmp("group_rotate");
+        let (mut wal, _) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        wal.segment_bytes = 256;
+        wal.begin_group();
+        for j in 1..=40 {
+            wal.append(&ev(j)).unwrap();
+        }
+        wal.end_group().unwrap();
+        assert!(wal.segment_count() > 2, "rotation happened inside the group");
+        drop(wal);
+        let (wal, recs) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(wal.last_seq(), 40);
+        assert_eq!(recs.len(), 40);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Grouped appends must be byte-identical on disk to the same records
+    /// appended singly — groups change fsync timing, never framing.
+    #[test]
+    fn grouped_and_single_appends_are_byte_identical() {
+        let dir_a = tmp("ident_single");
+        let dir_b = tmp("ident_group");
+        let records: Vec<WalRecord> = (1..=10).map(ev).collect();
+        let (mut a, _) = Wal::open(&dir_a, FsyncPolicy::Always).unwrap();
+        for r in &records {
+            a.append(r).unwrap();
+        }
+        let seg_a = a.seg_path.clone();
+        drop(a);
+        let (mut b, _) = Wal::open(&dir_b, FsyncPolicy::Always).unwrap();
+        b.begin_group();
+        for r in &records {
+            b.append(r).unwrap();
+        }
+        b.end_group().unwrap();
+        let seg_b = b.seg_path.clone();
+        drop(b);
+        assert_eq!(fs::read(&seg_a).unwrap(), fs::read(&seg_b).unwrap());
+        fs::remove_dir_all(&dir_a).unwrap();
+        fs::remove_dir_all(&dir_b).unwrap();
     }
 
     #[test]

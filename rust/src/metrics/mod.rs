@@ -381,6 +381,13 @@ pub struct RunReport {
     pub sched_overhead_s: f64,
     /// GPU-time integral utilization in [0,1].
     pub avg_utilization: f64,
+    /// Submits refused by the ingest pending-depth watermark (429) since
+    /// boot. These never consumed a job id and are *not* in `n_rejected`,
+    /// which counts admitted-then-rejected jobs.
+    pub n_throttled_backpressure: u64,
+    /// Submits refused by per-user/global quota token buckets (429) since
+    /// boot. Disjoint from `n_throttled_backpressure`.
+    pub n_throttled_quota: u64,
 }
 
 impl RunReport {
@@ -438,6 +445,10 @@ impl RunReport {
             sched_work_units,
             sched_overhead_s,
             avg_utilization,
+            // Ingest throttling happens before jobs exist, outside the
+            // aggregates; the live coordinator overlays its counters.
+            n_throttled_backpressure: 0,
+            n_throttled_quota: 0,
         }
     }
 
@@ -494,7 +505,9 @@ impl RunReport {
             .set("mem_pred_accuracy_min", self.mem_pred_accuracy_min)
             .set("sched_work_units", self.sched_work_units)
             .set("sched_overhead_s", self.sched_overhead_s)
-            .set("avg_utilization", self.avg_utilization);
+            .set("avg_utilization", self.avg_utilization)
+            .set("n_throttled_backpressure", self.n_throttled_backpressure)
+            .set("n_throttled_quota", self.n_throttled_quota);
         let hist: Vec<Json> = self
             .jct_hist
             .iter()

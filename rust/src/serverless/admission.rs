@@ -1,0 +1,275 @@
+//! Ingest admission control: a pending-depth watermark plus per-user and
+//! global token-bucket submit quotas, applied on the coordinator thread
+//! *before* a job id is minted or anything touches the WAL.
+//!
+//! Throttling is deliberately stateless on disk. A rejected submit leaves
+//! no trace in the journal — WAL replay identity is preserved, and a
+//! restart simply starts every bucket full. The counters are therefore
+//! since-boot, which `/v1/report` documents.
+
+use super::SubmitError;
+use std::collections::HashMap;
+
+/// Token-bucket parameters: sustained `rate_per_s` with `burst` headroom.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuotaCfg {
+    /// Sustained submits per second the bucket refills at.
+    pub rate_per_s: f64,
+    /// Bucket capacity: how many submits may land back-to-back after an
+    /// idle period.
+    pub burst: f64,
+}
+
+/// `Retry-After` hint for watermark rejections, in milliseconds. Pending
+/// depth drains at scheduling speed — not a rate the coordinator can
+/// model — so a flat pause is the honest hint.
+pub const BACKPRESSURE_RETRY_MS: u64 = 250;
+
+/// Cap on distinct users holding live bucket state. When full, buckets
+/// that have refilled to capacity are pruned first — lossless, because a
+/// full bucket is indistinguishable from a fresh one.
+const MAX_TRACKED_USERS: usize = 4096;
+
+#[derive(Debug, Clone)]
+struct TokenBucket {
+    cfg: QuotaCfg,
+    tokens: f64,
+    last: f64,
+}
+
+impl TokenBucket {
+    fn new(cfg: QuotaCfg) -> Self {
+        Self { cfg, tokens: cfg.burst, last: 0.0 }
+    }
+
+    /// Credit tokens for the wall time elapsed since the last call,
+    /// saturating at `burst`. Time never runs backwards here: a stale
+    /// `now` (clock skew between callers) credits nothing.
+    fn refill(&mut self, now: f64) {
+        let dt = (now - self.last).max(0.0);
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.cfg.rate_per_s).min(self.cfg.burst);
+    }
+
+    /// Refill, then report whether a token is available — without
+    /// consuming it. Peek and take are split so [`AdmissionControl::admit`]
+    /// can check *every* bucket before debiting *any* of them.
+    fn peek(&mut self, now: f64) -> bool {
+        self.refill(now);
+        self.tokens >= 1.0
+    }
+
+    fn take(&mut self) {
+        debug_assert!(self.tokens >= 1.0, "take() without a successful peek()");
+        self.tokens -= 1.0;
+    }
+
+    /// Milliseconds until one full token refills — the `Retry-After` hint
+    /// handed to a throttled client.
+    fn retry_after_ms(&self) -> u64 {
+        if self.cfg.rate_per_s <= 0.0 {
+            // A bucket that never refills: tell the client to back way off.
+            return 60_000;
+        }
+        let deficit = (1.0 - self.tokens).max(0.0);
+        (deficit / self.cfg.rate_per_s * 1e3).ceil() as u64
+    }
+
+    fn is_full(&self) -> bool {
+        self.tokens >= self.cfg.burst
+    }
+}
+
+/// The coordinator's submit gate. One instance lives on the coordinator
+/// thread; every submit (single or batch member) passes through
+/// [`AdmissionControl::admit`] before any state is created for it.
+pub struct AdmissionControl {
+    /// Reject once the engine's pending queue holds this many jobs
+    /// (0 disables the watermark).
+    max_pending: usize,
+    global: Option<TokenBucket>,
+    per_user: Option<(QuotaCfg, HashMap<String, TokenBucket>)>,
+    /// Submits bounced off the pending-depth watermark since boot.
+    pub n_backpressure: u64,
+    /// Submits bounced off a token bucket (user or global) since boot.
+    pub n_quota: u64,
+}
+
+impl AdmissionControl {
+    pub fn new(max_pending: usize, global: Option<QuotaCfg>, per_user: Option<QuotaCfg>) -> Self {
+        Self {
+            max_pending,
+            global: global.map(TokenBucket::new),
+            per_user: per_user.map(|cfg| (cfg, HashMap::new())),
+            n_backpressure: 0,
+            n_quota: 0,
+        }
+    }
+
+    /// Gate one submit: the pending-depth watermark, then the user's
+    /// bucket, then the global one. Both buckets are peeked before either
+    /// is debited, so a rejection never consumes a token anywhere — a
+    /// user over quota cannot burn down the global budget by hammering,
+    /// and a global brown-out does not silently drain user buckets.
+    pub fn admit(&mut self, user: &str, pending: usize, now: f64) -> Result<(), SubmitError> {
+        if self.max_pending > 0 && pending >= self.max_pending {
+            self.n_backpressure += 1;
+            return Err(SubmitError::Backpressure { retry_after_ms: BACKPRESSURE_RETRY_MS });
+        }
+        if let Some((cfg, buckets)) = &mut self.per_user {
+            if buckets.len() >= MAX_TRACKED_USERS && !buckets.contains_key(user) {
+                buckets.retain(|_, b| {
+                    b.refill(now);
+                    !b.is_full()
+                });
+            }
+            let b = buckets.entry(user.to_string()).or_insert_with(|| TokenBucket::new(*cfg));
+            if !b.peek(now) {
+                self.n_quota += 1;
+                return Err(SubmitError::QuotaExceeded { retry_after_ms: b.retry_after_ms() });
+            }
+        }
+        if let Some(g) = &mut self.global {
+            if !g.peek(now) {
+                self.n_quota += 1;
+                return Err(SubmitError::QuotaExceeded { retry_after_ms: g.retry_after_ms() });
+            }
+            g.take();
+        }
+        if let Some((_, buckets)) = &mut self.per_user {
+            buckets.get_mut(user).expect("peeked above").take();
+        }
+        Ok(())
+    }
+
+    /// Distinct users currently holding bucket state (tests/debugging).
+    #[cfg(test)]
+    fn tracked_users(&self) -> usize {
+        self.per_user.as_ref().map_or(0, |(_, m)| m.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Runner;
+
+    fn quota(rate_per_s: f64, burst: f64) -> Option<QuotaCfg> {
+        Some(QuotaCfg { rate_per_s, burst })
+    }
+
+    #[test]
+    fn watermark_rejects_at_depth_with_flat_retry_hint() {
+        let mut ac = AdmissionControl::new(2, None, None);
+        assert!(ac.admit("", 0, 0.0).is_ok());
+        assert!(ac.admit("", 1, 0.0).is_ok());
+        match ac.admit("", 2, 0.0) {
+            Err(SubmitError::Backpressure { retry_after_ms }) => {
+                assert_eq!(retry_after_ms, BACKPRESSURE_RETRY_MS);
+            }
+            other => panic!("expected backpressure, got {other:?}"),
+        }
+        assert_eq!(ac.n_backpressure, 1);
+        assert_eq!(ac.n_quota, 0);
+    }
+
+    #[test]
+    fn zero_watermark_disables_backpressure() {
+        let mut ac = AdmissionControl::new(0, None, None);
+        assert!(ac.admit("", 1_000_000, 0.0).is_ok());
+    }
+
+    #[test]
+    fn bucket_drains_then_refills_at_rate() {
+        // 2 tokens/s, burst 2: two instant admits, the third throttles
+        // with a ~500 ms hint, and half a second later one token is back.
+        let mut ac = AdmissionControl::new(0, quota(2.0, 2.0), None);
+        assert!(ac.admit("", 0, 0.0).is_ok());
+        assert!(ac.admit("", 0, 0.0).is_ok());
+        match ac.admit("", 0, 0.0) {
+            Err(SubmitError::QuotaExceeded { retry_after_ms }) => {
+                assert_eq!(retry_after_ms, 500);
+            }
+            other => panic!("expected quota, got {other:?}"),
+        }
+        assert!(ac.admit("", 0, 0.5).is_ok());
+        assert!(ac.admit("", 0, 0.5).is_err());
+        assert_eq!(ac.n_quota, 2);
+    }
+
+    #[test]
+    fn user_rejection_never_consumes_a_global_token() {
+        // User burst 1, global burst 2. "a" submits once (both debited),
+        // then hammers: every rejection is charged to a's bucket only, so
+        // "b" still finds the global token that remains.
+        let mut ac = AdmissionControl::new(0, quota(0.1, 2.0), quota(0.1, 1.0));
+        assert!(ac.admit("a", 0, 0.0).is_ok());
+        for _ in 0..10 {
+            assert!(matches!(ac.admit("a", 0, 0.0), Err(SubmitError::QuotaExceeded { .. })));
+        }
+        assert!(ac.admit("b", 0, 0.0).is_ok());
+    }
+
+    #[test]
+    fn global_rejection_never_consumes_a_user_token() {
+        // Global burst 1: "a" takes it. "b"'s submit then fails globally —
+        // but once the global bucket refills, b's own untouched budget
+        // admits it immediately.
+        let mut ac = AdmissionControl::new(0, quota(1.0, 1.0), quota(0.001, 1.0));
+        assert!(ac.admit("a", 0, 0.0).is_ok());
+        assert!(matches!(ac.admit("b", 0, 0.0), Err(SubmitError::QuotaExceeded { .. })));
+        assert!(ac.admit("b", 0, 1.0).is_ok());
+    }
+
+    #[test]
+    fn unrefillable_bucket_hints_a_long_pause() {
+        let mut ac = AdmissionControl::new(0, quota(0.0, 1.0), None);
+        assert!(ac.admit("", 0, 0.0).is_ok());
+        match ac.admit("", 0, 5.0) {
+            Err(SubmitError::QuotaExceeded { retry_after_ms }) => {
+                assert_eq!(retry_after_ms, 60_000);
+            }
+            other => panic!("expected quota, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_buckets_are_pruned_when_the_user_table_fills() {
+        // Fill the table, let every bucket refill to capacity, then admit
+        // a fresh user: the sweep drops all idle buckets (losslessly — a
+        // full bucket equals a fresh one) instead of growing unboundedly.
+        let mut ac = AdmissionControl::new(0, None, quota(1000.0, 2.0));
+        for i in 0..MAX_TRACKED_USERS {
+            assert!(ac.admit(&format!("u{i}"), 0, 0.0).is_ok());
+        }
+        assert_eq!(ac.tracked_users(), MAX_TRACKED_USERS);
+        assert!(ac.admit("fresh", 0, 10.0).is_ok());
+        assert_eq!(ac.tracked_users(), 1);
+    }
+
+    #[test]
+    fn prop_tokens_stay_within_bounds_and_retry_hints_are_finite() {
+        Runner::new("admission_bounds", 0xAD71, 200).run(|g| {
+            let rate = g.f64_in(0.1, 100.0);
+            let burst = g.f64_in(0.5, 8.0);
+            let mut ac = AdmissionControl::new(0, quota(rate, burst), quota(rate, burst));
+            let mut now = 0.0;
+            for _ in 0..g.usize_in(1, 60) {
+                now += g.f64_in(0.0, 0.5);
+                let user = ["a", "b", "c"][g.usize_in(0, 2)];
+                match ac.admit(user, 0, now) {
+                    Ok(()) => {}
+                    Err(SubmitError::QuotaExceeded { retry_after_ms }) => {
+                        assert!(retry_after_ms <= 60_000, "hint bounded: {retry_after_ms}");
+                    }
+                    Err(e) => panic!("unexpected error: {e:?}"),
+                }
+                let g_tokens = ac.global.as_ref().unwrap().tokens;
+                assert!((0.0..=burst).contains(&g_tokens), "global tokens {g_tokens}");
+                for b in ac.per_user.as_ref().unwrap().1.values() {
+                    assert!((0.0..=burst).contains(&b.tokens), "user tokens {}", b.tokens);
+                }
+            }
+        });
+    }
+}

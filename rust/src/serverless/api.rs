@@ -27,6 +27,9 @@ pub const DEFAULT_EVENTS_LIMIT: usize = 500;
 pub const MAX_EVENTS_LIMIT: usize = 5000;
 /// Hard cap on `GET /v1/cluster/events?wait_ms=` (long-poll hold time).
 pub const MAX_EVENTS_WAIT_MS: u64 = 30_000;
+/// Hard cap on jobs per `POST /v1/jobs:batch` body — bounds worst-case
+/// coordinator mailbox occupancy and WAL group size per request.
+pub const MAX_BATCH_SUBMIT: usize = 256;
 
 /// Wire name of a [`JobState`].
 pub fn state_to_str(s: JobState) -> &'static str {
@@ -52,21 +55,33 @@ pub fn state_from_str(s: &str) -> Option<JobState> {
 }
 
 /// The error envelope: every non-2xx response body is
-/// `{"error":{"code":<status>,"message":"..."}}`.
+/// `{"error":{"code":<status>,"message":"..."}}`. Throttled requests
+/// (429) additionally carry `"retry_after_ms"` inside the envelope,
+/// mirroring the `Retry-After` header for clients that only read bodies.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ApiError {
     pub code: u16,
     pub message: String,
+    /// Present on 429 responses: how long the client should back off.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ApiError {
     pub fn new(code: u16, message: impl Into<String>) -> Self {
-        Self { code, message: message.into() }
+        Self { code, message: message.into(), retry_after_ms: None }
+    }
+
+    /// A 429 envelope with its backoff hint.
+    pub fn throttled(message: impl Into<String>, retry_after_ms: u64) -> Self {
+        Self { code: 429, message: message.into(), retry_after_ms: Some(retry_after_ms) }
     }
 
     pub fn to_json(&self) -> Json {
         let mut inner = Json::obj();
         inner.set("code", self.code as u64).set("message", self.message.as_str());
+        if let Some(ms) = self.retry_after_ms {
+            inner.set("retry_after_ms", ms);
+        }
         let mut j = Json::obj();
         j.set("error", inner);
         j
@@ -82,7 +97,8 @@ impl ApiError {
             .and_then(Json::as_str)
             .ok_or("error envelope missing error.message")?
             .to_string();
-        Ok(Self { code, message })
+        let retry_after_ms = j.get_path(&["error", "retry_after_ms"]).and_then(Json::as_u64);
+        Ok(Self { code, message, retry_after_ms })
     }
 
     /// Compact body string (the only way error bodies are rendered).
@@ -93,22 +109,34 @@ impl ApiError {
 
 /// `POST /v1/jobs` request body.
 ///
-/// JSON shape: `{"model":"gpt2-350m","batch":8,"samples":400}` — `model`
-/// is a zoo name (see `frenzy models`), `batch` the global batch size
-/// (1..=2^32-1), `samples` the total sample budget (> 0).
+/// JSON shape: `{"model":"gpt2-350m","batch":8,"samples":400,
+/// "user":"alice"}` — `model` is a zoo name (see `frenzy models`),
+/// `batch` the global batch size (1..=2^32-1), `samples` the total sample
+/// budget (> 0). `user` is optional (omitted = anonymous, which shares
+/// one quota bucket); it attributes the job for per-user admission
+/// quotas.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SubmitRequestV1 {
     pub model: String,
     pub batch: u32,
     pub samples: u64,
+    /// Quota principal; empty string = anonymous.
+    pub user: String,
 }
 
 impl SubmitRequestV1 {
+    pub fn new(model: impl Into<String>, batch: u32, samples: u64) -> Self {
+        Self { model: model.into(), batch, samples, user: String::new() }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("model", self.model.as_str())
             .set("batch", self.batch)
             .set("samples", self.samples);
+        if !self.user.is_empty() {
+            j.set("user", self.user.as_str());
+        }
         j
     }
 
@@ -118,6 +146,10 @@ impl SubmitRequestV1 {
         let batch = j.get("batch").and_then(Json::as_u64).ok_or("missing integer field 'batch'")?;
         let samples =
             j.get("samples").and_then(Json::as_u64).ok_or("missing integer field 'samples'")?;
+        let user = match j.get("user") {
+            None => String::new(),
+            Some(u) => u.as_str().ok_or("'user' must be a string")?.to_string(),
+        };
         if batch == 0 || batch > u32::MAX as u64 {
             return Err("'batch' must be in 1..=2^32-1".into());
         }
@@ -127,7 +159,100 @@ impl SubmitRequestV1 {
         if model.is_empty() {
             return Err("'model' must be non-empty".into());
         }
-        Ok(Self { model: model.to_string(), batch: batch as u32, samples })
+        if user.len() > 128 {
+            return Err("'user' must be at most 128 bytes".into());
+        }
+        Ok(Self { model: model.to_string(), batch: batch as u32, samples, user })
+    }
+}
+
+/// `POST /v1/jobs:batch` request body: up to [`MAX_BATCH_SUBMIT`] submits
+/// in one round trip, journaled as one WAL write group (one fsync for the
+/// whole batch under `--fsync always`).
+///
+/// JSON shape: `{"jobs":[{"model":"gpt2-350m","batch":8,"samples":400},
+/// ...]}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitBatchRequestV1 {
+    pub jobs: Vec<SubmitRequestV1>,
+}
+
+impl SubmitBatchRequestV1 {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("jobs", Json::Arr(self.jobs.iter().map(SubmitRequestV1::to_json).collect()));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let arr = j.get("jobs").and_then(Json::as_arr).ok_or("missing array field 'jobs'")?;
+        if arr.is_empty() {
+            return Err("'jobs' must be non-empty".into());
+        }
+        if arr.len() > MAX_BATCH_SUBMIT {
+            return Err(format!("'jobs' holds {} entries; max {MAX_BATCH_SUBMIT}", arr.len()));
+        }
+        let mut jobs = Vec::with_capacity(arr.len());
+        for (i, item) in arr.iter().enumerate() {
+            jobs.push(
+                SubmitRequestV1::from_json(item).map_err(|e| format!("jobs[{i}]: {e}"))?,
+            );
+        }
+        Ok(Self { jobs })
+    }
+}
+
+/// One element of a batch-submit response: an accepted job id or the
+/// per-job error that rejected it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitResultV1 {
+    Accepted { job_id: u64 },
+    Rejected(ApiError),
+}
+
+/// `POST /v1/jobs:batch` response body, positionally aligned with the
+/// request's `jobs` array.
+///
+/// JSON shape: `{"results":[{"job_id":7},
+/// {"error":{"code":429,"message":"...","retry_after_ms":250}}]}` — the
+/// batch as a whole answers 202 if *any* job was accepted, else the
+/// status of the first rejection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitBatchResponseV1 {
+    pub results: Vec<SubmitResultV1>,
+}
+
+impl SubmitBatchResponseV1 {
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| match r {
+                SubmitResultV1::Accepted { job_id } => {
+                    let mut j = Json::obj();
+                    j.set("job_id", *job_id);
+                    j
+                }
+                SubmitResultV1::Rejected(e) => e.to_json(),
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("results", Json::Arr(results));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let arr =
+            j.get("results").and_then(Json::as_arr).ok_or("missing array field 'results'")?;
+        let mut results = Vec::with_capacity(arr.len());
+        for item in arr {
+            if let Some(id) = item.get("job_id").and_then(Json::as_u64) {
+                results.push(SubmitResultV1::Accepted { job_id: id });
+            } else {
+                results.push(SubmitResultV1::Rejected(ApiError::from_json(item)?));
+            }
+        }
+        Ok(Self { results })
     }
 }
 
@@ -1129,11 +1254,15 @@ pub struct EventsRequestV1 {
     pub limit: usize,
     /// Long-poll hold time in milliseconds (0 = answer immediately).
     pub wait_ms: u64,
+    /// `stream=1`: answer as a `text/event-stream` (SSE) push channel
+    /// instead of one JSON page; `since`/`limit` seed the stream and
+    /// `wait_ms` is ignored (the stream holds the connection open).
+    pub stream: bool,
 }
 
 impl Default for EventsRequestV1 {
     fn default() -> Self {
-        Self { since: 0, limit: DEFAULT_EVENTS_LIMIT, wait_ms: 0 }
+        Self { since: 0, limit: DEFAULT_EVENTS_LIMIT, wait_ms: 0, stream: false }
     }
 }
 
@@ -1155,6 +1284,13 @@ impl EventsRequestV1 {
                     let w: u64 = v.parse().map_err(|_| format!("bad wait_ms '{v}'"))?;
                     out.wait_ms = w.min(MAX_EVENTS_WAIT_MS);
                 }
+                "stream" => {
+                    out.stream = match v {
+                        "1" | "true" => true,
+                        "0" | "false" => false,
+                        _ => return Err(format!("bad stream '{v}'")),
+                    };
+                }
                 other => return Err(format!("unknown query parameter '{other}'")),
             }
         }
@@ -1172,6 +1308,9 @@ impl EventsRequestV1 {
         }
         if self.wait_ms != 0 {
             parts.push(format!("wait_ms={}", self.wait_ms));
+        }
+        if self.stream {
+            parts.push("stream=1".to_string());
         }
         parts.join("&")
     }
@@ -1283,6 +1422,10 @@ pub struct ReportV1 {
     pub sched_work_units: u64,
     pub sched_overhead_s: f64,
     pub avg_utilization: f64,
+    /// Submits refused 429 by the pending-depth watermark since boot.
+    pub n_throttled_backpressure: u64,
+    /// Submits refused 429 by quota token buckets since boot.
+    pub n_throttled_quota: u64,
 }
 
 /// JSON cannot carry NaN/inf: empty-run means are serialized as 0.
@@ -1323,6 +1466,8 @@ impl ReportV1 {
             sched_work_units: r.sched_work_units,
             sched_overhead_s: finite(r.sched_overhead_s),
             avg_utilization: finite(r.avg_utilization),
+            n_throttled_backpressure: r.n_throttled_backpressure,
+            n_throttled_quota: r.n_throttled_quota,
         }
     }
 
@@ -1357,6 +1502,8 @@ impl ReportV1 {
             sched_work_units: self.sched_work_units,
             sched_overhead_s: self.sched_overhead_s,
             avg_utilization: self.avg_utilization,
+            n_throttled_backpressure: self.n_throttled_backpressure,
+            n_throttled_quota: self.n_throttled_quota,
         }
         .to_json()
     }
@@ -1403,6 +1550,8 @@ impl ReportV1 {
             sched_work_units: int("sched_work_units"),
             sched_overhead_s: num("sched_overhead_s"),
             avg_utilization: num("avg_utilization"),
+            n_throttled_backpressure: int("n_throttled_backpressure"),
+            n_throttled_quota: int("n_throttled_quota"),
         })
     }
 }
@@ -1451,10 +1600,13 @@ mod tests {
             if model.is_empty() {
                 model.push('m');
             }
+            let mut user = gen_string(g);
+            user.truncate(128);
             let v = SubmitRequestV1 {
                 model,
                 batch: g.u64_in(1, u32::MAX as u64) as u32,
                 samples: g.u64_in(1, MAX_EXACT),
+                user,
             };
             roundtrip(&v, SubmitRequestV1::to_json, SubmitRequestV1::from_json);
             Ok(())
@@ -1711,7 +1863,7 @@ mod tests {
 
     #[test]
     fn events_query_roundtrip_and_validation() {
-        let req = EventsRequestV1 { since: 42, limit: 7, wait_ms: 2500 };
+        let req = EventsRequestV1 { since: 42, limit: 7, wait_ms: 2500, stream: true };
         assert_eq!(EventsRequestV1::from_query(&req.to_query()).unwrap(), req);
         assert_eq!(EventsRequestV1::from_query("").unwrap(), EventsRequestV1::default());
         assert!(EventsRequestV1::from_query("since=minus").is_err());
@@ -1773,6 +1925,8 @@ mod tests {
                 sched_work_units: g.u64_in(0, MAX_EXACT),
                 sched_overhead_s: g.f64_in(0.0, 100.0),
                 avg_utilization: g.f64_in(0.0, 1.0),
+                n_throttled_backpressure: g.u64_in(0, 10_000),
+                n_throttled_quota: g.u64_in(0, 10_000),
             };
             roundtrip(&v, ReportV1::to_json, ReportV1::from_json);
             Ok(())
@@ -1844,6 +1998,68 @@ mod tests {
         assert!(parse(r#"{"model":"","batch":1,"samples":1}"#).is_err());
         assert!(parse(r#"{"batch":1,"samples":1}"#).is_err());
         assert!(parse(r#"{"model":"m","batch":4,"samples":100}"#).is_ok());
+        // user: optional, string-typed, bounded.
+        assert!(parse(r#"{"model":"m","batch":4,"samples":1,"user":7}"#).is_err());
+        let long = format!(r#"{{"model":"m","batch":4,"samples":1,"user":"{}"}}"#, "u".repeat(200));
+        assert!(parse(&long).is_err());
+        let v = parse(r#"{"model":"m","batch":4,"samples":1,"user":"alice"}"#).unwrap();
+        assert_eq!(v.user, "alice");
+        // anonymous submits serialize without a user key (wire backcompat).
+        assert!(!SubmitRequestV1::new("m", 4, 1).to_json().to_string_compact().contains("user"));
+    }
+
+    #[test]
+    fn prop_submit_batch_roundtrip() {
+        Runner::new("batch dto roundtrip", 0xBA7C4, 100).run(|g| {
+            let jobs: Vec<SubmitRequestV1> = (0..g.usize_in(1, 8))
+                .map(|i| SubmitRequestV1 {
+                    model: format!("m{i}"),
+                    batch: g.u64_in(1, 64) as u32,
+                    samples: g.u64_in(1, 10_000),
+                    user: if g.bool() { "alice".into() } else { String::new() },
+                })
+                .collect();
+            let req = SubmitBatchRequestV1 { jobs };
+            roundtrip(&req, SubmitBatchRequestV1::to_json, SubmitBatchRequestV1::from_json);
+            let resp = SubmitBatchResponseV1 {
+                results: (0..g.usize_in(0, 8))
+                    .map(|i| {
+                        if g.bool() {
+                            SubmitResultV1::Accepted { job_id: i as u64 }
+                        } else {
+                            SubmitResultV1::Rejected(ApiError::throttled("slow down", 250))
+                        }
+                    })
+                    .collect(),
+            };
+            roundtrip(&resp, SubmitBatchResponseV1::to_json, SubmitBatchResponseV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn submit_batch_validation() {
+        let parse = |s: &str| SubmitBatchRequestV1::from_json(&json::parse(s).unwrap());
+        assert!(parse(r#"{"jobs":[]}"#).is_err(), "empty batch");
+        assert!(parse(r#"{}"#).is_err(), "missing jobs");
+        let err = parse(r#"{"jobs":[{"model":"m","batch":0,"samples":1}]}"#).unwrap_err();
+        assert!(err.starts_with("jobs[0]:"), "per-element error is indexed: {err}");
+        let one = r#"{"model":"m","batch":1,"samples":1}"#;
+        let over = format!(r#"{{"jobs":[{}]}}"#, vec![one; MAX_BATCH_SUBMIT + 1].join(","));
+        assert!(parse(&over).unwrap_err().contains("max"), "oversized batch rejected");
+        let full = format!(r#"{{"jobs":[{}]}}"#, vec![one; MAX_BATCH_SUBMIT].join(","));
+        assert_eq!(parse(&full).unwrap().jobs.len(), MAX_BATCH_SUBMIT);
+    }
+
+    #[test]
+    fn throttled_error_carries_retry_after() {
+        let e = ApiError::throttled("global quota exhausted", 1500);
+        let j = json::parse(&e.body()).unwrap();
+        assert_eq!(j.get_path(&["error", "retry_after_ms"]).unwrap().as_u64(), Some(1500));
+        assert_eq!(ApiError::from_json(&j).unwrap(), e);
+        // Plain errors keep the old two-field envelope.
+        let plain = ApiError::new(400, "bad");
+        assert!(plain.to_json().get_path(&["error", "retry_after_ms"]).is_none());
     }
 
     #[test]

@@ -16,9 +16,10 @@
 //! connection is re-established transparently (one retry per request).
 
 use super::api::{
-    ApiError, CancelResponseV1, ClusterInfoV1, DurabilityV1, EventsRequestV1, EventsResponseV1,
-    JobStatusV1, ListRequestV1, ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1,
-    ScaleRequestV1, ScaleResponseV1, SubmitRequestV1, SubmitResponseV1,
+    ApiError, CancelResponseV1, ClusterInfoV1, DurabilityV1, EventV1, EventsRequestV1,
+    EventsResponseV1, JobStatusV1, ListRequestV1, ListResponseV1, PredictRequestV1,
+    PredictResponseV1, ReportV1, ScaleRequestV1, ScaleResponseV1, SubmitBatchRequestV1,
+    SubmitBatchResponseV1, SubmitRequestV1, SubmitResponseV1,
 };
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Context, Result};
@@ -42,6 +43,15 @@ struct Conn {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
     last_used: Instant,
+}
+
+/// Result of a single submit attempt ([`FrenzyClient::submit_once`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// 202: the job was durably accepted and queued.
+    Accepted { job_id: u64 },
+    /// 429: admission control shed the submit; retry after the hint.
+    Throttled { retry_after_ms: u64 },
 }
 
 impl FrenzyClient {
@@ -195,15 +205,71 @@ impl FrenzyClient {
         Ok(j.get("ok").and_then(Json::as_bool).unwrap_or(false))
     }
 
-    /// `POST /v1/jobs` — submit a model; returns the job id.
+    /// `POST /v1/jobs` — submit a model; returns the job id. A `429 Too
+    /// Many Requests` is honored with capped exponential backoff (the
+    /// server's `Retry-After` hint is the floor of every pause) for up to
+    /// [`FrenzyClient::MAX_SUBMIT_RETRIES`] attempts.
     pub fn submit(&mut self, model: &str, batch: u32, samples: u64) -> Result<u64> {
-        let body = SubmitRequestV1 { model: model.to_string(), batch, samples }
-            .to_json()
-            .to_string_compact();
+        self.submit_as(model, batch, samples, "")
+    }
+
+    /// Total submit attempts before a persistent 429 becomes an error.
+    pub const MAX_SUBMIT_RETRIES: usize = 5;
+    /// Ceiling on any single backoff pause.
+    const BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+    /// [`FrenzyClient::submit`] attributed to a quota principal (the
+    /// `user` field on the submit body; empty = anonymous).
+    pub fn submit_as(&mut self, model: &str, batch: u32, samples: u64, user: &str) -> Result<u64> {
+        let mut req = SubmitRequestV1::new(model, batch, samples);
+        req.user = user.to_string();
+        let mut backoff = Duration::from_millis(50);
+        for _ in 0..Self::MAX_SUBMIT_RETRIES {
+            match self.submit_once(&req)? {
+                SubmitOutcome::Accepted { job_id } => return Ok(job_id),
+                SubmitOutcome::Throttled { retry_after_ms } => {
+                    let hint = Duration::from_millis(retry_after_ms);
+                    std::thread::sleep(backoff.max(hint).min(Self::BACKOFF_CAP));
+                    backoff = (backoff * 2).min(Self::BACKOFF_CAP);
+                }
+            }
+        }
+        bail!(
+            "throttled (429) after {} attempts — the server is shedding load",
+            Self::MAX_SUBMIT_RETRIES
+        )
+    }
+
+    /// One submit attempt with no backoff: a 429 comes back as
+    /// [`SubmitOutcome::Throttled`] instead of an error or a sleep. The
+    /// ingest bench rides on this to count throttles instead of stalling
+    /// its workers.
+    pub fn submit_once(&mut self, req: &SubmitRequestV1) -> Result<SubmitOutcome> {
+        let body = req.to_json().to_string_compact();
         // A lost response leaves it unknown whether the job was created:
-        // never auto-retried.
-        let j = self.call("POST", "/v1/jobs", &body, false)?;
-        Ok(SubmitResponseV1::from_json(&j).map_err(|e| anyhow!(e))?.job_id)
+        // never auto-retried at the transport layer.
+        let (status, j) = self.call_with("POST", "/v1/jobs", &body, false, &[429])?;
+        if status == 429 {
+            let e = ApiError::from_json(&j).map_err(|e| anyhow!(e))?;
+            return Ok(SubmitOutcome::Throttled {
+                retry_after_ms: e.retry_after_ms.unwrap_or(1000),
+            });
+        }
+        let id = SubmitResponseV1::from_json(&j).map_err(|e| anyhow!(e))?.job_id;
+        Ok(SubmitOutcome::Accepted { job_id: id })
+    }
+
+    /// `POST /v1/jobs:batch` — up to [`super::api::MAX_BATCH_SUBMIT`] jobs
+    /// in one round trip (one coordinator message, one WAL fsync).
+    /// Results are positional and per-job: mixed acceptance is normal.
+    /// When *nothing* was accepted the envelope status is the first
+    /// rejection's (e.g. 429), but the body still parses the same way.
+    /// Not auto-retried — a lost response leaves acceptance unknown.
+    pub fn submit_batch(&mut self, jobs: &[SubmitRequestV1]) -> Result<SubmitBatchResponseV1> {
+        let body = SubmitBatchRequestV1 { jobs: jobs.to_vec() }.to_json().to_string_compact();
+        let (_status, j) = self.call_with("POST", "/v1/jobs:batch", &body, false, &[400, 429])?;
+        SubmitBatchResponseV1::from_json(&j)
+            .map_err(|e| anyhow!("{e} (is the server too old for jobs:batch?)"))
     }
 
     /// `GET /v1/jobs/<id>` — `None` when the job does not exist.
@@ -271,6 +337,100 @@ impl FrenzyClient {
             self.call("GET", &path, "", true)
         };
         EventsResponseV1::from_json(&result?).map_err(|e| anyhow!(e))
+    }
+
+    /// `GET /v1/cluster/events?stream=1` — subscribe to the server-sent-
+    /// events push feed on a dedicated connection and invoke `on_event`
+    /// for each event as the server emits it (no polling). Returns the
+    /// last delivered sequence number when the server ends the stream or
+    /// the connection goes quiet past the heartbeat window; `on_event`
+    /// returning `false` ends the subscription early. A subscribe-time
+    /// error (non-200, not `text/event-stream`) is an `Err` — callers
+    /// fall back to long-polling [`FrenzyClient::events`], seeding
+    /// `since` with the returned sequence to avoid gaps.
+    pub fn events_stream(
+        &mut self,
+        req: &EventsRequestV1,
+        mut on_event: impl FnMut(&EventV1) -> bool,
+    ) -> Result<u64> {
+        let mut sreq = req.clone();
+        sreq.stream = true;
+        sreq.wait_ms = 0;
+        let stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connecting to frenzy server at {}", self.addr))?;
+        // The server heartbeats an idle stream every second; several times
+        // that with no bytes at all means it is gone.
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        let mut writer = stream.try_clone()?;
+        write!(
+            writer,
+            "GET /v1/cluster/events?{} HTTP/1.1\r\nHost: frenzy\r\nAccept: text/event-stream\r\nConnection: close\r\n\r\n",
+            sreq.to_query()
+        )?;
+        writer.flush()?;
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        if reader.read_line(&mut status_line)? == 0 {
+            bail!("server closed the connection");
+        }
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("malformed status line '{}'", status_line.trim()))?;
+        let mut is_sse = false;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                bail!("connection closed in response headers");
+            }
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.eq_ignore_ascii_case("content-type")
+                    && v.trim().starts_with("text/event-stream")
+                {
+                    is_sse = true;
+                }
+            }
+        }
+        if status != 200 || !is_sse {
+            bail!("server did not open an event stream (status {status})");
+        }
+        let mut last_seq = sreq.since;
+        let mut data = String::new();
+        loop {
+            let mut line = String::new();
+            match reader.read_line(&mut line) {
+                // Server closed the stream, or it went silent past the
+                // heartbeat window: hand the cursor back so the caller can
+                // resubscribe (or long-poll) from where delivery stopped.
+                Ok(0) | Err(_) => return Ok(last_seq),
+                Ok(_) => {}
+            }
+            let line = line.trim_end();
+            if let Some(rest) = line.strip_prefix("data:") {
+                if !data.is_empty() {
+                    data.push('\n');
+                }
+                data.push_str(rest.trim_start());
+            } else if line.is_empty() && !data.is_empty() {
+                // Blank line = frame boundary: dispatch the buffered event.
+                let parsed = json::parse(&data)
+                    .map_err(|e| anyhow!("unparseable SSE frame: {e}: {data}"))?;
+                let ev = EventV1::from_json(&parsed).map_err(|e| anyhow!(e))?;
+                last_seq = last_seq.max(ev.seq);
+                data.clear();
+                if !on_event(&ev) {
+                    return Ok(last_seq);
+                }
+            }
+            // `id:` lines duplicate the seq already inside the JSON and
+            // `:` comments are keep-alives — both fall through ignored.
+        }
     }
 
     /// `GET /v1/report` — the coordinator's streaming run report.

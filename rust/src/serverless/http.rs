@@ -85,7 +85,7 @@ mod tests {
         .unwrap();
         let mut response = String::new();
         stream.read_to_string(&mut response).unwrap();
-        assert!(response.starts_with("HTTP/1.1 200"), "{response}");
+        assert!(response.starts_with("HTTP/1.1 202"), "{response}");
         assert!(response.contains("job_id"));
         assert!(response.contains("Connection: close"), "{response}");
         stop.store(true, Ordering::Relaxed);

@@ -51,12 +51,14 @@
 //! (thread-pool HTTP front-end), and [`client`] (the blocking Rust SDK);
 //! [`http`] re-exports the pre-v1 entry points.
 
+pub mod admission;
 pub mod api;
 pub mod client;
 pub mod http;
 pub mod server;
 
 use crate::cluster::ClusterState;
+use crate::config::models::ModelConfig;
 use crate::config::{ClusterSpec, LinkKind, NodeSpec};
 use crate::durability::{
     recover, DurabilityStatus, FsyncPolicy, SharedJournal, SnapshotStore, Wal, WalRecord,
@@ -73,6 +75,7 @@ use crate::metrics::RunReport;
 use crate::runtime::executor::{TrainExecutor, TrainRequest, TrainResult};
 use crate::sched::{has::Has, opportunistic::Opportunistic, sia::Sia, Scheduler};
 use crate::util::json::Json;
+use admission::AdmissionControl;
 use anyhow::{anyhow, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -85,6 +88,75 @@ pub struct SubmitRequest {
     pub model: String,
     pub global_batch: u32,
     pub total_samples: u64,
+}
+
+/// Why a submit was turned away at the front door. `UnknownModel` maps to
+/// HTTP 400; the throttles map to 429 with their `retry_after_ms` carried
+/// into the `Retry-After` header and error body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitError {
+    /// No such model in the zoo. Resolved on the submitting thread — an
+    /// unknown model never reaches the coordinator mailbox.
+    UnknownModel(String),
+    /// The engine's pending queue hit the configured watermark
+    /// ([`CoordinatorConfig::max_pending`]).
+    Backpressure { retry_after_ms: u64 },
+    /// A token bucket (per-user or global) ran dry.
+    QuotaExceeded { retry_after_ms: u64 },
+}
+
+impl SubmitError {
+    /// `Retry-After` hint in milliseconds; `None` for non-throttle errors.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            SubmitError::UnknownModel(_) => None,
+            SubmitError::Backpressure { retry_after_ms }
+            | SubmitError::QuotaExceeded { retry_after_ms } => Some(*retry_after_ms),
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            SubmitError::Backpressure { retry_after_ms } => {
+                write!(f, "pending queue full, retry in {retry_after_ms} ms")
+            }
+            SubmitError::QuotaExceeded { retry_after_ms } => {
+                write!(f, "submit quota exceeded, retry in {retry_after_ms} ms")
+            }
+        }
+    }
+}
+
+/// A submit the caller's thread already validated and resolved: the
+/// coordinator mailbox receives typed messages carrying the looked-up
+/// [`ModelConfig`], never raw strings that still need a zoo lookup on the
+/// single coordinator thread.
+struct AdmittedSubmit {
+    model: ModelConfig,
+    global_batch: u32,
+    total_samples: u64,
+    /// Quota principal; empty = anonymous (shares one bucket).
+    user: String,
+}
+
+/// Off-coordinator half of the accept pipeline: model resolution happens
+/// here, on whichever thread calls the [`Handle`].
+fn resolve_submit(
+    req: SubmitRequest,
+    user: &str,
+) -> std::result::Result<AdmittedSubmit, SubmitError> {
+    match crate::config::models::model_by_name(&req.model) {
+        None => Err(SubmitError::UnknownModel(req.model)),
+        Some(model) => Ok(AdmittedSubmit {
+            model,
+            global_batch: req.global_batch,
+            total_samples: req.total_samples,
+            user: user.to_string(),
+        }),
+    }
 }
 
 /// Job status snapshot returned by queries.
@@ -184,7 +256,15 @@ pub struct ScaleReport {
 }
 
 enum Msg {
-    Submit(SubmitRequest, mpsc::Sender<Result<JobId, String>>),
+    Submit(AdmittedSubmit, mpsc::Sender<std::result::Result<JobId, SubmitError>>),
+    /// Batched submit: entries were resolved on the caller's thread
+    /// (`Err` slots are unknown models that never cost coordinator work);
+    /// the whole batch is journaled as one WAL write group, so the fsync
+    /// is amortized while persist-before-ack still holds for every entry.
+    SubmitBatch(
+        Vec<std::result::Result<AdmittedSubmit, SubmitError>>,
+        mpsc::Sender<Vec<std::result::Result<JobId, SubmitError>>>,
+    ),
     Query(JobId, mpsc::Sender<Option<JobStatus>>),
     Cancel(JobId, mpsc::Sender<CancelOutcome>),
     List(api::ListRequestV1, mpsc::Sender<ListPage>),
@@ -240,9 +320,44 @@ impl Handle {
 
     /// Like [`Handle::submit`], but keeps transport failures (outer `Err`:
     /// coordinator gone) separate from domain rejections (inner `Err`:
-    /// unknown model) so callers can map them to 500 vs 400.
-    pub fn try_submit(&self, req: SubmitRequest) -> Result<std::result::Result<JobId, String>> {
-        self.ask(|rtx| Msg::Submit(req, rtx))
+    /// unknown model / throttled) so callers can map them to 500 vs
+    /// 400/429.
+    pub fn try_submit(
+        &self,
+        req: SubmitRequest,
+    ) -> Result<std::result::Result<JobId, SubmitError>> {
+        self.try_submit_as(req, "")
+    }
+
+    /// [`Handle::try_submit`] attributed to a quota principal. The model
+    /// lookup runs here — on the caller's thread — so the coordinator
+    /// only ever sees typed, already-resolved submissions.
+    pub fn try_submit_as(
+        &self,
+        req: SubmitRequest,
+        user: &str,
+    ) -> Result<std::result::Result<JobId, SubmitError>> {
+        match resolve_submit(req, user) {
+            Err(e) => Ok(Err(e)),
+            Ok(adm) => self.ask(|rtx| Msg::Submit(adm, rtx)),
+        }
+    }
+
+    /// Submit many jobs in one coordinator round-trip, journaled as a
+    /// single WAL write group (one fsync for the whole batch). Results
+    /// are positional; each entry succeeds or fails independently, and a
+    /// batch member is indistinguishable from a single submit afterwards
+    /// (same WAL records, same engine state — the replay-identity test
+    /// pins this).
+    pub fn submit_batch(
+        &self,
+        reqs: Vec<(SubmitRequest, String)>,
+    ) -> Result<Vec<std::result::Result<JobId, SubmitError>>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let entries = reqs.into_iter().map(|(req, user)| resolve_submit(req, &user)).collect();
+        self.ask(|rtx| Msg::SubmitBatch(entries, rtx))
     }
 
     pub fn status(&self, id: JobId) -> Result<Option<JobStatus>> {
@@ -465,6 +580,17 @@ pub struct CoordinatorConfig {
     /// Take a snapshot (and prune covered WAL segments) every this many
     /// WAL records. Bounds recovery replay time.
     pub snapshot_every: u64,
+    /// Ingest backpressure: reject submits with 429 once the engine's
+    /// pending queue holds this many jobs (0 disables the watermark). The
+    /// default is generous — it exists to bound memory under a storm, not
+    /// to shape everyday traffic.
+    pub max_pending: usize,
+    /// Per-user submit quota (token bucket; `None` disables). Users are
+    /// the `user` field on SubmitV1; the empty string is the shared
+    /// anonymous principal.
+    pub user_quota: Option<admission::QuotaCfg>,
+    /// Cluster-wide submit quota across all users (`None` disables).
+    pub global_quota: Option<admission::QuotaCfg>,
 }
 
 impl Default for CoordinatorConfig {
@@ -488,6 +614,9 @@ impl Default for CoordinatorConfig {
             data_dir: None,
             fsync: FsyncPolicy::EveryN(32),
             snapshot_every: 256,
+            max_pending: 100_000,
+            user_quota: None,
+            global_quota: None,
         }
     }
 }
@@ -875,6 +1004,84 @@ fn fold_tail_step(
     Ok(())
 }
 
+/// One submission through admission control and the engine — shared by
+/// `Msg::Submit` and `Msg::SubmitBatch`, so a batch member is
+/// indistinguishable from a single submit in the WAL and the engine
+/// afterwards (the replay-identity differential test pins this).
+#[allow(clippy::too_many_arguments)]
+fn submit_one(
+    adm: AdmittedSubmit,
+    admission: &mut AdmissionControl,
+    engine: &mut SchedulingEngine<'_>,
+    wall: &mut WallClock,
+    marp: &Marp,
+    jobs: &mut HashMap<JobId, LiveJob>,
+    retention: &mut RetentionQueue,
+    next_id: &mut JobId,
+    admission_rejected: &mut usize,
+    durable: &Option<Durability>,
+    cfg: &CoordinatorConfig,
+    executor: &Option<TrainExecutor>,
+    tx_internal: &mpsc::Sender<Msg>,
+) -> std::result::Result<JobId, SubmitError> {
+    let clock = wall.now();
+    // Throttling happens before a job id is minted or anything is
+    // journaled: a 429'd submit leaves no trace in the WAL (replay
+    // identity holds) and costs one pending-depth read plus two bucket
+    // refills on the coordinator.
+    admission.admit(&adm.user, engine.pending_count(), clock)?;
+    let spec_job = JobSpec::new(*next_id, adm.model, adm.global_batch, adm.total_samples, clock);
+    // Admission feasibility: MARP must find at least one plan.
+    let plans = marp.plans(&spec_job.model, &spec_job.train);
+    let id = *next_id;
+    *next_id += 1;
+    jobs.insert(
+        id,
+        LiveJob {
+            spec: spec_job.clone(),
+            state: if plans.is_empty() { JobState::Rejected } else { JobState::Queued },
+            gpus: 0,
+            losses: Vec::new(),
+            submit_t: clock,
+            start_t: None,
+            // An admission rejection is terminal immediately:
+            // finish_time must be set like every other terminal
+            // transition (the API promises non-null there).
+            finish_t: if plans.is_empty() { Some(clock) } else { None },
+            attempts: 0,
+        },
+    );
+    if plans.is_empty() {
+        // Persist-before-effect: the reject record reaches the WAL before
+        // the caller's ack (the Arrival path gets the same guarantee
+        // inside `engine.handle`).
+        if let Some(d) = durable {
+            d.wal
+                .borrow_mut()
+                .append(&WalRecord::AdmissionReject {
+                    time: clock,
+                    job: id,
+                    model: spec_job.model.name.to_string(),
+                    batch: spec_job.train.global_batch,
+                    samples: spec_job.total_samples,
+                })
+                .expect("durability: WAL append failed");
+        }
+        *admission_rejected += 1;
+        engine.record_event(
+            clock,
+            EventKind::Rejected { job: id, reason: RejectReason::AdmissionInfeasible },
+        );
+        note_terminal(jobs, retention, id);
+        return Ok(id); // accepted-but-rejected, visible via status
+    }
+    let mut fx = engine.handle(ClusterEvent::Arrival(spec_job), wall);
+    fx.merge(engine.run_round(wall));
+    apply_effects(&fx, jobs, retention, wall.now());
+    dispatch_effects(&fx, jobs, cfg, executor, tx_internal);
+    Ok(id)
+}
+
 fn coordinator_loop(
     spec: ClusterSpec,
     cfg: CoordinatorConfig,
@@ -941,6 +1148,7 @@ fn coordinator_loop(
     let mut retention = RetentionQueue::new(cfg.retain_terminal_jobs);
     let mut next_id: JobId = 1;
     let mut admission_rejected = 0usize;
+    let mut admission = AdmissionControl::new(cfg.max_pending, cfg.global_quota, cfg.user_quota);
     let mut drain_waiters: Vec<mpsc::Sender<()>> = Vec::new();
     // Long-poll event listeners: parked until an event past their `since`
     // or their deadline. Every parked listener holds one HTTP worker on
@@ -1035,71 +1243,62 @@ fn coordinator_loop(
         };
         match msg {
             Msg::Shutdown => break,
-            Msg::Submit(req, reply) => {
-                let Some(model) = crate::config::models::model_by_name(&req.model) else {
-                    let _ = reply.send(Err(format!("unknown model '{}'", req.model)));
-                    continue;
-                };
-                let clock = wall.now();
-                let spec_job =
-                    JobSpec::new(next_id, model, req.global_batch, req.total_samples, clock);
-                // Admission control: MARP must find at least one plan.
-                let plans = marp.plans(&spec_job.model, &spec_job.train);
-                let id = next_id;
-                next_id += 1;
-                jobs.insert(
-                    id,
-                    LiveJob {
-                        spec: spec_job.clone(),
-                        state: if plans.is_empty() { JobState::Rejected } else { JobState::Queued },
-                        gpus: 0,
-                        losses: Vec::new(),
-                        submit_t: clock,
-                        start_t: None,
-                        // An admission rejection is terminal immediately:
-                        // finish_time must be set like every other terminal
-                        // transition (the API promises non-null there).
-                        finish_t: if plans.is_empty() { Some(clock) } else { None },
-                        attempts: 0,
-                    },
+            Msg::Submit(adm, reply) => {
+                let res = submit_one(
+                    adm,
+                    &mut admission,
+                    &mut engine,
+                    &mut wall,
+                    &marp,
+                    &mut jobs,
+                    &mut retention,
+                    &mut next_id,
+                    &mut admission_rejected,
+                    &durable,
+                    &cfg,
+                    &executor,
+                    &tx_internal,
                 );
-                if plans.is_empty() {
-                    // Persist-before-effect: the reject record reaches the
-                    // WAL before the caller's ack (the Arrival path gets
-                    // the same guarantee inside `engine.handle`).
-                    if let Some(d) = &durable {
-                        d.wal
-                            .borrow_mut()
-                            .append(&WalRecord::AdmissionReject {
-                                time: clock,
-                                job: id,
-                                model: req.model.clone(),
-                                batch: req.global_batch,
-                                samples: req.total_samples,
-                            })
-                            .expect("durability: WAL append failed");
-                    }
-                    admission_rejected += 1;
-                    engine.record_event(
-                        clock,
-                        EventKind::Rejected {
-                            job: id,
-                            reason: RejectReason::AdmissionInfeasible,
-                        },
-                    );
-                    note_terminal(&mut jobs, &mut retention, id);
-                    let _ = reply.send(Ok(id)); // accepted-but-rejected, visible via status
-                    continue;
+                // Reply after dispatch (submit_one dispatches before it
+                // returns) so an instant stub's completion is already in
+                // the mailbox before the caller's next message —
+                // sequential submitters then observe deterministic
+                // ordering (the differential trace test relies on this).
+                let _ = reply.send(res);
+            }
+            Msg::SubmitBatch(entries, reply) => {
+                // One WAL write group around the whole batch: every record
+                // still reaches the OS before the ack below
+                // (persist-before-effect), but the fsync happens once at
+                // group end instead of per record.
+                if let Some(d) = &durable {
+                    d.wal.borrow_mut().begin_group();
                 }
-                let mut fx = engine.handle(ClusterEvent::Arrival(spec_job), &mut wall);
-                fx.merge(engine.run_round(&mut wall));
-                apply_effects(&fx, &mut jobs, &mut retention, wall.now());
-                dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
-                // Reply after dispatch so an instant stub's completion is
-                // already in the mailbox before the caller's next message —
-                // sequential submitters then observe deterministic ordering
-                // (the differential trace test relies on this).
-                let _ = reply.send(Ok(id));
+                let mut results = Vec::with_capacity(entries.len());
+                for entry in entries {
+                    results.push(match entry {
+                        Err(e) => Err(e),
+                        Ok(adm) => submit_one(
+                            adm,
+                            &mut admission,
+                            &mut engine,
+                            &mut wall,
+                            &marp,
+                            &mut jobs,
+                            &mut retention,
+                            &mut next_id,
+                            &mut admission_rejected,
+                            &durable,
+                            &cfg,
+                            &executor,
+                            &tx_internal,
+                        ),
+                    });
+                }
+                if let Some(d) = &durable {
+                    d.wal.borrow_mut().end_group().expect("durability: WAL group sync");
+                }
+                let _ = reply.send(results);
             }
             Msg::Tick => {
                 // Round-timer tick: clear the engine's tick latch and give
@@ -1301,7 +1500,7 @@ fn coordinator_loop(
             Msg::Report(reply) => {
                 let now = wall.now();
                 let util = engine.utilization_to(now);
-                let _ = reply.send(RunReport::from_aggregates(
+                let mut report = RunReport::from_aggregates(
                     engine.scheduler_name(),
                     "serverless",
                     engine.aggregates(),
@@ -1309,7 +1508,13 @@ fn coordinator_loop(
                     engine.work_units(),
                     engine.sched_wall_s(),
                     util,
-                ));
+                );
+                // Since-boot by design, never journaled: a throttled
+                // submit leaves no WAL trace, so these counters restart
+                // with the process while `n_rejected` survives recovery.
+                report.n_throttled_backpressure = admission.n_backpressure;
+                report.n_throttled_quota = admission.n_quota;
+                let _ = reply.send(report);
             }
             Msg::Events(since, limit, reply) => {
                 let _ = reply.send(engine.event_log().since(since, limit));

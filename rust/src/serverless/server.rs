@@ -14,11 +14,12 @@
 //! `413` instead of silent truncation.
 
 use super::api::{
-    ApiError, CancelResponseV1, ClusterInfoV1, DurabilityV1, EventsRequestV1, EventsResponseV1,
-    JobStatusV1, ListRequestV1, ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1,
-    ScaleRequestV1, ScaleResponseV1, SubmitRequestV1, SubmitResponseV1,
+    ApiError, CancelResponseV1, ClusterInfoV1, DurabilityV1, EventV1, EventsRequestV1,
+    EventsResponseV1, JobStatusV1, ListRequestV1, ListResponseV1, PredictRequestV1,
+    PredictResponseV1, ReportV1, ScaleRequestV1, ScaleResponseV1, SubmitBatchRequestV1,
+    SubmitBatchResponseV1, SubmitRequestV1, SubmitResultV1,
 };
-use super::{CancelOutcome, Handle, ScaleOp, SubmitRequest};
+use super::{CancelOutcome, Handle, ScaleOp, SubmitError, SubmitRequest};
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -121,22 +122,31 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<Request> {
     }
 }
 
-/// A routed response: status, JSON body, and an optional `Allow` header
-/// (present exactly on 405s).
+/// A routed response: status, JSON body, an optional `Allow` header
+/// (present exactly on 405s), and an optional `Retry-After` hint in
+/// milliseconds (present exactly on 429/503 throttles; the header itself
+/// is emitted in whole seconds, rounded up, per RFC 9110).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Response {
     pub status: u16,
     pub body: String,
     pub allow: Option<&'static str>,
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
     fn ok(body: String) -> Self {
-        Self { status: 200, body, allow: None }
+        Self { status: 200, body, allow: None, retry_after: None }
+    }
+
+    /// `202 Accepted`: the resource was created/queued; completion is not
+    /// implied. The submit paths use this.
+    fn accepted(body: String) -> Self {
+        Self { status: 202, body, allow: None, retry_after: None }
     }
 
     fn err(status: u16, message: impl Into<String>) -> Self {
-        Self { status, body: ApiError::new(status, message).body(), allow: None }
+        Self { status, body: ApiError::new(status, message).body(), allow: None, retry_after: None }
     }
 
     fn method_not_allowed(allow: &'static str) -> Self {
@@ -144,6 +154,22 @@ impl Response {
             status: 405,
             body: ApiError::new(405, format!("method not allowed (allow: {allow})")).body(),
             allow: Some(allow),
+            retry_after: None,
+        }
+    }
+
+    /// Map a domain submit rejection: unknown model is the caller's fault
+    /// (400); throttles are `429 Too Many Requests` carrying the
+    /// coordinator's retry hint in both the body and the header.
+    fn from_submit_error(e: &SubmitError) -> Self {
+        match e.retry_after_ms() {
+            None => Response::err(400, e.to_string()),
+            Some(ms) => Response {
+                status: 429,
+                body: ApiError::throttled(e.to_string(), ms).body(),
+                allow: None,
+                retry_after: Some(ms),
+            },
         }
     }
 }
@@ -151,12 +177,15 @@ impl Response {
 fn reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
+        202 => "Accepted",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Error",
     }
 }
@@ -166,14 +195,21 @@ fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) {
         Some(a) => format!("Allow: {a}\r\n"),
         None => String::new(),
     };
+    let retry = match resp.retry_after {
+        // Milliseconds → whole seconds, rounded up: `Retry-After: 0`
+        // would tell clients to hammer immediately.
+        Some(ms) => format!("Retry-After: {}\r\n", ms.div_ceil(1000)),
+        None => String::new(),
+    };
     let conn = if keep_alive { "keep-alive" } else { "close" };
     let _ = write!(
         stream,
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{}Connection: {}\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{}{}Connection: {}\r\n\r\n{}",
         resp.status,
         reason(resp.status),
         resp.body.len(),
         allow,
+        retry,
         conn,
         resp.body
     );
@@ -196,7 +232,7 @@ fn allowed_methods(path: &str) -> Option<&'static str> {
         "/v1/healthz" | "/v1/cluster" | "/v1/cluster/events" | "/v1/report"
         | "/v1/durability" => Some("GET"),
         "/v1/jobs" => Some("GET, POST"),
-        "/v1/predict" | "/v1/cluster/scale" => Some("POST"),
+        "/v1/jobs:batch" | "/v1/predict" | "/v1/cluster/scale" => Some("POST"),
         _ => {
             let rest = path.strip_prefix("/v1/jobs/")?;
             if rest.is_empty() {
@@ -240,6 +276,7 @@ pub fn route_full(handle: &Handle, req: &Request) -> Response {
             Err(e) => Response::err(500, e.to_string()),
         }),
         ("POST", "/v1/jobs") => Some(handle_submit(handle, &req.body)),
+        ("POST", "/v1/jobs:batch") => Some(handle_submit_batch(handle, &req.body)),
         ("GET", "/v1/jobs") => Some(handle_list(handle, query)),
         ("POST", "/v1/predict") => Some(handle_predict(handle, &req.body)),
         ("POST", "/v1/cluster/scale") => Some(handle_scale(handle, &req.body)),
@@ -282,6 +319,13 @@ pub fn route(handle: &Handle, req: &Request) -> (u16, String) {
     (r.status, r.body)
 }
 
+/// Pre-rendered hot-path ack: the submit response is two fixed byte
+/// strings around one integer, so the worker emits it without building a
+/// `Json` tree (a test pins byte-equality against `SubmitResponseV1`).
+fn render_submit_ack(id: u64) -> String {
+    format!("{{\"job_id\":{id}}}")
+}
+
 fn handle_submit(handle: &Handle, body: &str) -> Response {
     let parsed = match parse_body(body) {
         Ok(p) => p,
@@ -291,17 +335,67 @@ fn handle_submit(handle: &Handle, body: &str) -> Response {
         Ok(s) => s,
         Err(e) => return Response::err(400, e),
     };
-    match handle.try_submit(SubmitRequest {
-        model: sub.model,
-        global_batch: sub.batch,
-        total_samples: sub.samples,
-    }) {
-        Ok(Ok(id)) => Response::ok(SubmitResponseV1 { job_id: id }.to_json().to_string_compact()),
-        // Domain rejection (unknown model) is the caller's fault …
-        Ok(Err(e)) => Response::err(400, e),
+    let req =
+        SubmitRequest { model: sub.model, global_batch: sub.batch, total_samples: sub.samples };
+    match handle.try_submit_as(req, &sub.user) {
+        // 202: queued (or admission-rejected with a terminal status) —
+        // creation is acknowledged, completion is not implied.
+        Ok(Ok(id)) => Response::accepted(render_submit_ack(id)),
+        // Domain rejection (unknown model / throttled) is the caller's …
+        Ok(Err(e)) => Response::from_submit_error(&e),
         // … a dead coordinator is ours.
         Err(e) => Response::err(500, e.to_string()),
     }
+}
+
+fn handle_submit_batch(handle: &Handle, body: &str) -> Response {
+    let parsed = match parse_body(body) {
+        Ok(p) => p,
+        Err(r) => return r,
+    };
+    let breq = match SubmitBatchRequestV1::from_json(&parsed) {
+        Ok(b) => b,
+        Err(e) => return Response::err(400, e),
+    };
+    let reqs = breq
+        .jobs
+        .into_iter()
+        .map(|j| {
+            let req =
+                SubmitRequest { model: j.model, global_batch: j.batch, total_samples: j.samples };
+            (req, j.user)
+        })
+        .collect();
+    let results = match handle.submit_batch(reqs) {
+        Ok(r) => r,
+        Err(e) => return Response::err(500, e.to_string()),
+    };
+    // Envelope status: 202 when any job was accepted, else the first
+    // rejection's status — so an all-throttled batch still reads as 429
+    // (with its Retry-After) to naive clients.
+    let mut envelope: Option<Response> = None;
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        match r {
+            Ok(id) => {
+                envelope = Some(Response::accepted(String::new()));
+                out.push(SubmitResultV1::Accepted { job_id: id });
+            }
+            Err(e) => {
+                let per_job = Response::from_submit_error(&e);
+                if envelope.is_none() {
+                    envelope = Some(per_job);
+                }
+                out.push(SubmitResultV1::Rejected(match e.retry_after_ms() {
+                    Some(ms) => ApiError::throttled(e.to_string(), ms),
+                    None => ApiError::new(400, e.to_string()),
+                }));
+            }
+        }
+    }
+    let mut resp = envelope.unwrap_or_else(|| Response::accepted(String::new()));
+    resp.body = SubmitBatchResponseV1 { results: out }.to_json().to_string_compact();
+    resp
 }
 
 fn handle_status(handle: &Handle, id: u64) -> Response {
@@ -442,11 +536,20 @@ pub struct ServerConfig {
     pub read_timeout: Duration,
     /// Cap on requests served over one connection.
     pub max_requests_per_conn: usize,
+    /// Accepted connections waiting for a free worker. When the queue is
+    /// full the acceptor answers `503 Retry-After` and closes instead of
+    /// queueing unboundedly — overload is deliberate, not accidental.
+    pub accept_backlog: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { workers: 16, read_timeout: Duration::from_secs(5), max_requests_per_conn: 1000 }
+        Self {
+            workers: 16,
+            read_timeout: Duration::from_secs(5),
+            max_requests_per_conn: 1000,
+            accept_backlog: 1024,
+        }
     }
 }
 
@@ -466,9 +569,8 @@ pub fn serve_with(
 ) -> Result<std::net::SocketAddr> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
-    listener.set_nonblocking(true)?;
 
-    let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+    let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.accept_backlog.max(1));
     let conn_rx = Arc::new(Mutex::new(conn_rx));
     for i in 0..cfg.workers.max(1) {
         let rx = conn_rx.clone();
@@ -491,23 +593,45 @@ pub fn serve_with(
     std::thread::Builder::new()
         .name("frenzy-http-accept".into())
         .spawn(move || {
-            while !stop.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        if conn_tx.send(stream).is_err() {
-                            break;
-                        }
+            // Blocking accept: the acceptor parks in the kernel until a
+            // client arrives — no sleep-poll loop burning a core. Overload
+            // is explicit: `try_send` into the bounded connection queue,
+            // and a saturated queue answers `503 Retry-After` and closes
+            // instead of queueing without bound. Once `stop` is set the
+            // next (or an in-flight) accept drains and the thread exits;
+            // until then it parks harmlessly in `accept`.
+            for conn in listener.incoming() {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                match conn_tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(mut stream)) => {
+                        reject_overloaded(&mut stream);
                     }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(10));
-                    }
-                    Err(_) => break,
+                    Err(mpsc::TrySendError::Disconnected(_)) => break,
                 }
             }
             // Dropping conn_tx disconnects the workers' queue.
         })
         .expect("spawn http acceptor");
     Ok(local)
+}
+
+/// Answer a connection the worker queue has no room for: a minimal `503`
+/// with a `Retry-After`, written without parsing the request (the peer
+/// may not even have sent it yet) so the acceptor is back in `accept`
+/// within one syscall-ish.
+fn reject_overloaded(stream: &mut TcpStream) {
+    let body = ApiError {
+        code: 503,
+        message: "server at connection capacity".into(),
+        retry_after_ms: Some(1000),
+    }
+    .body();
+    let resp = Response { status: 503, body, allow: None, retry_after: Some(1000) };
+    write_response(stream, &resp, false);
 }
 
 /// Serve requests off one connection until close/timeout/limit.
@@ -535,6 +659,12 @@ fn serve_connection(mut stream: TcpStream, handle: &Handle, cfg: &ServerConfig, 
                 // legacy unversioned paths on close-per-request semantics.
                 if !req.path.starts_with("/v1/") {
                     keep_alive = false;
+                }
+                // `?stream=1` upgrades this connection to a dedicated SSE
+                // event feed; it never returns to request/response.
+                if let Some(sse) = sse_request(&req) {
+                    serve_sse(&mut stream, handle, sse, stop);
+                    break;
                 }
                 let resp = route_full(handle, &req);
                 write_response(&mut stream, &resp, keep_alive);
@@ -568,6 +698,61 @@ fn serve_connection(mut stream: TcpStream, handle: &Handle, cfg: &ServerConfig, 
                 write_response(&mut stream, &Response::err(400, m), false);
                 break;
             }
+        }
+    }
+}
+
+/// `GET /v1/cluster/events?stream=1` upgrades the connection to a
+/// server-sent-events feed; anything else routes normally. A malformed
+/// query falls through to the routed 400.
+fn sse_request(req: &Request) -> Option<EventsRequestV1> {
+    let (path, query) = req.path.split_once('?').unwrap_or((req.path.as_str(), ""));
+    if req.method != "GET" || normalize_path(path) != "/v1/cluster/events" {
+        return None;
+    }
+    match EventsRequestV1::from_query(query) {
+        Ok(r) if r.stream => Some(r),
+        _ => None,
+    }
+}
+
+/// Serve `text/event-stream`: each cluster event is pushed as one SSE
+/// frame (`id:` = sequence number, `data:` = the same v1 event JSON the
+/// polling route serves) as soon as the coordinator's long-poll machinery
+/// surfaces it. Quiet stretches carry comment heartbeats so a vanished
+/// client is detected by the failed write, not a timeout table. The
+/// stream holds this worker until the client disconnects or the server
+/// stops — the coordinator caps parked long-poll waiters below the pool
+/// size, so followers degrade to paced polling rather than starving the
+/// other routes.
+fn serve_sse(stream: &mut TcpStream, handle: &Handle, req: EventsRequestV1, stop: &AtomicBool) {
+    if write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+    )
+    .and_then(|()| stream.flush())
+    .is_err()
+    {
+        return;
+    }
+    let mut since = req.since;
+    let mut out = String::new();
+    while !stop.load(Ordering::Relaxed) {
+        let page = match handle.events_wait(since, req.limit, Duration::from_millis(1000)) {
+            Ok(p) => p,
+            Err(_) => return, // coordinator gone
+        };
+        out.clear();
+        if page.events.is_empty() {
+            out.push_str(": keep-alive\n\n");
+        }
+        for r in &page.events {
+            since = since.max(r.seq);
+            let data = EventV1::from_record(r).to_json().to_string_compact();
+            out.push_str(&format!("id: {}\ndata: {data}\n\n", r.seq));
+        }
+        if stream.write_all(out.as_bytes()).and_then(|()| stream.flush()).is_err() {
+            return; // client went away
         }
     }
 }
@@ -645,7 +830,7 @@ mod tests {
             assert!(r.body.contains("total_gpus"));
         }
         let r = post(&h, "/jobs", r#"{"model":"gpt2-350m","batch":8,"samples":100}"#);
-        assert_eq!(r.status, 200, "{}", r.body);
+        assert_eq!(r.status, 202, "{}", r.body);
         let id = json::parse(&r.body).unwrap().get("job_id").unwrap().as_u64().unwrap();
         h.drain().unwrap();
         let r = get(&h, &format!("/jobs/{id}"));
@@ -693,9 +878,7 @@ mod tests {
     fn error_bodies_are_valid_json_even_with_hostile_input() {
         let h = test_handle();
         let hostile = r#"mo"del\injected"#;
-        let body = SubmitRequestV1 { model: hostile.into(), batch: 8, samples: 10 }
-            .to_json()
-            .to_string_compact();
+        let body = SubmitRequestV1::new(hostile, 8, 10).to_json().to_string_compact();
         let r = post(&h, "/v1/jobs", &body);
         assert_eq!(r.status, 400);
         let parsed = json::parse(&r.body).expect("error body must parse as JSON");
@@ -717,7 +900,7 @@ mod tests {
         // submit then cancel-before-drain is racy with the instant stub, so
         // just drive the happy path end to end.
         let r = post(&h, "/v1/jobs", r#"{"model":"gpt2-350m","batch":8,"samples":100}"#);
-        assert_eq!(r.status, 200, "{}", r.body);
+        assert_eq!(r.status, 202, "{}", r.body);
         h.drain().unwrap();
         let r = get(&h, "/v1/jobs?state=completed");
         let page = ListResponseV1::from_json(&json::parse(&r.body).unwrap()).unwrap();
@@ -764,7 +947,7 @@ mod tests {
     fn events_and_report_routes() {
         let h = test_handle();
         let r = post(&h, "/v1/jobs", r#"{"model":"gpt2-350m","batch":8,"samples":100}"#);
-        assert_eq!(r.status, 200, "{}", r.body);
+        assert_eq!(r.status, 202, "{}", r.body);
         h.drain().unwrap();
         // The event log over HTTP: arrival, placement, finish are all there.
         let r = get(&h, "/v1/cluster/events");
@@ -816,6 +999,98 @@ mod tests {
         // No legacy unversioned alias.
         assert_eq!(get(&h, "/durability").status, 404);
         h.shutdown();
+    }
+
+    #[test]
+    fn submit_ack_matches_dto_bytes() {
+        use crate::serverless::api::SubmitResponseV1;
+        for id in [0u64, 1, 7, 42, u64::MAX] {
+            assert_eq!(
+                render_submit_ack(id),
+                SubmitResponseV1 { job_id: id }.to_json().to_string_compact(),
+            );
+        }
+    }
+
+    #[test]
+    fn batch_submit_route_returns_positional_results() {
+        let h = test_handle();
+        let body = r#"{"jobs":[
+            {"model":"gpt2-350m","batch":8,"samples":100},
+            {"model":"no-such-model","batch":8,"samples":100},
+            {"model":"gpt2-350m","batch":8,"samples":100}]}"#;
+        let r = post(&h, "/v1/jobs:batch", body);
+        assert_eq!(r.status, 202, "{}", r.body);
+        let resp = SubmitBatchResponseV1::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert_eq!(resp.results.len(), 3);
+        let ids: Vec<u64> = resp
+            .results
+            .iter()
+            .filter_map(|x| match x {
+                SubmitResultV1::Accepted { job_id } => Some(*job_id),
+                SubmitResultV1::Rejected(_) => None,
+            })
+            .collect();
+        assert_eq!(ids.len(), 2, "{}", r.body);
+        assert!(ids[0] < ids[1], "ids mint in order");
+        match &resp.results[1] {
+            SubmitResultV1::Rejected(e) => {
+                assert_eq!(e.code, 400);
+                assert!(e.message.contains("unknown model"), "{}", e.message);
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // Malformed batches never reach the coordinator.
+        assert_eq!(post(&h, "/v1/jobs:batch", r#"{"jobs":[]}"#).status, 400);
+        assert_eq!(post(&h, "/v1/jobs:batch", r#"{}"#).status, 400);
+        let r = get(&h, "/v1/jobs:batch");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("POST"));
+        h.drain().unwrap();
+        h.shutdown();
+    }
+
+    #[test]
+    fn throttled_submit_is_429_with_retry_after() {
+        use crate::serverless::admission::QuotaCfg;
+        let cfg = CoordinatorConfig {
+            execute_training: false,
+            global_quota: Some(QuotaCfg { rate_per_s: 0.001, burst: 1.0 }),
+            ..CoordinatorConfig::default()
+        };
+        let (h, _j) = spawn(real_testbed(), cfg);
+        let body = r#"{"model":"gpt2-350m","batch":8,"samples":100}"#;
+        assert_eq!(post(&h, "/v1/jobs", body).status, 202);
+        let r = post(&h, "/v1/jobs", body);
+        assert_eq!(r.status, 429, "{}", r.body);
+        assert!(r.retry_after.is_some());
+        let err = ApiError::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert_eq!(err.code, 429);
+        assert_eq!(err.retry_after_ms, r.retry_after);
+        // An all-throttled batch reads as 429 at the envelope too.
+        let r = post(&h, "/v1/jobs:batch", &format!(r#"{{"jobs":[{body}]}}"#));
+        assert_eq!(r.status, 429, "{}", r.body);
+        assert!(r.retry_after.is_some());
+        h.drain().unwrap();
+        h.shutdown();
+    }
+
+    #[test]
+    fn sse_upgrade_detection() {
+        let req = |path: &str, method: &str| Request {
+            method: method.into(),
+            path: path.into(),
+            body: String::new(),
+        };
+        assert!(sse_request(&req("/v1/cluster/events?stream=1", "GET")).is_some());
+        let r = sse_request(&req("/v1/cluster/events?stream=1&since=5", "GET")).unwrap();
+        assert_eq!(r.since, 5);
+        assert!(sse_request(&req("/v1/cluster/events", "GET")).is_none());
+        assert!(sse_request(&req("/v1/cluster/events?stream=0", "GET")).is_none());
+        assert!(sse_request(&req("/v1/cluster/events?stream=1", "POST")).is_none());
+        assert!(sse_request(&req("/v1/jobs?stream=1", "GET")).is_none());
+        // Malformed queries fall through to the routed 400, not a hang.
+        assert!(sse_request(&req("/v1/cluster/events?stream=yes-please", "GET")).is_none());
     }
 
     #[test]

@@ -100,9 +100,45 @@ impl Json {
 
     /// Compact single-line encoding.
     pub fn to_string_compact(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
+        let mut out = Vec::with_capacity(64);
+        self.write_compact(&mut out);
+        // `write_compact` only emits whole `&str` spans and ASCII bytes.
+        String::from_utf8(out).expect("write_compact emits UTF-8")
+    }
+
+    /// Compact serialization appended to a byte buffer — the request and
+    /// WAL hot path. Appends without clearing, so callers can reserve a
+    /// frame header first and serialize the payload in place, and reuse
+    /// the buffer across calls to amortize the allocation.
+    pub fn write_compact(&self, out: &mut Vec<u8>) {
+        match self {
+            Json::Null => out.extend_from_slice(b"null"),
+            Json::Bool(b) => out.extend_from_slice(if *b { b"true" } else { b"false" }),
+            Json::Num(x) => write_num(out, *x),
+            Json::Str(s) => write_escaped_bytes(out, s),
+            Json::Arr(v) => {
+                out.push(b'[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(b',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(b']');
+            }
+            Json::Obj(m) => {
+                out.push(b'{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(b',');
+                    }
+                    write_escaped_bytes(out, k);
+                    out.push(b':');
+                    v.write_compact(out);
+                }
+                out.push(b'}');
+            }
+        }
     }
 
     /// Pretty encoding with 2-space indent.
@@ -170,6 +206,74 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
         }
     }
 }
+
+fn write_num(out: &mut Vec<u8>, x: f64) {
+    if x.fract() == 0.0 && x.abs() < 9.0e15 {
+        write_i64(out, x as i64);
+    } else {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = write!(s, "{x}");
+        out.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Manual integer formatting: the hot path is dominated by small ids,
+/// counts, and timestamps, where `format!`'s allocation costs more than
+/// the digit work itself.
+fn write_i64(out: &mut Vec<u8>, v: i64) {
+    let mut buf = [0u8; 20];
+    let mut i = buf.len();
+    let neg = v < 0;
+    // Format from the negative side so `i64::MIN` cannot overflow.
+    let mut m = if neg { v } else { -v };
+    if m == 0 {
+        i -= 1;
+        buf[i] = b'0';
+    }
+    while m != 0 {
+        i -= 1;
+        buf[i] = b'0' + (-(m % 10)) as u8;
+        m /= 10;
+    }
+    if neg {
+        i -= 1;
+        buf[i] = b'-';
+    }
+    out.extend_from_slice(&buf[i..]);
+}
+
+fn write_escaped_bytes(out: &mut Vec<u8>, s: &str) {
+    out.push(b'"');
+    let bytes = s.as_bytes();
+    // Copy clean spans wholesale; only escape-needing bytes break the run.
+    let mut start = 0;
+    for (i, &b) in bytes.iter().enumerate() {
+        let esc: &[u8] = match b {
+            b'"' => b"\\\"",
+            b'\\' => b"\\\\",
+            b'\n' => b"\\n",
+            b'\r' => b"\\r",
+            b'\t' => b"\\t",
+            b if b < 0x20 => {
+                out.extend_from_slice(&bytes[start..i]);
+                out.extend_from_slice(&[b'\\', b'u', b'0', b'0']);
+                out.push(HEX[(b >> 4) as usize]);
+                out.push(HEX[(b & 0xF) as usize]);
+                start = i + 1;
+                continue;
+            }
+            _ => continue,
+        };
+        out.extend_from_slice(&bytes[start..i]);
+        out.extend_from_slice(esc);
+        start = i + 1;
+    }
+    out.extend_from_slice(&bytes[start..]);
+    out.push(b'"');
+}
+
+const HEX: &[u8; 16] = b"0123456789abcdef";
 
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
@@ -370,6 +474,28 @@ impl<'a> Parser<'a> {
         self.expect(b'"')?;
         let mut s = String::new();
         loop {
+            // Hot path: scan the raw byte span up to the next quote or
+            // escape and take it wholesale — one UTF-8 validation per
+            // span instead of one `from_utf8` over the remaining buffer
+            // per character.
+            let start = self.pos;
+            while let Some(b) = self.peek() {
+                if b == b'"' || b == b'\\' {
+                    break;
+                }
+                self.pos += 1;
+            }
+            if self.pos > start {
+                let span = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|_| {
+                    ParseError { offset: start, message: "invalid utf-8".to_string() }
+                })?;
+                if s.is_empty() && self.peek() == Some(b'"') {
+                    // The whole string is one clean span: a single copy.
+                    self.pos += 1;
+                    return Ok(span.to_string());
+                }
+                s.push_str(span);
+            }
             match self.peek() {
                 None => return Err(self.err("unterminated string")),
                 Some(b'"') => {
@@ -405,14 +531,7 @@ impl<'a> Parser<'a> {
                     }
                     self.pos += 1;
                 }
-                Some(_) => {
-                    // Consume one UTF-8 scalar.
-                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
-                        .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
-                    s.push(c);
-                    self.pos += c.len_utf8();
-                }
+                Some(_) => unreachable!("span scan stops only at a quote or escape"),
             }
         }
     }
@@ -519,5 +638,69 @@ mod tests {
         assert_eq!(Json::Num(3.5).as_u64(), None);
         assert_eq!(Json::Num(-1.0).as_u64(), None);
         assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+    }
+
+    /// The byte serializer and the String pretty-printer share no code;
+    /// pin them to each other over a value exercising every variant.
+    #[test]
+    fn write_compact_matches_string_writer() {
+        let mut j = Json::obj();
+        j.set("neg", -42i64)
+            .set("zero", 0u64)
+            .set("big", 9_007_199_254_740_991u64)
+            .set("min", i64::MIN)
+            .set("float", 2.5)
+            .set("exp", 1.0e-7)
+            .set("esc", "tab\there \"q\" \\ nl\n ctrl\u{0001} é")
+            .set("null", Json::Null)
+            .set("arr", vec![1u64, 2, 3])
+            .set("empty_arr", Json::Arr(vec![]))
+            .set("empty_obj", Json::obj())
+            .set("bools", Json::Arr(vec![Json::Bool(true), Json::Bool(false)]));
+        let mut reference = String::new();
+        j.write(&mut reference, None, 0);
+        assert_eq!(j.to_string_compact(), reference);
+        assert_eq!(parse(&j.to_string_compact()).unwrap(), j);
+    }
+
+    #[test]
+    fn write_compact_appends_after_existing_bytes() {
+        let mut out = vec![0xAB, 0xCD]; // simulated frame header
+        let mut j = Json::obj();
+        j.set("k", 7u64);
+        j.write_compact(&mut out);
+        assert_eq!(&out[..2], &[0xAB, 0xCD]);
+        assert_eq!(&out[2..], br#"{"k":7}"#);
+    }
+
+    #[test]
+    fn integer_edge_values_format_exactly() {
+        let cases: &[(f64, &str)] = &[
+            (0.0, "0"),
+            (-0.0, "0"),
+            (1.0, "1"),
+            (-1.0, "-1"),
+            (i64::MIN as f64, "-9223372036854775808"),
+            (8.999e15, "8999000000000000"),
+        ];
+        for &(x, want) in cases {
+            assert_eq!(Json::Num(x).to_string_compact(), want, "for {x}");
+        }
+    }
+
+    #[test]
+    fn long_clean_string_parses_via_single_span() {
+        let body: String = "x".repeat(64 * 1024);
+        let doc = format!("\"{body}\"");
+        assert_eq!(parse(&doc).unwrap().as_str().unwrap(), body);
+        // Mixed spans: escapes interleaved with multi-byte scalars.
+        let j = parse(r#""aé\nbü\tAc""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "aé\nbü\tAc");
+    }
+
+    #[test]
+    fn lone_surrogate_escape_maps_to_replacement_char() {
+        let j = parse(r#""\ud800""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "\u{FFFD}");
     }
 }

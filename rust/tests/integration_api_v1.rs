@@ -263,7 +263,7 @@ fn events_and_report_over_tcp() {
     assert!(has(&|k| matches!(k, EventKind::NodeLeft { node: 5, .. })));
     // Tail from next_since: quiet cluster, no new events.
     let tail = client
-        .events(&EventsRequestV1 { since: page.next_since, limit: 100, wait_ms: 0 })
+        .events(&EventsRequestV1 { since: page.next_since, limit: 100, wait_ms: 0, stream: false })
         .unwrap();
     assert!(tail.events.is_empty());
     assert_eq!(tail.next_since, page.next_since);

@@ -332,7 +332,7 @@ fn report_accuracy_and_events_long_poll_over_http() {
     // Long-poll with nothing to report: held, then an empty page.
     let t0 = std::time::Instant::now();
     let page = c
-        .events(&EventsRequestV1 { since: 0, limit: 100, wait_ms: 150 })
+        .events(&EventsRequestV1 { since: 0, limit: 100, wait_ms: 150, stream: false })
         .unwrap();
     assert!(page.events.is_empty());
     assert!(t0.elapsed() >= std::time::Duration::from_millis(140), "server held the poll");
@@ -343,7 +343,7 @@ fn report_accuracy_and_events_long_poll_over_http() {
     // Now the same long-poll answers immediately with the history.
     let t1 = std::time::Instant::now();
     let page = c
-        .events(&EventsRequestV1 { since: 0, limit: 100, wait_ms: 10_000 })
+        .events(&EventsRequestV1 { since: 0, limit: 100, wait_ms: 10_000, stream: false })
         .unwrap();
     assert!(t1.elapsed() < std::time::Duration::from_secs(5), "events exist: no hold");
     assert!(page

@@ -1,0 +1,313 @@
+//! Integration: the high-throughput ingest path end-to-end — a concurrent
+//! submit storm against a watermarked server yields only 202/429 with
+//! bounded queue depth, watermark 429s carry `Retry-After` on the wire,
+//! batch and single submits journal byte-for-byte the same WAL transitions
+//! (replay identity), and the SSE feed pushes events as they happen.
+
+use frenzy::config::real_testbed;
+use frenzy::durability::{FsyncPolicy, Wal, WalRecord};
+use frenzy::engine::{ClusterEvent, EventKind};
+use frenzy::job::JobState;
+use frenzy::serverless::api::{EventsRequestV1, SubmitRequestV1, SubmitResultV1};
+use frenzy::serverless::client::{FrenzyClient, SubmitOutcome};
+use frenzy::serverless::{server, spawn, CoordinatorConfig, Handle};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn start(cfg: CoordinatorConfig) -> (Handle, SocketAddr, Arc<AtomicBool>) {
+    let (h, _j) = spawn(real_testbed(), cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = server::serve(h.clone(), "127.0.0.1:0", stop.clone()).unwrap();
+    (h, addr, stop)
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("frenzy_ingest_{tag}_{}", std::process::id()))
+}
+
+/// Storm a watermarked server from many threads. Every submit must answer
+/// 202 or 429 — [`FrenzyClient::submit_once`] turns anything else into an
+/// error, which the test unwraps loudly. A sampler thread watches queue
+/// depth the whole time: admission runs on the coordinator thread, so the
+/// watermark is a hard bound even under concurrency. Afterwards every
+/// accepted job must reach a terminal state.
+#[test]
+fn storm_yields_only_202_or_429_with_bounded_depth() {
+    let max_pending = 4usize;
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        stub_delay_ms: 20,
+        max_pending,
+        ..CoordinatorConfig::default()
+    };
+    let (h, addr, stop) = start(cfg);
+    let done = Arc::new(AtomicBool::new(false));
+    let peak = Arc::new(AtomicUsize::new(0));
+    let sampler = {
+        let (addr, done, peak) = (addr.to_string(), done.clone(), peak.clone());
+        std::thread::spawn(move || {
+            let mut c = FrenzyClient::new(addr);
+            while !done.load(Ordering::Relaxed) {
+                let queued = c
+                    .list(&frenzy::serverless::api::ListRequestV1 {
+                        state: Some(JobState::Queued),
+                        offset: 0,
+                        limit: 1,
+                    })
+                    .unwrap()
+                    .total;
+                peak.fetch_max(queued, Ordering::Relaxed);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        })
+    };
+    let workers: Vec<_> = (0..6)
+        .map(|_| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut c = FrenzyClient::new(addr);
+                let req = SubmitRequestV1::new("gpt2-350m", 8, 50);
+                let mut ids = Vec::new();
+                let mut throttled = 0u64;
+                for _ in 0..30 {
+                    match c.submit_once(&req).unwrap() {
+                        SubmitOutcome::Accepted { job_id } => ids.push(job_id),
+                        SubmitOutcome::Throttled { retry_after_ms } => {
+                            assert!(retry_after_ms > 0, "throttle must carry a retry hint");
+                            throttled += 1;
+                        }
+                    }
+                }
+                (ids, throttled)
+            })
+        })
+        .collect();
+    let mut accepted = Vec::new();
+    let mut throttled = 0u64;
+    for w in workers {
+        let (ids, thr) = w.join().unwrap();
+        accepted.extend(ids);
+        throttled += thr;
+    }
+    done.store(true, Ordering::Relaxed);
+    sampler.join().unwrap();
+    assert!(
+        peak.load(Ordering::Relaxed) <= max_pending,
+        "queue depth exceeded the watermark: {} > {max_pending}",
+        peak.load(Ordering::Relaxed)
+    );
+    assert!(!accepted.is_empty(), "storm must land some submits");
+    h.drain().unwrap();
+    let mut c = FrenzyClient::new(addr.to_string());
+    for id in &accepted {
+        let st = c.status(*id).unwrap().unwrap_or_else(|| panic!("job {id} vanished"));
+        assert!(
+            matches!(st.state, JobState::Completed | JobState::Rejected),
+            "accepted job {id} must end terminal, is {:?}",
+            st.state
+        );
+    }
+    // 180 submits against an 11-GPU cluster with a 4-deep watermark: the
+    // storm must actually have exercised the backpressure path.
+    assert!(throttled > 0, "storm never hit the watermark — not a storm");
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+/// The watermark 429 carries `Retry-After` on the wire (header, seconds)
+/// and `retry_after_ms` in the body.
+#[test]
+fn watermark_429_carries_retry_after_on_the_wire() {
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        stub_delay_ms: 60_000, // nothing completes: the queue only grows
+        max_pending: 1,
+        ..CoordinatorConfig::default()
+    };
+    let (h, addr, stop) = start(cfg);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let body = r#"{"model":"gpt2-350m","batch":8,"samples":400}"#;
+    let mut saw_429 = false;
+    for _ in 0..100 {
+        write!(
+            stream,
+            "POST /v1/jobs HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        let (status, headers, resp_body) = read_framed(&mut reader);
+        if status == 202 {
+            continue;
+        }
+        assert_eq!(status, 429, "submit path answers only 202 or 429");
+        let lower: Vec<String> = headers.iter().map(|h| h.to_ascii_lowercase()).collect();
+        let retry = lower
+            .iter()
+            .find_map(|h| h.strip_prefix("retry-after:"))
+            .expect("429 must carry Retry-After")
+            .trim();
+        assert!(retry.parse::<u64>().unwrap() >= 1, "whole seconds, rounded up: {retry}");
+        assert!(resp_body.contains("retry_after_ms"), "{resp_body}");
+        saw_429 = true;
+        break;
+    }
+    assert!(saw_429, "the queue never hit a watermark of 1 — backpressure is broken");
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+/// Read exactly one framed HTTP response off a kept-alive connection.
+fn read_framed(reader: &mut BufReader<TcpStream>) -> (u16, Vec<String>, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let h = h.trim().to_string();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap();
+        }
+        headers.push(h);
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).unwrap();
+    (status, headers, String::from_utf8_lossy(&body).to_string())
+}
+
+/// Canonical form of a WAL record with wall-clock times erased — the
+/// transitions a replay applies, independent of when they were journaled.
+fn canon(rec: &WalRecord) -> String {
+    match rec {
+        WalRecord::Event { ev: ClusterEvent::Arrival(j), .. } => {
+            format!("arrival({},{},{})", j.model.name, j.train.global_batch, j.total_samples)
+        }
+        WalRecord::Event { ev, .. } => format!("event({ev:?})"),
+        WalRecord::Round { .. } => "round".to_string(),
+        WalRecord::AdmissionReject { job, model, batch, samples, .. } => {
+            format!("reject({job},{model},{batch},{samples})")
+        }
+        WalRecord::Losses { job, .. } => format!("losses({job})"),
+    }
+}
+
+/// Differential: the same jobs submitted one-by-one and as one
+/// `jobs:batch` body mint the same ids and journal the same WAL
+/// transitions in the same order — batching changes fsync grouping, never
+/// durable state (replay identity).
+#[test]
+fn batch_and_single_submits_journal_identical_transitions() {
+    let jobs: Vec<SubmitRequestV1> = ["gpt2-125m", "gpt2-350m", "bert-base", "gpt2-760m"]
+        .iter()
+        .cycle()
+        .take(12)
+        .enumerate()
+        .map(|(i, m)| SubmitRequestV1::new(*m, 8, 100 + i as u64))
+        .collect();
+    let run = |tag: &str, submit: &dyn Fn(&mut FrenzyClient) -> Vec<u64>| {
+        let dir = tmp(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CoordinatorConfig {
+            execute_training: false,
+            stub_delay_ms: 60_000, // no completions: WAL holds ingest only
+            data_dir: Some(dir.clone()),
+            fsync: FsyncPolicy::Always,
+            ..CoordinatorConfig::default()
+        };
+        let (h, addr, stop) = start(cfg);
+        let mut c = FrenzyClient::new(addr.to_string());
+        let ids = submit(&mut c);
+        stop.store(true, Ordering::Relaxed);
+        h.shutdown();
+        let (_, records) = Wal::open(&dir.join("wal"), FsyncPolicy::Always).unwrap();
+        let transitions: Vec<String> = records.iter().map(|(_, r)| canon(r)).collect();
+        let _ = std::fs::remove_dir_all(&dir);
+        (ids, transitions)
+    };
+    let singles = jobs.clone();
+    let (ids_single, wal_single) = run("single", &move |c| {
+        singles
+            .iter()
+            .map(|j| match c.submit_once(j).unwrap() {
+                SubmitOutcome::Accepted { job_id } => job_id,
+                SubmitOutcome::Throttled { .. } => panic!("unthrottled server throttled"),
+            })
+            .collect()
+    });
+    let batched = jobs.clone();
+    let (ids_batch, wal_batch) = run("batch", &move |c| {
+        c.submit_batch(&batched)
+            .unwrap()
+            .results
+            .iter()
+            .map(|r| match r {
+                SubmitResultV1::Accepted { job_id } => *job_id,
+                SubmitResultV1::Rejected(e) => panic!("rejected: {}: {}", e.code, e.message),
+            })
+            .collect()
+    });
+    assert_eq!(ids_single, ids_batch, "same ids, same order");
+    assert_eq!(ids_single.len(), jobs.len());
+    assert!(
+        wal_single.iter().filter(|t| t.starts_with("arrival(")).count() == jobs.len(),
+        "every submit journaled an arrival: {wal_single:?}"
+    );
+    assert_eq!(wal_single, wal_batch, "batch must journal exactly the single-path transitions");
+}
+
+/// The SSE feed delivers events pushed by the server as they happen: a
+/// subscriber sees arrival → placed → finished for a job submitted after
+/// it connected, with ascending sequence numbers.
+#[test]
+fn sse_stream_pushes_events_as_they_happen() {
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        stub_delay_ms: 10,
+        ..CoordinatorConfig::default()
+    };
+    let (h, addr, stop) = start(cfg);
+    let subscriber = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let mut c = FrenzyClient::new(addr);
+            let mut seqs = Vec::new();
+            let mut kinds = Vec::new();
+            let last = c
+                .events_stream(&EventsRequestV1::default(), |e| {
+                    seqs.push(e.seq);
+                    kinds.push(e.kind.clone());
+                    kinds.len() < 3
+                })
+                .unwrap();
+            (seqs, kinds, last)
+        })
+    };
+    // Give the subscriber time to attach before the events exist.
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let mut c = FrenzyClient::new(addr.to_string());
+    let id = c.submit("gpt2-350m", 8, 50).unwrap();
+    h.drain().unwrap();
+    let (seqs, kinds, last) = subscriber.join().unwrap();
+    assert_eq!(kinds.len(), 3);
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "ascending seqs: {seqs:?}");
+    assert_eq!(last, *seqs.last().unwrap());
+    assert!(
+        matches!(&kinds[0], EventKind::Arrival { job } if *job == id),
+        "first pushed event is the arrival: {kinds:?}"
+    );
+    assert!(
+        kinds.iter().any(|k| matches!(k, EventKind::Finished { job, .. } if *job == id)),
+        "completion must be pushed live: {kinds:?}"
+    );
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
