@@ -312,6 +312,18 @@ fn fmt_event(e: &EventV1) -> String {
         EventKind::NodeRetired { node } => {
             format!("node {node} fully retired (drain complete; safe to power off)")
         }
+        EventKind::NodeCrashed { node, preempted } => format!(
+            "node {node} CRASHED (no drain grace); displaced jobs {preempted:?} lose work past their last checkpoint"
+        ),
+        EventKind::NodeQuarantined { node, until_s } => {
+            format!("node {node} quarantined until t={until_s:.3}s (excluded from placement)")
+        }
+        EventKind::NodeProbation { node } => {
+            format!("node {node} finished probation — eligible for placement again")
+        }
+        EventKind::NodeSlowdown { node, factor } => {
+            format!("node {node} running at {:.0}% speed (straggler)", factor * 100.0)
+        }
     };
     format!("[{:>9.3}s] #{:<5} {detail}", e.time, e.seq)
 }
@@ -467,6 +479,13 @@ fn render_report(r: &ReportV1) {
     t.row_str(&["OOM/preempt retries", &r.total_oom_retries.to_string()]);
     t.row_str(&["graceful drains", &r.n_drains.to_string()]);
     t.row_str(&["steps executed", &r.total_steps_executed.to_string()]);
+    if r.n_node_crashes > 0 || r.total_steps_lost > 0 {
+        t.row_str(&["node crashes", &r.n_node_crashes.to_string()]);
+        t.row_str(&["crash requeues", &r.n_crash_requeues.to_string()]);
+        t.row_str(&["quarantines", &r.n_quarantines.to_string()]);
+        t.row_str(&["steps lost to crashes", &r.total_steps_lost.to_string()]);
+        t.row_str(&["goodput", &format!("{:.1}%", r.goodput * 100.0)]);
+    }
     if r.mem_pred_samples > 0 {
         let acc = format!(
             "{:.1}% avg / {:.1}% min ({} dispatches)",
@@ -604,7 +623,16 @@ fn replay_remote(
 
 /// `frenzy replay --workload philly --tasks 20 [--speedup 1000] [--stub-ms 20]
 ///               [--cluster real|sim] [--seed S] [--addr host:port]
-///               [--timeout 300]`
+///               [--timeout 300] [--faults <spec|seed:N>]`
+///
+/// `--faults` runs the replay under deterministic fault injection: the
+/// plan (a comma-separated spec like `crash:0@1.5,blackout:2@3+1` or a
+/// seeded `seed:42`) is compiled against the cluster and injected into
+/// the live coordinator at the scripted wall-clock offsets — crashes
+/// preempt abruptly with no drain grace, so the report's goodput and
+/// crash counters show what the chaos cost. Only the in-process replay
+/// injects; `--faults` with `--addr` is an error (the remote server owns
+/// its own `--faults` flag).
 ///
 /// Replays a workload trace through the **live** scheduling path. Without
 /// `--addr` it spawns the wall-clock coordinator in-process with the
@@ -628,6 +656,22 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
     if speedup <= 0.0 {
         bail!("--speedup must be > 0");
     }
+    let faults = match args.opt("faults") {
+        None => None,
+        Some(spec) => {
+            if args.opt("addr").is_some() {
+                bail!("--faults injects into the in-process coordinator; drop --addr (a remote `frenzy serve` takes its own --faults flag)");
+            }
+            // Seeded plans scatter events across the replay's expected wall
+            // span: the sped-up submit window plus a tail for execution.
+            let last_arrival = jobs.iter().map(|j| j.submit_time).fold(0.0f64, f64::max);
+            let horizon = (last_arrival / speedup + 3.0).clamp(1.0, 60.0);
+            Some(
+                crate::faults::FaultPlan::parse(spec, cluster.nodes.len(), horizon)
+                    .map_err(|e| anyhow!(e))?,
+            )
+        }
+    };
     if let Some(addr) = args.opt("addr") {
         let stall_timeout_s: u64 = args.opt_parse_or("timeout", 300)?;
         return replay_remote(addr, workload, &jobs, speedup, stall_timeout_s);
@@ -636,12 +680,22 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
     // Interval schedulers replay with a fast default round cadence so the
     // wall-clock run finishes promptly; override with --round-interval.
     let scheduler = scheduler_arg(args, 0.2)?;
+    let defaults = CoordinatorConfig::default();
     let cfg = CoordinatorConfig {
         execute_training: false,
         stub_delay_ms: stub_ms,
         scheduler,
-        ..CoordinatorConfig::default()
+        // Chaos replays should requeue crash-displaced jobs promptly: the
+        // production 1 s backoff floor would dominate a sped-up replay.
+        crash_backoff_base_ms: args.opt_parse_or("crash-backoff-ms", 100u64)?,
+        crash_backoff_cap_ms: defaults.crash_backoff_cap_ms.min(2_000),
+        probation_ms: 2_000,
+        fault_plan: faults,
+        ..defaults
     };
+    if let Some(p) = &cfg.fault_plan {
+        println!("fault injection armed: {} scripted events ({})", p.len(), p.spec());
+    }
     let (h, _join) = crate::serverless::spawn(cluster.clone(), cfg);
     println!(
         "replaying {} jobs from '{}' through the live engine on {} ({}x speedup, {} ms stub, {} scheduler)",
@@ -676,6 +730,13 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
     t.row_str(&["avg JCT (wall)", &fmt_duration(report.avg_jct_s)]);
     t.row_str(&["avg queue (wall)", &fmt_duration(report.avg_queue_s)]);
     t.row_str(&["OOM events", &report.n_oom_events.to_string()]);
+    if report.n_node_crashes > 0 || report.total_steps_lost > 0 {
+        t.row_str(&["node crashes", &report.n_node_crashes.to_string()]);
+        t.row_str(&["crash requeues", &report.n_crash_requeues.to_string()]);
+        t.row_str(&["quarantines", &report.n_quarantines.to_string()]);
+        t.row_str(&["steps lost to crashes", &report.total_steps_lost.to_string()]);
+        t.row_str(&["goodput", &format!("{:.1}%", report.goodput * 100.0)]);
+    }
     t.row_str(&["sched overhead (wall)", &fmt_duration(report.sched_overhead_s)]);
     t.row_str(&["utilization", &format!("{:.1}%", report.avg_utilization * 100.0)]);
     println!("{}", t.render());
@@ -710,12 +771,19 @@ fn parse_quota(s: &str) -> Result<QuotaCfg> {
 ///              [--drain-ms M] [--ckpt-steps K]
 ///              [--data-dir D] [--fsync always|every:N|interval:S]
 ///              [--snapshot-every E] [--max-pending N]
-///              [--global-quota R[:B]] [--user-quota R[:B]]`
+///              [--global-quota R[:B]] [--user-quota R[:B]]
+///              [--lease-ms L] [--faults <spec|seed:N>]`
 ///
 /// `--max-pending` caps the scheduler's pending queue (submits past it
 /// get 429 + Retry-After); `--global-quota`/`--user-quota` rate-limit
 /// submits per second with `B` tokens of burst (per-user quotas key on
 /// the submit body's `user` field).
+///
+/// `--lease-ms` arms heartbeat-lease crash detection: a node that has
+/// beaten `POST /v1/cluster/heartbeat` at least once and then misses the
+/// lease window is declared crashed (abrupt preemption, no drain grace).
+/// `--faults` arms deterministic fault injection — the plan's events fire
+/// at their scripted offsets from server boot (times in seconds).
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let cluster = cluster_arg(args)?;
     let addr = args.opt_or("addr", DEFAULT_ADDR);
@@ -744,10 +812,29 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             None => defaults.user_quota,
             Some(s) => Some(parse_quota(s)?),
         },
+        lease_timeout_ms: args.opt_parse_or("lease-ms", defaults.lease_timeout_ms)?,
+        fault_plan: match args.opt("faults") {
+            None => defaults.fault_plan,
+            // Server fault times are seconds from boot; give seeded plans
+            // an hour-long horizon to scatter over.
+            Some(s) => Some(
+                crate::faults::FaultPlan::parse(s, cluster.nodes.len(), 3600.0)
+                    .map_err(|e| anyhow!(e))?,
+            ),
+        },
         ..defaults
     };
     if let Some(dir) = &cfg.data_dir {
         println!("durability: WAL + snapshots in {} (fsync {fsync})", dir.display());
+    }
+    if cfg.lease_timeout_ms > 0 {
+        println!(
+            "heartbeat leases: {} ms window (nodes that beat once and go silent are crashed)",
+            cfg.lease_timeout_ms
+        );
+    }
+    if let Some(p) = &cfg.fault_plan {
+        println!("fault injection armed: {} scripted events ({})", p.len(), p.spec());
     }
     let (handle, _join) = crate::serverless::spawn(cluster, cfg);
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -763,6 +850,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     println!("  GET  /v1/cluster/events  ?stream=1  (server-sent-events push feed)");
     println!("  GET  /v1/report          (streaming run report + memory-prediction accuracy)");
     println!("  GET  /v1/durability      (WAL position + snapshot freshness)");
+    println!("  POST /v1/cluster/heartbeat  {{\"node\":0}}  (lease renew; see --lease-ms)");
     println!("  GET  /v1/cluster | /v1/healthz    (see API.md; unversioned aliases served)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -215,6 +215,15 @@ pub struct Orchestrator {
     /// Nodes in graceful drain: no idle capacity, hosted jobs still
     /// resident; fully retired (total = 0) once the last job releases.
     retiring: BTreeSet<NodeId>,
+    /// Nodes fenced off by the crash-flap quarantine: their capacity stays
+    /// in the cluster (idle) but placement must not touch them until
+    /// probation lifts the quarantine.
+    quarantined: BTreeSet<NodeId>,
+    /// Derived: `retiring ∪ quarantined` — the set [`Orchestrator::view`]
+    /// hides from placement. Maintained on every transition of either
+    /// source set so the hot path borrows one set instead of building a
+    /// union per round.
+    excluded: BTreeSet<NodeId>,
 }
 
 impl Orchestrator {
@@ -222,7 +231,15 @@ impl Orchestrator {
         let state = ClusterState::from_spec(spec);
         let index = CapacityIndex::build(&state);
         let device = DeviceMemory::new(state.nodes.iter().map(|n| n.gpu.mem_bytes).collect());
-        Self { state, ledger: BTreeMap::new(), index, device, retiring: BTreeSet::new() }
+        Self {
+            state,
+            ledger: BTreeMap::new(),
+            index,
+            device,
+            retiring: BTreeSet::new(),
+            quarantined: BTreeSet::new(),
+            excluded: BTreeSet::new(),
+        }
     }
 
     pub fn state(&self) -> &ClusterState {
@@ -235,11 +252,12 @@ impl Orchestrator {
     }
 
     /// Zero-copy planning window for a scheduling round: the live state plus
-    /// the maintained index and the draining-node set. This is what the
-    /// engine hands to schedulers — rounds no longer clone the cluster, and
-    /// schedulers can skip nodes in graceful drain.
+    /// the maintained index and the excluded-node set (nodes in graceful
+    /// drain *or* crash quarantine). This is what the engine hands to
+    /// schedulers — rounds no longer clone the cluster, and schedulers skip
+    /// nodes that must not receive placements.
     pub fn view(&self) -> ClusterView<'_> {
-        ClusterView::with_index_draining(&self.state, &self.index, &self.retiring)
+        ClusterView::with_index_draining(&self.state, &self.index, &self.excluded)
     }
 
     /// Owned snapshot (kept for tests and offline analysis; the scheduling
@@ -396,6 +414,7 @@ impl Orchestrator {
         let affected = self.jobs_on(node);
         if self.strip_idle(node) > 0 {
             self.retiring.insert(node);
+            self.sync_excluded();
         }
         Ok(affected)
     }
@@ -414,12 +433,68 @@ impl Orchestrator {
                 done.push(node);
             }
         }
+        if !done.is_empty() {
+            self.sync_excluded();
+        }
         done
     }
 
     /// Nodes currently in graceful drain.
     pub fn retiring_count(&self) -> usize {
         self.retiring.len()
+    }
+
+    /// Abrupt node failure: every allocation touching `node` is released
+    /// at once — collective training cannot survive losing a participant —
+    /// but unlike [`Orchestrator::shrink`] the node's capacity *stays* in
+    /// the cluster (freed GPUs return to idle everywhere, including the
+    /// crashed node). A crashed node reboots; it does not leave — whether
+    /// placement may use it again is the quarantine's decision, not the
+    /// capacity ledger's. Returns the released allocations so the caller
+    /// can requeue the displaced jobs; a crash on a node hosting nothing
+    /// is `Ok(vec![])`. Errors on unknown or retired nodes.
+    pub fn crash_node(&mut self, node: NodeId) -> Result<Vec<Allocation>, ClusterError> {
+        let n = self.state.nodes.get(node).ok_or(ClusterError::NoSuchNode(node))?;
+        if n.total == 0 {
+            return Err(ClusterError::NoSuchNode(node));
+        }
+        let affected = self.jobs_on(node);
+        let mut released = Vec::with_capacity(affected.len());
+        for job in affected {
+            released.push(self.release(job).expect("ledger entry exists"));
+        }
+        Ok(released)
+    }
+
+    /// Fence `node` off from placement (crash-flap quarantine). Its
+    /// capacity stays in the cluster — the fence is a placement veto, not
+    /// a capacity change — so it is idempotent and ignores unknown nodes.
+    pub fn quarantine(&mut self, node: NodeId) {
+        if self.state.nodes.get(node).is_some() {
+            self.quarantined.insert(node);
+            self.sync_excluded();
+        }
+    }
+
+    /// Lift the quarantine on `node` (probation expired). Idempotent.
+    pub fn unquarantine(&mut self, node: NodeId) {
+        if self.quarantined.remove(&node) {
+            self.sync_excluded();
+        }
+    }
+
+    /// Whether `node` is currently fenced off by the crash-flap quarantine.
+    pub fn is_quarantined(&self, node: NodeId) -> bool {
+        self.quarantined.contains(&node)
+    }
+
+    /// Nodes currently fenced off by the crash-flap quarantine.
+    pub fn quarantined_count(&self) -> usize {
+        self.quarantined.len()
+    }
+
+    fn sync_excluded(&mut self) {
+        self.excluded = self.retiring.union(&self.quarantined).copied().collect();
     }
 
     /// Elastic shrink: retire `node`, releasing every allocation touching
@@ -446,6 +521,9 @@ impl Orchestrator {
             old
         };
         self.index.set_idle(node, old_idle, 0);
+        if self.quarantined.remove(&node) {
+            self.sync_excluded();
+        }
         Ok(released)
     }
 
@@ -472,8 +550,8 @@ impl Orchestrator {
 
     /// Serialize the full orchestrator — topology (GPUs by catalog name),
     /// idle counts, allocation ledger, device-memory charges, and the
-    /// retiring set — for a durable snapshot. The capacity index is derived
-    /// state and is rebuilt on restore.
+    /// retiring and quarantined sets — for a durable snapshot. The capacity
+    /// index and the derived excluded set are rebuilt on restore.
     pub fn to_json(&self) -> Json {
         let nodes: Vec<Json> = self
             .state
@@ -503,12 +581,14 @@ impl Orchestrator {
             })
             .collect();
         let retiring: Vec<Json> = self.retiring.iter().map(|&n| Json::from(n)).collect();
+        let quarantined: Vec<Json> = self.quarantined.iter().map(|&n| Json::from(n)).collect();
         let mut j = Json::obj();
         j.set("inter_node_gbps", self.state.inter_node_gbps)
             .set("nodes", Json::Arr(nodes))
             .set("ledger", Json::Arr(ledger))
             .set("device", self.device.to_json())
-            .set("retiring", Json::Arr(retiring));
+            .set("retiring", Json::Arr(retiring))
+            .set("quarantined", Json::Arr(quarantined));
         j
     }
 
@@ -562,7 +642,16 @@ impl Orchestrator {
         for r in j.get("retiring").and_then(Json::as_arr).ok_or("missing field 'retiring'")? {
             retiring.insert(r.as_usize().ok_or("retiring: bad node id")?);
         }
-        let orch = Orchestrator { state, ledger, index, device, retiring };
+        // Optional for forward compatibility: snapshots written before the
+        // quarantine existed simply have no fenced nodes.
+        let mut quarantined = BTreeSet::new();
+        if let Some(q) = j.get("quarantined").and_then(Json::as_arr) {
+            for r in q {
+                quarantined.insert(r.as_usize().ok_or("quarantined: bad node id")?);
+            }
+        }
+        let excluded = retiring.union(&quarantined).copied().collect();
+        let orch = Orchestrator { state, ledger, index, device, retiring, quarantined, excluded };
         if !orch.check_conservation() {
             return Err("snapshot violates resource conservation".into());
         }
@@ -845,6 +934,74 @@ mod tests {
         assert!(back.check_index(), "index rebuilt from state");
         // Serialization itself is deterministic.
         assert_eq!(text, back.to_json().to_string_compact());
+    }
+
+    #[test]
+    fn crash_node_releases_jobs_but_keeps_capacity() {
+        let mut o = Orchestrator::new(&real_testbed());
+        o.allocate(Allocation { job: 1, parts: vec![(2, 2), (3, 1)] }).unwrap();
+        o.charge_memory(1, 10 * GIB).unwrap();
+        o.allocate(Allocation { job: 2, parts: vec![(0, 2)] }).unwrap();
+        let released = o.crash_node(2).unwrap();
+        assert_eq!(released.len(), 1);
+        assert_eq!(released[0].job, 1);
+        // Unlike shrink, the crashed node's capacity survives the crash.
+        assert_eq!(o.state().nodes[2].total, 4);
+        assert_eq!(o.state().nodes[2].idle, 4);
+        assert_eq!(o.state().nodes[3].idle, 2, "the job's other part came back too");
+        assert!(o.allocation_of(1).is_none());
+        assert!(o.allocation_of(2).is_some(), "jobs elsewhere are untouched");
+        assert_eq!(o.device_memory().total_used_bytes(), 0);
+        assert!(o.check_conservation());
+        assert!(o.check_index());
+        // A crash on a node hosting nothing displaces nothing.
+        assert!(o.crash_node(2).unwrap().is_empty());
+        assert_eq!(o.crash_node(99).unwrap_err(), ClusterError::NoSuchNode(99));
+    }
+
+    #[test]
+    fn quarantined_node_hidden_from_view_until_unquarantined() {
+        let mut o = Orchestrator::new(&real_testbed());
+        let all = o.view().idle_gpus_with_mem(40 * GIB);
+        o.quarantine(2); // the 4×A800 node: 4 idle GPUs, all fenced
+        assert!(o.is_quarantined(2));
+        assert_eq!(o.quarantined_count(), 1);
+        assert_eq!(o.view().idle_gpus_with_mem(40 * GIB), all - 4);
+        assert!(o.view().is_draining(2), "schedulers see the fence");
+        assert!(o.node_active(2), "a fenced node still heartbeats");
+        assert!(o.check_conservation(), "capacity is unchanged");
+        o.quarantine(2); // idempotent
+        assert_eq!(o.quarantined_count(), 1);
+        o.unquarantine(2);
+        assert_eq!(o.quarantined_count(), 0);
+        assert_eq!(o.view().idle_gpus_with_mem(40 * GIB), all);
+        o.quarantine(99); // unknown node: ignored
+        assert_eq!(o.quarantined_count(), 0);
+    }
+
+    #[test]
+    fn orchestrator_json_roundtrip_mid_quarantine() {
+        let mut o = Orchestrator::new(&real_testbed());
+        o.allocate(Allocation { job: 1, parts: vec![(0, 2)] }).unwrap();
+        o.quarantine(2);
+        let text = o.to_json().to_string_compact();
+        let back =
+            Orchestrator::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert!(back.is_quarantined(2));
+        assert_eq!(
+            back.view().idle_gpus_with_mem(40 * GIB),
+            o.view().idle_gpus_with_mem(40 * GIB),
+            "the derived excluded set is rebuilt on restore"
+        );
+        assert!(back.check_conservation());
+        assert_eq!(text, back.to_json().to_string_compact());
+        // Snapshots written before the quarantine existed restore cleanly
+        // with no fenced nodes.
+        let legacy = text.replace(",\"quarantined\":[2]", "");
+        assert_ne!(legacy, text);
+        let old =
+            Orchestrator::from_json(&crate::util::json::parse(&legacy).unwrap()).unwrap();
+        assert_eq!(old.quarantined_count(), 0);
     }
 
     #[test]

@@ -227,6 +227,14 @@ pub struct Wal {
     /// Rotation threshold; see [`DEFAULT_SEGMENT_BYTES`]. Exposed for
     /// tests that exercise rotation without writing a mebibyte.
     pub segment_bytes: u64,
+    /// Fail the next N appends with an injected I/O error *before* any
+    /// bytes reach the file — the error path of a full disk or pulled
+    /// volume. Exposed (like [`Wal::segment_bytes`]) so tests can prove a
+    /// failed append corrupts nothing.
+    pub fail_appends: u32,
+    /// Fail the next N fsyncs with an injected I/O error. The written
+    /// bytes stay in the kernel; only the durability acknowledgment fails.
+    pub fail_syncs: u32,
     next_seq: u64,
     total_bytes: u64,
     segments: usize,
@@ -311,6 +319,8 @@ impl Wal {
                 seg_path,
                 bytes_in_seg,
                 segment_bytes: DEFAULT_SEGMENT_BYTES,
+                fail_appends: 0,
+                fail_syncs: 0,
                 next_seq,
                 total_bytes,
                 segments,
@@ -345,6 +355,14 @@ impl Wal {
                 self.scratch = buf;
                 return Err(e);
             }
+        }
+        if self.fail_appends > 0 {
+            self.fail_appends -= 1;
+            self.scratch = buf;
+            return Err(format!(
+                "wal: append to {}: injected I/O failure",
+                self.seg_path.display()
+            ));
         }
         let res = self
             .file
@@ -399,6 +417,13 @@ impl Wal {
 
     /// Force an fsync of the active segment.
     pub fn sync(&mut self) -> Result<(), String> {
+        if self.fail_syncs > 0 {
+            self.fail_syncs -= 1;
+            return Err(format!(
+                "wal: fsync {}: injected I/O failure",
+                self.seg_path.display()
+            ));
+        }
         self.file
             .sync_data()
             .map_err(|e| format!("wal: fsync {}: {e}", self.seg_path.display()))?;
@@ -699,6 +724,61 @@ mod tests {
         assert_eq!(fs::read(&seg_a).unwrap(), fs::read(&seg_b).unwrap());
         fs::remove_dir_all(&dir_a).unwrap();
         fs::remove_dir_all(&dir_b).unwrap();
+    }
+
+    /// A failed append is a hard error that corrupts nothing: the segment
+    /// bytes are untouched, recovery from the pre-failure prefix is
+    /// byte-identical, and the sequence stays dense for the next append.
+    #[test]
+    fn failed_append_surfaces_error_without_corrupting_the_segment() {
+        let dir = tmp("fail_append");
+        let (mut wal, _) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        for j in 1..=3 {
+            wal.append(&ev(j)).unwrap();
+        }
+        let seg = wal.seg_path.clone();
+        let prefix = fs::read(&seg).unwrap();
+        wal.fail_appends = 1;
+        let err = wal.append(&ev(4)).unwrap_err();
+        assert!(err.contains("injected I/O failure"), "got: {err}");
+        assert_eq!(fs::read(&seg).unwrap(), prefix, "failed append wrote nothing");
+        // The handle itself still works: the failed record was never
+        // assigned a seq, so the retry gets seq 4 and the log stays dense.
+        assert_eq!(wal.append(&ev(4)).unwrap(), 4);
+        drop(wal);
+        let (wal, recs) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(wal.last_seq(), 4);
+        let seqs: Vec<u64> = recs.iter().map(|&(s, _)| s).collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A failed fsync surfaces as a hard error from the append that
+    /// triggered it, but the frame already reached the kernel — recovery
+    /// finds a cleanly parseable log with no torn bytes, and re-opening
+    /// does not rewrite the pre-failure prefix.
+    #[test]
+    fn failed_fsync_surfaces_error_and_recovery_is_byte_identical() {
+        let dir = tmp("fail_fsync");
+        let (mut wal, _) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        for j in 1..=2 {
+            wal.append(&ev(j)).unwrap();
+        }
+        let seg = wal.seg_path.clone();
+        wal.fail_syncs = 1;
+        let err = wal.append(&ev(3)).unwrap_err();
+        assert!(err.contains("fsync") && err.contains("injected"), "got: {err}");
+        let after_failure = fs::read(&seg).unwrap();
+        drop(wal);
+        // Recovery: every whole record parses, seqs are dense, and the
+        // open itself leaves the bytes exactly as the failure left them
+        // (no truncation — nothing was torn).
+        let (mut wal, recs) = Wal::open(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(recs.len(), 3, "the unacknowledged frame still reached the kernel");
+        assert_eq!(wal.last_seq(), 3);
+        assert_eq!(fs::read(&seg).unwrap(), after_failure, "open rewrote valid bytes");
+        assert_eq!(wal.append(&ev(4)).unwrap(), 4);
+        fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -130,6 +130,21 @@ pub enum EventKind {
     /// instant-preemption leaves retire within their `NodeLeft` record and
     /// do not emit it.
     NodeRetired { node: NodeId },
+    /// A node crashed — missed its heartbeat lease or was killed by fault
+    /// injection. Unlike a graceful `NodeLeft`, there is **no** drain
+    /// grace: every hosted job loses its work back to the last checkpoint
+    /// floor and requeues after a crash-backoff hold (without burning an
+    /// attempt — the node failed, not the job).
+    NodeCrashed { node: NodeId, preempted: Vec<JobId> },
+    /// A node crossed the crash threshold (≥ K crashes inside the
+    /// quarantine window) and is excluded from placement until `until_s`.
+    NodeQuarantined { node: NodeId, until_s: f64 },
+    /// A quarantined node finished probation and accepts placements again.
+    NodeProbation { node: NodeId },
+    /// A node's effective throughput changed: new placements touching it
+    /// run at `factor` × modeled speed (a straggler while `factor < 1`;
+    /// `factor = 1` ends the slowdown).
+    NodeSlowdown { node: NodeId, factor: f64 },
 }
 
 impl EventKind {
@@ -223,6 +238,19 @@ impl EventKind {
             }
             EventKind::NodeRetired { node } => {
                 j.set("kind", "node_retired").set("node", *node);
+            }
+            EventKind::NodeCrashed { node, preempted } => {
+                let jobs: Vec<Json> = preempted.iter().map(|&id| Json::from(id)).collect();
+                j.set("kind", "node_crash").set("node", *node).set("preempted", Json::Arr(jobs));
+            }
+            EventKind::NodeQuarantined { node, until_s } => {
+                j.set("kind", "node_quarantined").set("node", *node).set("until_s", *until_s);
+            }
+            EventKind::NodeProbation { node } => {
+                j.set("kind", "node_probation").set("node", *node);
+            }
+            EventKind::NodeSlowdown { node, factor } => {
+                j.set("kind", "node_slowdown").set("node", *node).set("factor", *factor);
             }
         }
         j
@@ -321,6 +349,26 @@ impl EventKind {
                 EventKind::NodeLeft { node: f_usize(j, "node")?, preempted }
             }
             "node_retired" => EventKind::NodeRetired { node: f_usize(j, "node")? },
+            "node_crash" => {
+                let jobs_j = j
+                    .get("preempted")
+                    .and_then(Json::as_arr)
+                    .ok_or("node_crash: no preempted")?;
+                let preempted = jobs_j
+                    .iter()
+                    .map(|v| v.as_u64().ok_or("node_crash: bad job id".to_string()))
+                    .collect::<Result<Vec<u64>, _>>()?;
+                EventKind::NodeCrashed { node: f_usize(j, "node")?, preempted }
+            }
+            "node_quarantined" => EventKind::NodeQuarantined {
+                node: f_usize(j, "node")?,
+                until_s: f_f64(j, "until_s")?,
+            },
+            "node_probation" => EventKind::NodeProbation { node: f_usize(j, "node")? },
+            "node_slowdown" => EventKind::NodeSlowdown {
+                node: f_usize(j, "node")?,
+                factor: f_f64(j, "factor")?,
+            },
             other => return Err(format!("unknown event kind '{other}'")),
         })
     }
@@ -589,6 +637,10 @@ mod tests {
             EventKind::NodeJoined { node: 5, gpu: "A100-40G".into(), gpus: 8 },
             EventKind::NodeLeft { node: 5, preempted: vec![7, 9] },
             EventKind::NodeRetired { node: 5 },
+            EventKind::NodeCrashed { node: 5, preempted: vec![7, 9] },
+            EventKind::NodeQuarantined { node: 5, until_s: 420.5 },
+            EventKind::NodeProbation { node: 5 },
+            EventKind::NodeSlowdown { node: 5, factor: 0.25 },
         ];
         for k in kinds {
             let text = k.to_json().to_string_compact();

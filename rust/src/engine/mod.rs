@@ -63,7 +63,7 @@ use crate::sched::{PendingJob, PendingQueue, Scheduler};
 use crate::util::json::Json;
 use crate::util::prng::SplitMix64;
 use clock::Clock;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 /// Everything that can happen to the cluster, in one enum — the union of
 /// the simulator's old private event set and the live coordinator's
@@ -105,6 +105,31 @@ pub enum ClusterEvent {
     /// *pure replay* — no side channel mutates engine state. A cancel for
     /// a job that is neither pending nor running is a no-op.
     Cancel { job: JobId },
+    /// Abrupt node failure — a missed heartbeat lease, or fault injection.
+    /// Unlike the operator-initiated [`Self::NodeLeave`] there is **no**
+    /// drain grace: every hosted job dies mid-step, loses its work back to
+    /// the last checkpoint floor, and re-enters placement after a capped
+    /// exponential crash-backoff hold *without* burning an attempt (the
+    /// node failed, not the job). The node's capacity stays in the cluster
+    /// (idle) — a crashed node may recover, flap, or be quarantined.
+    NodeCrash(NodeId),
+    /// A crash-backoff hold expired: move the held job back to the pending
+    /// queue. Self-scheduled on a virtual clock; delivered by the driver
+    /// from an [`Effects::requeue_after`] directive on a wall clock.
+    Requeue { job: JobId },
+    /// A quarantined node's probation ended: it accepts placements again.
+    /// Self-scheduled on a virtual clock; delivered by the driver from an
+    /// [`Effects::probation_after`] directive on a wall clock.
+    Probation { node: NodeId },
+    /// Straggler injection: new placements touching `node` run at `factor`
+    /// × modeled throughput (`factor = 1` ends the slowdown). Running jobs
+    /// keep their original estimate — the degradation applies at placement
+    /// time.
+    Slowdown { node: NodeId, factor: f64 },
+    /// Checkpoint writes on `node` fail until `until_s`: a drain or crash
+    /// inside the window falls back to the last checkpoint that was
+    /// actually written instead of the current floor.
+    CkptFail { node: NodeId, until_s: f64 },
 }
 
 impl ClusterEvent {
@@ -144,6 +169,21 @@ impl ClusterEvent {
             ClusterEvent::Cancel { job } => {
                 j.set("kind", "cancel").set("job", *job);
             }
+            ClusterEvent::NodeCrash(node) => {
+                j.set("kind", "node_crash").set("node", *node);
+            }
+            ClusterEvent::Requeue { job } => {
+                j.set("kind", "requeue").set("job", *job);
+            }
+            ClusterEvent::Probation { node } => {
+                j.set("kind", "probation").set("node", *node);
+            }
+            ClusterEvent::Slowdown { node, factor } => {
+                j.set("kind", "slowdown").set("node", *node).set("factor", *factor);
+            }
+            ClusterEvent::CkptFail { node, until_s } => {
+                j.set("kind", "ckpt_fail").set("node", *node).set("until_s", *until_s);
+            }
         }
         j
     }
@@ -153,6 +193,12 @@ impl ClusterEvent {
         let kind = j.get("kind").and_then(Json::as_str).ok_or("event: missing 'kind'")?;
         let job = || j.get("job").and_then(Json::as_u64).ok_or("event: missing 'job'");
         let epoch = || j.get("epoch").and_then(Json::as_u64).ok_or("event: missing 'epoch'");
+        let node = || {
+            j.get("node")
+                .and_then(Json::as_u64)
+                .and_then(|n| usize::try_from(n).ok())
+                .ok_or("event: missing 'node'")
+        };
         Ok(match kind {
             "arrival" => ClusterEvent::Arrival(JobSpec::from_json(
                 j.get("spec").ok_or("arrival: missing 'spec'")?,
@@ -185,6 +231,23 @@ impl ClusterEvent {
             ),
             "drained" => ClusterEvent::Drained { job: job()?, epoch: epoch()? },
             "cancel" => ClusterEvent::Cancel { job: job()? },
+            "node_crash" => ClusterEvent::NodeCrash(node()?),
+            "requeue" => ClusterEvent::Requeue { job: job()? },
+            "probation" => ClusterEvent::Probation { node: node()? },
+            "slowdown" => ClusterEvent::Slowdown {
+                node: node()?,
+                factor: j
+                    .get("factor")
+                    .and_then(Json::as_f64)
+                    .ok_or("slowdown: missing 'factor'")?,
+            },
+            "ckpt_fail" => ClusterEvent::CkptFail {
+                node: node()?,
+                until_s: j
+                    .get("until_s")
+                    .and_then(Json::as_f64)
+                    .ok_or("ckpt_fail: missing 'until_s'")?,
+            },
             other => return Err(format!("event: unknown kind '{other}'")),
         })
     }
@@ -234,6 +297,22 @@ pub struct EngineConfig {
     /// Hard cap on scheduling attempts (OOM retries / preemptions) before a
     /// job is rejected.
     pub max_attempts: u32,
+    /// First crash-backoff hold in seconds: a job displaced by
+    /// [`ClusterEvent::NodeCrash`] waits `base · 2^(n-1)` (its n-th crash)
+    /// before re-entering the pending queue — deterministic and
+    /// clock-driven, never a spin.
+    pub crash_backoff_base_s: f64,
+    /// Upper bound on the crash-backoff hold.
+    pub crash_backoff_cap_s: f64,
+    /// A node that crashes this many times inside
+    /// [`EngineConfig::quarantine_window_s`] is quarantined — excluded
+    /// from placement until its probation ends. Zero disables quarantine.
+    pub quarantine_crashes: u32,
+    /// Sliding window (seconds) over which node crashes count toward
+    /// quarantine.
+    pub quarantine_window_s: f64,
+    /// How long a quarantined node sits out before rejoining placement.
+    pub probation_s: f64,
     /// Retention policy for terminal-job bookkeeping: per-job maps
     /// (`epochs`, `submit_times`, `first_starts`) keep entries for at most
     /// this many *terminal* jobs, oldest-terminal-first eviction. Bounds a
@@ -258,6 +337,11 @@ impl Default for EngineConfig {
             drain_grace_s: 0.0,
             sched_work_unit_s: 2.0e-5,
             max_attempts: 6,
+            crash_backoff_base_s: 1.0,
+            crash_backoff_cap_s: 60.0,
+            quarantine_crashes: 3,
+            quarantine_window_s: 300.0,
+            probation_s: 120.0,
             retain_terminal: 16_384,
             event_log_cap: 65_536,
         }
@@ -315,6 +399,24 @@ pub struct DrainDirective {
     pub delay_s: f64,
 }
 
+/// A crash-backoff hold on a wall clock: the driver must deliver
+/// [`ClusterEvent::Requeue`] `{job}` after `delay_s` (virtual clocks
+/// self-schedule it instead).
+#[derive(Debug, Clone)]
+pub struct RequeueDirective {
+    pub job: JobId,
+    pub delay_s: f64,
+}
+
+/// A quarantine probation deadline on a wall clock: the driver must
+/// deliver [`ClusterEvent::Probation`] `{node}` after `delay_s` (virtual
+/// clocks self-schedule it instead).
+#[derive(Debug, Clone)]
+pub struct ProbationDirective {
+    pub node: NodeId,
+    pub delay_s: f64,
+}
+
 /// What one event (plus the scheduling round it triggered) did — the
 /// driver's window into the engine.
 #[derive(Debug, Clone, Default)]
@@ -336,6 +438,14 @@ pub struct Effects {
     /// [`ClusterEvent::Drained`] after each directive's delay (wall clock
     /// only).
     pub drain_requested: Vec<DrainDirective>,
+    /// Crash-backoff holds the driver must feed back as
+    /// [`ClusterEvent::Requeue`] after each directive's delay (wall clock
+    /// only).
+    pub requeue_after: Vec<RequeueDirective>,
+    /// Quarantine probations the driver must feed back as
+    /// [`ClusterEvent::Probation`] after each directive's delay (wall
+    /// clock only).
+    pub probation_after: Vec<ProbationDirective>,
 }
 
 impl Effects {
@@ -346,6 +456,8 @@ impl Effects {
         self.preempted.append(&mut other.preempted);
         self.oom_observed.append(&mut other.oom_observed);
         self.drain_requested.append(&mut other.drain_requested);
+        self.requeue_after.append(&mut other.requeue_after);
+        self.probation_after.append(&mut other.probation_after);
     }
 }
 
@@ -408,6 +520,15 @@ pub const MAX_DECISION_LOG: usize = 65_536;
 pub trait Journal {
     fn event(&mut self, time: f64, ev: &ClusterEvent);
     fn round(&mut self, time: f64, sched_wall_s: f64);
+}
+
+/// A crash-displaced job waiting out its backoff hold before re-entering
+/// the pending queue (see [`ClusterEvent::NodeCrash`]).
+struct HeldJob {
+    spec: JobSpec,
+    attempts: u32,
+    /// Absolute time the hold expires (what recovery re-arms).
+    release_at: f64,
 }
 
 struct RunningJob {
@@ -490,6 +611,23 @@ pub struct SchedulingEngine<'a> {
     ckpts: CheckpointStore,
     /// Every applied placement, in order: (job, sorted (node, gpus) parts).
     decision_log: Vec<PlacementRecord>,
+    /// Crash-displaced jobs waiting out their backoff hold (released back
+    /// to pending by [`ClusterEvent::Requeue`]).
+    held: BTreeMap<JobId, HeldJob>,
+    /// Times each job has been crash-displaced — drives the exponential
+    /// backoff.
+    crash_counts: BTreeMap<JobId, u32>,
+    /// Recent crash timestamps per node (pruned to the quarantine window)
+    /// — drives the flap detector.
+    node_crash_times: BTreeMap<NodeId, Vec<f64>>,
+    /// Quarantined nodes and their probation deadlines (what recovery
+    /// re-arms).
+    quarantine_until: BTreeMap<NodeId, f64>,
+    /// Straggler state: nodes whose new placements run at `factor` ×
+    /// modeled throughput.
+    slow_factors: BTreeMap<NodeId, f64>,
+    /// Nodes whose checkpoint writes fail until the given time.
+    ckpt_fail_until: BTreeMap<NodeId, f64>,
     /// Interval schedulers: time of the last executed round and whether a
     /// RoundTick is already queued in a virtual clock.
     last_round: f64,
@@ -521,6 +659,12 @@ impl<'a> SchedulingEngine<'a> {
             retention,
             ckpts: CheckpointStore::new(),
             decision_log: Vec::new(),
+            held: BTreeMap::new(),
+            crash_counts: BTreeMap::new(),
+            node_crash_times: BTreeMap::new(),
+            quarantine_until: BTreeMap::new(),
+            slow_factors: BTreeMap::new(),
+            ckpt_fail_until: BTreeMap::new(),
             last_round: f64::NEG_INFINITY,
             tick_queued: false,
             journal: None,
@@ -604,9 +748,35 @@ impl<'a> SchedulingEngine<'a> {
                 self.handle_drained(job, epoch, now, &mut fx);
             }
             ClusterEvent::Cancel { job } => {
-                if !self.cancel_pending(job, now) {
-                    self.cancel_running(job, now);
+                if !self.cancel_pending(job, now) && !self.cancel_running(job, now) {
+                    self.cancel_held(job, now);
                 }
+            }
+            ClusterEvent::NodeCrash(node) => {
+                self.node_crash(node, now, clock, &mut fx);
+            }
+            ClusterEvent::Requeue { job } => {
+                if let Some(h) = self.held.remove(&job) {
+                    self.pending.push(PendingJob { spec: h.spec, attempts: h.attempts });
+                }
+            }
+            ClusterEvent::Probation { node } => {
+                if self.quarantine_until.remove(&node).is_some() {
+                    self.orch.unquarantine(node);
+                    self.events.push(now, EventKind::NodeProbation { node });
+                    self.sched.cluster_changed(self.orch.state());
+                }
+            }
+            ClusterEvent::Slowdown { node, factor } => {
+                if factor >= 1.0 {
+                    self.slow_factors.remove(&node);
+                } else {
+                    self.slow_factors.insert(node, factor.max(1e-3));
+                }
+                self.events.push(now, EventKind::NodeSlowdown { node, factor });
+            }
+            ClusterEvent::CkptFail { node, until_s } => {
+                self.ckpt_fail_until.insert(node, until_s);
             }
             ClusterEvent::RoundTick => {
                 self.tick_queued = false;
@@ -631,7 +801,9 @@ impl<'a> SchedulingEngine<'a> {
                         // all of it re-executes (no checkpoint on this
                         // path), which is exactly what the report's
                         // `total_steps_executed` excess must show.
-                        self.agg.record_run_steps(Self::steps_this_run(&run, now));
+                        let executed = Self::steps_this_run(&run, now);
+                        self.agg.record_run_steps(executed);
+                        self.agg.record_steps_lost(executed);
                         if run.attempts >= self.cfg.max_attempts {
                             self.reject(now, alloc.job, RejectReason::AttemptsExhausted, &mut fx);
                         } else {
@@ -692,6 +864,87 @@ impl<'a> SchedulingEngine<'a> {
         self.sched.cluster_changed(self.orch.state());
     }
 
+    /// Abrupt node failure: every hosted job is killed mid-step — no drain
+    /// grace, no final checkpoint write. Work falls back to the last
+    /// checkpoint floor (or, while the node's checkpoint writes are
+    /// failing, to the last checkpoint that actually made it out), and the
+    /// job re-enters placement after a capped exponential crash-backoff
+    /// hold **without** burning an attempt — the node failed, not the job.
+    /// A node that crashes [`EngineConfig::quarantine_crashes`] times
+    /// inside [`EngineConfig::quarantine_window_s`] is quarantined:
+    /// excluded from placement until its probation ends. The node's idle
+    /// capacity stays in the cluster — crash is not retirement.
+    fn node_crash(&mut self, node: NodeId, now: f64, clock: &mut dyn Clock, fx: &mut Effects) {
+        if self.quarantine_until.contains_key(&node) {
+            return; // already fenced off — nothing left to kill
+        }
+        let Ok(released) = self.orch.crash_node(node) else { return };
+        let displaced: Vec<JobId> = released.iter().map(|a| a.job).collect();
+        self.agg.record_node_crash();
+        self.events.push(now, EventKind::NodeCrashed { node, preempted: displaced });
+        let ckpt_blocked = self.ckpt_fail_until.get(&node).is_some_and(|&u| now < u);
+        for alloc in released {
+            let Some(run) = self.running.remove(&alloc.job) else { continue };
+            let job = alloc.job;
+            let batch = run.spec.train.global_batch.max(1) as u64;
+            let executed = Self::steps_this_run(&run, now);
+            self.agg.record_run_steps(executed);
+            let steps_total = run.resumed_samples / batch + executed;
+            let prior = self.ckpts.get(job).map(|c| c.steps_done).unwrap_or(0);
+            let floor = if ckpt_blocked {
+                prior
+            } else {
+                checkpoint::ckpt_floor(steps_total, self.cfg.ckpt_every_steps).max(prior)
+            };
+            if floor > prior {
+                self.ckpts.save(Checkpoint {
+                    job,
+                    steps_done: floor,
+                    state_digest: checkpoint::state_digest(job, floor),
+                });
+            }
+            self.agg.record_steps_lost(steps_total.saturating_sub(floor));
+            self.agg.record_crash_requeue();
+            let n = {
+                let c = self.crash_counts.entry(job).or_insert(0);
+                *c += 1;
+                *c
+            };
+            let delay = (self.cfg.crash_backoff_base_s
+                * f64::powi(2.0, n.saturating_sub(1).min(30) as i32))
+            .min(self.cfg.crash_backoff_cap_s)
+            .max(0.0);
+            let release_at = now + delay;
+            self.held.insert(job, HeldJob { spec: run.spec, attempts: run.attempts, release_at });
+            fx.preempted.push(job);
+            if !clock.schedule(release_at, ClusterEvent::Requeue { job }) {
+                fx.requeue_after.push(RequeueDirective { job, delay_s: delay });
+            }
+        }
+        self.reap_retired(now);
+        // Flap detector: K crashes inside the window → quarantine.
+        let window = self.cfg.quarantine_window_s;
+        let recent = {
+            let times = self.node_crash_times.entry(node).or_default();
+            times.push(now);
+            times.retain(|&t| now - t <= window);
+            times.len() as u32
+        };
+        if self.cfg.quarantine_crashes > 0 && recent >= self.cfg.quarantine_crashes {
+            self.node_crash_times.remove(&node);
+            let until = now + self.cfg.probation_s;
+            self.quarantine_until.insert(node, until);
+            self.orch.quarantine(node);
+            self.agg.record_quarantine();
+            self.events.push(now, EventKind::NodeQuarantined { node, until_s: until });
+            if !clock.schedule(until, ClusterEvent::Probation { node }) {
+                fx.probation_after
+                    .push(ProbationDirective { node, delay_s: self.cfg.probation_s });
+            }
+        }
+        self.sched.cluster_changed(self.orch.state());
+    }
+
     /// A drain deadline fired: floor the job's progress to its last
     /// checkpoint boundary, snapshot it, release the GPUs (reaping the
     /// retiring node), and requeue the job — its next placement resumes
@@ -709,12 +962,19 @@ impl<'a> SchedulingEngine<'a> {
         let batch = run.spec.train.global_batch.max(1) as u64;
         let executed = Self::steps_this_run(&run, now);
         let steps_total = run.resumed_samples / batch + executed;
-        let steps_ckpt = checkpoint::ckpt_floor(steps_total, self.cfg.ckpt_every_steps);
+        let steps_ckpt = if self.ckpt_fail_until.get(&node).is_some_and(|&u| now < u) {
+            // The node's checkpoint writes are failing: fall back to the
+            // last checkpoint that actually made it out (possibly none).
+            self.ckpts.get(job).map(|c| c.steps_done).unwrap_or(0)
+        } else {
+            checkpoint::ckpt_floor(steps_total, self.cfg.ckpt_every_steps)
+        };
         let digest = checkpoint::state_digest(job, steps_ckpt);
         if steps_ckpt > 0 {
             self.ckpts.save(Checkpoint { job, steps_done: steps_ckpt, state_digest: digest });
         }
         self.agg.record_drained(executed);
+        self.agg.record_steps_lost(steps_total.saturating_sub(steps_ckpt));
         let _ = self.orch.release(job);
         self.reap_retired(now);
         self.events
@@ -920,13 +1180,21 @@ impl<'a> SchedulingEngine<'a> {
                 // Fallback: trust the scheduler's flag and model detection.
                 (true, 0.0, self.cfg.oom_detect_s)
             } else {
-                let thr = self.pm.samples_per_sec(
+                let mut thr = self.pm.samples_per_sec(
                     &pj.spec.model,
                     &pj.spec.train,
                     d.par,
                     &d.gpu,
                     d.placement,
                 );
+                // Straggler degradation: a synchronous data-parallel run is
+                // gated by its slowest participant, so the placement runs
+                // at the worst factor over the nodes it touches.
+                let slow = parts
+                    .iter()
+                    .filter_map(|(n, _)| self.slow_factors.get(n))
+                    .fold(1.0f64, |a, &b| a.min(b));
+                thr *= slow;
                 let remaining = pj.spec.total_samples.saturating_sub(resumed_samples);
                 (false, thr, remaining as f64 / thr.max(1e-9))
             };
@@ -1092,12 +1360,27 @@ impl<'a> SchedulingEngine<'a> {
         true
     }
 
+    /// Cancel a job waiting out its crash-backoff hold. True when it was
+    /// held.
+    pub fn cancel_held(&mut self, id: JobId, now: f64) -> bool {
+        if self.held.remove(&id).is_none() {
+            return false;
+        }
+        self.agg.record_cancelled();
+        self.events.push(now, EventKind::Cancelled { job: id, was_running: false });
+        self.note_terminal(id);
+        true
+    }
+
     /// Drain the pending queue into rejections (end-of-run bookkeeping:
-    /// whatever is still pending never got resources). Logged as
+    /// whatever is still pending never got resources). Crash-held jobs are
+    /// included — their backoff hold never expired. Logged as
     /// [`RejectReason::RunEnded`] — these jobs may have been placeable, the
     /// run just stopped first.
     pub fn reject_remaining(&mut self, now: f64) -> Vec<JobId> {
-        let ids: Vec<JobId> = self.pending.drain().into_iter().map(|p| p.spec.id).collect();
+        let mut ids: Vec<JobId> =
+            self.pending.drain().into_iter().map(|p| p.spec.id).collect();
+        ids.extend(std::mem::take(&mut self.held).into_keys());
         let mut fx = Effects::default();
         for &id in &ids {
             self.reject(now, id, RejectReason::RunEnded, &mut fx);
@@ -1185,6 +1468,22 @@ impl<'a> SchedulingEngine<'a> {
         self.pending.contains(id)
     }
 
+    /// True when `job` is waiting out a crash-backoff hold — displaced by
+    /// a [`ClusterEvent::NodeCrash`], not yet back in the pending queue.
+    pub fn is_held(&self, id: JobId) -> bool {
+        self.held.contains_key(&id)
+    }
+
+    /// Jobs currently waiting out crash-backoff holds.
+    pub fn held_count(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Nodes currently quarantined by the crash-flap detector, in id order.
+    pub fn quarantined_nodes(&self) -> Vec<NodeId> {
+        self.quarantine_until.keys().copied().collect()
+    }
+
     /// Scheduling attempts recorded for a job so far (running or pending).
     pub fn attempts_of(&self, id: JobId) -> u32 {
         if let Some(r) = self.running.get(&id) {
@@ -1240,6 +1539,12 @@ impl<'a> SchedulingEngine<'a> {
             };
             out.push((run.outcome_at, ev));
         }
+        for (&job, h) in &self.held {
+            out.push((h.release_at, ClusterEvent::Requeue { job }));
+        }
+        for (&node, &until) in &self.quarantine_until {
+            out.push((until, ClusterEvent::Probation { node }));
+        }
         if self.tick_queued {
             if let Some(interval) = self.sched.round_interval_s() {
                 out.push((self.last_round + interval, ClusterEvent::RoundTick));
@@ -1283,6 +1588,14 @@ impl<'a> SchedulingEngine<'a> {
                 est_runtime_s: delay_s,
             });
         }
+        for (&job, h) in &self.held {
+            fx.requeue_after
+                .push(RequeueDirective { job, delay_s: (h.release_at - now).max(0.0) });
+        }
+        for (&node, &until) in &self.quarantine_until {
+            fx.probation_after
+                .push(ProbationDirective { node, delay_s: (until - now).max(0.0) });
+        }
         fx
     }
 
@@ -1299,7 +1612,12 @@ impl<'a> SchedulingEngine<'a> {
             .set("ckpt_write_s", cfg.ckpt_write_s)
             .set("drain_grace_s", cfg.drain_grace_s)
             .set("sched_work_unit_s", cfg.sched_work_unit_s)
-            .set("max_attempts", cfg.max_attempts);
+            .set("max_attempts", cfg.max_attempts)
+            .set("crash_backoff_base_s", cfg.crash_backoff_base_s)
+            .set("crash_backoff_cap_s", cfg.crash_backoff_cap_s)
+            .set("quarantine_crashes", cfg.quarantine_crashes)
+            .set("quarantine_window_s", cfg.quarantine_window_s)
+            .set("probation_s", cfg.probation_s);
         j
     }
 
@@ -1360,6 +1678,33 @@ impl<'a> SchedulingEngine<'a> {
                 Json::Arr(vec![Json::from(*job), Json::Arr(pj)])
             })
             .collect();
+        let held: Vec<Json> = self
+            .held
+            .iter()
+            .map(|(&job, h)| {
+                let mut hj = Json::obj();
+                hj.set("job", job)
+                    .set("spec", h.spec.to_json())
+                    .set("attempts", h.attempts)
+                    .set("release_at", h.release_at);
+                hj
+            })
+            .collect();
+        let crash_counts: Vec<Json> = self
+            .crash_counts
+            .iter()
+            .map(|(&job, &c)| Json::Arr(vec![Json::from(job), Json::from(c as u64)]))
+            .collect();
+        let crash_times: Vec<Json> = self
+            .node_crash_times
+            .iter()
+            .map(|(&n, ts)| {
+                Json::Arr(vec![
+                    Json::from(n),
+                    Json::Arr(ts.iter().map(|&t| Json::from(t)).collect()),
+                ])
+            })
+            .collect();
         let mut j = Json::obj();
         j.set("config", Self::config_guard_json(&self.cfg))
             .set("orch", self.orch.to_json())
@@ -1376,6 +1721,12 @@ impl<'a> SchedulingEngine<'a> {
             .set("retention", Json::Arr(retention))
             .set("ckpts", self.ckpts.to_json())
             .set("decision_log", Json::Arr(decisions))
+            .set("held", Json::Arr(held))
+            .set("crash_counts", Json::Arr(crash_counts))
+            .set("node_crash_times", Json::Arr(crash_times))
+            .set("quarantine_until", node_map_f64_json(&self.quarantine_until))
+            .set("slow_factors", node_map_f64_json(&self.slow_factors))
+            .set("ckpt_fail_until", node_map_f64_json(&self.ckpt_fail_until))
             .set("tick_queued", self.tick_queued);
         if self.last_round != f64::NEG_INFINITY {
             // NEG_INFINITY (no round yet) has no JSON form — absence is the
@@ -1505,6 +1856,58 @@ impl<'a> SchedulingEngine<'a> {
             }
             self.decision_log.push((job, ps));
         }
+        self.held = BTreeMap::new();
+        if let Some(arr) = j.get("held").and_then(Json::as_arr) {
+            for h in arr {
+                let job = h.get("job").and_then(Json::as_u64).ok_or("held: missing 'job'")?;
+                self.held.insert(
+                    job,
+                    HeldJob {
+                        spec: JobSpec::from_json(h.get("spec").ok_or("held: missing 'spec'")?)?,
+                        attempts: h
+                            .get("attempts")
+                            .and_then(Json::as_u64)
+                            .and_then(|a| u32::try_from(a).ok())
+                            .ok_or("held: missing 'attempts'")?,
+                        release_at: h
+                            .get("release_at")
+                            .and_then(Json::as_f64)
+                            .ok_or("held: missing 'release_at'")?,
+                    },
+                );
+            }
+        }
+        self.crash_counts = BTreeMap::new();
+        if let Some(arr) = j.get("crash_counts").and_then(Json::as_arr) {
+            for e in arr {
+                let Some([k, v]) = e.as_arr() else {
+                    return Err("crash_counts: bad entry".into());
+                };
+                self.crash_counts.insert(
+                    k.as_u64().ok_or("crash_counts: bad id")?,
+                    v.as_u64()
+                        .and_then(|c| u32::try_from(c).ok())
+                        .ok_or("crash_counts: bad count")?,
+                );
+            }
+        }
+        self.node_crash_times = BTreeMap::new();
+        if let Some(arr) = j.get("node_crash_times").and_then(Json::as_arr) {
+            for e in arr {
+                let Some([k, v]) = e.as_arr() else {
+                    return Err("node_crash_times: bad entry".into());
+                };
+                let mut ts = Vec::new();
+                for t in v.as_arr().ok_or("node_crash_times: bad times")? {
+                    ts.push(t.as_f64().ok_or("node_crash_times: bad time")?);
+                }
+                self.node_crash_times
+                    .insert(k.as_usize().ok_or("node_crash_times: bad node")?, ts);
+            }
+        }
+        self.quarantine_until = node_map_f64_restore(j.get("quarantine_until"), "quarantine_until")?;
+        self.slow_factors = node_map_f64_restore(j.get("slow_factors"), "slow_factors")?;
+        self.ckpt_fail_until = node_map_f64_restore(j.get("ckpt_fail_until"), "ckpt_fail_until")?;
         self.last_round =
             j.get("last_round").and_then(Json::as_f64).unwrap_or(f64::NEG_INFINITY);
         self.tick_queued =
@@ -1530,6 +1933,27 @@ fn id_map_u64_json(m: &HashMap<JobId, u64>) -> Json {
     Json::Arr(
         keys.into_iter().map(|k| Json::Arr(vec![Json::from(k), Json::from(m[&k])])).collect(),
     )
+}
+
+fn node_map_f64_json(m: &BTreeMap<NodeId, f64>) -> Json {
+    Json::Arr(
+        m.iter().map(|(&n, &v)| Json::Arr(vec![Json::from(n), Json::from(v)])).collect(),
+    )
+}
+
+fn node_map_f64_restore(j: Option<&Json>, what: &str) -> Result<BTreeMap<NodeId, f64>, String> {
+    let mut m = BTreeMap::new();
+    let Some(arr) = j.and_then(Json::as_arr) else { return Ok(m) };
+    for e in arr {
+        let Some([k, v]) = e.as_arr() else {
+            return Err(format!("{what}: bad entry"));
+        };
+        m.insert(
+            k.as_usize().ok_or_else(|| format!("{what}: bad node"))?,
+            v.as_f64().ok_or_else(|| format!("{what}: bad value"))?,
+        );
+    }
+    Ok(m)
 }
 
 fn id_map_f64_restore(j: Option<&Json>, what: &str) -> Result<HashMap<JobId, f64>, String> {
@@ -1964,6 +2388,264 @@ mod tests {
         assert!(engine.conservation_ok());
     }
 
+    // ---- failure domains -----------------------------------------------
+
+    #[test]
+    fn node_crash_holds_job_with_backoff_and_no_attempt_burn() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let cfg = EngineConfig {
+            ckpt_every_steps: 1,
+            crash_backoff_base_s: 7.0,
+            quarantine_crashes: 0, // isolate the backoff behavior
+            ..EngineConfig::default()
+        };
+        let mut engine = SchedulingEngine::new(&spec, &mut has, cfg);
+        let mut clock = VirtualClock::new();
+        engine.handle(
+            ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 100_000_000, 0.0)),
+            &mut clock,
+        );
+        let fx = engine.run_round(&mut clock);
+        assert_eq!(fx.placed.len(), 1);
+        let node = engine.decision_log()[0].1[0].0;
+        clock.schedule(500.0, ClusterEvent::NodeCrash(node));
+        let mut crash_seen = false;
+        let mut requeue_time = f64::NAN;
+        let mut guard = 0;
+        while let Some((_, ev)) = clock.pop() {
+            let is_crash = matches!(ev, ClusterEvent::NodeCrash(_));
+            let is_requeue = matches!(ev, ClusterEvent::Requeue { job: 1 });
+            let fx = engine.handle(ev, &mut clock);
+            if is_crash {
+                crash_seen = true;
+                assert_eq!(fx.preempted, vec![1], "hosted job displaced");
+                assert!(fx.requeue_after.is_empty(), "virtual clock self-schedules");
+                assert!(engine.is_held(1), "crash-held, not immediately pending");
+                assert!(!engine.is_pending(1));
+                // Crash is not retirement: the node's capacity stays.
+                assert!(engine.cluster_state().nodes[node].total > 0);
+            }
+            if is_requeue {
+                requeue_time = clock.now();
+                assert!(engine.is_pending(1), "hold expired → back in the queue");
+            }
+            engine.run_round(&mut clock);
+            assert!(engine.conservation_ok(), "conservation through the crash");
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert!(crash_seen);
+        assert!((requeue_time - 507.0).abs() < 1e-6, "released at crash + base backoff");
+        let agg = engine.aggregates();
+        assert_eq!(agg.n_completed, 1, "the job still finishes");
+        assert_eq!(agg.n_node_crashes, 1);
+        assert_eq!(agg.n_crash_requeues, 1);
+        assert!(agg.steps_lost > 0, "work past the floor was lost");
+        assert_eq!(engine.rejected_count(), 0, "a crash never burns the attempt budget");
+        // Audit trail: the crash names the displaced job, and the job
+        // resumed from its checkpoint floor rather than step 0.
+        assert!(engine.event_log().iter().any(|r| matches!(
+            &r.kind,
+            EventKind::NodeCrashed { preempted, .. } if preempted == &vec![1]
+        )));
+        assert!(engine
+            .event_log()
+            .iter()
+            .any(|r| matches!(r.kind, EventKind::ResumedFromCkpt { job: 1, steps_ckpt, .. } if steps_ckpt >= 1)));
+    }
+
+    #[test]
+    fn flapping_node_is_quarantined_then_rejoins_after_probation() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let cfg = EngineConfig {
+            quarantine_crashes: 2,
+            quarantine_window_s: 1_000.0,
+            probation_s: 200.0,
+            crash_backoff_base_s: 1.0,
+            ..EngineConfig::default()
+        };
+        let mut engine = SchedulingEngine::new(&spec, &mut has, cfg);
+        let mut clock = VirtualClock::new();
+        for i in 0..4u64 {
+            clock.schedule(
+                0.0,
+                ClusterEvent::Arrival(job(i, "gpt2-350m", 8, 80_000_000, 0.0)),
+            );
+        }
+        let flappy = 0usize;
+        clock.schedule(100.0, ClusterEvent::NodeCrash(flappy));
+        clock.schedule(150.0, ClusterEvent::NodeCrash(flappy));
+        let mut guard = 0;
+        while let Some((_, ev)) = clock.pop() {
+            engine.handle(ev, &mut clock);
+            engine.run_round(&mut clock);
+            assert!(engine.conservation_ok());
+            guard += 1;
+            assert!(guard < 100_000);
+        }
+        let agg = engine.aggregates();
+        assert_eq!(agg.n_node_crashes, 2);
+        assert_eq!(agg.n_quarantines, 1, "second crash inside the window quarantines");
+        let mut t_quarantine = None;
+        let mut t_probation = None;
+        for r in engine.event_log().iter() {
+            match &r.kind {
+                EventKind::NodeQuarantined { node, until_s } if *node == flappy => {
+                    t_quarantine = Some(r.time);
+                    assert!((until_s - (r.time + 200.0)).abs() < 1e-6);
+                }
+                EventKind::NodeProbation { node } if *node == flappy => {
+                    t_probation = Some(r.time);
+                }
+                _ => {}
+            }
+        }
+        let (tq, tp) = (t_quarantine.expect("quarantined"), t_probation.expect("probation"));
+        assert!((tp - (tq + 200.0)).abs() < 1e-6, "probation ends exactly after probation_s");
+        // While quarantined the node took no placements.
+        for r in engine.event_log().iter() {
+            if let EventKind::Placed { parts, .. } = &r.kind {
+                if r.time >= tq && r.time < tp {
+                    assert!(
+                        parts.iter().all(|&(n, _)| n != flappy),
+                        "quarantined node must be excluded from placement"
+                    );
+                }
+            }
+        }
+        assert!(engine.quarantined_nodes().is_empty(), "probation lifted the quarantine");
+        assert_eq!(agg.n_completed, 4, "all jobs still terminate");
+        assert_eq!(engine.cluster_state().idle_gpus(), engine.cluster_state().total_gpus());
+    }
+
+    #[test]
+    fn straggler_slowdown_scales_modeled_runtime_and_clears_at_one() {
+        let est = |factors: &[(usize, f64)]| -> f64 {
+            let spec = real_testbed();
+            let mut has = Has::new(Marp::with_defaults(spec.clone()));
+            let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+            let mut clock = VirtualClock::new();
+            for &(node, factor) in factors {
+                engine.handle(ClusterEvent::Slowdown { node, factor }, &mut clock);
+            }
+            engine.handle(
+                ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 10_000_000, 0.0)),
+                &mut clock,
+            );
+            let fx = engine.run_round(&mut clock);
+            assert_eq!(fx.placed.len(), 1);
+            fx.placed[0].est_runtime_s
+        };
+        let base = est(&[]);
+        let all_slow: Vec<(usize, f64)> = (0..5).map(|n| (n, 0.25)).collect();
+        let slowed = est(&all_slow);
+        assert!(
+            (slowed / base - 4.0).abs() < 1e-6,
+            "quarter throughput → 4× runtime (got {slowed} vs {base})"
+        );
+        // factor = 1 ends the slowdown.
+        let cleared: Vec<(usize, f64)> =
+            all_slow.iter().copied().chain((0..5).map(|n| (n, 1.0))).collect();
+        let back = est(&cleared);
+        assert!((back / base - 1.0).abs() < 1e-9, "slowdown cleared");
+    }
+
+    #[test]
+    fn ckpt_fail_window_drops_drain_floor_to_last_written_checkpoint() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let cfg = EngineConfig {
+            drain_grace_s: 60.0,
+            ckpt_every_steps: 1,
+            ckpt_write_s: 1.0,
+            ..EngineConfig::default()
+        };
+        let mut engine = SchedulingEngine::new(&spec, &mut has, cfg);
+        let mut clock = VirtualClock::new();
+        engine.handle(
+            ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 100_000_000, 0.0)),
+            &mut clock,
+        );
+        engine.run_round(&mut clock);
+        let node = engine.decision_log()[0].1[0].0;
+        // Checkpoint writes on the node fail for the whole run, then the
+        // node drains: with no prior checkpoint the drain saves nothing.
+        engine.handle(ClusterEvent::CkptFail { node, until_s: 1e12 }, &mut clock);
+        clock.schedule(500.0, ClusterEvent::NodeLeave(node));
+        let mut guard = 0;
+        let mut drained_floor = None;
+        while let Some((_, ev)) = clock.pop() {
+            engine.handle(ev, &mut clock);
+            if drained_floor.is_none() {
+                if let Some(r) = engine
+                    .event_log()
+                    .iter()
+                    .find(|r| matches!(r.kind, EventKind::Drained { job: 1, .. }))
+                {
+                    if let EventKind::Drained { steps_ckpt, .. } = r.kind {
+                        drained_floor = Some(steps_ckpt);
+                        assert!(engine.checkpoint_of(1).is_none(), "nothing durable was written");
+                    }
+                }
+            }
+            engine.run_round(&mut clock);
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert_eq!(drained_floor, Some(0), "floor fell back to the last written ckpt (none)");
+        assert_eq!(engine.aggregates().n_completed, 1, "job restarts from 0 and finishes");
+        assert!(engine.aggregates().steps_lost > 0);
+    }
+
+    #[test]
+    fn crash_state_snapshot_roundtrip_and_rearm() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let cfg = EngineConfig {
+            quarantine_crashes: 1,
+            probation_s: 300.0,
+            crash_backoff_base_s: 10.0,
+            ..EngineConfig::default()
+        };
+        let mut engine = SchedulingEngine::new(&spec, &mut has, cfg.clone());
+        let mut clock = VirtualClock::new();
+        engine.handle(ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 500_000, 0.0)), &mut clock);
+        engine.run_round(&mut clock);
+        let node = engine.decision_log()[0].1[0].0;
+        engine.handle(ClusterEvent::Slowdown { node: 4, factor: 0.5 }, &mut clock);
+        engine.handle(ClusterEvent::CkptFail { node: 3, until_s: 777.0 }, &mut clock);
+        let fx = engine.handle(ClusterEvent::NodeCrash(node), &mut clock);
+        assert_eq!(fx.preempted, vec![1]);
+        assert!(engine.is_held(1));
+        assert_eq!(engine.quarantined_nodes(), vec![node], "single-crash quarantine");
+
+        let snap = engine.snapshot_json();
+        let mut has2 = Has::new(Marp::with_defaults(spec.clone()));
+        let mut restored = SchedulingEngine::new(&spec, &mut has2, cfg);
+        restored.restore_from_json(&snap).expect("restore");
+        assert_eq!(
+            restored.snapshot_json().to_string_compact(),
+            snap.to_string_compact(),
+            "failure-domain state survives snapshot → restore byte-for-byte"
+        );
+        assert!(restored.is_held(1));
+        assert_eq!(restored.quarantined_nodes(), vec![node]);
+        // Recovery re-arms both the backoff release and the probation end.
+        let evs = restored.rearm_events();
+        assert!(evs
+            .iter()
+            .any(|(_, e)| matches!(e, ClusterEvent::Requeue { job: 1 })));
+        assert!(evs
+            .iter()
+            .any(|(t, e)| matches!(e, ClusterEvent::Probation { node: n } if *n == node)
+                && (*t - 300.0).abs() < 1e-6));
+        let fx = restored.rearm_effects(0.0);
+        assert_eq!(fx.requeue_after.len(), 1);
+        assert_eq!(fx.probation_after.len(), 1);
+    }
+
     // ---- durability ----------------------------------------------------
 
     /// Snapshot with the one nondeterministic field (measured scheduler
@@ -1989,6 +2671,11 @@ mod tests {
             ClusterEvent::NodeLeave(3),
             ClusterEvent::Drained { job: 7, epoch: 2 },
             ClusterEvent::Cancel { job: 9 },
+            ClusterEvent::NodeCrash(4),
+            ClusterEvent::Requeue { job: 11 },
+            ClusterEvent::Probation { node: 4 },
+            ClusterEvent::Slowdown { node: 2, factor: 0.25 },
+            ClusterEvent::CkptFail { node: 1, until_s: 99.5 },
         ];
         for ev in evs {
             let back = ClusterEvent::from_json(&ev.to_json()).expect("roundtrip");

@@ -1,0 +1,279 @@
+//! Deterministic fault injection — the chaos harness.
+//!
+//! A [`FaultPlan`] is a time-ordered list of failure
+//! [`ClusterEvent`]s compiled from either an explicit spec string or a
+//! seed. Injection goes through the **normal event path** — the plan's
+//! events are scheduled on the virtual clock in simulation
+//! (`frenzy replay --faults <spec>`) or fed to the coordinator's mailbox
+//! on the live path (`frenzy serve --faults <spec>`), so every injected
+//! failure is journaled by the WAL, replayed by recovery, and visible in
+//! the event log exactly like an organic one. Any trace becomes a chaos
+//! experiment.
+//!
+//! # Spec grammar
+//!
+//! Either `seed:<u64>` (a pseudo-random plan over the cluster and
+//! horizon, reproducible from the seed alone) or a comma-separated list
+//! of explicit clauses:
+//!
+//! | clause | meaning |
+//! |---|---|
+//! | `crash:<node>@<t>` | abrupt node crash at `t` seconds |
+//! | `blackout:<node>@<t>+<dur>` | heartbeats go dark at `t`; the node is declared dead when the `dur`-second silence ends (one `NodeCrash` at `t+dur`) |
+//! | `straggler:<node>@<t>x<factor>+<dur>` | placements touching `node` run at `factor`× modeled throughput from `t` to `t+dur` |
+//! | `ckptfail:<node>@<t>+<dur>` | checkpoint writes on `node` fail in `[t, t+dur)`; drains and crashes inside the window fall back to the last checkpoint actually written |
+//!
+//! Example: `crash:2@300,straggler:0@100x0.5+200,ckptfail:1@50+400`.
+//!
+//! Times are in seconds of sim/run time; factors are in `(0, 1)`. The
+//! compiled plan is sorted by injection time with the spec's clause order
+//! as a stable tie-break, so a plan is a pure function of its spec.
+
+use crate::cluster::NodeId;
+use crate::engine::ClusterEvent;
+use crate::util::prng::Xoshiro256pp;
+
+/// A compiled, time-ordered fault schedule. See the module docs for the
+/// spec grammar and injection semantics.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    spec: String,
+    events: Vec<(f64, ClusterEvent)>,
+}
+
+impl FaultPlan {
+    /// Compile `spec` against a cluster of `n_nodes` nodes and a run
+    /// horizon of `horizon_s` seconds (used to spread the seeded plan;
+    /// explicit clauses may name any time). Errors name the offending
+    /// clause.
+    pub fn parse(spec: &str, n_nodes: usize, horizon_s: f64) -> Result<FaultPlan, String> {
+        if n_nodes == 0 {
+            return Err("fault plan needs a non-empty cluster".into());
+        }
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err("empty fault spec".into());
+        }
+        let events = if let Some(seed) = spec.strip_prefix("seed:") {
+            let seed: u64 =
+                seed.parse().map_err(|_| format!("bad seed '{seed}' (want a u64)"))?;
+            seeded_plan(seed, n_nodes, horizon_s)
+        } else {
+            let mut ev = Vec::new();
+            for clause in spec.split(',') {
+                parse_clause(clause.trim(), n_nodes, &mut ev)?;
+            }
+            ev
+        };
+        let mut events = events;
+        // Stable: equal-time clauses keep their spec order.
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite fault times"));
+        Ok(FaultPlan { spec: spec.to_string(), events })
+    }
+
+    /// The spec string this plan was compiled from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// The compiled `(inject_at_s, event)` schedule, time-ordered.
+    pub fn events(&self) -> &[(f64, ClusterEvent)] {
+        &self.events
+    }
+
+    /// Consume the plan, yielding the time-ordered schedule.
+    pub fn into_events(self) -> Vec<(f64, ClusterEvent)> {
+        self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+fn parse_clause(
+    clause: &str,
+    n_nodes: usize,
+    out: &mut Vec<(f64, ClusterEvent)>,
+) -> Result<(), String> {
+    let (kind, rest) = clause
+        .split_once(':')
+        .ok_or_else(|| format!("bad clause '{clause}' (want kind:node@time...)"))?;
+    let (node, timing) = rest
+        .split_once('@')
+        .ok_or_else(|| format!("bad clause '{clause}' (missing '@time')"))?;
+    let node: NodeId =
+        node.parse().map_err(|_| format!("bad node '{node}' in '{clause}'"))?;
+    if node >= n_nodes {
+        return Err(format!("node {node} out of range (cluster has {n_nodes} nodes)"));
+    }
+    match kind {
+        "crash" => {
+            let t = parse_time(timing, clause)?;
+            out.push((t, ClusterEvent::NodeCrash(node)));
+        }
+        "blackout" => {
+            let (t, dur) = parse_time_dur(timing, clause)?;
+            // The node goes dark at `t`; the failure detector can only
+            // declare it dead once the silence has outlived the lease —
+            // modeled as one crash when the blackout ends.
+            out.push((t + dur, ClusterEvent::NodeCrash(node)));
+        }
+        "straggler" => {
+            let (head, dur) = timing
+                .split_once('+')
+                .ok_or_else(|| format!("bad straggler '{clause}' (want @t x f +dur)"))?;
+            let (t, factor) = head
+                .split_once('x')
+                .ok_or_else(|| format!("bad straggler '{clause}' (missing 'x<factor>')"))?;
+            let t = parse_time(t, clause)?;
+            let dur = parse_time(dur, clause)?;
+            let factor: f64 =
+                factor.parse().map_err(|_| format!("bad factor in '{clause}'"))?;
+            if !(factor > 0.0 && factor < 1.0) {
+                return Err(format!("factor must be in (0, 1) in '{clause}'"));
+            }
+            out.push((t, ClusterEvent::Slowdown { node, factor }));
+            out.push((t + dur, ClusterEvent::Slowdown { node, factor: 1.0 }));
+        }
+        "ckptfail" => {
+            let (t, dur) = parse_time_dur(timing, clause)?;
+            out.push((t, ClusterEvent::CkptFail { node, until_s: t + dur }));
+        }
+        other => return Err(format!("unknown fault kind '{other}' in '{clause}'")),
+    }
+    Ok(())
+}
+
+fn parse_time(s: &str, clause: &str) -> Result<f64, String> {
+    let t: f64 = s.trim().parse().map_err(|_| format!("bad time '{s}' in '{clause}'"))?;
+    if !t.is_finite() || t < 0.0 {
+        return Err(format!("time must be finite and >= 0 in '{clause}'"));
+    }
+    Ok(t)
+}
+
+fn parse_time_dur(timing: &str, clause: &str) -> Result<(f64, f64), String> {
+    let (t, dur) = timing
+        .split_once('+')
+        .ok_or_else(|| format!("bad clause '{clause}' (want @<t>+<dur>)"))?;
+    let t = parse_time(t, clause)?;
+    let dur = parse_time(dur, clause)?;
+    if dur <= 0.0 {
+        return Err(format!("duration must be > 0 in '{clause}'"));
+    }
+    Ok((t, dur))
+}
+
+/// Pseudo-random chaos over the run: a handful of crashes (including one
+/// detected via a heartbeat blackout), one or two straggler windows, and
+/// a checkpoint-failure window, all inside the horizon. Purely a
+/// function of `(seed, n_nodes, horizon_s)`.
+fn seeded_plan(seed: u64, n_nodes: usize, horizon_s: f64) -> Vec<(f64, ClusterEvent)> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let span = if horizon_s.is_finite() && horizon_s > 0.0 { horizon_s } else { 3600.0 };
+    let mut ev = Vec::new();
+    let node = |rng: &mut Xoshiro256pp| rng.next_below(n_nodes as u64) as NodeId;
+    let crashes = 2 + rng.next_below(3); // 2..=4 direct crashes
+    for _ in 0..crashes {
+        let n = node(&mut rng);
+        ev.push((rng.uniform(0.05, 0.85) * span, ClusterEvent::NodeCrash(n)));
+    }
+    // One blackout-detected crash: dark for 2% of the span before the
+    // detector fires.
+    let n = node(&mut rng);
+    let dark_at = rng.uniform(0.10, 0.80) * span;
+    ev.push((dark_at + 0.02 * span, ClusterEvent::NodeCrash(n)));
+    for _ in 0..(1 + rng.next_below(2)) {
+        let n = node(&mut rng);
+        let t = rng.uniform(0.05, 0.70) * span;
+        let factor = rng.uniform(0.2, 0.8);
+        let dur = rng.uniform(0.05, 0.20) * span;
+        ev.push((t, ClusterEvent::Slowdown { node: n, factor }));
+        ev.push((t + dur, ClusterEvent::Slowdown { node: n, factor: 1.0 }));
+    }
+    let n = node(&mut rng);
+    let t = rng.uniform(0.10, 0.70) * span;
+    let dur = rng.uniform(0.05, 0.15) * span;
+    ev.push((t, ClusterEvent::CkptFail { node: n, until_s: t + dur }));
+    ev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_spec_compiles_in_time_order() {
+        let plan = FaultPlan::parse(
+            "crash:2@300, straggler:0@100x0.5+200, ckptfail:1@50+400, blackout:3@10+40",
+            5,
+            1000.0,
+        )
+        .unwrap();
+        let times: Vec<f64> = plan.events().iter().map(|&(t, _)| t).collect();
+        let mut sorted = times.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(times, sorted, "plan is time-ordered");
+        assert_eq!(plan.len(), 5, "straggler contributes onset + clear");
+        // The blackout compiles to a crash at dark-time + duration.
+        assert!(plan
+            .events()
+            .iter()
+            .any(|(t, e)| *t == 50.0 && matches!(e, ClusterEvent::NodeCrash(3))));
+        // The straggler clears back to factor 1 at t + dur.
+        assert!(plan.events().iter().any(|(t, e)| *t == 300.0
+            && matches!(e, ClusterEvent::Slowdown { node: 0, factor } if *factor == 1.0)));
+        // ckptfail carries its window end.
+        assert!(plan.events().iter().any(|(t, e)| *t == 50.0
+            && matches!(e, ClusterEvent::CkptFail { node: 1, until_s } if *until_s == 450.0)));
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_bounded() {
+        let a = FaultPlan::parse("seed:42", 5, 1000.0).unwrap();
+        let b = FaultPlan::parse("seed:42", 5, 1000.0).unwrap();
+        let c = FaultPlan::parse("seed:43", 5, 1000.0).unwrap();
+        let dump = |p: &FaultPlan| format!("{:?}", p.events());
+        assert_eq!(dump(&a), dump(&b), "same seed, same plan");
+        assert_ne!(dump(&a), dump(&c), "different seed, different plan");
+        assert!(!a.is_empty());
+        assert!(a.events().iter().all(|&(t, _)| t >= 0.0 && t <= 1020.0));
+        assert!(a
+            .events()
+            .iter()
+            .any(|(_, e)| matches!(e, ClusterEvent::NodeCrash(_))));
+        // Node ids always fit the cluster given at parse time.
+        for (_, e) in a.events() {
+            let n = match *e {
+                ClusterEvent::NodeCrash(n) => n,
+                ClusterEvent::Slowdown { node, .. } => node,
+                ClusterEvent::CkptFail { node, .. } => node,
+                _ => 0,
+            };
+            assert!(n < 5);
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        for (spec, needle) in [
+            ("", "empty"),
+            ("crash:9@10", "out of range"),
+            ("crash:0", "missing '@time'"),
+            ("crash:0@-5", ">= 0"),
+            ("explode:0@5", "unknown fault kind"),
+            ("straggler:0@5x1.5+10", "factor must be in (0, 1)"),
+            ("blackout:0@5+0", "duration must be > 0"),
+            ("seed:banana", "bad seed"),
+        ] {
+            let err = FaultPlan::parse(spec, 5, 100.0).unwrap_err();
+            assert!(err.contains(needle), "spec '{spec}': error '{err}'");
+        }
+        assert!(FaultPlan::parse("crash:0@1", 0, 100.0).is_err(), "empty cluster");
+    }
+}

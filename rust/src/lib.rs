@@ -38,6 +38,10 @@
 //!   --data-dir`),
 //! * [`sim`] — discrete-event cluster simulator (the "PAI simulator"
 //!   stand-in): a thin trace feeder over [`engine`] on a virtual clock,
+//! * [`faults`] — deterministic chaos: a seeded [`faults::FaultPlan`]
+//!   (crashes, heartbeat blackouts, stragglers, checkpoint-write
+//!   failures) injected through the normal event path on either clock
+//!   (`frenzy replay --faults`, `frenzy serve --faults`),
 //! * [`workload`] — NewWorkload / Philly / Helios generators,
 //! * [`serverless`] — the v1 control plane: coordinator (round-timer
 //!   thread for interval schedulers, live OOM modeling for the baselines)
@@ -59,6 +63,7 @@ pub mod config;
 pub mod durability;
 pub mod engine;
 pub mod exp;
+pub mod faults;
 pub mod ilp;
 pub mod job;
 pub mod marp;

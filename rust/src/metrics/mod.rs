@@ -45,6 +45,18 @@ pub struct RunAggregates {
     pub n_oom_events: u64,
     /// Graceful drains completed (each checkpoints and requeues a job).
     pub n_drains: u64,
+    /// Abrupt node crashes observed (missed lease or injected fault).
+    pub n_node_crashes: u64,
+    /// Crash-displaced job requeues (each enters a backoff hold; crashes
+    /// never burn a job's attempt budget, so these are counted apart from
+    /// OOM retries).
+    pub n_crash_requeues: u64,
+    /// Nodes placed under crash-flap quarantine.
+    pub n_quarantines: u64,
+    /// Training steps paid for but discarded: work executed past the
+    /// checkpoint floor a crash or preemption fell back to. Always ≤
+    /// `steps_executed`; `goodput()` is derived from the pair.
+    pub steps_lost: u64,
     jct: Running,
     queue: Running,
     sps: Running,
@@ -75,6 +87,10 @@ impl RunAggregates {
             n_cancelled: 0,
             n_oom_events: 0,
             n_drains: 0,
+            n_node_crashes: 0,
+            n_crash_requeues: 0,
+            n_quarantines: 0,
+            steps_lost: 0,
             jct: Running::new(),
             queue: Running::new(),
             sps: Running::new(),
@@ -138,6 +154,38 @@ impl RunAggregates {
     /// Steps a completed run executed (remaining work after any resume).
     pub fn record_run_steps(&mut self, steps: u64) {
         self.steps_executed += steps;
+    }
+
+    /// Fold one abrupt node crash (missed lease or injected fault).
+    pub fn record_node_crash(&mut self) {
+        self.n_node_crashes += 1;
+    }
+
+    /// Fold one crash-displaced job entering its backoff hold.
+    pub fn record_crash_requeue(&mut self) {
+        self.n_crash_requeues += 1;
+    }
+
+    /// Fold one node entering crash-flap quarantine.
+    pub fn record_quarantine(&mut self) {
+        self.n_quarantines += 1;
+    }
+
+    /// Fold steps paid for but discarded — work executed past the
+    /// checkpoint floor a crash or preemption fell back to.
+    pub fn record_steps_lost(&mut self, steps: u64) {
+        self.steps_lost += steps;
+    }
+
+    /// Goodput: useful steps ÷ total steps paid, in [0, 1]. Defined as 1
+    /// when nothing executed (no work paid for means none was wasted).
+    pub fn goodput(&self) -> f64 {
+        if self.steps_executed == 0 {
+            1.0
+        } else {
+            self.steps_executed.saturating_sub(self.steps_lost) as f64
+                / self.steps_executed as f64
+        }
     }
 
     /// Fold one dispatch's predicted-vs-observed peak-memory pair into the
@@ -253,6 +301,10 @@ impl RunAggregates {
             .set("n_cancelled", self.n_cancelled)
             .set("n_oom_events", self.n_oom_events)
             .set("n_drains", self.n_drains)
+            .set("n_node_crashes", self.n_node_crashes)
+            .set("n_crash_requeues", self.n_crash_requeues)
+            .set("n_quarantines", self.n_quarantines)
+            .set("steps_lost", self.steps_lost)
             .set("jct", running_to_json(&self.jct))
             .set("queue", running_to_json(&self.queue))
             .set("sps", running_to_json(&self.sps))
@@ -272,6 +324,12 @@ impl RunAggregates {
         agg.n_cancelled = req_usize(j, "n_cancelled")?;
         agg.n_oom_events = req_u64(j, "n_oom_events")?;
         agg.n_drains = req_u64(j, "n_drains")?;
+        // Failure-domain counters are optional for forward compatibility:
+        // snapshots written before they existed restore with zeros.
+        agg.n_node_crashes = opt_u64(j, "n_node_crashes")?;
+        agg.n_crash_requeues = opt_u64(j, "n_crash_requeues")?;
+        agg.n_quarantines = opt_u64(j, "n_quarantines")?;
+        agg.steps_lost = opt_u64(j, "steps_lost")?;
         agg.jct = running_from_json(j.get("jct").ok_or("missing field 'jct'")?)?;
         agg.queue = running_from_json(j.get("queue").ok_or("missing field 'queue'")?)?;
         agg.sps = running_from_json(j.get("sps").ok_or("missing field 'sps'")?)?;
@@ -305,6 +363,14 @@ fn req_u64(j: &Json, k: &str) -> Result<u64, String> {
 
 fn req_usize(j: &Json, k: &str) -> Result<usize, String> {
     j.get(k).and_then(Json::as_usize).ok_or_else(|| format!("missing field '{k}'"))
+}
+
+/// Absent → 0 (pre-failure-domain snapshots); present-but-malformed → error.
+fn opt_u64(j: &Json, k: &str) -> Result<u64, String> {
+    match j.get(k) {
+        None => Ok(0),
+        Some(v) => v.as_u64().ok_or_else(|| format!("bad field '{k}'")),
+    }
 }
 
 /// [`Running`] state as JSON. Empty accumulators hold non-finite min/max
@@ -368,6 +434,16 @@ pub struct RunReport {
     /// drain discarded past the last checkpoint. Compare with the nominal
     /// step total to read elasticity's re-execution cost.
     pub total_steps_executed: u64,
+    /// Steps paid for but discarded (crash/preemption fell back past them).
+    pub total_steps_lost: u64,
+    /// Useful steps ÷ total steps paid, in [0, 1]; 1 when nothing ran.
+    pub goodput: f64,
+    /// Abrupt node crashes observed (missed lease or injected fault).
+    pub n_node_crashes: u64,
+    /// Crash-displaced job requeues (backoff holds; no attempt burned).
+    pub n_crash_requeues: u64,
+    /// Nodes placed under crash-flap quarantine.
+    pub n_quarantines: u64,
     /// Peak-memory prediction accuracy (the paper's §V.C `1 − |p − m|/m`,
     /// >92% expected): dispatches sampled.
     pub mem_pred_samples: u64,
@@ -435,6 +511,11 @@ impl RunReport {
             n_oom_events: agg.n_oom_events,
             n_drains: agg.n_drains,
             total_steps_executed: agg.total_steps_executed(),
+            total_steps_lost: agg.steps_lost,
+            goodput: agg.goodput(),
+            n_node_crashes: agg.n_node_crashes,
+            n_crash_requeues: agg.n_crash_requeues,
+            n_quarantines: agg.n_quarantines,
             mem_pred_samples: agg.mem_pred_samples(),
             mem_pred_accuracy_avg: if agg.mem_pred_samples() == 0 {
                 0.0
@@ -500,6 +581,11 @@ impl RunReport {
             .set("n_oom_events", self.n_oom_events)
             .set("n_drains", self.n_drains)
             .set("total_steps_executed", self.total_steps_executed)
+            .set("total_steps_lost", self.total_steps_lost)
+            .set("goodput", self.goodput)
+            .set("n_node_crashes", self.n_node_crashes)
+            .set("n_crash_requeues", self.n_crash_requeues)
+            .set("n_quarantines", self.n_quarantines)
             .set("mem_pred_samples", self.mem_pred_samples)
             .set("mem_pred_accuracy_avg", self.mem_pred_accuracy_avg)
             .set("mem_pred_accuracy_min", self.mem_pred_accuracy_min)
@@ -696,6 +782,10 @@ mod tests {
         agg.record_oom_event();
         agg.record_drained(70);
         agg.record_run_steps(40);
+        agg.record_node_crash();
+        agg.record_crash_requeue();
+        agg.record_quarantine();
+        agg.record_steps_lost(17);
         agg.record_mem_prediction(95, 100);
         let j = agg.to_json();
         let text = j.to_string_compact();
@@ -713,6 +803,43 @@ mod tests {
 
     fn parse_back(j: &Json) -> Json {
         crate::util::json::parse(&j.to_string_compact()).unwrap()
+    }
+
+    #[test]
+    fn crash_counters_and_goodput() {
+        let mut agg = RunAggregates::new();
+        assert_eq!(agg.goodput(), 1.0, "no work paid for means none wasted");
+        // 80 steps executed, 20 discarded by a crash that fell back to the
+        // last checkpoint: goodput 0.75.
+        agg.record_run_steps(80);
+        agg.record_steps_lost(20);
+        agg.record_node_crash();
+        agg.record_crash_requeue();
+        agg.record_quarantine();
+        agg.record_completed(0.0, 1.0, 10.0, 5.0, 1);
+        assert!((agg.goodput() - 0.75).abs() < 1e-12);
+        let r = RunReport::from_aggregates("s", "w", &agg, 0, 0, 0.0, 0.0);
+        assert_eq!(r.n_node_crashes, 1);
+        assert_eq!(r.n_crash_requeues, 1);
+        assert_eq!(r.n_quarantines, 1);
+        assert_eq!(r.total_steps_lost, 20);
+        assert!((r.goodput - 0.75).abs() < 1e-12);
+        let j = r.to_json();
+        assert!(j.get("goodput").is_some());
+        assert!(j.get("n_node_crashes").is_some());
+        assert!(j.get("total_steps_lost").is_some());
+        // Pre-failure-domain snapshots (no crash counters) restore to zero.
+        let text = RunAggregates::new()
+            .to_json()
+            .to_string_compact()
+            .replace("\"n_node_crashes\":0,", "")
+            .replace("\"n_crash_requeues\":0,", "")
+            .replace("\"n_quarantines\":0,", "")
+            .replace("\"steps_lost\":0,", "");
+        let back = RunAggregates::from_json(&crate::util::json::parse(&text).unwrap())
+            .expect("legacy snapshot restores");
+        assert_eq!(back.n_node_crashes, 0);
+        assert_eq!(back.steps_lost, 0);
     }
 
     #[test]

@@ -922,6 +922,52 @@ impl ClusterInfoV1 {
     }
 }
 
+/// `POST /v1/cluster/heartbeat` request body — `{"node":3}`. Nodes beat
+/// to keep their liveness lease; a node that beats once and then misses
+/// a full lease window is declared crashed (a `node_crash` event, abrupt
+/// preemption with no drain grace).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeartbeatRequestV1 {
+    pub node: usize,
+}
+
+impl HeartbeatRequestV1 {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("node", self.node);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self { node: j.get("node").and_then(Json::as_usize).ok_or("missing field 'node'")? })
+    }
+}
+
+/// `POST /v1/cluster/heartbeat` response — `{"node":3,"lease_ms":5000}`.
+/// `lease_ms` is the window the node must beat within; 0 means lease
+/// tracking is disabled server-side (beats are accepted but never
+/// expire).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeartbeatResponseV1 {
+    pub node: usize,
+    pub lease_ms: u64,
+}
+
+impl HeartbeatResponseV1 {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("node", self.node).set("lease_ms", self.lease_ms);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            node: j.get("node").and_then(Json::as_usize).ok_or("missing field 'node'")?,
+            lease_ms: j.get("lease_ms").and_then(Json::as_u64).ok_or("missing field 'lease_ms'")?,
+        })
+    }
+}
+
 /// `GET /v1/durability` — WAL position, size, and snapshot freshness.
 /// `snapshot_seq` / `snapshot_age_s` are omitted on the wire until the
 /// first snapshot exists; everything is zero when the server runs without
@@ -1004,6 +1050,13 @@ impl DurabilityV1 {
 /// * `cancelled` — `{"job":7,"was_running":true}`
 /// * `node_joined` — `{"node":5,"gpu":"A100-80G","gpus":4}`
 /// * `node_left` — `{"node":5,"preempted":[7,9]}`
+/// * `node_crash` — `{"node":5,"preempted":[7,9]}` (abrupt: no drain
+///   grace; the jobs restart from their last checkpoint after backoff)
+/// * `node_quarantined` — `{"node":5,"until_s":412.0}` (flapping node
+///   excluded from placement until probation ends)
+/// * `node_probation` — `{"node":5}` (probation over, placeable again)
+/// * `node_slowdown` — `{"node":5,"factor":0.5}` (straggler: placements
+///   touching the node run at `factor`× throughput; `factor: 1` clears)
 #[derive(Debug, Clone, PartialEq)]
 pub struct EventV1 {
     /// Monotonic sequence number (never reused, even across ring
@@ -1114,6 +1167,21 @@ impl EventV1 {
             }
             EventKind::NodeRetired { node } => {
                 j.set("type", "node_retired").set("node", *node);
+            }
+            EventKind::NodeCrashed { node, preempted } => {
+                j.set("type", "node_crash").set("node", *node).set(
+                    "preempted",
+                    Json::Arr(preempted.iter().map(|&id| Json::from(id)).collect()),
+                );
+            }
+            EventKind::NodeQuarantined { node, until_s } => {
+                j.set("type", "node_quarantined").set("node", *node).set("until_s", *until_s);
+            }
+            EventKind::NodeProbation { node } => {
+                j.set("type", "node_probation").set("node", *node);
+            }
+            EventKind::NodeSlowdown { node, factor } => {
+                j.set("type", "node_slowdown").set("node", *node).set("factor", *factor);
             }
         }
         j
@@ -1231,6 +1299,22 @@ impl EventV1 {
                 EventKind::NodeLeft { node: node()?, preempted }
             }
             "node_retired" => EventKind::NodeRetired { node: node()? },
+            "node_crash" => {
+                let mut preempted = Vec::new();
+                for id in j.get("preempted").and_then(Json::as_arr).unwrap_or(&[]) {
+                    preempted.push(id.as_u64().ok_or("'preempted' items must be integers")?);
+                }
+                EventKind::NodeCrashed { node: node()?, preempted }
+            }
+            "node_quarantined" => EventKind::NodeQuarantined {
+                node: node()?,
+                until_s: j.get("until_s").and_then(Json::as_f64).ok_or("missing field 'until_s'")?,
+            },
+            "node_probation" => EventKind::NodeProbation { node: node()? },
+            "node_slowdown" => EventKind::NodeSlowdown {
+                node: node()?,
+                factor: j.get("factor").and_then(Json::as_f64).ok_or("missing field 'factor'")?,
+            },
             other => return Err(format!("unknown event type '{other}'")),
         };
         Ok(Self { seq, time, kind })
@@ -1412,6 +1496,20 @@ pub struct ReportV1 {
     /// Training steps actually executed, including drained work past the
     /// last checkpoint.
     pub total_steps_executed: u64,
+    /// Steps paid for but discarded — work between a failure and the
+    /// checkpoint the job restarted from.
+    pub total_steps_lost: u64,
+    /// Useful fraction of executed steps:
+    /// `(executed − lost) / executed`, 1.0 when nothing ran.
+    pub goodput: f64,
+    /// Abrupt node crashes (lease expiry or injected), distinct from
+    /// graceful leaves.
+    pub n_node_crashes: u64,
+    /// Jobs displaced by a crash and requeued with backoff (no attempt
+    /// burned).
+    pub n_crash_requeues: u64,
+    /// Nodes quarantined by the flap detector.
+    pub n_quarantines: u64,
     /// Peak-memory prediction-accuracy dispatches sampled.
     pub mem_pred_samples: u64,
     /// Mean `1 − |predicted − observed|/observed` over sampled dispatches
@@ -1460,6 +1558,11 @@ impl ReportV1 {
             n_oom_events: r.n_oom_events,
             n_drains: r.n_drains,
             total_steps_executed: r.total_steps_executed,
+            total_steps_lost: r.total_steps_lost,
+            goodput: finite(r.goodput),
+            n_node_crashes: r.n_node_crashes,
+            n_crash_requeues: r.n_crash_requeues,
+            n_quarantines: r.n_quarantines,
             mem_pred_samples: r.mem_pred_samples,
             mem_pred_accuracy_avg: finite(r.mem_pred_accuracy_avg),
             mem_pred_accuracy_min: finite(r.mem_pred_accuracy_min),
@@ -1496,6 +1599,11 @@ impl ReportV1 {
             n_oom_events: self.n_oom_events,
             n_drains: self.n_drains,
             total_steps_executed: self.total_steps_executed,
+            total_steps_lost: self.total_steps_lost,
+            goodput: self.goodput,
+            n_node_crashes: self.n_node_crashes,
+            n_crash_requeues: self.n_crash_requeues,
+            n_quarantines: self.n_quarantines,
             mem_pred_samples: self.mem_pred_samples,
             mem_pred_accuracy_avg: self.mem_pred_accuracy_avg,
             mem_pred_accuracy_min: self.mem_pred_accuracy_min,
@@ -1544,6 +1652,11 @@ impl ReportV1 {
             n_oom_events: int("n_oom_events"),
             n_drains: int("n_drains"),
             total_steps_executed: int("total_steps_executed"),
+            total_steps_lost: int("total_steps_lost"),
+            goodput: num("goodput"),
+            n_node_crashes: int("n_node_crashes"),
+            n_crash_requeues: int("n_crash_requeues"),
+            n_quarantines: int("n_quarantines"),
             mem_pred_samples: int("mem_pred_samples"),
             mem_pred_accuracy_avg: num("mem_pred_accuracy_avg"),
             mem_pred_accuracy_min: num("mem_pred_accuracy_min"),
@@ -1756,7 +1869,7 @@ mod tests {
     }
 
     fn gen_event_kind(g: &mut Gen) -> EventKind {
-        match g.usize_in(0, 13) {
+        match g.usize_in(0, 17) {
             0 => EventKind::Arrival { job: g.u64_in(0, MAX_EXACT) },
             1 => EventKind::Placed {
                 job: g.u64_in(0, MAX_EXACT),
@@ -1819,6 +1932,19 @@ mod tests {
                 steps_ckpt: g.u64_in(0, MAX_EXACT),
             },
             12 => EventKind::NodeRetired { node: g.usize_in(0, 999) },
+            13 => EventKind::NodeCrashed {
+                node: g.usize_in(0, 999),
+                preempted: (0..g.usize_in(0, 4)).map(|i| i as u64).collect(),
+            },
+            14 => EventKind::NodeQuarantined {
+                node: g.usize_in(0, 999),
+                until_s: g.f64_in(0.0, 1e6),
+            },
+            15 => EventKind::NodeProbation { node: g.usize_in(0, 999) },
+            16 => EventKind::NodeSlowdown {
+                node: g.usize_in(0, 999),
+                factor: g.f64_in(0.05, 1.0),
+            },
             _ => EventKind::NodeLeft {
                 node: g.usize_in(0, 999),
                 preempted: (0..g.usize_in(0, 4)).map(|i| i as u64).collect(),
@@ -1919,6 +2045,11 @@ mod tests {
                 n_oom_events: g.u64_in(0, 100),
                 n_drains: g.u64_in(0, 100),
                 total_steps_executed: g.u64_in(0, MAX_EXACT),
+                total_steps_lost: g.u64_in(0, MAX_EXACT),
+                goodput: g.f64_in(0.0, 1.0),
+                n_node_crashes: g.u64_in(0, 100),
+                n_crash_requeues: g.u64_in(0, 100),
+                n_quarantines: g.u64_in(0, 100),
                 mem_pred_samples: g.u64_in(0, 10_000),
                 mem_pred_accuracy_avg: g.f64_in(0.0, 1.0),
                 mem_pred_accuracy_min: g.f64_in(0.0, 1.0),
@@ -1941,6 +2072,21 @@ mod tests {
         assert_eq!(v.avg_jct_s, 0.0, "wire form must be valid JSON");
         // And the wire form parses back.
         roundtrip(&v, ReportV1::to_json, ReportV1::from_json);
+    }
+
+    #[test]
+    fn heartbeat_dtos_roundtrip() {
+        roundtrip(
+            &HeartbeatRequestV1 { node: 3 },
+            HeartbeatRequestV1::to_json,
+            HeartbeatRequestV1::from_json,
+        );
+        roundtrip(
+            &HeartbeatResponseV1 { node: 3, lease_ms: 5000 },
+            HeartbeatResponseV1::to_json,
+            HeartbeatResponseV1::from_json,
+        );
+        assert!(HeartbeatRequestV1::from_json(&json::parse(r#"{"noed":1}"#).unwrap()).is_err());
     }
 
     #[test]

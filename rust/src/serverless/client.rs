@@ -17,9 +17,10 @@
 
 use super::api::{
     ApiError, CancelResponseV1, ClusterInfoV1, DurabilityV1, EventV1, EventsRequestV1,
-    EventsResponseV1, JobStatusV1, ListRequestV1, ListResponseV1, PredictRequestV1,
-    PredictResponseV1, ReportV1, ScaleRequestV1, ScaleResponseV1, SubmitBatchRequestV1,
-    SubmitBatchResponseV1, SubmitRequestV1, SubmitResponseV1,
+    EventsResponseV1, HeartbeatRequestV1, HeartbeatResponseV1, JobStatusV1, ListRequestV1,
+    ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1, ScaleRequestV1,
+    ScaleResponseV1, SubmitBatchRequestV1, SubmitBatchResponseV1, SubmitRequestV1,
+    SubmitResponseV1,
 };
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Context, Result};
@@ -94,7 +95,7 @@ impl FrenzyClient {
         path: &str,
         body: &str,
         idempotent: bool,
-    ) -> Result<(u16, String)> {
+    ) -> Result<(u16, Option<u64>, String)> {
         // Retire connections the server has likely idled out already.
         if self.conn.as_ref().is_some_and(|c| c.last_used.elapsed() > self.max_conn_idle) {
             self.conn = None;
@@ -133,7 +134,13 @@ impl FrenzyClient {
         }
     }
 
-    fn exchange(conn: &mut Conn, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    /// One raw exchange: `(status, Retry-After seconds if present, body)`.
+    fn exchange(
+        conn: &mut Conn,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> Result<(u16, Option<u64>, String)> {
         write!(
             conn.writer,
             "{method} {path} HTTP/1.1\r\nHost: frenzy\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
@@ -151,6 +158,7 @@ impl FrenzyClient {
             .and_then(|s| s.parse().ok())
             .ok_or_else(|| anyhow!("malformed status line '{}'", status_line.trim()))?;
         let mut content_length = 0usize;
+        let mut retry_after_s = None;
         loop {
             let mut h = String::new();
             if conn.reader.read_line(&mut h)? == 0 {
@@ -164,17 +172,26 @@ impl FrenzyClient {
                 if k.eq_ignore_ascii_case("content-length") {
                     content_length =
                         v.trim().parse().with_context(|| format!("bad content-length '{v}'"))?;
+                } else if k.eq_ignore_ascii_case("retry-after") {
+                    retry_after_s = v.trim().parse().ok();
                 }
             }
         }
         let mut buf = vec![0u8; content_length];
         conn.reader.read_exact(&mut buf)?;
-        Ok((status, String::from_utf8_lossy(&buf).to_string()))
+        Ok((status, retry_after_s, String::from_utf8_lossy(&buf).to_string()))
     }
 
     /// Issue a request and parse the body. Non-2xx statuses are mapped to
     /// the server's error envelope, except those in `passthrough`, which are
     /// returned to the caller along with their parsed body.
+    ///
+    /// A `503 Service Unavailable` on an *idempotent* request (server up
+    /// but not ready — e.g. recovery still replaying the WAL) is retried
+    /// with the same capped exponential backoff the submit path uses for
+    /// 429, honoring the server's `Retry-After` header as the floor of
+    /// every pause — unless 503 is in `passthrough` (healthz wants the
+    /// raw answer).
     fn call_with(
         &mut self,
         method: &str,
@@ -183,15 +200,30 @@ impl FrenzyClient {
         idempotent: bool,
         passthrough: &[u16],
     ) -> Result<(u16, Json)> {
-        let (status, resp) = self.request(method, path, body, idempotent)?;
-        let parsed = json::parse(&resp)
-            .map_err(|e| anyhow!("unparseable response (status {status}): {e}: {resp}"))?;
-        if (200..300).contains(&status) || passthrough.contains(&status) {
-            return Ok((status, parsed));
-        }
-        match ApiError::from_json(&parsed) {
-            Ok(e) => bail!("{}: {}", e.code, e.message),
-            Err(_) => bail!("HTTP {status}: {resp}"),
+        let mut backoff = Duration::from_millis(50);
+        let mut attempt = 0;
+        loop {
+            let (status, retry_after_s, resp) = self.request(method, path, body, idempotent)?;
+            attempt += 1;
+            if status == 503
+                && idempotent
+                && !passthrough.contains(&503)
+                && attempt < Self::MAX_SUBMIT_RETRIES
+            {
+                let hint = Duration::from_secs(retry_after_s.unwrap_or(0));
+                std::thread::sleep(backoff.max(hint).min(Self::BACKOFF_CAP));
+                backoff = (backoff * 2).min(Self::BACKOFF_CAP);
+                continue;
+            }
+            let parsed = json::parse(&resp)
+                .map_err(|e| anyhow!("unparseable response (status {status}): {e}: {resp}"))?;
+            if (200..300).contains(&status) || passthrough.contains(&status) {
+                return Ok((status, parsed));
+            }
+            match ApiError::from_json(&parsed) {
+                Ok(e) => bail!("{}: {}", e.code, e.message),
+                Err(_) => bail!("HTTP {status}: {resp}"),
+            }
         }
     }
 
@@ -201,8 +233,28 @@ impl FrenzyClient {
 
     /// `GET /v1/healthz` — true when the server answers.
     pub fn health(&mut self) -> Result<bool> {
-        let j = self.call("GET", "/v1/healthz", "", true)?;
-        Ok(j.get("ok").and_then(Json::as_bool).unwrap_or(false))
+        Ok(self.healthz()?.0)
+    }
+
+    /// `GET /v1/healthz` — `(alive, ready)`. A durable coordinator answers
+    /// `(true, false)` with a 503 while WAL recovery is still replaying;
+    /// that 503 is *not* retried here — it **is** the answer a readiness
+    /// probe wants.
+    pub fn healthz(&mut self) -> Result<(bool, bool)> {
+        let (_status, j) = self.call_with("GET", "/v1/healthz", "", true, &[503])?;
+        let ok = j.get("ok").and_then(Json::as_bool).unwrap_or(false);
+        let ready = j.get("ready").and_then(Json::as_bool).unwrap_or(false);
+        Ok((ok, ready))
+    }
+
+    /// `POST /v1/cluster/heartbeat` — renew node `node`'s lease; returns
+    /// the lease window the server expects the next beat within. A POST,
+    /// but idempotent by nature (a repeated beat just refreshes the same
+    /// lease), so it rides the transport's reconnect-and-retry path.
+    pub fn heartbeat(&mut self, node: usize) -> Result<HeartbeatResponseV1> {
+        let body = HeartbeatRequestV1 { node }.to_json().to_string_compact();
+        let j = self.call("POST", "/v1/cluster/heartbeat", &body, true)?;
+        HeartbeatResponseV1::from_json(&j).map_err(|e| anyhow!(e))
     }
 
     /// `POST /v1/jobs` — submit a model; returns the job id. A `429 Too

@@ -286,6 +286,30 @@ enum Msg {
     /// and requeues (engine `ClusterEvent::Drained`). Sent by the drain
     /// timer threads, never by clients; stale epochs are discarded.
     Drained(JobId, u64),
+    /// A crash-backoff hold expired: the engine moves the held job back
+    /// to pending (engine `ClusterEvent::Requeue`). Sent by the backoff
+    /// timer threads, never by clients; a requeue for a job no longer
+    /// held (cancelled since) is a no-op inside the engine.
+    Requeue(JobId),
+    /// A quarantined node's probation window ended (engine
+    /// `ClusterEvent::Probation`): the node rejoins placement. Sent by
+    /// the probation timer threads, never by clients.
+    Probation(usize),
+    /// Node heartbeat (`POST /v1/cluster/heartbeat`): refresh the node's
+    /// liveness lease. Replies with the lease window in ms (0 = lease
+    /// tracking disabled) or an error for unknown/retired nodes.
+    /// Quarantined nodes still heartbeat — they are alive, just barred
+    /// from placement.
+    Heartbeat(usize, mpsc::Sender<std::result::Result<u64, String>>),
+    /// Lease sweep from the lease-timer thread: nodes that heartbeated
+    /// once and then missed a full lease window are declared crashed
+    /// through the normal event path (abrupt preemption, no drain grace).
+    LeaseCheck,
+    /// Inject one fault event through the normal event path — the chaos
+    /// harness (`frenzy serve --faults` timers, or tests via
+    /// [`Handle::inject`]). The reply channel is `None` on the timer
+    /// path.
+    Inject(ClusterEvent, Option<mpsc::Sender<()>>),
     /// Long-poll event-log page: `(since_seq, limit, deadline)` — answered
     /// immediately when events past `since` exist, otherwise parked until
     /// one arrives or the deadline passes (expired waiters are pruned; the
@@ -305,6 +329,9 @@ enum Msg {
 #[derive(Clone)]
 pub struct Handle {
     tx: mpsc::Sender<Msg>,
+    /// Flipped true by the coordinator once recovery (if any) completed
+    /// and the mailbox started serving — `GET /v1/healthz` readiness.
+    ready: std::sync::Arc<std::sync::atomic::AtomicBool>,
 }
 
 impl Handle {
@@ -458,6 +485,27 @@ impl Handle {
         self.ask(Msg::Durability)
     }
 
+    /// Readiness (`GET /v1/healthz`): false while recovery replays the
+    /// WAL — the process is alive but must not take traffic yet. Never
+    /// blocks on the coordinator mailbox.
+    pub fn ready(&self) -> bool {
+        self.ready.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Refresh `node`'s liveness lease (`POST /v1/cluster/heartbeat`).
+    /// Inner `Ok` is the lease window in ms the node must beat (0 = lease
+    /// tracking disabled); inner `Err` names an unknown/retired node.
+    pub fn heartbeat(&self, node: usize) -> Result<std::result::Result<u64, String>> {
+        self.ask(|rtx| Msg::Heartbeat(node, rtx))
+    }
+
+    /// Inject a fault event through the normal event path (chaos
+    /// harness / tests). The event is journaled, logged, and replayed
+    /// exactly like an organic one.
+    pub fn inject(&self, ev: ClusterEvent) -> Result<()> {
+        self.ask(|rtx| Msg::Inject(ev, Some(rtx)))
+    }
+
     /// Block until every submitted job reached a terminal state.
     pub fn drain(&self) -> Result<()> {
         self.ask(Msg::Drain)
@@ -591,6 +639,34 @@ pub struct CoordinatorConfig {
     pub user_quota: Option<admission::QuotaCfg>,
     /// Cluster-wide submit quota across all users (`None` disables).
     pub global_quota: Option<admission::QuotaCfg>,
+    /// Node-liveness lease window in ms (`frenzy serve --lease-ms`): a
+    /// node that heartbeats once (`POST /v1/cluster/heartbeat`) and then
+    /// misses a full window is declared crashed — abrupt preemption, no
+    /// drain grace, work since the last checkpoint lost. 0 disables
+    /// lease tracking entirely (nodes are trusted alive — the default;
+    /// nodes that never heartbeat are never leased either way).
+    pub lease_timeout_ms: u64,
+    /// Crash-requeue backoff base in ms: a crash-displaced job is held
+    /// for `base * 2^(n-1)` capped at [`Self::crash_backoff_cap_ms`],
+    /// where `n` counts the job's consecutive crash displacements.
+    /// Crashes never burn the job's `max_attempts` budget.
+    pub crash_backoff_base_ms: u64,
+    /// Cap on the crash-requeue backoff in ms.
+    pub crash_backoff_cap_ms: u64,
+    /// Flap detector: a node crashing this many times inside
+    /// [`Self::quarantine_window_ms`] is quarantined — excluded from
+    /// placement (it still heartbeats) until probation ends. 0 disables.
+    pub quarantine_crashes: u32,
+    /// Sliding window for the flap detector, in ms.
+    pub quarantine_window_ms: u64,
+    /// Probation length in ms: how long a quarantined node stays out of
+    /// placement before rejoining.
+    pub probation_ms: u64,
+    /// Compiled chaos schedule for the live path (`frenzy serve
+    /// --faults`): each event is fed into the mailbox at its plan time,
+    /// measured in seconds from coordinator start, through the same path
+    /// organic failures take (journaled, logged, recoverable).
+    pub fault_plan: Option<crate::faults::FaultPlan>,
 }
 
 impl Default for CoordinatorConfig {
@@ -617,6 +693,13 @@ impl Default for CoordinatorConfig {
             max_pending: 100_000,
             user_quota: None,
             global_quota: None,
+            lease_timeout_ms: 0,
+            crash_backoff_base_ms: 1_000,
+            crash_backoff_cap_ms: 60_000,
+            quarantine_crashes: 3,
+            quarantine_window_ms: 300_000,
+            probation_ms: 120_000,
+            fault_plan: None,
         }
     }
 }
@@ -625,11 +708,17 @@ impl Default for CoordinatorConfig {
 pub fn spawn(spec: ClusterSpec, cfg: CoordinatorConfig) -> (Handle, std::thread::JoinHandle<()>) {
     let (tx, rx) = mpsc::channel::<Msg>();
     let tx_internal = tx.clone();
+    // Readiness gates on recovery, which only exists in durable mode: an
+    // in-memory coordinator is ready the moment it has a mailbox (requests
+    // just queue), so the flag starts true and `/v1/healthz` never flaps
+    // during the spawn/first-request race.
+    let ready = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(cfg.data_dir.is_none()));
+    let ready_flag = ready.clone();
     let handle = std::thread::Builder::new()
         .name("frenzy-coordinator".into())
-        .spawn(move || coordinator_loop(spec, cfg, rx, tx_internal))
+        .spawn(move || coordinator_loop(spec, cfg, rx, tx_internal, ready_flag))
         .expect("spawn coordinator");
-    (Handle { tx }, handle)
+    (Handle { tx, ready }, handle)
 }
 
 /// Deliver `msg` to the coordinator mailbox after `delay_s` (immediately
@@ -666,6 +755,14 @@ fn dispatch_effects(
     }
     for d in &fx.drain_requested {
         send_after(tx_internal, d.delay_s, Msg::Drained(d.job, d.epoch));
+    }
+    for d in &fx.requeue_after {
+        // Crash-backoff hold: the job re-enters the pending queue once
+        // its (capped, exponential) backoff elapses.
+        send_after(tx_internal, d.delay_s, Msg::Requeue(d.job));
+    }
+    for d in &fx.probation_after {
+        send_after(tx_internal, d.delay_s, Msg::Probation(d.node));
     }
     for p in &fx.placed {
         if p.will_oom {
@@ -1087,6 +1184,7 @@ fn coordinator_loop(
     cfg: CoordinatorConfig,
     rx: mpsc::Receiver<Msg>,
     tx_internal: mpsc::Sender<Msg>,
+    ready: std::sync::Arc<std::sync::atomic::AtomicBool>,
 ) {
     // Admission control and predict run MARP outside the engine's scheduler
     // (rebuilt on every scale event so joined GPU types count).
@@ -1128,6 +1226,30 @@ fn coordinator_loop(
         }
         stop_tx
     };
+    // Lease sweeps ride their own timer (half the lease window, so a
+    // missed lease is detected within 1.5 windows of the last beat); same
+    // stop-channel lifecycle as the round timer.
+    let _lease_stop = {
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        if cfg.lease_timeout_ms > 0 {
+            let period = std::time::Duration::from_millis((cfg.lease_timeout_ms / 2).max(10));
+            let tick_tx = tx_internal.clone();
+            std::thread::Builder::new()
+                .name("frenzy-lease-timer".into())
+                .spawn(move || loop {
+                    match stop_rx.recv_timeout(period) {
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if tick_tx.send(Msg::LeaseCheck).is_err() {
+                                break;
+                            }
+                        }
+                        _ => break, // stop signal or coordinator gone
+                    }
+                })
+                .expect("spawn lease timer");
+        }
+        stop_tx
+    };
     let mut engine = SchedulingEngine::new(
         &spec,
         sched.as_mut(),
@@ -1141,6 +1263,11 @@ fn coordinator_loop(
             drain_grace_s: cfg.drain_grace_ms as f64 / 1e3,
             ckpt_every_steps: cfg.ckpt_every_steps,
             ckpt_write_s: cfg.ckpt_write_ms as f64 / 1e3,
+            crash_backoff_base_s: cfg.crash_backoff_base_ms as f64 / 1e3,
+            crash_backoff_cap_s: cfg.crash_backoff_cap_ms as f64 / 1e3,
+            quarantine_crashes: cfg.quarantine_crashes,
+            quarantine_window_s: cfg.quarantine_window_ms as f64 / 1e3,
+            probation_s: cfg.probation_ms as f64 / 1e3,
             ..EngineConfig::default()
         },
     );
@@ -1211,7 +1338,10 @@ fn coordinator_loop(
         // later placement superseded) reconciles here, through the same
         // queries the live arms use.
         for (id, j) in jobs.iter_mut() {
-            if engine.is_pending(*id) {
+            if engine.is_pending(*id) || engine.is_held(*id) {
+                // Held = crash-displaced, waiting out its backoff; to the
+                // status table that is just "queued" (rearm_effects below
+                // restarts the backoff timer with its remaining delay).
                 j.state = JobState::Queued;
                 j.gpus = 0;
             } else if engine.is_running(*id) {
@@ -1235,6 +1365,21 @@ fn coordinator_loop(
         engine.set_journal(Box::new(SharedJournal(wal.clone())));
         durable = Some(Durability { wal, store, snap: snap_meta });
     }
+
+    // Readiness: recovery (if any) completed and the mailbox is about to
+    // serve — `GET /v1/healthz` flips to `ready: true` here.
+    ready.store(true, std::sync::atomic::Ordering::SeqCst);
+    // Live chaos: feed every fault-plan event into the mailbox at its
+    // plan time (seconds from boot), through the same path organic
+    // failures take — journaled, event-logged, recoverable.
+    if let Some(plan) = &cfg.fault_plan {
+        for (t, ev) in plan.events() {
+            send_after(&tx_internal, *t, Msg::Inject(ev.clone(), None));
+        }
+    }
+    // Liveness leases, by node id: present only for nodes that have
+    // heartbeated at least once (lease tracking is opt-in per node).
+    let mut leases: HashMap<usize, std::time::Instant> = HashMap::new();
 
     loop {
         let msg = match rx.recv() {
@@ -1336,6 +1481,68 @@ fn coordinator_loop(
                 fx.merge(engine.run_round(&mut wall));
                 apply_effects(&fx, &mut jobs, &mut retention, wall.now());
                 dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
+            }
+            Msg::Requeue(id) => {
+                // A crash-backoff hold expired: the engine moves the job
+                // back to pending (no attempt burned — crashes are the
+                // cluster's fault). Stale requeues for jobs cancelled
+                // while held are no-ops inside the engine.
+                let mut fx = engine.handle(ClusterEvent::Requeue { job: id }, &mut wall);
+                fx.merge(engine.run_round(&mut wall));
+                apply_effects(&fx, &mut jobs, &mut retention, wall.now());
+                dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
+            }
+            Msg::Probation(node) => {
+                let mut fx = engine.handle(ClusterEvent::Probation { node }, &mut wall);
+                fx.merge(engine.run_round(&mut wall));
+                apply_effects(&fx, &mut jobs, &mut retention, wall.now());
+                dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
+            }
+            Msg::Inject(ev, reply) => {
+                let mut fx = engine.handle(ev, &mut wall);
+                fx.merge(engine.run_round(&mut wall));
+                apply_effects(&fx, &mut jobs, &mut retention, wall.now());
+                dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
+                if let Some(r) = reply {
+                    let _ = r.send(());
+                }
+            }
+            Msg::Heartbeat(node, reply) => {
+                // Quarantined nodes still heartbeat (alive, just barred
+                // from placement); unknown/retired nodes error.
+                let known =
+                    engine.cluster_state().nodes.get(node).is_some_and(|n| n.total > 0);
+                if known {
+                    if cfg.lease_timeout_ms > 0 {
+                        leases.insert(node, std::time::Instant::now());
+                    }
+                    let _ = reply.send(Ok(cfg.lease_timeout_ms));
+                } else {
+                    let _ = reply.send(Err(format!("no such node {node}")));
+                }
+            }
+            Msg::LeaseCheck => {
+                let timeout = std::time::Duration::from_millis(cfg.lease_timeout_ms);
+                let now_i = std::time::Instant::now();
+                let expired: Vec<usize> = leases
+                    .iter()
+                    .filter(|(_, seen)| now_i.duration_since(**seen) > timeout)
+                    .map(|(&n, _)| n)
+                    .collect();
+                if !expired.is_empty() {
+                    let mut fx = Effects::default();
+                    for node in expired {
+                        leases.remove(&node);
+                        // Missed lease window: abrupt crash — no drain
+                        // grace; work past the checkpoint floor is lost.
+                        // (Crashing a node already quarantined or retired
+                        // is a no-op inside the engine.)
+                        fx.merge(engine.handle(ClusterEvent::NodeCrash(node), &mut wall));
+                    }
+                    fx.merge(engine.run_round(&mut wall));
+                    apply_effects(&fx, &mut jobs, &mut retention, wall.now());
+                    dispatch_effects(&fx, &jobs, &cfg, &executor, &tx_internal);
+                }
             }
             Msg::TrainDone(res, epoch) => {
                 let mut fx = Effects::default();
@@ -2184,5 +2391,140 @@ mod tests {
         h.shutdown();
         j.join().unwrap();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_crash_requeues_without_burning_attempts() {
+        // A live node crash: the hosted job loses its run abruptly (no
+        // drain grace), waits out a short backoff, re-places, and still
+        // completes — with `attempts` untouched (crashes are the
+        // cluster's fault, not the job's).
+        let cfg = CoordinatorConfig {
+            execute_training: false,
+            stub_delay_ms: 300,
+            ckpt_every_steps: 1,
+            crash_backoff_base_ms: 20,
+            crash_backoff_cap_ms: 40,
+            ..CoordinatorConfig::default()
+        };
+        let (h, _j) = spawn(real_testbed(), cfg);
+        let id = h
+            .submit(SubmitRequest {
+                model: "gpt2-350m".into(),
+                global_batch: 8,
+                total_samples: 400,
+            })
+            .unwrap();
+        assert_eq!(h.status(id).unwrap().unwrap().state, JobState::Running);
+        let node = h.decisions().unwrap()[0].1[0].0;
+        h.inject(ClusterEvent::NodeCrash(node)).unwrap();
+        // Crash displaces the job into a backoff hold (Queued) until the
+        // 20 ms backoff elapses and it re-places (Running) — either way,
+        // the original run is dead, not finished.
+        let st = h.status(id).unwrap().unwrap().state;
+        assert!(st == JobState::Queued || st == JobState::Running, "displaced, got {st:?}");
+        h.drain().unwrap();
+        assert_eq!(h.status(id).unwrap().unwrap().state, JobState::Completed);
+        let report = h.report().unwrap();
+        assert_eq!(report.n_node_crashes, 1);
+        assert_eq!(report.n_crash_requeues, 1);
+        assert!(report.goodput <= 1.0 && report.goodput >= 0.0);
+        // Crash ≠ leave: the crashed node's capacity is still counted.
+        let (total, idle, _) = h.cluster_info().unwrap();
+        assert_eq!(total, 11);
+        assert_eq!(total, idle);
+        // The event log tells the crash story, distinct from a drain.
+        let page = h.events(0, 1000).unwrap();
+        let kinds: Vec<&EventKind> = page.events.iter().map(|r| &r.kind).collect();
+        assert!(kinds.iter().any(
+            |k| matches!(k, EventKind::NodeCrashed { node: n, preempted } if *n == node && preempted.contains(&id))
+        ));
+        assert!(!kinds.iter().any(|k| matches!(k, EventKind::DrainRequested { .. })));
+        // No attempt burned: the job was placed at least twice (before and
+        // after the crash), always at the same attempt number.
+        let attempts: Vec<u32> = kinds
+            .iter()
+            .filter_map(|k| match k {
+                EventKind::Placed { job, attempts, .. } if *job == id => Some(*attempts),
+                _ => None,
+            })
+            .collect();
+        assert!(attempts.len() >= 2, "re-placed after the crash");
+        assert!(attempts.iter().all(|&a| a == attempts[0]), "crash burned no attempt");
+        h.shutdown();
+    }
+
+    #[test]
+    fn missed_lease_window_crashes_the_node() {
+        let cfg = CoordinatorConfig { lease_timeout_ms: 40, ..no_exec_cfg() };
+        let (h, _j) = spawn(real_testbed(), cfg);
+        // Unknown nodes can't lease.
+        assert!(h.heartbeat(99).unwrap().is_err());
+        // Node 0 heartbeats once, then goes silent: within a couple of
+        // lease windows the sweep declares it crashed.
+        assert_eq!(h.heartbeat(0).unwrap().unwrap(), 40);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let crashed = loop {
+            let page = h.events(0, 1000).unwrap();
+            if page
+                .events
+                .iter()
+                .any(|r| matches!(r.kind, EventKind::NodeCrashed { node: 0, .. }))
+            {
+                break true;
+            }
+            if std::time::Instant::now() > deadline {
+                break false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        };
+        assert!(crashed, "lease expiry fed a NodeCrash through the event path");
+        // Never-heartbeating nodes are untouched (leases are opt-in).
+        let page = h.events(0, 1000).unwrap();
+        assert!(!page
+            .events
+            .iter()
+            .any(|r| matches!(r.kind, EventKind::NodeCrashed { node: 1, .. })));
+        h.shutdown();
+    }
+
+    #[test]
+    fn handle_reports_ready_after_spawn() {
+        let (h, _j) = spawn(real_testbed(), no_exec_cfg());
+        // Readiness flips once the mailbox serves; a query round-trip
+        // guarantees we observe it without racing the startup path.
+        assert!(h.status(1).unwrap().is_none());
+        assert!(h.ready());
+        h.shutdown();
+    }
+
+    #[test]
+    fn fault_plan_drives_the_live_path() {
+        // A compiled FaultPlan handed to the coordinator injects through
+        // the mailbox at wall-clock offsets: a crash at 0.05 s hits the
+        // job placed at boot, which still completes.
+        let plan = crate::faults::FaultPlan::parse("crash:0@0.05,crash:1@0.05", 5, 1.0).unwrap();
+        let cfg = CoordinatorConfig {
+            execute_training: false,
+            stub_delay_ms: 250,
+            ckpt_every_steps: 1,
+            crash_backoff_base_ms: 20,
+            crash_backoff_cap_ms: 40,
+            fault_plan: Some(plan),
+            ..CoordinatorConfig::default()
+        };
+        let (h, _j) = spawn(real_testbed(), cfg);
+        let id = h
+            .submit(SubmitRequest {
+                model: "gpt2-350m".into(),
+                global_batch: 8,
+                total_samples: 400,
+            })
+            .unwrap();
+        h.drain().unwrap();
+        assert_eq!(h.status(id).unwrap().unwrap().state, JobState::Completed);
+        let report = h.report().unwrap();
+        assert_eq!(report.n_node_crashes, 2, "both planned crashes landed");
+        h.shutdown();
     }
 }

@@ -15,9 +15,9 @@
 
 use super::api::{
     ApiError, CancelResponseV1, ClusterInfoV1, DurabilityV1, EventV1, EventsRequestV1,
-    EventsResponseV1, JobStatusV1, ListRequestV1, ListResponseV1, PredictRequestV1,
-    PredictResponseV1, ReportV1, ScaleRequestV1, ScaleResponseV1, SubmitBatchRequestV1,
-    SubmitBatchResponseV1, SubmitRequestV1, SubmitResultV1,
+    EventsResponseV1, HeartbeatRequestV1, HeartbeatResponseV1, JobStatusV1, ListRequestV1,
+    ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1, ScaleRequestV1,
+    ScaleResponseV1, SubmitBatchRequestV1, SubmitBatchResponseV1, SubmitRequestV1, SubmitResultV1,
 };
 use super::{CancelOutcome, Handle, ScaleOp, SubmitError, SubmitRequest};
 use crate::util::json::{self, Json};
@@ -232,7 +232,9 @@ fn allowed_methods(path: &str) -> Option<&'static str> {
         "/v1/healthz" | "/v1/cluster" | "/v1/cluster/events" | "/v1/report"
         | "/v1/durability" => Some("GET"),
         "/v1/jobs" => Some("GET, POST"),
-        "/v1/jobs:batch" | "/v1/predict" | "/v1/cluster/scale" => Some("POST"),
+        "/v1/jobs:batch" | "/v1/predict" | "/v1/cluster/scale" | "/v1/cluster/heartbeat" => {
+            Some("POST")
+        }
         _ => {
             let rest = path.strip_prefix("/v1/jobs/")?;
             if rest.is_empty() {
@@ -266,7 +268,15 @@ pub fn route_full(handle: &Handle, req: &Request) -> Response {
     let method = req.method.as_str();
 
     let resp = match (method, path.as_str()) {
-        ("GET", "/v1/healthz") => Some(Response::ok(r#"{"ok":true}"#.to_string())),
+        // Liveness is answering at all; readiness is the coordinator past
+        // recovery. A 503 here tells load balancers "up, don't route yet"
+        // (recovery replaying a long WAL) without tearing the process down.
+        ("GET", "/v1/healthz") => Some(if handle.ready() {
+            Response::ok(r#"{"ok":true,"ready":true}"#.to_string())
+        } else {
+            Response { status: 503, ..Response::ok(r#"{"ok":true,"ready":false}"#.to_string()) }
+        }),
+        ("POST", "/v1/cluster/heartbeat") => Some(handle_heartbeat(handle, &req.body)),
         ("GET", "/v1/cluster") => Some(match handle.cluster_info() {
             Ok((total_gpus, idle_gpus, utilization)) => Response::ok(
                 ClusterInfoV1 { total_gpus, idle_gpus, utilization }
@@ -475,6 +485,25 @@ fn handle_scale(handle: &Handle, body: &str) -> Response {
         // Unknown GPU type / bad node id is the caller's fault …
         Ok(Err(e)) => Response::err(400, e),
         // … a dead coordinator is ours.
+        Err(e) => Response::err(500, e.to_string()),
+    }
+}
+
+fn handle_heartbeat(handle: &Handle, body: &str) -> Response {
+    let parsed = match parse_body(body) {
+        Ok(p) => p,
+        Err(r) => return r,
+    };
+    let hb = match HeartbeatRequestV1::from_json(&parsed) {
+        Ok(h) => h,
+        Err(e) => return Response::err(400, e),
+    };
+    match handle.heartbeat(hb.node) {
+        Ok(Ok(lease_ms)) => Response::ok(
+            HeartbeatResponseV1 { node: hb.node, lease_ms }.to_json().to_string_compact(),
+        ),
+        // Unknown / fully retired node: it has no lease to refresh.
+        Ok(Err(e)) => Response::err(404, e),
         Err(e) => Response::err(500, e.to_string()),
     }
 }

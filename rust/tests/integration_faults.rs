@@ -1,0 +1,356 @@
+//! Integration: the failure-domain runtime end-to-end. A seeded chaos
+//! plan over a Philly prefix terminates every job with GPU and
+//! device-memory conservation intact; K crashes inside the flap window
+//! quarantine a node and placements provably avoid it; the same scripted
+//! fault plan driven through the simulator (VirtualClock) and the live
+//! coordinator (WallClock) yields identical placements and terminal
+//! states; crash events ride the events API (cursor resume + SSE) with
+//! no gaps; and `/v1/healthz` + `/v1/cluster/heartbeat` work over HTTP.
+
+use frenzy::config::real_testbed;
+use frenzy::engine::{ClusterEvent, EventKind};
+use frenzy::faults::FaultPlan;
+use frenzy::job::{JobSpec, JobState};
+use frenzy::marp::Marp;
+use frenzy::sched::has::Has;
+use frenzy::serverless::api::EventsRequestV1;
+use frenzy::serverless::client::FrenzyClient;
+use frenzy::serverless::{server, spawn, CoordinatorConfig, Handle, SubmitRequest};
+use frenzy::sim::{SimConfig, Simulator};
+use frenzy::workload::philly;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn start(cfg: CoordinatorConfig) -> (Handle, SocketAddr, Arc<AtomicBool>) {
+    let (h, _j) = spawn(real_testbed(), cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = server::serve(h.clone(), "127.0.0.1:0", stop.clone()).unwrap();
+    (h, addr, stop)
+}
+
+fn wait_terminal(h: &Handle, id: u64) -> JobState {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let st = h.status(id).unwrap().unwrap().state;
+        if st.is_terminal() {
+            return st;
+        }
+        assert!(std::time::Instant::now() < deadline, "job {id} not terminal after 30s");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+}
+
+/// The chaos property test: a seeded [`FaultPlan`] over a Philly prefix —
+/// crashes, a blackout-detected crash, stragglers, a checkpoint-failure
+/// window — must leave every job terminal, conserve GPUs and
+/// device-memory bytes, and fold honest crash counters and goodput into
+/// the report.
+#[test]
+fn seeded_chaos_on_philly_prefix_terminates_and_conserves() {
+    let spec = real_testbed();
+    // Re-time the prefix to a dense arrival schedule so the seeded plan's
+    // events (scattered over the horizon) overlap running jobs.
+    let jobs: Vec<JobSpec> = philly::generate(24, 7)
+        .iter()
+        .take(14)
+        .enumerate()
+        .map(|(i, j)| {
+            JobSpec::new(
+                i as u64,
+                j.model.clone(),
+                j.train.global_batch,
+                j.total_samples.min(30_000),
+                i as f64 * 50.0,
+            )
+        })
+        .collect();
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let cfg = SimConfig { max_sim_time_s: 1e18, ..SimConfig::default() };
+    let mut sim = Simulator::new(&spec, &mut has, cfg);
+    sim.submit_all(&jobs);
+    let plan = FaultPlan::parse("seed:42", spec.nodes.len(), 14.0 * 50.0 + 2_000.0).unwrap();
+    assert!(!plan.is_empty());
+    sim.inject_faults(&plan);
+    let report = sim.run("philly-chaos");
+
+    // Every job goes terminal despite the chaos.
+    assert_eq!(report.n_jobs, jobs.len());
+    assert_eq!(
+        report.n_completed + report.n_rejected + report.n_cancelled,
+        jobs.len(),
+        "all jobs terminal: {report:?}"
+    );
+    // Conservation: the allocation ledger and the device-memory byte
+    // ledger both balance, and everything is released at the end.
+    assert!(sim.conservation_ok(), "GPU + device-memory conservation");
+    assert_eq!(sim.cluster_state().idle_gpus(), sim.cluster_state().total_gpus());
+    // Crash counters agree with the audit log, and goodput is a ratio.
+    let crashes_logged = sim
+        .event_log()
+        .iter()
+        .filter(|r| matches!(r.kind, EventKind::NodeCrashed { .. }))
+        .count() as u64;
+    assert!(crashes_logged >= 1, "the seeded plan always crashes at least once");
+    assert_eq!(report.n_node_crashes, crashes_logged);
+    assert!((0.0..=1.0).contains(&report.goodput), "goodput {}", report.goodput);
+}
+
+/// K crashes inside the flap window quarantine the node; while the
+/// quarantine holds, no placement touches it.
+#[test]
+fn k_crashes_quarantine_a_node_and_placements_avoid_it() {
+    let spec = real_testbed();
+    let model = frenzy::config::models::model_by_name("gpt2-350m").unwrap();
+    // Jobs keep arriving well past the third crash so post-quarantine
+    // placements exist to check.
+    let jobs: Vec<JobSpec> =
+        (0..12).map(|i| JobSpec::new(i, model.clone(), 8, 20_000, i as f64 * 15.0)).collect();
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let cfg = SimConfig {
+        max_sim_time_s: 1e18,
+        quarantine_crashes: 3,
+        quarantine_window_s: 100.0,
+        // Longer than the run: once quarantined, node 2 never returns.
+        probation_s: 1e9,
+        ..SimConfig::default()
+    };
+    let mut sim = Simulator::new(&spec, &mut has, cfg);
+    sim.submit_all(&jobs);
+    // Crash the 4-GPU A800 node three times inside the window.
+    for t in [10.0, 20.0, 30.0] {
+        sim.schedule_event(t, ClusterEvent::NodeCrash(2));
+    }
+    let report = sim.run("flap");
+    assert_eq!(report.n_completed + report.n_rejected + report.n_cancelled, jobs.len());
+    assert_eq!(report.n_quarantines, 1, "the third crash quarantines node 2");
+    let quarantined_at = sim
+        .event_log()
+        .iter()
+        .find(|r| matches!(r.kind, EventKind::NodeQuarantined { node: 2, .. }))
+        .expect("node_quarantined event in the audit log")
+        .time;
+    let placed_after: Vec<&Vec<(usize, u32)>> = sim
+        .event_log()
+        .iter()
+        .filter(|r| r.time > quarantined_at)
+        .filter_map(|r| match &r.kind {
+            EventKind::Placed { parts, .. } => Some(parts),
+            _ => None,
+        })
+        .collect();
+    assert!(!placed_after.is_empty(), "jobs are still placed after the quarantine");
+    for parts in placed_after {
+        assert!(
+            parts.iter().all(|&(node, _)| node != 2),
+            "placement touched the quarantined node: {parts:?}"
+        );
+    }
+    assert!(sim.conservation_ok());
+}
+
+/// Differential chaos replay: the same scripted crash plan driven through
+/// the simulator and the live coordinator must produce identical
+/// placements, identical crash counters, and identical terminal states —
+/// the two clocks share one failure-domain engine.
+#[test]
+fn same_fault_plan_sim_vs_live_identical_terminal_states() {
+    let spec = real_testbed();
+    let model = frenzy::config::models::model_by_name("gpt2-7b").unwrap();
+    // Serialized arrivals: each job runs on an empty cluster, so sim and
+    // live present identical snapshots to the scheduler.
+    let trace: Vec<JobSpec> =
+        (0..3).map(|i| JobSpec::new(i, model.clone(), 2, 20_000, i as f64 * 1e9)).collect();
+
+    // Dry sim run to learn each job's placed node — the crash targets.
+    let mut dry_has = Has::new(Marp::with_defaults(spec.clone()));
+    let dry_cfg = SimConfig { max_sim_time_s: 1e18, ..SimConfig::default() };
+    let mut dry = Simulator::new(&spec, &mut dry_has, dry_cfg);
+    dry.submit_all(&trace);
+    dry.run("faults-dry");
+    let targets: Vec<usize> = trace
+        .iter()
+        .map(|j| {
+            dry.engine().decision_log().iter().find(|d| d.0 == j.id).expect("placed").1[0].0
+        })
+        .collect();
+
+    // Faulted sim: crash each job's node 1 virtual second into its run.
+    // Quarantine is disabled on both paths because the two clocks put the
+    // crashes at wildly different distances inside the flap window.
+    let mut has = Has::new(Marp::with_defaults(spec.clone()));
+    let cfg = SimConfig { max_sim_time_s: 1e18, quarantine_crashes: 0, ..SimConfig::default() };
+    let mut sim = Simulator::new(&spec, &mut has, cfg);
+    sim.submit_all(&trace);
+    for (j, &n) in trace.iter().zip(&targets) {
+        sim.schedule_event(j.submit_time + 1.0, ClusterEvent::NodeCrash(n));
+    }
+    let sim_report = sim.run("faults-diff");
+    let sim_decisions = sim.engine().decision_log().to_vec();
+
+    // Live coordinator: same crashes, injected through the same event
+    // path while each job runs.
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        stub_delay_ms: 300,
+        crash_backoff_base_ms: 50,
+        crash_backoff_cap_ms: 100,
+        quarantine_crashes: 0,
+        ..CoordinatorConfig::default()
+    };
+    let (h, _j) = spawn(spec.clone(), cfg);
+    let mut live_states = Vec::new();
+    for j in &trace {
+        let id = h
+            .submit(SubmitRequest {
+                model: j.model.name.to_string(),
+                global_batch: j.train.global_batch,
+                total_samples: j.total_samples,
+            })
+            .unwrap();
+        assert_eq!(h.status(id).unwrap().unwrap().state, JobState::Running);
+        let node = h.decisions().unwrap().iter().rev().find(|d| d.0 == id).unwrap().1[0].0;
+        h.inject(ClusterEvent::NodeCrash(node)).unwrap();
+        live_states.push(wait_terminal(&h, id));
+    }
+    let live_report = h.report().unwrap();
+    let live_decisions = h.decisions().unwrap();
+
+    // Identical placements: two per job (initial + post-crash re-place),
+    // same order, same (node, gpu-count) parts. Live ids are 1-based.
+    assert_eq!(sim_decisions.len(), 2 * trace.len(), "initial + re-placement per job");
+    assert_eq!(sim_decisions.len(), live_decisions.len());
+    for (k, (s, l)) in sim_decisions.iter().zip(live_decisions.iter()).enumerate() {
+        assert_eq!(s.0 + 1, l.0, "placement #{k} is for a different job");
+        assert_eq!(s.1, l.1, "placement #{k} (job {}) differs: {:?} vs {:?}", s.0, s.1, l.1);
+    }
+    // Identical terminal states: a crash never kills a job on either path.
+    for (i, st) in live_states.iter().enumerate() {
+        assert_eq!(*st, JobState::Completed, "live job {i}");
+        assert!(
+            sim.event_log().iter().any(
+                |r| matches!(r.kind, EventKind::Finished { job, .. } if job == i as u64)
+            ),
+            "sim job {i} completed"
+        );
+    }
+    // Identical failure accounting on both clocks.
+    assert_eq!(sim_report.n_node_crashes, trace.len() as u64);
+    assert_eq!(live_report.n_node_crashes, trace.len() as u64);
+    assert_eq!(sim_report.n_crash_requeues, trace.len() as u64);
+    assert_eq!(live_report.n_crash_requeues, trace.len() as u64);
+    assert!((0.0..=1.0).contains(&sim_report.goodput));
+    assert!((0.0..=1.0).contains(&live_report.goodput));
+    assert!(sim.conservation_ok());
+    let (total, idle, _) = h.cluster_info().unwrap();
+    assert_eq!(total, idle, "live resources all released");
+    h.shutdown();
+}
+
+/// Crash events ride the events API like any other kind: an SSE
+/// subscriber sees them pushed live, and a cursor consumer that pages,
+/// disconnects across a crash burst, and resumes from `next_since` sees
+/// every event exactly once with dense sequence numbers.
+#[test]
+fn cursor_resume_and_sse_across_a_crash_burst() {
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        stub_delay_ms: 400,
+        crash_backoff_base_ms: 50,
+        crash_backoff_cap_ms: 100,
+        quarantine_crashes: 0,
+        ..CoordinatorConfig::default()
+    };
+    let (h, addr, stop) = start(cfg);
+    // SSE subscriber attached before the burst: it must see both crashes
+    // and the eventual completion pushed, not polled.
+    let subscriber = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let mut c = FrenzyClient::new(addr);
+            let mut kinds = Vec::new();
+            c.events_stream(&EventsRequestV1::default(), |e| {
+                kinds.push(e.kind.clone());
+                let crashes =
+                    kinds.iter().filter(|k| matches!(k, EventKind::NodeCrashed { .. })).count();
+                let finished =
+                    kinds.iter().filter(|k| matches!(k, EventKind::Finished { .. })).count();
+                crashes < 2 || finished < 1
+            })
+            .unwrap();
+            kinds
+        })
+    };
+    std::thread::sleep(std::time::Duration::from_millis(150));
+
+    let mut c = FrenzyClient::new(addr.to_string());
+    let id = c.submit("gpt2-350m", 8, 400).unwrap();
+    // Page 1, then "disconnect" (drop the position into a cursor).
+    let p1 = c.events(&EventsRequestV1::default()).unwrap();
+    assert!(!p1.dropped);
+    let node = h.decisions().unwrap().iter().rev().find(|d| d.0 == id).unwrap().1[0].0;
+    h.inject(ClusterEvent::NodeCrash(node)).unwrap();
+    h.inject(ClusterEvent::NodeCrash((node + 1) % 5)).unwrap();
+    h.drain().unwrap();
+    // Resume from the stored cursor: the burst arrives exactly once.
+    let p2 = c.events(&EventsRequestV1 { since: p1.next_since, ..Default::default() }).unwrap();
+    assert!(!p2.dropped);
+    assert_eq!(p2.next_since, p2.last_seq, "one resume page catches up");
+    let seqs: Vec<u64> =
+        p1.events.iter().chain(p2.events.iter()).map(|e| e.seq).collect();
+    assert!(
+        seqs.windows(2).all(|w| w[1] == w[0] + 1),
+        "dense, gapless, duplicate-free across the resume: {seqs:?}"
+    );
+    let crash_events: Vec<&frenzy::serverless::api::EventV1> = p2
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::NodeCrashed { .. }))
+        .collect();
+    assert_eq!(crash_events.len(), 2, "both crashes are in the resumed page");
+    assert!(
+        crash_events.iter().any(|e| matches!(&e.kind,
+            EventKind::NodeCrashed { preempted, .. } if preempted.contains(&id))),
+        "the first crash displaced the running job"
+    );
+    assert!(
+        p2.events.iter().any(|e| matches!(e.kind, EventKind::Finished { job, .. } if job == id)),
+        "the displaced job still completed"
+    );
+    assert_eq!(h.report().unwrap().n_node_crashes, 2);
+
+    let kinds = subscriber.join().unwrap();
+    assert_eq!(
+        kinds.iter().filter(|k| matches!(k, EventKind::NodeCrashed { .. })).count(),
+        2,
+        "SSE pushed both crash events: {kinds:?}"
+    );
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+/// `/v1/healthz` answers liveness + readiness and
+/// `/v1/cluster/heartbeat` renews a lease over the wire — the SDK methods
+/// round-trip both.
+#[test]
+fn healthz_and_heartbeat_over_http() {
+    let cfg = CoordinatorConfig {
+        execute_training: false,
+        // Long lease: nothing expires during the test; the response just
+        // advertises the window.
+        lease_timeout_ms: 5_000,
+        ..CoordinatorConfig::default()
+    };
+    let (h, addr, stop) = start(cfg);
+    let mut c = FrenzyClient::new(addr.to_string());
+    let (ok, ready) = c.healthz().unwrap();
+    assert!(ok && ready, "in-memory server is ready as soon as it serves");
+    assert!(c.health().unwrap());
+    let resp = c.heartbeat(0).unwrap();
+    assert_eq!(resp.node, 0);
+    assert_eq!(resp.lease_ms, 5_000, "the response advertises the lease window");
+    let err = c.heartbeat(99).unwrap_err().to_string();
+    assert!(err.contains("no such node"), "got: {err}");
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
