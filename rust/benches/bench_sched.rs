@@ -1,11 +1,13 @@
 //! Bench: scheduling-round latency vs. cluster size, indexed vs. naive.
 //!
 //! Sweeps synthetic heterogeneous clusters (3 GPU size classes) from 100 to
-//! 10,000 nodes with a Philly-trace-derived pending queue, and compares the
-//! capacity-index hot path (`Has { indexed: true }`) against the reference
-//! full-scan implementation. Before timing, it asserts the two paths
-//! produce **identical decisions and work units** — a divergence panics,
-//! which is the CI gate. Results are written to `BENCH_sched.json` at the
+//! 10,000 nodes with two pending queues — a Philly-trace-derived one and a
+//! generated open-world stream (`synth:` grammar, seeded) — and compares
+//! the capacity-index hot path (`indexed: true`) against the reference
+//! full-scan implementation for every scheduler that carries the flag
+//! (HAS, Sia, Opportunistic). Before timing, it asserts each pair produces
+//! **identical decisions and work units** — a divergence panics, which is
+//! the CI gate. Results are written to `BENCH_sched.json` at the
 //! repository root so the perf trajectory is tracked PR over PR.
 //!
 //! Smoke mode (`FRENZY_BENCH_FAST=1`, used by CI on every push) shrinks
@@ -16,15 +18,16 @@ use frenzy::bench_harness::Bench;
 use frenzy::cluster::{ClusterState, ClusterView};
 use frenzy::config::synthetic_cluster;
 use frenzy::marp::Marp;
-use frenzy::sched::{has::Has, PendingJob, PendingQueue, Scheduler};
+use frenzy::sched::{has::Has, opportunistic::Opportunistic, sia::Sia, PendingJob, PendingQueue};
+use frenzy::sched::Scheduler;
 use frenzy::util::json::Json;
-use frenzy::workload::philly;
+use frenzy::workload::{generator, philly};
 
-fn queue(n: usize) -> PendingQueue {
-    philly::generate(n, 11)
-        .into_iter()
-        .map(|spec| PendingJob { spec, attempts: 0 })
-        .collect()
+/// The generated-workload sweep spec: seeded, tenant-attributed, zoo mix.
+const SYNTH_SPEC: &str = "seed=11,arrivals=poisson:0.5,tenants=8,mix=zoo";
+
+fn to_queue(jobs: Vec<frenzy::job::JobSpec>) -> PendingQueue {
+    jobs.into_iter().map(|spec| PendingJob { spec, attempts: 0 }).collect()
 }
 
 /// `(job, parts, d, t)` per decision — the differential gate's identity.
@@ -38,6 +41,29 @@ fn fingerprint(round: &frenzy::sched::SchedRound) -> Fingerprint {
         .collect()
 }
 
+/// Run one scheduler pair (indexed vs. naive reference) over the queue and
+/// panic on any decision or work-unit divergence.
+fn gate(
+    name: &str,
+    n: usize,
+    indexed: &mut dyn Scheduler,
+    naive: &mut dyn Scheduler,
+    pending: &PendingQueue,
+    view: &ClusterView,
+) {
+    let ri = indexed.schedule(pending, view, 0.0);
+    let rn = naive.schedule(pending, view, 0.0);
+    assert_eq!(
+        fingerprint(&ri),
+        fingerprint(&rn),
+        "indexed and naive {name} decisions diverged at {n} nodes"
+    );
+    assert_eq!(
+        ri.work_units, rn.work_units,
+        "{name} work-unit accounting diverged at {n} nodes"
+    );
+}
+
 fn main() {
     let fast = std::env::var("FRENZY_BENCH_FAST").ok().is_some_and(|v| v == "1");
     let node_counts: &[usize] = if fast { &[100, 1000] } else { &[100, 1000, 5000, 10_000] };
@@ -47,60 +73,74 @@ fn main() {
     let mut entries: Vec<Json> = Vec::new();
     let mut speedup_at_5k: Option<f64> = None;
 
+    // Philly keeps its untagged bench ids so the trajectory stays
+    // comparable across PRs; the generated stream rides alongside.
+    let workloads: [(&str, &str, PendingQueue); 2] = [
+        ("philly(seed 11)", "", to_queue(philly::generate(queue_len, 11))),
+        (
+            "synth:seed=11,tenants=8,mix=zoo",
+            "synth_",
+            to_queue(generator::from_spec(SYNTH_SPEC, queue_len, 11).expect("synth spec")),
+        ),
+    ];
+
     for &n in node_counts {
         let spec = synthetic_cluster(n);
         let state = ClusterState::from_spec(&spec);
         let view = ClusterView::build(&state);
-        let pending = queue(queue_len);
 
-        let mut indexed = Has::new(Marp::with_defaults(spec.clone()));
-        let mut naive = Has::new(Marp::with_defaults(spec.clone()));
-        naive.indexed = false;
+        for (workload, tag, pending) in &workloads {
+            // Differential gates: every indexed scheduler against its
+            // full-scan reference, identical decisions AND work units,
+            // before any timing.
+            let mut has_idx = Has::new(Marp::with_defaults(spec.clone()));
+            let mut has_nv = Has::new(Marp::with_defaults(spec.clone()));
+            has_nv.indexed = false;
+            gate("HAS", n, &mut has_idx, &mut has_nv, pending, &view);
 
-        // Differential gate: identical decisions AND identical work units,
-        // every sweep point, before any timing.
-        let ri = indexed.schedule(&pending, &view, 0.0);
-        let rn = naive.schedule(&pending, &view, 0.0);
-        assert_eq!(
-            fingerprint(&ri),
-            fingerprint(&rn),
-            "indexed and naive HAS decisions diverged at {n} nodes"
-        );
-        assert_eq!(
-            ri.work_units, rn.work_units,
-            "work-unit accounting diverged at {n} nodes"
-        );
+            let mut sia_idx = Sia::new(&spec);
+            let mut sia_nv = Sia::new(&spec);
+            sia_nv.indexed = false;
+            gate("Sia", n, &mut sia_idx, &mut sia_nv, pending, &view);
 
-        let r_idx = b
-            .bench(&format!("indexed_{n}nodes"), || {
-                indexed.schedule(&pending, &view, 0.0).decisions.len()
-            })
-            .clone();
-        let r_nv = b
-            .bench(&format!("naive_{n}nodes"), || {
-                naive.schedule(&pending, &view, 0.0).decisions.len()
-            })
-            .clone();
-        let speedup = r_nv.mean_s / r_idx.mean_s.max(1e-12);
-        if n == 5000 {
-            speedup_at_5k = Some(speedup);
+            let mut opp_idx = Opportunistic::new(&spec);
+            let mut opp_nv = Opportunistic::new(&spec);
+            opp_nv.indexed = false;
+            gate("Opportunistic", n, &mut opp_idx, &mut opp_nv, pending, &view);
+
+            let decisions = has_idx.schedule(pending, &view, 0.0);
+            let r_idx = b
+                .bench(&format!("{tag}indexed_{n}nodes"), || {
+                    has_idx.schedule(pending, &view, 0.0).decisions.len()
+                })
+                .clone();
+            let r_nv = b
+                .bench(&format!("{tag}naive_{n}nodes"), || {
+                    has_nv.schedule(pending, &view, 0.0).decisions.len()
+                })
+                .clone();
+            let speedup = r_nv.mean_s / r_idx.mean_s.max(1e-12);
+            if n == 5000 && tag.is_empty() {
+                speedup_at_5k = Some(speedup);
+            }
+            let mut e = Json::obj();
+            e.set("nodes", n)
+                .set("workload", *workload)
+                .set("queue_depth", queue_len)
+                .set("indexed_mean_s", r_idx.mean_s)
+                .set("naive_mean_s", r_nv.mean_s)
+                .set("speedup", speedup)
+                .set("decisions", decisions.decisions.len())
+                .set("work_units", decisions.work_units);
+            entries.push(e);
+            println!(
+                "{n:>6} nodes [{workload}]: naive {:.3e}s  indexed {:.3e}s  \
+                 speedup {speedup:.1}x  ({} decisions, identical)",
+                r_nv.mean_s,
+                r_idx.mean_s,
+                decisions.decisions.len()
+            );
         }
-        let mut e = Json::obj();
-        e.set("nodes", n)
-            .set("queue_depth", queue_len)
-            .set("indexed_mean_s", r_idx.mean_s)
-            .set("naive_mean_s", r_nv.mean_s)
-            .set("speedup", speedup)
-            .set("decisions", ri.decisions.len())
-            .set("work_units", ri.work_units);
-        entries.push(e);
-        println!(
-            "{n:>6} nodes: naive {:.3e}s  indexed {:.3e}s  speedup {speedup:.1}x  \
-             ({} decisions, identical)",
-            r_nv.mean_s,
-            r_idx.mean_s,
-            ri.decisions.len()
-        );
     }
     b.report();
 
@@ -108,7 +148,12 @@ fn main() {
     payload
         .set("bench", "sched_round")
         .set("smoke", fast)
-        .set("workload", "philly(seed 11)")
+        .set(
+            "workloads",
+            Json::Arr(
+                workloads.iter().map(|(w, _, _)| Json::from(*w)).collect::<Vec<Json>>(),
+            ),
+        )
         .set("entries", Json::Arr(entries));
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")

@@ -23,7 +23,7 @@ use crate::serverless::api::{
 use crate::serverless::client::FrenzyClient;
 use crate::serverless::{CoordinatorConfig, PredictReport, SchedulerKind, SubmitRequest};
 use crate::util::table::{fmt_bytes, fmt_duration, Table};
-use crate::workload::{helios, newworkload, philly, trace};
+use crate::workload::{generator, helios, newworkload, philly, trace};
 use anyhow::{anyhow, bail, Result};
 
 /// Default server address (matches `frenzy serve`).
@@ -42,14 +42,22 @@ pub fn cluster_arg(args: &Args) -> Result<crate::config::ClusterSpec> {
     crate::config::cluster_file::load_cluster(name)
 }
 
-/// Resolve `--workload` into a job trace: a named generator or a trace
-/// file path (shared by `frenzy simulate` and `frenzy replay`).
+/// Resolve `--workload` into a job trace: a named generator, a
+/// `synth:<spec>` open-world generator spec (see
+/// [`crate::workload::generator`] for the grammar), or a trace file path
+/// (shared by `frenzy simulate` and `frenzy replay`).
 pub fn load_workload(name: &str, n: usize, seed: u64) -> Result<Vec<JobSpec>> {
     Ok(match name {
         "newworkload" => newworkload::generate(n, seed),
         "philly" => philly::generate(n, seed),
         "helios" => helios::generate(n, seed),
-        other => trace::load(other)?, // treat as a trace file
+        // Bare `synth` = every clause defaulted; `--tasks`/`--seed` still
+        // apply as the jobs/seed fallbacks.
+        "synth" => generator::from_spec("", n, seed).map_err(|e| anyhow!(e))?,
+        other => match other.strip_prefix("synth:") {
+            Some(spec) => generator::from_spec(spec, n, seed).map_err(|e| anyhow!(e))?,
+            None => trace::load(other)?, // treat as a trace file
+        },
     })
 }
 
@@ -498,6 +506,23 @@ fn render_report(r: &ReportV1) {
     t.row_str(&["sched overhead (wall)", &fmt_duration(r.sched_overhead_s)]);
     t.row_str(&["utilization", &format!("{:.1}%", r.avg_utilization * 100.0)]);
     println!("{}", t.render());
+    if !r.tenants.is_empty() {
+        let mut tt = Table::new(&[
+            "tenant", "completed", "avg JCT", "avg queue", "GPU-seconds", "GPU share",
+        ])
+        .with_title("per-tenant fairness");
+        for row in &r.tenants {
+            tt.row_str(&[
+                &row.tenant,
+                &row.n_completed.to_string(),
+                &fmt_duration(row.avg_jct_s),
+                &fmt_duration(row.avg_queue_s),
+                &format!("{:.1}", row.gpu_seconds),
+                &format!("{:.1}%", row.gpu_share * 100.0),
+            ]);
+        }
+        println!("{}", tt.render());
+    }
     let occupied: Vec<&(f64, u64)> = r.jct_hist.iter().filter(|&&(_, c)| c > 0).collect();
     if !occupied.is_empty() {
         let mut h = Table::new(&["JCT <=", "jobs"]).with_title("JCT histogram");
@@ -582,7 +607,12 @@ fn replay_remote(
             std::thread::sleep(std::time::Duration::from_secs_f64(gap));
         }
         last_submit = j.submit_time;
-        batch.push(SubmitRequestV1::new(j.model.name, j.train.global_batch, j.total_samples));
+        let mut req = SubmitRequestV1::new(j.model.name, j.train.global_batch, j.total_samples);
+        // A generated job's tenant rides the submit body's `user` field, so
+        // the server's quotas and per-tenant report see the same principal
+        // the simulator would.
+        req.user = j.tenant.clone();
+        batch.push(req);
     }
     flush(&mut c, &mut batch)?;
     // Wait until every submitted job is terminal. Two filtered list
@@ -691,6 +721,10 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
         crash_backoff_cap_ms: defaults.crash_backoff_cap_ms.min(2_000),
         probation_ms: 2_000,
         fault_plan: faults,
+        tenant_weights: match args.opt("tenant-weights") {
+            None => Vec::new(),
+            Some(s) => parse_tenant_weights(s)?,
+        },
         ..defaults
     };
     if let Some(p) = &cfg.fault_plan {
@@ -713,11 +747,17 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_secs_f64(gap));
         }
         last_submit = j.submit_time;
-        h.submit(SubmitRequest {
-            model: j.model.name.to_string(),
-            global_batch: j.train.global_batch,
-            total_samples: j.total_samples,
-        })?;
+        // Tenant-attributed submit: the job's tenant becomes the quota
+        // principal, exactly like the `user` field on the HTTP path.
+        h.try_submit_as(
+            SubmitRequest {
+                model: j.model.name.to_string(),
+                global_batch: j.train.global_batch,
+                total_samples: j.total_samples,
+            },
+            &j.tenant,
+        )?
+        .map_err(|e| anyhow!(e))?;
     }
     h.drain()?;
     let report = h.report()?;
@@ -742,6 +782,23 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
     println!("{}", t.render());
     h.shutdown();
     Ok(())
+}
+
+/// Parse a `--tenant-weights` spec (`tenant=weight,...`) into the
+/// engine's weighted-fair ordering table. Unlisted tenants weigh 1.0.
+fn parse_tenant_weights(s: &str) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+        let (name, w) = clause
+            .split_once('=')
+            .ok_or_else(|| anyhow!("bad tenant weight '{clause}' (want tenant=weight)"))?;
+        let weight: f64 = w.trim().parse().map_err(|_| anyhow!("bad tenant weight '{w}'"))?;
+        if !weight.is_finite() || weight <= 0.0 {
+            bail!("tenant weight must be finite and > 0, got '{w}'");
+        }
+        out.push((name.trim().to_string(), weight));
+    }
+    Ok(out)
 }
 
 /// Parse a `rate[:burst]` quota spec into token-bucket parameters. The
@@ -821,6 +878,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 crate::faults::FaultPlan::parse(s, cluster.nodes.len(), 3600.0)
                     .map_err(|e| anyhow!(e))?,
             ),
+        },
+        tenant_weights: match args.opt("tenant-weights") {
+            None => defaults.tenant_weights,
+            Some(s) => parse_tenant_weights(s)?,
         },
         ..defaults
     };

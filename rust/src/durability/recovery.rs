@@ -199,6 +199,7 @@ mod tests {
                 model: "gpt2-7b".into(),
                 batch: 1,
                 samples: 10,
+                tenant: String::new(),
             },
         )];
         let got = recover(&mut engine, None, records).unwrap();

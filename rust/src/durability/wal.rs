@@ -61,8 +61,10 @@ pub enum WalRecord {
     /// re-running the (deterministic) scheduler, not by storing decisions.
     Round { time: f64, wall_s: f64 },
     /// A submission MARP rejected at admission: it consumed a job id and
-    /// an audit-log record but never produced an `Arrival`.
-    AdmissionReject { time: f64, job: JobId, model: String, batch: u32, samples: u64 },
+    /// an audit-log record but never produced an `Arrival`. `tenant` is the
+    /// submit's quota principal (empty = anonymous; the field is omitted on
+    /// the wire so pre-tenancy journals replay unchanged).
+    AdmissionReject { time: f64, job: JobId, model: String, batch: u32, samples: u64, tenant: String },
     /// Training losses attached to a completed job (coordinator-local
     /// state the engine never sees).
     Losses { job: JobId, losses: Vec<(u64, f32)> },
@@ -79,13 +81,17 @@ impl WalRecord {
             WalRecord::Round { time, wall_s } => {
                 j.set("kind", "round").set("time", *time).set("wall_s", *wall_s);
             }
-            WalRecord::AdmissionReject { time, job, model, batch, samples } => {
+            WalRecord::AdmissionReject { time, job, model, batch, samples, tenant } => {
                 j.set("kind", "admission_reject")
                     .set("time", *time)
                     .set("job", *job)
                     .set("model", model.as_str())
                     .set("batch", *batch)
                     .set("samples", *samples);
+                // Anonymous rejects keep the pre-tenancy record bytes.
+                if !tenant.is_empty() {
+                    j.set("tenant", tenant.as_str());
+                }
             }
             WalRecord::Losses { job, losses } => {
                 let ls: Vec<Json> = losses
@@ -137,6 +143,8 @@ impl WalRecord {
                     .get("samples")
                     .and_then(Json::as_u64)
                     .ok_or("wal reject: missing 'samples'")?,
+                // Absent on pre-tenancy journals → anonymous.
+                tenant: j.get("tenant").and_then(Json::as_str).unwrap_or("").to_string(),
             },
             "losses" => {
                 let arr = j
@@ -532,6 +540,7 @@ mod tests {
                 model: "gpt2-7b".into(),
                 batch: 2,
                 samples: 100,
+                tenant: "team-a".into(),
             },
             WalRecord::Losses { job: 3, losses: vec![(0, 4.5), (10, f32::NAN)] },
         ];
@@ -545,8 +554,8 @@ mod tests {
         assert!(matches!(&recs[0].1, WalRecord::Event { ev: ClusterEvent::Arrival(s), .. }
             if s.id == 3 && s.submit_time == 0.5));
         assert!(matches!(&recs[1].1, WalRecord::Round { wall_s, .. } if *wall_s == 0.001));
-        assert!(matches!(&recs[2].1, WalRecord::AdmissionReject { model, .. }
-            if model == "gpt2-7b"));
+        assert!(matches!(&recs[2].1, WalRecord::AdmissionReject { model, tenant, .. }
+            if model == "gpt2-7b" && tenant == "team-a"));
         match &recs[3].1 {
             WalRecord::Losses { job: 3, losses } => {
                 assert_eq!(losses[0], (0, 4.5));

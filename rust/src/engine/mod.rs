@@ -323,6 +323,11 @@ pub struct EngineConfig {
     /// Capacity of the [`EventLog`] ring (records retained; sequence
     /// numbers stay monotonic across eviction).
     pub event_log_cap: usize,
+    /// Per-tenant weights for the weighted-fair pending ordering
+    /// (`(tenant, weight)`; unlisted tenants weigh 1.0). The ordering layer
+    /// only engages when the pending queue holds ≥ 2 distinct tenants —
+    /// tenantless runs keep exact FCFS order, bit-for-bit.
+    pub tenant_weights: Vec<(String, f64)>,
 }
 
 impl Default for EngineConfig {
@@ -344,6 +349,7 @@ impl Default for EngineConfig {
             probation_s: 120.0,
             retain_terminal: 16_384,
             event_log_cap: 65_536,
+            tenant_weights: Vec::new(),
         }
     }
 }
@@ -723,6 +729,8 @@ impl<'a> SchedulingEngine<'a> {
                 let submit = *self.submit_times.get(&job).unwrap_or(&0.0);
                 let sps = run.spec.total_samples as f64 / (now - run.first_start).max(1e-9);
                 self.agg.record_completed(submit, run.first_start, now, sps, run.attempts);
+                self.agg.record_tenant_completed(&run.spec.tenant, submit, run.first_start, now);
+                self.charge_tenant_gpu(&run, now);
                 self.events.push(now, EventKind::Finished { job, epoch });
                 self.note_terminal(job);
                 fx.finished.push(job);
@@ -733,6 +741,7 @@ impl<'a> SchedulingEngine<'a> {
                 }
                 let run = self.running.remove(&job).expect("checked above");
                 self.agg.record_run_steps(Self::steps_this_run(&run, now));
+                self.charge_tenant_gpu(&run, now);
                 let _ = self.orch.release(job);
                 self.reap_retired(now);
                 self.agg.record_oom_event();
@@ -804,6 +813,7 @@ impl<'a> SchedulingEngine<'a> {
                         let executed = Self::steps_this_run(&run, now);
                         self.agg.record_run_steps(executed);
                         self.agg.record_steps_lost(executed);
+                        self.charge_tenant_gpu(&run, now);
                         if run.attempts >= self.cfg.max_attempts {
                             self.reject(now, alloc.job, RejectReason::AttemptsExhausted, &mut fx);
                         } else {
@@ -889,6 +899,7 @@ impl<'a> SchedulingEngine<'a> {
             let batch = run.spec.train.global_batch.max(1) as u64;
             let executed = Self::steps_this_run(&run, now);
             self.agg.record_run_steps(executed);
+            self.charge_tenant_gpu(&run, now);
             let steps_total = run.resumed_samples / batch + executed;
             let prior = self.ckpts.get(job).map(|c| c.steps_done).unwrap_or(0);
             let floor = if ckpt_blocked {
@@ -975,6 +986,7 @@ impl<'a> SchedulingEngine<'a> {
         }
         self.agg.record_drained(executed);
         self.agg.record_steps_lost(steps_total.saturating_sub(steps_ckpt));
+        self.charge_tenant_gpu(&run, now);
         let _ = self.orch.release(job);
         self.reap_retired(now);
         self.events
@@ -994,6 +1006,17 @@ impl<'a> SchedulingEngine<'a> {
     /// report's `total_steps_executed` for drained, preempted, OOMed, and
     /// cancelled runs alike, so the excess over the nominal step total is
     /// exactly the re-execution cost of elasticity.
+    /// Charge a released run's GPU-seconds against its tenant's share
+    /// (no-op for anonymous jobs). Called wherever a run gives back its
+    /// allocation — finish, OOM, preemption, drain, crash, cancel — so the
+    /// share reflects consumption, not just successful completions.
+    fn charge_tenant_gpu(&mut self, run: &RunningJob, now: f64) {
+        self.agg.record_tenant_gpu_seconds(
+            &run.spec.tenant,
+            run.gpus as f64 * (now - run.start_time).max(0.0),
+        );
+    }
+
     fn steps_this_run(run: &RunningJob, now: f64) -> u64 {
         let batch = run.spec.train.global_batch.max(1) as u64;
         let elapsed = (now - run.start_time).max(0.0);
@@ -1115,9 +1138,13 @@ impl<'a> SchedulingEngine<'a> {
         }
         let now = clock.now();
         let t0 = std::time::Instant::now();
+        // Weighted-fair tenancy layer: when ≥ 2 tenants are waiting, the
+        // scheduler sees a reordered view of the queue (max-min over
+        // GPU-share); otherwise it sees the queue itself, untouched.
+        let fair = Self::fair_order(&self.pending, &self.running, &self.cfg.tenant_weights);
         let round = {
             let view = self.orch.view();
-            self.sched.schedule(&self.pending, &view, now)
+            self.sched.schedule(fair.as_ref().unwrap_or(&self.pending), &view, now)
         };
         self.sched_wall_s += t0.elapsed().as_secs_f64();
         self.work_units += round.work_units;
@@ -1279,6 +1306,68 @@ impl<'a> SchedulingEngine<'a> {
         }
     }
 
+    /// Weighted max-min fair ordering over tenants. Returns a reordered
+    /// copy of the pending queue, or `None` when fewer than two distinct
+    /// tenants are waiting (anonymous counts as one tenant) — the common
+    /// single-tenant/tenantless case pays nothing and keeps exact FCFS.
+    ///
+    /// The order is built by repeated deficit selection: pick the tenant
+    /// with the lowest `gpu-share ÷ weight` (running GPUs now, plus one
+    /// provisional unit per job already picked this round — job GPU counts
+    /// are unknown before MARP runs), emit its oldest job, repeat. Ties
+    /// break on lexicographic tenant name and FCFS within a tenant, so the
+    /// order is a pure deterministic function of (queue, running set,
+    /// weights) — WAL replay reproduces it exactly and snapshots need no
+    /// new state.
+    fn fair_order(
+        pending: &PendingQueue,
+        running: &HashMap<JobId, RunningJob>,
+        weights: &[(String, f64)],
+    ) -> Option<PendingQueue> {
+        let mut queued: BTreeMap<&str, VecDeque<&PendingJob>> = BTreeMap::new();
+        for pj in pending.iter() {
+            queued.entry(pj.spec.tenant.as_str()).or_default().push_back(pj);
+        }
+        if queued.len() < 2 {
+            return None;
+        }
+        let weight_of = |tenant: &str| -> f64 {
+            weights
+                .iter()
+                .find(|(name, _)| name == tenant)
+                .map(|&(_, w)| w)
+                .filter(|w| w.is_finite() && *w > 0.0)
+                .unwrap_or(1.0)
+        };
+        let mut share: BTreeMap<&str, f64> = queued.keys().map(|&t| (t, 0.0)).collect();
+        for run in running.values() {
+            if let Some(s) = share.get_mut(run.spec.tenant.as_str()) {
+                *s += run.gpus as f64;
+            }
+        }
+        let mut out: Vec<PendingJob> = Vec::with_capacity(pending.len());
+        while !queued.is_empty() {
+            // `min_by` keeps the first minimum; BTreeMap keys iterate in
+            // sorted order, so ties resolve to the lexicographically
+            // smallest tenant.
+            let pick = *queued
+                .keys()
+                .min_by(|a, b| {
+                    let ka = share[*a] / weight_of(a);
+                    let kb = share[*b] / weight_of(b);
+                    ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .expect("non-empty");
+            let deque = queued.get_mut(pick).expect("picked tenant has jobs");
+            out.push(deque.pop_front().expect("non-empty deque").clone());
+            if deque.is_empty() {
+                queued.remove(pick);
+            }
+            *share.get_mut(pick).expect("tenant in share map") += 1.0;
+        }
+        Some(PendingQueue::from(out))
+    }
+
     /// If the cluster is completely idle and the scheduler still can't place
     /// a job, it never will — reject it instead of busy-looping. (A job that
     /// exceeded its attempt budget is also dropped here.) Feasibility is a
@@ -1352,6 +1441,7 @@ impl<'a> SchedulingEngine<'a> {
             return false;
         };
         self.agg.record_run_steps(Self::steps_this_run(&run, now));
+        self.charge_tenant_gpu(&run, now);
         let _ = self.orch.release(id);
         self.reap_retired(now);
         self.agg.record_cancelled();
@@ -1618,6 +1708,16 @@ impl<'a> SchedulingEngine<'a> {
             .set("quarantine_crashes", cfg.quarantine_crashes)
             .set("quarantine_window_s", cfg.quarantine_window_s)
             .set("probation_s", cfg.probation_s);
+        // Fairness weights reorder placement, so a replay under different
+        // weights would diverge. Emitted only when set — snapshots from
+        // weightless (and pre-tenancy) configs keep their exact bytes.
+        if !cfg.tenant_weights.is_empty() {
+            let mut w = Json::obj();
+            for (tenant, weight) in &cfg.tenant_weights {
+                w.set(tenant.as_str(), *weight);
+            }
+            j.set("tenant_weights", w);
+        }
         j
     }
 
@@ -2010,6 +2110,112 @@ mod tests {
             assert!(guard < 100_000, "event loop did not terminate");
         }
         all
+    }
+
+    #[test]
+    fn fair_order_passthrough_without_two_tenants() {
+        let mk = |id: u64, tenant: &str| PendingJob {
+            spec: job(id, "gpt2-125m", 4, 100, 0.0).with_tenant(tenant),
+            attempts: 0,
+        };
+        let running = HashMap::new();
+        // Anonymous-only and single-tenant queues stay untouched (None).
+        let anon: PendingQueue = vec![mk(1, ""), mk(2, "")].into();
+        assert!(SchedulingEngine::fair_order(&anon, &running, &[]).is_none());
+        let single: PendingQueue = vec![mk(1, "a"), mk(2, "a")].into();
+        assert!(SchedulingEngine::fair_order(&single, &running, &[]).is_none());
+    }
+
+    #[test]
+    fn fair_order_interleaves_a_backlogged_tenant() {
+        let mk = |id: u64, tenant: &str| PendingJob {
+            spec: job(id, "gpt2-125m", 4, 100, 0.0).with_tenant(tenant),
+            attempts: 0,
+        };
+        // 10:1 skew: heavy submitted 10 jobs before light's single job.
+        let mut jobs: Vec<PendingJob> = (0..10).map(|i| mk(i, "heavy")).collect();
+        jobs.push(mk(10, "light"));
+        let q: PendingQueue = jobs.into();
+        let fair =
+            SchedulingEngine::fair_order(&q, &HashMap::new(), &[]).expect("two tenants engage");
+        let order: Vec<u64> = fair.iter().map(|p| p.spec.id).collect();
+        // FCFS would place light's job last (position 10); weighted max-min
+        // puts it second (heavy wins the 0-0 tie lexicographically, then
+        // light has the lower share).
+        assert_eq!(order.len(), 11);
+        assert_eq!(order[1], 10, "light tenant must not wait behind the backlog: {order:?}");
+        // FCFS within a tenant is preserved.
+        let heavy: Vec<u64> = order.iter().copied().filter(|&id| id != 10).collect();
+        assert_eq!(heavy, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn fair_order_respects_weights_and_running_share() {
+        let mk = |id: u64, tenant: &str| PendingJob {
+            spec: job(id, "gpt2-125m", 4, 100, 0.0).with_tenant(tenant),
+            attempts: 0,
+        };
+        let jobs: Vec<PendingJob> =
+            (0..6).map(|i| mk(i, if i < 3 { "a" } else { "b" })).collect();
+        let q: PendingQueue = jobs.into();
+        // Weight 2:1 → tenant a takes two of every three slots.
+        let weights = vec![("a".to_string(), 2.0)];
+        let fair = SchedulingEngine::fair_order(&q, &HashMap::new(), &weights).unwrap();
+        let tenants: Vec<&str> =
+            fair.iter().map(|p| p.spec.tenant.as_str()).collect();
+        assert_eq!(tenants, vec!["a", "b", "a", "a", "b", "a"]);
+        // A tenant already holding GPUs starts with that share charged.
+        let mut running = HashMap::new();
+        running.insert(
+            99,
+            RunningJob {
+                spec: job(99, "gpt2-125m", 4, 100, 0.0).with_tenant("a"),
+                first_start: 0.0,
+                gpus: 8,
+                attempts: 1,
+                epoch: 1,
+                start_time: 0.0,
+                sps: 1.0,
+                resumed_samples: 0,
+                draining: None,
+                outcome_at: 100.0,
+                will_oom: false,
+            },
+        );
+        let fair = SchedulingEngine::fair_order(&q, &running, &[]).unwrap();
+        assert_eq!(
+            fair.iter().next().unwrap().spec.tenant,
+            "b",
+            "tenant with running GPUs yields the first slot"
+        );
+    }
+
+    #[test]
+    fn tenant_accounting_reaches_the_report() {
+        let spec = real_testbed();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let mut engine = SchedulingEngine::new(&spec, &mut has, EngineConfig::default());
+        let mut clock = VirtualClock::new();
+        clock.schedule(
+            0.0,
+            ClusterEvent::Arrival(job(1, "gpt2-350m", 8, 10_000, 0.0).with_tenant("team-a")),
+        );
+        clock.schedule(
+            0.0,
+            ClusterEvent::Arrival(job(2, "gpt2-125m", 4, 10_000, 0.0).with_tenant("team-b")),
+        );
+        drive(&mut engine, &mut clock);
+        let tenants = engine.aggregates().tenants();
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants["team-a"].n_completed(), 1);
+        assert!(tenants["team-a"].avg_jct_s() > 0.0);
+        assert!(tenants["team-a"].gpu_seconds > 0.0);
+        assert!(tenants["team-b"].gpu_seconds > 0.0);
+        let report = crate::metrics::RunReport::from_aggregates(
+            "has", "w", engine.aggregates(), 0, 0, 0.0, 0.0,
+        );
+        let shares: f64 = report.tenants.iter().map(|t| t.gpu_share).sum();
+        assert!((shares - 1.0).abs() < 1e-9, "shares sum to 1: {shares}");
     }
 
     #[test]

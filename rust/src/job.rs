@@ -20,6 +20,10 @@ pub struct JobSpec {
     pub total_samples: u64,
     /// Submission time (seconds since simulation / server start).
     pub submit_time: f64,
+    /// Tenant (quota principal) the job belongs to; empty = anonymous.
+    /// Drives the weighted-fair pending ordering and the per-tenant report
+    /// breakdowns.
+    pub tenant: String,
 }
 
 impl JobSpec {
@@ -37,7 +41,14 @@ impl JobSpec {
             train: TrainConfig { global_batch },
             total_samples,
             submit_time,
+            tenant: String::new(),
         }
+    }
+
+    /// Attribute the job to a tenant (builder style; empty = anonymous).
+    pub fn with_tenant(mut self, tenant: &str) -> Self {
+        self.tenant = tenant.to_string();
+        self
     }
 
     /// Serialize for the durability WAL. The model is stored by name —
@@ -51,6 +62,12 @@ impl JobSpec {
             .set("global_batch", self.train.global_batch)
             .set("total_samples", self.total_samples)
             .set("submit_time", self.submit_time);
+        // Emitted only when set: tenantless specs serialize byte-identically
+        // to the pre-tenancy format (snapshot/WAL determinism tests rely on
+        // stable bytes).
+        if !self.tenant.is_empty() {
+            j.set("tenant", self.tenant.as_str());
+        }
         j
     }
 
@@ -83,6 +100,12 @@ impl JobSpec {
                 .get("submit_time")
                 .and_then(Json::as_f64)
                 .ok_or("job spec: missing 'submit_time'")?,
+            // Back-compat: journals written before tenancy carry no tenant.
+            tenant: j
+                .get("tenant")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
         })
     }
 }
@@ -192,5 +215,19 @@ mod tests {
         let mut bad = j.to_json();
         bad.set("model", "not-a-model");
         assert!(JobSpec::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn tenant_roundtrips_and_defaults_empty() {
+        let j = JobSpec::new(7, model_by_name("gpt2-350m").unwrap(), 8, 1000, 0.0)
+            .with_tenant("team-a");
+        let back = JobSpec::from_json(&j.to_json()).expect("roundtrip");
+        assert_eq!(back.tenant, "team-a");
+        assert_eq!(back, j);
+        // Tenantless specs serialize without the field (byte-stable with
+        // pre-tenancy journals) and old records restore to anonymous.
+        let anon = JobSpec::new(1, model_by_name("gpt2-125m").unwrap(), 4, 100, 0.0);
+        assert!(anon.to_json().get("tenant").is_none());
+        assert_eq!(JobSpec::from_json(&anon.to_json()).unwrap().tenant, "");
     }
 }

@@ -30,7 +30,7 @@ use frenzy::marp::Marp;
 use frenzy::sched::{has::Has, opportunistic::Opportunistic, sia::Sia, Scheduler};
 use frenzy::sim::{simulate, SimConfig};
 use frenzy::util::table::{fmt_duration, Table};
-use frenzy::workload::{helios, newworkload, philly, trace};
+use frenzy::workload::trace;
 
 fn main() {
     let args = match Args::from_env() {
@@ -55,6 +55,7 @@ USAGE:
                   [--drain-ms M] [--ckpt-steps K]   (graceful-drain tuning)
                   [--data-dir D] [--fsync always|every:N|interval:S]
                   [--snapshot-every E]   (WAL + snapshots; crash-recoverable)
+                  [--tenant-weights a=2,b=1]   (weighted max-min fair ordering)
   frenzy submit   --model <name> --batch <B> --samples <N> [--addr A]
   frenzy status   <job-id> [--addr A]
   frenzy cancel   <job-id> [--addr A]
@@ -71,17 +72,23 @@ USAGE:
   frenzy predict  --model <name> --batch <B> [--addr A | --cluster real|sim]
   frenzy scale    --join --gpu <type> [--count N] [--link nvlink|pcie] [--addr A]
   frenzy scale    --leave <node> [--addr A]   (graceful drain + checkpoint)
-  frenzy simulate --workload newworkload|philly|helios --tasks <n>
+  frenzy simulate --workload newworkload|philly|helios|synth:<spec> --tasks <n>
                   --sched has|sia|opportunistic [--cluster real|sim] [--seed S]
   frenzy replay   --workload <w> --tasks <n> [--speedup X] [--stub-ms M]
                   [--sched has|sia|opportunistic] [--round-interval S]
-                  [--cluster real|sim] [--seed S]   (trace through the LIVE engine)
+                  [--cluster real|sim] [--seed S]
+                  [--tenant-weights a=2,b=1]   (trace through the LIVE engine)
   frenzy replay   --workload <w> --tasks <n> --addr <host:port>
                   (same trace against a REMOTE frenzy serve over HTTP)
   frenzy train    --model gpt2-tiny [--steps N]
   frenzy fig4 | fig5a | fig5b | fig6 | figures
   frenzy trace    --workload <w> --n <n> --out <file> [--seed S]
   frenzy models | clusters
+
+Workloads: newworkload | philly | helios | a trace file path | synth[:<spec>].
+The synth generator is a seeded open-world workload: e.g.
+  synth:seed=42,jobs=200,arrivals=poisson:0.5,dur=lognormal:6.0:1.4,tenants=8
+(see EXPERIMENTS.md \"Generating a workload\" for the full grammar).
 
 The serverless commands talk to a running `frenzy serve` over the v1 HTTP
 API (documented in API.md)."
@@ -191,12 +198,7 @@ fn dispatch(args: &Args) -> Result<()> {
             let n: usize = args.opt_parse_or("n", 100)?;
             let seed: u64 = args.opt_parse_or("seed", 11)?;
             let out = args.require("out")?;
-            let jobs = match workload {
-                "newworkload" => newworkload::generate(n, seed),
-                "philly" => philly::generate(n, seed),
-                "helios" => helios::generate(n, seed),
-                other => bail!("unknown workload '{other}'"),
-            };
+            let jobs = commands::load_workload(workload, n, seed)?;
             trace::save(out, &jobs)?;
             let stats = frenzy::workload::trace_stats(&jobs);
             println!("wrote {} jobs to {out} (span {})", stats.n_jobs, fmt_duration(stats.span_s));

@@ -13,6 +13,7 @@
 use crate::job::JobOutcome;
 use crate::util::json::Json;
 use crate::util::stats::{Histogram, Running};
+use std::collections::BTreeMap;
 
 /// Number of exponential JCT histogram buckets (1 ms · 2^i bounds); one
 /// overflow bucket is kept on top. The 1 ms floor keeps sub-second runs
@@ -23,6 +24,58 @@ pub const JCT_HIST_BUCKETS: usize = 34;
 
 /// Smallest JCT histogram bound, seconds.
 pub const JCT_HIST_START_S: f64 = 1e-3;
+
+/// Cap on distinct tenant rows in the per-tenant breakdown. A hostile (or
+/// misconfigured) id stream must not grow coordinator memory without bound,
+/// so tenants past the cap fold into the [`TENANT_OVERFLOW`] bucket.
+pub const MAX_TENANT_ROWS: usize = 64;
+
+/// Bucket that absorbs tenants beyond [`MAX_TENANT_ROWS`].
+pub const TENANT_OVERFLOW: &str = "(other)";
+
+/// Streaming per-tenant accounting: JCT/queue Welford accumulators plus a
+/// GPU-seconds integral. Anonymous (empty-tenant) jobs are never recorded
+/// here — a tenantless run keeps the breakdown empty, and the report/JSON
+/// stay byte-identical to the pre-tenancy format.
+#[derive(Debug, Clone)]
+pub struct TenantAgg {
+    jct: Running,
+    queue: Running,
+    /// GPU-seconds consumed across all of this tenant's runs (including
+    /// work later discarded — the share is about consumption, not success).
+    pub gpu_seconds: f64,
+}
+
+impl Default for TenantAgg {
+    fn default() -> Self {
+        Self { jct: Running::new(), queue: Running::new(), gpu_seconds: 0.0 }
+    }
+}
+
+impl TenantAgg {
+    /// Jobs this tenant completed.
+    pub fn n_completed(&self) -> u64 {
+        self.jct.count()
+    }
+
+    /// Mean JCT in seconds (0 when nothing completed — report-friendly).
+    pub fn avg_jct_s(&self) -> f64 {
+        if self.jct.count() == 0 {
+            0.0
+        } else {
+            self.jct.mean()
+        }
+    }
+
+    /// Mean queue delay in seconds (0 when nothing completed).
+    pub fn avg_queue_s(&self) -> f64 {
+        if self.queue.count() == 0 {
+            0.0
+        } else {
+            self.queue.mean()
+        }
+    }
+}
 
 /// Streaming aggregates of one scheduling run (simulated or live).
 ///
@@ -71,6 +124,9 @@ pub struct RunAggregates {
     /// Memory prediction accuracy samples: `1 − |predicted − observed| /
     /// observed` per dispatch (the paper's §V.C metric, >92% expected).
     mem_pred: Running,
+    /// Per-tenant breakdown (bounded at [`MAX_TENANT_ROWS`]); empty unless
+    /// jobs carried tenant ids.
+    tenants: BTreeMap<String, TenantAgg>,
 }
 
 impl Default for RunAggregates {
@@ -99,6 +155,7 @@ impl RunAggregates {
             oom_retries: 0,
             steps_executed: 0,
             mem_pred: Running::new(),
+            tenants: BTreeMap::new(),
         }
     }
 
@@ -186,6 +243,50 @@ impl RunAggregates {
             self.steps_executed.saturating_sub(self.steps_lost) as f64
                 / self.steps_executed as f64
         }
+    }
+
+    /// The tenant's accumulator row, folding past-cap tenants into the
+    /// [`TENANT_OVERFLOW`] bucket. Callers must skip anonymous jobs.
+    fn tenant_entry(&mut self, tenant: &str) -> &mut TenantAgg {
+        let key = if self.tenants.contains_key(tenant) || self.tenants.len() < MAX_TENANT_ROWS {
+            tenant
+        } else {
+            TENANT_OVERFLOW
+        };
+        self.tenants.entry(key.to_string()).or_default()
+    }
+
+    /// Fold one completed job into its tenant's breakdown row. Anonymous
+    /// jobs (empty tenant) are skipped — the breakdown stays empty and the
+    /// report keeps its pre-tenancy shape.
+    pub fn record_tenant_completed(
+        &mut self,
+        tenant: &str,
+        submit_time: f64,
+        start_time: f64,
+        finish_time: f64,
+    ) {
+        if tenant.is_empty() {
+            return;
+        }
+        let row = self.tenant_entry(tenant);
+        row.jct.push(finish_time - submit_time);
+        row.queue.push(start_time - submit_time);
+    }
+
+    /// Charge GPU-seconds a (possibly unfinished) run consumed against its
+    /// tenant's share. Called whenever a run releases its allocation, so
+    /// preempted/crashed work counts toward consumption.
+    pub fn record_tenant_gpu_seconds(&mut self, tenant: &str, gpu_seconds: f64) {
+        if tenant.is_empty() || gpu_seconds <= 0.0 {
+            return;
+        }
+        self.tenant_entry(tenant).gpu_seconds += gpu_seconds;
+    }
+
+    /// The per-tenant breakdown (empty for tenantless runs).
+    pub fn tenants(&self) -> &BTreeMap<String, TenantAgg> {
+        &self.tenants
     }
 
     /// Fold one dispatch's predicted-vs-observed peak-memory pair into the
@@ -313,6 +414,19 @@ impl RunAggregates {
             .set("oom_retries", self.oom_retries)
             .set("steps_executed", self.steps_executed)
             .set("jct_hist_counts", self.jct_hist.counts().to_vec());
+        // Emitted only when jobs carried tenants: tenantless aggregates
+        // serialize byte-identically to pre-tenancy snapshots.
+        if !self.tenants.is_empty() {
+            let mut t = Json::obj();
+            for (name, row) in &self.tenants {
+                let mut r = Json::obj();
+                r.set("jct", running_to_json(&row.jct))
+                    .set("queue", running_to_json(&row.queue))
+                    .set("gpu_seconds", row.gpu_seconds);
+                t.set(name.as_str(), r);
+            }
+            j.set("tenants", t);
+        }
         j
     }
 
@@ -349,6 +463,24 @@ impl RunAggregates {
             return Err(format!("histogram shape mismatch: {} buckets", counts.len()));
         }
         agg.jct_hist.restore_counts(counts);
+        // Absent on pre-tenancy snapshots → empty breakdown.
+        if let Some(tenants) = j.get("tenants") {
+            let obj = tenants.as_obj().ok_or("bad field 'tenants'")?;
+            for (name, row) in obj {
+                agg.tenants.insert(
+                    name.clone(),
+                    TenantAgg {
+                        jct: running_from_json(
+                            row.get("jct").ok_or("tenant row: missing 'jct'")?,
+                        )?,
+                        queue: running_from_json(
+                            row.get("queue").ok_or("tenant row: missing 'queue'")?,
+                        )?,
+                        gpu_seconds: req_f64(row, "gpu_seconds")?,
+                    },
+                );
+            }
+        }
         Ok(agg)
     }
 }
@@ -397,6 +529,22 @@ fn running_from_json(j: &Json) -> Result<Running, String> {
         (req_f64(j, "min")?, req_f64(j, "max")?)
     };
     Ok(Running::from_parts(n, mean, m2, min, max, sum))
+}
+
+/// One tenant's row in a report's fairness breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantBreakdown {
+    pub tenant: String,
+    pub n_completed: u64,
+    pub avg_jct_s: f64,
+    /// Mean queue delay (submission → first start), seconds.
+    pub avg_queue_s: f64,
+    /// GPU-seconds consumed across the tenant's runs (including discarded
+    /// work — consumption, not success).
+    pub gpu_seconds: f64,
+    /// Fraction of all tenant-attributed GPU-seconds, in [0, 1]. The
+    /// weighted-fair ordering claim is checked against this number.
+    pub gpu_share: f64,
 }
 
 /// Aggregated results of one scheduling run (simulated or live) — a
@@ -464,6 +612,9 @@ pub struct RunReport {
     /// Submits refused by per-user/global quota token buckets (429) since
     /// boot. Disjoint from `n_throttled_backpressure`.
     pub n_throttled_quota: u64,
+    /// Per-tenant fairness breakdown, sorted by tenant name; empty when no
+    /// job carried a tenant id (pre-tenancy reports keep their exact shape).
+    pub tenants: Vec<TenantBreakdown>,
 }
 
 impl RunReport {
@@ -481,6 +632,23 @@ impl RunReport {
         avg_utilization: f64,
     ) -> RunReport {
         let n_rejected = agg.n_rejected + extra_rejected;
+        let tenant_gpu_total: f64 = agg.tenants().values().map(|t| t.gpu_seconds).sum();
+        let tenants: Vec<TenantBreakdown> = agg
+            .tenants()
+            .iter()
+            .map(|(name, row)| TenantBreakdown {
+                tenant: name.clone(),
+                n_completed: row.n_completed(),
+                avg_jct_s: row.avg_jct_s(),
+                avg_queue_s: row.avg_queue_s(),
+                gpu_seconds: row.gpu_seconds,
+                gpu_share: if tenant_gpu_total > 0.0 {
+                    row.gpu_seconds / tenant_gpu_total
+                } else {
+                    0.0
+                },
+            })
+            .collect();
         let mut jct_hist = Vec::with_capacity(JCT_HIST_BUCKETS);
         let mut overflow = 0u64;
         for (bound, count) in agg.jct_histogram().buckets() {
@@ -530,6 +698,7 @@ impl RunReport {
             // aggregates; the live coordinator overlays its counters.
             n_throttled_backpressure: 0,
             n_throttled_quota: 0,
+            tenants,
         }
     }
 
@@ -605,6 +774,24 @@ impl RunReport {
             .collect();
         j.set("jct_hist", Json::Arr(hist));
         j.set("jct_hist_overflow", self.jct_hist_overflow);
+        // Tenantless reports keep the exact pre-tenancy JSON shape.
+        if !self.tenants.is_empty() {
+            let rows: Vec<Json> = self
+                .tenants
+                .iter()
+                .map(|t| {
+                    let mut r = Json::obj();
+                    r.set("tenant", t.tenant.as_str())
+                        .set("n_completed", t.n_completed)
+                        .set("avg_jct_s", t.avg_jct_s)
+                        .set("avg_queue_s", t.avg_queue_s)
+                        .set("gpu_seconds", t.gpu_seconds)
+                        .set("gpu_share", t.gpu_share);
+                    r
+                })
+                .collect();
+            j.set("tenants", Json::Arr(rows));
+        }
         j
     }
 
@@ -840,6 +1027,57 @@ mod tests {
             .expect("legacy snapshot restores");
         assert_eq!(back.n_node_crashes, 0);
         assert_eq!(back.steps_lost, 0);
+    }
+
+    #[test]
+    fn tenant_breakdown_aggregates_and_shares() {
+        let mut agg = RunAggregates::new();
+        agg.record_completed(0.0, 10.0, 110.0, 5.0, 1);
+        agg.record_tenant_completed("a", 0.0, 10.0, 110.0);
+        agg.record_tenant_gpu_seconds("a", 300.0);
+        agg.record_completed(0.0, 20.0, 60.0, 5.0, 1);
+        agg.record_tenant_completed("b", 0.0, 20.0, 60.0);
+        agg.record_tenant_gpu_seconds("b", 100.0);
+        // Anonymous work never lands in the breakdown.
+        agg.record_tenant_completed("", 0.0, 0.0, 1.0);
+        agg.record_tenant_gpu_seconds("", 50.0);
+        let r = RunReport::from_aggregates("s", "w", &agg, 0, 0, 0.0, 0.0);
+        assert_eq!(r.tenants.len(), 2);
+        let a = &r.tenants[0];
+        assert_eq!(a.tenant, "a");
+        assert_eq!(a.n_completed, 1);
+        assert!((a.avg_jct_s - 110.0).abs() < 1e-9);
+        assert!((a.avg_queue_s - 10.0).abs() < 1e-9);
+        assert!((a.gpu_share - 0.75).abs() < 1e-12);
+        assert!((r.tenants[1].gpu_share - 0.25).abs() < 1e-12);
+        assert!(r.to_json().get("tenants").is_some());
+        // Tenantless reports keep the pre-tenancy JSON shape exactly.
+        let plain = RunReport::from_aggregates("s", "w", &RunAggregates::new(), 0, 0, 0.0, 0.0);
+        assert!(plain.to_json().get("tenants").is_none());
+    }
+
+    #[test]
+    fn tenant_rows_are_bounded_and_snapshot_roundtrips() {
+        let mut agg = RunAggregates::new();
+        for i in 0..(MAX_TENANT_ROWS + 10) {
+            let t = format!("tenant-{i:03}");
+            agg.record_tenant_completed(&t, 0.0, 1.0, 2.0);
+            agg.record_tenant_gpu_seconds(&t, 1.0);
+        }
+        assert_eq!(agg.tenants().len(), MAX_TENANT_ROWS + 1, "cap + overflow bucket");
+        let overflow = &agg.tenants()[TENANT_OVERFLOW];
+        assert_eq!(overflow.n_completed(), 10);
+        // A known tenant keeps accumulating into its own row past the cap.
+        agg.record_tenant_gpu_seconds("tenant-000", 5.0);
+        assert!((agg.tenants()["tenant-000"].gpu_seconds - 6.0).abs() < 1e-12);
+        // Snapshot codec round-trips the breakdown bit-exactly.
+        let back = RunAggregates::from_json(&parse_back(&agg.to_json())).unwrap();
+        let a = RunReport::from_aggregates("s", "w", &agg, 0, 0, 0.0, 0.0);
+        let b = RunReport::from_aggregates("s", "w", &back, 0, 0, 0.0, 0.0);
+        assert_eq!(a.to_json().to_string_compact(), b.to_json().to_string_compact());
+        // Pre-tenancy snapshots (no 'tenants' field) restore empty.
+        let legacy = RunAggregates::from_json(&parse_back(&RunAggregates::new().to_json()));
+        assert!(legacy.unwrap().tenants().is_empty());
     }
 
     #[test]

@@ -26,11 +26,20 @@ pub struct Opportunistic {
     /// Largest GPU memory in the cluster — what users size their guess to.
     max_gpu_mem: u64,
     max_tp: u32,
+    /// Use the capacity index for the nothing-idle early exit and compute
+    /// the fastest-first node order once per round instead of once per job
+    /// (default). `false` selects the reference per-job sort, kept as the
+    /// differential-test oracle (`benches/bench_sched.rs`).
+    pub indexed: bool,
 }
 
 impl Opportunistic {
     pub fn new(spec: &ClusterSpec) -> Self {
-        Self { max_gpu_mem: spec.max_gpu_mem(), max_tp: spec.max_gpus_per_node().max(1) }
+        Self {
+            max_gpu_mem: spec.max_gpu_mem(),
+            max_tp: spec.max_gpus_per_node().max(1),
+            indexed: true,
+        }
     }
 
     /// The user's GPU request for a job at retry `attempts`.
@@ -90,11 +99,35 @@ impl Scheduler for Opportunistic {
         _now: f64,
     ) -> SchedRound {
         // Memory-oblivious fastest-first is a full-scan policy by design;
-        // it reads the raw state (the capacity index orders by memory
-        // class, which this baseline deliberately ignores).
+        // placement reads the raw state (the capacity index orders by
+        // memory class, which this baseline deliberately ignores). The
+        // index still answers one question cheaply: is anything idle at
+        // all? When not, every job's candidate list is empty — charge the
+        // same abstract work the scans would have and skip them.
         let snapshot = view.state();
         let mut round = SchedRound::default();
+        if self.indexed && view.idle_gpus_with_mem(0) == 0 {
+            for job in pending.iter() {
+                if self.user_request(&job.spec, job.attempts).is_some() {
+                    round.work_units += 1;
+                }
+            }
+            return round;
+        }
         let mut idle: Vec<u32> = snapshot.nodes.iter().map(|n| n.idle).collect();
+        // Fastest-first order over the whole topology, computed once per
+        // round: the per-job candidate list is this order filtered by
+        // remaining idle, so re-sorting per job (the reference path below)
+        // only repeats work.
+        let full_order: Option<Vec<usize>> = self.indexed.then(|| {
+            let mut v: Vec<usize> = (0..snapshot.nodes.len()).collect();
+            v.sort_by(|&a, &b| {
+                let na = &snapshot.nodes[a];
+                let nb = &snapshot.nodes[b];
+                nb.gpu.peak_tflops.partial_cmp(&na.gpu.peak_tflops).unwrap().then(a.cmp(&b))
+            });
+            v
+        });
 
         for job in pending.iter() {
             let Some(par) = self.user_request(&job.spec, job.attempts) else {
@@ -108,14 +141,28 @@ impl Scheduler for Opportunistic {
             // warns about, while HAS's best-fit keeps jobs on single nodes.
             // Draining nodes are excluded: even a memory-oblivious user's
             // scheduler refuses to land new work on retiring hardware.
-            let mut order: Vec<usize> = (0..snapshot.nodes.len())
-                .filter(|&i| idle[i] > 0 && !view.is_draining(i))
-                .collect();
-            order.sort_by(|&a, &b| {
-                let na = &snapshot.nodes[a];
-                let nb = &snapshot.nodes[b];
-                nb.gpu.peak_tflops.partial_cmp(&na.gpu.peak_tflops).unwrap().then(a.cmp(&b))
-            });
+            let order: Vec<usize> = match &full_order {
+                Some(fo) => fo
+                    .iter()
+                    .copied()
+                    .filter(|&i| idle[i] > 0 && !view.is_draining(i))
+                    .collect(),
+                None => {
+                    let mut order: Vec<usize> = (0..snapshot.nodes.len())
+                        .filter(|&i| idle[i] > 0 && !view.is_draining(i))
+                        .collect();
+                    order.sort_by(|&a, &b| {
+                        let na = &snapshot.nodes[a];
+                        let nb = &snapshot.nodes[b];
+                        nb.gpu
+                            .peak_tflops
+                            .partial_cmp(&na.gpu.peak_tflops)
+                            .unwrap()
+                            .then(a.cmp(&b))
+                    });
+                    order
+                }
+            };
             round.work_units += order.len() as u64 + 1;
 
             let mut parts: Vec<(usize, u32)> = Vec::new();
@@ -279,5 +326,42 @@ mod tests {
         let view = ClusterView::build(&snap);
         let round = o.schedule(&q(vec![pending(1, "gpt2-350m", 4)]), &view, 0.0);
         assert!(round.decisions.is_empty());
+    }
+
+    /// The once-per-round fastest-first order and the index-served empty
+    /// early exit must not change a single decision or work unit relative
+    /// to the reference per-job sort — including on a drained, partially
+    /// used cluster and on a fully busy one.
+    #[test]
+    fn indexed_order_matches_the_reference_sort() {
+        let fp = |r: &SchedRound| -> Vec<(u64, Vec<(usize, u32)>, u32, u32)> {
+            r.decisions
+                .iter()
+                .map(|d| (d.job, d.alloc.parts.clone(), d.par.d, d.par.t))
+                .collect()
+        };
+        for busy in [false, true] {
+            for spec in [sia_sim(), real_testbed()] {
+                let mut snap = ClusterState::from_spec(&spec);
+                snap.nodes[0].idle = 0;
+                if busy {
+                    for n in &mut snap.nodes {
+                        n.idle = 0;
+                    }
+                }
+                let view =
+                    ClusterView::build(&snap).with_draining([1].into_iter().collect());
+                let jobs: Vec<PendingJob> = (0..5)
+                    .map(|i| pending(i, ["gpt2-125m", "gpt2-350m"][i as usize % 2], 4))
+                    .collect();
+                let mut indexed = Opportunistic::new(&spec);
+                let mut naive = Opportunistic::new(&spec);
+                naive.indexed = false;
+                let ri = indexed.schedule(&q(jobs.clone()), &view, 0.0);
+                let rn = naive.schedule(&q(jobs), &view, 0.0);
+                assert_eq!(ri.work_units, rn.work_units, "{} busy={busy}", spec.name);
+                assert_eq!(fp(&ri), fp(&rn), "{} busy={busy}", spec.name);
+            }
+        }
     }
 }

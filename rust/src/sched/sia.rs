@@ -39,6 +39,14 @@ pub struct Sia {
     pm: PerfModel,
     /// Distinct GPU types (by name) with their spec — the ILP dimensions.
     type_names: Vec<&'static str>,
+    /// GPU memory size of each entry in `type_names` (parallel vector) —
+    /// the bridge from type names to the capacity index's size classes.
+    type_mems: Vec<u64>,
+    /// True when memory size identifies the GPU type uniquely in the
+    /// current topology, so per-type idle totals can be served from the
+    /// index's per-class aggregates. Two types sharing a size (A100-80G
+    /// vs A800-80G) force the reference scan regardless of `indexed`.
+    mem_identifies_type: bool,
     /// Node-limit safeguard for the B&B solver.
     pub node_limit: u64,
     /// Cap on data-parallel width per config.
@@ -46,19 +54,42 @@ pub struct Sia {
     /// Sia re-solves on a fixed cadence (the Sia paper uses 30–60 s rounds;
     /// re-solving per event would be prohibitive — that's Fig 5a).
     pub round_interval: f64,
+    /// Serve per-type idle totals from the capacity index (default).
+    /// `false` selects the reference O(nodes) scan, kept as the
+    /// differential-test oracle (`benches/bench_sched.rs`).
+    pub indexed: bool,
+}
+
+/// Distinct `(name, mem)` GPU types, name-sorted, plus whether memory size
+/// alone identifies the type (no two names share a size).
+fn type_table(
+    gpus: impl Iterator<Item = (&'static str, u64)>,
+) -> (Vec<&'static str>, Vec<u64>, bool) {
+    let mut pairs: Vec<(&'static str, u64)> = gpus.collect();
+    pairs.sort_unstable();
+    pairs.dedup();
+    let names: Vec<&'static str> = pairs.iter().map(|p| p.0).collect();
+    let mems: Vec<u64> = pairs.iter().map(|p| p.1).collect();
+    let mut distinct = mems.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    let unambiguous = distinct.len() == mems.len();
+    (names, mems, unambiguous)
 }
 
 impl Sia {
     pub fn new(spec: &ClusterSpec) -> Self {
-        let mut type_names: Vec<&'static str> = spec.nodes.iter().map(|n| n.gpu.name).collect();
-        type_names.sort_unstable();
-        type_names.dedup();
+        let (type_names, type_mems, mem_identifies_type) =
+            type_table(spec.nodes.iter().map(|n| (n.gpu.name, n.gpu.mem_bytes)));
         Self {
             pm: PerfModel::new(spec.inter_node_gbps),
             type_names,
+            type_mems,
+            mem_identifies_type,
             node_limit: 20_000_000,
             max_gpus_per_job: 16,
             round_interval: 30.0,
+            indexed: true,
         }
     }
 
@@ -203,11 +234,11 @@ impl Scheduler for Sia {
 
     /// Elasticity: the ILP's GPU-type dimensions come from the topology.
     fn cluster_changed(&mut self, state: &ClusterState) {
-        let mut type_names: Vec<&'static str> =
-            state.active_nodes().map(|n| n.gpu.name).collect();
-        type_names.sort_unstable();
-        type_names.dedup();
+        let (type_names, type_mems, mem_identifies_type) =
+            type_table(state.active_nodes().map(|n| (n.gpu.name, n.gpu.mem_bytes)));
         self.type_names = type_names;
+        self.type_mems = type_mems;
+        self.mem_identifies_type = mem_identifies_type;
     }
 
     fn schedule(
@@ -216,9 +247,6 @@ impl Scheduler for Sia {
         view: &ClusterView<'_>,
         _now: f64,
     ) -> SchedRound {
-        // Sia re-solves over the whole queue; its candidate enumeration is
-        // inherently O(nodes) per round (that is the baseline's point — see
-        // Fig 5a), so it reads the raw state rather than the index.
         let snapshot = view.state();
         let pending: Vec<&PendingJob> = pending.iter().collect();
         let mut round = SchedRound::default();
@@ -233,19 +261,42 @@ impl Scheduler for Sia {
             .iter()
             .map(|n| if view.is_draining(n.id) { 0 } else { n.idle })
             .collect();
-        // Per-type idle capacity.
-        let idle_per_type: Vec<u32> = self
-            .type_names
-            .iter()
-            .map(|t| {
-                snapshot
-                    .nodes
-                    .iter()
-                    .filter(|n| n.gpu.name == *t)
-                    .map(|n| idle_mask[n.id])
-                    .sum::<u32>()
-            })
-            .collect();
+        // Per-type idle capacity. When memory size identifies the type, the
+        // totals come from the index's per-class suffix sums — O(T log S +
+        // draining) instead of the reference O(T × nodes) scan. The ILP
+        // re-solve itself stays superlinear by design (Fig 5a); this only
+        // stops the *bookkeeping* from scaling with cluster size.
+        let idle_per_type: Vec<u32> = if self.indexed && self.mem_identifies_type {
+            let index = view.index();
+            self.type_mems
+                .iter()
+                .map(|&mem| {
+                    let c = index.class_for(mem);
+                    if c >= index.n_classes() || index.class_size(c) != mem {
+                        return 0; // no node of this type in the indexed state
+                    }
+                    let mut idle = index.idle_suffix(c) - index.idle_suffix(c + 1);
+                    for &n in view.draining().iter() {
+                        if snapshot.nodes[n].gpu.mem_bytes == mem {
+                            idle = idle.saturating_sub(snapshot.nodes[n].idle);
+                        }
+                    }
+                    idle
+                })
+                .collect()
+        } else {
+            self.type_names
+                .iter()
+                .map(|t| {
+                    snapshot
+                        .nodes
+                        .iter()
+                        .filter(|n| n.gpu.name == *t)
+                        .map(|n| idle_mask[n.id])
+                        .sum::<u32>()
+                })
+                .collect()
+        };
 
         // Build the ILP.
         let mut cands: Vec<Candidate> = Vec::new();
@@ -418,6 +469,44 @@ mod tests {
         let w16 = run(16);
         // superlinear: 4x jobs → much more than 4x nodes
         assert!(w16 > 8 * w4, "w4={w4} w16={w16}");
+    }
+
+    /// Index-served and scan-served per-type idle totals must yield the
+    /// same decisions and work units — on a topology where memory size
+    /// identifies the type (sia_sim: 11/24/40 GB) *and* on one where it
+    /// does not (real_testbed: A100-80G vs A800-80G both 80 GB, which
+    /// forces the indexed path to fall back to the scan).
+    #[test]
+    fn indexed_idle_totals_match_the_reference_scan() {
+        for spec in [sia_sim(), real_testbed()] {
+            let snap = ClusterState::from_spec(&spec);
+            // Partially used + one draining node, so the totals are
+            // non-trivial in every class.
+            let mut snap = snap;
+            snap.nodes[0].idle = snap.nodes[0].idle.saturating_sub(1);
+            let view = ClusterView::build(&snap).with_draining([1].into_iter().collect());
+            let jobs: Vec<PendingJob> = (0..4)
+                .map(|i| pending(i, ["gpt2-125m", "gpt2-350m"][i as usize % 2], 4))
+                .collect();
+            let mut indexed = Sia::new(&spec);
+            let mut naive = Sia::new(&spec);
+            naive.indexed = false;
+            let ri = indexed.schedule(&q(jobs.clone()), &view, 0.0);
+            let rn = naive.schedule(&q(jobs), &view, 0.0);
+            assert_eq!(ri.work_units, rn.work_units, "{}", spec.name);
+            let fp = |r: &SchedRound| -> Vec<(u64, Vec<(usize, u32)>, u32, u32)> {
+                r.decisions
+                    .iter()
+                    .map(|d| (d.job, d.alloc.parts.clone(), d.par.d, d.par.t))
+                    .collect()
+            };
+            assert_eq!(fp(&ri), fp(&rn), "{}", spec.name);
+        }
+        assert!(Sia::new(&sia_sim()).mem_identifies_type, "sia_sim must exercise the index path");
+        assert!(
+            !Sia::new(&real_testbed()).mem_identifies_type,
+            "real_testbed must exercise the ambiguity fallback"
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::config::LinkKind;
 use crate::engine::{EventKind, EventRecord, EventsPage, RejectReason};
 use crate::job::JobState;
 use crate::marp::ResourcePlan;
-use crate::metrics::RunReport;
+use crate::metrics::{RunReport, TenantBreakdown};
 use crate::serverless::{GpuTypeInfo, JobStatus, ListPage, PredictReport, ScaleReport};
 use crate::util::json::Json;
 
@@ -295,6 +295,9 @@ pub struct JobStatusV1 {
     pub losses: Vec<(u64, f64)>,
     pub submit_time: f64,
     pub finish_time: Option<f64>,
+    /// Tenant (the submit's quota principal); empty = anonymous. Omitted
+    /// from the wire when empty, so pre-tenancy clients see no new field.
+    pub tenant: String,
 }
 
 impl JobStatusV1 {
@@ -307,6 +310,7 @@ impl JobStatusV1 {
             losses: st.losses.iter().map(|&(s, l)| (s, l as f64)).collect(),
             submit_time: st.submit_time,
             finish_time: st.finish_time,
+            tenant: st.tenant.clone(),
         }
     }
 
@@ -334,6 +338,9 @@ impl JobStatusV1 {
             })
             .collect();
         j.set("losses", Json::Arr(losses));
+        if !self.tenant.is_empty() {
+            j.set("tenant", self.tenant.as_str());
+        }
         j
     }
 
@@ -359,6 +366,7 @@ impl JobStatusV1 {
             losses,
             submit_time: j.get("submit_time").and_then(Json::as_f64).unwrap_or(0.0),
             finish_time: j.get("finish_time").and_then(Json::as_f64),
+            tenant: j.get("tenant").and_then(Json::as_str).unwrap_or("").to_string(),
         })
     }
 }
@@ -1524,6 +1532,9 @@ pub struct ReportV1 {
     pub n_throttled_backpressure: u64,
     /// Submits refused 429 by quota token buckets since boot.
     pub n_throttled_quota: u64,
+    /// Per-tenant fairness breakdown; empty (and omitted from the wire)
+    /// when no job carried a tenant id.
+    pub tenants: Vec<TenantBreakdown>,
 }
 
 /// JSON cannot carry NaN/inf: empty-run means are serialized as 0.
@@ -1571,6 +1582,7 @@ impl ReportV1 {
             avg_utilization: finite(r.avg_utilization),
             n_throttled_backpressure: r.n_throttled_backpressure,
             n_throttled_quota: r.n_throttled_quota,
+            tenants: r.tenants.clone(),
         }
     }
 
@@ -1612,6 +1624,7 @@ impl ReportV1 {
             avg_utilization: self.avg_utilization,
             n_throttled_backpressure: self.n_throttled_backpressure,
             n_throttled_quota: self.n_throttled_quota,
+            tenants: self.tenants.clone(),
         }
         .to_json()
     }
@@ -1630,6 +1643,22 @@ impl ReportV1 {
             let le = b.get("le_s").and_then(Json::as_f64).ok_or("bucket missing 'le_s'")?;
             let count = b.get("count").and_then(Json::as_u64).ok_or("bucket missing 'count'")?;
             jct_hist.push((le, count));
+        }
+        // Absent on pre-tenancy reports → empty breakdown.
+        let mut tenants = Vec::new();
+        for row in j.get("tenants").and_then(Json::as_arr).unwrap_or(&[]) {
+            tenants.push(TenantBreakdown {
+                tenant: row
+                    .get("tenant")
+                    .and_then(Json::as_str)
+                    .ok_or("tenant row missing 'tenant'")?
+                    .to_string(),
+                n_completed: row.get("n_completed").and_then(Json::as_u64).unwrap_or(0),
+                avg_jct_s: row.get("avg_jct_s").and_then(Json::as_f64).unwrap_or(0.0),
+                avg_queue_s: row.get("avg_queue_s").and_then(Json::as_f64).unwrap_or(0.0),
+                gpu_seconds: row.get("gpu_seconds").and_then(Json::as_f64).unwrap_or(0.0),
+                gpu_share: row.get("gpu_share").and_then(Json::as_f64).unwrap_or(0.0),
+            });
         }
         Ok(Self {
             scheduler: req_str("scheduler")?,
@@ -1665,6 +1694,7 @@ impl ReportV1 {
             avg_utilization: num("avg_utilization"),
             n_throttled_backpressure: int("n_throttled_backpressure"),
             n_throttled_quota: int("n_throttled_quota"),
+            tenants,
         })
     }
 }
@@ -1739,6 +1769,7 @@ mod tests {
                     .collect(),
                 submit_time: g.f64_in(0.0, 1e6),
                 finish_time: if g.bool() { Some(g.f64_in(0.0, 1e6)) } else { None },
+                tenant: if g.bool() { "team-a".to_string() } else { String::new() },
             };
             roundtrip(&v, JobStatusV1::to_json, JobStatusV1::from_json);
             Ok(())
@@ -2058,6 +2089,16 @@ mod tests {
                 avg_utilization: g.f64_in(0.0, 1.0),
                 n_throttled_backpressure: g.u64_in(0, 10_000),
                 n_throttled_quota: g.u64_in(0, 10_000),
+                tenants: (0..g.usize_in(0, 3))
+                    .map(|i| TenantBreakdown {
+                        tenant: format!("t{i}"),
+                        n_completed: g.u64_in(0, 100),
+                        avg_jct_s: g.f64_in(0.0, 1e5),
+                        avg_queue_s: g.f64_in(0.0, 1e4),
+                        gpu_seconds: g.f64_in(0.0, 1e7),
+                        gpu_share: g.f64_in(0.0, 1.0),
+                    })
+                    .collect(),
             };
             roundtrip(&v, ReportV1::to_json, ReportV1::from_json);
             Ok(())

@@ -169,6 +169,8 @@ pub struct JobStatus {
     pub losses: Vec<(u64, f32)>,
     pub submit_time: f64,
     pub finish_time: Option<f64>,
+    /// Tenant (the submit's quota principal); empty = anonymous.
+    pub tenant: String,
 }
 
 /// Result of a cancel request.
@@ -537,6 +539,7 @@ impl LiveJob {
             losses: self.losses.clone(),
             submit_time: self.submit_t,
             finish_time: self.finish_t,
+            tenant: self.spec.tenant.clone(),
         }
     }
 }
@@ -667,6 +670,11 @@ pub struct CoordinatorConfig {
     /// measured in seconds from coordinator start, through the same path
     /// organic failures take (journaled, logged, recoverable).
     pub fault_plan: Option<crate::faults::FaultPlan>,
+    /// Weighted-fair tenant ordering (`frenzy serve --tenant-weights`):
+    /// `(tenant, weight)` pairs handed to the engine's per-round
+    /// weighted max-min reorder. Unlisted tenants weigh 1.0; the empty
+    /// default still fair-orders equally whenever two tenants queue.
+    pub tenant_weights: Vec<(String, f64)>,
 }
 
 impl Default for CoordinatorConfig {
@@ -700,6 +708,7 @@ impl Default for CoordinatorConfig {
             quarantine_window_ms: 300_000,
             probation_ms: 120_000,
             fault_plan: None,
+            tenant_weights: Vec::new(),
         }
     }
 }
@@ -1072,7 +1081,7 @@ fn fold_tail_step(
             let fx = step.effects.as_ref().ok_or("recovery: round step without effects")?;
             apply_effects(fx, jobs, retention, *time);
         }
-        WalRecord::AdmissionReject { time, job, model, batch, samples } => {
+        WalRecord::AdmissionReject { time, job, model, batch, samples, tenant } => {
             let model_cfg = crate::config::models::model_by_name(model)
                 .ok_or_else(|| format!("recovery: unknown model '{model}'"))?;
             *next_id = (*next_id).max(*job + 1);
@@ -1080,7 +1089,8 @@ fn fold_tail_step(
             jobs.insert(
                 *job,
                 LiveJob {
-                    spec: JobSpec::new(*job, model_cfg, *batch, *samples, *time),
+                    spec: JobSpec::new(*job, model_cfg, *batch, *samples, *time)
+                        .with_tenant(tenant),
                     state: JobState::Rejected,
                     gpus: 0,
                     losses: Vec::new(),
@@ -1127,7 +1137,10 @@ fn submit_one(
     // identity holds) and costs one pending-depth read plus two bucket
     // refills on the coordinator.
     admission.admit(&adm.user, engine.pending_count(), clock)?;
-    let spec_job = JobSpec::new(*next_id, adm.model, adm.global_batch, adm.total_samples, clock);
+    // The quota principal doubles as the job's tenant id: it rides the spec
+    // into the WAL, snapshots, and the engine's fairness/report paths.
+    let spec_job = JobSpec::new(*next_id, adm.model, adm.global_batch, adm.total_samples, clock)
+        .with_tenant(&adm.user);
     // Admission feasibility: MARP must find at least one plan.
     let plans = marp.plans(&spec_job.model, &spec_job.train);
     let id = *next_id;
@@ -1161,6 +1174,7 @@ fn submit_one(
                     model: spec_job.model.name.to_string(),
                     batch: spec_job.train.global_batch,
                     samples: spec_job.total_samples,
+                    tenant: spec_job.tenant.clone(),
                 })
                 .expect("durability: WAL append failed");
         }
@@ -1268,6 +1282,7 @@ fn coordinator_loop(
             quarantine_crashes: cfg.quarantine_crashes,
             quarantine_window_s: cfg.quarantine_window_ms as f64 / 1e3,
             probation_s: cfg.probation_ms as f64 / 1e3,
+            tenant_weights: cfg.tenant_weights.clone(),
             ..EngineConfig::default()
         },
     );

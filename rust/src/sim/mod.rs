@@ -62,6 +62,9 @@ pub struct SimConfig {
     pub quarantine_window_s: f64,
     /// Quarantine probation, seconds.
     pub probation_s: f64,
+    /// Per-tenant fairness weights (`(tenant, weight)`; unlisted tenants
+    /// weigh 1.0). Only engages when a trace carries ≥ 2 distinct tenants.
+    pub tenant_weights: Vec<(String, f64)>,
 }
 
 impl Default for SimConfig {
@@ -83,6 +86,7 @@ impl Default for SimConfig {
             quarantine_crashes: e.quarantine_crashes,
             quarantine_window_s: e.quarantine_window_s,
             probation_s: e.probation_s,
+            tenant_weights: Vec::new(),
         }
     }
 }
@@ -104,6 +108,7 @@ impl SimConfig {
             quarantine_crashes: self.quarantine_crashes,
             quarantine_window_s: self.quarantine_window_s,
             probation_s: self.probation_s,
+            tenant_weights: self.tenant_weights.clone(),
             ..EngineConfig::default()
         }
     }

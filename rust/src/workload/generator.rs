@@ -1,0 +1,530 @@
+//! Open-world synthetic workload generator (`--workload synth:<spec>`).
+//!
+//! Philly/Helios replay two *fixed* traces; this module generates
+//! parameterized streams so fairness, admission, and fault changes can be
+//! stressed against arbitrary open-world workloads while staying fully
+//! deterministic (every draw comes from the crate PRNG seeded by the spec).
+//!
+//! The spec grammar follows [`crate::faults::FaultPlan`]: comma-separated
+//! `key=value` clauses, every key optional.
+//!
+//! ```text
+//! synth:seed=42,arrivals=poisson:0.5,tenants=8,mix=zoo
+//! synth:seed=7,jobs=200,arrivals=bursty:0.2x10+600,dur=pareto:1800x1.5
+//! synth:arrivals=diurnal:0.1+86400,tenants=4:zipf,mix=gpt2-350m
+//! ```
+//!
+//! Clauses (the `synth:` prefix is stripped by the CLI before parsing):
+//!
+//! * `seed=<u64>` — PRNG seed; defaults to the CLI `--seed`.
+//! * `jobs=<n>` — job count; defaults to the CLI `--tasks`.
+//! * `arrivals=poisson:<rate>` — homogeneous Poisson, `rate` jobs/s.
+//! * `arrivals=bursty:<rate>x<mult>+<period>` — square-wave bursts: the
+//!   first 20 % of every `period` seconds runs at `rate × mult`, the rest
+//!   at `rate` (Lewis–Shedler thinning, so draws stay deterministic).
+//! * `arrivals=diurnal:<rate>[+<period>]` — sinusoidal day: the rate swings
+//!   between 0 and `2 × rate` over `period` seconds (default 86400).
+//! * `dur=mixed` — Philly calibration: 85 % log-normal body + 15 % Pareto
+//!   tail (the default).
+//! * `dur=lognormal:<mu>x<sigma>` — log-normal with the *underlying*
+//!   normal's parameters.
+//! * `dur=pareto:<scale>x<alpha>` — Pareto with scale seconds and shape.
+//! * `tenants=<n>[:uniform|:zipf]` — attribute jobs to `n` tenants
+//!   `t0..t{n-1}`; `zipf` skews submission weight ∝ 1/(rank+1) so a head
+//!   tenant dominates (the fairness stress shape). Omitted = anonymous.
+//! * `mix=zoo|small|large|<model-name>` — model mix drawn from the zoo.
+
+use super::{must_model, GenCtx};
+use crate::job::JobSpec;
+
+/// Stream-domain tag XOR'd into the seed so `synth` draws never collide
+/// with the Philly/Helios streams for the same `--seed`.
+const SEED_TAG: u64 = 0x5EED_0F_0BE2;
+
+/// Fraction of each bursty period spent at the boosted rate.
+const BURST_FRAC: f64 = 0.2;
+
+/// Reference throughput used to convert a duration target into a sample
+/// count (same calibration as the Philly generator).
+const REF_SAMPLES_PER_SEC: f64 = 120.0;
+
+/// The arrival process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrivals {
+    /// Homogeneous Poisson at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// Square-wave bursts: `rate × mult` for the first [`BURST_FRAC`] of
+    /// every `period_s`, base `rate` otherwise.
+    Bursty { rate_per_s: f64, mult: f64, period_s: f64 },
+    /// Sinusoidal day: instantaneous rate `rate × (1 + sin(2πt/period))`.
+    Diurnal { rate_per_s: f64, period_s: f64 },
+}
+
+impl Arrivals {
+    /// Instantaneous rate at time `t` (jobs/s).
+    fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate_per_s } => rate_per_s,
+            Arrivals::Bursty { rate_per_s, mult, period_s } => {
+                if (t % period_s) < BURST_FRAC * period_s {
+                    rate_per_s * mult
+                } else {
+                    rate_per_s
+                }
+            }
+            Arrivals::Diurnal { rate_per_s, period_s } => {
+                rate_per_s * (1.0 + (2.0 * std::f64::consts::PI * t / period_s).sin())
+            }
+        }
+    }
+
+    /// Upper bound on the instantaneous rate (the thinning envelope).
+    fn max_rate(&self) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate_per_s } => rate_per_s,
+            Arrivals::Bursty { rate_per_s, mult, .. } => rate_per_s * mult.max(1.0),
+            Arrivals::Diurnal { rate_per_s, .. } => 2.0 * rate_per_s,
+        }
+    }
+}
+
+/// The duration (→ sample count) distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Durations {
+    /// Philly calibration: 85 % log-normal(6.6, 1.4) clamped to
+    /// [60 s, 6 h], 15 % Pareto(1800, 1.5) capped at 12 h.
+    Mixed,
+    /// Log-normal with the underlying normal's (mu, sigma), clamped to
+    /// [60 s, 24 h].
+    Lognormal { mu: f64, sigma: f64 },
+    /// Pareto(scale_s, alpha), capped at 24 h.
+    Pareto { scale_s: f64, alpha: f64 },
+}
+
+/// How submissions distribute over tenants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Skew {
+    /// Every tenant submits with equal weight.
+    Uniform,
+    /// Weight ∝ 1/(rank+1): tenant `t0` submits ~n/H(n) of the stream —
+    /// the heavy-head shape the fairness layer must absorb.
+    Zipf,
+}
+
+/// Which models jobs draw from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mix {
+    /// Weighted classes over the zoo, skewed small like real clusters.
+    Zoo,
+    /// Small models only (sub-500M) — every job fits everywhere.
+    Small,
+    /// Large models only (≥1.3B) — stresses the big-memory pool.
+    Large,
+    /// A single named model.
+    Model(String),
+}
+
+/// A parsed `synth:` workload spec. Generation is a pure function of this
+/// struct plus the CLI fallbacks: same spec ⇒ byte-identical trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthSpec {
+    /// `seed=` clause; `None` falls back to the CLI `--seed`.
+    pub seed: Option<u64>,
+    /// `jobs=` clause; `None` falls back to the CLI `--tasks`.
+    pub jobs: Option<usize>,
+    pub arrivals: Arrivals,
+    pub durations: Durations,
+    /// Number of tenants (0 = anonymous stream).
+    pub tenants: usize,
+    pub skew: Skew,
+    pub mix: Mix,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        Self {
+            seed: None,
+            jobs: None,
+            // Philly's busy-cluster calibration: one job every 90 s.
+            arrivals: Arrivals::Poisson { rate_per_s: 1.0 / 90.0 },
+            durations: Durations::Mixed,
+            tenants: 0,
+            skew: Skew::Uniform,
+            mix: Mix::Zoo,
+        }
+    }
+}
+
+fn parse_f64(s: &str, what: &str) -> Result<f64, String> {
+    let v: f64 = s.trim().parse().map_err(|_| format!("bad {what} '{s}' (want a number)"))?;
+    if !v.is_finite() || v <= 0.0 {
+        return Err(format!("bad {what} '{s}' (must be finite and > 0)"));
+    }
+    Ok(v)
+}
+
+impl SynthSpec {
+    /// Parse a spec string (everything after `synth:`). Empty = defaults.
+    pub fn parse(spec: &str) -> Result<SynthSpec, String> {
+        let mut out = SynthSpec::default();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("bad synth clause '{clause}' (want key=value)"))?;
+            match key.trim() {
+                "seed" => {
+                    out.seed = Some(
+                        val.trim()
+                            .parse()
+                            .map_err(|_| format!("bad seed '{val}' (want a u64)"))?,
+                    );
+                }
+                "jobs" => {
+                    out.jobs = Some(
+                        val.trim()
+                            .parse::<usize>()
+                            .ok()
+                            .filter(|&n| n > 0)
+                            .ok_or_else(|| format!("bad jobs '{val}' (want a count > 0)"))?,
+                    );
+                }
+                "arrivals" => out.arrivals = Self::parse_arrivals(val)?,
+                "dur" => out.durations = Self::parse_durations(val)?,
+                "tenants" => {
+                    let (n, skew) = match val.split_once(':') {
+                        None => (val, Skew::Uniform),
+                        Some((n, "uniform")) => (n, Skew::Uniform),
+                        Some((n, "zipf")) => (n, Skew::Zipf),
+                        Some((_, other)) => {
+                            return Err(format!(
+                                "bad tenant skew '{other}' (want uniform or zipf)"
+                            ))
+                        }
+                    };
+                    out.tenants = n
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad tenants '{val}' (want a count)"))?;
+                    out.skew = skew;
+                }
+                "mix" => {
+                    out.mix = match val.trim() {
+                        "zoo" => Mix::Zoo,
+                        "small" => Mix::Small,
+                        "large" => Mix::Large,
+                        name => {
+                            if crate::config::models::model_by_name(name).is_none() {
+                                return Err(format!(
+                                    "bad mix '{name}' (want zoo, small, large, or a model name)"
+                                ));
+                            }
+                            Mix::Model(name.to_string())
+                        }
+                    };
+                }
+                other => {
+                    return Err(format!(
+                        "unknown synth clause '{other}' \
+                         (want seed, jobs, arrivals, dur, tenants, or mix)"
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn parse_arrivals(val: &str) -> Result<Arrivals, String> {
+        let (kind, rest) = val
+            .split_once(':')
+            .ok_or_else(|| format!("bad arrivals '{val}' (want kind:params)"))?;
+        match kind.trim() {
+            "poisson" => Ok(Arrivals::Poisson { rate_per_s: parse_f64(rest, "arrival rate")? }),
+            "bursty" => {
+                let (rate, rest) = rest
+                    .split_once('x')
+                    .ok_or_else(|| format!("bad bursty '{rest}' (want rate x mult + period)"))?;
+                let (mult, period) = rest
+                    .split_once('+')
+                    .ok_or_else(|| format!("bad bursty '{rest}' (want rate x mult + period)"))?;
+                Ok(Arrivals::Bursty {
+                    rate_per_s: parse_f64(rate, "arrival rate")?,
+                    mult: parse_f64(mult, "burst multiplier")?,
+                    period_s: parse_f64(period, "burst period")?,
+                })
+            }
+            "diurnal" => {
+                let (rate, period) = match rest.split_once('+') {
+                    Some((r, p)) => (r, parse_f64(p, "diurnal period")?),
+                    None => (rest, 86_400.0),
+                };
+                Ok(Arrivals::Diurnal {
+                    rate_per_s: parse_f64(rate, "arrival rate")?,
+                    period_s: period,
+                })
+            }
+            other => Err(format!("unknown arrival process '{other}' \
+                                  (want poisson, bursty, or diurnal)")),
+        }
+    }
+
+    fn parse_durations(val: &str) -> Result<Durations, String> {
+        if val.trim() == "mixed" {
+            return Ok(Durations::Mixed);
+        }
+        let (kind, rest) = val
+            .split_once(':')
+            .ok_or_else(|| format!("bad dur '{val}' (want mixed, or kind:a x b)"))?;
+        let (a, b) = rest
+            .split_once('x')
+            .ok_or_else(|| format!("bad dur params '{rest}' (want a x b)"))?;
+        match kind.trim() {
+            "lognormal" => Ok(Durations::Lognormal {
+                mu: parse_f64(a, "lognormal mu")?,
+                sigma: parse_f64(b, "lognormal sigma")?,
+            }),
+            "pareto" => Ok(Durations::Pareto {
+                scale_s: parse_f64(a, "pareto scale")?,
+                alpha: parse_f64(b, "pareto alpha")?,
+            }),
+            other => Err(format!("unknown duration kind '{other}' \
+                                  (want mixed, lognormal, or pareto)")),
+        }
+    }
+
+    /// Per-tenant submission weights (empty when the stream is anonymous).
+    pub fn tenant_weights(&self) -> Vec<f64> {
+        match self.skew {
+            Skew::Uniform => vec![1.0; self.tenants],
+            Skew::Zipf => (0..self.tenants).map(|i| 1.0 / (i + 1) as f64).collect(),
+        }
+    }
+}
+
+/// Model classes per mix: (weight, model candidates, batch candidates).
+fn mix_classes(mix: &Mix) -> Vec<(f64, Vec<&'static str>, Vec<u32>)> {
+    match mix {
+        Mix::Zoo => vec![
+            (0.55, vec!["gpt2-125m", "gpt2-350m", "bert-base"], vec![2, 4, 8]),
+            (0.25, vec!["gpt2-350m", "gpt2-760m", "bert-large"], vec![8, 16]),
+            (0.15, vec!["gpt2-760m", "gpt2-1.3b"], vec![16, 32]),
+            (0.05, vec!["gpt2-1.3b", "gpt2-2.7b"], vec![16, 32]),
+        ],
+        Mix::Small => vec![(1.0, vec!["gpt2-125m", "gpt2-350m", "bert-base"], vec![2, 4, 8])],
+        Mix::Large => {
+            vec![(1.0, vec!["gpt2-1.3b", "gpt2-2.7b", "gpt2-7b"], vec![8, 16, 32])]
+        }
+        Mix::Model(name) => {
+            // Validated at parse time; leak-free because zoo names are
+            // 'static — resolve through the table to get the static str.
+            let stat = must_model(name).name;
+            vec![(1.0, vec![stat], vec![4, 8, 16, 32])]
+        }
+    }
+}
+
+/// Generate a trace from a parsed spec. `n_fallback`/`seed_fallback` supply
+/// the CLI `--tasks`/`--seed` when the spec omits `jobs=`/`seed=`.
+pub fn generate(spec: &SynthSpec, n_fallback: usize, seed_fallback: u64) -> Vec<JobSpec> {
+    let n = spec.jobs.unwrap_or(n_fallback);
+    let seed = spec.seed.unwrap_or(seed_fallback);
+    let mut ctx = GenCtx::new(seed ^ SEED_TAG);
+    let classes = mix_classes(&spec.mix);
+    let class_weights: Vec<f64> = classes.iter().map(|c| c.0).collect();
+    let tenant_weights = spec.tenant_weights();
+    let max_rate = spec.arrivals.max_rate();
+
+    let mut t = 0.0f64;
+    let mut jobs = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Lewis–Shedler thinning against the envelope rate: exact for the
+        // nonhomogeneous processes, degenerates to plain inversion for
+        // Poisson (acceptance probability 1). Draw order is fixed per
+        // candidate point, so the stream is a pure function of the seed.
+        loop {
+            t += ctx.rng.exp(max_rate);
+            if ctx.rng.chance(spec.arrivals.rate_at(t) / max_rate) {
+                break;
+            }
+        }
+        let class = &classes[ctx.rng.weighted_index(&class_weights)];
+        let model = must_model(ctx.rng.choose(&class.1));
+        let batch = *ctx.rng.choose(&class.2);
+        let dur_s = match spec.durations {
+            Durations::Mixed => {
+                if ctx.rng.chance(0.85) {
+                    ctx.rng.lognormal(6.6, 1.4).clamp(60.0, 21_600.0)
+                } else {
+                    ctx.rng.pareto(1800.0, 1.5).min(43_200.0)
+                }
+            }
+            Durations::Lognormal { mu, sigma } => {
+                ctx.rng.lognormal(mu, sigma).clamp(60.0, 86_400.0)
+            }
+            Durations::Pareto { scale_s, alpha } => {
+                ctx.rng.pareto(scale_s, alpha).min(86_400.0)
+            }
+        };
+        let size_scale = (350.0e6 / model.param_count() as f64).clamp(0.02, 4.0);
+        let samples = (dur_s * REF_SAMPLES_PER_SEC * size_scale).max(50.0) as u64;
+        let id = ctx.id();
+        let mut spec_job = JobSpec::new(id, model, batch, samples, t);
+        if !tenant_weights.is_empty() {
+            let tenant = ctx.rng.weighted_index(&tenant_weights);
+            spec_job = spec_job.with_tenant(&format!("t{tenant}"));
+        }
+        jobs.push(spec_job);
+    }
+    jobs
+}
+
+/// Parse + generate in one step — the CLI entry point for
+/// `--workload synth:<spec>` (the caller strips the prefix).
+pub fn from_spec(
+    spec: &str,
+    n_fallback: usize,
+    seed_fallback: u64,
+) -> Result<Vec<JobSpec>, String> {
+    Ok(generate(&SynthSpec::parse(spec)?, n_fallback, seed_fallback))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_spec_is_byte_identical() {
+        let spec = SynthSpec::parse("seed=42,arrivals=poisson:0.5,tenants=8,mix=zoo").unwrap();
+        let a = generate(&spec, 100, 0);
+        let b = generate(&spec, 100, 0);
+        assert_eq!(a, b);
+        assert_eq!(
+            crate::workload::trace::to_csv(&a),
+            crate::workload::trace::to_csv(&b)
+        );
+        assert_eq!(a.len(), 100);
+        // Different seed, different stream.
+        let c = generate(&SynthSpec { seed: Some(43), ..spec.clone() }, 100, 0);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn grammar_errors_are_contextual() {
+        for (spec, needle) in [
+            ("seed=abc", "bad seed"),
+            ("jobs=0", "bad jobs"),
+            ("arrivals=poisson", "want kind:params"),
+            ("arrivals=warp:1", "unknown arrival process"),
+            ("arrivals=bursty:0.5", "want rate x mult + period"),
+            ("dur=weird:1x2", "unknown duration kind"),
+            ("tenants=4:square", "bad tenant skew"),
+            ("mix=not-a-model", "bad mix"),
+            ("volume=11", "unknown synth clause"),
+            ("seed", "want key=value"),
+        ] {
+            let err = SynthSpec::parse(spec).expect_err(spec);
+            assert!(err.contains(needle), "spec '{spec}': error '{err}' lacks '{needle}'");
+        }
+    }
+
+    #[test]
+    fn empty_spec_uses_defaults_and_cli_fallbacks() {
+        let spec = SynthSpec::parse("").unwrap();
+        assert_eq!(spec, SynthSpec::default());
+        let jobs = generate(&spec, 10, 7);
+        assert_eq!(jobs.len(), 10);
+        assert!(jobs.iter().all(|j| j.tenant.is_empty()), "default is anonymous");
+        // Fallback seed feeds the stream: different --seed, different trace.
+        assert_ne!(jobs, generate(&spec, 10, 8));
+        // An explicit seed clause wins over the CLI fallback.
+        let pinned = SynthSpec::parse("seed=3").unwrap();
+        assert_eq!(generate(&pinned, 10, 7), generate(&pinned, 10, 99));
+    }
+
+    #[test]
+    fn poisson_rate_within_tolerance() {
+        // Mean inter-arrival of a Poisson(λ=0.5) stream is 2 s; over 4000
+        // jobs the sample mean concentrates well within ±10 %.
+        let spec = SynthSpec::parse("seed=11,arrivals=poisson:0.5").unwrap();
+        let jobs = generate(&spec, 4000, 0);
+        let span = jobs.last().unwrap().submit_time;
+        let mean = span / jobs.len() as f64;
+        assert!((1.8..2.2).contains(&mean), "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_in_the_burst_window() {
+        let spec = SynthSpec::parse("seed=5,arrivals=bursty:0.05x20+1000").unwrap();
+        let jobs = generate(&spec, 2000, 0);
+        let in_burst = jobs
+            .iter()
+            .filter(|j| (j.submit_time % 1000.0) < BURST_FRAC * 1000.0)
+            .count();
+        // Burst windows are 20 % of time but carry 20x the rate → they
+        // should hold the large majority of arrivals (expected ~83 %).
+        assert!(
+            in_burst as f64 > 0.6 * jobs.len() as f64,
+            "only {in_burst}/{} arrivals in burst windows",
+            jobs.len()
+        );
+    }
+
+    #[test]
+    fn diurnal_peaks_in_the_high_half_of_the_cycle() {
+        let spec = SynthSpec::parse("seed=13,arrivals=diurnal:0.1+10000").unwrap();
+        let jobs = generate(&spec, 3000, 0);
+        // rate(t) > mean over t/period mod 1 ∈ (0, 0.5): the sine's
+        // positive half-cycle should carry well over half the arrivals.
+        let high = jobs
+            .iter()
+            .filter(|j| (j.submit_time % 10_000.0) < 5000.0)
+            .count();
+        assert!(
+            high as f64 > 0.7 * jobs.len() as f64,
+            "only {high}/{} arrivals in the peak half-cycle",
+            jobs.len()
+        );
+    }
+
+    #[test]
+    fn pareto_tail_is_heavy() {
+        let spec = SynthSpec::parse("seed=17,dur=pareto:600x1.2,mix=gpt2-350m").unwrap();
+        let jobs = generate(&spec, 1000, 0);
+        let mut samples: Vec<f64> = jobs.iter().map(|j| j.total_samples as f64).collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = samples[samples.len() / 2];
+        let p99 = samples[(samples.len() as f64 * 0.99) as usize];
+        assert!(p99 > 5.0 * p50, "p50={p50} p99={p99}");
+    }
+
+    #[test]
+    fn zipf_tenants_skew_head_heavy() {
+        let spec = SynthSpec::parse("seed=23,tenants=8:zipf").unwrap();
+        let jobs = generate(&spec, 2000, 0);
+        let count = |t: &str| jobs.iter().filter(|j| j.tenant == t).count();
+        let head = count("t0");
+        let tail = count("t7");
+        assert!(head > 4 * tail, "zipf head {head} vs tail {tail}");
+        // Uniform spreads evenly: no tenant holds more than twice its share.
+        let uni = generate(&SynthSpec::parse("seed=23,tenants=8").unwrap(), 2000, 0);
+        for i in 0..8 {
+            let c = uni.iter().filter(|j| j.tenant == format!("t{i}")).count();
+            assert!((125..500).contains(&c), "uniform tenant t{i} got {c}/2000");
+        }
+    }
+
+    #[test]
+    fn mix_constrains_models() {
+        let small = generate(&SynthSpec::parse("seed=3,mix=small").unwrap(), 200, 0);
+        assert!(small.iter().all(|j| j.model.param_count() < 500_000_000));
+        let large = generate(&SynthSpec::parse("seed=3,mix=large").unwrap(), 200, 0);
+        assert!(large.iter().all(|j| j.model.param_count() >= 1_000_000_000));
+        let single = generate(&SynthSpec::parse("seed=3,mix=gpt2-760m").unwrap(), 50, 0);
+        assert!(single.iter().all(|j| j.model.name == "gpt2-760m"));
+    }
+
+    #[test]
+    fn jobs_clause_overrides_cli_tasks() {
+        let spec = SynthSpec::parse("seed=1,jobs=17").unwrap();
+        assert_eq!(generate(&spec, 100, 0).len(), 17);
+    }
+}

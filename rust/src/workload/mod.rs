@@ -9,9 +9,14 @@
 //!   characterization: "requires more GPUs and has longer runtime durations"
 //!   than Philly (the paper's own description).
 //! * [`trace`] — CSV-lite serialization so traces can be saved/replayed.
+//! * [`generator`] — the open-world synthetic generator: parameterized
+//!   arrival processes (Poisson/bursty/diurnal), heavy-tailed durations,
+//!   model mixes from the zoo, and per-tenant submission profiles behind
+//!   the `synth:<spec>` grammar.
 //!
 //! All generators are seeded and deterministic.
 
+pub mod generator;
 pub mod helios;
 pub mod newworkload;
 pub mod philly;

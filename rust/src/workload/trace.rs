@@ -5,24 +5,43 @@
 //! # id,model,batch,total_samples,submit_time
 //! 0,gpt2-350m,8,120000,14.2
 //! ```
+//!
+//! Multi-tenant traces (the synthetic generator's `tenants=` profiles)
+//! append a sixth `tenant` column; tenantless traces keep the historical
+//! 5-field format byte-for-byte, and the parser accepts both.
 
 use crate::config::models::model_by_name;
 use crate::job::JobSpec;
 use anyhow::{anyhow, Context, Result};
 
-/// Render a trace to CSV-lite text.
+/// Render a trace to CSV-lite text. The `tenant` column is emitted only
+/// when at least one job carries a tenant, so pre-tenancy traces (and every
+/// tenantless generator) stay byte-identical with the historical format.
 pub fn to_csv(jobs: &[JobSpec]) -> String {
-    let mut out = String::from("# id,model,batch,total_samples,submit_time\n");
+    let tenanted = jobs.iter().any(|j| !j.tenant.is_empty());
+    let mut out = if tenanted {
+        String::from("# id,model,batch,total_samples,submit_time,tenant\n")
+    } else {
+        String::from("# id,model,batch,total_samples,submit_time\n")
+    };
     for j in jobs {
-        out.push_str(&format!(
-            "{},{},{},{},{}\n",
-            j.id, j.model.name, j.train.global_batch, j.total_samples, j.submit_time
-        ));
+        if tenanted {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                j.id, j.model.name, j.train.global_batch, j.total_samples, j.submit_time, j.tenant
+            ));
+        } else {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                j.id, j.model.name, j.train.global_batch, j.total_samples, j.submit_time
+            ));
+        }
     }
     out
 }
 
-/// Parse a trace from CSV-lite text.
+/// Parse a trace from CSV-lite text (5-field tenantless lines or 6-field
+/// tenanted lines; the two may mix — an empty sixth field is anonymous).
 pub fn from_csv(text: &str) -> Result<Vec<JobSpec>> {
     let mut jobs = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
@@ -32,8 +51,8 @@ pub fn from_csv(text: &str) -> Result<Vec<JobSpec>> {
         }
         let ctx = || format!("trace line {}", lineno + 1);
         let parts: Vec<&str> = line.split(',').collect();
-        if parts.len() != 5 {
-            return Err(anyhow!("{}: expected 5 fields, got {}", ctx(), parts.len()));
+        if parts.len() != 5 && parts.len() != 6 {
+            return Err(anyhow!("{}: expected 5 or 6 fields, got {}", ctx(), parts.len()));
         }
         let id: u64 = parts[0].trim().parse().with_context(ctx)?;
         let model = model_by_name(parts[1].trim())
@@ -41,7 +60,11 @@ pub fn from_csv(text: &str) -> Result<Vec<JobSpec>> {
         let batch: u32 = parts[2].trim().parse().with_context(ctx)?;
         let samples: u64 = parts[3].trim().parse().with_context(ctx)?;
         let submit: f64 = parts[4].trim().parse().with_context(ctx)?;
-        jobs.push(JobSpec::new(id, model, batch, samples, submit));
+        let mut spec = JobSpec::new(id, model, batch, samples, submit);
+        if let Some(tenant) = parts.get(5) {
+            spec = spec.with_tenant(tenant.trim());
+        }
+        jobs.push(spec);
     }
     Ok(jobs)
 }
@@ -74,8 +97,26 @@ mod tests {
     #[test]
     fn rejects_malformed() {
         assert!(from_csv("1,gpt2-350m,8,100").is_err()); // 4 fields
+        assert!(from_csv("1,gpt2-350m,8,100,0.0,t0,extra").is_err()); // 7 fields
         assert!(from_csv("1,unknown-model,8,100,0.0").is_err());
         assert!(from_csv("x,gpt2-350m,8,100,0.0").is_err());
+    }
+
+    #[test]
+    fn tenant_column_roundtrips() {
+        let jobs = vec![
+            JobSpec::new(0, model_by_name("gpt2-350m").unwrap(), 8, 100, 0.5).with_tenant("t1"),
+            JobSpec::new(1, model_by_name("gpt2-125m").unwrap(), 4, 200, 1.5),
+        ];
+        let text = to_csv(&jobs);
+        assert!(text.starts_with("# id,model,batch,total_samples,submit_time,tenant\n"));
+        let back = from_csv(&text).unwrap();
+        assert_eq!(back, jobs);
+        assert_eq!(back[0].tenant, "t1");
+        assert_eq!(back[1].tenant, "", "empty sixth field is anonymous");
+        // Tenantless traces keep the historical 5-field format exactly.
+        let plain = vec![JobSpec::new(0, model_by_name("gpt2-350m").unwrap(), 8, 100, 0.5)];
+        assert!(!to_csv(&plain).contains(",tenant"));
     }
 
     #[test]
