@@ -1,0 +1,25 @@
+//! Bakes the git commit into the binary: `FRENZY_GIT_SHA` is read via
+//! `option_env!` in `obs::git_sha` and surfaces in `frenzy --version`,
+//! `GET /v1/version`, and the `frenzy_build_info` metric. Builds outside a
+//! checkout (vendored tarball, CI artifact) simply omit the variable and
+//! report `"unknown"` — never a build failure.
+
+use std::process::Command;
+
+fn main() {
+    // Re-run when HEAD moves (or the branch it points at advances) so the
+    // baked sha tracks commits, not just source edits.
+    println!("cargo:rerun-if-changed=../.git/HEAD");
+    println!("cargo:rerun-if-changed=../.git/refs");
+    let sha = Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_default();
+    if !sha.is_empty() {
+        println!("cargo:rustc-env=FRENZY_GIT_SHA={sha}");
+    }
+}

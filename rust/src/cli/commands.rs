@@ -16,9 +16,10 @@ use crate::config::cluster_by_name;
 use crate::engine::EventKind;
 use crate::job::JobSpec;
 use crate::serverless::admission::QuotaCfg;
+use crate::obs::expo;
 use crate::serverless::api::{
     EventV1, EventsRequestV1, JobStatusV1, ListRequestV1, PlanV1, ReportV1, ScaleRequestV1,
-    SubmitRequestV1, SubmitResultV1, state_from_str, MAX_BATCH_SUBMIT,
+    SubmitRequestV1, SubmitResultV1, VersionV1, state_from_str, MAX_BATCH_SUBMIT,
 };
 use crate::serverless::client::FrenzyClient;
 use crate::serverless::{CoordinatorConfig, PredictReport, SchedulerKind, SubmitRequest};
@@ -542,6 +543,222 @@ pub fn cmd_report(args: &Args) -> Result<()> {
     let r: ReportV1 = c.report()?;
     render_report(&r);
     Ok(())
+}
+
+/// `frenzy version [--addr A]` (also `frenzy --version`) — this binary's
+/// build identity; with `--addr`, the serving binary's as well (catches
+/// client/server skew at a glance).
+pub fn cmd_version(args: &Args) -> Result<()> {
+    let v = VersionV1::current();
+    println!("frenzy {} (git {})", v.version, v.git_sha);
+    println!("features: {}", v.features.join(", "));
+    if args.opt("addr").is_some() {
+        let sv = client(args).version()?;
+        println!(
+            "server {}: frenzy {} (git {})",
+            args.opt_or("addr", DEFAULT_ADDR),
+            sv.version,
+            sv.git_sha
+        );
+    }
+    Ok(())
+}
+
+/// `frenzy metrics [--addr A] [--check]` — dump the server's raw
+/// Prometheus exposition to stdout; with `--check`, run the conformance
+/// validator over the live output instead of printing it (the CI scrape
+/// smoke test rides on this).
+pub fn cmd_metrics(args: &Args) -> Result<()> {
+    let mut c = client(args);
+    let text = c.metrics_text()?;
+    if args.flag("check") {
+        let samples = expo::parse(&text).map_err(|e| anyhow!("exposition parse: {e}"))?;
+        expo::validate(&text).map_err(|e| anyhow!("exposition conformance: {e}"))?;
+        println!("ok: {} samples, conformant exposition from {}", samples.len(), c.addr());
+    } else {
+        print!("{text}");
+    }
+    Ok(())
+}
+
+/// `frenzy top [--addr A] [--interval S] [--iterations N]` — live
+/// dashboard over `/metrics` + `/v1/report`: jobs, scheduler round-phase
+/// latency quantiles, per-route HTTP traffic, WAL health, device memory.
+/// `--iterations 0` (default) refreshes until interrupted;
+/// `--iterations 1` prints a single frame and exits (scriptable).
+pub fn cmd_top(args: &Args) -> Result<()> {
+    let interval: f64 = args.opt_parse_or("interval", 2.0)?;
+    let iterations: u64 = args.opt_parse_or("iterations", 0)?;
+    let mut c = client(args);
+    let mut frame = 0u64;
+    loop {
+        let text = c.metrics_text()?;
+        let samples =
+            expo::parse(&text).map_err(|e| anyhow!("bad exposition from server: {e}"))?;
+        // The dashboard stays up through a transient report error.
+        let report = c.report().ok();
+        if frame > 0 {
+            // ANSI clear + home between frames only — a single-frame run
+            // emits no escapes, so it composes with pipes and tests.
+            print!("\x1b[2J\x1b[H");
+        }
+        render_top(c.addr(), &samples, report.as_ref());
+        frame += 1;
+        if iterations > 0 && frame >= iterations {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval.clamp(0.1, 3600.0)));
+    }
+}
+
+/// One `frenzy top` frame, rendered entirely from parsed samples (plus
+/// the report for the run-level JCT numbers the registry doesn't carry).
+fn render_top(addr: &str, samples: &[expo::Sample], report: Option<&ReportV1>) {
+    fn val(samples: &[expo::Sample], name: &str, want: &[(&str, &str)]) -> f64 {
+        expo::sample_value(samples, name, want).unwrap_or(0.0)
+    }
+    fn fmt_q(x: Option<f64>) -> String {
+        x.map(fmt_duration).unwrap_or_else(|| "-".into())
+    }
+
+    let version = samples
+        .iter()
+        .find(|s| s.name == "frenzy_build_info")
+        .and_then(|s| s.labels.iter().find(|(k, _)| k == "version"))
+        .map(|(_, v)| v.clone())
+        .unwrap_or_else(|| "?".into());
+    println!(
+        "frenzy top — {addr} — server v{version}, up {}",
+        fmt_duration(val(samples, "frenzy_process_uptime_seconds", &[]))
+    );
+
+    let queued = val(samples, "frenzy_jobs", &[("state", "queued")]);
+    let running = val(samples, "frenzy_jobs", &[("state", "running")]);
+    let inflight = val(samples, "frenzy_http_inflight_requests", &[]);
+    let mut t = Table::new(&["metric", "value"]).with_title("load");
+    t.row_str(&["jobs queued", &format!("{queued:.0}")]);
+    t.row_str(&["jobs running", &format!("{running:.0}")]);
+    t.row_str(&[
+        "coordinator mailbox",
+        &format!("{:.0}", val(samples, "frenzy_coordinator_mailbox_depth", &[])),
+    ]);
+    t.row_str(&["http in-flight", &format!("{inflight:.0}")]);
+    let shed = format!(
+        "{:.0} accept-queue 503 / {:.0} throttle 429",
+        val(samples, "frenzy_http_shed_total", &[("kind", "accept_queue_503")]),
+        val(samples, "frenzy_http_shed_total", &[("kind", "throttle_429")]),
+    );
+    t.row_str(&["load shed", &shed]);
+    let adm =
+        |d: &'static str| val(samples, "frenzy_admission_decisions_total", &[("decision", d)]);
+    let admissions = format!(
+        "{:.0} admitted / {:.0} backpressure / {:.0} quota / {:.0} infeasible",
+        adm("admitted"),
+        adm("throttled_backpressure"),
+        adm("throttled_quota"),
+        adm("rejected_infeasible"),
+    );
+    t.row_str(&["admission", &admissions]);
+    let ooms = val(samples, "frenzy_oom_events_total", &[]);
+    let requeues = val(samples, "frenzy_crash_requeues_total", &[]);
+    t.row_str(&["oom events", &format!("{ooms:.0}")]);
+    t.row_str(&["crash requeues", &format!("{requeues:.0}")]);
+    println!("{}", t.render());
+
+    let mut ph =
+        Table::new(&["phase", "rounds", "p50", "p90", "p99"]).with_title("scheduler round phases");
+    for phase in ["candidate_scan", "plan_rank", "placement"] {
+        let series =
+            expo::bucket_series(samples, "frenzy_sched_round_phase_seconds", &[("phase", phase)]);
+        let count = series.last().map_or(0.0, |&(_, c)| c);
+        ph.row_str(&[
+            phase,
+            &format!("{count:.0}"),
+            &fmt_q(expo::quantile(&series, 0.5)),
+            &fmt_q(expo::quantile(&series, 0.9)),
+            &fmt_q(expo::quantile(&series, 0.99)),
+        ]);
+    }
+    println!("{}", ph.render());
+
+    let mut ht = Table::new(&["route", "requests", "p50", "p99"]).with_title("http routes");
+    let mut any_route = false;
+    for &route in crate::obs::ROUTES {
+        let total: f64 = samples
+            .iter()
+            .filter(|s| {
+                s.name == "frenzy_http_requests_total"
+                    && s.labels.iter().any(|(k, v)| k == "route" && v == route)
+            })
+            .map(|s| s.value)
+            .sum();
+        if total == 0.0 {
+            continue;
+        }
+        any_route = true;
+        let series = expo::bucket_series(
+            samples,
+            "frenzy_http_request_duration_seconds",
+            &[("route", route)],
+        );
+        ht.row_str(&[
+            route,
+            &format!("{total:.0}"),
+            &fmt_q(expo::quantile(&series, 0.5)),
+            &fmt_q(expo::quantile(&series, 0.99)),
+        ]);
+    }
+    if any_route {
+        println!("{}", ht.render());
+    }
+
+    if val(samples, "frenzy_wal_appends_total", &[]) > 0.0 {
+        let appends = val(samples, "frenzy_wal_appends_total", &[]);
+        let mut wt = Table::new(&["metric", "value"]).with_title("durability");
+        wt.row_str(&["wal appends", &format!("{appends:.0}")]);
+        wt.row_str(&[
+            "wal bytes",
+            &fmt_bytes(val(samples, "frenzy_wal_append_bytes_total", &[]) as u64),
+        ]);
+        wt.row_str(&["wal segments", &format!("{:.0}", val(samples, "frenzy_wal_segments", &[]))]);
+        let fsync = expo::bucket_series(samples, "frenzy_wal_fsync_seconds", &[]);
+        wt.row_str(&["fsync p99", &fmt_q(expo::quantile(&fsync, 0.99))]);
+        wt.row_str(&["snapshots", &format!("{:.0}", val(samples, "frenzy_snapshots_total", &[]))]);
+        wt.row_str(&[
+            "snapshot age",
+            &fmt_duration(val(samples, "frenzy_snapshot_age_seconds", &[])),
+        ]);
+        println!("{}", wt.render());
+    }
+
+    let used: Vec<&expo::Sample> =
+        samples.iter().filter(|s| s.name == "frenzy_node_device_mem_used_bytes").collect();
+    if !used.is_empty() {
+        let mut nt = Table::new(&["node", "mem used", "capacity"]).with_title("device memory");
+        for s in used {
+            let node =
+                s.labels.iter().find(|(k, _)| k == "node").map_or("?", |(_, v)| v.as_str());
+            let cap = val(samples, "frenzy_node_device_mem_capacity_bytes", &[("node", node)]);
+            nt.row_str(&[node, &fmt_bytes(s.value as u64), &fmt_bytes(cap as u64)]);
+        }
+        println!("{}", nt.render());
+    }
+
+    if let Some(r) = report {
+        let mut rt = Table::new(&["metric", "value"]).with_title("run report");
+        rt.row_str(&["completed", &r.n_completed.to_string()]);
+        rt.row_str(&["rejected", &r.n_rejected.to_string()]);
+        rt.row_str(&["avg JCT", &fmt_duration(r.avg_jct_s)]);
+        rt.row_str(&["p99 JCT", &fmt_duration(r.p99_jct_s)]);
+        rt.row_str(&["utilization", &format!("{:.1}%", r.avg_utilization * 100.0)]);
+        if r.mem_pred_samples > 0 {
+            rt.row_str(&[
+                "mem prediction",
+                &format!("{:.1}% avg", r.mem_pred_accuracy_avg * 100.0),
+            ]);
+        }
+        println!("{}", rt.render());
+    }
 }
 
 /// Remote half of `frenzy replay --addr`: drive the trace against a

@@ -383,6 +383,13 @@ impl Wal {
         self.total_bytes += written;
         self.next_seq += 1;
         self.unsynced += 1;
+        {
+            let d = &crate::obs::reg().durability;
+            d.wal_appends_total.inc();
+            d.wal_append_bytes_total.add(written);
+            d.wal_segments.set(self.segments as i64);
+            d.wal_bytes.set(self.total_bytes as i64);
+        }
         if !self.in_group {
             self.maybe_sync()?;
         }
@@ -432,9 +439,11 @@ impl Wal {
                 self.seg_path.display()
             ));
         }
+        let t0 = Instant::now();
         self.file
             .sync_data()
             .map_err(|e| format!("wal: fsync {}: {e}", self.seg_path.display()))?;
+        crate::obs::reg().durability.fsync_seconds.observe(t0.elapsed().as_secs_f64());
         self.unsynced = 0;
         self.last_sync = Instant::now();
         Ok(())
@@ -472,6 +481,9 @@ impl Wal {
                 removed += 1;
             }
         }
+        let d = &crate::obs::reg().durability;
+        d.wal_segments.set(self.segments as i64);
+        d.wal_bytes.set(self.total_bytes as i64);
         Ok(removed)
     }
 

@@ -148,6 +148,32 @@ pub enum EventKind {
 }
 
 impl EventKind {
+    /// Stable wire name of this kind — the `kind` field emitted by
+    /// [`EventKind::to_json`], also used as the `kind` label of the
+    /// `frenzy_engine_events_total` telemetry counter.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Arrival { .. } => "arrival",
+            EventKind::Placed { .. } => "placed",
+            EventKind::Finished { .. } => "finished",
+            EventKind::Oomed { .. } => "oomed",
+            EventKind::OomObserved { .. } => "oom_observed",
+            EventKind::DrainRequested { .. } => "drain_requested",
+            EventKind::Drained { .. } => "drained",
+            EventKind::ResumedFromCkpt { .. } => "resumed_from_ckpt",
+            EventKind::Preempted { .. } => "preempted",
+            EventKind::Rejected { .. } => "rejected",
+            EventKind::Cancelled { .. } => "cancelled",
+            EventKind::NodeJoined { .. } => "node_joined",
+            EventKind::NodeLeft { .. } => "node_left",
+            EventKind::NodeRetired { .. } => "node_retired",
+            EventKind::NodeCrashed { .. } => "node_crash",
+            EventKind::NodeQuarantined { .. } => "node_quarantined",
+            EventKind::NodeProbation { .. } => "node_probation",
+            EventKind::NodeSlowdown { .. } => "node_slowdown",
+        }
+    }
+
     /// Serialize for the durable snapshot of the event-log ring. Kind and
     /// field names follow the `/v1/cluster/events` wire DTOs.
     pub fn to_json(&self) -> Json {
@@ -453,6 +479,11 @@ impl EventLog {
     /// Append a record; evicts the oldest when full. Returns the assigned
     /// sequence number.
     pub fn push(&mut self, time: f64, kind: EventKind) -> u64 {
+        // Single telemetry tap covering every engine effect on both the sim
+        // and live paths. Write-only: never read back into engine state.
+        if let Some(c) = crate::obs::reg().engine.event(kind.label()) {
+            c.inc();
+        }
         let seq = self.next_seq;
         self.next_seq += 1;
         if self.ring.len() == self.cap {
@@ -647,6 +678,8 @@ mod tests {
             let back = EventKind::from_json(&crate::util::json::parse(&text).unwrap())
                 .unwrap_or_else(|e| panic!("{text}: {e}"));
             assert_eq!(back, k, "{text}");
+            // The telemetry label is the wire name.
+            assert_eq!(k.to_json().get("kind").and_then(Json::as_str), Some(k.label()), "{text}");
         }
         assert!(EventKind::from_json(&Json::obj()).is_err());
     }

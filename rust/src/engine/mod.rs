@@ -1142,15 +1142,28 @@ impl<'a> SchedulingEngine<'a> {
         // scheduler sees a reordered view of the queue (max-min over
         // GPU-share); otherwise it sees the queue itself, untouched.
         let fair = Self::fair_order(&self.pending, &self.running, &self.cfg.tenant_weights);
+        let t1 = std::time::Instant::now();
         let round = {
             let view = self.orch.view();
             self.sched.schedule(fair.as_ref().unwrap_or(&self.pending), &view, now)
         };
-        self.sched_wall_s += t0.elapsed().as_secs_f64();
+        let t2 = std::time::Instant::now();
+        // Journaled scheduler overhead: identical to the pre-telemetry
+        // measurement (queue ordering + planning, excluding decision
+        // application) — the phase histograms below are write-only
+        // telemetry and never feed back into this figure.
+        self.sched_wall_s += (t2 - t0).as_secs_f64();
+        {
+            let eng = &crate::obs::reg().engine;
+            eng.rounds_total.inc();
+            eng.phase_candidate_scan.observe((t1 - t0).as_secs_f64());
+            eng.phase_plan_rank.observe((t2 - t1).as_secs_f64());
+        }
         self.work_units += round.work_units;
         let overhead = round.work_units as f64 * self.cfg.sched_work_unit_s;
         let start_time = now + overhead;
 
+        let t3 = std::time::Instant::now();
         for d in round.decisions {
             let Some(pj) = self.pending.remove(d.job) else {
                 continue; // scheduler returned a stale decision — ignore
@@ -1304,6 +1317,7 @@ impl<'a> SchedulingEngine<'a> {
                 est_runtime_s: runtime,
             });
         }
+        crate::obs::reg().engine.phase_placement.observe(t3.elapsed().as_secs_f64());
     }
 
     /// Weighted max-min fair ordering over tenants. Returns a reordered

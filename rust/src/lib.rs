@@ -54,6 +54,11 @@
 //! * [`runtime`] — PJRT executor running the AOT-compiled JAX/Pallas
 //!   training step (the request path never touches python),
 //! * [`metrics`] — streaming run aggregates → [`metrics::RunReport`],
+//! * [`obs`] — process-wide telemetry: lock-free counters/gauges/histograms
+//!   rendered as Prometheus text at `GET /metrics`, plus per-job phase
+//!   timelines (`GET /v1/jobs/<id>/timeline`) derived from the event log
+//!   and the `frenzy top` live dashboard — write-only by design so
+//!   telemetry can never perturb deterministic replay,
 //! * [`exp`] — harnesses regenerating every figure in the paper.
 
 pub mod bench_harness;
@@ -69,6 +74,7 @@ pub mod job;
 pub mod marp;
 pub mod memory;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod sched;

@@ -9,6 +9,9 @@
 //! frenzy list     [--state running] [--offset 0] [--limit 100] [--addr ...]
 //! frenzy events   [--since 0] [--limit 500] [--follow] [--cursor PATH] [--addr ...]
 //! frenzy report   [--addr ...]
+//! frenzy top      [--interval 2] [--iterations 0] [--addr ...]
+//! frenzy metrics  [--check] [--addr ...]
+//! frenzy version  [--addr ...]
 //! frenzy predict  --model gpt2-7b --batch 2 [--addr ... | --cluster real]
 //! frenzy scale    --join --gpu A100-80G --count 4 --link nvlink [--addr ...]
 //! frenzy scale    --leave 2 [--addr ...]
@@ -69,6 +72,15 @@ USAGE:
                    follower resumes instead of re-printing history)
   frenzy report   [--addr A]    (streaming run report: JCT histogram, drains,
                    memory-prediction accuracy)
+  frenzy top      [--addr A] [--interval S] [--iterations N]
+                  (live dashboard over /metrics + /v1/report: jobs, scheduler
+                   round-phase latency quantiles, HTTP routes, WAL health,
+                   device memory; --iterations 1 prints one frame and exits)
+  frenzy metrics  [--addr A] [--check]   (dump the raw Prometheus exposition;
+                   --check validates conformance instead of printing)
+  frenzy version  [--addr A]    (build identity: crate version, git sha,
+                   features; with --addr also the server's — also
+                   `frenzy --version`)
   frenzy predict  --model <name> --batch <B> [--addr A | --cluster real|sim]
   frenzy scale    --join --gpu <type> [--count N] [--link nvlink|pcie] [--addr A]
   frenzy scale    --leave <node> [--addr A]   (graceful drain + checkpoint)
@@ -95,6 +107,11 @@ API (documented in API.md)."
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // `frenzy --version` with no subcommand — conventional spelling of
+    // `frenzy version`.
+    if args.command.is_none() && args.flag("version") {
+        return commands::cmd_version(args);
+    }
     match args.command.as_deref() {
         None | Some("help") => {
             println!("{}", usage());
@@ -132,6 +149,9 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("list") => commands::cmd_list(args),
         Some("events") => commands::cmd_events(args),
         Some("report") => commands::cmd_report(args),
+        Some("top") => commands::cmd_top(args),
+        Some("metrics") => commands::cmd_metrics(args),
+        Some("version") => commands::cmd_version(args),
         Some("scale") => commands::cmd_scale(args),
         Some("serve") => commands::cmd_serve(args),
         Some("replay") => commands::cmd_replay(args),

@@ -730,7 +730,22 @@ impl RunReport {
         )
     }
 
+    /// Full wire form: the deterministic projection plus a
+    /// `"nondeterministic"` section for measured wall-clock fields.
+    /// Consumers diffing reports across reruns should compare
+    /// [`RunReport::to_json_deterministic`] instead of hand-zeroing fields.
     pub fn to_json(&self) -> Json {
+        let mut j = self.to_json_deterministic();
+        let mut nd = Json::obj();
+        nd.set("sched_overhead_s", self.sched_overhead_s);
+        j.set("nondeterministic", nd);
+        j
+    }
+
+    /// Everything except the `nondeterministic` section: byte-identical
+    /// across reruns of the same deterministic run (the replay-determinism
+    /// and sim-vs-live differential tests compare this form).
+    pub fn to_json_deterministic(&self) -> Json {
         let mut j = Json::obj();
         j.set("scheduler", self.scheduler.as_str())
             .set("workload", self.workload.as_str())
@@ -759,7 +774,6 @@ impl RunReport {
             .set("mem_pred_accuracy_avg", self.mem_pred_accuracy_avg)
             .set("mem_pred_accuracy_min", self.mem_pred_accuracy_min)
             .set("sched_work_units", self.sched_work_units)
-            .set("sched_overhead_s", self.sched_overhead_s)
             .set("avg_utilization", self.avg_utilization)
             .set("n_throttled_backpressure", self.n_throttled_backpressure)
             .set("n_throttled_quota", self.n_throttled_quota);

@@ -1,0 +1,888 @@
+//! Prometheus text exposition (format version 0.0.4): the renderer that
+//! serves `GET /metrics`, plus a parser/validator used by the conformance
+//! tests, the CI scrape smoke (`frenzy metrics --check`), and `frenzy top`
+//! (which reads its dashboard numbers back out of the scrape).
+//!
+//! The renderer emits every registered family with `# HELP` and `# TYPE`
+//! headers, histograms in cumulative `le` form with `+Inf`/`_sum`/`_count`,
+//! and label values escaped per the spec (`\\`, `\"`, `\n`).
+
+use super::{reg, Histogram};
+use std::fmt::Write as _;
+
+/// Content-Type for the exposition format this module renders.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+fn esc_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn esc_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v == f64::INFINITY {
+        "+Inf".into()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn head(out: &mut String, name: &str, typ: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {}", esc_help(help));
+    let _ = writeln!(out, "# TYPE {name} {typ}");
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: &str) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{k}=\"{}\"", esc_label(v));
+        }
+        out.push('}');
+    }
+    let _ = writeln!(out, " {value}");
+}
+
+/// One histogram instance under `name`, carrying `labels` (may be empty).
+fn histogram(out: &mut String, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+    let bucket_name = format!("{name}_bucket");
+    let mut cum = 0u64;
+    let counts = h.bucket_counts();
+    for (i, &bound) in h.bounds().iter().enumerate() {
+        cum += counts[i];
+        let le = fmt_f64(bound);
+        let mut with_le: Vec<(&str, &str)> = labels.to_vec();
+        with_le.push(("le", &le));
+        sample(out, &bucket_name, &with_le, &cum.to_string());
+    }
+    cum += counts[h.bounds().len()];
+    let mut with_le: Vec<(&str, &str)> = labels.to_vec();
+    with_le.push(("le", "+Inf"));
+    sample(out, &bucket_name, &with_le, &cum.to_string());
+    sample(out, &format!("{name}_sum"), labels, &fmt_f64(h.sum()));
+    sample(out, &format!("{name}_count"), labels, &cum.to_string());
+}
+
+/// Render the full process registry as Prometheus text.
+pub fn render() -> String {
+    let r = reg();
+    let mut out = String::with_capacity(32 * 1024);
+
+    // --- build / process ---------------------------------------------
+    head(&mut out, "frenzy_build_info", "gauge", "Build metadata; the value is always 1.");
+    sample(
+        &mut out,
+        "frenzy_build_info",
+        &[("version", super::crate_version()), ("git_sha", super::git_sha())],
+        "1",
+    );
+    head(
+        &mut out,
+        "frenzy_process_uptime_seconds",
+        "gauge",
+        "Seconds since the telemetry registry was first touched.",
+    );
+    sample(&mut out, "frenzy_process_uptime_seconds", &[], &fmt_f64(r.uptime_s()));
+
+    // --- HTTP server --------------------------------------------------
+    head(
+        &mut out,
+        "frenzy_http_requests_total",
+        "counter",
+        "Requests served, by normalized route and status class.",
+    );
+    const CLASSES: [&str; 5] = ["1xx", "2xx", "3xx", "4xx", "5xx"];
+    for rt in &r.http.routes {
+        for (i, class) in CLASSES.iter().enumerate() {
+            sample(
+                &mut out,
+                "frenzy_http_requests_total",
+                &[("route", rt.route), ("code", class)],
+                &rt.by_class[i].get().to_string(),
+            );
+        }
+    }
+    head(
+        &mut out,
+        "frenzy_http_request_duration_seconds",
+        "histogram",
+        "Routing + handler latency per normalized route (excludes socket writes).",
+    );
+    for rt in &r.http.routes {
+        histogram(
+            &mut out,
+            "frenzy_http_request_duration_seconds",
+            &[("route", rt.route)],
+            &rt.latency,
+        );
+    }
+    head(
+        &mut out,
+        "frenzy_http_inflight_requests",
+        "gauge",
+        "Requests currently inside the router.",
+    );
+    sample(&mut out, "frenzy_http_inflight_requests", &[], &r.http.inflight.get().to_string());
+    head(
+        &mut out,
+        "frenzy_http_shed_total",
+        "counter",
+        "Load shed: accept-queue 503s (request unread) and admission 429s.",
+    );
+    sample(
+        &mut out,
+        "frenzy_http_shed_total",
+        &[("kind", "accept_queue_503")],
+        &r.http.shed_503.get().to_string(),
+    );
+    sample(
+        &mut out,
+        "frenzy_http_shed_total",
+        &[("kind", "throttle_429")],
+        &r.http.shed_429.get().to_string(),
+    );
+    head(
+        &mut out,
+        "frenzy_http_sse_connections_total",
+        "counter",
+        "Connections upgraded to the SSE event stream.",
+    );
+    sample(
+        &mut out,
+        "frenzy_http_sse_connections_total",
+        &[],
+        &r.http.sse_connections.get().to_string(),
+    );
+
+    // --- coordinator ---------------------------------------------------
+    head(
+        &mut out,
+        "frenzy_coordinator_mailbox_depth",
+        "gauge",
+        "Messages sent to the coordinator mailbox and not yet received.",
+    );
+    sample(
+        &mut out,
+        "frenzy_coordinator_mailbox_depth",
+        &[],
+        &r.coord.mailbox_depth.get().to_string(),
+    );
+    head(
+        &mut out,
+        "frenzy_coordinator_messages_total",
+        "counter",
+        "Messages the coordinator loop has processed.",
+    );
+    sample(
+        &mut out,
+        "frenzy_coordinator_messages_total",
+        &[],
+        &r.coord.messages_total.get().to_string(),
+    );
+    head(
+        &mut out,
+        "frenzy_admission_decisions_total",
+        "counter",
+        "Submit admission outcomes.",
+    );
+    for (decision, c) in [
+        ("admitted", &r.coord.admitted_total),
+        ("throttled_backpressure", &r.coord.throttled_backpressure_total),
+        ("throttled_quota", &r.coord.throttled_quota_total),
+        ("rejected_infeasible", &r.coord.rejected_infeasible_total),
+    ] {
+        sample(
+            &mut out,
+            "frenzy_admission_decisions_total",
+            &[("decision", decision)],
+            &c.get().to_string(),
+        );
+    }
+
+    // --- engine --------------------------------------------------------
+    head(&mut out, "frenzy_jobs", "gauge", "Live jobs by state.");
+    sample(&mut out, "frenzy_jobs", &[("state", "queued")], &r.engine.jobs_queued.get().to_string());
+    sample(
+        &mut out,
+        "frenzy_jobs",
+        &[("state", "running")],
+        &r.engine.jobs_running.get().to_string(),
+    );
+    head(
+        &mut out,
+        "frenzy_sched_rounds_total",
+        "counter",
+        "Executed scheduling rounds (rounds with an empty queue are not counted).",
+    );
+    sample(&mut out, "frenzy_sched_rounds_total", &[], &r.engine.rounds_total.get().to_string());
+    head(
+        &mut out,
+        "frenzy_sched_round_phase_seconds",
+        "histogram",
+        "Scheduler round wall time split by phase: candidate_scan (fair ordering + view), plan_rank (MARP plan + rank), placement (applying decisions).",
+    );
+    for (phase, h) in [
+        ("candidate_scan", &r.engine.phase_candidate_scan),
+        ("plan_rank", &r.engine.phase_plan_rank),
+        ("placement", &r.engine.phase_placement),
+    ] {
+        histogram(&mut out, "frenzy_sched_round_phase_seconds", &[("phase", phase)], h);
+    }
+    head(
+        &mut out,
+        "frenzy_sched_work_units_total",
+        "counter",
+        "Abstract scheduler work units consumed (the unit the paper's overhead claim is measured in).",
+    );
+    sample(
+        &mut out,
+        "frenzy_sched_work_units_total",
+        &[],
+        &r.engine.work_units_total.get().to_string(),
+    );
+    head(
+        &mut out,
+        "frenzy_engine_events_total",
+        "counter",
+        "Cluster events appended to the audit log, by kind.",
+    );
+    for (kind, c) in &r.engine.events {
+        sample(
+            &mut out,
+            "frenzy_engine_events_total",
+            &[("kind", kind)],
+            &c.get().to_string(),
+        );
+    }
+
+    // --- durability ----------------------------------------------------
+    head(&mut out, "frenzy_wal_appends_total", "counter", "Records appended to the WAL.");
+    sample(
+        &mut out,
+        "frenzy_wal_appends_total",
+        &[],
+        &r.durability.wal_appends_total.get().to_string(),
+    );
+    head(
+        &mut out,
+        "frenzy_wal_append_bytes_total",
+        "counter",
+        "Framed bytes appended to the WAL.",
+    );
+    sample(
+        &mut out,
+        "frenzy_wal_append_bytes_total",
+        &[],
+        &r.durability.wal_append_bytes_total.get().to_string(),
+    );
+    head(&mut out, "frenzy_wal_fsync_seconds", "histogram", "WAL fsync (sync_data) latency.");
+    histogram(&mut out, "frenzy_wal_fsync_seconds", &[], &r.durability.fsync_seconds);
+    head(&mut out, "frenzy_wal_segments", "gauge", "Live WAL segment files.");
+    sample(&mut out, "frenzy_wal_segments", &[], &r.durability.wal_segments.get().to_string());
+    head(&mut out, "frenzy_wal_bytes", "gauge", "Total bytes across live WAL segments.");
+    sample(&mut out, "frenzy_wal_bytes", &[], &r.durability.wal_bytes.get().to_string());
+    head(&mut out, "frenzy_snapshots_total", "counter", "Snapshots persisted.");
+    sample(
+        &mut out,
+        "frenzy_snapshots_total",
+        &[],
+        &r.durability.snapshots_total.get().to_string(),
+    );
+    head(
+        &mut out,
+        "frenzy_snapshot_age_seconds",
+        "gauge",
+        "Engine-time seconds since the newest snapshot (0 when durability is off).",
+    );
+    sample(
+        &mut out,
+        "frenzy_snapshot_age_seconds",
+        &[],
+        &fmt_f64(r.durability.snapshot_age_seconds.get()),
+    );
+    head(
+        &mut out,
+        "frenzy_snapshot_covered_seq",
+        "gauge",
+        "Highest WAL sequence covered by the newest snapshot.",
+    );
+    sample(
+        &mut out,
+        "frenzy_snapshot_covered_seq",
+        &[],
+        &r.durability.snapshot_covered_seq.get().to_string(),
+    );
+
+    // --- runtime -------------------------------------------------------
+    head(
+        &mut out,
+        "frenzy_node_device_mem_used_bytes",
+        "gauge",
+        "Device-memory bytes pinned per node (the OOM ledger).",
+    );
+    for (node, v) in r.runtime.device_mem_used.snapshot() {
+        let n = node.to_string();
+        sample(&mut out, "frenzy_node_device_mem_used_bytes", &[("node", &n)], &fmt_f64(v));
+    }
+    head(
+        &mut out,
+        "frenzy_node_device_mem_capacity_bytes",
+        "gauge",
+        "Per-GPU device-memory capacity per node.",
+    );
+    for (node, v) in r.runtime.device_mem_capacity.snapshot() {
+        let n = node.to_string();
+        sample(&mut out, "frenzy_node_device_mem_capacity_bytes", &[("node", &n)], &fmt_f64(v));
+    }
+    head(&mut out, "frenzy_oom_events_total", "counter", "Out-of-memory events.");
+    sample(
+        &mut out,
+        "frenzy_oom_events_total",
+        &[],
+        &r.runtime.oom_events_total.get().to_string(),
+    );
+    head(&mut out, "frenzy_drains_total", "counter", "Graceful drains completed.");
+    sample(&mut out, "frenzy_drains_total", &[], &r.runtime.drains_total.get().to_string());
+    head(
+        &mut out,
+        "frenzy_crash_requeues_total",
+        "counter",
+        "Jobs requeued after a node crash.",
+    );
+    sample(
+        &mut out,
+        "frenzy_crash_requeues_total",
+        &[],
+        &r.runtime.crash_requeues_total.get().to_string(),
+    );
+    head(&mut out, "frenzy_quarantines_total", "counter", "Nodes quarantined for flapping.");
+    sample(
+        &mut out,
+        "frenzy_quarantines_total",
+        &[],
+        &r.runtime.quarantines_total.get().to_string(),
+    );
+    head(
+        &mut out,
+        "frenzy_mem_prediction_samples_total",
+        "counter",
+        "Predicted-vs-observed memory pairs recorded.",
+    );
+    sample(
+        &mut out,
+        "frenzy_mem_prediction_samples_total",
+        &[],
+        &r.runtime.mem_pred_samples_total.get().to_string(),
+    );
+    head(
+        &mut out,
+        "frenzy_mem_prediction_accuracy_avg",
+        "gauge",
+        "Mean memory-prediction accuracy (the paper's >92% claim).",
+    );
+    sample(
+        &mut out,
+        "frenzy_mem_prediction_accuracy_avg",
+        &[],
+        &fmt_f64(r.runtime.mem_pred_accuracy_avg.get()),
+    );
+    head(
+        &mut out,
+        "frenzy_mem_prediction_accuracy_min",
+        "gauge",
+        "Worst-case memory-prediction accuracy.",
+    );
+    sample(
+        &mut out,
+        "frenzy_mem_prediction_accuracy_min",
+        &[],
+        &fmt_f64(r.runtime.mem_pred_accuracy_min.get()),
+    );
+
+    out
+}
+
+// ---------------------------------------------------------------------
+// Parsing + conformance checking
+// ---------------------------------------------------------------------
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_value(s: &str) -> Result<f64, String> {
+    match s {
+        "+Inf" | "Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        _ => s.parse::<f64>().map_err(|_| format!("bad sample value '{s}'")),
+    }
+}
+
+/// Parse one `name{labels} value` line.
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    // Validate the value token shared by both shapes: `value` optionally
+    // followed by one timestamp, nothing further.
+    let read_value = |tail: &str| -> Result<f64, String> {
+        let mut it = tail.split_whitespace();
+        let v = it.next().ok_or_else(|| format!("no value in '{line}'"))?;
+        if it.next().is_some() && it.next().is_some() {
+            return Err(format!("trailing garbage in '{line}'"));
+        }
+        parse_value(v)
+    };
+
+    let Some(brace) = line.find('{') else {
+        let mut it = line.split_whitespace();
+        let name = it.next().ok_or("empty sample line")?;
+        if !valid_metric_name(name) {
+            return Err(format!("bad metric name '{name}'"));
+        }
+        let tail = line[name.len()..].trim_start();
+        return Ok(Sample {
+            name: name.to_string(),
+            labels: Vec::new(),
+            value: read_value(tail)?,
+        });
+    };
+
+    let name = line[..brace].trim();
+    if !valid_metric_name(name) {
+        return Err(format!("bad metric name '{name}'"));
+    }
+    let rest = &line[brace + 1..];
+    let bytes = rest.as_bytes();
+    let mut labels = Vec::new();
+    let mut i = 0usize;
+    loop {
+        if bytes.get(i) == Some(&b'}') {
+            i += 1;
+            break;
+        }
+        let eq = rest[i..]
+            .find('=')
+            .map(|o| i + o)
+            .ok_or_else(|| format!("missing '=' in labels of '{line}'"))?;
+        let lname = rest[i..eq].trim();
+        if !valid_label_name(lname) {
+            return Err(format!("bad label name '{lname}' in '{line}'"));
+        }
+        if bytes.get(eq + 1) != Some(&b'"') {
+            return Err(format!("label value not quoted in '{line}'"));
+        }
+        // Scan for the closing quote, honoring \\ \" \n escapes.
+        let mut val = String::new();
+        let mut j = eq + 2;
+        loop {
+            match bytes.get(j) {
+                None => return Err(format!("unterminated label value in '{line}'")),
+                Some(b'\\') => match bytes.get(j + 1) {
+                    Some(b'\\') => {
+                        val.push('\\');
+                        j += 2;
+                    }
+                    Some(b'"') => {
+                        val.push('"');
+                        j += 2;
+                    }
+                    Some(b'n') => {
+                        val.push('\n');
+                        j += 2;
+                    }
+                    _ => return Err(format!("bad escape in label value of '{line}'")),
+                },
+                Some(b'"') => {
+                    j += 1;
+                    break;
+                }
+                Some(_) => {
+                    let c = rest[j..].chars().next().ok_or("truncated char")?;
+                    val.push(c);
+                    j += c.len_utf8();
+                }
+            }
+        }
+        labels.push((lname.to_string(), val));
+        i = j;
+        match bytes.get(i) {
+            Some(b',') => i += 1,
+            Some(b'}') => {}
+            _ => return Err(format!("expected ',' or '}}' after label in '{line}'")),
+        }
+    }
+    Ok(Sample { name: name.to_string(), labels, value: read_value(rest[i..].trim_start())? })
+}
+
+/// Parse every sample line (syntax check only; `# HELP`/`# TYPE`/comments
+/// and blank lines are skipped).
+pub fn parse(text: &str) -> Result<Vec<Sample>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push(
+            parse_sample(line).map_err(|e| format!("line {}: {e}", lineno + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Full conformance check of an exposition document:
+///
+/// - every line parses (samples, `# HELP`, `# TYPE`, comments, blanks);
+/// - metric and label names are well-formed;
+/// - every sample's family has `# HELP` and `# TYPE` declared *before* it,
+///   each exactly once;
+/// - `# TYPE` is one of counter/gauge/histogram/summary/untyped;
+/// - histogram families carry a `+Inf` bucket per label set, cumulative
+///   bucket counts are non-decreasing in `le`, and `_count` equals the
+///   `+Inf` bucket.
+pub fn validate(text: &str) -> Result<(), String> {
+    use std::collections::{BTreeMap, HashMap, HashSet};
+    let mut helps: HashSet<String> = HashSet::new();
+    let mut types: HashMap<String, String> = HashMap::new();
+    // histogram name -> (labelset key -> (le -> cumulative count))
+    type Buckets = BTreeMap<String, BTreeMap<u64, (f64, f64)>>;
+    let mut hist_buckets: HashMap<String, Buckets> = HashMap::new();
+    let mut hist_counts: HashMap<String, BTreeMap<String, f64>> = HashMap::new();
+    let mut hist_sums: HashMap<String, HashSet<String>> = HashMap::new();
+
+    let label_key = |labels: &[(String, String)]| {
+        let mut ls: Vec<String> = labels
+            .iter()
+            .filter(|(k, _)| k != "le")
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        ls.sort();
+        ls.join(",")
+    };
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let n = lineno + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or_default();
+            if !valid_metric_name(name) {
+                return Err(format!("line {n}: bad HELP metric name '{name}'"));
+            }
+            if !helps.insert(name.to_string()) {
+                return Err(format!("line {n}: duplicate HELP for '{name}'"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or_default();
+            let typ = it.next().unwrap_or_default();
+            if !valid_metric_name(name) {
+                return Err(format!("line {n}: bad TYPE metric name '{name}'"));
+            }
+            if !matches!(typ, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {n}: bad TYPE '{typ}' for '{name}'"));
+            }
+            if types.insert(name.to_string(), typ.to_string()).is_some() {
+                return Err(format!("line {n}: duplicate TYPE for '{name}'"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment
+        }
+        let s = parse_sample(line).map_err(|e| format!("line {n}: {e}"))?;
+        // Resolve the family: histogram series use suffixed sample names.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                let base = s.name.strip_suffix(suf)?;
+                (types.get(base).map(String::as_str) == Some("histogram"))
+                    .then(|| base.to_string())
+            })
+            .unwrap_or_else(|| s.name.clone());
+        let Some(typ) = types.get(&family) else {
+            return Err(format!(
+                "line {n}: sample '{}' has no preceding # TYPE for '{family}'",
+                s.name
+            ));
+        };
+        if !helps.contains(&family) {
+            return Err(format!(
+                "line {n}: sample '{}' has no preceding # HELP for '{family}'",
+                s.name
+            ));
+        }
+        if typ == "counter" && s.value < 0.0 {
+            return Err(format!("line {n}: counter '{}' is negative", s.name));
+        }
+        if typ == "histogram" {
+            let key = label_key(&s.labels);
+            if s.name.ends_with("_bucket") {
+                let le = s
+                    .labels
+                    .iter()
+                    .find(|(k, _)| k == "le")
+                    .map(|(_, v)| v.as_str())
+                    .ok_or_else(|| format!("line {n}: bucket without le label"))?;
+                let le_v = parse_value(le).map_err(|e| format!("line {n}: {e}"))?;
+                hist_buckets
+                    .entry(family.clone())
+                    .or_default()
+                    .entry(key)
+                    .or_default()
+                    .insert(le_v.to_bits(), (le_v, s.value));
+            } else if s.name.ends_with("_count") {
+                hist_counts.entry(family.clone()).or_default().insert(key, s.value);
+            } else if s.name.ends_with("_sum") {
+                hist_sums.entry(family.clone()).or_default().insert(key);
+            } else {
+                return Err(format!(
+                    "line {n}: bare sample '{}' under histogram family '{family}'",
+                    s.name
+                ));
+            }
+        }
+    }
+
+    // Histogram invariants per (family, label set).
+    for (family, by_labels) in &hist_buckets {
+        for (key, buckets) in by_labels {
+            let mut series: Vec<(f64, f64)> = buckets.values().copied().collect();
+            series.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("le comparable"));
+            let Some(&(last_le, inf_count)) = series.last() else {
+                continue;
+            };
+            if last_le != f64::INFINITY {
+                return Err(format!("histogram '{family}'{{{key}}} missing +Inf bucket"));
+            }
+            let mut prev = 0.0;
+            for &(le, c) in &series {
+                if c + 1e-9 < prev {
+                    return Err(format!(
+                        "histogram '{family}'{{{key}}} buckets not cumulative at le={le}"
+                    ));
+                }
+                prev = c;
+            }
+            match hist_counts.get(family).and_then(|m| m.get(key)) {
+                None => {
+                    return Err(format!("histogram '{family}'{{{key}}} missing _count"))
+                }
+                Some(&count) if (count - inf_count).abs() > 1e-9 => {
+                    return Err(format!(
+                        "histogram '{family}'{{{key}}} _count {count} != +Inf bucket {inf_count}"
+                    ));
+                }
+                Some(_) => {}
+            }
+            if !hist_sums.get(family).is_some_and(|s| s.contains(key)) {
+                return Err(format!("histogram '{family}'{{{key}}} missing _sum"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// First sample matching `name` whose labels include every `(k, v)` in
+/// `want`.
+pub fn sample_value(samples: &[Sample], name: &str, want: &[(&str, &str)]) -> Option<f64> {
+    samples
+        .iter()
+        .find(|s| {
+            s.name == name
+                && want.iter().all(|(k, v)| {
+                    s.labels.iter().any(|(lk, lv)| lk == k && lv == v)
+                })
+        })
+        .map(|s| s.value)
+}
+
+/// Cumulative `(le, count)` series of `name_bucket` samples matching
+/// `want`, sorted by `le`.
+pub fn bucket_series(samples: &[Sample], name: &str, want: &[(&str, &str)]) -> Vec<(f64, f64)> {
+    let bucket = format!("{name}_bucket");
+    let mut out: Vec<(f64, f64)> = samples
+        .iter()
+        .filter(|s| {
+            s.name == bucket
+                && want.iter().all(|(k, v)| {
+                    s.labels.iter().any(|(lk, lv)| lk == k && lv == v)
+                })
+        })
+        .filter_map(|s| {
+            let le = s.labels.iter().find(|(k, _)| k == "le")?;
+            parse_value(&le.1).ok().map(|le| (le, s.value))
+        })
+        .collect();
+    out.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("le comparable"));
+    out
+}
+
+/// Approximate quantile from a cumulative bucket series (linear
+/// interpolation inside the winning bucket, like PromQL's
+/// `histogram_quantile`). Returns `None` on an empty histogram.
+pub fn quantile(series: &[(f64, f64)], q: f64) -> Option<f64> {
+    let total = series.last()?.1;
+    if total <= 0.0 {
+        return None;
+    }
+    let rank = q.clamp(0.0, 1.0) * total;
+    let mut prev_le = 0.0;
+    let mut prev_c = 0.0;
+    for &(le, c) in series {
+        if c >= rank {
+            if le.is_infinite() {
+                return Some(prev_le);
+            }
+            let span = (c - prev_c).max(1e-12);
+            return Some(prev_le + (le - prev_le) * ((rank - prev_c) / span));
+        }
+        prev_le = le;
+        prev_c = c;
+    }
+    Some(prev_le)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_passes_own_validator() {
+        // Touch a few metrics so non-zero values render too.
+        let r = reg();
+        r.http.record("/v1/jobs", 202, 0.0012);
+        r.http.record("/v1/jobs/<id>", 404, 0.00004);
+        r.engine.phase_plan_rank.observe(0.003);
+        r.runtime.device_mem_used.set_all([(0, 1e9), (1, 2e9)]);
+        let text = render();
+        validate(&text).expect("rendered exposition must validate");
+        let samples = parse(&text).unwrap();
+        assert!(
+            sample_value(
+                &samples,
+                "frenzy_http_requests_total",
+                &[("route", "/v1/jobs"), ("code", "2xx")],
+            )
+            .unwrap()
+                >= 1.0
+        );
+        assert_eq!(
+            sample_value(
+                &samples,
+                "frenzy_node_device_mem_used_bytes",
+                &[("node", "1")],
+            ),
+            Some(2e9)
+        );
+        assert_eq!(sample_value(&samples, "frenzy_build_info", &[]), Some(1.0));
+    }
+
+    #[test]
+    fn sample_parser_handles_labels_and_escapes() {
+        let s = parse_sample(r#"m_x{a="1",b="q\"uo\\te\nnl"} 2.5"#).unwrap();
+        assert_eq!(s.name, "m_x");
+        assert_eq!(s.labels[0], ("a".into(), "1".into()));
+        assert_eq!(s.labels[1], ("b".into(), "q\"uo\\te\nnl".into()));
+        assert_eq!(s.value, 2.5);
+        let s = parse_sample("plain 7").unwrap();
+        assert!(s.labels.is_empty());
+        assert_eq!(s.value, 7.0);
+        let s = parse_sample("b{le=\"+Inf\"} 3").unwrap();
+        assert_eq!(s.labels[0].1, "+Inf");
+        assert!(parse_sample("1bad 2").is_err());
+        assert!(parse_sample("m{a=1} 2").is_err());
+        assert!(parse_sample("m{a=\"x\"").is_err());
+        assert!(parse_sample("m{a=\"x\"} ").is_err());
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        // Sample without TYPE/HELP.
+        assert!(validate("nometa 1\n").is_err());
+        // Duplicate TYPE.
+        let doc = "# HELP m h\n# TYPE m counter\n# TYPE m counter\nm 1\n";
+        assert!(validate(doc).is_err());
+        // Negative counter.
+        let doc = "# HELP m h\n# TYPE m counter\nm -1\n";
+        assert!(validate(doc).is_err());
+        // Histogram without +Inf.
+        let doc = "# HELP h x\n# TYPE h histogram\nh_bucket{le=\"1\"} 1\nh_sum 1\nh_count 1\n";
+        assert!(validate(doc).is_err());
+        // Histogram with non-cumulative buckets.
+        let doc = "# HELP h x\n# TYPE h histogram\nh_bucket{le=\"1\"} 5\nh_bucket{le=\"+Inf\"} 3\nh_sum 1\nh_count 3\n";
+        assert!(validate(doc).is_err());
+        // Count mismatch.
+        let doc = "# HELP h x\n# TYPE h histogram\nh_bucket{le=\"+Inf\"} 3\nh_sum 1\nh_count 4\n";
+        assert!(validate(doc).is_err());
+        // A correct histogram passes.
+        let doc = "# HELP h x\n# TYPE h histogram\nh_bucket{le=\"1\"} 1\nh_bucket{le=\"+Inf\"} 3\nh_sum 1.5\nh_count 3\n";
+        validate(doc).unwrap();
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        // 10 obs ≤ 1, 10 more ≤ 2 (cumulative 20), 0 beyond.
+        let series = vec![(1.0, 10.0), (2.0, 20.0), (f64::INFINITY, 20.0)];
+        let p50 = quantile(&series, 0.5).unwrap();
+        assert!((p50 - 1.0).abs() < 1e-9, "{p50}");
+        let p75 = quantile(&series, 0.75).unwrap();
+        assert!((p75 - 1.5).abs() < 1e-9, "{p75}");
+        assert!(quantile(&[], 0.5).is_none());
+        // Rank falling in +Inf reports the last finite bound.
+        let series = vec![(1.0, 1.0), (f64::INFINITY, 10.0)];
+        assert_eq!(quantile(&series, 0.99).unwrap(), 1.0);
+    }
+}

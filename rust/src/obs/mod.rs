@@ -1,0 +1,588 @@
+//! Process-wide telemetry: lock-free counters, gauges, and fixed-bucket
+//! histograms, rendered as Prometheus text at `GET /metrics`.
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Determinism is untouchable.** Telemetry is write-only from the
+//!    system's point of view: no scheduling decision, WAL record, snapshot,
+//!    or journaled engine field ever reads a metric. Wall-clock phase
+//!    timings recorded here never enter deterministic state — the engine's
+//!    journaled `sched_wall_s` record (PR 6) is produced exactly as before,
+//!    independent of this module. Flipping [`set_enabled`] changes nothing
+//!    but whether atomics are bumped (a differential test pins this).
+//! 2. **Lock-free on the hot path.** Every per-request / per-append /
+//!    per-round record is a handful of relaxed atomic ops on
+//!    pre-registered metrics. The only lock in the module guards the
+//!    per-node gauge maps ([`DynGauges`]), written once per coordinator
+//!    loop iteration and read at scrape time — never on a hot path.
+//! 3. **One registry per process.** Tests that spawn several coordinators
+//!    in one process share the registry; counters aggregate across them.
+//!    That matches Prometheus semantics (a scrape sees the process, not a
+//!    logical instance) and keeps registration allocation-free after the
+//!    first use.
+
+pub mod expo;
+pub mod timeline;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{OnceLock, RwLock};
+
+/// Global recording switch. Rendering still works when disabled — the
+/// families and label sets are pre-registered — but no new values land.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Turn recording on/off process-wide (the metrics-on vs metrics-off
+/// differential test flips this; operators never need to).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Monotonic counter. `store` exists for values mirrored from an
+/// authoritative monotonic source (e.g. `RunAggregates` counts published
+/// once per coordinator loop) — the source is monotonic, so the exposed
+/// series is too.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn store(&self, v: u64) {
+        if enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Integer gauge (can go up and down); stored as the two's-complement
+/// bits of an `i64` so `add`/`sub` stay single atomic ops.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.0.store(v as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn add(&self, n: i64) {
+        if enabled() {
+            self.0.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.add(-n);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed) as i64
+    }
+}
+
+/// Float gauge (f64 bits in an atomic; last-writer-wins set only).
+#[derive(Default)]
+pub struct GaugeF(AtomicU64);
+
+impl GaugeF {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: f64) {
+        if enabled() {
+            self.0.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: per-bucket atomic counts plus a sum kept in
+/// micro-units (for seconds histograms that is microseconds — overflow at
+/// ~584k years of accumulated latency). Buckets are *non*-cumulative in
+/// memory; the renderer accumulates them into Prometheus' cumulative
+/// `le` form.
+pub struct Histogram {
+    bounds: &'static [f64],
+    /// `bounds.len() + 1` slots; the last is the `+Inf` overflow bucket.
+    counts: Vec<AtomicU64>,
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &'static [f64]) -> Self {
+        let counts = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Self { bounds, counts, sum_micros: AtomicU64::new(0), count: AtomicU64::new(0) }
+    }
+
+    pub fn observe(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        let idx =
+            self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add((v.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn bounds(&self) -> &'static [f64] {
+        self.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts, `+Inf` last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge family with one dynamic integer label (node ids): replaced
+/// wholesale by the coordinator once per loop iteration, read at scrape.
+/// The lock is deliberate — this is not a hot path (see module docs).
+#[derive(Default)]
+pub struct DynGauges {
+    map: RwLock<std::collections::BTreeMap<u64, f64>>,
+}
+
+impl DynGauges {
+    pub fn set_all(&self, entries: impl IntoIterator<Item = (u64, f64)>) {
+        if !enabled() {
+            return;
+        }
+        let mut m = self.map.write().expect("obs gauge map poisoned");
+        m.clear();
+        m.extend(entries);
+    }
+
+    pub fn snapshot(&self) -> Vec<(u64, f64)> {
+        self.map
+            .read()
+            .expect("obs gauge map poisoned")
+            .iter()
+            .map(|(&k, &v)| (k, v))
+            .collect()
+    }
+}
+
+/// Latency bucket bounds in seconds: a 1–2.5–5 decade ladder from 1µs to
+/// 2.5s (`+Inf` catches the rest). Shared by every latency histogram so
+/// dashboards can compare families bucket-for-bucket.
+pub const LATENCY_BOUNDS: &[f64] = &[
+    1e-6, 2.5e-6, 5e-6, 1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3,
+    1e-2, 2.5e-2, 5e-2, 1e-1, 2.5e-1, 5e-1, 1.0, 2.5,
+];
+
+/// Normalized route labels, pre-registered so per-request recording never
+/// allocates or locks. Unknown paths fall into `"other"`.
+pub const ROUTES: &[&str] = &[
+    "/metrics",
+    "/v1/healthz",
+    "/v1/cluster",
+    "/v1/cluster/events",
+    "/v1/cluster/scale",
+    "/v1/cluster/heartbeat",
+    "/v1/jobs",
+    "/v1/jobs:batch",
+    "/v1/jobs/<id>",
+    "/v1/jobs/<id>/cancel",
+    "/v1/jobs/<id>/timeline",
+    "/v1/predict",
+    "/v1/report",
+    "/v1/durability",
+    "/v1/version",
+    "other",
+];
+
+/// Map a normalized request path to its pre-registered route label.
+pub fn route_label(path: &str) -> &'static str {
+    if let Some(rest) = path.strip_prefix("/v1/jobs/") {
+        if !rest.is_empty() {
+            return if rest.ends_with("/cancel") {
+                "/v1/jobs/<id>/cancel"
+            } else if rest.ends_with("/timeline") {
+                "/v1/jobs/<id>/timeline"
+            } else if !rest.contains('/') {
+                "/v1/jobs/<id>"
+            } else {
+                "other"
+            };
+        }
+    }
+    ROUTES.iter().find(|&&r| r == path).copied().unwrap_or("other")
+}
+
+/// Per-route request metrics.
+pub struct RouteMetrics {
+    pub route: &'static str,
+    /// Requests by status class; index 0..=4 ↔ 1xx..5xx.
+    pub by_class: [Counter; 5],
+    pub latency: Histogram,
+}
+
+pub struct HttpMetrics {
+    pub routes: Vec<RouteMetrics>,
+    pub inflight: Gauge,
+    /// Load shed at the acceptor (queue full → 503, request unread).
+    pub shed_503: Counter,
+    /// Admission throttles answered 429 (backpressure or quota).
+    pub shed_429: Counter,
+    pub sse_connections: Counter,
+}
+
+impl HttpMetrics {
+    fn new() -> Self {
+        let routes = ROUTES
+            .iter()
+            .map(|&route| RouteMetrics {
+                route,
+                by_class: Default::default(),
+                latency: Histogram::new(LATENCY_BOUNDS),
+            })
+            .collect();
+        Self {
+            routes,
+            inflight: Gauge::new(),
+            shed_503: Counter::new(),
+            shed_429: Counter::new(),
+            sse_connections: Counter::new(),
+        }
+    }
+
+    pub fn route(&self, label: &str) -> &RouteMetrics {
+        self.routes
+            .iter()
+            .find(|r| r.route == label)
+            .unwrap_or_else(|| self.routes.last().expect("\"other\" route registered"))
+    }
+
+    /// Record one served request (count by status class + latency).
+    pub fn record(&self, route: &'static str, status: u16, seconds: f64) {
+        let r = self.route(route);
+        let class = ((status / 100).clamp(1, 5) - 1) as usize;
+        r.by_class[class].inc();
+        r.latency.observe(seconds);
+        if status == 429 {
+            self.shed_429.inc();
+        }
+    }
+}
+
+pub struct CoordMetrics {
+    /// Messages sent to the coordinator mailbox and not yet received.
+    pub mailbox_depth: Gauge,
+    pub messages_total: Counter,
+    /// Admission outcomes; `admitted` is incremented at the decision
+    /// point, the throttle/reject counts mirror the coordinator's
+    /// authoritative counters once per loop.
+    pub admitted_total: Counter,
+    pub throttled_backpressure_total: Counter,
+    pub throttled_quota_total: Counter,
+    pub rejected_infeasible_total: Counter,
+}
+
+impl CoordMetrics {
+    fn new() -> Self {
+        Self {
+            mailbox_depth: Gauge::new(),
+            messages_total: Counter::new(),
+            admitted_total: Counter::new(),
+            throttled_backpressure_total: Counter::new(),
+            throttled_quota_total: Counter::new(),
+            rejected_infeasible_total: Counter::new(),
+        }
+    }
+}
+
+/// The scheduler-phase split (candidate-scan / plan-rank / placement) and
+/// the per-event-kind audit counters. Phase timings are wall-clock
+/// *observations* on both the sim and live paths; they are never written
+/// into journaled state (the engine's `sched_wall_s` record is produced
+/// independently, exactly as before this module existed).
+pub struct EngineMetrics {
+    pub rounds_total: Counter,
+    pub phase_candidate_scan: Histogram,
+    pub phase_plan_rank: Histogram,
+    pub phase_placement: Histogram,
+    pub work_units_total: Counter,
+    pub jobs_queued: Gauge,
+    pub jobs_running: Gauge,
+    /// `(wire kind label, counter)` for every [`EventKind`] variant.
+    ///
+    /// [`EventKind`]: crate::engine::events::EventKind
+    pub events: Vec<(&'static str, Counter)>,
+}
+
+/// Wire labels of every `EventKind` variant (the same strings the event
+/// log's JSON codec emits).
+pub const EVENT_KINDS: &[&str] = &[
+    "arrival",
+    "placed",
+    "finished",
+    "oomed",
+    "oom_observed",
+    "drain_requested",
+    "drained",
+    "resumed_from_ckpt",
+    "preempted",
+    "rejected",
+    "cancelled",
+    "node_joined",
+    "node_left",
+    "node_retired",
+    "node_crash",
+    "node_quarantined",
+    "node_probation",
+    "node_slowdown",
+];
+
+impl EngineMetrics {
+    fn new() -> Self {
+        Self {
+            rounds_total: Counter::new(),
+            phase_candidate_scan: Histogram::new(LATENCY_BOUNDS),
+            phase_plan_rank: Histogram::new(LATENCY_BOUNDS),
+            phase_placement: Histogram::new(LATENCY_BOUNDS),
+            work_units_total: Counter::new(),
+            jobs_queued: Gauge::new(),
+            jobs_running: Gauge::new(),
+            events: EVENT_KINDS.iter().map(|&k| (k, Counter::new())).collect(),
+        }
+    }
+
+    pub fn event(&self, kind: &str) -> Option<&Counter> {
+        self.events.iter().find(|(k, _)| *k == kind).map(|(_, c)| c)
+    }
+}
+
+pub struct DurabilityMetrics {
+    pub wal_appends_total: Counter,
+    pub wal_append_bytes_total: Counter,
+    /// Latency of `fsync` (`sync_data`) calls on the active WAL segment.
+    pub fsync_seconds: Histogram,
+    pub wal_segments: Gauge,
+    pub wal_bytes: Gauge,
+    pub snapshots_total: Counter,
+    pub snapshot_age_seconds: GaugeF,
+    pub snapshot_covered_seq: Gauge,
+}
+
+impl DurabilityMetrics {
+    fn new() -> Self {
+        Self {
+            wal_appends_total: Counter::new(),
+            wal_append_bytes_total: Counter::new(),
+            fsync_seconds: Histogram::new(LATENCY_BOUNDS),
+            wal_segments: Gauge::new(),
+            wal_bytes: Gauge::new(),
+            snapshots_total: Counter::new(),
+            snapshot_age_seconds: GaugeF::new(),
+            snapshot_covered_seq: Gauge::new(),
+        }
+    }
+}
+
+pub struct RuntimeMetrics {
+    /// Device-memory bytes pinned per node (label: node id).
+    pub device_mem_used: DynGauges,
+    /// Per-GPU device-memory capacity per node (label: node id).
+    pub device_mem_capacity: DynGauges,
+    pub oom_events_total: Counter,
+    pub drains_total: Counter,
+    pub crash_requeues_total: Counter,
+    pub quarantines_total: Counter,
+    pub mem_pred_samples_total: Counter,
+    pub mem_pred_accuracy_avg: GaugeF,
+    pub mem_pred_accuracy_min: GaugeF,
+}
+
+impl RuntimeMetrics {
+    fn new() -> Self {
+        Self {
+            device_mem_used: DynGauges::default(),
+            device_mem_capacity: DynGauges::default(),
+            oom_events_total: Counter::new(),
+            drains_total: Counter::new(),
+            crash_requeues_total: Counter::new(),
+            quarantines_total: Counter::new(),
+            mem_pred_samples_total: Counter::new(),
+            mem_pred_accuracy_avg: GaugeF::new(),
+            mem_pred_accuracy_min: GaugeF::new(),
+        }
+    }
+}
+
+/// The process-wide registry. All families and static label sets are
+/// built eagerly on first access, so a scrape always renders the full
+/// schema (with zero values) even before any traffic.
+pub struct Registry {
+    pub http: HttpMetrics,
+    pub coord: CoordMetrics,
+    pub engine: EngineMetrics,
+    pub durability: DurabilityMetrics,
+    pub runtime: RuntimeMetrics,
+    start: std::time::Instant,
+}
+
+impl Registry {
+    fn new() -> Self {
+        Self {
+            http: HttpMetrics::new(),
+            coord: CoordMetrics::new(),
+            engine: EngineMetrics::new(),
+            durability: DurabilityMetrics::new(),
+            runtime: RuntimeMetrics::new(),
+            start: std::time::Instant::now(),
+        }
+    }
+
+    /// Seconds since the registry was first touched (≈ process uptime).
+    /// Render-time only; never feeds back into the system.
+    pub fn uptime_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// The process-wide registry (created on first use).
+pub fn reg() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+/// Crate version baked in at compile time.
+pub fn crate_version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Git commit the binary was built from (`build.rs` asks `git rev-parse`;
+/// builds outside a checkout report `"unknown"`).
+pub fn git_sha() -> &'static str {
+    match option_env!("FRENZY_GIT_SHA") {
+        Some(s) if !s.is_empty() => s,
+        _ => "unknown",
+    }
+}
+
+/// Subsystems compiled into this build, reported by `GET /v1/version`
+/// (there are no cargo features — the list names the shipped
+/// capabilities so fleet debugging can distinguish binary generations).
+pub const FEATURES: &[&str] =
+    &["durability", "sse", "faults", "tenancy", "workload-gen", "obs"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.add(3);
+        g.sub(5);
+        assert_eq!(g.get(), -2);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        let f = GaugeF::new();
+        f.set(0.923);
+        assert!((f.get() - 0.923).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        let h = Histogram::new(&[0.001, 0.01, 0.1]);
+        h.observe(0.0005); // bucket 0
+        h.observe(0.001); // le is inclusive: bucket 0
+        h.observe(0.05); // bucket 2
+        h.observe(10.0); // +Inf
+        assert_eq!(h.bucket_counts(), vec![2, 0, 1, 1]);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 10.0515).abs() < 1e-3, "{}", h.sum());
+    }
+
+    #[test]
+    fn route_labels_normalize() {
+        assert_eq!(route_label("/v1/jobs"), "/v1/jobs");
+        assert_eq!(route_label("/v1/jobs/42"), "/v1/jobs/<id>");
+        assert_eq!(route_label("/v1/jobs/42/cancel"), "/v1/jobs/<id>/cancel");
+        assert_eq!(route_label("/v1/jobs/42/timeline"), "/v1/jobs/<id>/timeline");
+        assert_eq!(route_label("/metrics"), "/metrics");
+        assert_eq!(route_label("/nope"), "other");
+        assert_eq!(route_label("/v1/jobs/1/2/3"), "other");
+    }
+
+    #[test]
+    fn disabled_recording_is_inert_but_renderable() {
+        let c = Counter::new();
+        set_enabled(false);
+        c.inc();
+        assert_eq!(c.get(), 0);
+        set_enabled(true);
+        c.inc();
+        assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn dyn_gauges_replace_wholesale() {
+        let d = DynGauges::default();
+        d.set_all([(0, 1.0), (1, 2.0)]);
+        d.set_all([(1, 3.0)]);
+        assert_eq!(d.snapshot(), vec![(1, 3.0)]);
+    }
+
+    #[test]
+    fn event_kind_labels_cover_every_variant() {
+        use crate::engine::events::EventKind;
+        // Compile-time-ish guard: every variant's label is registered.
+        let samples: Vec<EventKind> = vec![
+            EventKind::Arrival { job: 1 },
+            EventKind::Finished { job: 1, epoch: 1 },
+            EventKind::NodeRetired { node: 0 },
+        ];
+        for s in samples {
+            assert!(
+                EVENT_KINDS.contains(&s.label()),
+                "unregistered event kind {}",
+                s.label()
+            );
+        }
+    }
+}

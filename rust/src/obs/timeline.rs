@@ -1,0 +1,446 @@
+//! Per-job timeline derivation: replay the bounded cluster [`EventLog`]
+//! into a phase breakdown (`queued` → `running` → `draining` /
+//! `crash_backoff` → … → terminal) for one job, served at
+//! `GET /v1/jobs/<id>/timeline`.
+//!
+//! This is a **pure read-side view**: derivation walks the ring the engine
+//! already maintains and writes nothing back, so it cannot perturb
+//! determinism. Because the ring is bounded, a long-lived job's earliest
+//! records may have been evicted; the timeline then starts at the oldest
+//! retained record touching the job and is flagged [`JobTimeline::partial`].
+
+use crate::engine::events::{EventKind, EventLog};
+use crate::job::JobId;
+use crate::util::json::Json;
+
+/// Phase names, in the order a job can visit them. `crash_backoff` covers
+/// the whole gap from a node crash until the next placement (the engine
+/// emits no event when the backoff hold releases into the queue, so the
+/// hold and the re-queue wait are indistinguishable from the log).
+pub const PHASES: &[&str] = &["queued", "running", "draining", "crash_backoff"];
+
+/// One contiguous span a job spent in a phase. `end_s` is `None` while the
+/// span is still open (the job is currently in this phase).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSpan {
+    pub phase: String,
+    pub start_s: f64,
+    pub end_s: Option<f64>,
+}
+
+/// A log record touching the job, referenced from the timeline so a client
+/// can correlate spans with `/v1/cluster/events` cursors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineEvent {
+    pub seq: u64,
+    pub time_s: f64,
+    pub kind: String,
+}
+
+/// The derived per-job phase breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobTimeline {
+    pub job: JobId,
+    /// True when the ring evicted the job's earliest records — spans before
+    /// the oldest retained record are missing and the sums undercount.
+    pub partial: bool,
+    /// True once a terminal record (`finished`/`rejected`/`cancelled`, or a
+    /// non-requeued `oomed`) was seen.
+    pub terminal: bool,
+    pub phases: Vec<PhaseSpan>,
+    pub events: Vec<TimelineEvent>,
+    /// Placements observed in the retained window.
+    pub placements: u64,
+    pub ooms: u64,
+    pub drains: u64,
+    pub preemptions: u64,
+    pub crashes: u64,
+    /// Seconds summed per phase (open spans extend to `now_s`).
+    pub queue_s: f64,
+    pub run_s: f64,
+    pub drain_s: f64,
+    pub crash_backoff_s: f64,
+    /// First retained record → terminal record (or `now_s` while live).
+    pub total_s: f64,
+    /// Engine-clock instant the derivation used to close open spans.
+    pub now_s: f64,
+}
+
+/// Does this record concern `job`? Returns the phase-transition class.
+enum Touch {
+    /// Direct lifecycle event with a phase transition.
+    Direct,
+    /// Node-scope event whose `preempted` list contains the job.
+    NodeCrash,
+    /// Annotation only (no phase change).
+    Note,
+}
+
+fn touches(kind: &EventKind, job: JobId) -> Option<Touch> {
+    match kind {
+        EventKind::Arrival { job: j }
+        | EventKind::Placed { job: j, .. }
+        | EventKind::Finished { job: j, .. }
+        | EventKind::Oomed { job: j, .. }
+        | EventKind::DrainRequested { job: j, .. }
+        | EventKind::Drained { job: j, .. }
+        | EventKind::Preempted { job: j, .. }
+        | EventKind::Rejected { job: j, .. }
+        | EventKind::Cancelled { job: j, .. } => (*j == job).then_some(Touch::Direct),
+        EventKind::OomObserved { job: j, .. } | EventKind::ResumedFromCkpt { job: j, .. } => {
+            (*j == job).then_some(Touch::Note)
+        }
+        EventKind::NodeCrashed { preempted, .. } => {
+            preempted.contains(&job).then_some(Touch::NodeCrash)
+        }
+        // Graceful leaves are followed by per-job Preempted/Drained/Rejected
+        // records, which carry the phase transition; the NodeLeft itself is
+        // an annotation.
+        EventKind::NodeLeft { preempted, .. } => preempted.contains(&job).then_some(Touch::Note),
+        _ => None,
+    }
+}
+
+/// Derive the timeline for `job` from the retained event ring. `now_s` is
+/// the engine clock (virtual seconds in sim, seconds since start live);
+/// open spans are measured up to it. Returns `None` when no retained
+/// record touches the job at all.
+pub fn derive(log: &EventLog, job: JobId, now_s: f64) -> Option<JobTimeline> {
+    let mut tl = JobTimeline {
+        job,
+        partial: false,
+        terminal: false,
+        phases: Vec::new(),
+        events: Vec::new(),
+        placements: 0,
+        ooms: 0,
+        drains: 0,
+        preemptions: 0,
+        crashes: 0,
+        queue_s: 0.0,
+        run_s: 0.0,
+        drain_s: 0.0,
+        crash_backoff_s: 0.0,
+        total_s: 0.0,
+        now_s,
+    };
+    let mut open: Option<(&'static str, f64)> = None;
+    let mut first_t: Option<f64> = None;
+    let mut end_t: Option<f64> = None;
+    let mut saw_arrival = false;
+
+    fn close(tl: &mut JobTimeline, open: &mut Option<(&'static str, f64)>, t: f64) {
+        if let Some((phase, start)) = open.take() {
+            tl.phases.push(PhaseSpan { phase: phase.into(), start_s: start, end_s: Some(t) });
+        }
+    }
+
+    for rec in log.iter() {
+        let Some(touch) = touches(&rec.kind, job) else { continue };
+        tl.events.push(TimelineEvent {
+            seq: rec.seq,
+            time_s: rec.time,
+            kind: rec.kind.label().into(),
+        });
+        first_t.get_or_insert(rec.time);
+        let t = rec.time;
+        match touch {
+            Touch::Note => {}
+            Touch::NodeCrash => {
+                tl.crashes += 1;
+                close(&mut tl, &mut open, t);
+                open = Some(("crash_backoff", t));
+            }
+            Touch::Direct => match &rec.kind {
+                EventKind::Arrival { .. } => {
+                    saw_arrival = true;
+                    close(&mut tl, &mut open, t);
+                    open = Some(("queued", t));
+                }
+                EventKind::Placed { .. } => {
+                    tl.placements += 1;
+                    close(&mut tl, &mut open, t);
+                    open = Some(("running", t));
+                }
+                EventKind::DrainRequested { .. } => {
+                    tl.drains += 1;
+                    close(&mut tl, &mut open, t);
+                    open = Some(("draining", t));
+                }
+                EventKind::Drained { .. } => {
+                    close(&mut tl, &mut open, t);
+                    open = Some(("queued", t));
+                }
+                EventKind::Preempted { .. } => {
+                    tl.preemptions += 1;
+                    close(&mut tl, &mut open, t);
+                    open = Some(("queued", t));
+                }
+                EventKind::Oomed { requeued, .. } => {
+                    tl.ooms += 1;
+                    close(&mut tl, &mut open, t);
+                    if *requeued {
+                        open = Some(("queued", t));
+                    }
+                    // A non-requeued OOM is followed by a Rejected record,
+                    // which marks the terminal instant.
+                }
+                EventKind::Finished { .. }
+                | EventKind::Rejected { .. }
+                | EventKind::Cancelled { .. } => {
+                    close(&mut tl, &mut open, t);
+                    tl.terminal = true;
+                    end_t = Some(t);
+                }
+                _ => unreachable!("Touch::Direct covers only the kinds above"),
+            },
+        }
+    }
+
+    first_t?;
+    // The job predates the retained window when its first record is not an
+    // arrival, or the ring has evicted records before the first one we saw.
+    let first_seen = tl.events.first().map(|e| e.seq).unwrap_or(0);
+    tl.partial = !saw_arrival || (log.first_seq() > 1 && first_seen == log.first_seq());
+    if let Some((phase, start)) = open {
+        tl.phases.push(PhaseSpan { phase: phase.into(), start_s: start, end_s: None });
+    }
+    let horizon = end_t.unwrap_or(now_s);
+    for span in &tl.phases {
+        let d = (span.end_s.unwrap_or(horizon) - span.start_s).max(0.0);
+        match span.phase.as_str() {
+            "queued" => tl.queue_s += d,
+            "running" => tl.run_s += d,
+            "draining" => tl.drain_s += d,
+            "crash_backoff" => tl.crash_backoff_s += d,
+            _ => {}
+        }
+    }
+    tl.total_s = (horizon - first_t.unwrap_or(horizon)).max(0.0);
+    Some(tl)
+}
+
+impl JobTimeline {
+    /// Wire form served by `GET /v1/jobs/<id>/timeline`.
+    pub fn to_json(&self) -> Json {
+        let phases: Vec<Json> = self
+            .phases
+            .iter()
+            .map(|p| {
+                let mut j = Json::obj();
+                j.set("phase", p.phase.as_str()).set("start_s", p.start_s);
+                match p.end_s {
+                    Some(e) => j.set("end_s", e),
+                    None => j.set("end_s", Json::Null),
+                };
+                j
+            })
+            .collect();
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut j = Json::obj();
+                j.set("seq", e.seq).set("time_s", e.time_s).set("kind", e.kind.as_str());
+                j
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("job", self.job)
+            .set("partial", self.partial)
+            .set("terminal", self.terminal)
+            .set("phases", Json::Arr(phases))
+            .set("events", Json::Arr(events))
+            .set("placements", self.placements)
+            .set("ooms", self.ooms)
+            .set("drains", self.drains)
+            .set("preemptions", self.preemptions)
+            .set("crashes", self.crashes)
+            .set("queue_s", self.queue_s)
+            .set("run_s", self.run_s)
+            .set("drain_s", self.drain_s)
+            .set("crash_backoff_s", self.crash_backoff_s)
+            .set("total_s", self.total_s)
+            .set("now_s", self.now_s);
+        j
+    }
+
+    /// Inverse of [`JobTimeline::to_json`] (used by the SDK and tests).
+    pub fn from_json(j: &Json) -> Result<JobTimeline, String> {
+        fn num(j: &Json, k: &str) -> Result<f64, String> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing field '{k}'"))
+        }
+        fn n_u64(j: &Json, k: &str) -> Result<u64, String> {
+            j.get(k).and_then(Json::as_u64).ok_or_else(|| format!("missing field '{k}'"))
+        }
+        fn boolean(j: &Json, k: &str) -> Result<bool, String> {
+            j.get(k).and_then(Json::as_bool).ok_or_else(|| format!("missing field '{k}'"))
+        }
+        let phases_j = j.get("phases").and_then(Json::as_arr).ok_or("missing field 'phases'")?;
+        let mut phases = Vec::with_capacity(phases_j.len());
+        for p in phases_j {
+            let end = match p.get("end_s") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().ok_or("bad end_s")?),
+            };
+            phases.push(PhaseSpan {
+                phase: p
+                    .get("phase")
+                    .and_then(Json::as_str)
+                    .ok_or("missing field 'phase'")?
+                    .to_string(),
+                start_s: num(p, "start_s")?,
+                end_s: end,
+            });
+        }
+        let events_j = j.get("events").and_then(Json::as_arr).ok_or("missing field 'events'")?;
+        let mut events = Vec::with_capacity(events_j.len());
+        for e in events_j {
+            events.push(TimelineEvent {
+                seq: n_u64(e, "seq")?,
+                time_s: num(e, "time_s")?,
+                kind: e
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or("missing field 'kind'")?
+                    .to_string(),
+            });
+        }
+        Ok(JobTimeline {
+            job: n_u64(j, "job")?,
+            partial: boolean(j, "partial")?,
+            terminal: boolean(j, "terminal")?,
+            phases,
+            events,
+            placements: n_u64(j, "placements")?,
+            ooms: n_u64(j, "ooms")?,
+            drains: n_u64(j, "drains")?,
+            preemptions: n_u64(j, "preemptions")?,
+            crashes: n_u64(j, "crashes")?,
+            queue_s: num(j, "queue_s")?,
+            run_s: num(j, "run_s")?,
+            drain_s: num(j, "drain_s")?,
+            crash_backoff_s: num(j, "crash_backoff_s")?,
+            total_s: num(j, "total_s")?,
+            now_s: num(j, "now_s")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn placed(job: JobId) -> EventKind {
+        EventKind::Placed {
+            job,
+            epoch: 1,
+            attempts: 1,
+            gpus: 2,
+            d: 2,
+            t: 1,
+            parts: vec![(0, 2)],
+            will_oom: false,
+        }
+    }
+
+    #[test]
+    fn happy_path_queue_then_run() {
+        let mut log = EventLog::new(64);
+        log.push(1.0, EventKind::Arrival { job: 7 });
+        log.push(4.0, placed(7));
+        log.push(10.0, EventKind::Finished { job: 7, epoch: 1 });
+        let tl = derive(&log, 7, 20.0).expect("job present");
+        assert!(!tl.partial);
+        assert!(tl.terminal);
+        assert_eq!(tl.placements, 1);
+        assert_eq!(tl.phases.len(), 2);
+        assert_eq!(tl.phases[0].phase, "queued");
+        assert_eq!(tl.phases[0].end_s, Some(4.0));
+        assert_eq!(tl.phases[1].phase, "running");
+        assert!((tl.queue_s - 3.0).abs() < 1e-9);
+        assert!((tl.run_s - 6.0).abs() < 1e-9);
+        // Terminal jobs measure to the terminal record, not `now`.
+        assert!((tl.total_s - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn open_span_measures_to_now() {
+        let mut log = EventLog::new(64);
+        log.push(0.0, EventKind::Arrival { job: 1 });
+        log.push(2.0, placed(1));
+        let tl = derive(&log, 1, 12.0).unwrap();
+        assert!(!tl.terminal);
+        assert_eq!(tl.phases.last().unwrap().end_s, None);
+        assert!((tl.run_s - 10.0).abs() < 1e-9);
+        assert!((tl.total_s - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drain_and_crash_gaps_are_separate_phases() {
+        let mut log = EventLog::new(64);
+        log.push(0.0, EventKind::Arrival { job: 3 });
+        log.push(1.0, placed(3));
+        log.push(5.0, EventKind::DrainRequested { job: 3, epoch: 1, node: 0, deadline_s: 7.0 });
+        let drained =
+            EventKind::Drained { job: 3, epoch: 1, node: 0, steps_ckpt: 10, state_digest: 1 };
+        log.push(7.0, drained);
+        log.push(9.0, placed(3));
+        log.push(11.0, EventKind::NodeCrashed { node: 0, preempted: vec![3] });
+        log.push(15.0, placed(3));
+        log.push(20.0, EventKind::Finished { job: 3, epoch: 3 });
+        let tl = derive(&log, 3, 99.0).unwrap();
+        assert_eq!(tl.drains, 1);
+        assert_eq!(tl.crashes, 1);
+        assert_eq!(tl.placements, 3);
+        assert!((tl.drain_s - 2.0).abs() < 1e-9, "drain 5→7");
+        assert!((tl.crash_backoff_s - 4.0).abs() < 1e-9, "crash 11→15");
+        assert!((tl.queue_s - (1.0 + 2.0)).abs() < 1e-9, "0→1 and 7→9");
+        assert!((tl.run_s - (4.0 + 2.0 + 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eviction_sets_partial() {
+        let mut log = EventLog::new(2);
+        log.push(0.0, EventKind::Arrival { job: 5 });
+        log.push(1.0, placed(5));
+        log.push(2.0, EventKind::Finished { job: 5, epoch: 1 });
+        // Arrival evicted: first retained record for job 5 is the placement.
+        let tl = derive(&log, 5, 10.0).unwrap();
+        assert!(tl.partial);
+        assert!(tl.terminal);
+        assert_eq!(tl.phases[0].phase, "running");
+    }
+
+    #[test]
+    fn absent_job_is_none() {
+        let mut log = EventLog::new(8);
+        log.push(0.0, EventKind::Arrival { job: 1 });
+        assert!(derive(&log, 2, 5.0).is_none());
+    }
+
+    #[test]
+    fn oom_requeue_returns_to_queue() {
+        let mut log = EventLog::new(64);
+        log.push(0.0, EventKind::Arrival { job: 9 });
+        log.push(1.0, placed(9));
+        log.push(3.0, EventKind::Oomed { job: 9, epoch: 1, requeued: true });
+        log.push(6.0, placed(9));
+        let tl = derive(&log, 9, 8.0).unwrap();
+        assert_eq!(tl.ooms, 1);
+        let kinds: Vec<&str> = tl.phases.iter().map(|p| p.phase.as_str()).collect();
+        assert_eq!(kinds, vec!["queued", "running", "queued", "running"]);
+        assert!((tl.queue_s - (1.0 + 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut log = EventLog::new(64);
+        log.push(0.5, EventKind::Arrival { job: 4 });
+        log.push(2.5, placed(4));
+        let tl = derive(&log, 4, 9.0).unwrap();
+        let text = tl.to_json().to_string_compact();
+        let back = JobTimeline::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, tl);
+    }
+}

@@ -1690,12 +1690,72 @@ impl ReportV1 {
             mem_pred_accuracy_avg: num("mem_pred_accuracy_avg"),
             mem_pred_accuracy_min: num("mem_pred_accuracy_min"),
             sched_work_units: int("sched_work_units"),
-            sched_overhead_s: num("sched_overhead_s"),
+            // Wall-clock fields live under "nondeterministic"; fall back to
+            // the flat pre-split spelling for reports written before it.
+            sched_overhead_s: j
+                .get("nondeterministic")
+                .and_then(|nd| nd.get("sched_overhead_s"))
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| num("sched_overhead_s")),
             avg_utilization: num("avg_utilization"),
             n_throttled_backpressure: int("n_throttled_backpressure"),
             n_throttled_quota: int("n_throttled_quota"),
             tenants,
         })
+    }
+}
+
+/// `GET /v1/jobs/<id>/timeline` — the wire form IS the derived
+/// [`JobTimeline`](crate::obs::timeline::JobTimeline) (one JSON shape, one
+/// roundtrip, defined next to the derivation it serializes).
+pub use crate::obs::timeline::JobTimeline as TimelineV1;
+
+/// `GET /v1/version` — build identity of the serving binary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VersionV1 {
+    /// Crate version (`CARGO_PKG_VERSION`).
+    pub version: String,
+    /// Git commit the binary was built from (`build.rs` bakes it in;
+    /// `"unknown"` for builds outside a checkout).
+    pub git_sha: String,
+    /// Compiled-in subsystems, sorted — this crate has no optional cargo
+    /// features, so the list names the capabilities a client can probe for.
+    pub features: Vec<String>,
+}
+
+impl VersionV1 {
+    /// The running binary's identity.
+    pub fn current() -> Self {
+        Self {
+            version: crate::obs::crate_version().to_string(),
+            git_sha: crate::obs::git_sha().to_string(),
+            features: ["durability", "faults", "obs", "serverless", "sim"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("version", self.version.as_str()).set("git_sha", self.git_sha.as_str());
+        let feats: Vec<Json> = self.features.iter().map(|f| Json::Str(f.clone())).collect();
+        j.set("features", Json::Arr(feats));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let req_str = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or(format!("missing string field '{k}'"))
+        };
+        let mut features = Vec::new();
+        for f in j.get("features").and_then(Json::as_arr).unwrap_or(&[]) {
+            features.push(f.as_str().ok_or("non-string feature entry")?.to_string());
+        }
+        Ok(Self { version: req_str("version")?, git_sha: req_str("git_sha")?, features })
     }
 }
 
@@ -2101,6 +2161,89 @@ mod tests {
                     .collect(),
             };
             roundtrip(&v, ReportV1::to_json, ReportV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn report_wall_clock_lives_under_nondeterministic_with_flat_fallback() {
+        // Through the sanitizing DTO so empty-run NaNs don't reach the wire.
+        let r = RunReport::from_outcomes("s", "w", &[], 0, 7, 1.25, 0.5);
+        let wire = ReportV1::from_report(&r).to_json().to_string_compact();
+        assert!(
+            wire.contains(r#""nondeterministic":{"sched_overhead_s":1.25}"#),
+            "wall-clock fields are sectioned off: {wire}"
+        );
+        assert!(
+            !r.to_json_deterministic().to_string_compact().contains("sched_overhead_s"),
+            "the deterministic projection carries no wall-clock field"
+        );
+        let v = ReportV1::from_json(&json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(v.sched_overhead_s, 1.25);
+        // Reports written before the split keep the flat spelling.
+        let flat = r#"{"scheduler":"s","workload":"w","sched_overhead_s":0.75}"#;
+        let v = ReportV1::from_json(&json::parse(flat).unwrap()).unwrap();
+        assert_eq!(v.sched_overhead_s, 0.75);
+    }
+
+    #[test]
+    fn prop_version_roundtrip() {
+        Runner::new("version dto roundtrip", 0x5EED, 100).run(|g| {
+            let v = VersionV1 {
+                version: gen_string(g),
+                git_sha: gen_string(g),
+                features: (0..g.usize_in(0, 4)).map(|_| gen_string(g)).collect(),
+            };
+            roundtrip(&v, VersionV1::to_json, VersionV1::from_json);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn version_current_reports_crate_version() {
+        let v = VersionV1::current();
+        assert_eq!(v.version, env!("CARGO_PKG_VERSION"));
+        assert!(!v.git_sha.is_empty());
+        assert!(v.features.windows(2).all(|w| w[0] < w[1]), "sorted: {:?}", v.features);
+        roundtrip(&v, VersionV1::to_json, VersionV1::from_json);
+    }
+
+    #[test]
+    fn prop_timeline_dto_roundtrip() {
+        use crate::obs::timeline::{PhaseSpan, TimelineEvent};
+        Runner::new("timeline dto roundtrip", 0x71AE, 100).run(|g| {
+            let n_phases = g.usize_in(0, 4);
+            let v = TimelineV1 {
+                job: g.u64_in(0, MAX_EXACT),
+                partial: g.bool(),
+                terminal: g.bool(),
+                phases: (0..n_phases)
+                    .map(|i| PhaseSpan {
+                        phase: ["queued", "running", "draining", "crash_backoff"][i % 4].into(),
+                        start_s: g.f64_in(0.0, 1e5),
+                        end_s: if g.bool() { Some(g.f64_in(0.0, 1e5)) } else { None },
+                    })
+                    .collect(),
+                events: (0..g.usize_in(0, 4))
+                    .map(|i| TimelineEvent {
+                        seq: i as u64 + 1,
+                        time_s: g.f64_in(0.0, 1e5),
+                        kind: "arrival".into(),
+                    })
+                    .collect(),
+                placements: g.u64_in(0, 5),
+                ooms: g.u64_in(0, 5),
+                drains: g.u64_in(0, 5),
+                preemptions: g.u64_in(0, 5),
+                crashes: g.u64_in(0, 5),
+                queue_s: g.f64_in(0.0, 1e5),
+                run_s: g.f64_in(0.0, 1e5),
+                drain_s: g.f64_in(0.0, 1e5),
+                crash_backoff_s: g.f64_in(0.0, 1e5),
+                total_s: g.f64_in(0.0, 1e5),
+                now_s: g.f64_in(0.0, 1e5),
+            };
+            roundtrip(&v, TimelineV1::to_json, TimelineV1::from_json);
             Ok(())
         });
     }

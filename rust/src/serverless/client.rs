@@ -20,7 +20,7 @@ use super::api::{
     EventsResponseV1, HeartbeatRequestV1, HeartbeatResponseV1, JobStatusV1, ListRequestV1,
     ListResponseV1, PredictRequestV1, PredictResponseV1, ReportV1, ScaleRequestV1,
     ScaleResponseV1, SubmitBatchRequestV1, SubmitBatchResponseV1, SubmitRequestV1,
-    SubmitResponseV1,
+    SubmitResponseV1, TimelineV1, VersionV1,
 };
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Context, Result};
@@ -505,5 +505,33 @@ impl FrenzyClient {
         let body = req.to_json().to_string_compact();
         let j = self.call("POST", "/v1/cluster/scale", &body, false)?;
         ScaleResponseV1::from_json(&j).map_err(|e| anyhow!(e))
+    }
+
+    /// `GET /v1/version` — build identity of the serving binary.
+    pub fn version(&mut self) -> Result<VersionV1> {
+        let j = self.call("GET", "/v1/version", "", true)?;
+        VersionV1::from_json(&j).map_err(|e| anyhow!(e))
+    }
+
+    /// `GET /v1/jobs/<id>/timeline` — the job's derived phase breakdown;
+    /// `None` when the job does not exist.
+    pub fn timeline(&mut self, id: u64) -> Result<Option<TimelineV1>> {
+        let (status, j) =
+            self.call_with("GET", &format!("/v1/jobs/{id}/timeline"), "", true, &[404])?;
+        if status == 404 {
+            return Ok(None);
+        }
+        Ok(Some(TimelineV1::from_json(&j).map_err(|e| anyhow!(e))?))
+    }
+
+    /// `GET /metrics` — the raw Prometheus text exposition. Unlike every
+    /// other method this returns the body verbatim (it is not JSON);
+    /// callers parse it with [`crate::obs::expo::parse`] if needed.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        let (status, _retry, body) = self.request("GET", "/metrics", "", true)?;
+        if status != 200 {
+            bail!("GET /metrics answered HTTP {status}: {body}");
+        }
+        Ok(body)
     }
 }

@@ -323,14 +323,35 @@ enum Msg {
     Tick,
     /// Durability state for `GET /v1/durability`.
     Durability(mpsc::Sender<DurabilityStatus>),
+    /// Per-job phase timeline derived from the event log
+    /// (`GET /v1/jobs/<id>/timeline`). `None` when the job is unknown.
+    Timeline(JobId, mpsc::Sender<Option<crate::obs::timeline::JobTimeline>>),
     Drain(mpsc::Sender<()>),
     Shutdown,
+}
+
+/// Mailbox sender wrapper: every producer — the SDK-facing [`Handle`],
+/// timer threads, executor completion pumps — sends through this, and the
+/// coordinator loop decrements per receive, so the
+/// `frenzy_coordinator_mailbox_depth` gauge tracks exact queue depth.
+/// Telemetry-only: the send itself is unchanged.
+#[derive(Clone)]
+struct CoordTx(mpsc::Sender<Msg>);
+
+impl CoordTx {
+    fn send(&self, msg: Msg) -> std::result::Result<(), mpsc::SendError<Msg>> {
+        let res = self.0.send(msg);
+        if res.is_ok() {
+            crate::obs::reg().coord.mailbox_depth.add(1);
+        }
+        res
+    }
 }
 
 /// Client handle to a running coordinator (cheap to clone).
 #[derive(Clone)]
 pub struct Handle {
-    tx: mpsc::Sender<Msg>,
+    tx: CoordTx,
     /// Flipped true by the coordinator once recovery (if any) completed
     /// and the mailbox started serving — `GET /v1/healthz` readiness.
     ready: std::sync::Arc<std::sync::atomic::AtomicBool>,
@@ -485,6 +506,13 @@ impl Handle {
     /// (`GET /v1/durability`). `enabled` is false without `--data-dir`.
     pub fn durability(&self) -> Result<DurabilityStatus> {
         self.ask(Msg::Durability)
+    }
+
+    /// Per-job phase timeline (`GET /v1/jobs/<id>/timeline`): queue / run /
+    /// drain / crash-backoff spans derived from the event log. `None` for
+    /// unknown job ids.
+    pub fn timeline(&self, id: JobId) -> Result<Option<crate::obs::timeline::JobTimeline>> {
+        self.ask(|rtx| Msg::Timeline(id, rtx))
     }
 
     /// Readiness (`GET /v1/healthz`): false while recovery replays the
@@ -715,7 +743,8 @@ impl Default for CoordinatorConfig {
 
 /// Spawn the coordinator; returns a client handle and the join handle.
 pub fn spawn(spec: ClusterSpec, cfg: CoordinatorConfig) -> (Handle, std::thread::JoinHandle<()>) {
-    let (tx, rx) = mpsc::channel::<Msg>();
+    let (raw_tx, rx) = mpsc::channel::<Msg>();
+    let tx = CoordTx(raw_tx);
     let tx_internal = tx.clone();
     // Readiness gates on recovery, which only exists in durable mode: an
     // in-memory coordinator is ready the moment it has a mailbox (requests
@@ -733,7 +762,7 @@ pub fn spawn(spec: ClusterSpec, cfg: CoordinatorConfig) -> (Handle, std::thread:
 /// Deliver `msg` to the coordinator mailbox after `delay_s` (immediately
 /// when the delay rounds to zero — still via the mailbox so ordering
 /// matches the timer path).
-fn send_after(tx_internal: &mpsc::Sender<Msg>, delay_s: f64, msg: Msg) {
+fn send_after(tx_internal: &CoordTx, delay_s: f64, msg: Msg) {
     let millis = (delay_s.max(0.0) * 1e3).round() as u64;
     if millis == 0 {
         let _ = tx_internal.send(msg);
@@ -755,7 +784,7 @@ fn dispatch_effects(
     jobs: &HashMap<JobId, LiveJob>,
     cfg: &CoordinatorConfig,
     executor: &Option<TrainExecutor>,
-    tx_internal: &mpsc::Sender<Msg>,
+    tx_internal: &CoordTx,
 ) {
     for d in &fx.oom_observed {
         // The byte ledger already observed the overflow; crash the run
@@ -1129,7 +1158,7 @@ fn submit_one(
     durable: &Option<Durability>,
     cfg: &CoordinatorConfig,
     executor: &Option<TrainExecutor>,
-    tx_internal: &mpsc::Sender<Msg>,
+    tx_internal: &CoordTx,
 ) -> std::result::Result<JobId, SubmitError> {
     let clock = wall.now();
     // Throttling happens before a job id is minted or anything is
@@ -1186,6 +1215,7 @@ fn submit_one(
         note_terminal(jobs, retention, id);
         return Ok(id); // accepted-but-rejected, visible via status
     }
+    crate::obs::reg().coord.admitted_total.inc();
     let mut fx = engine.handle(ClusterEvent::Arrival(spec_job), wall);
     fx.merge(engine.run_round(wall));
     apply_effects(&fx, jobs, retention, wall.now());
@@ -1197,7 +1227,7 @@ fn coordinator_loop(
     spec: ClusterSpec,
     cfg: CoordinatorConfig,
     rx: mpsc::Receiver<Msg>,
-    tx_internal: mpsc::Sender<Msg>,
+    tx_internal: CoordTx,
     ready: std::sync::Arc<std::sync::atomic::AtomicBool>,
 ) {
     // Admission control and predict run MARP outside the engine's scheduler
@@ -1401,6 +1431,11 @@ fn coordinator_loop(
             Ok(m) => m,
             Err(_) => break,
         };
+        {
+            let coord = &crate::obs::reg().coord;
+            coord.mailbox_depth.sub(1);
+            coord.messages_total.inc();
+        }
         match msg {
             Msg::Shutdown => break,
             Msg::Submit(adm, reply) => {
@@ -1775,6 +1810,15 @@ fn coordinator_loop(
                 };
                 let _ = reply.send(status);
             }
+            Msg::Timeline(id, reply) => {
+                let now = wall.now();
+                // Prefer the event-log derivation (full phase detail); fall
+                // back to a coarse status-table reconstruction when every
+                // record for the job was evicted from the bounded ring.
+                let tl = crate::obs::timeline::derive(engine.event_log(), id, now)
+                    .or_else(|| jobs.get(&id).map(|j| fallback_timeline(j, now)));
+                let _ = reply.send(tl);
+            }
             Msg::Drain(reply) => {
                 if all_terminal(&jobs) {
                     let _ = reply.send(());
@@ -1836,8 +1880,99 @@ fn coordinator_loop(
                 let _ = d.store.prune_older_than(last);
                 let _ = d.wal.borrow_mut().prune_through(last);
                 d.snap = Some((last, t));
+                crate::obs::reg().durability.snapshots_total.inc();
             }
         }
+        publish_telemetry(&engine, &admission, admission_rejected, &durable, &wall);
+    }
+}
+
+/// Mirror coordinator/engine/runtime/durability state into the global
+/// telemetry registry, once per mailbox message. Strictly read-only over
+/// the engine and write-only into telemetry — scrapes read these gauges
+/// without a coordinator round-trip, and nothing here can perturb
+/// scheduling, the WAL, or snapshots.
+fn publish_telemetry(
+    engine: &SchedulingEngine<'_>,
+    admission: &AdmissionControl,
+    admission_rejected: usize,
+    durable: &Option<Durability>,
+    wall: &WallClock,
+) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let r = crate::obs::reg();
+    r.coord.throttled_backpressure_total.store(admission.n_backpressure);
+    r.coord.throttled_quota_total.store(admission.n_quota);
+    r.coord.rejected_infeasible_total.store(admission_rejected as u64);
+    r.engine.jobs_queued.set(engine.pending_count() as i64);
+    r.engine.jobs_running.set(engine.running_count() as i64);
+    r.engine.work_units_total.store(engine.work_units());
+    let agg = engine.aggregates();
+    r.runtime.oom_events_total.store(agg.n_oom_events);
+    r.runtime.drains_total.store(agg.n_drains);
+    r.runtime.crash_requeues_total.store(agg.n_crash_requeues);
+    r.runtime.quarantines_total.store(agg.n_quarantines);
+    r.runtime.mem_pred_samples_total.store(agg.mem_pred_samples());
+    if agg.mem_pred_samples() > 0 {
+        r.runtime.mem_pred_accuracy_avg.set(agg.mem_pred_accuracy_avg());
+        r.runtime.mem_pred_accuracy_min.set(agg.mem_pred_accuracy_min());
+    }
+    let dm = engine.device_memory();
+    r.runtime
+        .device_mem_used
+        .set_all((0..dm.n_nodes()).map(|n| (n as u64, dm.used_bytes(n) as f64)));
+    r.runtime
+        .device_mem_capacity
+        .set_all((0..dm.n_nodes()).map(|n| (n as u64, dm.capacity_of(n) as f64)));
+    if let Some(d) = durable {
+        let w = d.wal.borrow();
+        r.durability.wal_segments.set(w.segment_count() as i64);
+        r.durability.wal_bytes.set(w.total_bytes() as i64);
+        if let Some((seq, t)) = d.snap {
+            r.durability.snapshot_covered_seq.set(seq as i64);
+            r.durability.snapshot_age_seconds.set((wall.now() - t).max(0.0));
+        }
+    }
+}
+
+/// Coarse timeline from the coordinator's status table, used when the
+/// bounded event ring no longer holds any record for the job. Spans are
+/// rebuilt from the submit/start/finish stamps the table keeps, so drain
+/// and crash gaps are invisible — the result is always `partial`.
+fn fallback_timeline(j: &LiveJob, now: f64) -> crate::obs::timeline::JobTimeline {
+    use crate::obs::timeline::{JobTimeline, PhaseSpan};
+    let mut phases = vec![PhaseSpan {
+        phase: "queued".into(),
+        start_s: j.submit_t,
+        // A job rejected before ever starting closes its queue span at its
+        // terminal stamp.
+        end_s: j.start_t.or(j.finish_t),
+    }];
+    if let Some(start) = j.start_t {
+        phases.push(PhaseSpan { phase: "running".into(), start_s: start, end_s: j.finish_t });
+    }
+    let horizon = j.finish_t.unwrap_or(now);
+    let queue_s = (j.start_t.unwrap_or(horizon) - j.submit_t).max(0.0);
+    let run_s = j.start_t.map(|s| (horizon - s).max(0.0)).unwrap_or(0.0);
+    JobTimeline {
+        job: j.spec.id,
+        partial: true,
+        terminal: j.state.is_terminal(),
+        phases,
+        events: Vec::new(),
+        placements: u64::from(j.start_t.is_some()),
+        ooms: 0,
+        drains: 0,
+        preemptions: 0,
+        crashes: 0,
+        queue_s,
+        run_s,
+        drain_s: 0.0,
+        crash_backoff_s: 0.0,
+        total_s: (horizon - j.submit_t).max(0.0),
+        now_s: now,
     }
 }
 

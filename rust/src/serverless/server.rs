@@ -122,31 +122,47 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<Request> {
     }
 }
 
-/// A routed response: status, JSON body, an optional `Allow` header
-/// (present exactly on 405s), and an optional `Retry-After` hint in
-/// milliseconds (present exactly on 429/503 throttles; the header itself
-/// is emitted in whole seconds, rounded up, per RFC 9110).
+/// A routed response: status, body, an optional `Allow` header (present
+/// exactly on 405s), and an optional `Retry-After` hint in milliseconds
+/// (present exactly on 429/503 throttles; the header itself is emitted in
+/// whole seconds, rounded up, per RFC 9110). Bodies are JSON except the
+/// Prometheus exposition at `/metrics`, which carries its own
+/// content-type.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Response {
     pub status: u16,
     pub body: String,
     pub allow: Option<&'static str>,
     pub retry_after: Option<u64>,
+    pub content_type: &'static str,
 }
+
+const JSON_TYPE: &str = "application/json";
 
 impl Response {
     fn ok(body: String) -> Self {
-        Self { status: 200, body, allow: None, retry_after: None }
+        Self { status: 200, body, allow: None, retry_after: None, content_type: JSON_TYPE }
+    }
+
+    /// A 200 with a non-JSON body (`/metrics` text exposition).
+    fn text(body: String, content_type: &'static str) -> Self {
+        Self { content_type, ..Self::ok(body) }
     }
 
     /// `202 Accepted`: the resource was created/queued; completion is not
     /// implied. The submit paths use this.
     fn accepted(body: String) -> Self {
-        Self { status: 202, body, allow: None, retry_after: None }
+        Self { status: 202, body, allow: None, retry_after: None, content_type: JSON_TYPE }
     }
 
     fn err(status: u16, message: impl Into<String>) -> Self {
-        Self { status, body: ApiError::new(status, message).body(), allow: None, retry_after: None }
+        Self {
+            status,
+            body: ApiError::new(status, message).body(),
+            allow: None,
+            retry_after: None,
+            content_type: JSON_TYPE,
+        }
     }
 
     fn method_not_allowed(allow: &'static str) -> Self {
@@ -155,6 +171,7 @@ impl Response {
             body: ApiError::new(405, format!("method not allowed (allow: {allow})")).body(),
             allow: Some(allow),
             retry_after: None,
+            content_type: JSON_TYPE,
         }
     }
 
@@ -169,6 +186,7 @@ impl Response {
                 body: ApiError::throttled(e.to_string(), ms).body(),
                 allow: None,
                 retry_after: Some(ms),
+                content_type: JSON_TYPE,
             },
         }
     }
@@ -204,9 +222,10 @@ fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) {
     let conn = if keep_alive { "keep-alive" } else { "close" };
     let _ = write!(
         stream,
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{}{}Connection: {}\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}{}Connection: {}\r\n\r\n{}",
         resp.status,
         reason(resp.status),
+        resp.content_type,
         resp.body.len(),
         allow,
         retry,
@@ -217,9 +236,12 @@ fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) {
 }
 
 /// Map a pre-v1 path onto its v1 equivalent (the legacy alias table).
+/// `/metrics` is the odd one out: the *unversioned* spelling is canonical
+/// (Prometheus convention), so the `/v1/metrics` alias folds down to it.
 fn normalize_path(path: &str) -> String {
     match path {
         "/healthz" | "/cluster" | "/jobs" => format!("/v1{path}"),
+        "/v1/metrics" => "/metrics".to_string(),
         p if p.starts_with("/jobs/") => format!("/v1{p}"),
         p => p.to_string(),
     }
@@ -230,7 +252,7 @@ fn normalize_path(path: &str) -> String {
 fn allowed_methods(path: &str) -> Option<&'static str> {
     match path {
         "/v1/healthz" | "/v1/cluster" | "/v1/cluster/events" | "/v1/report"
-        | "/v1/durability" => Some("GET"),
+        | "/v1/durability" | "/metrics" | "/v1/version" => Some("GET"),
         "/v1/jobs" => Some("GET, POST"),
         "/v1/jobs:batch" | "/v1/predict" | "/v1/cluster/scale" | "/v1/cluster/heartbeat" => {
             Some("POST")
@@ -243,6 +265,12 @@ fn allowed_methods(path: &str) -> Option<&'static str> {
             if let Some(id) = rest.strip_suffix("/cancel") {
                 if !id.is_empty() && !id.contains('/') {
                     return Some("POST");
+                }
+                return None;
+            }
+            if let Some(id) = rest.strip_suffix("/timeline") {
+                if !id.is_empty() && !id.contains('/') {
+                    return Some("GET");
                 }
                 return None;
             }
@@ -259,7 +287,24 @@ fn parse_body(body: &str) -> Result<Json, Response> {
 }
 
 /// Route one request against the coordinator, returning the full response.
+/// Telemetry wrapper: every routed request lands in the per-route counters
+/// and latency histogram, with the in-flight gauge held for the duration.
 pub fn route_full(handle: &Handle, req: &Request) -> Response {
+    let t0 = std::time::Instant::now();
+    let http = &crate::obs::reg().http;
+    http.inflight.add(1);
+    let resp = route_inner(handle, req);
+    let raw_path = req.path.split('?').next().unwrap_or_default();
+    http.record(
+        crate::obs::route_label(&normalize_path(raw_path)),
+        resp.status,
+        t0.elapsed().as_secs_f64(),
+    );
+    http.inflight.sub(1);
+    resp
+}
+
+fn route_inner(handle: &Handle, req: &Request) -> Response {
     let (raw_path, query) = match req.path.split_once('?') {
         Some((p, q)) => (p, q),
         None => (req.path.as_str(), ""),
@@ -293,25 +338,39 @@ pub fn route_full(handle: &Handle, req: &Request) -> Response {
         ("GET", "/v1/cluster/events") => Some(handle_events(handle, query)),
         ("GET", "/v1/report") => Some(handle_report(handle)),
         ("GET", "/v1/durability") => Some(handle_durability(handle)),
+        // Prometheus exposition: rendered straight off the process
+        // registry, never through the coordinator mailbox — a scrape
+        // succeeds even when the coordinator loop is busy or wedged.
+        ("GET", "/metrics") => {
+            Some(Response::text(crate::obs::expo::render(), crate::obs::expo::CONTENT_TYPE))
+        }
+        ("GET", "/v1/version") => Some(Response::ok(
+            super::api::VersionV1::current().to_json().to_string_compact(),
+        )),
         _ => None,
     };
     if let Some(r) = resp {
         return r;
     }
 
-    // /v1/jobs/<id> and /v1/jobs/<id>/cancel need the id extracted.
+    // /v1/jobs/<id>, /v1/jobs/<id>/cancel and /v1/jobs/<id>/timeline need
+    // the id extracted.
     if let Some(rest) = path.strip_prefix("/v1/jobs/") {
-        let (id_str, is_cancel) = match rest.strip_suffix("/cancel") {
-            Some(id) => (id, true),
-            None => (rest, false),
+        let (id_str, action) = if let Some(id) = rest.strip_suffix("/cancel") {
+            (id, "cancel")
+        } else if let Some(id) = rest.strip_suffix("/timeline") {
+            (id, "timeline")
+        } else {
+            (rest, "")
         };
         if !id_str.is_empty() && !id_str.contains('/') {
             let Ok(id) = id_str.parse::<u64>() else {
                 return Response::err(400, format!("bad job id '{id_str}'"));
             };
-            match (method, is_cancel) {
-                ("GET", false) => return handle_status(handle, id),
-                ("POST", true) | ("DELETE", false) => return handle_cancel(handle, id),
+            match (method, action) {
+                ("GET", "") => return handle_status(handle, id),
+                ("GET", "timeline") => return handle_timeline(handle, id),
+                ("POST", "cancel") | ("DELETE", "") => return handle_cancel(handle, id),
                 _ => {}
             }
         }
@@ -406,6 +465,14 @@ fn handle_submit_batch(handle: &Handle, body: &str) -> Response {
     let mut resp = envelope.unwrap_or_else(|| Response::accepted(String::new()));
     resp.body = SubmitBatchResponseV1 { results: out }.to_json().to_string_compact();
     resp
+}
+
+fn handle_timeline(handle: &Handle, id: u64) -> Response {
+    match handle.timeline(id) {
+        Ok(Some(tl)) => Response::ok(tl.to_json().to_string_compact()),
+        Ok(None) => Response::err(404, format!("no such job {id}")),
+        Err(e) => Response::err(500, e.to_string()),
+    }
 }
 
 fn handle_status(handle: &Handle, id: u64) -> Response {
@@ -653,13 +720,20 @@ pub fn serve_with(
 /// may not even have sent it yet) so the acceptor is back in `accept`
 /// within one syscall-ish.
 fn reject_overloaded(stream: &mut TcpStream) {
+    crate::obs::reg().http.shed_503.inc();
     let body = ApiError {
         code: 503,
         message: "server at connection capacity".into(),
         retry_after_ms: Some(1000),
     }
     .body();
-    let resp = Response { status: 503, body, allow: None, retry_after: Some(1000) };
+    let resp = Response {
+        status: 503,
+        body,
+        allow: None,
+        retry_after: Some(1000),
+        content_type: JSON_TYPE,
+    };
     write_response(stream, &resp, false);
 }
 
@@ -686,7 +760,10 @@ fn serve_connection(mut stream: TcpStream, handle: &Handle, cfg: &ServerConfig, 
                 // Pre-v1 clients predate keep-alive (the old server closed
                 // after every response) and typically read to EOF: keep the
                 // legacy unversioned paths on close-per-request semantics.
-                if !req.path.starts_with("/v1/") {
+                // `/metrics` is unversioned by Prometheus convention but
+                // new — scrapers expect connection reuse.
+                if !req.path.starts_with("/v1/") && req.path.split('?').next() != Some("/metrics")
+                {
                     keep_alive = false;
                 }
                 // `?stream=1` upgrades this connection to a dedicated SSE
@@ -764,6 +841,7 @@ fn serve_sse(stream: &mut TcpStream, handle: &Handle, req: EventsRequestV1, stop
     {
         return;
     }
+    crate::obs::reg().http.sse_connections.inc();
     let mut since = req.since;
     let mut out = String::new();
     while !stop.load(Ordering::Relaxed) {
@@ -1120,6 +1198,64 @@ mod tests {
         assert!(sse_request(&req("/v1/jobs?stream=1", "GET")).is_none());
         // Malformed queries fall through to the routed 400, not a hang.
         assert!(sse_request(&req("/v1/cluster/events?stream=yes-please", "GET")).is_none());
+    }
+
+    #[test]
+    fn metrics_route_serves_conformant_prometheus_text() {
+        let h = test_handle();
+        for path in ["/metrics", "/v1/metrics"] {
+            let r = get(&h, path);
+            assert_eq!(r.status, 200, "{path}");
+            assert_eq!(r.content_type, crate::obs::expo::CONTENT_TYPE, "{path}");
+            assert!(r.body.contains("# TYPE frenzy_http_requests_total counter"), "{path}");
+            crate::obs::expo::validate(&r.body).expect("exposition conformance");
+        }
+        let r = post(&h, "/metrics", "");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("GET"));
+        let r = post(&h, "/v1/metrics", "");
+        assert_eq!(r.status, 405, "alias shares the method table");
+        h.shutdown();
+    }
+
+    #[test]
+    fn version_route() {
+        use crate::serverless::api::VersionV1;
+        let h = test_handle();
+        let r = get(&h, "/v1/version");
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = VersionV1::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert_eq!(v.version, env!("CARGO_PKG_VERSION"));
+        assert!(!v.git_sha.is_empty());
+        let r = post(&h, "/v1/version", "");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("GET"));
+        // No legacy unversioned alias.
+        assert_eq!(get(&h, "/version").status, 404);
+        h.shutdown();
+    }
+
+    #[test]
+    fn timeline_route() {
+        use crate::obs::timeline::JobTimeline;
+        let h = test_handle();
+        let r = post(&h, "/v1/jobs", r#"{"model":"gpt2-350m","batch":8,"samples":100}"#);
+        assert_eq!(r.status, 202, "{}", r.body);
+        let id = json::parse(&r.body).unwrap().get("job_id").unwrap().as_u64().unwrap();
+        h.drain().unwrap();
+        let r = get(&h, &format!("/v1/jobs/{id}/timeline"));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let tl = JobTimeline::from_json(&json::parse(&r.body).unwrap()).unwrap();
+        assert_eq!(tl.job, id);
+        assert!(tl.terminal, "{}", r.body);
+        assert_eq!(tl.placements, 1, "{}", r.body);
+        // Unknown job / bad id / wrong method behave like the other routes.
+        assert_eq!(get(&h, "/v1/jobs/999/timeline").status, 404);
+        assert_eq!(get(&h, "/v1/jobs/abc/timeline").status, 400);
+        let r = post(&h, &format!("/v1/jobs/{id}/timeline"), "");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("GET"));
+        h.shutdown();
     }
 
     #[test]

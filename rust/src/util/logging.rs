@@ -1,12 +1,14 @@
 //! Tiny leveled logger (the `log`/`env_logger` stack is not wired offline).
 //!
 //! Level is controlled by `FRENZY_LOG` (error|warn|info|debug|trace),
-//! defaulting to `info`. The logger is allocation-light and thread-safe;
-//! the simulator hot loop only logs at debug/trace so release runs pay one
-//! atomic load per suppressed call.
+//! defaulting to `info`. Set `FRENZY_LOG_JSON=1` to emit each line as a
+//! JSON object (`{"elapsed_s":..,"level":..,"target":..,"msg":..}`) for
+//! log shippers; the default human format is unchanged. The logger is
+//! allocation-light and thread-safe; the simulator hot loop only logs at
+//! debug/trace so release runs pay one atomic load per suppressed call.
 
 use std::io::Write;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -43,6 +45,21 @@ impl Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+static JSON: std::sync::OnceLock<AtomicBool> = std::sync::OnceLock::new();
+
+/// Whether lines render as JSON objects (lazy-initialized from
+/// `FRENZY_LOG_JSON=1`).
+pub fn json_mode() -> bool {
+    JSON.get_or_init(|| {
+        AtomicBool::new(std::env::var("FRENZY_LOG_JSON").as_deref() == Ok("1"))
+    })
+    .load(Ordering::Relaxed)
+}
+
+/// Override the output format programmatically (tests, embedding).
+pub fn set_json_mode(on: bool) {
+    JSON.get_or_init(|| AtomicBool::new(false)).store(on, Ordering::Relaxed);
+}
 
 /// Current log level (lazy-initialized from FRENZY_LOG).
 pub fn level() -> Level {
@@ -75,7 +92,17 @@ pub fn emit(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     let elapsed = t0.elapsed().as_secs_f64();
     let stderr = std::io::stderr();
     let mut lock = stderr.lock();
-    let _ = writeln!(lock, "[{elapsed:9.3}s {:5} {target}] {msg}", l.as_str());
+    if json_mode() {
+        // Built through the Json DTO so message text is escaped correctly.
+        let mut j = crate::util::json::Json::obj();
+        j.set("elapsed_s", (elapsed * 1000.0).round() / 1000.0);
+        j.set("level", l.as_str());
+        j.set("target", target);
+        j.set("msg", msg.to_string());
+        let _ = writeln!(lock, "{}", j.to_string_compact());
+    } else {
+        let _ = writeln!(lock, "[{elapsed:9.3}s {:5} {target}] {msg}", l.as_str());
+    }
 }
 
 #[macro_export]
@@ -99,6 +126,15 @@ mod tests {
         assert!(Level::Warn < Level::Info);
         assert!(Level::Info < Level::Debug);
         assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn json_mode_toggles() {
+        // Force-initialize past the env probe, then flip both ways.
+        set_json_mode(true);
+        assert!(json_mode());
+        set_json_mode(false);
+        assert!(!json_mode());
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Integration: the telemetry subsystem end to end over TCP — Prometheus
+//! exposition conformance with families from every layer (HTTP server,
+//! coordinator, engine, durability, runtime), per-job timelines through the
+//! SDK, version skew check, and the determinism differential: the exact
+//! same workload scheduled with telemetry recording disabled produces
+//! byte-identical decisions and a byte-identical deterministic report.
+
+use frenzy::config::{real_testbed, sia_sim};
+use frenzy::job::JobSpec;
+use frenzy::marp::Marp;
+use frenzy::obs::{self, expo};
+use frenzy::sched::has::Has;
+use frenzy::serverless::client::FrenzyClient;
+use frenzy::serverless::{server, spawn, CoordinatorConfig, Handle};
+use frenzy::sim::{SimConfig, Simulator};
+use frenzy::workload::generator;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Tests that either toggle the process-global recording switch or assert
+/// on recorded values serialize through this gate, so a disabled window in
+/// one test cannot eat another test's counter increments.
+static OBS_GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    OBS_GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores recording on drop so a panicking test cannot leave the
+/// process-global switch off for the rest of the binary.
+struct EnabledGuard;
+impl Drop for EnabledGuard {
+    fn drop(&mut self) {
+        obs::set_enabled(true);
+    }
+}
+
+fn start(spec: frenzy::config::ClusterSpec) -> (Handle, SocketAddr, Arc<AtomicBool>) {
+    let cfg = CoordinatorConfig { execute_training: false, ..CoordinatorConfig::default() };
+    let (h, _j) = spawn(spec, cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = server::serve(h.clone(), "127.0.0.1:0", stop.clone()).unwrap();
+    (h, addr, stop)
+}
+
+#[test]
+fn metrics_exposition_is_conformant_and_covers_every_layer() {
+    let _g = gate();
+    let (h, addr, stop) = start(real_testbed());
+    let mut client = FrenzyClient::new(addr.to_string());
+    let n = 4u64;
+    for _ in 0..n {
+        client.submit("gpt2-350m", 8, 100).unwrap();
+    }
+    h.drain().unwrap();
+    // One extra poll so the coordinator republishes its gauges after the
+    // jobs completed.
+    client.report().unwrap();
+
+    let text = client.metrics_text().unwrap();
+    let samples = expo::parse(&text).expect("exposition must parse");
+    expo::validate(&text).expect("exposition must be conformant");
+
+    // Every layer is represented: TYPE metadata renders for all registered
+    // families whether or not traffic has touched them yet.
+    for family in [
+        "frenzy_build_info",
+        "frenzy_process_uptime_seconds",
+        "frenzy_http_requests_total",
+        "frenzy_http_request_duration_seconds",
+        "frenzy_http_inflight_requests",
+        "frenzy_http_shed_total",
+        "frenzy_coordinator_mailbox_depth",
+        "frenzy_admission_decisions_total",
+        "frenzy_jobs",
+        "frenzy_sched_rounds_total",
+        "frenzy_sched_round_phase_seconds",
+        "frenzy_engine_events_total",
+        "frenzy_wal_appends_total",
+        "frenzy_wal_fsync_seconds",
+        "frenzy_snapshot_age_seconds",
+        "frenzy_node_device_mem_used_bytes",
+        "frenzy_oom_events_total",
+    ] {
+        assert!(text.contains(&format!("# TYPE {family} ")), "missing family {family}");
+    }
+
+    // Recorded values from the traffic this test generated. The registry is
+    // process-global and other tests in this binary add to it, so every
+    // bound is a ≥.
+    let build = samples.iter().find(|s| s.name == "frenzy_build_info").expect("build_info");
+    let version = build.labels.iter().find(|(k, _)| k == "version").map(|(_, v)| v.as_str());
+    assert_eq!(version, Some(env!("CARGO_PKG_VERSION")));
+    assert_eq!(build.value, 1.0);
+
+    let submits = expo::sample_value(
+        &samples,
+        "frenzy_http_requests_total",
+        &[("route", "/v1/jobs"), ("code", "2xx")],
+    )
+    .unwrap_or(0.0);
+    assert!(submits >= n as f64, "submits recorded: {submits} < {n}");
+
+    let lat = expo::bucket_series(
+        &samples,
+        "frenzy_http_request_duration_seconds",
+        &[("route", "/v1/jobs")],
+    );
+    assert!(lat.last().map_or(0.0, |&(_, c)| c) >= n as f64, "latency observations");
+    assert!(expo::quantile(&lat, 0.5).is_some());
+
+    let admitted = expo::sample_value(
+        &samples,
+        "frenzy_admission_decisions_total",
+        &[("decision", "admitted")],
+    )
+    .unwrap_or(0.0);
+    assert!(admitted >= n as f64, "admissions recorded: {admitted} < {n}");
+
+    assert!(
+        expo::sample_value(&samples, "frenzy_sched_rounds_total", &[]).unwrap_or(0.0) >= 1.0,
+        "the engine ran at least one round"
+    );
+    for phase in ["candidate_scan", "plan_rank", "placement"] {
+        let series =
+            expo::bucket_series(&samples, "frenzy_sched_round_phase_seconds", &[("phase", phase)]);
+        assert!(series.last().map_or(0.0, |&(_, c)| c) >= 1.0, "phase {phase} observed");
+    }
+
+    // Runtime gauges: the coordinator publishes per-node device memory.
+    let cap: f64 = samples
+        .iter()
+        .filter(|s| s.name == "frenzy_node_device_mem_capacity_bytes")
+        .map(|s| s.value)
+        .sum();
+    assert!(cap > 0.0, "device memory capacity published");
+
+    assert!(
+        expo::sample_value(&samples, "frenzy_process_uptime_seconds", &[]).unwrap_or(-1.0) >= 0.0
+    );
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+#[test]
+fn timeline_over_tcp_through_the_sdk() {
+    let (h, addr, stop) = start(real_testbed());
+    let mut client = FrenzyClient::new(addr.to_string());
+    let id = client.submit("gpt2-350m", 8, 150).unwrap();
+    h.drain().unwrap();
+
+    let tl = client.timeline(id).unwrap().expect("completed job has a timeline");
+    assert_eq!(tl.job, id);
+    assert!(tl.terminal, "drained job is terminal");
+    assert!(!tl.partial, "short run cannot have evicted records");
+    assert_eq!(tl.placements, 1);
+    assert!(tl.phases.iter().any(|p| p.phase == "queued"));
+    assert!(tl.phases.iter().any(|p| p.phase == "running"));
+    // Every span is closed once the job is terminal, and the books balance:
+    // per-phase sums never exceed the overall span.
+    assert!(tl.phases.iter().all(|p| p.end_s.is_some()));
+    let sum = tl.queue_s + tl.run_s + tl.drain_s + tl.crash_backoff_s;
+    assert!(sum <= tl.total_s + 1e-6, "phase sums {sum} > total {}", tl.total_s);
+    // The referenced event records cover the lifecycle in order.
+    let kinds: Vec<&str> = tl.events.iter().map(|e| e.kind.as_str()).collect();
+    assert!(kinds.contains(&"arrival"), "{kinds:?}");
+    assert!(kinds.contains(&"placed"), "{kinds:?}");
+    assert!(kinds.contains(&"finished"), "{kinds:?}");
+    assert!(tl.events.windows(2).all(|w| w[0].seq < w[1].seq), "events ordered by seq");
+
+    // Unknown job: a clean None, not an error.
+    assert!(client.timeline(999_999).unwrap().is_none());
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+#[test]
+fn version_over_tcp_matches_the_build() {
+    let (h, addr, stop) = start(sia_sim());
+    let mut client = FrenzyClient::new(addr.to_string());
+    let v = client.version().unwrap();
+    assert_eq!(v.version, env!("CARGO_PKG_VERSION"));
+    assert!(!v.git_sha.is_empty());
+    assert!(v.features.iter().any(|f| f == "obs"));
+    stop.store(true, Ordering::Relaxed);
+    h.shutdown();
+}
+
+/// The hard constraint of this subsystem: telemetry must be a pure
+/// observer. Running the exact same seeded workload with recording
+/// disabled yields the same placement decisions in the same order and a
+/// byte-identical deterministic report.
+#[test]
+fn disabling_telemetry_changes_no_scheduling_decision() {
+    let _g = gate();
+
+    fn run(jobs: &[JobSpec]) -> (Vec<u64>, String) {
+        let spec = sia_sim();
+        let mut has = Has::new(Marp::with_defaults(spec.clone()));
+        let cfg = SimConfig { max_sim_time_s: 1e18, ..SimConfig::default() };
+        let mut sim = Simulator::new(&spec, &mut has, cfg);
+        sim.submit_all(jobs);
+        let report = sim.run("obs-differential");
+        let order: Vec<u64> = sim.engine().decision_log().iter().map(|d| d.0).collect();
+        assert!(sim.conservation_ok());
+        (order, report.to_json_deterministic().to_string_compact())
+    }
+
+    let jobs =
+        generator::from_spec("seed=77,jobs=30,arrivals=poisson:0.4,tenants=4,mix=zoo", 30, 7)
+            .unwrap();
+
+    let _restore = EnabledGuard;
+    obs::set_enabled(false);
+    let (order_off, report_off) = run(&jobs);
+    obs::set_enabled(true);
+    let (order_on, report_on) = run(&jobs);
+
+    assert_eq!(order_off, order_on, "placement decision order must not depend on telemetry");
+    assert_eq!(report_off, report_on, "deterministic report must be byte-identical");
+}
